@@ -1,0 +1,65 @@
+//! IL-model amortization (paper §4.2 / Fig. 2 row 4): train ONE small
+//! irreducible-loss model, then reuse it to accelerate several target
+//! architectures. The IL context is computed once and shared — exactly
+//! how the paper trained all 40 Fig. 1 runs from a single ResNet18.
+//!
+//! ```sh
+//! cargo run --release --example il_reuse
+//! ```
+
+use anyhow::Result;
+
+use rho::config::RunConfig;
+use rho::experiments::common::Lab;
+use rho::experiments::ExpCtx;
+use rho::selection::Method;
+
+const TARGETS: &[&str] = &["logreg", "mlp_small", "mlp_base", "cnn_small", "cnn_base"];
+
+fn main() -> Result<()> {
+    let scale: f64 = std::env::var("RHO_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.3);
+    let ctx = ExpCtx::new(scale);
+    let lab = Lab::new(&ctx)?;
+    let cfg0 = RunConfig {
+        dataset: "cifar10".into(),
+        il_arch: "mlp_small".into(),
+        epochs: 10,
+        il_epochs: 10,
+        ..Default::default()
+    };
+    let bundle = lab.bundle(&cfg0.dataset);
+
+    // One IL model. `Lab` caches the context, so the loop below reuses
+    // it across all targets — watch the log: IL trains exactly once.
+    let il = lab.il_context(&cfg0, &bundle)?;
+    println!(
+        "IL model `{}` trained once: {} IL values precomputed (mean {:.3})",
+        cfg0.il_arch,
+        il.values.len(),
+        rho::util::math::mean(&il.values)
+    );
+
+    println!("\n{:<10} {:>12} {:>12} {:>9}", "target", "uniform acc", "rho acc", "faster?");
+    for &arch in TARGETS {
+        let mut cfg = cfg0.clone();
+        cfg.arch = arch.into();
+        cfg.method = Method::Uniform;
+        let uni = lab.run_one(&cfg, &bundle)?;
+        cfg.method = Method::RhoLoss;
+        let rho = lab.run_one(&cfg, &bundle)?;
+        let target = uni.curve.best_accuracy() * 0.995;
+        let faster = match (uni.curve.epochs_to(target), rho.curve.epochs_to(target)) {
+            (Some(u), Some(r)) => format!("{:.1}x", u / r),
+            _ => "-".into(),
+        };
+        println!(
+            "{:<10} {:>12.3} {:>12.3} {:>9}",
+            arch,
+            uni.curve.final_accuracy(),
+            rho.curve.final_accuracy(),
+            faster
+        );
+    }
+    println!("\n(one cheap IL model accelerates every architecture — paper Fig. 2 row 4)");
+    Ok(())
+}

@@ -1,0 +1,215 @@
+"""AOT compile path: lower every (model, program) pair to HLO text.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Run once by ``make artifacts``; Python is never on the request path.
+Outputs:
+  artifacts/<name>.hlo.txt   one per program
+  artifacts/manifest.json    machine-readable index for the Rust runtime
+
+Scalars are passed as rank-1 [1] tensors (the Rust side builds those
+uniformly); programs index them to rank-0 internally.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+import time
+from pathlib import Path
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Fleet-standard batch sizes (paper §4.0: n_b=32, n_B=320, n_b/n_B=0.1).
+# Other candidate-batch sizes are served by Rust-side chunk+pad through
+# the 320 artifact; train batches need exact-shape artifacts.
+SELECT_BATCH = 320
+TRAIN_BATCH = 32
+
+# (input_dim, num_classes) -> archs. See DESIGN.md §3/§4 for which
+# experiment uses which group.
+GROUPS: Dict[Tuple[int, int], List[str]] = {
+    (64, 10): ["logreg", "mlp_small", "mlp_base", "mlp_wide"],
+    (256, 10): [
+        "logreg",
+        "mlp_small",
+        "mlp_base",
+        "mlp_wide",
+        "mlp_deep",
+        "cnn_small",
+        "cnn_base",
+    ],
+    (256, 100): ["logreg", "mlp_small", "mlp_base", "cnn_small"],
+    (256, 14): ["mlp_small", "mlp_base", "mlp_wide", "mlp_deep", "cnn_small", "cnn_base"],
+    (64, 2): ["mlp_small", "mlp_base"],
+}
+
+# Extra programs beyond the default {init, fwd, select, train} set.
+EXTRAS: Dict[Tuple[str, int, int], List[str]] = {
+    ("mlp_small", 64, 10): [f"mcdropout_b{SELECT_BATCH}"],
+    ("mlp_base", 64, 10): [f"mcdropout_b{SELECT_BATCH}"],
+    ("mlp_wide", 64, 10): [f"mcdropout_b{SELECT_BATCH}"],
+    ("mlp_base", 256, 10): [f"mcdropout_b{SELECT_BATCH}", "train_b16", "train_b64"],
+    ("cnn_small", 256, 10): [f"mcdropout_b{SELECT_BATCH}"],
+    ("mlp_base", 256, 100): ["train_b16", "train_b64"],
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text via stablehlo (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_program(spec: M.ModelSpec, program: str):
+    """Return (callable, example-args, input-descriptors, output-names)."""
+    p = M.param_count(spec)
+    theta = _sds((p,))
+
+    def io(names_shapes):
+        return [
+            {"name": n, "dtype": str(s.dtype), "shape": list(s.shape)}
+            for n, s in names_shapes
+        ]
+
+    if program == "init":
+        fn = lambda seed: (M.init(spec, seed[0]),)
+        args = (_sds((1,), jnp.int32),)
+        ins = io([("seed", args[0])])
+        outs = ["theta"]
+    elif program.startswith("fwd_b"):
+        n = int(program.split("_b")[1])
+        fn = lambda theta, x, y: M.fwd_stats(spec, theta, x, y)
+        args = (theta, _sds((n, spec.d)), _sds((n,), jnp.int32))
+        ins = io([("theta", args[0]), ("x", args[1]), ("y", args[2])])
+        outs = ["loss", "correct", "gnorm", "entropy"]
+    elif program.startswith("select_b"):
+        n = int(program.split("_b")[1])
+        fn = lambda theta, x, y, il: M.select_scores(spec, theta, x, y, il)
+        args = (theta, _sds((n, spec.d)), _sds((n,), jnp.int32), _sds((n,)))
+        ins = io([("theta", args[0]), ("x", args[1]), ("y", args[2]), ("il", args[3])])
+        outs = ["rho"]
+    elif program.startswith("train_b"):
+        n = int(program.split("_b")[1])
+
+        def fn(theta, m, v, step, x, y, w, lr, wd):
+            return M.train_step(spec, theta, m, v, step[0], x, y, w, lr[0], wd[0])
+
+        args = (
+            theta,
+            theta,
+            theta,
+            _sds((1,)),
+            _sds((n, spec.d)),
+            _sds((n,), jnp.int32),
+            _sds((n,)),
+            _sds((1,)),
+            _sds((1,)),
+        )
+        ins = io(
+            [
+                ("theta", args[0]),
+                ("m", args[1]),
+                ("v", args[2]),
+                ("step", args[3]),
+                ("x", args[4]),
+                ("y", args[5]),
+                ("w", args[6]),
+                ("lr", args[7]),
+                ("wd", args[8]),
+            ]
+        )
+        outs = ["theta", "m", "v", "loss"]
+    elif program.startswith("mcdropout_b"):
+        n = int(program.split("_b")[1])
+        fn = lambda theta, x, y, seed: M.mcdropout(spec, theta, x, y, seed[0])
+        args = (theta, _sds((n, spec.d)), _sds((n,), jnp.int32), _sds((1,), jnp.int32))
+        ins = io([("theta", args[0]), ("x", args[1]), ("y", args[2]), ("seed", args[3])])
+        outs = ["loss", "entropy", "cond_entropy", "bald"]
+    else:
+        raise ValueError(f"unknown program {program!r}")
+    return fn, args, ins, outs
+
+
+def enumerate_artifacts():
+    """Yield (name, spec, program) for the full artifact set."""
+    for (d, c), archs in GROUPS.items():
+        for arch in archs:
+            spec = M.ModelSpec(arch, d, c)
+            programs = [
+                "init",
+                f"fwd_b{SELECT_BATCH}",
+                f"select_b{SELECT_BATCH}",
+                f"train_b{TRAIN_BATCH}",
+            ] + EXTRAS.get((arch, d, c), [])
+            for program in programs:
+                yield f"{spec.name}__{program}", spec, program
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="regex filter on artifact names")
+    ap.add_argument("--list", action="store_true", help="list artifact names and exit")
+    args = ap.parse_args()
+
+    out = Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    flt = re.compile(args.only) if args.only else None
+
+    manifest = {
+        "version": 1,
+        "select_batch": SELECT_BATCH,
+        "train_batch": TRAIN_BATCH,
+        "adam": {"b1": M.ADAM_B1, "b2": M.ADAM_B2, "eps": M.ADAM_EPS},
+        "artifacts": [],
+    }
+    t0 = time.time()
+    n_done = 0
+    for name, spec, program in enumerate_artifacts():
+        entry = {
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "arch": spec.arch,
+            "d": spec.d,
+            "c": spec.c,
+            "program": program,
+            "param_count": M.param_count(spec),
+        }
+        if args.list:
+            print(name)
+            continue
+        if flt and not flt.search(name):
+            continue
+        fn, ex_args, ins, outs = build_program(spec, program)
+        entry["inputs"], entry["outputs"] = ins, outs
+        text = to_hlo_text(jax.jit(fn).lower(*ex_args))
+        (out / entry["file"]).write_text(text)
+        manifest["artifacts"].append(entry)
+        n_done += 1
+        print(f"[{n_done:3d}] {name}  ({len(text)//1024} KiB, {time.time()-t0:.0f}s)")
+    if args.list:
+        return
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {n_done} artifacts + manifest.json to {out} in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1: Pallas kernels for the RHO-LOSS scoring hot-spot.
+
+Public surface:
+  - :func:`xent.xent` — tiled per-example softmax cross-entropy.
+  - :func:`rho.rho_scores` — fused CE minus irreducible-loss score (Eq. 3).
+  - :mod:`ref` — pure-jnp oracles used by pytest.
+"""
+from .rho import rho_scores
+from .xent import pick_tile, xent
+
+__all__ = ["xent", "rho_scores", "pick_tile"]

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this
+package must match its `*_ref` counterpart to float32 tolerance across
+the shape/dtype sweep in ``python/tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def xent_ref(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-example stable softmax cross-entropy.
+
+    Args:
+      logits: f32[N, C]
+      labels: i32[N]
+    Returns:
+      f32[N] — ``logsumexp(logits_i) - logits_i[labels_i]``.
+    """
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    zy = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[:, None].astype(jnp.int32), axis=-1
+    )[:, 0]
+    return lse - zy
+
+
+def rho_ref(logits: jax.Array, labels: jax.Array, il: jax.Array) -> jax.Array:
+    """Reducible holdout loss score (paper Eq. 3): train CE minus IL."""
+    return xent_ref(logits, labels) - il.astype(jnp.float32)
+
+
+def entropy_ref(logits: jax.Array) -> jax.Array:
+    """Per-example predictive entropy of softmax(logits). f32[N]."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
+def gnorm_proxy_ref(logits: jax.Array, labels: jax.Array, h: jax.Array) -> jax.Array:
+    """Last-layer gradient-norm upper bound (Katharopoulos & Fleuret '18).
+
+    ||dL/dW_last|| factorises as ||p - onehot(y)||_2 * ||[h, 1]||_2 for a
+    softmax-CE head over final activations h. This is the standard
+    forward-only proxy used by importance-sampling implementations.
+    """
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    dz = jnp.linalg.norm(p - onehot, axis=-1)
+    hn = jnp.sqrt(1.0 + jnp.sum(h.astype(jnp.float32) ** 2, axis=-1))
+    return dz * hn

@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: fused reducible-holdout-loss (RHO) scoring.
+
+Paper Eq. (3): ``score_i = CE(logits_i, y_i) - IL_i`` where ``IL_i`` is
+the precomputed irreducible holdout loss of candidate i. Fusing the IL
+subtraction into the CE epilogue means the selection stage streams the
+per-example IL vector through the same VMEM block as the logits and the
+coordinator reads back final scores directly — the top-k selection in
+Rust then never touches logits at all.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .xent import pick_tile
+
+
+def _rho_kernel(logits_ref, labels_ref, il_ref, score_ref):
+    """One (TILE_B, C) block: stable CE minus irreducible loss."""
+    z = logits_ref[...].astype(jnp.float32)  # (TB, C)
+    y = labels_ref[...]  # (TB,) i32
+    il = il_ref[...].astype(jnp.float32)  # (TB,)
+    m = jnp.max(z, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(z - m), axis=-1)) + m[:, 0]
+    cls = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)
+    zy = jnp.sum(jnp.where(cls == y[:, None], z, 0.0), axis=-1)
+    score_ref[...] = (lse - zy) - il
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b",))
+def rho_scores(
+    logits: jax.Array, labels: jax.Array, il: jax.Array, *, tile_b: int | None = None
+) -> jax.Array:
+    """Fused RHO scores. f32[N,C], i32[N], f32[N] -> f32[N]."""
+    n, c = logits.shape
+    tb = pick_tile(n) if tile_b is None else tile_b
+    assert n % tb == 0, f"batch {n} not divisible by tile {tb}"
+    return pl.pallas_call(
+        _rho_kernel,
+        grid=(n // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, c), lambda i: (i, 0)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(logits, labels.astype(jnp.int32), il)

@@ -1,0 +1,294 @@
+"""L2: the JAX model zoo behind the RHO-LOSS pipeline.
+
+Every model exposes a *flattened-parameter* interface so the Rust
+coordinator can hold parameters/optimizer state as opaque f32 vectors
+and thread them through fixed-signature HLO executables:
+
+  init(seed)                          -> theta[P]
+  fwd_stats(theta, X, y)              -> (loss[N], correct[N], gnorm[N], entropy[N])
+  select_scores(theta, X, y, il)      -> (rho[N],)          # fused Pallas path
+  train_step(theta,m,v,step,X,y,lr,wd)-> (theta',m',v',mean_loss)
+  mcdropout(theta, X, y, seed)        -> (loss[N], H[N], EH[N], bald[N])
+
+Architectures are MLPs and small CNNs over the synthetic data substrate
+(see DESIGN.md §2 for the ResNet/ALBERT substitution rationale). CNN
+inputs arrive flattened as f32[N, side*side] and are reshaped to NHWC
+inside the graph, so all programs share the same Rust-side calling
+convention.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .kernels import ref
+
+# ---------------------------------------------------------------------------
+# Architecture zoo
+# ---------------------------------------------------------------------------
+
+#: name -> spec; `hidden` for MLPs, `channels`/`fc` for CNNs.
+ARCHS = {
+    # Paper MLP-512 (QMNIST target) / MLP-256 (small IL model, Table 1).
+    "logreg": dict(kind="mlp", hidden=[]),
+    "mlp_small": dict(kind="mlp", hidden=[64]),
+    "mlp_base": dict(kind="mlp", hidden=[256, 256]),
+    "mlp_wide": dict(kind="mlp", hidden=[512, 512]),
+    "mlp_deep": dict(kind="mlp", hidden=[256, 256, 256, 256]),
+    # Small-CNN stand-ins for the ResNet/VGG/... target family.
+    "cnn_small": dict(kind="cnn", channels=[8, 16], fc=[64]),
+    "cnn_base": dict(kind="cnn", channels=[16, 32, 32], fc=[128]),
+}
+
+#: MC-dropout rate used by the active-learning baselines (App. G).
+DROPOUT_P = 0.25
+#: MC-dropout sample count.
+MC_SAMPLES = 8
+#: AdamW constants (PyTorch defaults per paper §4.0).
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """A concrete (architecture, input-dim, class-count) instantiation."""
+
+    arch: str
+    d: int  # flattened input dim; CNNs require a square side*side
+    c: int  # number of classes
+
+    @property
+    def kind(self) -> str:
+        return ARCHS[self.arch]["kind"]
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}_d{self.d}_c{self.c}"
+
+    @property
+    def side(self) -> int:
+        s = int(math.isqrt(self.d))
+        assert s * s == self.d, f"cnn input dim {self.d} not square"
+        return s
+
+
+# ---------------------------------------------------------------------------
+# Parameter flattening
+# ---------------------------------------------------------------------------
+
+
+def param_shapes(spec: ModelSpec) -> List[Tuple[int, ...]]:
+    """Ordered list of parameter tensor shapes for `spec`."""
+    a = ARCHS[spec.arch]
+    shapes: List[Tuple[int, ...]] = []
+    if a["kind"] == "mlp":
+        dims = [spec.d] + list(a["hidden"]) + [spec.c]
+        for i in range(len(dims) - 1):
+            shapes.append((dims[i], dims[i + 1]))
+            shapes.append((dims[i + 1],))
+    else:  # cnn
+        side = spec.side
+        cin = 1
+        for cout in a["channels"]:
+            shapes.append((3, 3, cin, cout))
+            shapes.append((cout,))
+            cin = cout
+            side = max(side // 2, 1)  # 2x2 maxpool after every conv
+        flat = side * side * cin
+        dims = [flat] + list(a["fc"]) + [spec.c]
+        for i in range(len(dims) - 1):
+            shapes.append((dims[i], dims[i + 1]))
+            shapes.append((dims[i + 1],))
+    return shapes
+
+
+def param_count(spec: ModelSpec) -> int:
+    """Total scalar count P of the flattened parameter vector."""
+    return sum(int(jnp.prod(jnp.array(s))) for s in param_shapes(spec))
+
+
+def unflatten(spec: ModelSpec, theta: jax.Array) -> List[jax.Array]:
+    """Slice the flat f32[P] vector into parameter tensors."""
+    out, off = [], 0
+    for s in param_shapes(spec):
+        n = int(math.prod(s))
+        out.append(theta[off : off + n].reshape(s))
+        off += n
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Init / forward
+# ---------------------------------------------------------------------------
+
+
+def init(spec: ModelSpec, seed: jax.Array) -> jax.Array:
+    """He-normal init of the flat parameter vector from an i32 seed."""
+    key = jax.random.key(seed.astype(jnp.uint32))
+    parts = []
+    for i, s in enumerate(param_shapes(spec)):
+        k = jax.random.fold_in(key, i)
+        if len(s) == 1:  # bias
+            parts.append(jnp.zeros(s, jnp.float32).ravel())
+        else:
+            fan_in = math.prod(s[:-1])
+            w = jax.random.normal(k, s, jnp.float32) * math.sqrt(2.0 / fan_in)
+            parts.append(w.ravel())
+    return jnp.concatenate(parts)
+
+
+def _dropout(x: jax.Array, key: jax.Array, p: float) -> jax.Array:
+    keep = jax.random.bernoulli(key, 1.0 - p, x.shape)
+    return jnp.where(keep, x / (1.0 - p), 0.0)
+
+
+def forward(
+    spec: ModelSpec,
+    theta: jax.Array,
+    x: jax.Array,
+    *,
+    dropout_key: jax.Array | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Logits + final hidden activations.
+
+    Returns:
+      (logits f32[N, C], h f32[N, H]) — `h` feeds the grad-norm proxy.
+    """
+    params = unflatten(spec, theta)
+    a = ARCHS[spec.arch]
+    pi = 0
+
+    def maybe_drop(h: jax.Array, layer: int) -> jax.Array:
+        if dropout_key is None:
+            return h
+        return _dropout(h, jax.random.fold_in(dropout_key, layer), DROPOUT_P)
+
+    if a["kind"] == "mlp":
+        h = x
+        n_layers = len(a["hidden"])
+        for li in range(n_layers):
+            w, b = params[pi], params[pi + 1]
+            pi += 2
+            h = maybe_drop(jax.nn.relu(h @ w + b), li)
+        w, b = params[pi], params[pi + 1]
+        return h @ w + b, h
+    # cnn
+    side = spec.side
+    h = x.reshape(-1, side, side, 1)
+    for li, _ in enumerate(a["channels"]):
+        w, b = params[pi], params[pi + 1]
+        pi += 2
+        h = jax.lax.conv_general_dilated(
+            h, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        ) + b
+        h = jax.nn.relu(h)
+        h = jax.lax.reduce_window(
+            h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+    h = h.reshape(h.shape[0], -1)
+    for li in range(len(a["fc"])):
+        w, b = params[pi], params[pi + 1]
+        pi += 2
+        h = maybe_drop(jax.nn.relu(h @ w + b), 100 + li)
+    w, b = params[pi], params[pi + 1]
+    return h @ w + b, h
+
+
+# ---------------------------------------------------------------------------
+# Programs (each is AOT-lowered to one HLO artifact)
+# ---------------------------------------------------------------------------
+
+
+def fwd_stats(
+    spec: ModelSpec, theta: jax.Array, x: jax.Array, y: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Forward-only scoring statistics for a candidate batch.
+
+    Returns per-example (CE loss, correct indicator, grad-norm proxy,
+    predictive entropy). The CE goes through the Pallas kernel; the rest
+    are cheap epilogues XLA fuses with the same logits.
+    """
+    logits, h = forward(spec, theta, x)
+    loss = kernels.xent(logits, y)
+    correct = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+    gnorm = ref.gnorm_proxy_ref(logits, y, h)
+    entropy = ref.entropy_ref(logits)
+    return loss, correct, gnorm, entropy
+
+
+def select_scores(
+    spec: ModelSpec, theta: jax.Array, x: jax.Array, y: jax.Array, il: jax.Array
+) -> Tuple[jax.Array]:
+    """Fused RHO-LOSS scores (Eq. 3) for a candidate batch."""
+    logits, _ = forward(spec, theta, x)
+    return (kernels.rho_scores(logits, y, il),)
+
+
+def mean_loss(
+    spec: ModelSpec, theta: jax.Array, x: jax.Array, y: jax.Array, w: jax.Array
+) -> jax.Array:
+    """Weighted mean CE for the gradient step.
+
+    `w` enables importance-sampling debiasing (gradient-norm-IS
+    baseline, Katharopoulos & Fleuret '18): selected points are trained
+    with weights ∝ 1/p_select, normalised to mean 1. All other methods
+    pass w = 1.
+
+    Uses the jnp reference CE (not the Pallas kernel): ``pallas_call``
+    does not support reverse-mode autodiff under ``interpret=True``, and
+    the backward pass is not the selection hot path — the kernel serves
+    the forward-only scoring programs, which dominate (n_B/n_b = 10x).
+    """
+    logits, _ = forward(spec, theta, x)
+    return jnp.mean(w * ref.xent_ref(logits, y))
+
+
+def train_step(
+    spec: ModelSpec,
+    theta: jax.Array,
+    m: jax.Array,
+    v: jax.Array,
+    step: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    w: jax.Array,
+    lr: jax.Array,
+    wd: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One AdamW step on the selected batch. `step` is 1-based f32;
+    `w` are per-example loss weights (1 = plain mean CE)."""
+    loss, g = jax.value_and_grad(lambda t: mean_loss(spec, t, x, y, w))(theta)
+    m2 = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v2 = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mhat = m2 / (1.0 - ADAM_B1**step)
+    vhat = v2 / (1.0 - ADAM_B2**step)
+    upd = mhat / (jnp.sqrt(vhat) + ADAM_EPS) + wd * theta
+    return theta - lr * upd, m2, v2, loss
+
+
+def mcdropout(
+    spec: ModelSpec, theta: jax.Array, x: jax.Array, y: jax.Array, seed: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """MC-dropout uncertainty stats for the App. G active-learning baselines.
+
+    Returns per-example (loss of mean prediction, predictive entropy H,
+    expected conditional entropy E[H], BALD = H - E[H]).
+    """
+    key = jax.random.key(seed.astype(jnp.uint32))
+
+    def one(i):
+        logits, _ = forward(spec, theta, x, dropout_key=jax.random.fold_in(key, i))
+        return jax.nn.log_softmax(logits, axis=-1)
+
+    logps = jax.vmap(one)(jnp.arange(MC_SAMPLES))  # (K, N, C)
+    pbar = jnp.mean(jnp.exp(logps), axis=0)  # (N, C)
+    logpbar = jnp.log(jnp.clip(pbar, 1e-12, 1.0))
+    h = -jnp.sum(pbar * logpbar, axis=-1)
+    eh = jnp.mean(-jnp.sum(jnp.exp(logps) * logps, axis=-1), axis=0)
+    bald = h - eh
+    loss = -jnp.take_along_axis(logpbar, y[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return loss, h, eh, bald

@@ -1,0 +1,74 @@
+"""AOT pipeline tests: artifact enumeration, manifest schema, HLO text."""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+import jax
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ARTIFACTS = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_enumeration_is_unique_and_complete():
+    names = [n for n, _, _ in aot.enumerate_artifacts()]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    # every combo gets the core program set
+    for (d, c), archs in aot.GROUPS.items():
+        for arch in archs:
+            base = f"{arch}_d{d}_c{c}__"
+            for prog in ["init", f"fwd_b{aot.SELECT_BATCH}", f"select_b{aot.SELECT_BATCH}", f"train_b{aot.TRAIN_BATCH}"]:
+                assert base + prog in names
+
+
+def test_extras_reference_valid_combos():
+    for (arch, d, c) in aot.EXTRAS:
+        assert arch in aot.GROUPS[(d, c)], f"extra for absent combo {(arch, d, c)}"
+
+
+@pytest.mark.parametrize(
+    "program", ["init", "fwd_b64", "select_b64", "train_b16", "mcdropout_b32"]
+)
+def test_build_program_lowers(program):
+    spec = M.ModelSpec("mlp_small", 64, 10)
+    fn, args, ins, outs = aot.build_program(spec, program)
+    text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert text.startswith("HloModule"), text[:50]
+    assert len(ins) >= 1 and len(outs) >= 1
+
+
+def test_build_program_rejects_unknown():
+    with pytest.raises(ValueError):
+        aot.build_program(M.ModelSpec("mlp_small", 64, 10), "nope_b32")
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_manifest_matches_files():
+    man = json.loads((ARTIFACTS / "manifest.json").read_text())
+    assert man["select_batch"] == aot.SELECT_BATCH
+    assert man["train_batch"] == aot.TRAIN_BATCH
+    names = set()
+    for e in man["artifacts"]:
+        names.add(e["name"])
+        f = ARTIFACTS / e["file"]
+        assert f.exists(), f"missing artifact file {f}"
+        spec = M.ModelSpec(e["arch"], e["d"], e["c"])
+        assert e["param_count"] == M.param_count(spec)
+        # theta-shaped inputs must match the param count
+        for inp in e["inputs"]:
+            if inp["name"] in ("theta", "m", "v"):
+                assert inp["shape"] == [e["param_count"]]
+    assert len(names) == len(man["artifacts"])
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_hlo_text_parses_header():
+    man = json.loads((ARTIFACTS / "manifest.json").read_text())
+    pat = re.compile(r"^HloModule \S+")
+    for e in man["artifacts"][:10]:
+        head = (ARTIFACTS / e["file"]).read_text()[:200]
+        assert pat.match(head), head

@@ -1,0 +1,161 @@
+"""Kernel-vs-oracle correctness: THE core L1 signal.
+
+The Pallas kernels (interpret mode) must match the pure-jnp oracles in
+``kernels/ref.py`` across shapes, class counts, tile sizes, and extreme
+logit magnitudes. Hypothesis sweeps the space; explicit parametrized
+cases pin the fleet-standard configurations.
+"""
+from __future__ import annotations
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import kernels
+from compile.kernels import ref
+from compile.kernels.xent import pick_tile
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=40, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def _logits(rng: np.random.Generator, n: int, c: int, scale: float) -> np.ndarray:
+    return (rng.standard_normal((n, c)) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# pinned configurations
+# ---------------------------------------------------------------------------
+
+PINNED = [
+    (320, 10, 1.0),  # fleet-standard selection batch
+    (320, 100, 1.0),  # cifar100 analogue
+    (320, 14, 1.0),  # clothing1m analogue
+    (320, 2, 1.0),  # NLP analogues
+    (64, 10, 1.0),  # single tile
+    (32, 10, 1.0),  # sub-tile batch
+    (320, 10, 100.0),  # large-magnitude logits (stability)
+    (320, 10, 1e-4),  # near-uniform logits
+]
+
+
+@pytest.mark.parametrize("n,c,scale", PINNED)
+def test_xent_matches_ref_pinned(n, c, scale):
+    rng = np.random.default_rng(n * 1000 + c)
+    z = _logits(rng, n, c, scale)
+    y = rng.integers(0, c, n).astype(np.int32)
+    got = np.asarray(kernels.xent(jnp.asarray(z), jnp.asarray(y)))
+    want = np.asarray(ref.xent_ref(jnp.asarray(z), jnp.asarray(y)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,c,scale", PINNED)
+def test_rho_matches_ref_pinned(n, c, scale):
+    rng = np.random.default_rng(n * 7 + c)
+    z = _logits(rng, n, c, scale)
+    y = rng.integers(0, c, n).astype(np.int32)
+    il = rng.standard_normal(n).astype(np.float32) * 2.0
+    got = np.asarray(kernels.rho_scores(jnp.asarray(z), jnp.asarray(y), jnp.asarray(il)))
+    want = np.asarray(ref.rho_ref(jnp.asarray(z), jnp.asarray(y), jnp.asarray(il)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def batch_case(draw):
+    n = draw(st.sampled_from([8, 16, 48, 64, 128, 320]))
+    c = draw(st.integers(min_value=2, max_value=110))
+    scale = draw(st.sampled_from([1e-3, 0.3, 1.0, 10.0, 50.0]))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    return n, c, scale, seed
+
+
+@hypothesis.given(batch_case())
+def test_xent_matches_ref_sweep(case):
+    n, c, scale, seed = case
+    rng = np.random.default_rng(seed)
+    z = _logits(rng, n, c, scale)
+    y = rng.integers(0, c, n).astype(np.int32)
+    got = np.asarray(kernels.xent(jnp.asarray(z), jnp.asarray(y)))
+    want = np.asarray(ref.xent_ref(jnp.asarray(z), jnp.asarray(y)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.given(batch_case())
+def test_rho_matches_ref_sweep(case):
+    n, c, scale, seed = case
+    rng = np.random.default_rng(seed)
+    z = _logits(rng, n, c, scale)
+    y = rng.integers(0, c, n).astype(np.int32)
+    il = rng.standard_normal(n).astype(np.float32)
+    got = np.asarray(kernels.rho_scores(jnp.asarray(z), jnp.asarray(y), jnp.asarray(il)))
+    want = np.asarray(ref.rho_ref(jnp.asarray(z), jnp.asarray(y), jnp.asarray(il)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.given(st.integers(min_value=1, max_value=2048))
+def test_pick_tile_divides(n):
+    t = pick_tile(n)
+    assert 1 <= t <= min(64, n)
+    assert n % t == 0
+
+
+# ---------------------------------------------------------------------------
+# semantic invariants
+# ---------------------------------------------------------------------------
+
+
+def test_xent_nonnegative_and_bounded():
+    """CE >= 0 is false in general only for continuous dists; for softmax CE
+    over C classes it's >= 0 and log C at uniform logits."""
+    n, c = 64, 10
+    z = jnp.zeros((n, c), jnp.float32)
+    y = jnp.zeros((n,), jnp.int32)
+    out = np.asarray(kernels.xent(z, y))
+    np.testing.assert_allclose(out, np.log(c), rtol=1e-6)
+
+
+def test_rho_can_be_negative():
+    """Reducible loss is negative when IL exceeds training loss (paper §3,
+    Approximation 3 discussion)."""
+    n, c = 64, 10
+    rng = np.random.default_rng(0)
+    z = _logits(rng, n, c, 1.0)
+    y = rng.integers(0, c, n).astype(np.int32)
+    il = np.full(n, 50.0, np.float32)
+    out = np.asarray(kernels.rho_scores(jnp.asarray(z), jnp.asarray(y), jnp.asarray(il)))
+    assert (out < 0).all()
+
+
+def test_xent_invariant_to_logit_shift():
+    """Softmax CE is invariant to adding a constant per row."""
+    n, c = 64, 14
+    rng = np.random.default_rng(3)
+    z = _logits(rng, n, c, 1.0)
+    y = rng.integers(0, c, n).astype(np.int32)
+    shift = rng.standard_normal((n, 1)).astype(np.float32) * 30
+    a = np.asarray(kernels.xent(jnp.asarray(z), jnp.asarray(y)))
+    b = np.asarray(kernels.xent(jnp.asarray(z + shift), jnp.asarray(y)))
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+def test_tile_b_explicit_matches_default():
+    n, c = 320, 10
+    rng = np.random.default_rng(9)
+    z = jnp.asarray(_logits(rng, n, c, 1.0))
+    y = jnp.asarray(rng.integers(0, c, n).astype(np.int32))
+    a = np.asarray(kernels.xent(z, y, tile_b=32))
+    b = np.asarray(kernels.xent(z, y, tile_b=64))
+    d = np.asarray(kernels.xent(z, y))
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+    np.testing.assert_allclose(a, d, rtol=1e-6)

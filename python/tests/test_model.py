@@ -1,0 +1,148 @@
+"""L2 model-zoo tests: shapes, init determinism, training dynamics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+SPECS = [
+    M.ModelSpec("logreg", 64, 10),
+    M.ModelSpec("mlp_small", 64, 10),
+    M.ModelSpec("mlp_base", 64, 2),
+    M.ModelSpec("mlp_wide", 64, 10),
+    M.ModelSpec("mlp_deep", 256, 14),
+    M.ModelSpec("cnn_small", 256, 10),
+    M.ModelSpec("cnn_base", 256, 100),
+]
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_param_count_matches_shapes(spec):
+    shapes = M.param_shapes(spec)
+    assert sum(int(np.prod(s)) for s in shapes) == M.param_count(spec)
+    theta = M.init(spec, jnp.int32(0))
+    assert theta.shape == (M.param_count(spec),)
+    parts = M.unflatten(spec, theta)
+    assert [p.shape for p in parts] == [tuple(s) for s in shapes]
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_init_deterministic_and_seed_sensitive(spec):
+    a = M.init(spec, jnp.int32(7))
+    b = M.init(spec, jnp.int32(7))
+    c = M.init(spec, jnp.int32(8))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.allclose(np.asarray(a), np.asarray(c))
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.name)
+def test_fwd_stats_shapes_and_finiteness(spec):
+    n = 64
+    rng = np.random.default_rng(1)
+    theta = M.init(spec, jnp.int32(0))
+    x = jnp.asarray(rng.standard_normal((n, spec.d)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, spec.c, n).astype(np.int32))
+    loss, correct, gnorm, entropy = M.fwd_stats(spec, theta, x, y)
+    for out in (loss, correct, gnorm, entropy):
+        assert out.shape == (n,)
+        assert np.isfinite(np.asarray(out)).all()
+    assert ((np.asarray(correct) == 0) | (np.asarray(correct) == 1)).all()
+    assert (np.asarray(entropy) >= -1e-5).all()
+    assert (np.asarray(entropy) <= np.log(spec.c) + 1e-4).all()
+    assert (np.asarray(gnorm) >= 0).all()
+
+
+def test_select_scores_equals_fwd_minus_il():
+    spec = M.ModelSpec("mlp_small", 64, 10)
+    n = 64
+    rng = np.random.default_rng(2)
+    theta = M.init(spec, jnp.int32(0))
+    x = jnp.asarray(rng.standard_normal((n, spec.d)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, spec.c, n).astype(np.int32))
+    il = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    (rho,) = M.select_scores(spec, theta, x, y, il)
+    loss, _, _, _ = M.fwd_stats(spec, theta, x, y)
+    np.testing.assert_allclose(np.asarray(rho), np.asarray(loss - il), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "spec",
+    [M.ModelSpec("mlp_small", 64, 10), M.ModelSpec("cnn_small", 256, 10)],
+    ids=lambda s: s.name,
+)
+def test_train_step_overfits_small_batch(spec):
+    """A few hundred AdamW steps on one batch must drive the loss near 0 —
+    the end-to-end fwd/bwd/optimizer sanity signal."""
+    n = 32
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((n, spec.d)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, spec.c, n).astype(np.int32))
+    theta = M.init(spec, jnp.int32(0))
+    m = jnp.zeros_like(theta)
+    v = jnp.zeros_like(theta)
+    w = jnp.ones((n,), jnp.float32)
+    step_fn = jax.jit(
+        lambda th, m, v, s: M.train_step(
+            spec, th, m, v, s, x, y, w, jnp.float32(1e-3), jnp.float32(0.0)
+        )
+    )
+    first = None
+    for s in range(1, 301):
+        theta, m, v, loss = step_fn(theta, m, v, jnp.float32(s))
+        if first is None:
+            first = float(loss)
+    assert float(loss) < 0.05, f"loss {float(loss)} did not converge (start {first})"
+
+
+def test_train_step_weight_decay_shrinks_params():
+    spec = M.ModelSpec("mlp_small", 64, 10)
+    n = 32
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(np.zeros((n, spec.d), np.float32))
+    y = jnp.asarray(rng.integers(0, spec.c, n).astype(np.int32))
+    theta = M.init(spec, jnp.int32(0))
+    z = jnp.zeros_like(theta)
+    # Zero inputs -> zero gradient for first-layer weights; wd still shrinks.
+    w = jnp.ones((n,), jnp.float32)
+    t1, _, _, _ = M.train_step(spec, theta, z, z, jnp.float32(1), x, y, w, jnp.float32(1e-2), jnp.float32(0.1))
+    w_before = float(jnp.abs(theta[: 64 * 64]).sum())
+    w_after = float(jnp.abs(t1[: 64 * 64]).sum())
+    assert w_after < w_before
+
+
+def test_mcdropout_stats_consistent():
+    spec = M.ModelSpec("mlp_base", 64, 10)
+    n = 64
+    rng = np.random.default_rng(5)
+    theta = M.init(spec, jnp.int32(0))
+    x = jnp.asarray(rng.standard_normal((n, spec.d)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, spec.c, n).astype(np.int32))
+    loss, h, eh, bald = M.mcdropout(spec, theta, x, y, jnp.int32(1))
+    h, eh, bald = np.asarray(h), np.asarray(eh), np.asarray(bald)
+    assert (bald >= -1e-4).all(), "mutual information must be non-negative"
+    np.testing.assert_allclose(bald, h - eh, rtol=1e-5, atol=1e-5)
+    assert (h <= np.log(spec.c) + 1e-4).all()
+    # Determinism in the seed:
+    loss2, h2, _, _ = M.mcdropout(spec, theta, x, y, jnp.int32(1))
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h2))
+    _, h3, _, _ = M.mcdropout(spec, theta, x, y, jnp.int32(2))
+    assert not np.allclose(np.asarray(h), np.asarray(h3))
+
+
+def test_gnorm_proxy_tracks_misclassification():
+    """The last-layer grad-norm bound must be ~0 for confidently-correct
+    points and large for confidently-wrong points."""
+    n, c = 8, 10
+    logits = np.zeros((n, c), np.float32)
+    logits[:, 0] = 20.0  # confident class 0
+    y_right = np.zeros(n, np.int32)
+    y_wrong = np.ones(n, np.int32)
+    h = np.ones((n, 4), np.float32)
+    g_right = np.asarray(ref.gnorm_proxy_ref(jnp.asarray(logits), jnp.asarray(y_right), jnp.asarray(h)))
+    g_wrong = np.asarray(ref.gnorm_proxy_ref(jnp.asarray(logits), jnp.asarray(y_wrong), jnp.asarray(h)))
+    assert (g_right < 1e-3).all()
+    assert (g_wrong > 1.0).all()

@@ -1,0 +1,67 @@
+//! End-to-end pipeline throughput (steps/sec): synchronous Algorithm-1
+//! trainer vs the streaming pipelined trainer at 1/2/4 scoring
+//! workers. This regenerates the paper's §3 parallelized-selection
+//! claim at bench scale and is the primary L3 perf target
+//! (EXPERIMENTS.md §Perf).
+
+use rho::config::RunConfig;
+use rho::coordinator::pipeline::run_pipelined;
+use rho::coordinator::trainer::Trainer;
+use rho::experiments::common::Lab;
+use rho::experiments::ExpCtx;
+use rho::runtime::pool::{PoolConfig, ScoringPool};
+use rho::selection::Method;
+use rho::util::timer::Stopwatch;
+
+fn main() {
+    println!("== bench_pipeline ==");
+    let ctx = ExpCtx::new(0.25);
+    if !ctx.artifacts.join("manifest.json").exists() {
+        println!("(artifacts missing: run `make artifacts`)");
+        return;
+    }
+    let lab = Lab::new(&ctx).unwrap();
+    let cfg = RunConfig {
+        dataset: "cifar10".into(),
+        arch: "mlp_base".into(),
+        il_arch: "mlp_small".into(),
+        method: Method::RhoLoss,
+        epochs: 3,
+        il_epochs: 4,
+        ..Default::default()
+    };
+    let bundle = lab.bundle(&cfg.dataset);
+    let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+    let il = lab.il_context(&cfg, &bundle).unwrap();
+
+    let sw = Stopwatch::start();
+    let sync = Trainer::new(&cfg, &target).run(&bundle, Some(&il)).unwrap();
+    let sync_sps = sync.steps as f64 / sw.elapsed_s();
+    println!("sync trainer:        {sync_sps:>7.1} steps/s");
+
+    let (d, c) = rho::data::catalog::dims_for(&cfg.dataset);
+    let fwd = lab.manifest.find(&cfg.arch, d, c, "fwd_b320").unwrap();
+    let sel = lab.manifest.find(&cfg.arch, d, c, "select_b320").unwrap();
+    for workers in [1usize, 2, 4] {
+        let pool =
+            ScoringPool::new(fwd, sel, &PoolConfig { workers, queue_depth: 16 }).unwrap();
+        let (_, sps) = run_pipelined(&cfg, &target, &pool, &bundle, &il, 4).unwrap();
+        println!(
+            "pipelined workers={workers}: {sps:>7.1} steps/s ({:+.0}% vs sync)",
+            (sps / sync_sps - 1.0) * 100.0
+        );
+    }
+
+    // Uniform trainer for the selection-overhead ratio (paper §3: the
+    // selection fwd pass costs n_B/(3 n_b) of a train step in theory).
+    let mut ucfg = cfg.clone();
+    ucfg.method = Method::Uniform;
+    let sw = Stopwatch::start();
+    let uni = Trainer::new(&ucfg, &target).run(&bundle, None).unwrap();
+    let uni_sps = uni.steps as f64 / sw.elapsed_s();
+    println!(
+        "uniform trainer:     {uni_sps:>7.1} steps/s (selection overhead {:.2}x; paper theory ~{:.2}x fwd-only)",
+        uni_sps / sync_sps,
+        1.0 + 320.0 / (3.0 * 32.0)
+    );
+}

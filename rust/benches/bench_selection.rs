@@ -1,0 +1,116 @@
+//! Selection-path microbenchmarks (custom harness; criterion is not in
+//! the vendored crate set).
+//!
+//! Covers the L3 hot path end to end: top-k ranking, candidate gather,
+//! fused-Pallas RHO scoring vs fwd-stats scoring, and scoring-pool
+//! scaling across workers. Prints mean / p50 / p95 latency per op.
+
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use rho::data::synth::{Generator, SynthSpec};
+use rho::runtime::artifact::{default_dir, Manifest};
+use rho::runtime::handle::{cpu_client, ModelRuntime};
+use rho::runtime::pool::{PoolConfig, ScoringPool};
+use rho::util::math::top_k_indices;
+use rho::util::rng::Pcg32;
+use rho::util::timer::LatencyHist;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    for _ in 0..3.min(iters) {
+        f();
+    }
+    let mut h = LatencyHist::new();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        h.record(t.elapsed());
+    }
+    println!("{name:<44} {}", h.summary());
+}
+
+fn main() {
+    println!("== bench_selection ==");
+    let mut rng = Pcg32::new(42, 0);
+
+    // ---- pure-Rust selection primitives -----------------------------
+    let scores: Vec<f32> = (0..320).map(|_| rng.gauss()).collect();
+    bench("top_k(320 -> 32)", 2000, || {
+        std::hint::black_box(top_k_indices(&scores, 32));
+    });
+    let scores_big: Vec<f32> = (0..100_000).map(|_| rng.gauss()).collect();
+    bench("top_k(100k -> 32)", 200, || {
+        std::hint::black_box(top_k_indices(&scores_big, 32));
+    });
+
+    let gen = Generator::new(SynthSpec::image(256, 10, 1.0), 1);
+    let ds = gen.sample(20_000, &mut rng);
+    let idx: Vec<u32> = (0..320u32).map(|i| i * 7 % 20_000).collect();
+    let (mut gx, mut gy) = (Vec::new(), Vec::new());
+    bench("gather 320x256 candidate batch", 2000, || {
+        ds.gather_into(&idx, &mut gx, &mut gy);
+    });
+
+    // ---- HLO-backed scoring ------------------------------------------
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts missing: skipping runtime benches — run `make artifacts`)");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let client = cpu_client().unwrap();
+    for arch in ["mlp_small", "mlp_base", "cnn_small"] {
+        let (d, c) = (256usize, 10usize);
+        let rt = match ModelRuntime::load(Rc::clone(&client), &manifest, arch, d, c) {
+            Ok(rt) => rt,
+            Err(_) => continue,
+        };
+        let st = rt.init(1).unwrap();
+        let idx: Vec<u32> = (0..320u32).collect();
+        let (xs, ys) = ds.gather(&idx);
+        let il = vec![0.5f32; 320];
+        bench(&format!("{arch}: fwd stats 320 (4 signals)"), 60, || {
+            std::hint::black_box(rt.fwd(&st.theta, &xs, &ys).unwrap());
+        });
+        bench(&format!("{arch}: fused rho select 320"), 60, || {
+            std::hint::black_box(rt.select_rho(&st.theta, &xs, &ys, &il).unwrap());
+        });
+        let w = vec![1.0f32; 32];
+        let (txs, tys) = ds.gather(&idx[..32]);
+        let mut stt = rt.init(2).unwrap();
+        bench(&format!("{arch}: train step (32)"), 60, || {
+            rt.train_step(&mut stt, &txs, &tys, &w, 1e-3, 1e-2).unwrap();
+        });
+    }
+
+    // ---- scoring-pool scaling ----------------------------------------
+    let fwd_meta = manifest.find("mlp_base", 256, 10, "fwd_b320").unwrap();
+    let sel_meta = manifest.find("mlp_base", 256, 10, "select_b320").unwrap();
+    let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_base", 256, 10).unwrap();
+    let theta = Arc::new(rt.init(3).unwrap().theta);
+    let big: Vec<u32> = (0..3200u32).map(|i| i % 20_000).collect();
+    let (bxs, bys) = ds.gather(&big);
+    let bil = vec![0.5f32; 3200];
+    let mut base_mean = 0.0f32;
+    for workers in [1usize, 2, 4] {
+        let pool =
+            ScoringPool::new(fwd_meta, sel_meta, &PoolConfig { workers, queue_depth: 16 })
+                .unwrap();
+        let mut h = LatencyHist::new();
+        for _ in 0..20 {
+            let t = Instant::now();
+            std::hint::black_box(pool.rho(&theta, &bxs, &bys, &bil).unwrap());
+            h.record(t.elapsed());
+        }
+        if workers == 1 {
+            base_mean = h.mean_us();
+        }
+        println!(
+            "pool rho 3200 pts, workers={workers:<2}              {} (speedup {:.2}x)",
+            h.summary(),
+            base_mean / h.mean_us()
+        );
+    }
+}

@@ -1,0 +1,36 @@
+//! One bench per paper table/figure: runs every experiment harness at
+//! bench scale and reports wall time. This is the "regenerate the
+//! whole evaluation" entry point — the same code paths as
+//! `rho exp all`, shrunk to keep `cargo bench` minutes-scale.
+//!
+//! Full-scale reproduction: `rho exp all --scale 0.3 --seeds 1,2`
+//! (see EXPERIMENTS.md for recorded results).
+
+use rho::experiments::{self, ExpCtx};
+use rho::util::timer::Stopwatch;
+
+fn main() {
+    println!("== bench_tables: every paper table/figure at bench scale ==");
+    let mut ctx = ExpCtx::new(0.06);
+    ctx.epoch_scale = 0.2;
+    ctx.seeds = vec![1];
+    ctx.results = std::path::PathBuf::from("results/bench");
+    if !ctx.artifacts.join("manifest.json").exists() {
+        println!("(artifacts missing: run `make artifacts`)");
+        return;
+    }
+    let mut failed = 0;
+    for id in experiments::ALL {
+        let sw = Stopwatch::start();
+        match experiments::run(id, &ctx) {
+            Ok(()) => println!("[bench {id:<8}] {:>6.1}s OK", sw.elapsed_s()),
+            Err(e) => {
+                failed += 1;
+                println!("[bench {id:<8}] {:>6.1}s FAILED: {e:#}", sw.elapsed_s());
+            }
+        }
+    }
+    if failed > 0 {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,255 @@
+//! Run configuration: defaults mirror the paper's §4.0 setup
+//! (AdamW defaults, n_b=32, n_B=320 => 10% selected), overridable from
+//! `key=value` pairs (CLI) or a config file with one pair per line.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::selection::Method;
+
+/// Full configuration of one training run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Catalog dataset name (see `data::catalog::ALL`).
+    pub dataset: String,
+    /// Target architecture.
+    pub arch: String,
+    /// IL-model architecture (paper: much smaller than the target).
+    pub il_arch: String,
+    pub method: Method,
+    pub epochs: usize,
+    pub seed: u64,
+    /// Gradient batch n_b.
+    pub nb: usize,
+    /// Fraction selected: n_b / n_B (paper default 0.1 => n_B = 320).
+    pub select_frac: f32,
+    pub lr: f32,
+    pub wd: f32,
+    /// Evaluate on test every k steps (0 = once per epoch).
+    pub eval_every: usize,
+    /// Dataset size multiplier (benches use < 1).
+    pub scale: f64,
+    /// Track ground-truth properties of selected points (Fig. 3/7).
+    pub track_props: bool,
+    /// Train the IL model without holdout data (two-model cross
+    /// scheme, Fig. 2 row 3 / Table 3).
+    pub no_holdout: bool,
+    /// Keep updating the IL model on acquired data — the paper's
+    /// *original* (non-approximated) selection function (Table 4/Fig 7).
+    pub online_il: bool,
+    /// LR multiplier for online IL updates (paper App. D: 0.01).
+    pub il_lr_scale: f32,
+    /// Epochs of IL-model pretraining on the holdout set.
+    pub il_epochs: usize,
+    /// SVP core-set fraction of the train set.
+    pub svp_frac: f32,
+    /// Scoring-pool workers (0 = score on the main thread).
+    pub workers: usize,
+    /// JSONL event-log path ("" = disabled).
+    pub events: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "cifar10".into(),
+            arch: "mlp_base".into(),
+            il_arch: "mlp_small".into(),
+            method: Method::RhoLoss,
+            epochs: 20,
+            seed: 1,
+            nb: 32,
+            select_frac: 0.1,
+            lr: 1e-3,
+            wd: 1e-2,
+            eval_every: 0,
+            scale: 1.0,
+            track_props: false,
+            no_holdout: false,
+            online_il: false,
+            il_lr_scale: 0.01,
+            il_epochs: 8,
+            svp_frac: 0.5,
+            workers: 0,
+            events: String::new(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Candidate batch size n_B = n_b / select_frac (paper §2).
+    pub fn big_batch(&self) -> usize {
+        ((self.nb as f32 / self.select_frac).round() as usize).max(self.nb)
+    }
+
+    /// Apply one `key=value` override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = value.trim();
+        match key.trim() {
+            "dataset" => self.dataset = v.into(),
+            "arch" => self.arch = v.into(),
+            "il_arch" => self.il_arch = v.into(),
+            "method" => {
+                self.method =
+                    Method::parse(v).ok_or_else(|| anyhow!("unknown method `{v}`"))?
+            }
+            "epochs" => self.epochs = v.parse()?,
+            "seed" => self.seed = v.parse()?,
+            "nb" => self.nb = v.parse()?,
+            "select_frac" => self.select_frac = v.parse()?,
+            "lr" => self.lr = v.parse()?,
+            "wd" => self.wd = v.parse()?,
+            "eval_every" => self.eval_every = v.parse()?,
+            "scale" => self.scale = v.parse()?,
+            "track_props" => self.track_props = parse_bool(v)?,
+            "no_holdout" => self.no_holdout = parse_bool(v)?,
+            "online_il" => self.online_il = parse_bool(v)?,
+            "il_lr_scale" => self.il_lr_scale = v.parse()?,
+            "il_epochs" => self.il_epochs = v.parse()?,
+            "svp_frac" => self.svp_frac = v.parse()?,
+            "workers" => self.workers = v.parse()?,
+            "events" => self.events = v.into(),
+            other => bail!("unknown config key `{other}`"),
+        }
+        Ok(())
+    }
+
+    /// Apply a sequence of `key=value` strings.
+    pub fn apply_pairs<'a>(&mut self, pairs: impl IntoIterator<Item = &'a str>) -> Result<()> {
+        for p in pairs {
+            let (k, v) = p
+                .split_once('=')
+                .ok_or_else(|| anyhow!("expected key=value, got `{p}`"))?;
+            self.set(k, v)?;
+        }
+        Ok(())
+    }
+
+    /// Parse a config file: one `key = value` per line, `#` comments.
+    pub fn apply_file(&mut self, path: &std::path::Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("{path:?}:{}: expected key = value", lineno + 1))?;
+            self.set(k, v)
+                .map_err(|e| anyhow!("{path:?}:{}: {e}", lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Sanity-check invariants.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0 < self.select_frac && self.select_frac <= 1.0) {
+            bail!("select_frac must be in (0, 1], got {}", self.select_frac);
+        }
+        if self.nb == 0 || self.epochs == 0 {
+            bail!("nb and epochs must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.svp_frac) {
+            bail!("svp_frac must be in [0, 1]");
+        }
+        if self.lr <= 0.0 {
+            bail!("lr must be positive");
+        }
+        Ok(())
+    }
+
+    /// One-line summary for logs.
+    pub fn tag(&self) -> String {
+        format!(
+            "{}/{}-vs-{}/{}-e{}-s{}",
+            self.dataset,
+            self.arch,
+            self.il_arch,
+            self.method.name(),
+            self.epochs,
+            self.seed
+        )
+    }
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        other => bail!("expected bool, got `{other}`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = RunConfig::default();
+        assert_eq!(c.nb, 32);
+        assert_eq!(c.big_batch(), 320); // n_b/n_B = 0.1
+        assert_eq!(c.lr, 1e-3); // PyTorch AdamW defaults
+        assert_eq!(c.wd, 1e-2);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let mut c = RunConfig::default();
+        c.apply_pairs(["method=uniform", "epochs=3", "select_frac=0.5", "track_props=true"])
+            .unwrap();
+        assert_eq!(c.method, Method::Uniform);
+        assert_eq!(c.epochs, 3);
+        assert_eq!(c.big_batch(), 64);
+        assert!(c.track_props);
+    }
+
+    #[test]
+    fn bad_overrides_rejected() {
+        let mut c = RunConfig::default();
+        assert!(c.set("method", "bogus").is_err());
+        assert!(c.set("no_such_key", "1").is_err());
+        assert!(c.apply_pairs(["epochs"]).is_err());
+    }
+
+    #[test]
+    fn events_key_round_trips() {
+        let mut c = RunConfig::default();
+        assert!(c.events.is_empty());
+        c.apply_pairs(["events=results/run.jsonl"]).unwrap();
+        assert_eq!(c.events, "results/run.jsonl");
+    }
+
+    #[test]
+    fn select_frac_one_means_big_batch_equals_nb() {
+        let mut c = RunConfig::default();
+        c.apply_pairs(["select_frac=1.0"]).unwrap();
+        assert_eq!(c.big_batch(), c.nb);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = RunConfig::default();
+        c.select_frac = 0.0;
+        assert!(c.validate().is_err());
+        c.select_frac = 0.1;
+        c.lr = -1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn config_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("rho-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.cfg");
+        std::fs::write(&path, "# comment\nmethod = rho_loss\nepochs = 7 # inline\n\nseed=9\n")
+            .unwrap();
+        let mut c = RunConfig::default();
+        c.apply_file(&path).unwrap();
+        assert_eq!(c.epochs, 7);
+        assert_eq!(c.seed, 9);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

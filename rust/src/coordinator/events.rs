@@ -1,0 +1,175 @@
+//! Structured JSONL event log for training runs.
+//!
+//! Every significant coordinator event (run start, step summary, eval,
+//! epoch roll, IL precompute, checkpoint) is appended as one JSON
+//! object per line, so external tooling can tail a live run or
+//! post-process it without parsing free-form logs. The writer is
+//! buffered and failure-tolerant: event-log I/O errors never abort
+//! training (they are counted and surfaced at the end).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::{arr, num, obj, s, Value};
+
+/// One sink for run events. Construct with [`EventLog::create`] or use
+/// [`EventLog::disabled`] for a no-op sink.
+pub struct EventLog {
+    w: Option<BufWriter<File>>,
+    /// Events written so far.
+    pub written: u64,
+    /// I/O errors swallowed (training must not die on log failure).
+    pub errors: u64,
+}
+
+impl EventLog {
+    pub fn create(path: &Path) -> std::io::Result<EventLog> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(EventLog { w: Some(BufWriter::new(File::create(path)?)), written: 0, errors: 0 })
+    }
+
+    /// A sink that drops everything (the default in Trainer).
+    pub fn disabled() -> EventLog {
+        EventLog { w: None, written: 0, errors: 0 }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.w.is_some()
+    }
+
+    fn unix_time() -> f64 {
+        SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+    }
+
+    /// Append one event with the given kind and payload fields.
+    pub fn emit(&mut self, kind: &str, mut fields: Vec<(&str, Value)>) {
+        let Some(w) = self.w.as_mut() else { return };
+        let mut kvs = vec![("t", num(Self::unix_time())), ("kind", s(kind))];
+        kvs.append(&mut fields);
+        let line = obj(kvs).to_json();
+        match writeln!(w, "{line}") {
+            Ok(()) => self.written += 1,
+            Err(_) => self.errors += 1,
+        }
+    }
+
+    // -- typed convenience emitters ------------------------------------
+
+    pub fn run_start(&mut self, tag: &str, n_train: usize, steps: u64) {
+        self.emit(
+            "run_start",
+            vec![("tag", s(tag)), ("n_train", num(n_train as f64)), ("total_steps", num(steps as f64))],
+        );
+    }
+
+    pub fn step(&mut self, step: u64, train_loss: f32, picked: &[u32], mean_score: f32) {
+        self.emit(
+            "step",
+            vec![
+                ("step", num(step as f64)),
+                ("loss", num(train_loss as f64)),
+                ("picked", num(picked.len() as f64)),
+                ("mean_score", num(mean_score as f64)),
+            ],
+        );
+    }
+
+    pub fn eval(&mut self, step: u64, epoch: f64, accuracy: f32, loss: f32) {
+        self.emit(
+            "eval",
+            vec![
+                ("step", num(step as f64)),
+                ("epoch", num(epoch)),
+                ("accuracy", num(accuracy as f64)),
+                ("loss", num(loss as f64)),
+            ],
+        );
+    }
+
+    pub fn epoch_roll(&mut self, epoch: usize, frac_noisy: f32) {
+        self.emit(
+            "epoch",
+            vec![("epoch", num(epoch as f64)), ("sel_frac_noisy", num(frac_noisy as f64))],
+        );
+    }
+
+    pub fn il_ready(&mut self, n: usize, mean_il: f32, il_values_sample: &[f32]) {
+        self.emit(
+            "il_ready",
+            vec![
+                ("n", num(n as f64)),
+                ("mean_il", num(mean_il as f64)),
+                ("sample", arr(il_values_sample.iter().take(8).map(|&x| num(x as f64)))),
+            ],
+        );
+    }
+
+    pub fn run_end(&mut self, final_acc: f32, secs: f64) {
+        self.emit("run_end", vec![("final_acc", num(final_acc as f64)), ("secs", num(secs))]);
+        if let Some(w) = self.w.as_mut() {
+            let _ = w.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("rho-ev-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn writes_one_json_object_per_line() {
+        let path = tmp("a").join("run.jsonl");
+        let mut log = EventLog::create(&path).unwrap();
+        log.run_start("tag", 100, 10);
+        log.step(1, 2.5, &[1, 2, 3], 0.7);
+        log.eval(1, 0.5, 0.9, 0.3);
+        log.run_end(0.91, 1.5);
+        assert_eq!(log.written, 4);
+        assert_eq!(log.errors, 0);
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        for line in &lines {
+            let v = json::parse(line).unwrap();
+            assert!(v.get("t").is_some());
+            assert!(v.get("kind").is_some());
+        }
+        let ev = json::parse(lines[2]).unwrap();
+        assert_eq!(ev.get("kind").unwrap().as_str(), Some("eval"));
+        assert_eq!(ev.get("accuracy").unwrap().as_f64(), Some(0.8999999761581421));
+        std::fs::remove_dir_all(tmp("a")).ok();
+    }
+
+    #[test]
+    fn disabled_sink_is_noop() {
+        let mut log = EventLog::disabled();
+        assert!(!log.is_enabled());
+        log.step(1, 1.0, &[], 0.0);
+        log.run_end(0.5, 0.1);
+        assert_eq!(log.written, 0);
+    }
+
+    #[test]
+    fn il_sample_truncates_to_eight() {
+        let path = tmp("b").join("run.jsonl");
+        let mut log = EventLog::create(&path).unwrap();
+        let il: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        log.il_ready(100, 49.5, &il);
+        log.run_end(0.0, 0.0);
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("sample").unwrap().as_array().unwrap().len(), 8);
+        std::fs::remove_dir_all(tmp("b")).ok();
+    }
+}

@@ -1,0 +1,113 @@
+//! Irreducible-loss (IL) model machinery (paper §3, §4.2, App. B/D):
+//! train a (cheap) model on the holdout set, keep the checkpoint with
+//! the lowest validation *loss* (not accuracy), and precompute
+//! IL[i] = L[y_i | x_i; D_ho] for every training point. Also the
+//! no-holdout two-model cross scheme (Fig. 2 row 3 / Table 3).
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::runtime::handle::ModelRuntime;
+use crate::runtime::params::TrainState;
+use crate::util::rng::Pcg32;
+
+/// IL-model training hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct IlTrainConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    pub wd: f32,
+    pub seed: u64,
+}
+
+impl Default for IlTrainConfig {
+    fn default() -> Self {
+        IlTrainConfig { epochs: 8, lr: 1e-3, wd: 1e-2, seed: 100 }
+    }
+}
+
+/// Outcome of IL-model training.
+pub struct IlModel {
+    pub state: TrainState,
+    pub best_val_loss: f32,
+    pub val_accuracy: f32,
+    /// Epoch index the best checkpoint came from.
+    pub best_epoch: usize,
+}
+
+/// Uniform-shuffled training of `rt` on `train_on`, checkpointed by
+/// lowest loss on `val` after each epoch (paper App. B: "lowest
+/// holdout loss, not highest accuracy; the minimum is reached early").
+pub fn train_il(
+    rt: &ModelRuntime,
+    train_on: &Dataset,
+    val: &Dataset,
+    cfg: &IlTrainConfig,
+) -> Result<IlModel> {
+    let mut state = rt.init(cfg.seed as i32)?;
+    let mut rng = Pcg32::new(cfg.seed, 31);
+    let nb = rt.train_batch;
+    let ones = vec![1.0f32; nb];
+    let mut best: Option<(f32, f32, usize, TrainState)> = None;
+    let mut order: Vec<u32> = (0..train_on.len() as u32).collect();
+    let (mut xs, mut ys) = (Vec::new(), Vec::new());
+    for epoch in 0..cfg.epochs.max(1) {
+        rng.shuffle(&mut order);
+        for chunk in order.chunks(nb) {
+            train_on.gather_into(chunk, &mut xs, &mut ys);
+            let w = &ones[..chunk.len()];
+            rt.train_step(&mut state, &xs, &ys, w, cfg.lr, cfg.wd)?;
+        }
+        let ev = rt.eval_on(&state.theta, val)?;
+        if best.as_ref().map(|b| ev.mean_loss < b.0).unwrap_or(true) {
+            best = Some((ev.mean_loss, ev.accuracy, epoch, state.clone()));
+        }
+    }
+    let (best_val_loss, val_accuracy, best_epoch, state) = best.unwrap();
+    Ok(IlModel { state, best_val_loss, val_accuracy, best_epoch })
+}
+
+/// IL[i] for every point of `ds` under the given IL-model parameters.
+pub fn compute_il(rt: &ModelRuntime, theta: &[f32], ds: &Dataset) -> Result<Vec<f32>> {
+    let idx: Vec<u32> = (0..ds.len() as u32).collect();
+    let (xs, ys) = ds.gather(&idx);
+    Ok(rt.fwd(theta, &xs, &ys)?.loss)
+}
+
+/// No-holdout IL (paper Fig. 2 row 3, Table 3): split the train set in
+/// two halves, train one IL model per half, and compute each point's
+/// IL with the model that did NOT see it. Costs no extra compute
+/// versus one model on the full holdout.
+pub fn no_holdout_il(
+    rt: &ModelRuntime,
+    train: &Dataset,
+    val: &Dataset,
+    cfg: &IlTrainConfig,
+) -> Result<Vec<f32>> {
+    let n = train.len();
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    let mut rng = Pcg32::new(cfg.seed ^ 0x5417, 41);
+    rng.shuffle(&mut order);
+    let half_a = &order[..n / 2];
+    let half_b = &order[n / 2..];
+    let ds_a = train.subset(half_a);
+    let ds_b = train.subset(half_b);
+    let model_a = train_il(rt, &ds_a, val, cfg)?;
+    let model_b = train_il(
+        rt,
+        &ds_b,
+        val,
+        &IlTrainConfig { seed: cfg.seed.wrapping_add(1), ..*cfg },
+    )?;
+    // model trained on A scores B, and vice versa
+    let il_b = compute_il(rt, &model_a.state.theta, &ds_b)?;
+    let il_a = compute_il(rt, &model_b.state.theta, &ds_a)?;
+    let mut il = vec![0.0f32; n];
+    for (j, &i) in half_a.iter().enumerate() {
+        il[i as usize] = il_a[j];
+    }
+    for (j, &i) in half_b.iter().enumerate() {
+        il[i as usize] = il_b[j];
+    }
+    Ok(il)
+}

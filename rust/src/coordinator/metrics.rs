@@ -1,0 +1,143 @@
+//! Training curves and the paper's headline metric: epochs (or steps)
+//! to reach a target test accuracy (§4.0 Evaluation).
+
+use std::path::Path;
+
+use crate::util::csvio::CsvWriter;
+
+/// One test-set evaluation during training.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalPoint {
+    /// Fractional epoch (steps consumed / steps per epoch).
+    pub epoch: f64,
+    pub step: u64,
+    pub accuracy: f32,
+    pub loss: f32,
+}
+
+/// A full accuracy-vs-steps training curve.
+#[derive(Clone, Debug, Default)]
+pub struct Curve {
+    pub points: Vec<EvalPoint>,
+}
+
+impl Curve {
+    pub fn push(&mut self, p: EvalPoint) {
+        self.points.push(p);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// First fractional epoch at which `target` accuracy is reached
+    /// (paper Table 2); None = "NR" (not reached).
+    pub fn epochs_to(&self, target: f32) -> Option<f64> {
+        self.points.iter().find(|p| p.accuracy >= target).map(|p| p.epoch)
+    }
+
+    /// First step at which `target` accuracy is reached (Figs. 4/5).
+    pub fn steps_to(&self, target: f32) -> Option<u64> {
+        self.points.iter().find(|p| p.accuracy >= target).map(|p| p.step)
+    }
+
+    pub fn final_accuracy(&self) -> f32 {
+        self.points.last().map(|p| p.accuracy).unwrap_or(0.0)
+    }
+
+    pub fn best_accuracy(&self) -> f32 {
+        self.points.iter().map(|p| p.accuracy).fold(0.0, f32::max)
+    }
+
+    /// Highest accuracy reached within the first `epochs` epochs.
+    pub fn best_accuracy_within(&self, epochs: f64) -> f32 {
+        self.points
+            .iter()
+            .filter(|p| p.epoch <= epochs)
+            .map(|p| p.accuracy)
+            .fold(0.0, f32::max)
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(path, &["epoch", "step", "accuracy", "loss"])?;
+        for p in &self.points {
+            w.rowf(&[p.epoch, p.step as f64, p.accuracy as f64, p.loss as f64])?;
+        }
+        w.flush()
+    }
+}
+
+/// Mean curve across seeds, aligned on evaluation index (curves from
+/// identical configs share their eval schedule).
+pub fn mean_curve(curves: &[Curve]) -> Curve {
+    let mut out = Curve::default();
+    if curves.is_empty() {
+        return out;
+    }
+    let n = curves.iter().map(|c| c.points.len()).min().unwrap_or(0);
+    for i in 0..n {
+        let k = curves.len() as f64;
+        let epoch = curves.iter().map(|c| c.points[i].epoch).sum::<f64>() / k;
+        let step = (curves.iter().map(|c| c.points[i].step).sum::<u64>() as f64 / k) as u64;
+        let accuracy = curves.iter().map(|c| c.points[i].accuracy).sum::<f32>() / k as f32;
+        let loss = curves.iter().map(|c| c.points[i].loss).sum::<f32>() / k as f32;
+        out.push(EvalPoint { epoch, step, accuracy, loss });
+    }
+    out
+}
+
+/// Render `epochs_to` as the paper's table cells: "13" or "NR".
+pub fn fmt_epochs(e: Option<f64>) -> String {
+    match e {
+        Some(v) => format!("{v:.1}"),
+        None => "NR".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve(points: &[(f64, f32)]) -> Curve {
+        Curve {
+            points: points
+                .iter()
+                .enumerate()
+                .map(|(i, &(e, a))| EvalPoint { epoch: e, step: i as u64, accuracy: a, loss: 1.0 })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn epochs_to_finds_first_crossing() {
+        let c = curve(&[(1.0, 0.3), (2.0, 0.55), (3.0, 0.52), (4.0, 0.7)]);
+        assert_eq!(c.epochs_to(0.5), Some(2.0));
+        assert_eq!(c.epochs_to(0.6), Some(4.0));
+        assert_eq!(c.epochs_to(0.9), None);
+        assert_eq!(c.steps_to(0.5), Some(1));
+    }
+
+    #[test]
+    fn accuracy_summaries() {
+        let c = curve(&[(1.0, 0.3), (2.0, 0.8), (3.0, 0.6)]);
+        assert_eq!(c.final_accuracy(), 0.6);
+        assert_eq!(c.best_accuracy(), 0.8);
+        assert_eq!(c.best_accuracy_within(1.5), 0.3);
+    }
+
+    #[test]
+    fn mean_across_seeds() {
+        let a = curve(&[(1.0, 0.2), (2.0, 0.4)]);
+        let b = curve(&[(1.0, 0.4), (2.0, 0.6)]);
+        let m = mean_curve(&[a, b]);
+        assert_eq!(m.points.len(), 2);
+        assert!((m.points[0].accuracy - 0.3).abs() < 1e-6);
+        assert!((m.points[1].accuracy - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fmt_matches_paper_convention() {
+        assert_eq!(fmt_epochs(Some(13.0)), "13.0");
+        assert_eq!(fmt_epochs(None), "NR");
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator: Algorithm-1 trainer, IL-model machinery, streaming
+//! pipeline, metrics, and selection-property tracking.
+
+pub mod events;
+pub mod il_model;
+pub mod metrics;
+pub mod pipeline;
+pub mod tracker;
+pub mod trainer;
+
+pub use events::EventLog;
+pub use il_model::{compute_il, no_holdout_il, train_il, IlModel, IlTrainConfig};
+pub use metrics::{fmt_epochs, mean_curve, Curve, EvalPoint};
+pub use pipeline::run_pipelined;
+pub use tracker::SelectionTracker;
+pub use trainer::{IlContext, RunResult, Trainer};

@@ -1,0 +1,114 @@
+//! Streaming pipelined trainer: overlap candidate-batch preparation
+//! (gather from the dataset) and scoring with the gradient step, via a
+//! bounded prefetch channel (backpressure) + the parallel scoring pool.
+//!
+//! This is the deployment shape of the paper's §3 "simple parallelized
+//! selection": while the master takes the gradient step on `b_t`,
+//! workers are already scoring `B_{t+1}`. The synchronous `Trainer`
+//! is the reference implementation; this pipeline must match its
+//! selection semantics for the fused RHO path (verified in tests by
+//! identical-curve comparison with workers=1).
+
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::sync_channel;
+use std::sync::Arc;
+
+use crate::config::RunConfig;
+use crate::coordinator::metrics::{Curve, EvalPoint};
+use crate::coordinator::trainer::IlContext;
+use crate::data::loader::EpochSampler;
+use crate::data::Bundle;
+use crate::runtime::handle::ModelRuntime;
+use crate::runtime::pool::ScoringPool;
+use crate::selection::{select, Candidates, Method};
+use crate::util::rng::Pcg32;
+use crate::util::timer::Stopwatch;
+
+/// One prefetched candidate batch.
+struct CandBatch {
+    step: u64,
+    rolled: bool,
+    idx: Vec<u32>,
+    xs: Vec<f32>,
+    ys: Vec<i32>,
+    il: Vec<f32>,
+}
+
+/// Pipelined RHO-LOSS run (fused scoring path only). Returns the curve
+/// plus achieved steps/sec for the perf harness.
+pub fn run_pipelined(
+    cfg: &RunConfig,
+    target: &ModelRuntime,
+    pool: &ScoringPool,
+    bundle: &Bundle,
+    il: &IlContext,
+    prefetch_depth: usize,
+) -> Result<(Curve, f64)> {
+    cfg.validate()?;
+    if cfg.method != Method::RhoLoss {
+        return Err(anyhow!("pipeline supports the fused rho_loss path"));
+    }
+    let train = Arc::new(bundle.train.clone());
+    let il_values = Arc::new(il.values.clone());
+    let n = train.len();
+    let big = cfg.big_batch();
+    let steps_per_epoch = n.div_ceil(big) as u64;
+    let total_steps = steps_per_epoch * cfg.epochs as u64;
+    let eval_every = if cfg.eval_every == 0 { steps_per_epoch } else { cfg.eval_every as u64 };
+
+    // Producer: sample + gather candidate batches ahead of the trainer.
+    let (tx, rx) = sync_channel::<CandBatch>(prefetch_depth.max(1));
+    let seed = cfg.seed;
+    let producer = {
+        let train = Arc::clone(&train);
+        let il_values = Arc::clone(&il_values);
+        std::thread::spawn(move || {
+            let mut sampler = EpochSampler::new(train.len(), seed ^ 0xBA7C);
+            let mut idx = Vec::new();
+            for step in 1..=total_steps {
+                let rolled = sampler.next_batch(big, &mut idx);
+                let (xs, ys) = train.gather(&idx);
+                let ilv: Vec<f32> = idx.iter().map(|&i| il_values[i as usize]).collect();
+                let batch =
+                    CandBatch { step, rolled, idx: idx.clone(), xs, ys, il: ilv };
+                if tx.send(batch).is_err() {
+                    return; // consumer gone
+                }
+            }
+        })
+    };
+
+    let mut rng = Pcg32::new(cfg.seed, 53);
+    let mut state = target.init(cfg.seed as i32)?;
+    let mut curve = Curve::default();
+    let (mut sel_xs, mut sel_ys) = (Vec::new(), Vec::new());
+    let sw = Stopwatch::start();
+
+    for _ in 0..total_steps {
+        let b = rx.recv().map_err(|_| anyhow!("producer died"))?;
+        let _ = b.rolled;
+        let theta = Arc::new(state.theta.clone());
+        let scores = pool.rho(&theta, &b.xs, &b.ys, &b.il)?;
+        let cands = Candidates { n: b.idx.len(), rho: Some(&scores), ..Default::default() };
+        let sel = select(cfg.method, &cands, cfg.nb, &mut rng);
+        let picked_idx: Vec<u32> = sel.picked.iter().map(|&p| b.idx[p]).collect();
+        for (chunk_i, chunk) in picked_idx.chunks(target.train_batch).enumerate() {
+            train.gather_into(chunk, &mut sel_xs, &mut sel_ys);
+            let wbase = chunk_i * target.train_batch;
+            let w = &sel.weights[wbase..wbase + chunk.len()];
+            target.train_step(&mut state, &sel_xs, &sel_ys, w, cfg.lr, cfg.wd)?;
+        }
+        if b.step % eval_every == 0 || b.step == total_steps {
+            let ev = target.eval_on(&state.theta, &bundle.test)?;
+            curve.push(EvalPoint {
+                epoch: b.step as f64 / steps_per_epoch as f64,
+                step: b.step,
+                accuracy: ev.accuracy,
+                loss: ev.mean_loss,
+            });
+        }
+    }
+    let secs = sw.elapsed_s();
+    producer.join().map_err(|_| anyhow!("producer panicked"))?;
+    Ok((curve, total_steps as f64 / secs))
+}

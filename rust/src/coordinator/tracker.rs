@@ -1,0 +1,161 @@
+//! Ground-truth property tracking of *selected* points — the
+//! measurement behind Fig. 3 (noisy / low-relevance / redundant
+//! selection fractions) and Fig. 7 (corrupted selection over time).
+//!
+//! The synthetic substrate knows exactly which points are corrupted,
+//! low-relevance, or duplicates (`PointMeta`), so these fractions are
+//! exact rather than estimated.
+
+use crate::data::Dataset;
+
+/// Running counts for one epoch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpochCounts {
+    pub selected: usize,
+    pub noisy: usize,
+    pub low_relevance: usize,
+    /// Selected points the model already classified correctly at
+    /// selection time (the paper's redundancy proxy).
+    pub already_correct: usize,
+    /// Test accuracy at the end of the epoch (for Fig. 3's
+    /// accuracy-controlled averaging).
+    pub test_accuracy: f32,
+}
+
+/// Per-epoch selection-property tracker.
+#[derive(Clone, Debug, Default)]
+pub struct SelectionTracker {
+    pub epochs: Vec<EpochCounts>,
+    current: EpochCounts,
+}
+
+impl SelectionTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one step's selected points. `correct` is the per-point
+    /// already-classified-correctly indicator at selection time (None
+    /// when the fused RHO path skipped the fwd stats).
+    pub fn record(
+        &mut self,
+        ds: &Dataset,
+        picked_dataset_idx: &[u32],
+        correct: Option<&[f32]>,
+    ) {
+        for (j, &i) in picked_dataset_idx.iter().enumerate() {
+            let m = ds.meta[i as usize];
+            self.current.selected += 1;
+            self.current.noisy += usize::from(m.noisy);
+            self.current.low_relevance += usize::from(m.low_relevance);
+            if let Some(c) = correct {
+                self.current.already_correct += usize::from(c[j] > 0.5);
+            }
+        }
+    }
+
+    /// Close the epoch, attaching the current test accuracy.
+    pub fn roll_epoch(&mut self, test_accuracy: f32) {
+        self.current.test_accuracy = test_accuracy;
+        self.epochs.push(self.current);
+        self.current = EpochCounts::default();
+    }
+
+    /// Fraction helpers over a range of epochs.
+    fn frac(&self, f: impl Fn(&EpochCounts) -> usize, filter: impl Fn(&EpochCounts) -> bool) -> f32 {
+        let (mut num, mut den) = (0usize, 0usize);
+        for e in self.epochs.iter().filter(|e| filter(e)) {
+            num += f(e);
+            den += e.selected;
+        }
+        if den == 0 {
+            0.0
+        } else {
+            num as f32 / den as f32
+        }
+    }
+
+    /// Fraction of selected points with corrupted labels (Fig. 3 left).
+    pub fn frac_noisy(&self) -> f32 {
+        self.frac(|e| e.noisy, |_| true)
+    }
+
+    /// Fraction from low-relevance classes (Fig. 3 middle).
+    pub fn frac_low_relevance(&self) -> f32 {
+        self.frac(|e| e.low_relevance, |_| true)
+    }
+
+    /// Fraction already classified correctly (Fig. 3 right). Following
+    /// the paper, only epochs where test accuracy is below
+    /// `acc_ceiling` are averaged (controls for different final
+    /// accuracies across methods).
+    pub fn frac_already_correct(&self, acc_ceiling: f32) -> f32 {
+        self.frac(|e| e.already_correct, |e| e.test_accuracy < acc_ceiling)
+    }
+
+    /// Per-epoch noisy-selection fractions (Fig. 7 left).
+    pub fn noisy_by_epoch(&self) -> Vec<f32> {
+        self.epochs
+            .iter()
+            .map(|e| if e.selected == 0 { 0.0 } else { e.noisy as f32 / e.selected as f32 })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::PointMeta;
+
+    fn ds() -> Dataset {
+        let mut d = Dataset::empty(1, 2);
+        d.push(&[0.0], 0, PointMeta { noisy: true, ..Default::default() });
+        d.push(&[1.0], 1, PointMeta { low_relevance: true, ..Default::default() });
+        d.push(&[2.0], 0, PointMeta::default());
+        d
+    }
+
+    #[test]
+    fn fractions_accumulate() {
+        let d = ds();
+        let mut t = SelectionTracker::new();
+        t.record(&d, &[0, 1], Some(&[1.0, 0.0]));
+        t.record(&d, &[2, 2], Some(&[0.0, 1.0]));
+        t.roll_epoch(0.5);
+        assert_eq!(t.epochs[0].selected, 4);
+        assert!((t.frac_noisy() - 0.25).abs() < 1e-6);
+        assert!((t.frac_low_relevance() - 0.25).abs() < 1e-6);
+        assert!((t.frac_already_correct(1.0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accuracy_ceiling_filters_epochs() {
+        let d = ds();
+        let mut t = SelectionTracker::new();
+        t.record(&d, &[0], Some(&[1.0]));
+        t.roll_epoch(0.2); // below ceiling: counted
+        t.record(&d, &[1], Some(&[1.0]));
+        t.roll_epoch(0.9); // above ceiling 0.5: excluded
+        assert_eq!(t.frac_already_correct(0.5), 1.0);
+        // unfiltered fractions still use all epochs
+        assert!((t.frac_noisy() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_tracker_is_zero() {
+        let t = SelectionTracker::new();
+        assert_eq!(t.frac_noisy(), 0.0);
+        assert_eq!(t.frac_already_correct(1.0), 0.0);
+        assert!(t.noisy_by_epoch().is_empty());
+    }
+
+    #[test]
+    fn fused_path_without_correct_flags() {
+        let d = ds();
+        let mut t = SelectionTracker::new();
+        t.record(&d, &[0, 2], None);
+        t.roll_epoch(0.3);
+        assert_eq!(t.epochs[0].already_correct, 0);
+        assert!((t.frac_noisy() - 0.5).abs() < 1e-6);
+    }
+}

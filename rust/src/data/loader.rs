@@ -1,0 +1,129 @@
+//! Epoch streaming: shuffle-without-replacement candidate batches.
+//!
+//! This is the "online batch selection" data feed (paper §2): each
+//! step draws a large batch `B_t` of `n_B` indices without replacement;
+//! replacement happens when the next epoch starts (random shuffling).
+
+use crate::util::rng::Pcg32;
+
+/// Streams candidate-batch index slices over a dataset, reshuffling at
+/// every epoch boundary.
+pub struct EpochSampler {
+    order: Vec<u32>,
+    pos: usize,
+    pub epoch: usize,
+    rng: Pcg32,
+}
+
+impl EpochSampler {
+    pub fn new(n: usize, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, 21);
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut order);
+        EpochSampler { order, pos: 0, epoch: 0, rng }
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Number of candidate batches per epoch for a given `n_b` batch
+    /// size (the final partial batch counts).
+    pub fn batches_per_epoch(&self, nb: usize) -> usize {
+        self.order.len().div_ceil(nb)
+    }
+
+    /// Next candidate batch of up to `n` indices. Returns
+    /// `(indices, epoch_rolled)`; `epoch_rolled` is true when this call
+    /// crossed an epoch boundary (buffer reshuffled before serving).
+    pub fn next_batch(&mut self, n: usize, out: &mut Vec<u32>) -> bool {
+        out.clear();
+        let mut rolled = false;
+        if self.pos >= self.order.len() {
+            self.rng.shuffle(&mut self.order);
+            self.pos = 0;
+            self.epoch += 1;
+            rolled = true;
+        }
+        let take = n.min(self.order.len() - self.pos);
+        out.extend_from_slice(&self.order[self.pos..self.pos + take]);
+        self.pos += take;
+        rolled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use std::collections::HashSet;
+
+    #[test]
+    fn covers_every_point_each_epoch_prop() {
+        prop::check("epoch-coverage", 25, |rng| {
+            let n = 10 + rng.below(500);
+            let nb = 1 + rng.below(64);
+            let mut s = EpochSampler::new(n, rng.next_u64());
+            let mut seen = HashSet::new();
+            let mut buf = Vec::new();
+            // first epoch: batches until just before the roll
+            for _ in 0..s.batches_per_epoch(nb) {
+                let rolled = s.next_batch(nb, &mut buf);
+                if rolled {
+                    return Err("rolled before epoch should end".into());
+                }
+                for &i in &buf {
+                    if !seen.insert(i) {
+                        return Err(format!("index {i} served twice in one epoch"));
+                    }
+                }
+            }
+            if seen.len() != n {
+                return Err(format!("served {} of {n} points", seen.len()));
+            }
+            // next call rolls the epoch
+            let rolled = s.next_batch(nb, &mut buf);
+            if !rolled || s.epoch != 1 {
+                return Err("expected epoch roll".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn reshuffles_between_epochs() {
+        let mut s = EpochSampler::new(1000, 3);
+        let mut buf = Vec::new();
+        s.next_batch(1000, &mut buf);
+        let first = buf.clone();
+        s.next_batch(1000, &mut buf);
+        assert_eq!(buf.len(), 1000);
+        assert_ne!(first, buf, "order identical across epochs");
+    }
+
+    #[test]
+    fn partial_final_batch() {
+        let mut s = EpochSampler::new(10, 4);
+        let mut buf = Vec::new();
+        s.next_batch(4, &mut buf);
+        s.next_batch(4, &mut buf);
+        s.next_batch(4, &mut buf);
+        assert_eq!(buf.len(), 2, "final partial batch should have 2");
+    }
+
+    #[test]
+    fn deterministic_with_seed() {
+        let mut a = EpochSampler::new(100, 9);
+        let mut b = EpochSampler::new(100, 9);
+        let (mut ba, mut bb) = (Vec::new(), Vec::new());
+        for _ in 0..30 {
+            a.next_batch(7, &mut ba);
+            b.next_batch(7, &mut bb);
+            assert_eq!(ba, bb);
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Dataset substrate: synthetic analogues of the paper's seven
+//! benchmarks, with *controlled* noise / redundancy / relevance so the
+//! selection-function claims are directly measurable (DESIGN.md §2).
+
+pub mod catalog;
+pub mod loader;
+pub mod noise;
+pub mod sharding;
+pub mod synth;
+
+/// Ground-truth provenance flags for one training point. The paper has
+/// to estimate these properties; the synthetic substrate knows them.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PointMeta {
+    /// Label was corrupted by a noise injector (uniform or structured).
+    pub noisy: bool,
+    /// Point belongs to a "low relevance" class (CIFAR100-Relevance).
+    pub low_relevance: bool,
+    /// Point is a jittered duplicate of another point (redundancy).
+    pub duplicate: bool,
+    /// Point is an ambiguous prototype mixture (AmbiguousMNIST analogue).
+    pub ambiguous: bool,
+}
+
+/// A dense in-memory classification dataset (row-major features).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub d: usize,
+    pub classes: usize,
+    /// len = n * d, row-major.
+    pub xs: Vec<f32>,
+    pub ys: Vec<u32>,
+    pub meta: Vec<PointMeta>,
+}
+
+impl Dataset {
+    pub fn empty(d: usize, classes: usize) -> Self {
+        Dataset { d, classes, xs: Vec::new(), ys: Vec::new(), meta: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ys.is_empty()
+    }
+
+    /// Feature row of point `i`.
+    pub fn x(&self, i: usize) -> &[f32] {
+        &self.xs[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn push(&mut self, x: &[f32], y: u32, meta: PointMeta) {
+        debug_assert_eq!(x.len(), self.d);
+        debug_assert!((y as usize) < self.classes);
+        self.xs.extend_from_slice(x);
+        self.ys.push(y);
+        self.meta.push(meta);
+    }
+
+    /// Gather rows into contiguous (features, labels) buffers for the
+    /// runtime (labels widened to i32 for the HLO boundary).
+    pub fn gather(&self, idx: &[u32]) -> (Vec<f32>, Vec<i32>) {
+        let mut xs = Vec::with_capacity(idx.len() * self.d);
+        let mut ys = Vec::with_capacity(idx.len());
+        for &i in idx {
+            xs.extend_from_slice(self.x(i as usize));
+            ys.push(self.ys[i as usize] as i32);
+        }
+        (xs, ys)
+    }
+
+    /// Gather into caller-provided buffers (allocation-free hot path).
+    pub fn gather_into(&self, idx: &[u32], xs: &mut Vec<f32>, ys: &mut Vec<i32>) {
+        xs.clear();
+        ys.clear();
+        xs.reserve(idx.len() * self.d);
+        ys.reserve(idx.len());
+        for &i in idx {
+            xs.extend_from_slice(self.x(i as usize));
+            ys.push(self.ys[i as usize] as i32);
+        }
+    }
+
+    /// New dataset containing the given rows.
+    pub fn subset(&self, idx: &[u32]) -> Dataset {
+        let mut out = Dataset::empty(self.d, self.classes);
+        for &i in idx {
+            out.push(self.x(i as usize), self.ys[i as usize], self.meta[i as usize]);
+        }
+        out
+    }
+
+    /// Split into (first `k`, rest).
+    pub fn split_at(&self, k: usize) -> (Dataset, Dataset) {
+        let k = k.min(self.len());
+        let a: Vec<u32> = (0..k as u32).collect();
+        let b: Vec<u32> = (k as u32..self.len() as u32).collect();
+        (self.subset(&a), self.subset(&b))
+    }
+
+    /// Append all rows of `other` (same d/classes).
+    pub fn extend_from(&mut self, other: &Dataset) {
+        assert_eq!(self.d, other.d);
+        assert_eq!(self.classes, other.classes);
+        self.xs.extend_from_slice(&other.xs);
+        self.ys.extend_from_slice(&other.ys);
+        self.meta.extend_from_slice(&other.meta);
+    }
+
+    pub fn frac_noisy(&self) -> f32 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.meta.iter().filter(|m| m.noisy).count() as f32 / self.len() as f32
+    }
+
+    /// Per-class counts (histogram over labels).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.classes];
+        for &y in &self.ys {
+            counts[y as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// The train/holdout/val/test split for one benchmark. `holdout`
+/// trains the IL model (paper §3); `val` selects its best checkpoint
+/// (App. B); `test` measures accuracy.
+#[derive(Clone, Debug)]
+pub struct Bundle {
+    pub name: String,
+    pub train: Dataset,
+    pub holdout: Dataset,
+    pub val: Dataset,
+    pub test: Dataset,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let mut ds = Dataset::empty(2, 3);
+        ds.push(&[0.0, 1.0], 0, PointMeta::default());
+        ds.push(&[2.0, 3.0], 1, PointMeta { noisy: true, ..Default::default() });
+        ds.push(&[4.0, 5.0], 2, PointMeta::default());
+        ds
+    }
+
+    #[test]
+    fn gather_rows() {
+        let ds = tiny();
+        let (xs, ys) = ds.gather(&[2, 0]);
+        assert_eq!(xs, vec![4.0, 5.0, 0.0, 1.0]);
+        assert_eq!(ys, vec![2, 0]);
+    }
+
+    #[test]
+    fn gather_into_reuses_buffers() {
+        let ds = tiny();
+        let mut xs = vec![9.0; 100];
+        let mut ys = vec![7; 3];
+        ds.gather_into(&[1], &mut xs, &mut ys);
+        assert_eq!(xs, vec![2.0, 3.0]);
+        assert_eq!(ys, vec![1]);
+    }
+
+    #[test]
+    fn subset_and_split() {
+        let ds = tiny();
+        let sub = ds.subset(&[1]);
+        assert_eq!(sub.len(), 1);
+        assert!(sub.meta[0].noisy);
+        let (a, b) = ds.split_at(2);
+        assert_eq!((a.len(), b.len()), (2, 1));
+        assert_eq!(b.ys[0], 2);
+    }
+
+    #[test]
+    fn counts_and_fractions() {
+        let ds = tiny();
+        assert_eq!(ds.class_counts(), vec![1, 1, 1]);
+        assert!((ds.frac_noisy() - 1.0 / 3.0).abs() < 1e-6);
+    }
+}

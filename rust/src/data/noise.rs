@@ -1,0 +1,195 @@
+//! Label-noise and redundancy injectors (paper §4.3, Fig. 6, App. C).
+//!
+//! All injectors mark `PointMeta` ground truth so trackers can measure
+//! exactly what fraction of *selected* points were corrupted — the
+//! measurement behind Fig. 3 (left) and Fig. 7 (left).
+
+use crate::data::synth::Generator;
+use crate::data::{Dataset, PointMeta};
+use crate::util::rng::Pcg32;
+
+/// Uniform label noise: each point's label is resampled uniformly from
+/// the *other* classes with probability `frac` (paper's "10% uniform
+/// label noise").
+pub fn uniform_label_noise(ds: &mut Dataset, frac: f32, rng: &mut Pcg32) {
+    let c = ds.classes as u32;
+    for i in 0..ds.len() {
+        if rng.bernoulli(frac) {
+            let old = ds.ys[i];
+            let mut newy = rng.below((c - 1) as usize) as u32;
+            if newy >= old {
+                newy += 1;
+            }
+            ds.ys[i] = newy;
+            ds.meta[i].noisy = true;
+        }
+    }
+}
+
+/// Structured confusion noise (Rolnick et al. '17 / Fig. 6 middle):
+/// flip labels *within* the most-confusable class pairs with
+/// probability `p` (both directions).
+pub fn structured_confusion_noise(
+    ds: &mut Dataset,
+    pairs: &[(u32, u32)],
+    p: f32,
+    rng: &mut Pcg32,
+) {
+    for i in 0..ds.len() {
+        let y = ds.ys[i];
+        for &(a, b) in pairs {
+            if (y == a || y == b) && rng.bernoulli(p) {
+                ds.ys[i] = if y == a { b } else { a };
+                ds.meta[i].noisy = true;
+                break;
+            }
+        }
+    }
+}
+
+/// Append `n` ambiguous prototype-mixture points (AmbiguousMNIST
+/// analogue, Fig. 6 right).
+pub fn append_ambiguous(ds: &mut Dataset, gen: &Generator, n: usize, rng: &mut Pcg32) {
+    let mut buf = vec![0.0f32; ds.d];
+    for _ in 0..n {
+        let y = gen.sample_ambiguous(rng, &mut buf);
+        ds.push(&buf, y, PointMeta { ambiguous: true, noisy: true, ..Default::default() });
+    }
+}
+
+/// Duplicate points until the dataset reaches `target_len`, adding
+/// small feature jitter — the web-scrape redundancy model. Duplicates
+/// keep their source's label (and noisy flag) and set `duplicate`.
+pub fn duplicate_to(ds: &mut Dataset, target_len: usize, jitter: f32, rng: &mut Pcg32) {
+    let base = ds.len();
+    assert!(base > 0);
+    let mut buf = vec![0.0f32; ds.d];
+    while ds.len() < target_len {
+        let src = rng.below(base);
+        buf.clear();
+        buf.extend_from_slice(ds.x(src));
+        for v in buf.iter_mut() {
+            *v += jitter * rng.gauss();
+        }
+        let meta = PointMeta { duplicate: true, ..ds.meta[src] };
+        let y = ds.ys[src];
+        ds.push(&buf, y, meta);
+    }
+}
+
+/// Down-sample classes to mimic the CIFAR100-Relevance construction:
+/// keep every point of `high` classes, keep `keep_frac` of the rest and
+/// mark survivors `low_relevance`.
+pub fn relevance_filter(ds: &Dataset, high: &[u32], keep_frac: f32, rng: &mut Pcg32) -> Dataset {
+    let mut out = Dataset::empty(ds.d, ds.classes);
+    for i in 0..ds.len() {
+        let y = ds.ys[i];
+        if high.contains(&y) {
+            out.push(ds.x(i), y, ds.meta[i]);
+        } else if rng.bernoulli(keep_frac) {
+            let meta = PointMeta { low_relevance: true, ..ds.meta[i] };
+            out.push(ds.x(i), y, meta);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::util::prop;
+
+    fn mkds(n: usize, c: usize) -> Dataset {
+        let g = Generator::new(SynthSpec::vector(8, c, 2.0), 3);
+        let mut rng = Pcg32::new(1, 0);
+        g.sample(n, &mut rng)
+    }
+
+    #[test]
+    fn uniform_noise_rate_and_flags() {
+        let mut ds = mkds(5000, 10);
+        let orig = ds.ys.clone();
+        let mut rng = Pcg32::new(2, 0);
+        uniform_label_noise(&mut ds, 0.1, &mut rng);
+        let flipped = ds.ys.iter().zip(&orig).filter(|(a, b)| a != b).count();
+        assert!((400..600).contains(&flipped), "flipped {flipped}");
+        // meta.noisy marks exactly the flipped points
+        for i in 0..ds.len() {
+            assert_eq!(ds.meta[i].noisy, ds.ys[i] != orig[i]);
+        }
+    }
+
+    #[test]
+    fn uniform_noise_never_keeps_label_prop() {
+        prop::check("noise-flips", 20, |rng| {
+            let mut ds = mkds(200, 5);
+            let orig = ds.ys.clone();
+            uniform_label_noise(&mut ds, 1.0, rng);
+            for i in 0..ds.len() {
+                if ds.ys[i] == orig[i] {
+                    return Err(format!("label {i} unchanged at frac=1.0"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn structured_noise_stays_in_pairs() {
+        let mut ds = mkds(3000, 10);
+        let orig = ds.ys.clone();
+        let mut rng = Pcg32::new(5, 0);
+        let pairs = vec![(0u32, 1u32), (2, 3)];
+        structured_confusion_noise(&mut ds, &pairs, 0.5, &mut rng);
+        let mut flips = 0;
+        for i in 0..ds.len() {
+            if ds.ys[i] != orig[i] {
+                flips += 1;
+                let pair_ok = pairs
+                    .iter()
+                    .any(|&(a, b)| (orig[i] == a && ds.ys[i] == b) || (orig[i] == b && ds.ys[i] == a));
+                assert!(pair_ok, "flip {} -> {} not in pairs", orig[i], ds.ys[i]);
+            }
+        }
+        assert!(flips > 100, "flips {flips}");
+    }
+
+    #[test]
+    fn duplicates_marked_and_jittered() {
+        let mut ds = mkds(100, 5);
+        let mut rng = Pcg32::new(7, 0);
+        duplicate_to(&mut ds, 300, 0.05, &mut rng);
+        assert_eq!(ds.len(), 300);
+        let dups = ds.meta.iter().filter(|m| m.duplicate).count();
+        assert_eq!(dups, 200);
+    }
+
+    #[test]
+    fn relevance_filter_keeps_high_classes() {
+        let ds = mkds(4000, 10);
+        let mut rng = Pcg32::new(9, 0);
+        let high = vec![0u32, 1];
+        let out = relevance_filter(&ds, &high, 0.06, &mut rng);
+        let counts = out.class_counts();
+        let in_counts = ds.class_counts();
+        assert_eq!(counts[0], in_counts[0]);
+        assert_eq!(counts[1], in_counts[1]);
+        for k in 2..10 {
+            assert!(counts[k] < in_counts[k] / 4, "class {k}: {} vs {}", counts[k], in_counts[k]);
+        }
+        for i in 0..out.len() {
+            assert_eq!(out.meta[i].low_relevance, !high.contains(&out.ys[i]));
+        }
+    }
+
+    #[test]
+    fn ambiguous_points_flagged() {
+        let g = Generator::new(SynthSpec::vector(8, 5, 2.0), 3);
+        let mut ds = mkds(10, 5);
+        let mut rng = Pcg32::new(11, 0);
+        append_ambiguous(&mut ds, &g, 20, &mut rng);
+        assert_eq!(ds.len(), 30);
+        assert_eq!(ds.meta.iter().filter(|m| m.ambiguous).count(), 20);
+    }
+}

@@ -1,0 +1,138 @@
+//! Candidate-batch sharding for the parallel scoring pool (paper §3,
+//! "Simple parallelized selection"): forward passes scale across
+//! workers without the diminishing returns of gradient parallelism, so
+//! B_t is split into near-equal contiguous shards, one per worker, and
+//! shard sizes are rebalanced from observed worker throughput.
+
+/// Split `n` items into `k` contiguous shards whose sizes differ by at
+/// most one. Returns (start, len) pairs; empty shards allowed if k > n.
+pub fn even_shards(n: usize, k: usize) -> Vec<(usize, usize)> {
+    assert!(k > 0);
+    let base = n / k;
+    let rem = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < rem);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// Proportional shards from observed worker throughputs (items/sec).
+/// Falls back to even shards when rates are degenerate. Every shard
+/// gets at least one item while items remain (no starvation).
+pub fn proportional_shards(n: usize, rates: &[f64]) -> Vec<(usize, usize)> {
+    let k = rates.len();
+    assert!(k > 0);
+    let total: f64 = rates.iter().filter(|r| r.is_finite() && **r > 0.0).sum();
+    if total <= 0.0 {
+        return even_shards(n, k);
+    }
+    // Largest-remainder apportionment.
+    let mut sizes = vec![0usize; k];
+    let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(k);
+    let mut assigned = 0;
+    for i in 0..k {
+        let r = if rates[i].is_finite() && rates[i] > 0.0 { rates[i] } else { 0.0 };
+        let ideal = n as f64 * r / total;
+        sizes[i] = ideal.floor() as usize;
+        assigned += sizes[i];
+        fracs.push((ideal - ideal.floor(), i));
+    }
+    fracs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+    let mut rest = n - assigned;
+    let mut fi = 0;
+    while rest > 0 {
+        let (_, i) = fracs[fi % fracs.len()];
+        sizes[i] += 1;
+        rest -= 1;
+        fi += 1;
+    }
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for &len in &sizes {
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// Exponential moving average of worker rates (rebalancing signal).
+pub fn ema_update(rates: &mut [f64], observed: &[f64], alpha: f64) {
+    for (r, &o) in rates.iter_mut().zip(observed) {
+        if o.is_finite() && o > 0.0 {
+            *r = if *r > 0.0 { alpha * o + (1.0 - alpha) * *r } else { o };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn total_and_contiguous(shards: &[(usize, usize)], n: usize) -> Result<(), String> {
+        let mut expect_start = 0;
+        for &(s, l) in shards {
+            if s != expect_start {
+                return Err(format!("gap: shard starts at {s}, expected {expect_start}"));
+            }
+            expect_start = s + l;
+        }
+        if expect_start != n {
+            return Err(format!("covers {expect_start} of {n}"));
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn even_shards_cover_exactly_prop() {
+        prop::check("even-shards", 100, |rng| {
+            let n = rng.below(10_000);
+            let k = 1 + rng.below(32);
+            let shards = even_shards(n, k);
+            if shards.len() != k {
+                return Err("wrong shard count".into());
+            }
+            total_and_contiguous(&shards, n)?;
+            let max = shards.iter().map(|s| s.1).max().unwrap();
+            let min = shards.iter().map(|s| s.1).min().unwrap();
+            if max - min > 1 {
+                return Err(format!("imbalance {max}-{min}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn proportional_shards_cover_exactly_prop() {
+        prop::check("prop-shards", 100, |rng| {
+            let n = rng.below(5_000);
+            let k = 1 + rng.below(16);
+            let rates: Vec<f64> = (0..k).map(|_| rng.f32() as f64 * 10.0).collect();
+            total_and_contiguous(&proportional_shards(n, &rates), n)
+        });
+    }
+
+    #[test]
+    fn proportional_tracks_rates() {
+        let shards = proportional_shards(1000, &[1.0, 3.0]);
+        assert_eq!(shards[0].1 + shards[1].1, 1000);
+        assert!((shards[1].1 as f64 - 750.0).abs() <= 1.0, "{shards:?}");
+    }
+
+    #[test]
+    fn degenerate_rates_fall_back_to_even() {
+        let shards = proportional_shards(100, &[0.0, f64::NAN, 0.0, 0.0]);
+        assert_eq!(shards.iter().map(|s| s.1).collect::<Vec<_>>(), vec![25, 25, 25, 25]);
+    }
+
+    #[test]
+    fn ema_moves_toward_observation() {
+        let mut rates = vec![10.0, 0.0];
+        ema_update(&mut rates, &[20.0, 5.0], 0.5);
+        assert_eq!(rates, vec![15.0, 5.0]);
+    }
+}

@@ -1,0 +1,332 @@
+//! Synthetic classification generator.
+//!
+//! Gaussian class prototypes + a fixed random nonlinear warp, with
+//! per-class difficulty spread. Design goals (DESIGN.md §2):
+//!  - nonlinearity: MLP/CNN clearly beat logistic regression, so the
+//!    paper's IL-model-capacity experiments are meaningful;
+//!  - controlled Bayes error (prototype margin + class std);
+//!  - image-mode prototypes are *smooth* 2-D blobs so conv layers see
+//!    local structure;
+//!  - the same generator instance is `p_true`: train/holdout/val/test
+//!    are iid draws from it, exactly the paper's assumption.
+
+use crate::data::{Dataset, PointMeta};
+use crate::util::rng::Pcg32;
+
+/// Generator configuration.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub d: usize,
+    pub classes: usize,
+    /// Prototype radius; larger = easier (more separated classes).
+    pub margin: f32,
+    /// Range of per-class noise std (difficulty spread).
+    pub class_std: (f32, f32),
+    /// Strength of the fixed nonlinear warp (0 = linearly separable).
+    pub warp: f32,
+    /// Treat features as a sqrt(d) x sqrt(d) image: smooth prototypes.
+    pub image_mode: bool,
+    /// Per-class sampling weights (None = balanced).
+    pub class_weights: Option<Vec<f32>>,
+}
+
+impl SynthSpec {
+    pub fn vector(d: usize, classes: usize, margin: f32) -> Self {
+        SynthSpec {
+            d,
+            classes,
+            margin,
+            class_std: (0.9, 1.4),
+            warp: 1.0,
+            image_mode: false,
+            class_weights: None,
+        }
+    }
+    pub fn image(d: usize, classes: usize, margin: f32) -> Self {
+        SynthSpec { image_mode: true, ..Self::vector(d, classes, margin) }
+    }
+}
+
+/// A frozen data-generating distribution `p_true(x, y)`.
+pub struct Generator {
+    pub spec: SynthSpec,
+    /// classes x d prototype matrix.
+    protos: Vec<f32>,
+    /// per-class noise std.
+    stds: Vec<f32>,
+    /// d x d warp matrix (low magnitude, applied through tanh).
+    warp_w: Vec<f32>,
+    /// cumulative class-sampling distribution.
+    class_cdf: Vec<f32>,
+}
+
+impl Generator {
+    pub fn new(spec: SynthSpec, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, 77);
+        let d = spec.d;
+        let c = spec.classes;
+        let mut protos = vec![0.0f32; c * d];
+        for k in 0..c {
+            let row = &mut protos[k * d..(k + 1) * d];
+            if spec.image_mode {
+                smooth_blob(row, &mut rng);
+            } else {
+                for v in row.iter_mut() {
+                    *v = rng.gauss();
+                }
+            }
+            // normalize to radius `margin`
+            let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
+            for v in row.iter_mut() {
+                *v *= spec.margin * (d as f32).sqrt() / norm;
+            }
+        }
+        let stds: Vec<f32> =
+            (0..c).map(|_| rng.range_f32(spec.class_std.0, spec.class_std.1)).collect();
+        let mut warp_w = vec![0.0f32; d * d];
+        for v in warp_w.iter_mut() {
+            *v = rng.gauss() / (d as f32).sqrt();
+        }
+        let weights = spec
+            .class_weights
+            .clone()
+            .unwrap_or_else(|| vec![1.0; c]);
+        assert_eq!(weights.len(), c);
+        let total: f32 = weights.iter().sum();
+        let mut acc = 0.0;
+        let class_cdf = weights
+            .iter()
+            .map(|w| {
+                acc += w / total;
+                acc
+            })
+            .collect();
+        Generator { spec, protos, stds, warp_w, class_cdf }
+    }
+
+    pub fn proto(&self, k: usize) -> &[f32] {
+        &self.protos[k * self.spec.d..(k + 1) * self.spec.d]
+    }
+
+    fn sample_class(&self, rng: &mut Pcg32) -> u32 {
+        let u = rng.f32();
+        self.class_cdf.iter().position(|&c| u <= c).unwrap_or(self.spec.classes - 1) as u32
+    }
+
+    /// Draw the features for class `k` into `out`.
+    pub fn sample_x(&self, k: usize, rng: &mut Pcg32, out: &mut [f32]) {
+        let d = self.spec.d;
+        let proto = self.proto(k);
+        let s = self.stds[k];
+        // z ~ N(mu_k, s^2 I)
+        for (o, &p) in out.iter_mut().zip(proto) {
+            *o = p + s * rng.gauss();
+        }
+        if self.spec.warp > 0.0 {
+            // x = z + warp * tanh(W z): fixed nonlinearity shared by all
+            // classes; keeps the task non-linearly-separable.
+            let z = out.to_vec();
+            for i in 0..d {
+                let mut acc = 0.0f32;
+                let row = &self.warp_w[i * d..(i + 1) * d];
+                for (w, zj) in row.iter().zip(&z) {
+                    acc += w * zj;
+                }
+                out[i] = z[i] + self.spec.warp * acc.tanh();
+            }
+        }
+    }
+
+    /// Sample an iid dataset of n points.
+    pub fn sample(&self, n: usize, rng: &mut Pcg32) -> Dataset {
+        let mut ds = Dataset::empty(self.spec.d, self.spec.classes);
+        let mut buf = vec![0.0f32; self.spec.d];
+        for _ in 0..n {
+            let y = self.sample_class(rng);
+            self.sample_x(y as usize, rng, &mut buf);
+            ds.push(&buf, y, PointMeta::default());
+        }
+        ds
+    }
+
+    /// Sample an *ambiguous* point: features mix two prototypes, the
+    /// label is randomly one of the two (AmbiguousMNIST analogue).
+    pub fn sample_ambiguous(&self, rng: &mut Pcg32, buf: &mut [f32]) -> u32 {
+        let c = self.spec.classes;
+        let a = rng.below(c);
+        let b = (a + 1 + rng.below(c - 1)) % c;
+        let lam = rng.range_f32(0.35, 0.65);
+        let d = self.spec.d;
+        let (pa, pb) = (self.proto(a), self.proto(b));
+        let s = 0.5 * (self.stds[a] + self.stds[b]);
+        for i in 0..d {
+            buf[i] = lam * pa[i] + (1.0 - lam) * pb[i] + s * rng.gauss();
+        }
+        if rng.bernoulli(0.5) { a as u32 } else { b as u32 }
+    }
+
+    /// Nearest-prototype pairs (proxy for "most confused classes" used
+    /// by the structured-noise injector, Fig. 6).
+    pub fn confusable_pairs(&self, k: usize) -> Vec<(u32, u32)> {
+        let c = self.spec.classes;
+        let mut dists = Vec::new();
+        for a in 0..c {
+            for b in (a + 1)..c {
+                let d2: f32 = self
+                    .proto(a)
+                    .iter()
+                    .zip(self.proto(b))
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum();
+                dists.push((d2, a as u32, b as u32));
+            }
+        }
+        dists.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+        dists.into_iter().take(k).map(|(_, a, b)| (a, b)).collect()
+    }
+}
+
+/// Fill `row` (len s*s) with a sum of random smooth Gaussian bumps.
+fn smooth_blob(row: &mut [f32], rng: &mut Pcg32) {
+    let d = row.len();
+    let s = (d as f32).sqrt() as usize;
+    debug_assert_eq!(s * s, d, "image_mode requires square d");
+    row.fill(0.0);
+    let bumps = 3 + rng.below(3);
+    for _ in 0..bumps {
+        let cx = rng.range_f32(2.0, s as f32 - 2.0);
+        let cy = rng.range_f32(2.0, s as f32 - 2.0);
+        let sig = rng.range_f32(1.2, 3.0);
+        let amp = rng.range_f32(-1.0, 1.0);
+        for yy in 0..s {
+            for xx in 0..s {
+                let dx = xx as f32 - cx;
+                let dy = yy as f32 - cy;
+                row[yy * s + xx] += amp * (-(dx * dx + dy * dy) / (2.0 * sig * sig)).exp();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn sample_shapes_and_labels() {
+        let g = Generator::new(SynthSpec::vector(16, 5, 2.0), 1);
+        let mut rng = Pcg32::new(2, 0);
+        let ds = g.sample(500, &mut rng);
+        assert_eq!(ds.len(), 500);
+        assert_eq!(ds.d, 16);
+        assert!(ds.ys.iter().all(|&y| y < 5));
+        assert!(ds.xs.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn balanced_classes_roughly_uniform() {
+        let g = Generator::new(SynthSpec::vector(8, 4, 2.0), 3);
+        let mut rng = Pcg32::new(4, 0);
+        let ds = g.sample(4000, &mut rng);
+        for count in ds.class_counts() {
+            assert!((800..1200).contains(&count), "count {count}");
+        }
+    }
+
+    #[test]
+    fn class_weights_respected() {
+        let mut spec = SynthSpec::vector(8, 2, 2.0);
+        spec.class_weights = Some(vec![9.0, 1.0]);
+        let g = Generator::new(spec, 5);
+        let mut rng = Pcg32::new(6, 0);
+        let ds = g.sample(5000, &mut rng);
+        let counts = ds.class_counts();
+        assert!(counts[0] > 4000, "{counts:?}");
+        assert!(counts[1] < 1000, "{counts:?}");
+    }
+
+    #[test]
+    fn margin_orders_separability() {
+        // nearest-prototype accuracy should rise with margin
+        let acc = |margin: f32| {
+            let g = Generator::new(SynthSpec::vector(16, 4, margin), 7);
+            let mut rng = Pcg32::new(8, 0);
+            let ds = g.sample(1000, &mut rng);
+            let mut correct = 0;
+            for i in 0..ds.len() {
+                let x = ds.x(i);
+                let mut best = (f32::INFINITY, 0u32);
+                for k in 0..4 {
+                    let d2: f32 =
+                        g.proto(k).iter().zip(x).map(|(p, v)| (p - v) * (p - v)).sum();
+                    if d2 < best.0 {
+                        best = (d2, k as u32);
+                    }
+                }
+                if best.1 == ds.ys[i] {
+                    correct += 1;
+                }
+            }
+            correct as f32 / ds.len() as f32
+        };
+        let (lo, hi) = (acc(0.5), acc(3.0));
+        assert!(hi > lo + 0.1, "margin 3.0 acc {hi} vs 0.5 acc {lo}");
+        assert!(hi > 0.9);
+    }
+
+    #[test]
+    fn image_mode_prototypes_are_smooth() {
+        let g = Generator::new(SynthSpec::image(256, 3, 2.0), 11);
+        // total variation of a smooth blob is much lower than white noise
+        for k in 0..3 {
+            let p = g.proto(k);
+            let s = 16;
+            let mut tv = 0.0f32;
+            let mut energy = 0.0f32;
+            for y in 0..s {
+                for x in 0..s - 1 {
+                    tv += (p[y * s + x + 1] - p[y * s + x]).abs();
+                    energy += p[y * s + x].abs();
+                }
+            }
+            assert!(tv < energy, "prototype {k} not smooth: tv={tv} energy={energy}");
+        }
+    }
+
+    #[test]
+    fn ambiguous_labels_from_pair_prop() {
+        prop::check("ambiguous-pair", 30, |rng| {
+            let g = Generator::new(SynthSpec::vector(8, 6, 2.0), 13);
+            let mut buf = vec![0.0; 8];
+            let y = g.sample_ambiguous(rng, &mut buf);
+            if y >= 6 {
+                return Err(format!("label {y} out of range"));
+            }
+            if buf.iter().any(|v| !v.is_finite()) {
+                return Err("non-finite features".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn confusable_pairs_sorted_and_valid() {
+        let g = Generator::new(SynthSpec::vector(8, 6, 2.0), 17);
+        let pairs = g.confusable_pairs(4);
+        assert_eq!(pairs.len(), 4);
+        for (a, b) in pairs {
+            assert!(a < 6 && b < 6 && a != b);
+        }
+    }
+
+    #[test]
+    fn generator_is_deterministic() {
+        let g1 = Generator::new(SynthSpec::vector(8, 3, 2.0), 42);
+        let g2 = Generator::new(SynthSpec::vector(8, 3, 2.0), 42);
+        assert_eq!(g1.proto(0), g2.proto(0));
+        let mut r1 = Pcg32::new(1, 0);
+        let mut r2 = Pcg32::new(1, 0);
+        assert_eq!(g1.sample(10, &mut r1).xs, g2.sample(10, &mut r2).xs);
+    }
+}

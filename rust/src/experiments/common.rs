@@ -1,0 +1,151 @@
+//! Shared experiment machinery: runtime caching, IL-context
+//! preparation/reuse (the paper amortizes one IL model across many
+//! target runs), and multi-seed training sweeps.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+use xla::PjRtClient;
+
+use crate::config::RunConfig;
+use crate::coordinator::il_model::{compute_il, no_holdout_il, train_il, IlTrainConfig};
+use crate::coordinator::trainer::{IlContext, RunResult, Trainer};
+use crate::data::{catalog, Bundle};
+use crate::experiments::ExpCtx;
+use crate::runtime::artifact::Manifest;
+use crate::runtime::handle::{cpu_client, ModelRuntime};
+
+/// Lazily-loaded runtimes + cached IL contexts over one PJRT client.
+pub struct Lab {
+    pub manifest: Manifest,
+    client: Rc<PjRtClient>,
+    runtimes: RefCell<HashMap<(String, usize, usize, usize), Rc<ModelRuntime>>>,
+    il_cache: RefCell<HashMap<String, Rc<IlContext>>>,
+    bundles: RefCell<HashMap<String, Rc<Bundle>>>,
+    pub scale: f64,
+}
+
+impl Lab {
+    pub fn new(ctx: &ExpCtx) -> Result<Lab> {
+        let manifest = Manifest::load(&ctx.artifacts)?;
+        Ok(Lab {
+            manifest,
+            client: cpu_client()?,
+            runtimes: RefCell::new(HashMap::new()),
+            il_cache: RefCell::new(HashMap::new()),
+            bundles: RefCell::new(HashMap::new()),
+            scale: ctx.scale,
+        })
+    }
+
+    /// Runtime for (arch, dataset dims), manifest-default train batch.
+    pub fn runtime(&self, arch: &str, dataset: &str) -> Result<Rc<ModelRuntime>> {
+        self.runtime_tb(arch, dataset, self.manifest.train_batch)
+    }
+
+    /// Runtime with an explicit train-batch artifact.
+    pub fn runtime_tb(&self, arch: &str, dataset: &str, tb: usize) -> Result<Rc<ModelRuntime>> {
+        let (d, c) = catalog::dims_for(dataset);
+        let key = (arch.to_string(), d, c, tb);
+        if let Some(rt) = self.runtimes.borrow().get(&key) {
+            return Ok(Rc::clone(rt));
+        }
+        let rt = Rc::new(
+            ModelRuntime::load_with_train_batch(
+                Rc::clone(&self.client),
+                &self.manifest,
+                arch,
+                d,
+                c,
+                tb,
+            )
+            .with_context(|| format!("loading runtime {arch} for {dataset}"))?,
+        );
+        self.runtimes.borrow_mut().insert(key, Rc::clone(&rt));
+        Ok(rt)
+    }
+
+    /// Dataset bundle, cached per (name); data seed is fixed so every
+    /// method sees identical data (the paper's comparison setup).
+    pub fn bundle(&self, dataset: &str) -> Rc<Bundle> {
+        if let Some(b) = self.bundles.borrow().get(dataset) {
+            return Rc::clone(b);
+        }
+        let b = Rc::new(catalog::build(dataset, 0xD5EED, self.scale));
+        self.bundles.borrow_mut().insert(dataset.to_string(), Rc::clone(&b));
+        b
+    }
+
+    /// IL context for (dataset, il_arch): train the IL model on the
+    /// holdout set (or the no-holdout cross scheme) and precompute
+    /// IL[i] for the train set. Cached — one IL model serves every
+    /// method/seed/target-arch, as in the paper (§4.2).
+    pub fn il_context(&self, cfg: &RunConfig, bundle: &Bundle) -> Result<Rc<IlContext>> {
+        let key = format!(
+            "{}|{}|{}|{}|{}",
+            cfg.dataset, cfg.il_arch, cfg.no_holdout, cfg.il_epochs, bundle.train.len()
+        );
+        if let Some(c) = self.il_cache.borrow().get(&key) {
+            return Ok(Rc::clone(c));
+        }
+        let il_rt = self.runtime(&cfg.il_arch, &cfg.dataset)?;
+        let il_cfg = IlTrainConfig {
+            epochs: cfg.il_epochs,
+            lr: cfg.lr,
+            wd: cfg.wd,
+            seed: 0xD5EED ^ 0x11,
+        };
+        let ctx = if cfg.no_holdout {
+            let values = no_holdout_il(&il_rt, &bundle.train, &bundle.val, &il_cfg)?;
+            IlContext { values, state: None }
+        } else {
+            let model = train_il(&il_rt, &bundle.holdout, &bundle.val, &il_cfg)?;
+            let values = compute_il(&il_rt, &model.state.theta, &bundle.train)?;
+            IlContext { values, state: Some(model.state) }
+        };
+        let ctx = Rc::new(ctx);
+        self.il_cache.borrow_mut().insert(key, Rc::clone(&ctx));
+        Ok(ctx)
+    }
+
+    /// One full training run per `cfg` (IL prepared on demand).
+    pub fn run_one(&self, cfg: &RunConfig, bundle: &Bundle) -> Result<RunResult> {
+        let target = self.runtime(&cfg.arch, &cfg.dataset)?;
+        let needs_il =
+            cfg.method.needs_il() || cfg.method.is_offline_filter() || cfg.online_il;
+        let il = if needs_il { Some(self.il_context(cfg, bundle)?) } else { None };
+        let il_rt = if cfg.online_il || cfg.method.is_offline_filter() {
+            Some(self.runtime(&cfg.il_arch, &cfg.dataset)?)
+        } else {
+            None
+        };
+        let mut trainer = Trainer::new(cfg, &target);
+        if let Some(rt) = il_rt.as_deref() {
+            trainer = trainer.with_il_rt(rt);
+        }
+        trainer.run(bundle, il.as_deref())
+    }
+
+    /// Same config across seeds; returns one result per seed.
+    pub fn run_seeds(&self, cfg: &RunConfig, bundle: &Bundle, seeds: &[u64]) -> Result<Vec<RunResult>> {
+        seeds
+            .iter()
+            .map(|&s| {
+                let mut c = cfg.clone();
+                c.seed = s;
+                self.run_one(&c, bundle)
+            })
+            .collect()
+    }
+}
+
+/// Accuracy targets relative to the uniform baseline: `chance +
+/// frac * (uniform_best - chance)`. The paper fixes absolute targets
+/// per dataset; on the synthetic substrate we anchor them to the
+/// uniform run so rows stay comparable (DESIGN.md §4).
+pub fn anchored_target(classes: usize, uniform_best: f32, frac: f32) -> f32 {
+    let chance = 1.0 / classes as f32;
+    chance + frac * (uniform_best - chance)
+}

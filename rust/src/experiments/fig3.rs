@@ -1,0 +1,95 @@
+//! Figure 3: properties of points selected by each method —
+//! proportion noisy (CIFAR10 + 10% label noise), proportion from
+//! low-relevance classes (CIFAR100-Relevance), proportion already
+//! classified correctly (redundancy proxy; accuracy-controlled mean).
+//!
+//! RHO-LOSS is run with both a small IL model and a large one (same
+//! arch as target) — the paper's point is that both deprioritize
+//! noisy/irrelevant/redundant points, while loss & grad-norm chase
+//! noisy and less-relevant ones.
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::experiments::common::Lab;
+use crate::experiments::report::Table;
+use crate::experiments::ExpCtx;
+use crate::selection::Method;
+use crate::util::csvio::CsvWriter;
+
+const METHODS: &[Method] =
+    &[Method::Uniform, Method::TrainLoss, Method::GradNorm, Method::NegIL, Method::RhoLoss];
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let lab = Lab::new(ctx)?;
+    let out = ctx.out_dir("fig3")?;
+    let mut table = Table::new(
+        "Fig 3: properties of selected points",
+        &["method", "IL", "% noisy (cifar10+10%)", "% low-relevance (c100-rel)", "% already-correct (cifar10)"],
+    );
+    let mut csv = CsvWriter::create(
+        &out.join("fig3.csv"),
+        &["method", "il_arch", "frac_noisy", "frac_low_relevance", "frac_already_correct"],
+    )?;
+
+    // (method, il_arch label). RHO twice: small + large IL.
+    let mut combos: Vec<(Method, &str)> = METHODS.iter().map(|&m| (m, "mlp_small")).collect();
+    combos.push((Method::RhoLoss, "mlp_base"));
+
+    for (method, il_arch) in combos {
+        let run_on = |dataset: &str, epochs: usize| -> Result<crate::coordinator::trainer::RunResult> {
+            let cfg = RunConfig {
+                dataset: dataset.into(),
+                arch: "mlp_base".into(),
+                il_arch: il_arch.into(),
+                method,
+                epochs: ctx.epochs(epochs),
+                il_epochs: 10,
+                track_props: true,
+                seed: ctx.seeds[0],
+                ..Default::default()
+            };
+            let bundle = lab.bundle(dataset);
+            lab.run_one(&cfg, &bundle)
+        };
+
+        let noisy_run = run_on("cifar10_noise", 15)?;
+        let rel_run = run_on("cifar100_relevance", 15)?;
+        let red_run = run_on("cifar10", 15)?;
+        // accuracy ceiling: control for different final accuracies by
+        // averaging only epochs below the weakest method's final
+        // accuracy — approximated here with 90% of this run's final.
+        let ceiling = red_run.curve.final_accuracy() * 0.9;
+        let (fn_, fl, fc) = (
+            noisy_run.tracker.frac_noisy(),
+            rel_run.tracker.frac_low_relevance(),
+            red_run.tracker.frac_already_correct(ceiling),
+        );
+        let label = if method == Method::RhoLoss {
+            format!("rho_loss[{il_arch}]")
+        } else {
+            method.name().to_string()
+        };
+        table.row(vec![
+            label.clone(),
+            il_arch.into(),
+            format!("{:.1}%", fn_ * 100.0),
+            format!("{:.1}%", fl * 100.0),
+            format!("{:.1}%", fc * 100.0),
+        ]);
+        csv.row(&[
+            label,
+            il_arch.into(),
+            format!("{fn_}"),
+            format!("{fl}"),
+            format!("{fc}"),
+        ])?;
+    }
+    csv.flush()?;
+    table.emit(&out, "fig3")?;
+    println!(
+        "(paper: loss/grad-norm select far MORE noisy + low-relevance points than uniform;\n\
+         rho selects fewer of both with either IL model; all methods beat uniform on redundancy)"
+    );
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Figure 8 (App. F): ablation of the selected percentage
+//! n_b / n_B ∈ {5%, 10%, 20%, 50%, 100%}; n_b stays 32 and n_B
+//! adapts (chunk+pad serves any n_B through the b320 artifact).
+//! 100% selected == uniform-within-batch (no selection effect).
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::metrics::mean_curve;
+use crate::experiments::common::{anchored_target, Lab};
+use crate::experiments::report::{pct, Table};
+use crate::experiments::ExpCtx;
+use crate::selection::Method;
+
+const FRACS: &[f32] = &[0.05, 0.1, 0.2, 0.5, 1.0];
+const DATASETS: &[(&str, &str, usize)] =
+    &[("cifar10", "mlp_base", 20), ("cifar100", "mlp_base", 25), ("cinic10", "cnn_small", 12)];
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let lab = Lab::new(ctx)?;
+    let out = ctx.out_dir("fig8")?;
+    let mut table = Table::new(
+        "Fig 8: percent selected per batch (RHO-LOSS; epochs to 90%-of-best / final acc)",
+        &["dataset", "5%", "10%", "20%", "50%", "100%"],
+    );
+    for &(dataset, arch, epochs) in DATASETS {
+        let bundle = lab.bundle(dataset);
+        let mut cells = vec![dataset.to_string()];
+        let mut best_overall = 0.0f32;
+        let mut curves = Vec::new();
+        for &frac in FRACS {
+            let cfg = RunConfig {
+                dataset: dataset.into(),
+                arch: arch.into(),
+                il_arch: "mlp_small".into(),
+                method: Method::RhoLoss,
+                select_frac: frac,
+                epochs: ctx.epochs(epochs),
+                il_epochs: 10,
+                ..Default::default()
+            };
+            let runs = lab.run_seeds(&cfg, &bundle, &ctx.seeds)?;
+            let c = mean_curve(&runs.iter().map(|r| r.curve.clone()).collect::<Vec<_>>());
+            c.write_csv(&out.join(format!("curve_{dataset}_frac{}.csv", (frac * 100.0) as u32)))?;
+            best_overall = best_overall.max(c.best_accuracy());
+            curves.push(c);
+        }
+        let target = anchored_target(bundle.train.classes, best_overall, 0.90);
+        for c in &curves {
+            cells.push(format!(
+                "{} ({})",
+                c.epochs_to(target).map(|e| format!("{e:.1}")).unwrap_or("NR".into()),
+                pct(c.final_accuracy())
+            ));
+        }
+        table.row(cells);
+    }
+    table.emit(&out, "fig8")?;
+    println!("(paper: lower %-selected mostly trains in fewer epochs at higher compute cost)");
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! Experiment harness: one runner per paper table/figure (DESIGN.md §4).
+//!
+//! Each runner regenerates its artifact's rows/series on the synthetic
+//! substrate, prints a paper-style table, and writes CSV/JSON under
+//! `results/<id>/`.
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig6;
+pub mod fig8;
+pub mod fig9;
+pub mod report;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+/// Shared context for all experiment runners.
+pub struct ExpCtx {
+    /// Artifacts directory (HLO + manifest).
+    pub artifacts: PathBuf,
+    /// Output directory (results/<id>/ is created per experiment).
+    pub results: PathBuf,
+    /// Dataset-size multiplier (1.0 = full synthetic sizes).
+    pub scale: f64,
+    /// Seeds to average over.
+    pub seeds: Vec<u64>,
+    /// Epoch-budget multiplier (benches shrink it).
+    pub epoch_scale: f64,
+}
+
+impl ExpCtx {
+    pub fn new(scale: f64) -> Self {
+        ExpCtx {
+            artifacts: crate::runtime::artifact::default_dir(),
+            results: PathBuf::from("results"),
+            scale,
+            seeds: vec![1, 2],
+            epoch_scale: 1.0,
+        }
+    }
+
+    /// results/<id>/, created.
+    pub fn out_dir(&self, id: &str) -> Result<PathBuf> {
+        let dir = self.results.join(id);
+        std::fs::create_dir_all(&dir)?;
+        Ok(dir)
+    }
+
+    /// Scale an epoch budget.
+    pub fn epochs(&self, base: usize) -> usize {
+        ((base as f64 * self.epoch_scale).round() as usize).max(1)
+    }
+}
+
+/// All experiment ids, in run order.
+pub const ALL: &[&str] = &[
+    "table1", "fig1", "fig2", "fig3", "table2", "table3", "table4", "fig6", "fig8", "fig9",
+];
+
+/// Run one experiment by id ("all" runs everything).
+pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
+    match id {
+        "all" => {
+            let mut failures = Vec::new();
+            for id in ALL {
+                println!("\n================ experiment {id} ================");
+                let t = crate::util::timer::Stopwatch::start();
+                if let Err(e) = run(id, ctx) {
+                    eprintln!("experiment {id} FAILED: {e:#}");
+                    failures.push(*id);
+                }
+                println!("[{id} took {:.0}s]", t.elapsed_s());
+            }
+            if failures.is_empty() {
+                Ok(())
+            } else {
+                bail!("{} experiment(s) failed: {failures:?}", failures.len())
+            }
+        }
+        "fig1" => fig1::run(ctx),
+        "table1" => table1::run(ctx),
+        "fig2" => fig2::run(ctx),
+        "fig3" => fig3::run(ctx),
+        "table2" => table2::run(ctx),
+        "table3" => table3::run(ctx),
+        "table4" => table4::run(ctx),
+        "fig6" => fig6::run(ctx),
+        "fig8" => fig8::run(ctx),
+        "fig9" => fig9::run(ctx),
+        other => bail!("unknown experiment `{other}` (known: {ALL:?} or `all`)"),
+    }
+}

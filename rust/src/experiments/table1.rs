@@ -1,0 +1,303 @@
+//! Table 1: Spearman rank correlation between the selection scores of
+//! increasingly aggressive approximations of Eq. (2) and the
+//! "Approximation 0" gold standard (deep ensemble, trained to
+//! convergence at every step, IL ensemble updated on D_ho ∪ D_t).
+//!
+//! Protocol (paper §4.1 / App. E): all variants see the same candidate
+//! stream B_t and rank-correlate their score vector with Approximation
+//! 0's at every step; the table reports the mean over the first epoch.
+//! Deviation (documented in DESIGN.md §2): all variants *acquire the
+//! gold standard's picks* instead of their own. The paper lets
+//! trajectories diverge and notes that the divergence itself "causes
+//! some of the observed difference"; at our (much smaller) scale that
+//! divergence noise swamps the scoring-fidelity signal, so we hold the
+//! training trajectory fixed and measure pure re-ranking fidelity.
+//!
+//! Workload: QMNIST analogue + 10% uniform label noise + 5x
+//! duplication (the paper duplicates QMNIST to mimic web data).
+//! Ensembles: 5 x mlp_wide (paper: 5 x MLP-512); the small IL model of
+//! Approximation 3 is mlp_base (paper: MLP-256).
+//! Ensemble CE is computed from member losses:
+//! L_ens = -log(mean_k exp(-L_k)).
+
+use anyhow::Result;
+
+use crate::data::{catalog, noise, Dataset};
+use crate::experiments::common::Lab;
+use crate::experiments::report::Table;
+use crate::experiments::ExpCtx;
+use crate::runtime::handle::ModelRuntime;
+use crate::runtime::params::TrainState;
+use crate::util::json;
+use crate::util::math::{mean, spearman, top_k_indices};
+use crate::util::rng::Pcg32;
+
+const ENSEMBLE: usize = 5;
+const NB_SELECT: usize = 32;
+const BIG: usize = 320;
+/// Passes over the acquired set per step for "convergence" variants
+/// (paper caps at 5 epochs; 3 passes suffice at our scale).
+const CONV_PASSES: usize = 3;
+const LR: f32 = 1e-3;
+const WD: f32 = 1e-2;
+
+struct Variant {
+    name: &'static str,
+    targets: Vec<TrainState>,
+    ils: Vec<TrainState>,
+    /// Use the small IL runtime (Approximation 3).
+    small_il: bool,
+    /// Train targets to convergence on D_t each step (A0/A1a).
+    converge: bool,
+    /// Keep updating the IL model(s) on acquired data (A0/A1a/A1b).
+    online_il: bool,
+    acquired: Vec<u32>,
+}
+
+/// -log(mean_k exp(-L_k)) per example.
+fn ensemble_loss(member_losses: &[Vec<f32>]) -> Vec<f32> {
+    let k = member_losses.len() as f32;
+    let n = member_losses[0].len();
+    (0..n)
+        .map(|i| {
+            let mean_p: f32 =
+                member_losses.iter().map(|l| (-l[i]).exp()).sum::<f32>() / k;
+            -mean_p.max(1e-30).ln()
+        })
+        .collect()
+}
+
+impl Variant {
+    fn score(
+        &self,
+        target_rt: &ModelRuntime,
+        il_rts: (&ModelRuntime, &ModelRuntime),
+        xs: &[f32],
+        ys: &[i32],
+    ) -> Result<Vec<f32>> {
+        let il_rt = if self.small_il { il_rts.1 } else { il_rts.0 };
+        let tl = ensemble_loss(
+            &self
+                .targets
+                .iter()
+                .map(|s| Ok(target_rt.fwd(&s.theta, xs, ys)?.loss))
+                .collect::<Result<Vec<_>>>()?,
+        );
+        let il = ensemble_loss(
+            &self
+                .ils
+                .iter()
+                .map(|s| Ok(il_rt.fwd(&s.theta, xs, ys)?.loss))
+                .collect::<Result<Vec<_>>>()?,
+        );
+        Ok(tl.iter().zip(&il).map(|(a, b)| a - b).collect())
+    }
+
+    fn acquire_and_train(
+        &mut self,
+        target_rt: &ModelRuntime,
+        il_rts: (&ModelRuntime, &ModelRuntime),
+        train: &Dataset,
+        holdout: &Dataset,
+        picked: &[u32],
+        rng: &mut Pcg32,
+    ) -> Result<()> {
+        let il_rt = if self.small_il { il_rts.1 } else { il_rts.0 };
+        self.acquired.extend_from_slice(picked);
+        let (mut xs, mut ys) = (Vec::new(), Vec::new());
+        let ones32 = vec![1.0f32; target_rt.train_batch];
+        if self.converge {
+            // retrain each member for CONV_PASSES passes over all of D_t
+            for st in &mut self.targets {
+                let mut order = self.acquired.clone();
+                for _ in 0..CONV_PASSES {
+                    rng.shuffle(&mut order);
+                    for chunk in order.chunks(target_rt.train_batch) {
+                        train.gather_into(chunk, &mut xs, &mut ys);
+                        target_rt.train_step(st, &xs, &ys, &ones32[..chunk.len()], LR, WD)?;
+                    }
+                }
+            }
+        } else {
+            for st in &mut self.targets {
+                for chunk in picked.chunks(target_rt.train_batch) {
+                    train.gather_into(chunk, &mut xs, &mut ys);
+                    target_rt.train_step(st, &xs, &ys, &ones32[..chunk.len()], LR, WD)?;
+                }
+            }
+        }
+        if self.online_il {
+            // IL models track D_ho ∪ D_t: one pass over the new points
+            // plus a replay batch from the holdout to keep D_ho weight.
+            let replay: Vec<u32> =
+                rng.choose_k(holdout.len(), target_rt.train_batch.min(holdout.len()))
+                    .into_iter()
+                    .map(|i| i as u32)
+                    .collect();
+            for st in &mut self.ils {
+                for chunk in picked.chunks(il_rt.train_batch) {
+                    train.gather_into(chunk, &mut xs, &mut ys);
+                    il_rt.train_step(st, &xs, &ys, &ones32[..chunk.len()], LR, WD)?;
+                }
+                holdout.gather_into(&replay, &mut xs, &mut ys);
+                il_rt.train_step(st, &xs, &ys, &ones32[..replay.len()], LR, WD)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let lab = Lab::new(ctx)?;
+    let out = ctx.out_dir("table1")?;
+
+    // QMNIST + 10% noise + 5x duplication (paper App. E).
+    let mut bundle = (*lab.bundle("qmnist")).clone();
+    let mut nrng = Pcg32::new(0xAB1E, 3);
+    noise::uniform_label_noise(&mut bundle.train, 0.10, &mut nrng);
+    let base_len = (bundle.train.len() / 5).max(64);
+    let (mut train, _) = bundle.train.split_at(base_len);
+    noise::duplicate_to(&mut train, base_len * 5, 0.02, &mut nrng);
+
+    let target_rt = lab.runtime("mlp_wide", "qmnist")?;
+    let il_big = lab.runtime("mlp_wide", "qmnist")?;
+    let il_small = lab.runtime("mlp_base", "qmnist")?;
+
+    // Pretrain IL ensembles to (near-)convergence on the holdout.
+    let pretrain = |rt: &ModelRuntime, n_members: usize, seed0: i32| -> Result<Vec<TrainState>> {
+        let mut out = Vec::new();
+        for m in 0..n_members {
+            let mut st = rt.init(seed0 + m as i32)?;
+            let mut rng = Pcg32::new(777 + m as u64, 5);
+            let mut order: Vec<u32> = (0..bundle.holdout.len() as u32).collect();
+            let (mut xs, mut ys) = (Vec::new(), Vec::new());
+            let ones = vec![1.0f32; rt.train_batch];
+            for _ in 0..6 {
+                rng.shuffle(&mut order);
+                for chunk in order.chunks(rt.train_batch) {
+                    bundle.holdout.gather_into(chunk, &mut xs, &mut ys);
+                    rt.train_step(&mut st, &xs, &ys, &ones[..chunk.len()], LR, WD)?;
+                }
+            }
+            out.push(st);
+        }
+        Ok(out)
+    };
+    let il_ens_big = pretrain(&il_big, ENSEMBLE, 900)?;
+    let il_one_big = vec![il_ens_big[0].clone()];
+    let il_one_small = pretrain(&il_small, 1, 950)?;
+
+    // Distinct init per (variant, member): variants must evolve
+    // independently (they acquire different points).
+    let init_targets = |variant: i32, n: usize| -> Result<Vec<TrainState>> {
+        (0..n).map(|m| target_rt.init(10 + 100 * variant + m as i32)).collect()
+    };
+
+    let mut variants = vec![
+        Variant {
+            name: "approx0 (gold)",
+            targets: init_targets(0, ENSEMBLE)?,
+            ils: il_ens_big.clone(),
+            small_il: false,
+            converge: true,
+            online_il: true,
+            acquired: Vec::new(),
+        },
+        Variant {
+            name: "non-bayesian (1a)",
+            targets: init_targets(1, 1)?,
+            ils: il_one_big.clone(),
+            small_il: false,
+            converge: true,
+            online_il: true,
+            acquired: Vec::new(),
+        },
+        Variant {
+            name: "not converged (1b)",
+            targets: init_targets(2, 1)?,
+            ils: il_one_big.clone(),
+            small_il: false,
+            converge: false,
+            online_il: true,
+            acquired: Vec::new(),
+        },
+        Variant {
+            name: "not updating IL (2)",
+            targets: init_targets(3, 1)?,
+            ils: il_one_big.clone(),
+            small_il: false,
+            converge: false,
+            online_il: false,
+            acquired: Vec::new(),
+        },
+        Variant {
+            name: "small IL model (3)",
+            targets: init_targets(4, 1)?,
+            ils: il_one_small.clone(),
+            small_il: true,
+            converge: false,
+            online_il: false,
+            acquired: Vec::new(),
+        },
+    ];
+
+    // Shared candidate stream, first epoch only (paper).
+    let mut sampler = crate::data::loader::EpochSampler::new(train.len(), 0x7AB1E);
+    let steps = train.len() / BIG;
+    let mut corrs: Vec<Vec<f64>> = vec![Vec::new(); variants.len()];
+    let mut idx = Vec::new();
+    let mut rng = Pcg32::new(0x7AB1E ^ 9, 7);
+    let (mut xs, mut ys) = (Vec::new(), Vec::new());
+    for step in 0..steps {
+        sampler.next_batch(BIG, &mut idx);
+        train.gather_into(&idx, &mut xs, &mut ys);
+        let scores: Vec<Vec<f32>> = variants
+            .iter()
+            .map(|v| v.score(&target_rt, (&il_big, &il_small), &xs, &ys))
+            .collect::<Result<Vec<_>>>()?;
+        for (vi, s) in scores.iter().enumerate().skip(1) {
+            corrs[vi].push(spearman(s, &scores[0]));
+        }
+        // Shared acquisition: everyone trains on the gold picks.
+        let picked: Vec<u32> =
+            top_k_indices(&scores[0], NB_SELECT).into_iter().map(|p| idx[p]).collect();
+        for v in variants.iter_mut() {
+            v.acquire_and_train(
+                &target_rt,
+                (&il_big, &il_small),
+                &train,
+                &bundle.holdout,
+                &picked,
+                &mut rng,
+            )?;
+        }
+        println!(
+            "table1 step {}/{steps}: corr vs gold = {}",
+            step + 1,
+            corrs[1..]
+                .iter()
+                .map(|c| format!("{:.2}", c.last().copied().unwrap_or(0.0)))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+    }
+
+    let mut table = Table::new(
+        "Table 1: Spearman rank correlation with Approximation 0 (mean over first epoch)",
+        &["approximation", "rank correlation", "paper"],
+    );
+    let paper = ["0.75", "0.76", "0.63", "0.51"];
+    let mut doc = Vec::new();
+    for (vi, v) in variants.iter().enumerate().skip(1) {
+        let m = mean(&corrs[vi].iter().map(|&c| c as f32).collect::<Vec<_>>());
+        table.row(vec![v.name.to_string(), format!("{m:.2}"), paper[vi - 1].to_string()]);
+        doc.push((v.name, m));
+    }
+    table.emit(&out, "table1")?;
+    let j = json::obj(
+        doc.iter().map(|(n, m)| (*n, json::num(*m as f64))).collect(),
+    );
+    std::fs::write(out.join("table1.json"), j.to_json())?;
+    let _ = catalog::ALL; // anchor: dataset names documented in catalog
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! Table 2 (+ Figs. 4/5 curves): epochs required to reach target test
+//! accuracy, per dataset x method, with final accuracy in parentheses.
+//!
+//! Paper rows use fixed absolute targets; on the synthetic substrate
+//! targets anchor to the uniform baseline: low = 80%, high = 97% of
+//! uniform-best above chance (`common::anchored_target`), so the
+//! "who-reaches-it-how-fast / who-never-reaches-it" structure is
+//! directly comparable. Curves for every (dataset, method) are
+//! written to results/table2/ (these are Figs. 4 and 5).
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::metrics::{fmt_epochs, mean_curve};
+use crate::experiments::common::{anchored_target, Lab};
+use crate::experiments::report::{pct, Table};
+use crate::experiments::ExpCtx;
+use crate::selection::Method;
+
+/// (dataset, target arch, epochs budget). IL model is always
+/// `mlp_small` (the paper's always-ResNet18 IL convention).
+pub const ROWS: &[(&str, &str, usize)] = &[
+    ("clothing1m", "cnn_small", 10),
+    ("cifar10", "mlp_base", 25),
+    ("cifar10_noise", "mlp_base", 25),
+    ("cifar100", "mlp_base", 30),
+    ("cifar100_noise", "mlp_base", 30),
+    ("cinic10", "cnn_small", 15),
+    ("cinic10_noise", "cnn_small", 15),
+    ("sst2", "mlp_base", 15),
+    ("cola", "mlp_base", 25),
+];
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    let lab = Lab::new(ctx)?;
+    let out = ctx.out_dir("table2")?;
+    let mut table = Table::new(
+        "Table 2: epochs to target accuracy (final accuracy)",
+        &[
+            "dataset",
+            "target",
+            "train_loss",
+            "grad_norm",
+            "grad_norm_is",
+            "svp",
+            "neg_il",
+            "uniform",
+            "rho_loss",
+        ],
+    );
+
+    for &(dataset, arch, epochs) in ROWS {
+        let bundle = lab.bundle(dataset);
+        let classes = bundle.train.classes;
+        let mut base = RunConfig {
+            dataset: dataset.into(),
+            arch: arch.into(),
+            il_arch: "mlp_small".into(),
+            epochs: ctx.epochs(epochs),
+            il_epochs: 10,
+            ..Default::default()
+        };
+
+        // uniform first: anchors the targets
+        base.method = Method::Uniform;
+        let uni = lab.run_seeds(&base, &bundle, &ctx.seeds)?;
+        let uni_curve = mean_curve(&uni.iter().map(|r| r.curve.clone()).collect::<Vec<_>>());
+        uni_curve.write_csv(&out.join(format!("curve_{dataset}_uniform.csv")))?;
+        let uni_best = uni_curve.best_accuracy();
+        let targets =
+            [anchored_target(classes, uni_best, 0.80), anchored_target(classes, uni_best, 0.97)];
+
+        // each method's mean curve, computed once, read twice
+        let mut curves = Vec::new();
+        for &method in Method::TABLE2 {
+            let curve = if method == Method::Uniform {
+                uni_curve.clone()
+            } else {
+                base.method = method;
+                let runs = lab.run_seeds(&base, &bundle, &ctx.seeds)?;
+                let c = mean_curve(&runs.iter().map(|r| r.curve.clone()).collect::<Vec<_>>());
+                c.write_csv(&out.join(format!("curve_{dataset}_{}.csv", method.name())))?;
+                c
+            };
+            curves.push((method, curve));
+        }
+        for (ti, &target) in targets.iter().enumerate() {
+            let mut cells = vec![
+                if ti == 0 { dataset.to_string() } else { String::new() },
+                pct(target),
+            ];
+            for (_, curve) in &curves {
+                let cell = match curve.epochs_to(target) {
+                    Some(e) if ti == 1 => {
+                        format!("{} ({})", fmt_epochs(Some(e)), pct(curve.final_accuracy()))
+                    }
+                    Some(e) => fmt_epochs(Some(e)),
+                    None => format!("NR ({})", pct(curve.final_accuracy())),
+                };
+                cells.push(cell);
+            }
+            table.row(cells);
+        }
+    }
+    table.emit(&out, "table2")?;
+    Ok(())
+}

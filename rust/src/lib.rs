@@ -1,0 +1,23 @@
+//! # RHO-LOSS: Reducible Holdout Loss Selection
+//!
+//! Production-grade reproduction of *Prioritized Training on Points
+//! that are Learnable, Worth Learning, and Not Yet Learnt*
+//! (Mindermann et al., ICML 2022) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! - **L3 (this crate)** — the training coordinator: streaming
+//!   candidate sampling, parallel scoring pool, selection functions,
+//!   Algorithm-1 trainer, IL-model machinery, metrics, experiments.
+//! - **L2** — JAX model zoo, AOT-lowered to HLO text (`python/compile`).
+//! - **L1** — Pallas scoring kernels fused into the same artifacts.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod runtime;
+pub mod selection;
+pub mod util;

@@ -1,0 +1,196 @@
+//! `rho` — the RHO-LOSS training coordinator CLI.
+//!
+//! Subcommands:
+//!   rho train [key=value ...]    one training run (see config keys)
+//!   rho exp <id|all> [opts]      regenerate a paper table/figure
+//!   rho artifacts                list loaded artifacts
+//!   rho info                     PJRT platform info
+//!
+//! Examples:
+//!   rho train dataset=clothing1m method=rho_loss epochs=10
+//!   rho exp table2 --scale 0.5 --seeds 1,2,3
+
+use anyhow::{anyhow, bail, Result};
+
+use rho::config::RunConfig;
+use rho::coordinator::metrics::fmt_epochs;
+use rho::experiments::{self, ExpCtx};
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("train") => cmd_train(&args[1..]),
+        Some("inspect") => cmd_inspect(&args[1..]),
+        Some("exp") => cmd_exp(&args[1..]),
+        Some("artifacts") => cmd_artifacts(),
+        Some("info") => cmd_info(),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand `{other}` (try `rho help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "rho — RHO-LOSS coordinator (Mindermann et al., ICML 2022)\n\n\
+         usage:\n  rho train [key=value ...]\n  rho inspect [key=value ...]   score one candidate batch, compare methods\n  rho exp <id|all> [--scale F] [--seeds a,b] [--epoch-scale F]\n  rho artifacts\n  rho info\n\n\
+         experiments: {}\n\n\
+         config keys: dataset arch il_arch method epochs seed nb select_frac lr wd\n\
+         eval_every scale track_props no_holdout online_il il_lr_scale\n\
+         il_epochs svp_frac workers",
+        experiments::ALL.join(" ")
+    );
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.apply_pairs(args.iter().map(String::as_str))?;
+    cfg.validate()?;
+    println!("run: {}", cfg.tag());
+    let ctx = ExpCtx::new(cfg.scale);
+    let lab = experiments::common::Lab::new(&ctx)?;
+    let bundle = lab.bundle(&cfg.dataset);
+    let res = lab.run_one(&cfg, &bundle)?;
+    println!(
+        "steps={} time={:.1}s final_acc={:.3} best_acc={:.3}",
+        res.steps,
+        res.train_secs,
+        res.curve.final_accuracy(),
+        res.curve.best_accuracy()
+    );
+    for p in &res.curve.points {
+        println!("  epoch {:>6.2}  step {:>6}  acc {:.4}  loss {:.4}", p.epoch, p.step, p.accuracy, p.loss);
+    }
+    let out = ctx.out_dir("train")?;
+    res.curve.write_csv(&out.join(format!("{}.csv", cfg.tag().replace('/', "_"))))?;
+    if cfg.track_props {
+        println!(
+            "selected: noisy={:.3} low_relevance={:.3} already_correct={:.3}",
+            res.tracker.frac_noisy(),
+            res.tracker.frac_low_relevance(),
+            res.tracker.frac_already_correct(res.curve.final_accuracy())
+        );
+    }
+    println!("epochs to 90% of best: {}", fmt_epochs(res.curve.epochs_to(0.9 * res.curve.best_accuracy())));
+    Ok(())
+}
+
+/// Score a single candidate batch with every applicable method and
+/// print score summaries + pairwise top-k agreement — the quickest way
+/// to see *why* the methods pick different points on a dataset.
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    use rho::selection::diagnostics::{summarize, topk_jaccard};
+    let mut cfg = RunConfig::default();
+    cfg.apply_pairs(args.iter().map(String::as_str))?;
+    cfg.validate()?;
+    let ctx = ExpCtx::new(cfg.scale);
+    let lab = rho::experiments::common::Lab::new(&ctx)?;
+    let bundle = lab.bundle(&cfg.dataset);
+    let target = lab.runtime(&cfg.arch, &cfg.dataset)?;
+    let il = lab.il_context(&cfg, &bundle)?;
+    let state = target.init(cfg.seed as i32)?;
+
+    // one candidate batch, exactly as the trainer draws it
+    let big = cfg.big_batch();
+    let mut sampler = rho::data::loader::EpochSampler::new(bundle.train.len(), cfg.seed ^ 0xBA7C);
+    let mut idx = Vec::new();
+    sampler.next_batch(big, &mut idx);
+    let (xs, ys) = bundle.train.gather(&idx);
+    let stats = target.fwd(&state.theta, &xs, &ys)?;
+    let cil: Vec<f32> = idx.iter().map(|&i| il.values[i as usize]).collect();
+    let rho_scores: Vec<f32> =
+        stats.loss.iter().zip(&cil).map(|(&l, &i)| l - i).collect();
+    let neg_il: Vec<f32> = cil.iter().map(|&x| -x).collect();
+
+    let signals: Vec<(&str, &[f32])> = vec![
+        ("train_loss", &stats.loss),
+        ("grad_norm", &stats.gnorm),
+        ("entropy", &stats.entropy),
+        ("neg_il", &neg_il),
+        ("rho_loss", &rho_scores),
+    ];
+    println!("candidate batch: n={big} from `{}` (fresh init, seed {})\n", cfg.dataset, cfg.seed);
+    println!("{:<12} {:>8} {:>8} {:>8} {:>8} {:>8} {:>7}", "signal", "mean", "std", "p5", "p50", "p95", "neg%");
+    for (name, s) in &signals {
+        let sm = summarize(s);
+        println!(
+            "{:<12} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>8.3} {:>6.1}%",
+            name, sm.mean, sm.std, sm.p5, sm.p50, sm.p95, sm.frac_negative * 100.0
+        );
+    }
+    println!("\npairwise top-{} Jaccard overlap:", cfg.nb);
+    print!("{:<12}", "");
+    for (name, _) in &signals {
+        print!(" {name:>11}");
+    }
+    println!();
+    for (a_name, a) in &signals {
+        print!("{a_name:<12}");
+        for (_, b) in &signals {
+            print!(" {:>11.2}", topk_jaccard(a, b, cfg.nb));
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &[String]) -> Result<()> {
+    let id = args.first().ok_or_else(|| anyhow!("usage: rho exp <id|all>"))?.clone();
+    let mut ctx = ExpCtx::new(1.0);
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--scale" => {
+                ctx.scale = args.get(i + 1).ok_or_else(|| anyhow!("--scale needs a value"))?.parse()?;
+                i += 2;
+            }
+            "--epoch-scale" => {
+                ctx.epoch_scale =
+                    args.get(i + 1).ok_or_else(|| anyhow!("--epoch-scale needs a value"))?.parse()?;
+                i += 2;
+            }
+            "--seeds" => {
+                ctx.seeds = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("--seeds needs a,b,c"))?
+                    .split(',')
+                    .map(|s| s.parse::<u64>().map_err(|e| anyhow!("bad seed: {e}")))
+                    .collect::<Result<Vec<_>>>()?;
+                i += 2;
+            }
+            other => bail!("unknown flag `{other}`"),
+        }
+    }
+    experiments::run(&id, &ctx)
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let manifest = rho::runtime::Manifest::load(&rho::runtime::artifact::default_dir())?;
+    println!(
+        "{} artifacts (select_batch={}, train_batch={})",
+        manifest.len(),
+        manifest.select_batch,
+        manifest.train_batch
+    );
+    for (arch, d, c) in manifest.combos() {
+        let progs: Vec<String> =
+            manifest.programs_for(&arch, d, c).iter().map(|m| m.program.clone()).collect();
+        println!("  {arch} d={d} c={c}: {}", progs.join(" "));
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    println!("platform: {} ({} devices)", client.platform_name(), client.device_count());
+    Ok(())
+}

@@ -1,0 +1,234 @@
+//! Artifact manifest: the machine-readable index `python -m
+//! compile.aot` writes next to the HLO text files. The Rust runtime is
+//! entirely manifest-driven — artifact shapes and signatures are never
+//! hard-coded on this side.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// One tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    /// "float32" or "int32" (the only dtypes crossing the boundary).
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorMeta {
+    pub fn elem_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled program: metadata + path of its HLO text.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub arch: String,
+    pub d: usize,
+    pub c: usize,
+    /// "init" | "fwd_b320" | "select_b320" | "train_b32" | "mcdropout_b320"
+    pub program: String,
+    pub param_count: usize,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<String>,
+}
+
+impl ArtifactMeta {
+    /// Batch size encoded in the program name (None for `init`).
+    pub fn batch(&self) -> Option<usize> {
+        self.program.split("_b").nth(1).and_then(|s| s.parse().ok())
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub select_batch: usize,
+    pub train_batch: usize,
+    by_name: HashMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let doc = json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let select_batch = field_usize(&doc, "select_batch")?;
+        let train_batch = field_usize(&doc, "train_batch")?;
+        let mut by_name = HashMap::new();
+        for e in doc
+            .get("artifacts")
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow!("manifest missing artifacts[]"))?
+        {
+            let meta = parse_entry(dir, e)?;
+            if by_name.insert(meta.name.clone(), meta).is_some() {
+                bail!("duplicate artifact in manifest");
+            }
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), select_batch, train_batch, by_name })
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.by_name
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact `{name}` not in manifest ({} entries)", self.len()))
+    }
+
+    /// Look up by (arch, d, c, program), e.g. ("mlp_base", 64, 10, "fwd_b320").
+    pub fn find(&self, arch: &str, d: usize, c: usize, program: &str) -> Result<&ArtifactMeta> {
+        self.get(&format!("{arch}_d{d}_c{c}__{program}"))
+    }
+
+    /// All artifacts for a given (arch, d, c) combo.
+    pub fn programs_for(&self, arch: &str, d: usize, c: usize) -> Vec<&ArtifactMeta> {
+        let prefix = format!("{arch}_d{d}_c{c}__");
+        let mut v: Vec<&ArtifactMeta> =
+            self.by_name.values().filter(|m| m.name.starts_with(&prefix)).collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    /// Distinct (arch, d, c) combos present.
+    pub fn combos(&self) -> Vec<(String, usize, usize)> {
+        let mut v: Vec<(String, usize, usize)> = self
+            .by_name
+            .values()
+            .map(|m| (m.arch.clone(), m.d, m.c))
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+fn field_usize(v: &Value, key: &str) -> Result<usize> {
+    v.get(key).and_then(Value::as_usize).ok_or_else(|| anyhow!("manifest missing `{key}`"))
+}
+
+fn field_str<'a>(v: &'a Value, key: &str) -> Result<&'a str> {
+    v.get(key).and_then(Value::as_str).ok_or_else(|| anyhow!("manifest entry missing `{key}`"))
+}
+
+fn parse_entry(dir: &Path, e: &Value) -> Result<ArtifactMeta> {
+    let inputs = e
+        .get("inputs")
+        .and_then(Value::as_array)
+        .ok_or_else(|| anyhow!("entry missing inputs[]"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorMeta {
+                name: field_str(t, "name")?.to_string(),
+                dtype: field_str(t, "dtype")?.to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Value::as_array)
+                    .ok_or_else(|| anyhow!("tensor missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<_>>>()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let outputs = e
+        .get("outputs")
+        .and_then(Value::as_array)
+        .ok_or_else(|| anyhow!("entry missing outputs[]"))?
+        .iter()
+        .map(|o| o.as_str().map(str::to_string).ok_or_else(|| anyhow!("bad output name")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ArtifactMeta {
+        name: field_str(e, "name")?.to_string(),
+        file: dir.join(field_str(e, "file")?),
+        arch: field_str(e, "arch")?.to_string(),
+        d: field_usize(e, "d")?,
+        c: field_usize(e, "c")?,
+        program: field_str(e, "program")?.to_string(),
+        param_count: field_usize(e, "param_count")?,
+        inputs,
+        outputs,
+    })
+}
+
+/// Default artifacts directory: `$RHO_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("RHO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "select_batch": 320, "train_batch": 32,
+      "artifacts": [
+        {"name": "mlp_small_d64_c10__init", "file": "a.hlo.txt",
+         "arch": "mlp_small", "d": 64, "c": 10, "program": "init",
+         "param_count": 4810,
+         "inputs": [{"name": "seed", "dtype": "int32", "shape": [1]}],
+         "outputs": ["theta"]},
+        {"name": "mlp_small_d64_c10__fwd_b320", "file": "b.hlo.txt",
+         "arch": "mlp_small", "d": 64, "c": 10, "program": "fwd_b320",
+         "param_count": 4810,
+         "inputs": [{"name": "theta", "dtype": "float32", "shape": [4810]},
+                    {"name": "x", "dtype": "float32", "shape": [320, 64]},
+                    {"name": "y", "dtype": "int32", "shape": [320]}],
+         "outputs": ["loss", "correct", "gnorm", "entropy"]}
+      ]}"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let dir = std::env::temp_dir().join(format!("rho-man-{}", std::process::id()));
+        write_manifest(&dir, SAMPLE);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.select_batch, 320);
+        assert_eq!(m.len(), 2);
+        let fwd = m.find("mlp_small", 64, 10, "fwd_b320").unwrap();
+        assert_eq!(fwd.batch(), Some(320));
+        assert_eq!(fwd.inputs[1].shape, vec![320, 64]);
+        assert_eq!(fwd.inputs[1].elem_count(), 320 * 64);
+        assert_eq!(m.combos(), vec![("mlp_small".to_string(), 64, 10)]);
+        assert_eq!(m.programs_for("mlp_small", 64, 10).len(), 2);
+        assert!(m.find("mlp_small", 64, 10, "train_b32").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = Manifest::load(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn init_has_no_batch() {
+        let dir = std::env::temp_dir().join(format!("rho-man2-{}", std::process::id()));
+        write_manifest(&dir, SAMPLE);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.get("mlp_small_d64_c10__init").unwrap().batch(), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,89 @@
+//! Executable loading and typed invocation.
+//!
+//! `Executor` wraps one compiled HLO program (PJRT CPU). All programs
+//! were lowered with `return_tuple=True`, so every execution returns a
+//! tuple literal that we decompose into named outputs.
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::runtime::artifact::ArtifactMeta;
+
+/// Build a rank-1..N f32 literal from a flat slice.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let lit = Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Build a rank-1..N i32 literal from a flat slice.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let lit = Literal::vec1(data);
+    if shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// One loaded executable + its manifest signature.
+pub struct Executor {
+    pub meta: ArtifactMeta,
+    exe: PjRtLoadedExecutable,
+}
+
+impl Executor {
+    /// Parse the HLO text, compile on `client`, and wrap.
+    pub fn load(client: &PjRtClient, meta: &ArtifactMeta) -> Result<Executor> {
+        let proto = HloModuleProto::from_text_file(
+            meta.file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path {:?}", meta.file))?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", meta.file))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact `{}`", meta.name))?;
+        Ok(Executor { meta: meta.clone(), exe })
+    }
+
+    /// Execute with positional literals; returns the decomposed output
+    /// tuple (one literal per manifest output name). Accepts owned or
+    /// borrowed literals so callers can reuse large inputs (e.g. theta)
+    /// across chunked calls without re-uploading.
+    pub fn call<L: std::borrow::Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Literal>> {
+        if args.len() != self.meta.inputs.len() {
+            bail!(
+                "artifact `{}` expects {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                args.len()
+            );
+        }
+        let bufs = self.exe.execute::<L>(args)?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        let outs = tuple
+            .to_tuple()
+            .with_context(|| format!("decomposing outputs of `{}`", self.meta.name))?;
+        if outs.len() != self.meta.outputs.len() {
+            bail!(
+                "artifact `{}` returned {} outputs, manifest says {}",
+                self.meta.name,
+                outs.len(),
+                self.meta.outputs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// `call` + extract every output as Vec<f32>.
+    pub fn call_f32<L: std::borrow::Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Vec<f32>>> {
+        self.call(args)?.into_iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+}

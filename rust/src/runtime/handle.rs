@@ -1,0 +1,352 @@
+//! `ModelRuntime`: the typed façade over one (arch, d, c) combo's
+//! executables. Handles arbitrary batch sizes by chunk+pad through the
+//! fixed-shape artifacts (DESIGN.md §3), so the coordinator never
+//! thinks about HLO shapes.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+use xla::PjRtClient;
+
+use crate::data::Dataset;
+use crate::runtime::artifact::Manifest;
+use crate::runtime::executor::{lit_f32, lit_i32, Executor};
+use crate::runtime::params::TrainState;
+
+/// Per-example forward statistics for a candidate batch (paper
+/// Algorithm 1 line 6 + the baselines' scoring signals).
+#[derive(Clone, Debug, Default)]
+pub struct FwdStats {
+    pub loss: Vec<f32>,
+    pub correct: Vec<f32>,
+    pub gnorm: Vec<f32>,
+    pub entropy: Vec<f32>,
+}
+
+/// MC-dropout uncertainty statistics (App. G baselines).
+#[derive(Clone, Debug, Default)]
+pub struct McdStats {
+    pub loss: Vec<f32>,
+    pub entropy: Vec<f32>,
+    pub cond_entropy: Vec<f32>,
+    pub bald: Vec<f32>,
+}
+
+/// Test-set evaluation summary.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalResult {
+    pub accuracy: f32,
+    pub mean_loss: f32,
+    pub n: usize,
+}
+
+/// Executables + metadata for one model combo.
+pub struct ModelRuntime {
+    pub arch: String,
+    pub d: usize,
+    pub c: usize,
+    pub param_count: usize,
+    pub select_batch: usize,
+    pub train_batch: usize,
+    init_exe: Executor,
+    fwd_exe: Executor,
+    select_exe: Executor,
+    train_exe: Executor,
+    mcd_exe: Option<Executor>,
+    _client: Rc<PjRtClient>,
+}
+
+impl ModelRuntime {
+    /// Load the default program set for (arch, d, c); `mcdropout` is
+    /// attached when present in the manifest.
+    pub fn load(
+        client: Rc<PjRtClient>,
+        manifest: &Manifest,
+        arch: &str,
+        d: usize,
+        c: usize,
+    ) -> Result<ModelRuntime> {
+        Self::load_with_train_batch(client, manifest, arch, d, c, manifest.train_batch)
+    }
+
+    /// Same, but with an alternative train-batch artifact (the Fig. 2
+    /// hyperparameter sweep uses train_b16/train_b64).
+    pub fn load_with_train_batch(
+        client: Rc<PjRtClient>,
+        manifest: &Manifest,
+        arch: &str,
+        d: usize,
+        c: usize,
+        train_batch: usize,
+    ) -> Result<ModelRuntime> {
+        let nb = manifest.select_batch;
+        let ctx = |p: &str| format!("loading `{arch}_d{d}_c{c}__{p}`");
+        let init_exe = Executor::load(&client, manifest.find(arch, d, c, "init")?)
+            .with_context(|| ctx("init"))?;
+        let fwd_exe = Executor::load(&client, manifest.find(arch, d, c, &format!("fwd_b{nb}"))?)
+            .with_context(|| ctx("fwd"))?;
+        let select_exe =
+            Executor::load(&client, manifest.find(arch, d, c, &format!("select_b{nb}"))?)
+                .with_context(|| ctx("select"))?;
+        let train_exe = Executor::load(
+            &client,
+            manifest.find(arch, d, c, &format!("train_b{train_batch}"))?,
+        )
+        .with_context(|| ctx("train"))?;
+        let mcd_exe = manifest
+            .find(arch, d, c, &format!("mcdropout_b{nb}"))
+            .ok()
+            .map(|m| Executor::load(&client, m))
+            .transpose()
+            .with_context(|| ctx("mcdropout"))?;
+        let param_count = init_exe.meta.param_count;
+        Ok(ModelRuntime {
+            arch: arch.to_string(),
+            d,
+            c,
+            param_count,
+            select_batch: nb,
+            train_batch,
+            init_exe,
+            fwd_exe,
+            select_exe,
+            train_exe,
+            mcd_exe,
+            _client: client,
+        })
+    }
+
+    pub fn has_mcdropout(&self) -> bool {
+        self.mcd_exe.is_some()
+    }
+
+    /// Initialize parameters (+ fresh optimizer state) from a seed.
+    pub fn init(&self, seed: i32) -> Result<TrainState> {
+        let outs = self.init_exe.call_f32(&[lit_i32(&[seed], &[1])?])?;
+        Ok(TrainState::new(outs.into_iter().next().unwrap()))
+    }
+
+    /// Forward scoring stats for an arbitrary-length batch (chunk+pad
+    /// through the fixed `select_batch` artifact; padding rows repeat
+    /// row 0 and their outputs are discarded).
+    pub fn fwd(&self, theta: &[f32], xs: &[f32], ys: &[i32]) -> Result<FwdStats> {
+        self.check_batch(theta, xs, ys)?;
+        let n = ys.len();
+        let mut out = FwdStats::default();
+        // Build the (large) theta literal ONCE per call and lend it to
+        // every chunk — saves a param_count*4-byte host copy per chunk
+        // (EXPERIMENTS.md §Perf, L3 iteration 1).
+        let theta_lit = lit_f32(theta, &[self.param_count])?;
+        self.for_chunks(xs, ys, |cx, cy, take| {
+            let args = [
+                &theta_lit,
+                &lit_f32(cx, &[self.select_batch, self.d])?,
+                &lit_i32(cy, &[self.select_batch])?,
+            ];
+            let outs = self.fwd_exe.call_f32(&args)?;
+            out.loss.extend_from_slice(&outs[0][..take]);
+            out.correct.extend_from_slice(&outs[1][..take]);
+            out.gnorm.extend_from_slice(&outs[2][..take]);
+            out.entropy.extend_from_slice(&outs[3][..take]);
+            Ok(())
+        })?;
+        debug_assert_eq!(out.loss.len(), n);
+        Ok(out)
+    }
+
+    /// Fused RHO scores (Eq. 3) for an arbitrary-length batch.
+    pub fn select_rho(
+        &self,
+        theta: &[f32],
+        xs: &[f32],
+        ys: &[i32],
+        il: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.check_batch(theta, xs, ys)?;
+        if il.len() != ys.len() {
+            bail!("il len {} != batch {}", il.len(), ys.len());
+        }
+        let mut scores = Vec::with_capacity(ys.len());
+        let nb = self.select_batch;
+        let mut il_pad = vec![0.0f32; nb];
+        let mut offset = 0;
+        let theta_lit = lit_f32(theta, &[self.param_count])?;
+        self.for_chunks(xs, ys, |cx, cy, take| {
+            il_pad[..take].copy_from_slice(&il[offset..offset + take]);
+            for v in il_pad[take..].iter_mut() {
+                *v = 0.0;
+            }
+            let args = [
+                &theta_lit,
+                &lit_f32(cx, &[nb, self.d])?,
+                &lit_i32(cy, &[nb])?,
+                &lit_f32(&il_pad, &[nb])?,
+            ];
+            let outs = self.select_exe.call_f32(&args)?;
+            scores.extend_from_slice(&outs[0][..take]);
+            offset += take;
+            Ok(())
+        })?;
+        Ok(scores)
+    }
+
+    /// MC-dropout stats (requires an mcdropout artifact).
+    pub fn mcdropout(&self, theta: &[f32], xs: &[f32], ys: &[i32], seed: i32) -> Result<McdStats> {
+        let exe = self
+            .mcd_exe
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no mcdropout artifact for {}", self.arch))?;
+        self.check_batch(theta, xs, ys)?;
+        let mut out = McdStats::default();
+        let theta_lit = lit_f32(theta, &[self.param_count])?;
+        self.for_chunks(xs, ys, |cx, cy, take| {
+            let args = [
+                &theta_lit,
+                &lit_f32(cx, &[self.select_batch, self.d])?,
+                &lit_i32(cy, &[self.select_batch])?,
+                &lit_i32(&[seed], &[1])?,
+            ];
+            let outs = exe.call_f32(&args)?;
+            out.loss.extend_from_slice(&outs[0][..take]);
+            out.entropy.extend_from_slice(&outs[1][..take]);
+            out.cond_entropy.extend_from_slice(&outs[2][..take]);
+            out.bald.extend_from_slice(&outs[3][..take]);
+            Ok(())
+        })?;
+        Ok(out)
+    }
+
+    /// One AdamW step on up to `train_batch` examples. Shorter batches
+    /// are padded with weight-0 repeats and weights renormalised so the
+    /// gradient equals the mean over the real examples. Returns the
+    /// (weighted) batch loss.
+    pub fn train_step(
+        &self,
+        state: &mut TrainState,
+        xs: &[f32],
+        ys: &[i32],
+        w: &[f32],
+        lr: f32,
+        wd: f32,
+    ) -> Result<f32> {
+        let n = ys.len();
+        let nb = self.train_batch;
+        if n == 0 || n > nb {
+            bail!("train batch size {n} not in 1..={nb}");
+        }
+        if xs.len() != n * self.d || w.len() != n {
+            bail!("train batch shape mismatch");
+        }
+        if state.theta.len() != self.param_count {
+            bail!("state params {} != model {}", state.theta.len(), self.param_count);
+        }
+        // Pad to the artifact batch with zero-weight repeats of row 0;
+        // rescale weights so mean(w*ce) over nb equals mean over n.
+        let scale = nb as f32 / n as f32;
+        let (px, py, pw);
+        let (xs, ys, w): (&[f32], &[i32], &[f32]) = if n == nb {
+            (xs, ys, w)
+        } else {
+            let mut vx = Vec::with_capacity(nb * self.d);
+            vx.extend_from_slice(xs);
+            let mut vy = Vec::with_capacity(nb);
+            vy.extend_from_slice(ys);
+            let mut vw: Vec<f32> = w.to_vec();
+            while vy.len() < nb {
+                vx.extend_from_slice(&xs[..self.d]);
+                vy.push(ys[0]);
+                vw.push(0.0);
+            }
+            px = vx;
+            py = vy;
+            pw = vw;
+            (&px, &py, &pw)
+        };
+        let w_scaled: Vec<f32> = w.iter().map(|&x| x * scale).collect();
+        let args = [
+            lit_f32(&state.theta, &[self.param_count])?,
+            lit_f32(&state.m, &[self.param_count])?,
+            lit_f32(&state.v, &[self.param_count])?,
+            lit_f32(&[(state.step + 1) as f32], &[1])?,
+            lit_f32(xs, &[nb, self.d])?,
+            lit_i32(ys, &[nb])?,
+            lit_f32(&w_scaled, &[nb])?,
+            lit_f32(&[lr], &[1])?,
+            lit_f32(&[wd], &[1])?,
+        ];
+        let outs = self.train_exe.call(&args)?;
+        let mut it = outs.into_iter();
+        state.theta = it.next().unwrap().to_vec::<f32>()?;
+        state.m = it.next().unwrap().to_vec::<f32>()?;
+        state.v = it.next().unwrap().to_vec::<f32>()?;
+        let loss = it.next().unwrap().to_vec::<f32>()?[0];
+        state.step += 1;
+        Ok(loss)
+    }
+
+    /// Accuracy + mean loss over a whole dataset (chunked).
+    pub fn eval_on(&self, theta: &[f32], ds: &Dataset) -> Result<EvalResult> {
+        let idx: Vec<u32> = (0..ds.len() as u32).collect();
+        let (xs, ys) = ds.gather(&idx);
+        let stats = self.fwd(theta, &xs, &ys)?;
+        let n = ds.len();
+        Ok(EvalResult {
+            accuracy: crate::util::math::mean(&stats.correct),
+            mean_loss: crate::util::math::mean(&stats.loss),
+            n,
+        })
+    }
+
+    fn check_batch(&self, theta: &[f32], xs: &[f32], ys: &[i32]) -> Result<()> {
+        if theta.len() != self.param_count {
+            bail!("theta len {} != param_count {}", theta.len(), self.param_count);
+        }
+        if xs.len() != ys.len() * self.d {
+            bail!("xs len {} != n*d = {}*{}", xs.len(), ys.len(), self.d);
+        }
+        if ys.is_empty() {
+            bail!("empty batch");
+        }
+        Ok(())
+    }
+
+    /// Drive `f` over `select_batch`-sized chunks of (xs, ys), padding
+    /// the final chunk by repeating its first row. `f(cx, cy, take)`
+    /// must consume only the first `take` outputs.
+    fn for_chunks(
+        &self,
+        xs: &[f32],
+        ys: &[i32],
+        mut f: impl FnMut(&[f32], &[i32], usize) -> Result<()>,
+    ) -> Result<()> {
+        let nb = self.select_batch;
+        let n = ys.len();
+        let mut pad_x = Vec::new();
+        let mut pad_y = Vec::new();
+        let mut start = 0;
+        while start < n {
+            let take = nb.min(n - start);
+            if take == nb {
+                f(&xs[start * self.d..(start + nb) * self.d], &ys[start..start + nb], nb)?;
+            } else {
+                pad_x.clear();
+                pad_y.clear();
+                pad_x.extend_from_slice(&xs[start * self.d..]);
+                pad_y.extend_from_slice(&ys[start..]);
+                while pad_y.len() < nb {
+                    pad_x.extend_from_slice(&xs[start * self.d..(start + 1) * self.d]);
+                    pad_y.push(ys[start]);
+                }
+                f(&pad_x, &pad_y, take)?;
+            }
+            start += take;
+        }
+        Ok(())
+    }
+}
+
+/// Shared CPU client for single-threaded use (pool workers create
+/// their own; the xla handles are not Send).
+pub fn cpu_client() -> Result<Rc<PjRtClient>> {
+    Ok(Rc::new(PjRtClient::cpu()?))
+}

@@ -1,0 +1,14 @@
+//! Runtime: loads the AOT-compiled HLO artifacts (PJRT CPU via the
+//! `xla` crate) and exposes typed model operations to the coordinator.
+//! Python never runs here — `make artifacts` happened at build time.
+
+pub mod artifact;
+pub mod executor;
+pub mod handle;
+pub mod params;
+pub mod pool;
+
+pub use artifact::{ArtifactMeta, Manifest};
+pub use handle::{cpu_client, EvalResult, FwdStats, McdStats, ModelRuntime};
+pub use params::TrainState;
+pub use pool::{PoolConfig, ScoringPool};

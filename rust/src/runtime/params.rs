@@ -1,0 +1,115 @@
+//! Parameter/optimizer state and binary checkpoints.
+//!
+//! The Rust side treats model parameters as opaque f32 vectors (the
+//! flattened-theta convention of `python/compile/model.py`); AdamW
+//! moments ride along so training can resume exactly.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Flattened parameters + AdamW state. `step` is the number of
+/// optimizer steps already taken (the HLO train program receives
+/// `step + 1` as its 1-based bias-correction counter).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainState {
+    pub theta: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: u64,
+}
+
+impl TrainState {
+    /// Fresh optimizer state around initialized parameters.
+    pub fn new(theta: Vec<f32>) -> Self {
+        let n = theta.len();
+        TrainState { theta, m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.theta.len()
+    }
+
+    const MAGIC: &'static [u8; 8] = b"RHOCKPT1";
+
+    /// Serialize to a little-endian binary checkpoint.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(Self::MAGIC)?;
+        w.write_all(&(self.theta.len() as u64).to_le_bytes())?;
+        w.write_all(&self.step.to_le_bytes())?;
+        for vec in [&self.theta, &self.m, &self.v] {
+            for x in vec {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<TrainState> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening checkpoint {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("{path:?} is not a RHO checkpoint (bad magic {magic:?})");
+        }
+        let mut u64buf = [0u8; 8];
+        r.read_exact(&mut u64buf)?;
+        let n = u64::from_le_bytes(u64buf) as usize;
+        r.read_exact(&mut u64buf)?;
+        let step = u64::from_le_bytes(u64buf);
+        let mut read_vec = |n: usize| -> Result<Vec<f32>> {
+            let mut bytes = vec![0u8; n * 4];
+            r.read_exact(&mut bytes)?;
+            Ok(bytes.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
+        };
+        let theta = read_vec(n)?;
+        let m = read_vec(n)?;
+        let v = read_vec(n)?;
+        Ok(TrainState { theta, m, v, step })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("rho-ckpt-{}", std::process::id()));
+        let path = dir.join("s.ckpt");
+        let mut st = TrainState::new(vec![1.0, -2.5, 3.25]);
+        st.m[1] = 0.5;
+        st.v[2] = 0.125;
+        st.step = 42;
+        st.save(&path).unwrap();
+        let back = TrainState::load(&path).unwrap();
+        assert_eq!(back, st);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("rho-ckpt2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(TrainState::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn new_state_zeroed() {
+        let st = TrainState::new(vec![1.0; 10]);
+        assert_eq!(st.step, 0);
+        assert!(st.m.iter().all(|&x| x == 0.0));
+        assert!(st.v.iter().all(|&x| x == 0.0));
+        assert_eq!(st.param_count(), 10);
+    }
+}

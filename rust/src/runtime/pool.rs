@@ -1,0 +1,302 @@
+//! Parallel scoring pool — the paper's "simple parallelized selection"
+//! (§3): candidate-batch forward passes are embarrassingly parallel,
+//! so extra workers evaluate training losses concurrently while the
+//! master trains on recently selected data.
+//!
+//! The `xla` handles are not `Send`, so every worker owns a private
+//! PJRT client + executables, created inside the worker thread. Work
+//! arrives over a shared bounded queue (backpressure: `score` blocks
+//! when `queue_depth` chunks are already in flight); plain data
+//! (`Vec<f32>`) crosses the thread boundary, never XLA handles.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::artifact::ArtifactMeta;
+use crate::runtime::executor::{lit_f32, lit_i32, Executor};
+use crate::runtime::handle::FwdStats;
+
+/// Pool construction parameters.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    pub workers: usize,
+    /// Max in-flight chunks before `score*` blocks (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        PoolConfig { workers: workers.clamp(1, 8), queue_depth: 32 }
+    }
+}
+
+enum Request {
+    Fwd { chunk: usize, take: usize, theta: Arc<Vec<f32>>, xs: Vec<f32>, ys: Vec<i32> },
+    Rho {
+        chunk: usize,
+        take: usize,
+        theta: Arc<Vec<f32>>,
+        xs: Vec<f32>,
+        ys: Vec<i32>,
+        il: Vec<f32>,
+    },
+}
+
+enum Payload {
+    Fwd { loss: Vec<f32>, correct: Vec<f32>, gnorm: Vec<f32>, entropy: Vec<f32> },
+    Rho { scores: Vec<f32> },
+}
+
+struct Response {
+    chunk: usize,
+    take: usize,
+    worker: usize,
+    payload: Result<Payload, String>,
+}
+
+/// Shared-queue scoring pool over one (arch, d, c) combo's fwd/select
+/// artifacts.
+pub struct ScoringPool {
+    req_tx: Option<SyncSender<Request>>,
+    resp_rx: Receiver<Response>,
+    handles: Vec<JoinHandle<()>>,
+    pub select_batch: usize,
+    d: usize,
+    param_count: usize,
+    pub workers: usize,
+    processed: Vec<Arc<AtomicUsize>>,
+}
+
+impl ScoringPool {
+    /// Spawn workers; each compiles its own copies of the fwd + select
+    /// executables from the given artifact metadata.
+    pub fn new(fwd_meta: &ArtifactMeta, select_meta: &ArtifactMeta, cfg: &PoolConfig) -> Result<Self> {
+        let select_batch = fwd_meta
+            .batch()
+            .ok_or_else(|| anyhow!("fwd artifact has no batch size"))?;
+        let d = fwd_meta.d;
+        let param_count = fwd_meta.param_count;
+        let (req_tx, req_rx) = sync_channel::<Request>(cfg.queue_depth.max(1));
+        let req_rx = Arc::new(Mutex::new(req_rx));
+        let (resp_tx, resp_rx) = channel::<Response>();
+        let mut handles = Vec::new();
+        let mut processed = Vec::new();
+        for wid in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&req_rx);
+            let tx = resp_tx.clone();
+            let fwd_meta = fwd_meta.clone();
+            let select_meta = select_meta.clone();
+            let counter = Arc::new(AtomicUsize::new(0));
+            processed.push(Arc::clone(&counter));
+            handles.push(std::thread::spawn(move || {
+                worker_main(wid, rx, tx, fwd_meta, select_meta, counter);
+            }));
+        }
+        Ok(ScoringPool {
+            req_tx: Some(req_tx),
+            resp_rx,
+            handles,
+            select_batch,
+            d,
+            param_count,
+            workers: cfg.workers.max(1),
+            processed,
+        })
+    }
+
+    /// Per-worker processed-chunk counts (load-balance observability).
+    pub fn worker_loads(&self) -> Vec<usize> {
+        self.processed.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Parallel forward stats over an arbitrary-length candidate batch.
+    pub fn fwd(&self, theta: &Arc<Vec<f32>>, xs: &[f32], ys: &[i32]) -> Result<FwdStats> {
+        let chunks = self.dispatch(theta, xs, ys, None)?;
+        let mut out = FwdStats::default();
+        let n = ys.len();
+        out.loss.resize(n, 0.0);
+        out.correct.resize(n, 0.0);
+        out.gnorm.resize(n, 0.0);
+        out.entropy.resize(n, 0.0);
+        for _ in 0..chunks {
+            let resp = self.resp_rx.recv().map_err(|_| anyhow!("pool workers died"))?;
+            let base = resp.chunk * self.select_batch;
+            match resp.payload {
+                Ok(Payload::Fwd { loss, correct, gnorm, entropy }) => {
+                    out.loss[base..base + resp.take].copy_from_slice(&loss[..resp.take]);
+                    out.correct[base..base + resp.take].copy_from_slice(&correct[..resp.take]);
+                    out.gnorm[base..base + resp.take].copy_from_slice(&gnorm[..resp.take]);
+                    out.entropy[base..base + resp.take].copy_from_slice(&entropy[..resp.take]);
+                }
+                Ok(_) => bail!("mismatched payload kind"),
+                Err(e) => bail!("worker {} failed: {e}", resp.worker),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parallel fused RHO scores over an arbitrary-length batch.
+    pub fn rho(&self, theta: &Arc<Vec<f32>>, xs: &[f32], ys: &[i32], il: &[f32]) -> Result<Vec<f32>> {
+        if il.len() != ys.len() {
+            bail!("il len mismatch");
+        }
+        let chunks = self.dispatch(theta, xs, ys, Some(il))?;
+        let mut scores = vec![0.0f32; ys.len()];
+        for _ in 0..chunks {
+            let resp = self.resp_rx.recv().map_err(|_| anyhow!("pool workers died"))?;
+            let base = resp.chunk * self.select_batch;
+            match resp.payload {
+                Ok(Payload::Rho { scores: s }) => {
+                    scores[base..base + resp.take].copy_from_slice(&s[..resp.take]);
+                }
+                Ok(_) => bail!("mismatched payload kind"),
+                Err(e) => bail!("worker {} failed: {e}", resp.worker),
+            }
+        }
+        Ok(scores)
+    }
+
+    fn dispatch(
+        &self,
+        theta: &Arc<Vec<f32>>,
+        xs: &[f32],
+        ys: &[i32],
+        il: Option<&[f32]>,
+    ) -> Result<usize> {
+        if theta.len() != self.param_count {
+            bail!("theta len {} != {}", theta.len(), self.param_count);
+        }
+        if xs.len() != ys.len() * self.d || ys.is_empty() {
+            bail!("bad batch shape");
+        }
+        let nb = self.select_batch;
+        let n = ys.len();
+        let tx = self.req_tx.as_ref().expect("pool alive");
+        let mut chunk = 0;
+        let mut start = 0;
+        while start < n {
+            let take = nb.min(n - start);
+            // pad to nb by repeating the first row of the chunk
+            let mut cx = Vec::with_capacity(nb * self.d);
+            let mut cy = Vec::with_capacity(nb);
+            cx.extend_from_slice(&xs[start * self.d..(start + take) * self.d]);
+            cy.extend_from_slice(&ys[start..start + take]);
+            while cy.len() < nb {
+                cx.extend_from_slice(&xs[start * self.d..(start + 1) * self.d]);
+                cy.push(ys[start]);
+            }
+            let req = match il {
+                None => Request::Fwd { chunk, take, theta: Arc::clone(theta), xs: cx, ys: cy },
+                Some(il) => {
+                    let mut ci = Vec::with_capacity(nb);
+                    ci.extend_from_slice(&il[start..start + take]);
+                    ci.resize(nb, 0.0);
+                    Request::Rho { chunk, take, theta: Arc::clone(theta), xs: cx, ys: cy, il: ci }
+                }
+            };
+            tx.send(req).map_err(|_| anyhow!("pool workers died"))?;
+            chunk += 1;
+            start += take;
+        }
+        Ok(chunk)
+    }
+}
+
+impl Drop for ScoringPool {
+    fn drop(&mut self) {
+        drop(self.req_tx.take()); // close the queue; workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(
+    wid: usize,
+    rx: Arc<Mutex<Receiver<Request>>>,
+    tx: Sender<Response>,
+    fwd_meta: ArtifactMeta,
+    select_meta: ArtifactMeta,
+    counter: Arc<AtomicUsize>,
+) {
+    // Private client + executables (xla handles are thread-local).
+    let setup = (|| -> Result<(Executor, Executor)> {
+        let client = xla::PjRtClient::cpu()?;
+        let fwd = Executor::load(&client, &fwd_meta)?;
+        let select = Executor::load(&client, &select_meta)?;
+        // the executables keep the client alive through the C++ side;
+        // keep the Rust handle alive too by leaking it into the pair
+        std::mem::forget(client);
+        Ok((fwd, select))
+    })();
+    let (fwd_exe, select_exe) = match setup {
+        Ok(p) => p,
+        Err(e) => {
+            // Surface the failure on the first request.
+            while let Ok(req) = rx.lock().unwrap().recv() {
+                let (chunk, take) = match &req {
+                    Request::Fwd { chunk, take, .. } | Request::Rho { chunk, take, .. } => {
+                        (*chunk, *take)
+                    }
+                };
+                let _ = tx.send(Response {
+                    chunk,
+                    take,
+                    worker: wid,
+                    payload: Err(format!("worker setup failed: {e:#}")),
+                });
+            }
+            return;
+        }
+    };
+    loop {
+        let req = match rx.lock().unwrap().recv() {
+            Ok(r) => r,
+            Err(_) => return, // queue closed
+        };
+        let (chunk, take, payload) = match req {
+            Request::Fwd { chunk, take, theta, xs, ys } => {
+                let res = (|| -> Result<Payload> {
+                    let nb = fwd_meta.batch().unwrap();
+                    let args = [
+                        lit_f32(&theta, &[theta.len()])?,
+                        lit_f32(&xs, &[nb, fwd_meta.d])?,
+                        lit_i32(&ys, &[nb])?,
+                    ];
+                    let outs = fwd_exe.call_f32(&args)?;
+                    let mut it = outs.into_iter();
+                    Ok(Payload::Fwd {
+                        loss: it.next().unwrap(),
+                        correct: it.next().unwrap(),
+                        gnorm: it.next().unwrap(),
+                        entropy: it.next().unwrap(),
+                    })
+                })();
+                (chunk, take, res.map_err(|e| format!("{e:#}")))
+            }
+            Request::Rho { chunk, take, theta, xs, ys, il } => {
+                let res = (|| -> Result<Payload> {
+                    let nb = select_meta.batch().unwrap();
+                    let args = [
+                        lit_f32(&theta, &[theta.len()])?,
+                        lit_f32(&xs, &[nb, select_meta.d])?,
+                        lit_i32(&ys, &[nb])?,
+                        lit_f32(&il, &[nb])?,
+                    ];
+                    let outs = select_exe.call_f32(&args)?;
+                    Ok(Payload::Rho { scores: outs.into_iter().next().unwrap() })
+                })();
+                (chunk, take, res.map_err(|e| format!("{e:#}")))
+            }
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+        if tx.send(Response { chunk, take, worker: wid, payload }).is_err() {
+            return; // pool dropped
+        }
+    }
+}

@@ -1,0 +1,133 @@
+//! Selection diagnostics: distributional summaries and cross-method
+//! agreement measures over candidate scores.
+//!
+//! Used by `rho inspect` and the ablation analyses: how concentrated is
+//! a method's selection, how much do two methods' top-k sets overlap,
+//! and how does a score distribution evolve over training (the raw
+//! material behind the paper's §4.3 property analysis).
+
+use crate::util::math::{argsort, mean, percentile, spearman, std as stddev, top_k_indices};
+
+/// Five-number-ish summary of a score vector.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScoreSummary {
+    pub n: usize,
+    pub mean: f32,
+    pub std: f32,
+    pub p5: f32,
+    pub p50: f32,
+    pub p95: f32,
+    /// Fraction of scores below zero (for RHO: candidates whose IL
+    /// exceeds their training loss — "already learnt or unlearnable").
+    pub frac_negative: f32,
+}
+
+pub fn summarize(scores: &[f32]) -> ScoreSummary {
+    let neg = scores.iter().filter(|&&x| x < 0.0).count();
+    ScoreSummary {
+        n: scores.len(),
+        mean: mean(scores),
+        std: stddev(scores),
+        p5: percentile(scores, 5.0),
+        p50: percentile(scores, 50.0),
+        p95: percentile(scores, 95.0),
+        frac_negative: if scores.is_empty() { 0.0 } else { neg as f32 / scores.len() as f32 },
+    }
+}
+
+/// Jaccard overlap of two methods' top-k selections over the same
+/// candidate batch: |A ∩ B| / |A ∪ B|.
+pub fn topk_jaccard(a_scores: &[f32], b_scores: &[f32], k: usize) -> f32 {
+    assert_eq!(a_scores.len(), b_scores.len());
+    let a: std::collections::HashSet<usize> = top_k_indices(a_scores, k).into_iter().collect();
+    let b: std::collections::HashSet<usize> = top_k_indices(b_scores, k).into_iter().collect();
+    let inter = a.intersection(&b).count();
+    let union = a.union(&b).count();
+    if union == 0 {
+        1.0
+    } else {
+        inter as f32 / union as f32
+    }
+}
+
+/// Rank agreement between two scoring functions on one batch
+/// (Spearman; the Table-1 metric exposed as a library primitive).
+pub fn rank_agreement(a_scores: &[f32], b_scores: &[f32]) -> f64 {
+    spearman(a_scores, b_scores)
+}
+
+/// Selection concentration: what fraction of the total positive score
+/// mass lives in the top-k (1.0 = all of it; k/n = uniform scores).
+pub fn concentration(scores: &[f32], k: usize) -> f32 {
+    let pos: Vec<f32> = scores.iter().map(|&x| x.max(0.0)).collect();
+    let total: f32 = pos.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let order = argsort(&pos);
+    let topk: f32 = order.iter().rev().take(k).map(|&i| pos[i]).sum();
+    topk / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[-1.0, 0.0, 1.0, 2.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.mean, 0.5);
+        assert!((s.frac_negative - 0.25).abs() < 1e-6);
+        assert!(s.p5 <= s.p50 && s.p50 <= s.p95);
+    }
+
+    #[test]
+    fn jaccard_identity_and_disjoint() {
+        let a = [5.0, 4.0, 3.0, 2.0, 1.0, 0.0];
+        assert_eq!(topk_jaccard(&a, &a, 3), 1.0);
+        let b = [0.0, 1.0, 2.0, 3.0, 4.0, 5.0]; // reversed ranking
+        assert_eq!(topk_jaccard(&a, &b, 3), 0.0);
+    }
+
+    #[test]
+    fn jaccard_bounds_prop() {
+        prop::check("jaccard-bounds", 50, |rng| {
+            let n = 5 + rng.below(200);
+            let k = 1 + rng.below(n);
+            let a: Vec<f32> = (0..n).map(|_| rng.gauss()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.gauss()).collect();
+            let j = topk_jaccard(&a, &b, k);
+            if !(0.0..=1.0).contains(&j) {
+                return Err(format!("jaccard {j}"));
+            }
+            // symmetric
+            if (topk_jaccard(&b, &a, k) - j).abs() > 1e-6 {
+                return Err("asymmetric".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn concentration_extremes() {
+        // one dominant score -> top-1 holds all mass
+        let spiked = [0.0, 0.0, 10.0, 0.0];
+        assert!((concentration(&spiked, 1) - 1.0).abs() < 1e-6);
+        // uniform scores -> top-k holds k/n
+        let flat = [1.0f32; 10];
+        assert!((concentration(&flat, 3) - 0.3).abs() < 1e-6);
+        // all-negative -> zero positive mass
+        assert_eq!(concentration(&[-1.0, -2.0], 1), 0.0);
+    }
+
+    #[test]
+    fn rank_agreement_matches_spearman() {
+        let mut rng = Pcg32::new(1, 0);
+        let a: Vec<f32> = (0..50).map(|_| rng.gauss()).collect();
+        let b: Vec<f32> = a.iter().map(|&x| 2.0 * x + 1.0).collect();
+        assert!((rank_agreement(&a, &b) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,343 @@
+//! Selection functions: RHO-LOSS (paper Eq. 3) and every baseline the
+//! paper compares against (§4.0 Baselines + App. G).
+//!
+//! A selection function ranks the `n_B` pre-sampled candidates of one
+//! step and picks `n_b` of them (plus optional per-example gradient
+//! weights for importance-sampling debiasing).
+
+pub mod diagnostics;
+
+use crate::runtime::handle::McdStats;
+use crate::util::math::top_k_indices;
+use crate::util::rng::Pcg32;
+
+/// Every selection method in the evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Random shuffling (the paper's main baseline).
+    Uniform,
+    /// Top training loss (Kawaguchi & Lu '20, "Ordered SGD").
+    TrainLoss,
+    /// Top (last-layer proxy) gradient norm.
+    GradNorm,
+    /// Gradient-norm importance sampling with debiasing weights
+    /// (Katharopoulos & Fleuret '18).
+    GradNormIS,
+    /// Selection-via-Proxy (Coleman et al. '20): offline max-entropy
+    /// core-set by a proxy model; online behaviour == uniform over the
+    /// pre-filtered core-set (the trainer applies the filter).
+    Svp,
+    /// Negative irreducible loss (ablation: skips noisy/irrelevant but
+    /// not redundant points).
+    NegIL,
+    /// Reducible holdout loss (the paper's method).
+    RhoLoss,
+    /// BALD (Houlsby et al. '11), MC-dropout (App. G).
+    Bald,
+    /// Predictive entropy (App. G).
+    Entropy,
+    /// Expected conditional entropy (App. G).
+    CondEntropy,
+    /// Loss minus conditional entropy (App. G; label-aware).
+    LossMinusCondEntropy,
+}
+
+impl Method {
+    pub const ALL: &'static [Method] = &[
+        Method::Uniform,
+        Method::TrainLoss,
+        Method::GradNorm,
+        Method::GradNormIS,
+        Method::Svp,
+        Method::NegIL,
+        Method::RhoLoss,
+        Method::Bald,
+        Method::Entropy,
+        Method::CondEntropy,
+        Method::LossMinusCondEntropy,
+    ];
+
+    /// Table-2 column set (the main-paper comparison).
+    pub const TABLE2: &'static [Method] = &[
+        Method::TrainLoss,
+        Method::GradNorm,
+        Method::GradNormIS,
+        Method::Svp,
+        Method::NegIL,
+        Method::Uniform,
+        Method::RhoLoss,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Uniform => "uniform",
+            Method::TrainLoss => "train_loss",
+            Method::GradNorm => "grad_norm",
+            Method::GradNormIS => "grad_norm_is",
+            Method::Svp => "svp",
+            Method::NegIL => "neg_il",
+            Method::RhoLoss => "rho_loss",
+            Method::Bald => "bald",
+            Method::Entropy => "entropy",
+            Method::CondEntropy => "cond_entropy",
+            Method::LossMinusCondEntropy => "loss_minus_condent",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Method::ALL.iter().copied().find(|m| m.name() == s)
+    }
+
+    /// Needs per-candidate irreducible losses (an IL model).
+    pub fn needs_il(&self) -> bool {
+        matches!(self, Method::RhoLoss | Method::NegIL)
+    }
+
+    /// Needs MC-dropout uncertainty stats.
+    pub fn needs_mcdropout(&self) -> bool {
+        matches!(
+            self,
+            Method::Bald | Method::Entropy | Method::CondEntropy | Method::LossMinusCondEntropy
+        )
+    }
+
+    /// Needs the per-candidate fwd stats (everything except pure
+    /// uniform and the fused-RHO fast path).
+    pub fn needs_fwd(&self) -> bool {
+        !matches!(self, Method::Uniform)
+    }
+
+    /// Applies an offline core-set filter before training (SVP).
+    pub fn is_offline_filter(&self) -> bool {
+        matches!(self, Method::Svp)
+    }
+}
+
+/// Per-candidate scoring signals for one step. Slices are aligned with
+/// the candidate batch; optional ones are present only when the method
+/// requires them.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Candidates<'a> {
+    /// Candidate count (always set; signals may be absent).
+    pub n: usize,
+    pub loss: Option<&'a [f32]>,
+    pub gnorm: Option<&'a [f32]>,
+    /// Irreducible losses of the candidates (IL model, precomputed).
+    pub il: Option<&'a [f32]>,
+    /// Fused RHO scores (when the Pallas select artifact ran instead
+    /// of fwd; equals loss - il).
+    pub rho: Option<&'a [f32]>,
+    pub mcd: Option<&'a McdStats>,
+}
+
+/// The outcome of one selection: positions into the candidate batch
+/// plus per-example gradient weights (mean 1 for unweighted methods).
+#[derive(Clone, Debug)]
+pub struct Selection {
+    pub picked: Vec<usize>,
+    pub weights: Vec<f32>,
+}
+
+impl Selection {
+    fn unweighted(picked: Vec<usize>) -> Selection {
+        let w = vec![1.0; picked.len()];
+        Selection { picked, weights: w }
+    }
+}
+
+/// Rank candidates and pick `nb`. Panics if a required signal is
+/// missing (programmer error — the trainer gathers per `Method`).
+pub fn select(method: Method, c: &Candidates, nb: usize, rng: &mut Pcg32) -> Selection {
+    let n = candidate_count(c);
+    let nb = nb.min(n);
+    match method {
+        Method::Uniform | Method::Svp => {
+            Selection::unweighted(rng.choose_k(n, nb))
+        }
+        Method::TrainLoss => Selection::unweighted(top_k_indices(need(c.loss, "loss"), nb)),
+        Method::GradNorm => Selection::unweighted(top_k_indices(need(c.gnorm, "gnorm"), nb)),
+        Method::GradNormIS => {
+            let g = need(c.gnorm, "gnorm");
+            // Sample ∝ gnorm (ε-smoothed), then debias with w ∝ 1/p,
+            // normalised to mean 1 (Katharopoulos & Fleuret '18).
+            let total: f32 = g.iter().map(|x| x.max(1e-8)).sum();
+            let probs: Vec<f32> = g.iter().map(|x| x.max(1e-8) / total).collect();
+            let picked = rng.choose_k_weighted(&probs, nb);
+            let mut weights: Vec<f32> = picked.iter().map(|&i| 1.0 / (probs[i] * n as f32)).collect();
+            // clip + normalise to mean 1 to bound variance
+            for w in weights.iter_mut() {
+                *w = w.min(10.0);
+            }
+            let mean = crate::util::math::mean(&weights).max(1e-8);
+            for w in weights.iter_mut() {
+                *w /= mean;
+            }
+            Selection { picked, weights }
+        }
+        Method::NegIL => {
+            let il = need(c.il, "il");
+            let neg: Vec<f32> = il.iter().map(|&x| -x).collect();
+            Selection::unweighted(top_k_indices(&neg, nb))
+        }
+        Method::RhoLoss => {
+            if let Some(rho) = c.rho {
+                Selection::unweighted(top_k_indices(rho, nb))
+            } else {
+                let loss = need(c.loss, "loss");
+                let il = need(c.il, "il");
+                let rho: Vec<f32> = loss.iter().zip(il).map(|(&l, &i)| l - i).collect();
+                Selection::unweighted(top_k_indices(&rho, nb))
+            }
+        }
+        Method::Bald => Selection::unweighted(top_k_indices(&need_mcd(c).bald, nb)),
+        Method::Entropy => Selection::unweighted(top_k_indices(&need_mcd(c).entropy, nb)),
+        Method::CondEntropy => {
+            Selection::unweighted(top_k_indices(&need_mcd(c).cond_entropy, nb))
+        }
+        Method::LossMinusCondEntropy => {
+            let mcd = need_mcd(c);
+            let score: Vec<f32> =
+                mcd.loss.iter().zip(&mcd.cond_entropy).map(|(&l, &h)| l - h).collect();
+            Selection::unweighted(top_k_indices(&score, nb))
+        }
+    }
+}
+
+fn candidate_count(c: &Candidates) -> usize {
+    if c.n > 0 {
+        return c.n;
+    }
+    c.loss
+        .map(<[f32]>::len)
+        .or(c.rho.map(<[f32]>::len))
+        .or(c.gnorm.map(<[f32]>::len))
+        .or(c.il.map(<[f32]>::len))
+        .or(c.mcd.map(|m| m.loss.len()))
+        .expect("no candidate signals provided")
+}
+
+fn need<'a>(x: Option<&'a [f32]>, what: &str) -> &'a [f32] {
+    x.unwrap_or_else(|| panic!("selection requires `{what}` signal"))
+}
+
+fn need_mcd<'a>(c: &Candidates<'a>) -> &'a McdStats {
+    c.mcd.expect("selection requires mcdropout stats")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn rng() -> Pcg32 {
+        Pcg32::new(7, 0)
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()), Some(*m));
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn train_loss_picks_highest() {
+        let loss = [0.1, 5.0, 0.2, 3.0];
+        let c = Candidates { loss: Some(&loss), ..Default::default() };
+        let s = select(Method::TrainLoss, &c, 2, &mut rng());
+        assert_eq!(s.picked, vec![1, 3]);
+        assert_eq!(s.weights, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn rho_prefers_fused_scores() {
+        let rho = [1.0, -2.0, 7.0];
+        let c = Candidates { rho: Some(&rho), ..Default::default() };
+        let s = select(Method::RhoLoss, &c, 1, &mut rng());
+        assert_eq!(s.picked, vec![2]);
+    }
+
+    #[test]
+    fn rho_from_loss_minus_il() {
+        // loss high but IL higher -> (noisy) point deprioritized
+        let loss = [3.0, 2.0];
+        let il = [4.0, 0.5]; // rho: -1.0, 1.5
+        let c = Candidates { loss: Some(&loss), il: Some(&il), ..Default::default() };
+        let s = select(Method::RhoLoss, &c, 1, &mut rng());
+        assert_eq!(s.picked, vec![1]);
+    }
+
+    #[test]
+    fn neg_il_picks_lowest_il() {
+        let il = [2.0, 0.1, 1.0];
+        let c = Candidates { il: Some(&il), ..Default::default() };
+        let s = select(Method::NegIL, &c, 2, &mut rng());
+        assert_eq!(s.picked, vec![1, 2]);
+    }
+
+    #[test]
+    fn uniform_is_a_permutation_sample() {
+        let loss = [0.0; 50];
+        let c = Candidates { loss: Some(&loss), ..Default::default() };
+        let s = select(Method::Uniform, &c, 10, &mut rng());
+        let mut p = s.picked.clone();
+        p.sort_unstable();
+        p.dedup();
+        assert_eq!(p.len(), 10);
+    }
+
+    #[test]
+    fn gradnorm_is_weights_mean_one_prop() {
+        prop::check("is-weights", 30, |rng| {
+            let n = 10 + rng.below(300);
+            let g: Vec<f32> = (0..n).map(|_| rng.f32() * 3.0).collect();
+            let c = Candidates { gnorm: Some(&g), ..Default::default() };
+            let nb = 1 + rng.below(n.min(32));
+            let s = select(Method::GradNormIS, &c, nb, rng);
+            if s.picked.len() != nb {
+                return Err("wrong count".into());
+            }
+            let mean = crate::util::math::mean(&s.weights);
+            if (mean - 1.0).abs() > 1e-3 {
+                return Err(format!("weights mean {mean}"));
+            }
+            if s.weights.iter().any(|&w| w < 0.0) {
+                return Err("negative weight".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mcd_methods_rank_their_signal() {
+        let mcd = McdStats {
+            loss: vec![1.0, 2.0, 3.0],
+            entropy: vec![0.5, 2.0, 1.0],
+            cond_entropy: vec![0.4, 1.9, 0.2],
+            bald: vec![0.1, 0.1, 0.8],
+        };
+        let c = Candidates { mcd: Some(&mcd), ..Default::default() };
+        assert_eq!(select(Method::Bald, &c, 1, &mut rng()).picked, vec![2]);
+        assert_eq!(select(Method::Entropy, &c, 1, &mut rng()).picked, vec![1]);
+        assert_eq!(select(Method::CondEntropy, &c, 1, &mut rng()).picked, vec![1]);
+        // loss - cond_entropy: [0.6, 0.1, 2.8]
+        assert_eq!(select(Method::LossMinusCondEntropy, &c, 1, &mut rng()).picked, vec![2]);
+    }
+
+    #[test]
+    fn nb_larger_than_candidates_is_clamped() {
+        let loss = [1.0, 2.0];
+        let c = Candidates { loss: Some(&loss), ..Default::default() };
+        let s = select(Method::TrainLoss, &c, 10, &mut rng());
+        assert_eq!(s.picked.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "requires `il`")]
+    fn missing_signal_panics() {
+        let loss = [1.0];
+        let c = Candidates { loss: Some(&loss), ..Default::default() };
+        select(Method::NegIL, &c, 1, &mut rng());
+    }
+}

@@ -1,0 +1,208 @@
+//! Statistics helpers: moments, ranking, correlation, top-k.
+//!
+//! `spearman` backs the paper's Table 1 (rank correlation between
+//! approximations of the selection function); `top_k_indices` is the
+//! coordinator's selection primitive (Algorithm 1 line 8).
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() as f32 / xs.len() as f32
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs) as f64;
+    let v = xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64;
+    v.sqrt() as f32
+}
+
+/// Indices that sort `xs` ascending (stable; NaNs last).
+pub fn argsort(xs: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap_or(std::cmp::Ordering::Greater));
+    idx
+}
+
+/// Fractional ranks (1-based, ties averaged) — scipy `rankdata` semantics.
+pub fn rankdata(xs: &[f32]) -> Vec<f64> {
+    let order = argsort(xs);
+    let n = xs.len();
+    let mut ranks = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[order[j + 1]] == xs[order[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &order[i..=j] {
+            ranks[k] = avg;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+/// Pearson correlation of two equal-length slices (f64 accumulation).
+pub fn pearson64(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Spearman rank correlation (ties averaged) — Table 1's metric.
+pub fn spearman(xs: &[f32], ys: &[f32]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    pearson64(&rankdata(xs), &rankdata(ys))
+}
+
+/// Indices of the k largest values (descending by value). O(n + k log k)
+/// via partial selection — the Algorithm-1 top-`n_b` primitive.
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let n = scores.len();
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    let key = |i: usize| if scores[i].is_nan() { f32::NEG_INFINITY } else { scores[i] };
+    let mut idx: Vec<usize> = (0..n).collect();
+    if k < n {
+        idx.select_nth_unstable_by(k - 1, |&a, &b| key(b).total_cmp(&key(a)));
+        idx.truncate(k);
+    }
+    idx.sort_by(|&a, &b| key(b).total_cmp(&key(a)));
+    idx
+}
+
+/// Percentile (nearest-rank, q in [0,100]).
+pub fn percentile(xs: &[f32], q: f64) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = ((q / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn mean_std_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rankdata_ties() {
+        // scipy.stats.rankdata([1, 2, 2, 3]) == [1, 2.5, 2.5, 4]
+        assert_eq!(rankdata(&[1.0, 2.0, 2.0, 3.0]), vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn spearman_perfect_and_inverse() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let up = [10.0, 20.0, 30.0, 40.0, 50.0];
+        let down = [5.0, 4.0, 3.0, 2.0, 1.0];
+        assert!((spearman(&xs, &up) - 1.0).abs() < 1e-12);
+        assert!((spearman(&xs, &down) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_monotone_transform_invariant() {
+        prop::check("spearman-monotone", 50, |rng| {
+            let n = 20 + rng.below(50);
+            let xs: Vec<f32> = (0..n).map(|_| rng.gauss()).collect();
+            let ys: Vec<f32> = xs.iter().map(|&x| x.exp()).collect(); // strictly monotone
+            let s = spearman(&xs, &ys);
+            if (s - 1.0).abs() > 1e-9 {
+                return Err(format!("spearman {s} != 1 under monotone map"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spearman_in_range_prop() {
+        prop::check("spearman-range", 100, |rng| {
+            let n = 2 + rng.below(100);
+            let xs: Vec<f32> = (0..n).map(|_| rng.gauss()).collect();
+            let ys: Vec<f32> = (0..n).map(|_| rng.gauss()).collect();
+            let s = spearman(&xs, &ys);
+            if !(-1.0 - 1e-9..=1.0 + 1e-9).contains(&s) {
+                return Err(format!("spearman out of range: {s}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn topk_matches_full_sort_prop() {
+        prop::check("topk-vs-sort", 100, |rng| {
+            let n = 1 + rng.below(500);
+            let k = rng.below(n + 1);
+            let xs: Vec<f32> = (0..n).map(|_| rng.gauss()).collect();
+            let got = top_k_indices(&xs, k);
+            let mut want = argsort(&xs);
+            want.reverse();
+            want.truncate(k);
+            let gv: Vec<f32> = got.iter().map(|&i| xs[i]).collect();
+            let wv: Vec<f32> = want.iter().map(|&i| xs[i]).collect();
+            if gv != wv {
+                return Err(format!("topk values {gv:?} != {wv:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn topk_handles_edge_cases() {
+        assert!(top_k_indices(&[], 3).is_empty());
+        assert_eq!(top_k_indices(&[1.0], 5), vec![0]);
+        let got = top_k_indices(&[1.0, f32::NAN, 3.0], 2);
+        assert!(got.contains(&2));
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn spearman_agrees_with_bruteforce_rank_pearson() {
+        let mut rng = Pcg32::new(11, 0);
+        let xs: Vec<f32> = (0..200).map(|_| rng.gauss()).collect();
+        let ys: Vec<f32> = xs.iter().map(|&x| x * 0.5 + rng.gauss()).collect();
+        let s = spearman(&xs, &ys);
+        assert!(s > 0.2 && s < 0.9, "expected moderate positive corr, got {s}");
+    }
+}

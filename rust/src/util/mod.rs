@@ -1,0 +1,10 @@
+//! Cross-cutting utilities: PRNG, statistics, JSON, CSV, timing, and a
+//! property-test harness. All std-only (see DESIGN.md §2 for why the
+//! usual crates are absent).
+
+pub mod csvio;
+pub mod json;
+pub mod math;
+pub mod prop;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,73 @@
+//! Minimal property-based testing harness (proptest is not in the
+//! vendored crate set; see DESIGN.md §2).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` independently
+//! seeded generators. On failure it panics with the case seed so the
+//! exact counterexample replays with `replay(name, seed, f)`.
+
+use crate::util::rng::Pcg32;
+
+/// Base seed; kept constant so CI failures are reproducible. Individual
+/// cases derive from `(BASE_SEED, case_index)`.
+pub const BASE_SEED: u64 = 0x5EED_CAFE_F00D_0001;
+
+/// Run `f` on `cases` random cases. `f` gets a fresh seeded RNG per
+/// case and returns `Err(reason)` to fail the property.
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Pcg32::new(BASE_SEED ^ case, case);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property `{name}` failed on case {case} (replay: prop::replay(\"{name}\", {case}, f)): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by its index.
+pub fn replay<F>(name: &str, case: u64, mut f: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    let mut rng = Pcg32::new(BASE_SEED ^ case, case);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property `{name}` case {case}: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 20, |rng| {
+            let x = rng.f32();
+            if (0.0..1.0).contains(&x) { Ok(()) } else { Err(format!("{x}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails`")]
+    fn failing_property_panics_with_name() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first = Vec::new();
+        check("collect", 5, |rng| {
+            first.push(rng.next_u32());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("collect", 5, |rng| {
+            second.push(rng.next_u32());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,233 @@
+//! Deterministic PRNG for the whole L3 layer.
+//!
+//! PCG32 (O'Neill 2014) — small, fast, seedable, reproducible across
+//! platforms. Every stochastic component (data synthesis, shuffling,
+//! noise injection, selection tie-breaking, property tests) takes a
+//! `Pcg32` so experiment runs are exactly replayable from `(seed,
+//! stream)` pairs.
+
+/// PCG-XSH-RR 64/32 generator.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+    /// Cached second output of the Box-Muller transform.
+    gauss_spare: Option<f32>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Create a generator from a seed and a stream id; distinct streams
+    /// are independent sequences for the same seed.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1, gauss_spare: None };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent child generator (for per-worker streams).
+    pub fn fork(&mut self, tag: u64) -> Pcg32 {
+        Pcg32::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15), tag)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Uniform integer in [0, n). n must be > 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's nearly-divisionless bounded sampling.
+        let n = n as u64;
+        let mut x = self.next_u32() as u64;
+        let mut m = x * n;
+        let mut l = m as u32 as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u32() as u64;
+                m = x * n;
+                l = m as u32 as u64;
+            }
+        }
+        (m >> 32) as usize
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn gauss(&mut self) -> f32 {
+        if let Some(s) = self.gauss_spare.take() {
+            return s;
+        }
+        loop {
+            let u = self.f32().max(f32::MIN_POSITIVE);
+            let v = self.f32();
+            let r = (-2.0 * u.ln()).sqrt();
+            let (s, c) = (2.0 * std::f32::consts::PI * v).sin_cos();
+            if r.is_finite() {
+                self.gauss_spare = Some(r * s);
+                return r * c;
+            }
+        }
+    }
+
+    /// Bernoulli(p).
+    pub fn bernoulli(&mut self, p: f32) -> bool {
+        self.f32() < p
+    }
+
+    /// Fisher-Yates in-place shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.below(i + 1));
+        }
+    }
+
+    /// k distinct indices from [0, n) (partial Fisher-Yates).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Weighted sampling of k distinct indices (Efraimidis-Spirakis
+    /// exponential-keys method); weights must be non-negative.
+    pub fn choose_k_weighted(&mut self, weights: &[f32], k: usize) -> Vec<usize> {
+        assert!(k <= weights.len());
+        let mut keyed: Vec<(f32, usize)> = weights
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| {
+                let u = self.f32().max(f32::MIN_POSITIVE);
+                let key = if w > 0.0 { u.ln() / w } else { f32::NEG_INFINITY };
+                (key, i)
+            })
+            .collect();
+        keyed.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+        keyed.into_iter().take(k).map(|(_, i)| i).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg32::new(42, 1);
+        let mut b = Pcg32::new(42, 1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+        let mut c = Pcg32::new(43, 1);
+        assert_ne!(a.next_u32(), c.next_u32());
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg32::new(42, 1);
+        let mut b = Pcg32::new(42, 2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Pcg32::new(0, 0);
+        for _ in 0..10_000 {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Pcg32::new(1, 0);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[r.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Pcg32::new(5, 0);
+        let n = 50_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.gauss()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::new(9, 0);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut r = Pcg32::new(2, 0);
+        let k = r.choose_k(50, 10);
+        assert_eq!(k.len(), 10);
+        let mut s = k.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 10);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn weighted_choice_prefers_heavy() {
+        let mut r = Pcg32::new(3, 0);
+        let mut w = vec![0.01f32; 100];
+        w[7] = 100.0;
+        let mut hits = 0;
+        for _ in 0..200 {
+            if r.choose_k_weighted(&w, 5).contains(&7) {
+                hits += 1;
+            }
+        }
+        assert!(hits > 190, "heavy item picked only {hits}/200");
+    }
+
+    #[test]
+    fn zero_weight_never_chosen_when_alternatives() {
+        let mut r = Pcg32::new(4, 0);
+        let w = vec![0.0f32, 1.0, 1.0, 1.0];
+        for _ in 0..100 {
+            assert!(!r.choose_k_weighted(&w, 3).contains(&0));
+        }
+    }
+}

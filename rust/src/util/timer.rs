@@ -1,0 +1,102 @@
+//! Timing + lightweight latency histograms for the perf harness.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+    pub fn lap(&mut self) -> Duration {
+        let d = self.start.elapsed();
+        self.start = Instant::now();
+        d
+    }
+}
+
+/// Reservoir of raw sample durations with percentile queries; good
+/// enough for bench-scale sample counts (<1e6).
+#[derive(Default, Clone)]
+pub struct LatencyHist {
+    samples_us: Vec<f32>,
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_secs_f64() as f32 * 1e6);
+    }
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+    pub fn mean_us(&self) -> f32 {
+        crate::util::math::mean(&self.samples_us)
+    }
+    pub fn percentile_us(&self, q: f64) -> f32 {
+        crate::util::math::percentile(&self.samples_us, q)
+    }
+    /// "mean=12.3us p50=11us p95=20us p99=31us n=1000"
+    pub fn summary(&self) -> String {
+        format!(
+            "mean={:.1}us p50={:.1}us p95={:.1}us p99={:.1}us n={}",
+            self.mean_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(95.0),
+            self.percentile_us(99.0),
+            self.len()
+        )
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let sw = Stopwatch::start();
+    let out = f();
+    (out, sw.elapsed_s())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_advances() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed_s() >= 0.004);
+    }
+
+    #[test]
+    fn hist_percentiles_ordered() {
+        let mut h = LatencyHist::new();
+        for i in 1..=100 {
+            h.record(Duration::from_micros(i));
+        }
+        assert!(h.percentile_us(50.0) <= h.percentile_us(95.0));
+        assert!(h.percentile_us(95.0) <= h.percentile_us(99.0));
+        assert_eq!(h.len(), 100);
+        assert!(h.summary().contains("n=100"));
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

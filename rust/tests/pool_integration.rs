@@ -1,0 +1,99 @@
+//! Integration: the parallel scoring pool must agree exactly with the
+//! single-threaded runtime and survive odd batch shapes + backpressure.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use rho::runtime::artifact::{default_dir, Manifest};
+use rho::runtime::handle::{cpu_client, ModelRuntime};
+use rho::runtime::pool::{PoolConfig, ScoringPool};
+
+fn setup() -> Option<(Manifest, Rc<xla::PjRtClient>)> {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some((Manifest::load(&dir).unwrap(), cpu_client().unwrap()))
+}
+
+fn mk_pool(manifest: &Manifest, workers: usize) -> ScoringPool {
+    let fwd = manifest.find("mlp_small", 64, 10, "fwd_b320").unwrap();
+    let sel = manifest.find("mlp_small", 64, 10, "select_b320").unwrap();
+    ScoringPool::new(fwd, sel, &PoolConfig { workers, queue_depth: 4 }).unwrap()
+}
+
+fn rand_batch(n: usize, seed: u64) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+    let mut rng = rho::util::rng::Pcg32::new(seed, 1);
+    let xs: Vec<f32> = (0..n * 64).map(|_| rng.gauss()).collect();
+    let ys: Vec<i32> = (0..n).map(|_| rng.below(10) as i32).collect();
+    let il: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0).collect();
+    (xs, ys, il)
+}
+
+#[test]
+fn pool_fwd_matches_single_thread() {
+    let Some((manifest, client)) = setup() else { return };
+    let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_small", 64, 10).unwrap();
+    let st = rt.init(1).unwrap();
+    let theta = Arc::new(st.theta.clone());
+    let pool = mk_pool(&manifest, 2);
+    for n in [320usize, 1000, 33] {
+        let (xs, ys, _) = rand_batch(n, n as u64);
+        let a = pool.fwd(&theta, &xs, &ys).unwrap();
+        let b = rt.fwd(&st.theta, &xs, &ys).unwrap();
+        assert_eq!(a.loss.len(), n);
+        for i in 0..n {
+            assert!((a.loss[i] - b.loss[i]).abs() < 1e-5, "n={n} i={i}");
+            assert!((a.gnorm[i] - b.gnorm[i]).abs() < 1e-4, "n={n} i={i}");
+        }
+    }
+}
+
+#[test]
+fn pool_rho_matches_single_thread() {
+    let Some((manifest, client)) = setup() else { return };
+    let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_small", 64, 10).unwrap();
+    let st = rt.init(2).unwrap();
+    let theta = Arc::new(st.theta.clone());
+    let pool = mk_pool(&manifest, 3);
+    let (xs, ys, il) = rand_batch(737, 9);
+    let a = pool.rho(&theta, &xs, &ys, &il).unwrap();
+    let b = rt.select_rho(&st.theta, &xs, &ys, &il).unwrap();
+    assert_eq!(a.len(), 737);
+    for i in 0..737 {
+        assert!((a[i] - b[i]).abs() < 1e-5, "i={i}: {} vs {}", a[i], b[i]);
+    }
+}
+
+#[test]
+fn pool_distributes_load_across_workers() {
+    let Some((manifest, client)) = setup() else { return };
+    let _ = client;
+    let pool = mk_pool(&manifest, 2);
+    let st_theta = {
+        let rt = ModelRuntime::load(cpu_client().unwrap(), &manifest, "mlp_small", 64, 10).unwrap();
+        Arc::new(rt.init(3).unwrap().theta)
+    };
+    // 20 chunks of work
+    let (xs, ys, il) = rand_batch(320 * 20, 5);
+    pool.rho(&st_theta, &xs, &ys, &il).unwrap();
+    let loads = pool.worker_loads();
+    assert_eq!(loads.iter().sum::<usize>(), 20);
+    assert!(loads.iter().all(|&l| l > 0), "a worker starved: {loads:?}");
+}
+
+#[test]
+fn pool_rejects_bad_shapes() {
+    let Some((manifest, _client)) = setup() else { return };
+    let pool = mk_pool(&manifest, 1);
+    let theta = Arc::new(vec![0.0f32; 3]); // wrong param count
+    let (xs, ys, il) = rand_batch(32, 7);
+    assert!(pool.rho(&theta, &xs, &ys, &il).is_err());
+    let theta_ok = Arc::new(vec![0.0f32; pool_param_count(&manifest)]);
+    assert!(pool.rho(&theta_ok, &xs, &ys[..10], &il).is_err(), "mismatched ys len accepted");
+}
+
+fn pool_param_count(manifest: &Manifest) -> usize {
+    manifest.find("mlp_small", 64, 10, "init").unwrap().param_count
+}

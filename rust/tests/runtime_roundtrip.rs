@@ -1,0 +1,180 @@
+//! Integration: the full python-AOT -> rust-load -> execute path.
+//! Requires `make artifacts` (skips gracefully when absent).
+
+use std::rc::Rc;
+
+use rho::runtime::artifact::{default_dir, Manifest};
+use rho::runtime::handle::{cpu_client, ModelRuntime};
+use rho::runtime::params::TrainState;
+
+fn setup() -> Option<(Manifest, Rc<xla::PjRtClient>)> {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some((Manifest::load(&dir).unwrap(), cpu_client().unwrap()))
+}
+
+fn small_rt(manifest: &Manifest, client: &Rc<xla::PjRtClient>) -> ModelRuntime {
+    ModelRuntime::load(Rc::clone(client), manifest, "mlp_small", 64, 10).unwrap()
+}
+
+fn rand_batch(n: usize, d: usize, c: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = rho::util::rng::Pcg32::new(seed, 1);
+    let xs: Vec<f32> = (0..n * d).map(|_| rng.gauss()).collect();
+    let ys: Vec<i32> = (0..n).map(|_| rng.below(c) as i32).collect();
+    (xs, ys)
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    let Some((manifest, client)) = setup() else { return };
+    let rt = small_rt(&manifest, &client);
+    let a = rt.init(7).unwrap();
+    let b = rt.init(7).unwrap();
+    let c = rt.init(8).unwrap();
+    assert_eq!(a.theta, b.theta);
+    assert_ne!(a.theta, c.theta);
+    assert_eq!(a.theta.len(), rt.param_count);
+    assert!(a.theta.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn select_rho_equals_fwd_loss_minus_il() {
+    // THE cross-artifact consistency check: the fused Pallas select
+    // kernel must agree with fwd losses minus IL computed in Rust.
+    let Some((manifest, client)) = setup() else { return };
+    let rt = small_rt(&manifest, &client);
+    let st = rt.init(1).unwrap();
+    let (xs, ys) = rand_batch(320, 64, 10, 11);
+    let mut rng = rho::util::rng::Pcg32::new(5, 2);
+    let il: Vec<f32> = (0..320).map(|_| rng.f32() * 3.0).collect();
+    let fwd = rt.fwd(&st.theta, &xs, &ys).unwrap();
+    let rho = rt.select_rho(&st.theta, &xs, &ys, &il).unwrap();
+    for i in 0..320 {
+        let want = fwd.loss[i] - il[i];
+        assert!(
+            (rho[i] - want).abs() < 1e-4,
+            "i={i}: fused {} vs fwd-il {}",
+            rho[i],
+            want
+        );
+    }
+}
+
+#[test]
+fn chunk_pad_matches_exact_batch() {
+    // fwd on a 100-point batch (chunk+pad) must equal the first 100
+    // entries of a full 320 batch containing the same rows.
+    let Some((manifest, client)) = setup() else { return };
+    let rt = small_rt(&manifest, &client);
+    let st = rt.init(2).unwrap();
+    let (xs, ys) = rand_batch(320, 64, 10, 13);
+    let full = rt.fwd(&st.theta, &xs, &ys).unwrap();
+    let part = rt.fwd(&st.theta, &xs[..100 * 64], &ys[..100]).unwrap();
+    assert_eq!(part.loss.len(), 100);
+    for i in 0..100 {
+        assert!((part.loss[i] - full.loss[i]).abs() < 1e-5, "loss {i}");
+        assert_eq!(part.correct[i], full.correct[i], "correct {i}");
+    }
+    // and a >320 batch spanning two chunks
+    let (xs2, ys2) = rand_batch(500, 64, 10, 17);
+    let big = rt.fwd(&st.theta, &xs2, &ys2).unwrap();
+    assert_eq!(big.loss.len(), 500);
+    assert!(big.loss.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn train_step_descends_and_updates_state() {
+    let Some((manifest, client)) = setup() else { return };
+    let rt = small_rt(&manifest, &client);
+    let mut st = rt.init(3).unwrap();
+    let (xs, ys) = rand_batch(32, 64, 10, 19);
+    let w = vec![1.0f32; 32];
+    let first = rt.train_step(&mut st, &xs, &ys, &w, 1e-3, 0.0).unwrap();
+    assert_eq!(st.step, 1);
+    let mut last = first;
+    for _ in 0..60 {
+        last = rt.train_step(&mut st, &xs, &ys, &w, 1e-3, 0.0).unwrap();
+    }
+    assert!(last < first * 0.5, "loss {first} -> {last} did not halve");
+    assert!(st.m.iter().any(|&x| x != 0.0), "adam moment never updated");
+}
+
+#[test]
+fn short_train_batch_is_padded_equivalently() {
+    // A 20-point batch must produce the same gradient step as the same
+    // 20 points — regardless of artifact padding.
+    let Some((manifest, client)) = setup() else { return };
+    let rt = small_rt(&manifest, &client);
+    let (xs, ys) = rand_batch(20, 64, 10, 23);
+    let w = vec![1.0f32; 20];
+    let mut a = rt.init(4).unwrap();
+    let mut b = rt.init(4).unwrap();
+    rt.train_step(&mut a, &xs, &ys, &w, 1e-3, 0.0).unwrap();
+    rt.train_step(&mut b, &xs, &ys, &w, 1e-3, 0.0).unwrap();
+    assert_eq!(a.theta, b.theta, "padding is non-deterministic");
+    // and differs from a *different* 20-point batch
+    let (xs2, ys2) = rand_batch(20, 64, 10, 29);
+    let mut c = rt.init(4).unwrap();
+    rt.train_step(&mut c, &xs2, &ys2, &w, 1e-3, 0.0).unwrap();
+    assert_ne!(a.theta, c.theta);
+}
+
+#[test]
+fn checkpoint_roundtrip_resumes_identically() {
+    let Some((manifest, client)) = setup() else { return };
+    let rt = small_rt(&manifest, &client);
+    let mut st = rt.init(5).unwrap();
+    let (xs, ys) = rand_batch(32, 64, 10, 31);
+    let w = vec![1.0f32; 32];
+    for _ in 0..3 {
+        rt.train_step(&mut st, &xs, &ys, &w, 1e-3, 1e-2).unwrap();
+    }
+    let dir = std::env::temp_dir().join(format!("rho-int-{}", std::process::id()));
+    let path = dir.join("ckpt.bin");
+    st.save(&path).unwrap();
+    let mut resumed = TrainState::load(&path).unwrap();
+    assert_eq!(resumed, st);
+    // one more identical step from both
+    rt.train_step(&mut st, &xs, &ys, &w, 1e-3, 1e-2).unwrap();
+    rt.train_step(&mut resumed, &xs, &ys, &w, 1e-3, 1e-2).unwrap();
+    assert_eq!(resumed.theta, st.theta);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mcdropout_stats_behave() {
+    let Some((manifest, client)) = setup() else { return };
+    let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_base", 64, 10).unwrap();
+    assert!(rt.has_mcdropout());
+    let st = rt.init(6).unwrap();
+    let (xs, ys) = rand_batch(64, 64, 10, 37);
+    let a = rt.mcdropout(&st.theta, &xs, &ys, 1).unwrap();
+    let b = rt.mcdropout(&st.theta, &xs, &ys, 1).unwrap();
+    let c = rt.mcdropout(&st.theta, &xs, &ys, 2).unwrap();
+    assert_eq!(a.bald, b.bald, "mcdropout not seed-deterministic");
+    assert_ne!(a.bald, c.bald, "mcdropout ignores seed");
+    assert!(a.bald.iter().all(|&x| x > -1e-4), "BALD must be >= 0");
+}
+
+#[test]
+fn eval_on_matches_manual_mean() {
+    let Some((manifest, client)) = setup() else { return };
+    let rt = small_rt(&manifest, &client);
+    let st = rt.init(9).unwrap();
+    let gen = rho::data::synth::Generator::new(
+        rho::data::synth::SynthSpec::vector(64, 10, 2.0),
+        42,
+    );
+    let mut rng = rho::util::rng::Pcg32::new(3, 3);
+    let ds = gen.sample(777, &mut rng); // odd size: exercises padding
+    let ev = rt.eval_on(&st.theta, &ds).unwrap();
+    assert_eq!(ev.n, 777);
+    let idx: Vec<u32> = (0..777).collect();
+    let (xs, ys) = ds.gather(&idx);
+    let fwd = rt.fwd(&st.theta, &xs, &ys).unwrap();
+    let acc = rho::util::math::mean(&fwd.correct);
+    assert!((ev.accuracy - acc).abs() < 1e-6);
+}

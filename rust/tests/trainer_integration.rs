@@ -1,0 +1,169 @@
+//! Integration: the Algorithm-1 trainer end-to-end on small synthetic
+//! bundles — learning happens, RHO-LOSS beats uniform under noise, and
+//! the pipelined trainer reproduces the synchronous curve exactly.
+
+use rho::config::RunConfig;
+use rho::coordinator::pipeline::run_pipelined;
+use rho::coordinator::trainer::Trainer;
+use rho::experiments::common::Lab;
+use rho::experiments::ExpCtx;
+use rho::runtime::pool::{PoolConfig, ScoringPool};
+use rho::selection::Method;
+
+fn lab() -> Option<Lab> {
+    let ctx = ExpCtx::new(0.25);
+    if !ctx.artifacts.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Lab::new(&ctx).unwrap())
+}
+
+fn base_cfg(method: Method) -> RunConfig {
+    RunConfig {
+        dataset: "qmnist".into(),
+        arch: "mlp_small".into(),
+        il_arch: "logreg".into(),
+        method,
+        epochs: 8,
+        il_epochs: 6,
+        seed: 1,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn uniform_training_learns() {
+    let Some(lab) = lab() else { return };
+    let cfg = base_cfg(Method::Uniform);
+    let bundle = lab.bundle(&cfg.dataset);
+    let res = lab.run_one(&cfg, &bundle).unwrap();
+    assert!(
+        res.curve.final_accuracy() > 0.5,
+        "uniform failed to learn: {}",
+        res.curve.final_accuracy()
+    );
+    assert_eq!(res.curve.points.len(), 8, "one eval per epoch expected");
+    assert!(res.steps > 0);
+}
+
+#[test]
+fn every_method_runs_one_epoch() {
+    let Some(lab) = lab() else { return };
+    for &method in Method::ALL {
+        let mut cfg = base_cfg(method);
+        cfg.epochs = 1;
+        // mcdropout methods need an arch with the artifact
+        if method.needs_mcdropout() {
+            cfg.arch = "mlp_base".into();
+        }
+        let bundle = lab.bundle(&cfg.dataset);
+        let res = lab
+            .run_one(&cfg, &bundle)
+            .unwrap_or_else(|e| panic!("method {} failed: {e:#}", method.name()));
+        assert!(res.curve.final_accuracy() > 0.05, "method {}", method.name());
+    }
+}
+
+#[test]
+fn rho_beats_uniform_under_label_noise() {
+    let Some(lab) = lab() else { return };
+    let bundle = std::rc::Rc::new(rho::data::catalog::with_uniform_noise(
+        (*lab.bundle("qmnist")).clone(),
+        0.2,
+        7,
+    ));
+    let mut uni_cfg = base_cfg(Method::Uniform);
+    uni_cfg.epochs = 10;
+    let mut rho_cfg = base_cfg(Method::RhoLoss);
+    rho_cfg.epochs = 10;
+    rho_cfg.il_arch = "mlp_small".into();
+    rho_cfg.il_epochs = 6;
+    let uni = lab.run_one(&uni_cfg, &bundle).unwrap();
+    let rho = lab.run_one(&rho_cfg, &bundle).unwrap();
+    assert!(
+        rho.curve.final_accuracy() >= uni.curve.final_accuracy() - 0.02,
+        "rho {} clearly below uniform {} on noisy data",
+        rho.curve.final_accuracy(),
+        uni.curve.final_accuracy()
+    );
+}
+
+#[test]
+fn tracker_sees_ground_truth_noise() {
+    let Some(lab) = lab() else { return };
+    let bundle = std::rc::Rc::new(rho::data::catalog::with_uniform_noise(
+        (*lab.bundle("qmnist")).clone(),
+        0.15,
+        9,
+    ));
+    let mut cfg = base_cfg(Method::TrainLoss);
+    cfg.track_props = true;
+    cfg.epochs = 4;
+    let res = lab.run_one(&cfg, &bundle).unwrap();
+    // train-loss selection must over-select corrupted points
+    assert!(
+        res.tracker.frac_noisy() > 0.15,
+        "train-loss selected only {:.3} noisy (base rate 0.15)",
+        res.tracker.frac_noisy()
+    );
+}
+
+#[test]
+fn pipelined_matches_synchronous_exactly() {
+    let Some(lab) = lab() else { return };
+    let mut cfg = base_cfg(Method::RhoLoss);
+    cfg.il_arch = "mlp_small".into();
+    cfg.epochs = 3;
+    let bundle = lab.bundle(&cfg.dataset);
+    let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+    let il = lab.il_context(&cfg, &bundle).unwrap();
+
+    let sync = Trainer::new(&cfg, &target).run(&bundle, Some(&il)).unwrap();
+
+    let manifest = &lab.manifest;
+    let fwd = manifest.find(&cfg.arch, 64, 10, "fwd_b320").unwrap();
+    let sel = manifest.find(&cfg.arch, 64, 10, "select_b320").unwrap();
+    let pool = ScoringPool::new(fwd, sel, &PoolConfig { workers: 2, queue_depth: 4 }).unwrap();
+    let (pipe_curve, sps) = run_pipelined(&cfg, &target, &pool, &bundle, &il, 3).unwrap();
+
+    assert!(sps > 0.0);
+    assert_eq!(sync.curve.points.len(), pipe_curve.points.len());
+    for (a, b) in sync.curve.points.iter().zip(&pipe_curve.points) {
+        assert_eq!(a.step, b.step);
+        assert!(
+            (a.accuracy - b.accuracy).abs() < 1e-6,
+            "pipeline diverged from sync at step {}: {} vs {}",
+            a.step,
+            a.accuracy,
+            b.accuracy
+        );
+    }
+}
+
+#[test]
+fn svp_coreset_filters_and_trains() {
+    let Some(lab) = lab() else { return };
+    let mut cfg = base_cfg(Method::Svp);
+    cfg.il_arch = "mlp_small".into();
+    cfg.svp_frac = 0.5;
+    cfg.epochs = 3;
+    let bundle = lab.bundle(&cfg.dataset);
+    let res = lab.run_one(&cfg, &bundle).unwrap();
+    // core-set halves the train set -> steps per epoch halve
+    let full_steps = (bundle.train.len().div_ceil(cfg.big_batch())) as u64 * 3;
+    assert!(res.steps <= full_steps, "SVP did not filter: {} steps", res.steps);
+}
+
+#[test]
+fn online_il_reports_il_accuracy() {
+    let Some(lab) = lab() else { return };
+    let mut cfg = base_cfg(Method::RhoLoss);
+    cfg.il_arch = "mlp_small".into();
+    cfg.online_il = true;
+    cfg.epochs = 2;
+    let bundle = lab.bundle(&cfg.dataset);
+    let res = lab.run_one(&cfg, &bundle).unwrap();
+    let acc = res.il_final_accuracy.expect("online_il must report IL accuracy");
+    assert!((0.0..=1.0).contains(&acc));
+}
