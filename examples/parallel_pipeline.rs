@@ -12,7 +12,7 @@
 use anyhow::Result;
 
 use rho::config::RunConfig;
-use rho::coordinator::pipeline::run_pipelined;
+use rho::coordinator::engine::run_pipelined;
 use rho::coordinator::trainer::Trainer;
 use rho::experiments::common::Lab;
 use rho::experiments::ExpCtx;
@@ -53,8 +53,8 @@ fn main() -> Result<()> {
         let (d, c) = rho::data::catalog::dims_for(&cfg.dataset);
         let fwd = manifest.find(&cfg.arch, d, c, &format!("fwd_b{}", manifest.select_batch))?;
         let sel = manifest.find(&cfg.arch, d, c, &format!("select_b{}", manifest.select_batch))?;
-        let pool = ScoringPool::new(fwd, sel, &PoolConfig { workers, queue_depth: 16 })?;
-        let (curve, sps) = run_pipelined(&cfg, &target, &pool, &bundle, &il, 4)?;
+        let pool = ScoringPool::new(fwd, sel, None, &PoolConfig { workers, queue_depth: 16 })?;
+        let (curve, sps) = run_pipelined(&cfg, &target, &pool, &bundle, Some(&il), 4)?;
         println!(
             "pipelined w={workers}: {:>6.1} steps/s ({:+.0}% vs sync, final acc {:.3}, loads {:?})",
             sps,

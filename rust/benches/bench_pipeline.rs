@@ -1,12 +1,14 @@
-//! End-to-end pipeline throughput (steps/sec): synchronous Algorithm-1
-//! trainer vs the streaming pipelined trainer at 1/2/4 scoring
-//! workers. This regenerates the paper's §3 parallelized-selection
-//! claim at bench scale and is the primary L3 perf target
+//! End-to-end engine throughput (steps/sec): the unified streaming
+//! engine across selection methods (uniform / train_loss / rho_loss)
+//! and pool sizes (workers ∈ {1, 4}), against each method's
+//! synchronous inline reference. This regenerates the paper's §3
+//! parallelized-selection claim at bench scale — now for every
+//! method, not just fused RHO — and is the primary L3 perf target
 //! (EXPERIMENTS.md §Perf).
 
 use rho::config::RunConfig;
-use rho::coordinator::pipeline::run_pipelined;
-use rho::coordinator::trainer::Trainer;
+use rho::coordinator::engine::run_pipelined;
+use rho::coordinator::trainer::{IlContext, Trainer};
 use rho::experiments::common::Lab;
 use rho::experiments::ExpCtx;
 use rho::runtime::pool::{PoolConfig, ScoringPool};
@@ -21,7 +23,7 @@ fn main() {
         return;
     }
     let lab = Lab::new(&ctx).unwrap();
-    let cfg = RunConfig {
+    let base = RunConfig {
         dataset: "cifar10".into(),
         arch: "mlp_base".into(),
         il_arch: "mlp_small".into(),
@@ -30,38 +32,49 @@ fn main() {
         il_epochs: 4,
         ..Default::default()
     };
-    let bundle = lab.bundle(&cfg.dataset);
-    let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
-    let il = lab.il_context(&cfg, &bundle).unwrap();
+    let bundle = lab.bundle(&base.dataset);
+    let target = lab.runtime(&base.arch, &base.dataset).unwrap();
+    let (d, c) = rho::data::catalog::dims_for(&base.dataset);
+    let fwd = lab.manifest.find(&base.arch, d, c, "fwd_b320").unwrap();
+    let sel = lab.manifest.find(&base.arch, d, c, "select_b320").unwrap();
 
-    let sw = Stopwatch::start();
-    let sync = Trainer::new(&cfg, &target).run(&bundle, Some(&il)).unwrap();
-    let sync_sps = sync.steps as f64 / sw.elapsed_s();
-    println!("sync trainer:        {sync_sps:>7.1} steps/s");
+    let mut sync_by_method = std::collections::HashMap::new();
+    for method in [Method::Uniform, Method::TrainLoss, Method::RhoLoss] {
+        let mut cfg = base.clone();
+        cfg.method = method;
+        let il: Option<std::rc::Rc<IlContext>> = if method.needs_il() {
+            Some(lab.il_context(&cfg, &bundle).unwrap())
+        } else {
+            None
+        };
+        let il_ref = il.as_deref();
 
-    let (d, c) = rho::data::catalog::dims_for(&cfg.dataset);
-    let fwd = lab.manifest.find(&cfg.arch, d, c, "fwd_b320").unwrap();
-    let sel = lab.manifest.find(&cfg.arch, d, c, "select_b320").unwrap();
-    for workers in [1usize, 2, 4] {
-        let pool =
-            ScoringPool::new(fwd, sel, &PoolConfig { workers, queue_depth: 16 }).unwrap();
-        let (_, sps) = run_pipelined(&cfg, &target, &pool, &bundle, &il, 4).unwrap();
-        println!(
-            "pipelined workers={workers}: {sps:>7.1} steps/s ({:+.0}% vs sync)",
-            (sps / sync_sps - 1.0) * 100.0
-        );
+        let sw = Stopwatch::start();
+        let sync = Trainer::new(&cfg, &target).run(&bundle, il_ref).unwrap();
+        let sync_sps = sync.steps as f64 / sw.elapsed_s();
+        sync_by_method.insert(method, sync_sps);
+        println!("{:<12} sync (inline):      {sync_sps:>7.1} steps/s", method.name());
+
+        for workers in [1usize, 4] {
+            let pool =
+                ScoringPool::new(fwd, sel, None, &PoolConfig { workers, queue_depth: 16 })
+                    .unwrap();
+            let (_, sps) = run_pipelined(&cfg, &target, &pool, &bundle, il_ref, 4).unwrap();
+            println!(
+                "{:<12} pool workers={workers}:    {sps:>7.1} steps/s ({:+.0}% vs sync)",
+                method.name(),
+                (sps / sync_sps - 1.0) * 100.0
+            );
+        }
     }
 
-    // Uniform trainer for the selection-overhead ratio (paper §3: the
-    // selection fwd pass costs n_B/(3 n_b) of a train step in theory).
-    let mut ucfg = cfg.clone();
-    ucfg.method = Method::Uniform;
-    let sw = Stopwatch::start();
-    let uni = Trainer::new(&ucfg, &target).run(&bundle, None).unwrap();
-    let uni_sps = uni.steps as f64 / sw.elapsed_s();
+    // Selection-overhead ratio (paper §3: the selection fwd pass costs
+    // n_B/(3 n_b) of a train step in theory), from the sync runs above.
+    let uni_sps = sync_by_method[&Method::Uniform];
+    let rho_sps = sync_by_method[&Method::RhoLoss];
     println!(
-        "uniform trainer:     {uni_sps:>7.1} steps/s (selection overhead {:.2}x; paper theory ~{:.2}x fwd-only)",
-        uni_sps / sync_sps,
+        "uniform/rho sync ratio: {:.2}x (paper theory ~{:.2}x fwd-only)",
+        uni_sps / rho_sps,
         1.0 + 320.0 / (3.0 * 32.0)
     );
 }

@@ -6,7 +6,6 @@
 //! scaling across workers. Prints mean / p50 / p95 latency per op.
 
 use std::rc::Rc;
-use std::sync::Arc;
 use std::time::Instant;
 
 use rho::data::synth::{Generator, SynthSpec};
@@ -89,14 +88,14 @@ fn main() {
     let fwd_meta = manifest.find("mlp_base", 256, 10, "fwd_b320").unwrap();
     let sel_meta = manifest.find("mlp_base", 256, 10, "select_b320").unwrap();
     let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_base", 256, 10).unwrap();
-    let theta = Arc::new(rt.init(3).unwrap().theta);
+    let theta = rt.init(3).unwrap().theta;
     let big: Vec<u32> = (0..3200u32).map(|i| i % 20_000).collect();
     let (bxs, bys) = ds.gather(&big);
     let bil = vec![0.5f32; 3200];
     let mut base_mean = 0.0f32;
     for workers in [1usize, 2, 4] {
         let pool =
-            ScoringPool::new(fwd_meta, sel_meta, &PoolConfig { workers, queue_depth: 16 })
+            ScoringPool::new(fwd_meta, sel_meta, None, &PoolConfig { workers, queue_depth: 16 })
                 .unwrap();
         let mut h = LatencyHist::new();
         for _ in 0..20 {

@@ -42,8 +42,16 @@ pub struct RunConfig {
     pub il_epochs: usize,
     /// SVP core-set fraction of the train set.
     pub svp_frac: f32,
-    /// Scoring-pool workers (0 = score on the main thread).
+    /// Scoring-pool workers (0 = score on the main thread; when a pool
+    /// is built, 0 means one worker per core — see
+    /// `PoolConfig::from_run`).
     pub workers: usize,
+    /// Max in-flight scoring chunks before pool dispatch blocks
+    /// (backpressure).
+    pub queue_depth: usize,
+    /// Candidate batches the engine's producer buffers ahead of the
+    /// trainer (min 1).
+    pub prefetch: usize,
     /// JSONL event-log path ("" = disabled).
     pub events: String,
 }
@@ -70,6 +78,8 @@ impl Default for RunConfig {
             il_epochs: 8,
             svp_frac: 0.5,
             workers: 0,
+            queue_depth: 32,
+            prefetch: 4,
             events: String::new(),
         }
     }
@@ -107,6 +117,8 @@ impl RunConfig {
             "il_epochs" => self.il_epochs = v.parse()?,
             "svp_frac" => self.svp_frac = v.parse()?,
             "workers" => self.workers = v.parse()?,
+            "queue_depth" => self.queue_depth = v.parse()?,
+            "prefetch" => self.prefetch = v.parse()?,
             "events" => self.events = v.into(),
             other => bail!("unknown config key `{other}`"),
         }
@@ -191,7 +203,16 @@ mod tests {
         assert_eq!(c.big_batch(), 320); // n_b/n_B = 0.1
         assert_eq!(c.lr, 1e-3); // PyTorch AdamW defaults
         assert_eq!(c.wd, 1e-2);
+        assert_eq!(c.queue_depth, 32);
+        assert_eq!(c.prefetch, 4);
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn pool_sizing_keys_apply() {
+        let mut c = RunConfig::default();
+        c.apply_pairs(["workers=12", "queue_depth=64", "prefetch=8"]).unwrap();
+        assert_eq!((c.workers, c.queue_depth, c.prefetch), (12, 64, 8));
     }
 
     #[test]

@@ -1,0 +1,326 @@
+//! The unified streaming selection engine: ONE pipelined training
+//! loop for every selection `Method`.
+//!
+//! Shape (paper §3 "simple parallelized selection", generalized): a
+//! producer thread samples candidate batches without replacement and
+//! gathers their rows ahead of the trainer, bounded by a prefetch
+//! channel (backpressure). The consumer walks a
+//! [`selection::provider`](crate::selection::provider) stack that
+//! computes exactly the signals `cfg.method` ranks on — fused RHO
+//! scores, fwd stats, MC-dropout, precomputed or online IL —
+//! optionally fanning out over the parallel [`ScoringPool`], then
+//! selects, trains, evaluates, and tracks. The synchronous
+//! [`Trainer`](super::trainer::Trainer) facade and the deployment
+//! pipeline ([`run_pipelined`]) are thin configurations of this one
+//! engine, so the two shapes can never drift; with one pool worker
+//! the curves are bit-identical to the inline reference (asserted in
+//! `tests/trainer_integration.rs`).
+//!
+//! Hot-path guarantees: candidate batches cross the channel as
+//! `Arc<CandBatch>` and are never cloned; the gradient step slices
+//! selected rows straight out of the candidate buffer the producer
+//! already materialized (no re-gather); and scoring snapshots theta
+//! via the versioned `Arc` in [`TrainState`](crate::runtime::params::TrainState)
+//! (refcount bump, no per-step full-parameter copy).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::sync::mpsc::sync_channel;
+use std::sync::Arc;
+
+use crate::config::RunConfig;
+use crate::coordinator::events::EventLog;
+use crate::coordinator::metrics::{Curve, EvalPoint};
+use crate::coordinator::tracker::SelectionTracker;
+use crate::coordinator::trainer::{IlContext, RunResult};
+use crate::data::loader::EpochSampler;
+use crate::data::{Bundle, Dataset};
+use crate::runtime::handle::ModelRuntime;
+use crate::runtime::pool::ScoringPool;
+use crate::selection::provider::{self, SignalSet, StackSpec, StepCtx};
+use crate::selection::select;
+use crate::util::math::top_k_indices;
+use crate::util::rng::Pcg32;
+use crate::util::timer::Stopwatch;
+
+/// One producer-prepared candidate batch: the sampled dataset indices
+/// plus their gathered rows, shared with the scoring providers by
+/// reference (no per-step index or feature clones).
+pub struct CandBatch {
+    pub step: u64,
+    /// The sampler crossed an epoch boundary serving this batch
+    /// (drives tracker/event epoch accounting on the consumer side).
+    pub rolled: bool,
+    pub idx: Vec<u32>,
+    pub xs: Vec<f32>,
+    pub ys: Vec<i32>,
+}
+
+/// The unified engine. `pool: None` scores inline on the calling
+/// thread (the reference shape); `pool: Some` fans scoring out across
+/// workers (the deployment shape). Either way the loop, curve,
+/// tracker, and event semantics are identical.
+pub struct Engine<'a> {
+    pub cfg: &'a RunConfig,
+    pub target: &'a ModelRuntime,
+    /// IL-model runtime: required by `needs_il` methods when
+    /// `online_il` is set, and by the SVP proxy filter.
+    pub il_rt: Option<&'a ModelRuntime>,
+    /// Optional parallel scoring pool (paper §3).
+    pub pool: Option<&'a ScoringPool>,
+    /// Candidate batches buffered ahead of the consumer (min 1).
+    pub prefetch_depth: usize,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(cfg: &'a RunConfig, target: &'a ModelRuntime) -> Self {
+        Engine { cfg, target, il_rt: None, pool: None, prefetch_depth: cfg.prefetch }
+    }
+
+    /// Run the full Algorithm-1 loop on `bundle.train`, evaluating on
+    /// `bundle.test`. `il` carries the precomputed IL values for
+    /// IL-based methods (and the proxy state for SVP).
+    pub fn run(&self, bundle: &Bundle, il: Option<&IlContext>) -> Result<RunResult> {
+        let cfg = self.cfg;
+        cfg.validate()?;
+        let method = cfg.method;
+        if method.needs_il() && il.is_none() {
+            bail!("method `{}` needs an IlContext", method.name());
+        }
+        if method.needs_mcdropout() && !self.target.has_mcdropout() {
+            bail!("method `{}` needs an mcdropout artifact for `{}`", method.name(), self.target.arch);
+        }
+
+        // --- SVP offline core-set filter (proxy = IL model) ---------
+        let filtered;
+        let mut il_values: Option<&[f32]> = il.map(|c| c.values.as_slice());
+        let train: &Dataset = if method.is_offline_filter() {
+            let proxy_state = il
+                .and_then(|c| c.state.as_ref())
+                .ok_or_else(|| anyhow!("SVP needs a trained proxy (IlContext.state)"))?;
+            let il_rt = self.il_rt.ok_or_else(|| anyhow!("SVP needs il_rt"))?;
+            filtered = svp_coreset(il_rt, &proxy_state.theta, &bundle.train, cfg.svp_frac)?;
+            // IL values are indexed by the original train set; after
+            // filtering they no longer align. SVP doesn't use them.
+            il_values = None;
+            &filtered
+        } else {
+            &bundle.train
+        };
+        let n = train.len();
+        if n == 0 {
+            bail!("empty train set");
+        }
+
+        // --- run state ----------------------------------------------
+        let mut rng = Pcg32::new(cfg.seed, 53);
+        let mut state = self.target.init(cfg.seed as i32)?;
+        let mut il_state = match (cfg.online_il, il) {
+            (true, Some(c)) => Some(
+                c.state
+                    .clone()
+                    .ok_or_else(|| anyhow!("online_il needs IlContext.state"))?,
+            ),
+            _ => None,
+        };
+        if cfg.online_il && self.il_rt.is_none() {
+            bail!("online_il needs il_rt");
+        }
+
+        let big = cfg.big_batch();
+        let steps_per_epoch = n.div_ceil(big) as u64;
+        let eval_every = if cfg.eval_every == 0 { steps_per_epoch } else { cfg.eval_every as u64 };
+        let total_steps = steps_per_epoch * cfg.epochs as u64;
+
+        let mut events = if cfg.events.is_empty() {
+            EventLog::disabled()
+        } else {
+            EventLog::create(std::path::Path::new(&cfg.events))?
+        };
+        events.run_start(&cfg.tag(), n, total_steps);
+        if let Some(ilc) = il {
+            events.il_ready(
+                ilc.values.len(),
+                crate::util::math::mean(&ilc.values),
+                &ilc.values,
+            );
+        }
+
+        // Signal providers: exactly what `method` ranks on, in
+        // dependency order (IL before fused RHO).
+        let mut providers = provider::stack(&StackSpec {
+            method,
+            track_props: cfg.track_props,
+            online_il: il_state.is_some(),
+            target: self.target,
+            il_rt: self.il_rt,
+            pool: self.pool,
+            il_values,
+        })?;
+
+        let mut curve = Curve::default();
+        let mut tracker = SelectionTracker::new();
+        let mut last_acc = 0.0f32;
+        let sw = Stopwatch::start();
+
+        // --- producer + consumer -------------------------------------
+        let seed = cfg.seed;
+        let (tx, rx) = sync_channel::<Arc<CandBatch>>(self.prefetch_depth.max(1));
+        std::thread::scope(|scope| -> Result<()> {
+            let producer = scope.spawn(move || {
+                let mut sampler = EpochSampler::new(n, seed ^ 0xBA7C);
+                for step in 1..=total_steps {
+                    let (idx, rolled) = sampler.take_batch(big);
+                    let (xs, ys) = train.gather(&idx);
+                    if tx.send(Arc::new(CandBatch { step, rolled, idx, xs, ys })).is_err() {
+                        return; // consumer gone
+                    }
+                }
+            });
+
+            let res = (|| -> Result<()> {
+                let (mut sel_xs, mut sel_ys) = (Vec::new(), Vec::new());
+                let mut sig = SignalSet::default();
+                let mut mcd_seed = cfg.seed as i32;
+                let d = self.target.d;
+                for _ in 0..total_steps {
+                    let b = rx.recv().map_err(|_| anyhow!("candidate producer died"))?;
+                    if b.rolled {
+                        tracker.roll_epoch(last_acc);
+                        let e = tracker.epochs.len();
+                        let fnoisy = tracker.noisy_by_epoch().last().copied().unwrap_or(0.0);
+                        events.epoch_roll(e, fnoisy);
+                    }
+                    if method.needs_mcdropout() {
+                        mcd_seed = mcd_seed.wrapping_add(1);
+                    }
+
+                    // scoring signals via the provider stack
+                    sig.clear();
+                    {
+                        let ctx = StepCtx {
+                            step: b.step,
+                            theta: &state.theta,
+                            il_theta: il_state.as_ref().map(|s| &s.theta),
+                            idx: &b.idx,
+                            xs: &b.xs,
+                            ys: &b.ys,
+                            mcd_seed,
+                        };
+                        for p in providers.iter_mut() {
+                            p.provide(&ctx, &mut sig)
+                                .with_context(|| format!("signal provider `{}`", p.name()))?;
+                        }
+                    }
+                    let sel = select(method, &sig.candidates(b.idx.len()), cfg.nb, &mut rng);
+
+                    // property tracking (ground-truth meta of selected points)
+                    if cfg.track_props {
+                        let picked_ds: Vec<u32> = sel.picked.iter().map(|&p| b.idx[p]).collect();
+                        let correct: Option<Vec<f32>> = sig
+                            .correct
+                            .as_ref()
+                            .map(|c| sel.picked.iter().map(|&p| c[p]).collect());
+                        tracker.record(train, &picked_ds, correct.as_deref());
+                    }
+
+                    // gradient step(s): selected rows come straight out
+                    // of the candidate buffer the producer gathered
+                    for (chunk_i, chunk) in sel.picked.chunks(self.target.train_batch).enumerate() {
+                        sel_xs.clear();
+                        sel_ys.clear();
+                        for &p in chunk {
+                            sel_xs.extend_from_slice(&b.xs[p * d..(p + 1) * d]);
+                            sel_ys.push(b.ys[p]);
+                        }
+                        let wbase = chunk_i * self.target.train_batch;
+                        let w = &sel.weights[wbase..wbase + chunk.len()];
+                        self.target.train_step(&mut state, &sel_xs, &sel_ys, w, cfg.lr, cfg.wd)?;
+                        // online IL model update on the same acquired batch
+                        if let (Some(ist), Some(il_rt)) = (&mut il_state, self.il_rt) {
+                            il_rt.train_step(
+                                ist,
+                                &sel_xs,
+                                &sel_ys,
+                                w,
+                                cfg.lr * cfg.il_lr_scale,
+                                cfg.wd,
+                            )?;
+                        }
+                    }
+
+                    if b.step % eval_every == 0 || b.step == total_steps {
+                        let ev = self.target.eval_on(&state.theta, &bundle.test)?;
+                        last_acc = ev.accuracy;
+                        let epoch = b.step as f64 / steps_per_epoch as f64;
+                        events.eval(b.step, epoch, ev.accuracy, ev.mean_loss);
+                        curve.push(EvalPoint {
+                            epoch,
+                            step: b.step,
+                            accuracy: ev.accuracy,
+                            loss: ev.mean_loss,
+                        });
+                    }
+                }
+                Ok(())
+            })();
+            // Unblock a producer stuck on a full channel before joining
+            // (early error paths), then surface producer panics.
+            drop(rx);
+            producer.join().map_err(|_| anyhow!("candidate producer panicked"))?;
+            res
+        })?;
+
+        tracker.roll_epoch(last_acc);
+        events.run_end(last_acc, sw.elapsed_s());
+
+        let il_final_accuracy = match (&il_state, self.il_rt) {
+            (Some(ist), Some(il_rt)) => Some(il_rt.eval_on(&ist.theta, &bundle.test)?.accuracy),
+            _ => None,
+        };
+        Ok(RunResult {
+            curve,
+            tracker,
+            state,
+            steps: total_steps,
+            train_secs: sw.elapsed_s(),
+            il_final_accuracy,
+        })
+    }
+}
+
+/// Deployment-shape entry point: run `cfg.method` through the engine
+/// with an explicit scoring pool and prefetch depth. Returns the
+/// curve plus achieved steps/sec for the perf harness. Covers every
+/// `Method` that needs no IL *runtime* (pass `il: None` for methods
+/// that don't use IL values); for SVP or `online_il` — which need an
+/// `il_rt` — construct an [`Engine`] directly and set its `il_rt`.
+pub fn run_pipelined(
+    cfg: &RunConfig,
+    target: &ModelRuntime,
+    pool: &ScoringPool,
+    bundle: &Bundle,
+    il: Option<&IlContext>,
+    prefetch_depth: usize,
+) -> Result<(Curve, f64)> {
+    let res = Engine { cfg, target, il_rt: None, pool: Some(pool), prefetch_depth }
+        .run(bundle, il)?;
+    let sps = if res.train_secs > 0.0 { res.steps as f64 / res.train_secs } else { 0.0 };
+    Ok((res.curve, sps))
+}
+
+/// SVP core-set: keep the `frac` highest-proxy-entropy points
+/// (Coleman et al. '20, max-entropy variant).
+fn svp_coreset(
+    il_rt: &ModelRuntime,
+    proxy_theta: &[f32],
+    train: &Dataset,
+    frac: f32,
+) -> Result<Dataset> {
+    let idx: Vec<u32> = (0..train.len() as u32).collect();
+    let (xs, ys) = train.gather(&idx);
+    let stats = il_rt.fwd(proxy_theta, &xs, &ys)?;
+    let keep = ((train.len() as f32 * frac).round() as usize).clamp(1, train.len());
+    let top = top_k_indices(&stats.entropy, keep);
+    let keep_idx: Vec<u32> = top.into_iter().map(|i| i as u32).collect();
+    Ok(train.subset(&keep_idx))
+}

@@ -1,16 +1,30 @@
-//! L3 coordinator: Algorithm-1 trainer, IL-model machinery, streaming
-//! pipeline, metrics, and selection-property tracking.
+//! L3 coordinator: the unified streaming selection engine, the
+//! Algorithm-1 `Trainer` facade, IL-model machinery, metrics, and
+//! selection-property tracking.
+//!
+//! Architecture: [`engine::Engine`] is the single training loop. A
+//! producer thread prefetches candidate batches over a bounded
+//! channel while the consumer walks a stack of
+//! [`selection::provider`](crate::selection::provider) signal
+//! providers — fused RHO, fwd stats, MC-dropout, precomputed/online
+//! IL — that compute exactly what the configured `Method` ranks on,
+//! optionally fanned out across the parallel scoring pool. The
+//! synchronous [`Trainer`] and the deployment pipeline
+//! ([`run_pipelined`]) are thin configurations of the same engine, so
+//! every Table-2 baseline and App. G method gets prefetch + pool
+//! parallelism, and reference semantics are bit-identical at one
+//! worker.
 
+pub mod engine;
 pub mod events;
 pub mod il_model;
 pub mod metrics;
-pub mod pipeline;
 pub mod tracker;
 pub mod trainer;
 
+pub use engine::{run_pipelined, CandBatch, Engine};
 pub use events::EventLog;
 pub use il_model::{compute_il, no_holdout_il, train_il, IlModel, IlTrainConfig};
 pub use metrics::{fmt_epochs, mean_curve, Curve, EvalPoint};
-pub use pipeline::run_pipelined;
 pub use tracker::SelectionTracker;
 pub use trainer::{IlContext, RunResult, Trainer};

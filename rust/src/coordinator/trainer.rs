@@ -1,28 +1,26 @@
-//! The Algorithm-1 trainer: the paper's online batch-selection loop.
+//! The Algorithm-1 trainer facade: the paper's online batch-selection
+//! loop, as a thin configuration of the unified streaming engine
+//! (`coordinator::engine`).
 //!
 //! Per step: pre-sample a large candidate batch `B_t` (without
 //! replacement within the epoch), score it with the configured
-//! selection function, train one AdamW step on the top-`n_b` points,
-//! and periodically evaluate on the test set. RHO-LOSS scoring runs
-//! through the fused Pallas `select` artifact (or the scoring pool)
-//! unless property tracking needs the full fwd stats.
+//! selection function's provider stack, train one AdamW step on the
+//! top-`n_b` points, and periodically evaluate on the test set.
+//! `Trainer` exists for call-site ergonomics; all loop semantics live
+//! in [`Engine`]. Attach a [`ScoringPool`] (`with_pool`) for
+//! parallel scoring — the engine's curves are bit-identical with and
+//! without it.
 
-use anyhow::{anyhow, bail, Result};
-use std::sync::Arc;
+use anyhow::Result;
 
 use crate::config::RunConfig;
-use crate::coordinator::events::EventLog;
-use crate::coordinator::metrics::{Curve, EvalPoint};
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::Curve;
 use crate::coordinator::tracker::SelectionTracker;
-use crate::data::loader::EpochSampler;
-use crate::data::{Bundle, Dataset};
+use crate::data::Bundle;
 use crate::runtime::handle::ModelRuntime;
 use crate::runtime::params::TrainState;
 use crate::runtime::pool::ScoringPool;
-use crate::selection::{select, Candidates, Method};
-use crate::util::math::top_k_indices;
-use crate::util::rng::Pcg32;
-use crate::util::timer::Stopwatch;
 
 /// Precomputed irreducible-loss context for IL-based methods.
 pub struct IlContext {
@@ -45,7 +43,7 @@ pub struct RunResult {
     pub il_final_accuracy: Option<f32>,
 }
 
-/// Algorithm-1 training orchestrator.
+/// Algorithm-1 training orchestrator (engine facade).
 pub struct Trainer<'a> {
     pub cfg: &'a RunConfig,
     pub target: &'a ModelRuntime,
@@ -75,216 +73,13 @@ impl<'a> Trainer<'a> {
     /// `bundle.test`. `il` carries the precomputed IL values for
     /// IL-based methods (and the proxy state for SVP).
     pub fn run(&self, bundle: &Bundle, il: Option<&IlContext>) -> Result<RunResult> {
-        let cfg = self.cfg;
-        cfg.validate()?;
-        let method = cfg.method;
-        if method.needs_il() && il.is_none() {
-            bail!("method `{}` needs an IlContext", method.name());
+        Engine {
+            cfg: self.cfg,
+            target: self.target,
+            il_rt: self.il_rt,
+            pool: self.pool,
+            prefetch_depth: self.cfg.prefetch,
         }
-        if method.needs_mcdropout() && !self.target.has_mcdropout() {
-            bail!("method `{}` needs an mcdropout artifact for `{}`", method.name(), self.target.arch);
-        }
-
-        // --- SVP offline core-set filter (proxy = IL model) ---------
-        let filtered;
-        let mut il_values: Option<&[f32]> = il.map(|c| c.values.as_slice());
-        let svp_values;
-        let train: &Dataset = if method.is_offline_filter() {
-            let proxy_state = il
-                .and_then(|c| c.state.as_ref())
-                .ok_or_else(|| anyhow!("SVP needs a trained proxy (IlContext.state)"))?;
-            let il_rt = self.il_rt.ok_or_else(|| anyhow!("SVP needs il_rt"))?;
-            filtered = svp_coreset(il_rt, &proxy_state.theta, &bundle.train, cfg.svp_frac)?;
-            // IL values are indexed by the original train set; after
-            // filtering they no longer align. SVP doesn't use them.
-            svp_values = None;
-            il_values = svp_values;
-            &filtered
-        } else {
-            &bundle.train
-        };
-        let n = train.len();
-        if n == 0 {
-            bail!("empty train set");
-        }
-
-        // --- main loop ------------------------------------------------
-        let mut rng = Pcg32::new(cfg.seed, 53);
-        let mut state = self.target.init(cfg.seed as i32)?;
-        let mut il_state = match (cfg.online_il, il) {
-            (true, Some(c)) => Some(
-                c.state
-                    .clone()
-                    .ok_or_else(|| anyhow!("online_il needs IlContext.state"))?,
-            ),
-            _ => None,
-        };
-        if cfg.online_il && self.il_rt.is_none() {
-            bail!("online_il needs il_rt");
-        }
-
-        let big = cfg.big_batch();
-        let steps_per_epoch = n.div_ceil(big) as u64;
-        let eval_every = if cfg.eval_every == 0 { steps_per_epoch } else { cfg.eval_every as u64 };
-        let total_steps = steps_per_epoch * cfg.epochs as u64;
-
-        let mut events = if cfg.events.is_empty() {
-            EventLog::disabled()
-        } else {
-            EventLog::create(std::path::Path::new(&cfg.events))?
-        };
-        events.run_start(&cfg.tag(), n, total_steps);
-        if let Some(ilc) = il {
-            events.il_ready(
-                ilc.values.len(),
-                crate::util::math::mean(&ilc.values),
-                &ilc.values,
-            );
-        }
-        let mut sampler = EpochSampler::new(n, cfg.seed ^ 0xBA7C);
-        let mut curve = Curve::default();
-        let mut tracker = SelectionTracker::new();
-        let mut last_acc = 0.0f32;
-        let sw = Stopwatch::start();
-
-        let mut idx = Vec::with_capacity(big);
-        let (mut xs, mut ys) = (Vec::new(), Vec::new());
-        let (mut sel_xs, mut sel_ys) = (Vec::new(), Vec::new());
-        let mut cand_il: Vec<f32> = Vec::with_capacity(big);
-        let mut mcd_seed = cfg.seed as i32;
-
-        for step in 1..=total_steps {
-            let rolled = sampler.next_batch(big, &mut idx);
-            if rolled {
-                tracker.roll_epoch(last_acc);
-                let e = tracker.epochs.len();
-                let fnoisy = tracker.noisy_by_epoch().last().copied().unwrap_or(0.0);
-                events.epoch_roll(e, fnoisy);
-            }
-            train.gather_into(&idx, &mut xs, &mut ys);
-
-            // per-candidate IL values
-            let il_slice: Option<&[f32]> = if method.needs_il() {
-                if let (Some(ist), Some(il_rt)) = (&il_state, self.il_rt) {
-                    // online (non-approximated) IL: score candidates
-                    // with the current IL model
-                    cand_il = il_rt.fwd(&ist.theta, &xs, &ys)?.loss;
-                    Some(&cand_il)
-                } else {
-                    let values = il_values.expect("checked above");
-                    cand_il.clear();
-                    cand_il.extend(idx.iter().map(|&i| values[i as usize]));
-                    Some(&cand_il)
-                }
-            } else {
-                None
-            };
-
-            // scoring signals
-            let needs_fwd_stats =
-                (method.needs_fwd() && !matches!(method, Method::RhoLoss)) || cfg.track_props;
-            let fused_rho = matches!(method, Method::RhoLoss) && !needs_fwd_stats;
-            let mut stats = None;
-            let mut rho_scores = None;
-            if fused_rho {
-                let ilv = il_slice.expect("rho has il");
-                rho_scores = Some(match self.pool {
-                    Some(pool) => {
-                        pool.rho(&Arc::new(state.theta.clone()), &xs, &ys, ilv)?
-                    }
-                    None => self.target.select_rho(&state.theta, &xs, &ys, ilv)?,
-                });
-            } else if needs_fwd_stats {
-                stats = Some(match self.pool {
-                    Some(pool) => pool.fwd(&Arc::new(state.theta.clone()), &xs, &ys)?,
-                    None => self.target.fwd(&state.theta, &xs, &ys)?,
-                });
-            }
-            let mcd = if method.needs_mcdropout() {
-                mcd_seed = mcd_seed.wrapping_add(1);
-                Some(self.target.mcdropout(&state.theta, &xs, &ys, mcd_seed)?)
-            } else {
-                None
-            };
-
-            let cands = Candidates {
-                n: idx.len(),
-                loss: stats.as_ref().map(|s| s.loss.as_slice()),
-                gnorm: stats.as_ref().map(|s| s.gnorm.as_slice()),
-                il: il_slice,
-                rho: rho_scores.as_deref(),
-                mcd: mcd.as_ref(),
-            };
-            let sel = select(method, &cands, cfg.nb, &mut rng);
-
-            // property tracking (ground-truth meta of selected points)
-            if cfg.track_props {
-                let picked_ds: Vec<u32> = sel.picked.iter().map(|&p| idx[p]).collect();
-                let correct: Option<Vec<f32>> = stats
-                    .as_ref()
-                    .map(|s| sel.picked.iter().map(|&p| s.correct[p]).collect());
-                tracker.record(train, &picked_ds, correct.as_deref());
-            }
-
-            // gradient step(s) on the selected points
-            let picked_idx: Vec<u32> = sel.picked.iter().map(|&p| idx[p]).collect();
-            for (chunk_i, chunk) in picked_idx.chunks(self.target.train_batch).enumerate() {
-                train.gather_into(chunk, &mut sel_xs, &mut sel_ys);
-                let wbase = chunk_i * self.target.train_batch;
-                let w = &sel.weights[wbase..wbase + chunk.len()];
-                self.target.train_step(&mut state, &sel_xs, &sel_ys, w, cfg.lr, cfg.wd)?;
-                // online IL model update on the same acquired batch
-                if let (Some(ist), Some(il_rt)) = (&mut il_state, self.il_rt) {
-                    il_rt.train_step(
-                        ist,
-                        &sel_xs,
-                        &sel_ys,
-                        w,
-                        cfg.lr * cfg.il_lr_scale,
-                        cfg.wd,
-                    )?;
-                }
-            }
-
-            if step % eval_every == 0 || step == total_steps {
-                let ev = self.target.eval_on(&state.theta, &bundle.test)?;
-                last_acc = ev.accuracy;
-                let epoch = step as f64 / steps_per_epoch as f64;
-                events.eval(step, epoch, ev.accuracy, ev.mean_loss);
-                curve.push(EvalPoint { epoch, step, accuracy: ev.accuracy, loss: ev.mean_loss });
-            }
-        }
-        tracker.roll_epoch(last_acc);
-        events.run_end(last_acc, sw.elapsed_s());
-
-        let il_final_accuracy = match (&il_state, self.il_rt) {
-            (Some(ist), Some(il_rt)) => Some(il_rt.eval_on(&ist.theta, &bundle.test)?.accuracy),
-            _ => None,
-        };
-        Ok(RunResult {
-            curve,
-            tracker,
-            state,
-            steps: total_steps,
-            train_secs: sw.elapsed_s(),
-            il_final_accuracy,
-        })
+        .run(bundle, il)
     }
-}
-
-/// SVP core-set: keep the `frac` highest-proxy-entropy points
-/// (Coleman et al. '20, max-entropy variant).
-fn svp_coreset(
-    il_rt: &ModelRuntime,
-    proxy_theta: &[f32],
-    train: &Dataset,
-    frac: f32,
-) -> Result<Dataset> {
-    let idx: Vec<u32> = (0..train.len() as u32).collect();
-    let (xs, ys) = train.gather(&idx);
-    let stats = il_rt.fwd(proxy_theta, &xs, &ys)?;
-    let keep = ((train.len() as f32 * frac).round() as usize).clamp(1, train.len());
-    let top = top_k_indices(&stats.entropy, keep);
-    let keep_idx: Vec<u32> = top.into_iter().map(|i| i as u32).collect();
-    Ok(train.subset(&keep_idx))
 }

@@ -54,6 +54,15 @@ impl EpochSampler {
         self.pos += take;
         rolled
     }
+
+    /// Like [`next_batch`](Self::next_batch), but returns an owned
+    /// index buffer: the streaming engine's producer moves it straight
+    /// into the candidate batch instead of cloning a reusable buffer.
+    pub fn take_batch(&mut self, n: usize) -> (Vec<u32>, bool) {
+        let mut idx = Vec::with_capacity(n.min(self.order.len()));
+        let rolled = self.next_batch(n, &mut idx);
+        (idx, rolled)
+    }
 }
 
 #[cfg(test)]
@@ -113,6 +122,19 @@ mod tests {
         s.next_batch(4, &mut buf);
         s.next_batch(4, &mut buf);
         assert_eq!(buf.len(), 2, "final partial batch should have 2");
+    }
+
+    #[test]
+    fn take_batch_matches_next_batch() {
+        let mut a = EpochSampler::new(50, 4);
+        let mut b = EpochSampler::new(50, 4);
+        let mut buf = Vec::new();
+        for _ in 0..20 {
+            let rolled_a = a.next_batch(7, &mut buf);
+            let (idx, rolled_b) = b.take_batch(7);
+            assert_eq!(buf, idx);
+            assert_eq!(rolled_a, rolled_b);
+        }
     }
 
     #[test]

@@ -50,6 +50,20 @@ pub fn proportional_shards(n: usize, rates: &[f64]) -> Vec<(usize, usize)> {
         rest -= 1;
         fi += 1;
     }
+    // No-starvation guarantee: while items remain to spread, every
+    // shard gets at least one — a slow-but-alive worker must never
+    // idle. Largest-remainder alone can zero out a shard whose ideal
+    // share rounds below one (e.g. rates [1000, 1] at n=10), so top
+    // empty shards up from the largest one.
+    loop {
+        let Some(empty) = sizes.iter().position(|&s| s == 0) else { break };
+        let donor = (0..k).max_by_key(|&i| sizes[i]).expect("k > 0");
+        if sizes[donor] < 2 {
+            break; // fewer items than shards; nothing left to spread
+        }
+        sizes[donor] -= 1;
+        sizes[empty] += 1;
+    }
     let mut out = Vec::with_capacity(k);
     let mut start = 0;
     for &len in &sizes {
@@ -114,6 +128,79 @@ mod tests {
             let rates: Vec<f64> = (0..k).map(|_| rng.f32() as f64 * 10.0).collect();
             total_and_contiguous(&proportional_shards(n, &rates), n)
         });
+    }
+
+    #[test]
+    fn proportional_shards_sane_under_hostile_rates_prop() {
+        // Sizes always sum to n exactly (no loss, no overflow) even
+        // when rates mix zeros, NaNs, and infinities.
+        prop::check("prop-shards-hostile", 100, |rng| {
+            let n = rng.below(10_000);
+            let k = 1 + rng.below(16);
+            let rates: Vec<f64> = (0..k)
+                .map(|_| match rng.below(5) {
+                    0 => 0.0,
+                    1 => f64::NAN,
+                    2 => f64::INFINITY,
+                    _ => rng.f32() as f64 * 100.0,
+                })
+                .collect();
+            let shards = proportional_shards(n, &rates);
+            if shards.len() != k {
+                return Err("wrong shard count".into());
+            }
+            total_and_contiguous(&shards, n)?;
+            if shards.iter().any(|s| s.1 > n) {
+                return Err("shard larger than n".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn degenerate_rates_match_even_shards_prop() {
+        // All-degenerate rate vectors must fall back to exactly the
+        // even split, for any (n, k).
+        prop::check("prop-shards-degenerate", 60, |rng| {
+            let n = rng.below(5_000);
+            let k = 1 + rng.below(16);
+            let rates: Vec<f64> = (0..k)
+                .map(|_| if rng.bernoulli(0.5) { 0.0 } else { f64::NAN })
+                .collect();
+            let got = proportional_shards(n, &rates);
+            let want = even_shards(n, k);
+            if got != want {
+                return Err(format!("fallback mismatch: {got:?} vs {want:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn no_starvation_under_random_rates_prop() {
+        // While items remain (n >= k), every shard gets at least one
+        // item, however skewed the positive rates are.
+        prop::check("prop-shards-no-starvation", 100, |rng| {
+            let k = 1 + rng.below(16);
+            let n = k + rng.below(5_000);
+            let rates: Vec<f64> = (0..k)
+                .map(|_| if rng.bernoulli(0.3) { 0.0 } else { (rng.f32() as f64) * 1e3 + 1e-3 })
+                .collect();
+            let shards = proportional_shards(n, &rates);
+            total_and_contiguous(&shards, n)?;
+            if let Some(pos) = shards.iter().position(|s| s.1 == 0) {
+                return Err(format!("worker {pos} starved: {shards:?} rates {rates:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn extreme_skew_does_not_starve() {
+        // The concrete failure largest-remainder alone exhibits.
+        let shards = proportional_shards(10, &[1000.0, 1.0]);
+        assert_eq!(shards.iter().map(|s| s.1).sum::<usize>(), 10);
+        assert!(shards.iter().all(|s| s.1 >= 1), "{shards:?}");
     }
 
     #[test]

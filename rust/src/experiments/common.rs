@@ -16,14 +16,19 @@ use crate::data::{catalog, Bundle};
 use crate::experiments::ExpCtx;
 use crate::runtime::artifact::Manifest;
 use crate::runtime::handle::{cpu_client, ModelRuntime};
+use crate::runtime::pool::{PoolConfig, ScoringPool};
 
-/// Lazily-loaded runtimes + cached IL contexts over one PJRT client.
+/// Lazily-loaded runtimes + cached IL contexts + scoring pools over
+/// one PJRT client.
 pub struct Lab {
     pub manifest: Manifest,
     client: Rc<PjRtClient>,
     runtimes: RefCell<HashMap<(String, usize, usize, usize), Rc<ModelRuntime>>>,
     il_cache: RefCell<HashMap<String, Rc<IlContext>>>,
     bundles: RefCell<HashMap<String, Rc<Bundle>>>,
+    /// Pools keyed by (arch, d, c, workers, queue_depth) — workers own
+    /// compiled executables, so reuse across runs matters.
+    pools: RefCell<HashMap<(String, usize, usize, usize, usize), Rc<ScoringPool>>>,
     pub scale: f64,
 }
 
@@ -36,6 +41,7 @@ impl Lab {
             runtimes: RefCell::new(HashMap::new()),
             il_cache: RefCell::new(HashMap::new()),
             bundles: RefCell::new(HashMap::new()),
+            pools: RefCell::new(HashMap::new()),
             scale: ctx.scale,
         })
     }
@@ -110,7 +116,29 @@ impl Lab {
         Ok(ctx)
     }
 
-    /// One full training run per `cfg` (IL prepared on demand).
+    /// Scoring pool for `cfg`'s (arch, dataset) combo, sized from
+    /// `cfg.workers` / `cfg.queue_depth` (see `PoolConfig::from_run`).
+    /// Cached: pool workers each hold compiled executables. Attaches
+    /// the mcdropout artifact when the manifest has one, so App. G
+    /// methods stream through the pool too.
+    pub fn pool(&self, cfg: &RunConfig) -> Result<Rc<ScoringPool>> {
+        let (d, c) = catalog::dims_for(&cfg.dataset);
+        let pc = PoolConfig::from_run(cfg);
+        let key = (cfg.arch.clone(), d, c, pc.workers, pc.queue_depth);
+        if let Some(p) = self.pools.borrow().get(&key) {
+            return Ok(Rc::clone(p));
+        }
+        let nb = self.manifest.select_batch;
+        let fwd = self.manifest.find(&cfg.arch, d, c, &format!("fwd_b{nb}"))?;
+        let sel = self.manifest.find(&cfg.arch, d, c, &format!("select_b{nb}"))?;
+        let mcd = self.manifest.find(&cfg.arch, d, c, &format!("mcdropout_b{nb}")).ok();
+        let pool = Rc::new(ScoringPool::new(fwd, sel, mcd, &pc)?);
+        self.pools.borrow_mut().insert(key, Rc::clone(&pool));
+        Ok(pool)
+    }
+
+    /// One full training run per `cfg` (IL prepared on demand; a
+    /// scoring pool attached when `cfg.workers > 0`).
     pub fn run_one(&self, cfg: &RunConfig, bundle: &Bundle) -> Result<RunResult> {
         let target = self.runtime(&cfg.arch, &cfg.dataset)?;
         let needs_il =
@@ -121,9 +149,13 @@ impl Lab {
         } else {
             None
         };
+        let pool = if cfg.workers > 0 { Some(self.pool(cfg)?) } else { None };
         let mut trainer = Trainer::new(cfg, &target);
         if let Some(rt) = il_rt.as_deref() {
             trainer = trainer.with_il_rt(rt);
+        }
+        if let Some(p) = pool.as_deref() {
+            trainer = trainer.with_pool(p);
         }
         trainer.run(bundle, il.as_deref())
     }

@@ -46,7 +46,7 @@ fn print_help() {
          experiments: {}\n\n\
          config keys: dataset arch il_arch method epochs seed nb select_frac lr wd\n\
          eval_every scale track_props no_holdout online_il il_lr_scale\n\
-         il_epochs svp_frac workers",
+         il_epochs svp_frac workers queue_depth prefetch events",
         experiments::ALL.join(" ")
     );
 }

@@ -276,7 +276,10 @@ impl ModelRuntime {
         ];
         let outs = self.train_exe.call(&args)?;
         let mut it = outs.into_iter();
-        state.theta = it.next().unwrap().to_vec::<f32>()?;
+        // Swap in the freshly materialized parameters as a new Arc:
+        // outstanding scoring snapshots keep the old version alive and
+        // no caller ever pays a full-theta copy for a snapshot.
+        state.theta = std::sync::Arc::new(it.next().unwrap().to_vec::<f32>()?);
         state.m = it.next().unwrap().to_vec::<f32>()?;
         state.v = it.next().unwrap().to_vec::<f32>()?;
         let loss = it.next().unwrap().to_vec::<f32>()?[0];

@@ -6,15 +6,24 @@
 
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 /// Flattened parameters + AdamW state. `step` is the number of
 /// optimizer steps already taken (the HLO train program receives
 /// `step + 1` as its 1-based bias-correction counter).
+///
+/// `theta` is held behind an `Arc` and *swapped*, never mutated in
+/// place: each train step installs the freshly materialized parameter
+/// vector as a new `Arc`, so concurrent consumers (the scoring pool,
+/// the streaming engine's providers) snapshot it with a refcount bump
+/// instead of copying `param_count` floats. `step` doubles as the
+/// snapshot version — two states with equal `step` along one run hold
+/// the same `theta` allocation.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TrainState {
-    pub theta: Vec<f32>,
+    pub theta: Arc<Vec<f32>>,
     pub m: Vec<f32>,
     pub v: Vec<f32>,
     pub step: u64,
@@ -24,11 +33,16 @@ impl TrainState {
     /// Fresh optimizer state around initialized parameters.
     pub fn new(theta: Vec<f32>) -> Self {
         let n = theta.len();
-        TrainState { theta, m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+        TrainState { theta: Arc::new(theta), m: vec![0.0; n], v: vec![0.0; n], step: 0 }
     }
 
     pub fn param_count(&self) -> usize {
         self.theta.len()
+    }
+
+    /// Zero-copy parameter snapshot for scoring, versioned by `step`.
+    pub fn theta_snapshot(&self) -> Arc<Vec<f32>> {
+        Arc::clone(&self.theta)
     }
 
     const MAGIC: &'static [u8; 8] = b"RHOCKPT1";
@@ -42,7 +56,7 @@ impl TrainState {
         w.write_all(Self::MAGIC)?;
         w.write_all(&(self.theta.len() as u64).to_le_bytes())?;
         w.write_all(&self.step.to_le_bytes())?;
-        for vec in [&self.theta, &self.m, &self.v] {
+        for vec in [self.theta.as_slice(), self.m.as_slice(), self.v.as_slice()] {
             for x in vec {
                 w.write_all(&x.to_le_bytes())?;
             }
@@ -72,7 +86,7 @@ impl TrainState {
         let theta = read_vec(n)?;
         let m = read_vec(n)?;
         let v = read_vec(n)?;
-        Ok(TrainState { theta, m, v, step })
+        Ok(TrainState { theta: Arc::new(theta), m, v, step })
     }
 }
 
@@ -102,6 +116,17 @@ mod tests {
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(TrainState::load(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn theta_snapshot_is_zero_copy() {
+        // The streaming engine's hot-loop guarantee: taking a scoring
+        // snapshot must not copy the parameter vector.
+        let st = TrainState::new(vec![1.0, 2.0, 3.0]);
+        let before = Arc::strong_count(&st.theta);
+        let snap = st.theta_snapshot();
+        assert!(Arc::ptr_eq(&snap, &st.theta), "snapshot copied theta");
+        assert_eq!(Arc::strong_count(&st.theta), before + 1);
     }
 
     #[test]

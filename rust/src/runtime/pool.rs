@@ -1,11 +1,17 @@
 //! Parallel scoring pool — the paper's "simple parallelized selection"
 //! (§3): candidate-batch forward passes are embarrassingly parallel,
-//! so extra workers evaluate training losses concurrently while the
+//! so extra workers evaluate scoring signals concurrently while the
 //! master trains on recently selected data.
+//!
+//! The pool serves every request shape the streaming engine's signal
+//! providers need: fused RHO scores (`rho`), full fwd stats (`fwd`,
+//! feeding the loss/gnorm baselines), and MC-dropout uncertainty
+//! stats (`mcdropout`, App. G methods) when an mcdropout artifact is
+//! attached at construction.
 //!
 //! The `xla` handles are not `Send`, so every worker owns a private
 //! PJRT client + executables, created inside the worker thread. Work
-//! arrives over a shared bounded queue (backpressure: `score` blocks
+//! arrives over a shared bounded queue (backpressure: requests block
 //! when `queue_depth` chunks are already in flight); plain data
 //! (`Vec<f32>`) crosses the thread boundary, never XLA handles.
 
@@ -16,9 +22,10 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::config::RunConfig;
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::executor::{lit_f32, lit_i32, Executor};
-use crate::runtime::handle::FwdStats;
+use crate::runtime::handle::{FwdStats, McdStats};
 
 /// Pool construction parameters.
 #[derive(Clone, Debug)]
@@ -29,10 +36,33 @@ pub struct PoolConfig {
 }
 
 impl Default for PoolConfig {
+    /// One worker per available core. There is deliberately no hidden
+    /// upper clamp — large hosts size explicitly through
+    /// [`PoolConfig::from_run`] (`workers` / `queue_depth` config keys).
     fn default() -> Self {
         let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
-        PoolConfig { workers: workers.clamp(1, 8), queue_depth: 32 }
+        PoolConfig { workers: workers.max(1), queue_depth: 32 }
     }
+}
+
+impl PoolConfig {
+    /// Pool sizing from a run config: `workers == 0` means "auto"
+    /// (one per core); `queue_depth` is taken as-is (min 1).
+    pub fn from_run(cfg: &RunConfig) -> PoolConfig {
+        let auto = PoolConfig::default();
+        PoolConfig {
+            workers: if cfg.workers == 0 { auto.workers } else { cfg.workers },
+            queue_depth: cfg.queue_depth.max(1),
+        }
+    }
+}
+
+/// How one dispatched chunk should be scored.
+#[derive(Clone, Copy)]
+enum ReqKind<'a> {
+    Fwd,
+    Rho(&'a [f32]),
+    Mcd(i32),
 }
 
 enum Request {
@@ -45,11 +75,13 @@ enum Request {
         ys: Vec<i32>,
         il: Vec<f32>,
     },
+    Mcd { chunk: usize, take: usize, theta: Arc<Vec<f32>>, xs: Vec<f32>, ys: Vec<i32>, seed: i32 },
 }
 
 enum Payload {
     Fwd { loss: Vec<f32>, correct: Vec<f32>, gnorm: Vec<f32>, entropy: Vec<f32> },
     Rho { scores: Vec<f32> },
+    Mcd { loss: Vec<f32>, entropy: Vec<f32>, cond_entropy: Vec<f32>, bald: Vec<f32> },
 }
 
 struct Response {
@@ -60,7 +92,7 @@ struct Response {
 }
 
 /// Shared-queue scoring pool over one (arch, d, c) combo's fwd/select
-/// artifacts.
+/// (and optionally mcdropout) artifacts.
 pub struct ScoringPool {
     req_tx: Option<SyncSender<Request>>,
     resp_rx: Receiver<Response>,
@@ -69,18 +101,38 @@ pub struct ScoringPool {
     d: usize,
     param_count: usize,
     pub workers: usize,
+    has_mcd: bool,
     processed: Vec<Arc<AtomicUsize>>,
 }
 
 impl ScoringPool {
     /// Spawn workers; each compiles its own copies of the fwd + select
-    /// executables from the given artifact metadata.
-    pub fn new(fwd_meta: &ArtifactMeta, select_meta: &ArtifactMeta, cfg: &PoolConfig) -> Result<Self> {
+    /// (+ optional mcdropout) executables from the given artifact
+    /// metadata.
+    pub fn new(
+        fwd_meta: &ArtifactMeta,
+        select_meta: &ArtifactMeta,
+        mcd_meta: Option<&ArtifactMeta>,
+        cfg: &PoolConfig,
+    ) -> Result<Self> {
         let select_batch = fwd_meta
             .batch()
             .ok_or_else(|| anyhow!("fwd artifact has no batch size"))?;
         let d = fwd_meta.d;
         let param_count = fwd_meta.param_count;
+        // dispatch() pads every chunk to the fwd artifact's shape, so
+        // an mcdropout artifact with a different batch/d would fail
+        // per-request with confusing literal-shape errors — reject it
+        // here instead.
+        if let Some(m) = mcd_meta {
+            if m.batch() != Some(select_batch) || m.d != d {
+                bail!(
+                    "mcdropout artifact shape (batch {:?}, d {}) != fwd artifact (batch {select_batch}, d {d})",
+                    m.batch(),
+                    m.d
+                );
+            }
+        }
         let (req_tx, req_rx) = sync_channel::<Request>(cfg.queue_depth.max(1));
         let req_rx = Arc::new(Mutex::new(req_rx));
         let (resp_tx, resp_rx) = channel::<Response>();
@@ -91,10 +143,11 @@ impl ScoringPool {
             let tx = resp_tx.clone();
             let fwd_meta = fwd_meta.clone();
             let select_meta = select_meta.clone();
+            let mcd_meta = mcd_meta.cloned();
             let counter = Arc::new(AtomicUsize::new(0));
             processed.push(Arc::clone(&counter));
             handles.push(std::thread::spawn(move || {
-                worker_main(wid, rx, tx, fwd_meta, select_meta, counter);
+                worker_main(wid, rx, tx, fwd_meta, select_meta, mcd_meta, counter);
             }));
         }
         Ok(ScoringPool {
@@ -105,8 +158,14 @@ impl ScoringPool {
             d,
             param_count,
             workers: cfg.workers.max(1),
+            has_mcd: mcd_meta.is_some(),
             processed,
         })
+    }
+
+    /// Whether this pool can serve `mcdropout` requests.
+    pub fn has_mcdropout(&self) -> bool {
+        self.has_mcd
     }
 
     /// Per-worker processed-chunk counts (load-balance observability).
@@ -116,7 +175,7 @@ impl ScoringPool {
 
     /// Parallel forward stats over an arbitrary-length candidate batch.
     pub fn fwd(&self, theta: &Arc<Vec<f32>>, xs: &[f32], ys: &[i32]) -> Result<FwdStats> {
-        let chunks = self.dispatch(theta, xs, ys, None)?;
+        let chunks = self.dispatch(theta, xs, ys, ReqKind::Fwd)?;
         let mut out = FwdStats::default();
         let n = ys.len();
         out.loss.resize(n, 0.0);
@@ -145,7 +204,7 @@ impl ScoringPool {
         if il.len() != ys.len() {
             bail!("il len mismatch");
         }
-        let chunks = self.dispatch(theta, xs, ys, Some(il))?;
+        let chunks = self.dispatch(theta, xs, ys, ReqKind::Rho(il))?;
         let mut scores = vec![0.0f32; ys.len()];
         for _ in 0..chunks {
             let resp = self.resp_rx.recv().map_err(|_| anyhow!("pool workers died"))?;
@@ -161,12 +220,50 @@ impl ScoringPool {
         Ok(scores)
     }
 
+    /// Parallel MC-dropout uncertainty stats over an arbitrary-length
+    /// batch. Every chunk is scored with the same `seed`, matching the
+    /// single-threaded `ModelRuntime::mcdropout` chunking exactly.
+    pub fn mcdropout(
+        &self,
+        theta: &Arc<Vec<f32>>,
+        xs: &[f32],
+        ys: &[i32],
+        seed: i32,
+    ) -> Result<McdStats> {
+        if !self.has_mcd {
+            bail!("pool was built without an mcdropout artifact");
+        }
+        let chunks = self.dispatch(theta, xs, ys, ReqKind::Mcd(seed))?;
+        let mut out = McdStats::default();
+        let n = ys.len();
+        out.loss.resize(n, 0.0);
+        out.entropy.resize(n, 0.0);
+        out.cond_entropy.resize(n, 0.0);
+        out.bald.resize(n, 0.0);
+        for _ in 0..chunks {
+            let resp = self.resp_rx.recv().map_err(|_| anyhow!("pool workers died"))?;
+            let base = resp.chunk * self.select_batch;
+            match resp.payload {
+                Ok(Payload::Mcd { loss, entropy, cond_entropy, bald }) => {
+                    out.loss[base..base + resp.take].copy_from_slice(&loss[..resp.take]);
+                    out.entropy[base..base + resp.take].copy_from_slice(&entropy[..resp.take]);
+                    out.cond_entropy[base..base + resp.take]
+                        .copy_from_slice(&cond_entropy[..resp.take]);
+                    out.bald[base..base + resp.take].copy_from_slice(&bald[..resp.take]);
+                }
+                Ok(_) => bail!("mismatched payload kind"),
+                Err(e) => bail!("worker {} failed: {e}", resp.worker),
+            }
+        }
+        Ok(out)
+    }
+
     fn dispatch(
         &self,
         theta: &Arc<Vec<f32>>,
         xs: &[f32],
         ys: &[i32],
-        il: Option<&[f32]>,
+        kind: ReqKind,
     ) -> Result<usize> {
         if theta.len() != self.param_count {
             bail!("theta len {} != {}", theta.len(), self.param_count);
@@ -190,13 +287,18 @@ impl ScoringPool {
                 cx.extend_from_slice(&xs[start * self.d..(start + 1) * self.d]);
                 cy.push(ys[start]);
             }
-            let req = match il {
-                None => Request::Fwd { chunk, take, theta: Arc::clone(theta), xs: cx, ys: cy },
-                Some(il) => {
+            let req = match kind {
+                ReqKind::Fwd => {
+                    Request::Fwd { chunk, take, theta: Arc::clone(theta), xs: cx, ys: cy }
+                }
+                ReqKind::Rho(il) => {
                     let mut ci = Vec::with_capacity(nb);
                     ci.extend_from_slice(&il[start..start + take]);
                     ci.resize(nb, 0.0);
                     Request::Rho { chunk, take, theta: Arc::clone(theta), xs: cx, ys: cy, il: ci }
+                }
+                ReqKind::Mcd(seed) => {
+                    Request::Mcd { chunk, take, theta: Arc::clone(theta), xs: cx, ys: cy, seed }
                 }
             };
             tx.send(req).map_err(|_| anyhow!("pool workers died"))?;
@@ -222,27 +324,32 @@ fn worker_main(
     tx: Sender<Response>,
     fwd_meta: ArtifactMeta,
     select_meta: ArtifactMeta,
+    mcd_meta: Option<ArtifactMeta>,
     counter: Arc<AtomicUsize>,
 ) {
     // Private client + executables (xla handles are thread-local).
-    let setup = (|| -> Result<(Executor, Executor)> {
+    let setup = (|| -> Result<(Executor, Executor, Option<Executor>)> {
         let client = xla::PjRtClient::cpu()?;
         let fwd = Executor::load(&client, &fwd_meta)?;
         let select = Executor::load(&client, &select_meta)?;
+        let mcd = match &mcd_meta {
+            Some(meta) => Some(Executor::load(&client, meta)?),
+            None => None,
+        };
         // the executables keep the client alive through the C++ side;
-        // keep the Rust handle alive too by leaking it into the pair
+        // keep the Rust handle alive too by leaking it into the set
         std::mem::forget(client);
-        Ok((fwd, select))
+        Ok((fwd, select, mcd))
     })();
-    let (fwd_exe, select_exe) = match setup {
+    let (fwd_exe, select_exe, mcd_exe) = match setup {
         Ok(p) => p,
         Err(e) => {
             // Surface the failure on the first request.
             while let Ok(req) = rx.lock().unwrap().recv() {
                 let (chunk, take) = match &req {
-                    Request::Fwd { chunk, take, .. } | Request::Rho { chunk, take, .. } => {
-                        (*chunk, *take)
-                    }
+                    Request::Fwd { chunk, take, .. }
+                    | Request::Rho { chunk, take, .. }
+                    | Request::Mcd { chunk, take, .. } => (*chunk, *take),
                 };
                 let _ = tx.send(Response {
                     chunk,
@@ -293,10 +400,59 @@ fn worker_main(
                 })();
                 (chunk, take, res.map_err(|e| format!("{e:#}")))
             }
+            Request::Mcd { chunk, take, theta, xs, ys, seed } => {
+                let res = (|| -> Result<Payload> {
+                    let exe = mcd_exe
+                        .as_ref()
+                        .ok_or_else(|| anyhow!("pool has no mcdropout executable"))?;
+                    let meta = mcd_meta.as_ref().expect("exe implies meta");
+                    let nb = meta.batch().ok_or_else(|| anyhow!("mcdropout artifact has no batch"))?;
+                    let args = [
+                        lit_f32(&theta, &[theta.len()])?,
+                        lit_f32(&xs, &[nb, meta.d])?,
+                        lit_i32(&ys, &[nb])?,
+                        lit_i32(&[seed], &[1])?,
+                    ];
+                    let outs = exe.call_f32(&args)?;
+                    let mut it = outs.into_iter();
+                    Ok(Payload::Mcd {
+                        loss: it.next().unwrap(),
+                        entropy: it.next().unwrap(),
+                        cond_entropy: it.next().unwrap(),
+                        bald: it.next().unwrap(),
+                    })
+                })();
+                (chunk, take, res.map_err(|e| format!("{e:#}")))
+            }
         };
         counter.fetch_add(1, Ordering::Relaxed);
         if tx.send(Response { chunk, take, worker: wid, payload }).is_err() {
             return; // pool dropped
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_pool_sizing_is_unclamped() {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+        let cfg = PoolConfig::default();
+        assert_eq!(cfg.workers, cores.max(1), "workers must track core count, no hidden clamp");
+        assert!(cfg.queue_depth >= 1);
+    }
+
+    #[test]
+    fn from_run_plumbs_workers_and_queue_depth() {
+        let rc = RunConfig { workers: 13, queue_depth: 5, ..Default::default() };
+        let pc = PoolConfig::from_run(&rc);
+        assert_eq!((pc.workers, pc.queue_depth), (13, 5));
+        // workers=0 means auto-size; queue_depth is clamped to >= 1
+        let rc = RunConfig { workers: 0, queue_depth: 0, ..Default::default() };
+        let pc = PoolConfig::from_run(&rc);
+        assert_eq!(pc.workers, PoolConfig::default().workers);
+        assert_eq!(pc.queue_depth, 1);
     }
 }

@@ -4,8 +4,17 @@
 //! A selection function ranks the `n_B` pre-sampled candidates of one
 //! step and picks `n_b` of them (plus optional per-example gradient
 //! weights for importance-sampling debiasing).
+//!
+//! Each [`Method`] declares the signals its ranking rule consumes via
+//! [`Method::signal_needs`]; the [`provider`] module turns that
+//! declaration into an ordered stack of `SignalProvider`s (fused RHO,
+//! fwd stats, MC-dropout, precomputed/online IL) that the streaming
+//! engine (`coordinator::engine`) walks each step — so every method
+//! gathers exactly the signals it ranks on, through the parallel
+//! scoring pool when one is attached.
 
 pub mod diagnostics;
+pub mod provider;
 
 use crate::runtime::handle::McdStats;
 use crate::util::math::top_k_indices;
@@ -101,16 +110,42 @@ impl Method {
         )
     }
 
-    /// Needs the per-candidate fwd stats (everything except pure
-    /// uniform and the fused-RHO fast path).
-    pub fn needs_fwd(&self) -> bool {
-        !matches!(self, Method::Uniform)
-    }
-
     /// Applies an offline core-set filter before training (SVP).
     pub fn is_offline_filter(&self) -> bool {
         matches!(self, Method::Svp)
     }
+
+    /// The signals this method's ranking rule actually consumes. The
+    /// engine gathers exactly these (plus `correct` when property
+    /// tracking is on), so e.g. SVP/uniform runs pay for no forward
+    /// pass and RHO can take the fused path whenever `loss` is not
+    /// needed on its own.
+    pub fn signal_needs(&self) -> SignalNeeds {
+        match self {
+            Method::Uniform | Method::Svp => SignalNeeds::default(),
+            Method::TrainLoss => SignalNeeds { loss: true, ..Default::default() },
+            Method::GradNorm | Method::GradNormIS => {
+                SignalNeeds { gnorm: true, ..Default::default() }
+            }
+            Method::NegIL => SignalNeeds { il: true, ..Default::default() },
+            Method::RhoLoss => SignalNeeds { loss: true, il: true, ..Default::default() },
+            Method::Bald
+            | Method::Entropy
+            | Method::CondEntropy
+            | Method::LossMinusCondEntropy => SignalNeeds { mcd: true, ..Default::default() },
+        }
+    }
+}
+
+/// Per-candidate signals a selection rule consumes (see
+/// [`Method::signal_needs`]). `loss && il` is fusable into the single
+/// `rho` score by the Pallas select artifact.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SignalNeeds {
+    pub loss: bool,
+    pub gnorm: bool,
+    pub il: bool,
+    pub mcd: bool,
 }
 
 /// Per-candidate scoring signals for one step. Slices are aligned with
@@ -331,6 +366,26 @@ mod tests {
         let c = Candidates { loss: Some(&loss), ..Default::default() };
         let s = select(Method::TrainLoss, &c, 10, &mut rng());
         assert_eq!(s.picked.len(), 2);
+    }
+
+    #[test]
+    fn signal_needs_match_ranking_rules() {
+        assert_eq!(Method::Uniform.signal_needs(), SignalNeeds::default());
+        assert_eq!(Method::Svp.signal_needs(), SignalNeeds::default());
+        assert_eq!(
+            Method::RhoLoss.signal_needs(),
+            SignalNeeds { loss: true, il: true, ..Default::default() }
+        );
+        assert_eq!(
+            Method::NegIL.signal_needs(),
+            SignalNeeds { il: true, ..Default::default() }
+        );
+        for m in Method::ALL {
+            // mcdropout declaration and signal_needs must agree
+            assert_eq!(m.signal_needs().mcd, m.needs_mcdropout(), "{}", m.name());
+            // IL-based methods declare il
+            assert_eq!(m.signal_needs().il, m.needs_il(), "{}", m.name());
+        }
     }
 
     #[test]

@@ -1,0 +1,300 @@
+//! Trait-based signal providers: the pluggable scoring layer of the
+//! unified streaming engine.
+//!
+//! A [`SignalProvider`] computes one family of per-candidate signals
+//! for the current step — fused RHO scores, full fwd stats,
+//! MC-dropout uncertainty, or irreducible losses (precomputed lookup
+//! or online IL-model scoring). [`stack`] assembles the minimal
+//! ordered provider list for a [`Method`] from its
+//! [`Method::signal_needs`] declaration, so the engine gathers
+//! exactly what the selection rule consumes — fanned out over the
+//! parallel [`ScoringPool`] when one is attached, inline through the
+//! [`ModelRuntime`] otherwise.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::handle::{McdStats, ModelRuntime};
+use crate::runtime::pool::ScoringPool;
+use crate::selection::{Candidates, Method};
+
+/// Where a provider executes its model programs.
+#[derive(Clone, Copy)]
+pub enum Backend<'a> {
+    /// On the calling thread, through the runtime's executables.
+    Inline(&'a ModelRuntime),
+    /// Fanned out across the parallel scoring pool (paper §3).
+    Pool(&'a ScoringPool),
+}
+
+/// Per-step provider inputs. Slices borrow from the prefetched
+/// candidate batch; `theta` is the zero-copy parameter snapshot
+/// (versioned by the optimizer step — see `TrainState::theta_snapshot`).
+pub struct StepCtx<'a> {
+    pub step: u64,
+    pub theta: &'a Arc<Vec<f32>>,
+    /// Current IL-model parameters (online IL only).
+    pub il_theta: Option<&'a Arc<Vec<f32>>>,
+    /// Dataset indices of the candidates.
+    pub idx: &'a [u32],
+    pub xs: &'a [f32],
+    pub ys: &'a [i32],
+    /// Per-step MC-dropout seed.
+    pub mcd_seed: i32,
+}
+
+/// The signals produced for one candidate batch. Owns its buffers so
+/// [`Candidates`] can borrow them for ranking; reset each step.
+/// Buffers are freshly allocated per step (as the fwd/pool calls
+/// already return owned vectors) — the hot-path guarantees concern
+/// the theta snapshot and candidate-batch reuse, not these
+/// `n_B`-sized score vectors.
+#[derive(Clone, Debug, Default)]
+pub struct SignalSet {
+    pub loss: Option<Vec<f32>>,
+    pub gnorm: Option<Vec<f32>>,
+    /// Already-classified-correctly indicators (property tracking).
+    pub correct: Option<Vec<f32>>,
+    /// Predictive entropy from the fwd pass. Not consumed by any
+    /// current `select` rule (`Candidates` has no entropy field) —
+    /// carried for diagnostics and future entropy-ranked methods.
+    pub entropy: Option<Vec<f32>>,
+    pub il: Option<Vec<f32>>,
+    pub rho: Option<Vec<f32>>,
+    pub mcd: Option<McdStats>,
+}
+
+impl SignalSet {
+    pub fn clear(&mut self) {
+        *self = SignalSet::default();
+    }
+
+    /// Borrow as the selection-function input for `n` candidates.
+    pub fn candidates(&self, n: usize) -> Candidates<'_> {
+        Candidates {
+            n,
+            loss: self.loss.as_deref(),
+            gnorm: self.gnorm.as_deref(),
+            il: self.il.as_deref(),
+            rho: self.rho.as_deref(),
+            mcd: self.mcd.as_ref(),
+        }
+    }
+}
+
+/// One family of scoring signals. Providers run in stack order; later
+/// providers may consume signals earlier ones produced ([`FusedRho`]
+/// reads `il`).
+pub trait SignalProvider {
+    fn name(&self) -> &'static str;
+    /// Compute this provider's signals for the candidate batch.
+    fn provide(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()>;
+}
+
+/// Precomputed irreducible losses, looked up by candidate dataset
+/// index (Algorithm 1's amortized IL table).
+pub struct Precomputed<'a> {
+    pub values: &'a [f32],
+}
+
+impl SignalProvider for Precomputed<'_> {
+    fn name(&self) -> &'static str {
+        "precomputed_il"
+    }
+
+    fn provide(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
+        out.il = Some(ctx.idx.iter().map(|&i| self.values[i as usize]).collect());
+        Ok(())
+    }
+}
+
+/// Online (non-approximated) IL: score candidates with the current
+/// IL-model parameters (paper Table 4 / Fig. 7).
+pub struct OnlineIl<'a> {
+    pub il_rt: &'a ModelRuntime,
+}
+
+impl SignalProvider for OnlineIl<'_> {
+    fn name(&self) -> &'static str {
+        "online_il"
+    }
+
+    fn provide(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
+        let th = ctx
+            .il_theta
+            .ok_or_else(|| anyhow!("online IL scoring needs the IL-model state"))?;
+        out.il = Some(self.il_rt.fwd(th, ctx.xs, ctx.ys)?.loss);
+        Ok(())
+    }
+}
+
+/// Fused RHO scores (Eq. 3) through the Pallas select artifact.
+/// Consumes the `il` signal produced earlier in the stack.
+pub struct FusedRho<'a> {
+    pub backend: Backend<'a>,
+}
+
+impl SignalProvider for FusedRho<'_> {
+    fn name(&self) -> &'static str {
+        "fused_rho"
+    }
+
+    fn provide(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
+        let scores = {
+            let il = out
+                .il
+                .as_deref()
+                .ok_or_else(|| anyhow!("FusedRho needs an `il` provider earlier in the stack"))?;
+            match self.backend {
+                Backend::Pool(p) => p.rho(ctx.theta, ctx.xs, ctx.ys, il)?,
+                Backend::Inline(rt) => rt.select_rho(ctx.theta, ctx.xs, ctx.ys, il)?,
+            }
+        };
+        out.rho = Some(scores);
+        Ok(())
+    }
+}
+
+/// Per-candidate forward stats (loss / gnorm / correct / entropy) —
+/// the scoring signals of the loss- and gradient-based baselines, and
+/// of property tracking.
+pub struct FwdStats<'a> {
+    pub backend: Backend<'a>,
+}
+
+impl SignalProvider for FwdStats<'_> {
+    fn name(&self) -> &'static str {
+        "fwd_stats"
+    }
+
+    fn provide(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
+        let stats = match self.backend {
+            Backend::Pool(p) => p.fwd(ctx.theta, ctx.xs, ctx.ys)?,
+            Backend::Inline(rt) => rt.fwd(ctx.theta, ctx.xs, ctx.ys)?,
+        };
+        out.loss = Some(stats.loss);
+        out.gnorm = Some(stats.gnorm);
+        out.correct = Some(stats.correct);
+        out.entropy = Some(stats.entropy);
+        Ok(())
+    }
+}
+
+/// MC-dropout uncertainty stats (App. G methods).
+pub struct McDropout<'a> {
+    pub backend: Backend<'a>,
+}
+
+impl SignalProvider for McDropout<'_> {
+    fn name(&self) -> &'static str {
+        "mcdropout"
+    }
+
+    fn provide(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
+        let stats = match self.backend {
+            Backend::Pool(p) => p.mcdropout(ctx.theta, ctx.xs, ctx.ys, ctx.mcd_seed)?,
+            Backend::Inline(rt) => rt.mcdropout(ctx.theta, ctx.xs, ctx.ys, ctx.mcd_seed)?,
+        };
+        out.mcd = Some(stats);
+        Ok(())
+    }
+}
+
+/// Everything `stack` needs to assemble a provider list.
+pub struct StackSpec<'a> {
+    pub method: Method,
+    /// Property tracking forces full fwd stats (for `correct`).
+    pub track_props: bool,
+    /// Score IL with the live IL model instead of the precomputed table.
+    pub online_il: bool,
+    pub target: &'a ModelRuntime,
+    pub il_rt: Option<&'a ModelRuntime>,
+    pub pool: Option<&'a ScoringPool>,
+    /// Precomputed IL table indexed by train-set position (None when
+    /// unavailable, e.g. after the SVP filter re-indexes the set).
+    pub il_values: Option<&'a [f32]>,
+}
+
+/// Assemble the ordered provider stack for a method: IL first (fused
+/// RHO consumes it), then fwd stats / fused RHO / MC-dropout as the
+/// method's `signal_needs` demand.
+pub fn stack<'a>(spec: &StackSpec<'a>) -> Result<Vec<Box<dyn SignalProvider + 'a>>> {
+    let needs = spec.method.signal_needs();
+    let scoring = match spec.pool {
+        Some(p) => Backend::Pool(p),
+        None => Backend::Inline(spec.target),
+    };
+    // MC-dropout goes through the pool only when the pool carries the
+    // artifact; otherwise it scores inline on the target runtime.
+    let mcd_backend = match spec.pool {
+        Some(p) if p.has_mcdropout() => Backend::Pool(p),
+        _ => Backend::Inline(spec.target),
+    };
+    let mut out: Vec<Box<dyn SignalProvider + 'a>> = Vec::new();
+    if needs.il {
+        if spec.online_il {
+            let il_rt = spec.il_rt.ok_or_else(|| anyhow!("online IL needs an IL runtime"))?;
+            out.push(Box::new(OnlineIl { il_rt }));
+        } else {
+            let values = spec.il_values.ok_or_else(|| {
+                anyhow!("method `{}` needs precomputed IL values", spec.method.name())
+            })?;
+            out.push(Box::new(Precomputed { values }));
+        }
+    }
+    // The fused Pallas artifact replaces the fwd pass for RHO unless
+    // property tracking needs the full stats anyway (then `select`
+    // falls back to loss - il).
+    let fused = spec.method == Method::RhoLoss && !spec.track_props;
+    if spec.track_props || ((needs.loss || needs.gnorm) && !fused) {
+        out.push(Box::new(FwdStats { backend: scoring }));
+    }
+    if fused {
+        out.push(Box::new(FusedRho { backend: scoring }));
+    }
+    if needs.mcd {
+        out.push(Box::new(McDropout { backend: mcd_backend }));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(
+        theta: &'a Arc<Vec<f32>>,
+        idx: &'a [u32],
+        xs: &'a [f32],
+        ys: &'a [i32],
+    ) -> StepCtx<'a> {
+        StepCtx { step: 1, theta, il_theta: None, idx, xs, ys, mcd_seed: 0 }
+    }
+
+    #[test]
+    fn precomputed_gathers_by_dataset_index() {
+        let table = [0.5f32, 1.5, 2.5, 3.5];
+        let mut p = Precomputed { values: &table };
+        let theta: Arc<Vec<f32>> = Arc::new(Vec::new());
+        let idx = [3u32, 0, 2];
+        let mut sig = SignalSet::default();
+        p.provide(&ctx(&theta, &idx, &[], &[]), &mut sig).unwrap();
+        assert_eq!(sig.il, Some(vec![3.5, 0.5, 2.5]));
+    }
+
+    #[test]
+    fn signal_set_borrows_into_candidates() {
+        let mut sig = SignalSet::default();
+        sig.loss = Some(vec![1.0, 2.0]);
+        sig.il = Some(vec![0.5, 0.25]);
+        let c = sig.candidates(2);
+        assert_eq!(c.n, 2);
+        assert_eq!(c.loss, Some(&[1.0f32, 2.0][..]));
+        assert_eq!(c.il, Some(&[0.5f32, 0.25][..]));
+        assert!(c.rho.is_none());
+        assert!(c.mcd.is_none());
+        sig.clear();
+        assert!(sig.loss.is_none() && sig.il.is_none());
+    }
+}

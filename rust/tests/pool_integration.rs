@@ -20,7 +20,7 @@ fn setup() -> Option<(Manifest, Rc<xla::PjRtClient>)> {
 fn mk_pool(manifest: &Manifest, workers: usize) -> ScoringPool {
     let fwd = manifest.find("mlp_small", 64, 10, "fwd_b320").unwrap();
     let sel = manifest.find("mlp_small", 64, 10, "select_b320").unwrap();
-    ScoringPool::new(fwd, sel, &PoolConfig { workers, queue_depth: 4 }).unwrap()
+    ScoringPool::new(fwd, sel, None, &PoolConfig { workers, queue_depth: 4 }).unwrap()
 }
 
 fn rand_batch(n: usize, seed: u64) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
@@ -36,7 +36,7 @@ fn pool_fwd_matches_single_thread() {
     let Some((manifest, client)) = setup() else { return };
     let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_small", 64, 10).unwrap();
     let st = rt.init(1).unwrap();
-    let theta = Arc::new(st.theta.clone());
+    let theta = st.theta_snapshot();
     let pool = mk_pool(&manifest, 2);
     for n in [320usize, 1000, 33] {
         let (xs, ys, _) = rand_batch(n, n as u64);
@@ -55,7 +55,7 @@ fn pool_rho_matches_single_thread() {
     let Some((manifest, client)) = setup() else { return };
     let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_small", 64, 10).unwrap();
     let st = rt.init(2).unwrap();
-    let theta = Arc::new(st.theta.clone());
+    let theta = st.theta_snapshot();
     let pool = mk_pool(&manifest, 3);
     let (xs, ys, il) = rand_batch(737, 9);
     let a = pool.rho(&theta, &xs, &ys, &il).unwrap();
@@ -73,7 +73,7 @@ fn pool_distributes_load_across_workers() {
     let pool = mk_pool(&manifest, 2);
     let st_theta = {
         let rt = ModelRuntime::load(cpu_client().unwrap(), &manifest, "mlp_small", 64, 10).unwrap();
-        Arc::new(rt.init(3).unwrap().theta)
+        rt.init(3).unwrap().theta
     };
     // 20 chunks of work
     let (xs, ys, il) = rand_batch(320 * 20, 5);
@@ -81,6 +81,44 @@ fn pool_distributes_load_across_workers() {
     let loads = pool.worker_loads();
     assert_eq!(loads.iter().sum::<usize>(), 20);
     assert!(loads.iter().all(|&l| l > 0), "a worker starved: {loads:?}");
+}
+
+#[test]
+fn pool_mcdropout_matches_single_thread() {
+    let Some((manifest, client)) = setup() else { return };
+    // mlp_base carries the mcdropout artifact at (64, 10)
+    let Ok(mcd) = manifest.find("mlp_base", 64, 10, "mcdropout_b320") else {
+        eprintln!("skipping: no mcdropout artifact for mlp_base");
+        return;
+    };
+    let fwd = manifest.find("mlp_base", 64, 10, "fwd_b320").unwrap();
+    let sel = manifest.find("mlp_base", 64, 10, "select_b320").unwrap();
+    let pool =
+        ScoringPool::new(fwd, sel, Some(mcd), &PoolConfig { workers: 2, queue_depth: 4 }).unwrap();
+    assert!(pool.has_mcdropout());
+    let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_base", 64, 10).unwrap();
+    let st = rt.init(5).unwrap();
+    let theta = st.theta_snapshot();
+    let (xs, ys, _) = rand_batch(500, 11);
+    let a = pool.mcdropout(&theta, &xs, &ys, 42).unwrap();
+    let b = rt.mcdropout(&st.theta, &xs, &ys, 42).unwrap();
+    assert_eq!(a.loss.len(), 500);
+    for i in 0..500 {
+        assert!((a.loss[i] - b.loss[i]).abs() < 1e-5, "loss i={i}");
+        assert!((a.bald[i] - b.bald[i]).abs() < 1e-5, "bald i={i}");
+        assert!((a.entropy[i] - b.entropy[i]).abs() < 1e-5, "entropy i={i}");
+    }
+}
+
+#[test]
+fn pool_without_mcd_artifact_rejects_mcd_requests() {
+    let Some((manifest, client)) = setup() else { return };
+    let pool = mk_pool(&manifest, 1);
+    assert!(!pool.has_mcdropout());
+    let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_small", 64, 10).unwrap();
+    let theta = rt.init(1).unwrap().theta;
+    let (xs, ys, _) = rand_batch(32, 3);
+    assert!(pool.mcdropout(&theta, &xs, &ys, 1).is_err());
 }
 
 #[test]

@@ -1,9 +1,11 @@
-//! Integration: the Algorithm-1 trainer end-to-end on small synthetic
-//! bundles — learning happens, RHO-LOSS beats uniform under noise, and
-//! the pipelined trainer reproduces the synchronous curve exactly.
+//! Integration: the unified streaming engine end-to-end on small
+//! synthetic bundles — learning happens, RHO-LOSS beats uniform under
+//! noise, every method runs through the engine (inline and pooled),
+//! and the pooled engine reproduces the inline reference curve
+//! exactly.
 
 use rho::config::RunConfig;
-use rho::coordinator::pipeline::run_pipelined;
+use rho::coordinator::engine::run_pipelined;
 use rho::coordinator::trainer::Trainer;
 use rho::experiments::common::Lab;
 use rho::experiments::ExpCtx;
@@ -124,8 +126,9 @@ fn pipelined_matches_synchronous_exactly() {
     let manifest = &lab.manifest;
     let fwd = manifest.find(&cfg.arch, 64, 10, "fwd_b320").unwrap();
     let sel = manifest.find(&cfg.arch, 64, 10, "select_b320").unwrap();
-    let pool = ScoringPool::new(fwd, sel, &PoolConfig { workers: 2, queue_depth: 4 }).unwrap();
-    let (pipe_curve, sps) = run_pipelined(&cfg, &target, &pool, &bundle, &il, 3).unwrap();
+    let pool =
+        ScoringPool::new(fwd, sel, None, &PoolConfig { workers: 2, queue_depth: 4 }).unwrap();
+    let (pipe_curve, sps) = run_pipelined(&cfg, &target, &pool, &bundle, Some(&il), 3).unwrap();
 
     assert!(sps > 0.0);
     assert_eq!(sync.curve.points.len(), pipe_curve.points.len());
@@ -138,6 +141,69 @@ fn pipelined_matches_synchronous_exactly() {
             a.accuracy,
             b.accuracy
         );
+    }
+}
+
+#[test]
+fn engine_workers1_is_bit_identical_to_reference_across_methods() {
+    // Acceptance gate of the unified-engine refactor: for rho_loss,
+    // train_loss, AND uniform, the engine with a one-worker pool must
+    // reproduce the inline reference curve point for point.
+    let Some(lab) = lab() else { return };
+    for method in [Method::RhoLoss, Method::TrainLoss, Method::Uniform] {
+        let mut cfg = base_cfg(method);
+        cfg.il_arch = "mlp_small".into();
+        cfg.epochs = 2;
+        let bundle = lab.bundle(&cfg.dataset);
+        let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+        let il = if method.needs_il() { Some(lab.il_context(&cfg, &bundle).unwrap()) } else { None };
+        let il_ref = il.as_deref();
+
+        let reference = Trainer::new(&cfg, &target).run(&bundle, il_ref).unwrap();
+
+        let fwd = lab.manifest.find(&cfg.arch, 64, 10, "fwd_b320").unwrap();
+        let sel = lab.manifest.find(&cfg.arch, 64, 10, "select_b320").unwrap();
+        let pool =
+            ScoringPool::new(fwd, sel, None, &PoolConfig { workers: 1, queue_depth: 4 }).unwrap();
+        let (curve, _) = run_pipelined(&cfg, &target, &pool, &bundle, il_ref, 3).unwrap();
+
+        assert_eq!(
+            reference.curve.points.len(),
+            curve.points.len(),
+            "{}: eval schedule drifted",
+            method.name()
+        );
+        for (a, b) in reference.curve.points.iter().zip(&curve.points) {
+            assert_eq!(a.step, b.step, "{}", method.name());
+            assert!(
+                (a.accuracy - b.accuracy).abs() < 1e-6,
+                "{}: engine diverged from reference at step {}: {} vs {}",
+                method.name(),
+                a.step,
+                a.accuracy,
+                b.accuracy
+            );
+        }
+    }
+}
+
+#[test]
+fn every_method_streams_through_the_pool() {
+    // The whole point of the unified engine: all of Method::ALL run
+    // the producer/pool path, not just fused RHO.
+    let Some(lab) = lab() else { return };
+    for &method in Method::ALL {
+        let mut cfg = base_cfg(method);
+        cfg.epochs = 1;
+        cfg.workers = 2; // Lab attaches a scoring pool
+        if method.needs_mcdropout() {
+            cfg.arch = "mlp_base".into();
+        }
+        let bundle = lab.bundle(&cfg.dataset);
+        let res = lab
+            .run_one(&cfg, &bundle)
+            .unwrap_or_else(|e| panic!("method {} failed through pool: {e:#}", method.name()));
+        assert!(res.curve.final_accuracy() > 0.05, "method {}", method.name());
     }
 }
 
