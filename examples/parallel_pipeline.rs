@@ -53,14 +53,23 @@ fn main() -> Result<()> {
         let (d, c) = rho::data::catalog::dims_for(&cfg.dataset);
         let fwd = manifest.find(&cfg.arch, d, c, &format!("fwd_b{}", manifest.select_batch))?;
         let sel = manifest.find(&cfg.arch, d, c, &format!("select_b{}", manifest.select_batch))?;
-        let pool = ScoringPool::new(fwd, sel, None, &PoolConfig { workers, queue_depth: 16 })?;
+        let pool = ScoringPool::new(
+            fwd,
+            sel,
+            None,
+            &PoolConfig { workers, lane_depth: 16, ..PoolConfig::default() },
+        )?;
         let (curve, sps) = run_pipelined(&cfg, &target, &pool, &bundle, Some(&il), 4)?;
+        let t = rho::coordinator::metrics::DispatchTimings::from_report(&pool.report());
         println!(
-            "pipelined w={workers}: {:>6.1} steps/s ({:+.0}% vs sync, final acc {:.3}, loads {:?})",
+            "pipelined w={workers}: {:>6.1} steps/s ({:+.0}% vs sync, final acc {:.3}, loads {:?}, \
+             queue-wait {:.0}us/chunk, rates {:?})",
             sps,
             (sps / sync_sps - 1.0) * 100.0,
             curve.final_accuracy(),
-            pool.worker_loads()
+            pool.worker_loads(),
+            t.mean_queue_wait_us,
+            t.worker_rates.iter().map(|r| (r * 10.0).round() / 10.0).collect::<Vec<_>>()
         );
     }
     println!("\n(selection forward passes parallelise across workers — paper §3)");

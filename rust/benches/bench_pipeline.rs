@@ -5,14 +5,22 @@
 //! parallelized-selection claim at bench scale — now for every
 //! method, not just fused RHO — and is the primary L3 perf target
 //! (EXPERIMENTS.md §Perf).
+//!
+//! Besides the human-readable table, every run (over)writes its
+//! measured numbers to `BENCH_pipeline.json` (one entry per method ×
+//! workers, plus pool dispatch/queue-wait timings); committing the
+//! file per PR makes the perf trajectory machine-trackable across
+//! PRs.
 
 use rho::config::RunConfig;
 use rho::coordinator::engine::run_pipelined;
+use rho::coordinator::metrics::DispatchTimings;
 use rho::coordinator::trainer::{IlContext, Trainer};
 use rho::experiments::common::Lab;
 use rho::experiments::ExpCtx;
 use rho::runtime::pool::{PoolConfig, ScoringPool};
 use rho::selection::Method;
+use rho::util::json::{arr, num, obj, s, Value};
 use rho::util::timer::Stopwatch;
 
 fn main() {
@@ -39,6 +47,7 @@ fn main() {
     let sel = lab.manifest.find(&base.arch, d, c, "select_b320").unwrap();
 
     let mut sync_by_method = std::collections::HashMap::new();
+    let mut entries: Vec<Value> = Vec::new();
     for method in [Method::Uniform, Method::TrainLoss, Method::RhoLoss] {
         let mut cfg = base.clone();
         cfg.method = method;
@@ -54,17 +63,40 @@ fn main() {
         let sync_sps = sync.steps as f64 / sw.elapsed_s();
         sync_by_method.insert(method, sync_sps);
         println!("{:<12} sync (inline):      {sync_sps:>7.1} steps/s", method.name());
+        entries.push(obj(vec![
+            ("method", s(method.name())),
+            ("workers", num(0.0)), // 0 = synchronous inline reference
+            ("steps_per_sec", num(sync_sps)),
+        ]));
 
         for workers in [1usize, 4] {
-            let pool =
-                ScoringPool::new(fwd, sel, None, &PoolConfig { workers, queue_depth: 16 })
-                    .unwrap();
+            let pool = ScoringPool::new(
+                fwd,
+                sel,
+                None,
+                &PoolConfig { workers, lane_depth: 16, ..PoolConfig::default() },
+            )
+            .unwrap();
             let (_, sps) = run_pipelined(&cfg, &target, &pool, &bundle, il_ref, 4).unwrap();
+            let t = DispatchTimings::from_report(&pool.report());
             println!(
-                "{:<12} pool workers={workers}:    {sps:>7.1} steps/s ({:+.0}% vs sync)",
+                "{:<12} pool workers={workers}:    {sps:>7.1} steps/s ({:+.0}% vs sync, queue-wait {:.0}us/chunk)",
                 method.name(),
-                (sps / sync_sps - 1.0) * 100.0
+                (sps / sync_sps - 1.0) * 100.0,
+                t.mean_queue_wait_us
             );
+            entries.push(obj(vec![
+                ("method", s(method.name())),
+                ("workers", num(workers as f64)),
+                ("steps_per_sec", num(sps)),
+                ("vs_sync_pct", num((sps / sync_sps - 1.0) * 100.0)),
+                ("dispatches", num(t.dispatches as f64)),
+                ("chunks", num(t.chunks as f64)),
+                ("mean_queue_wait_us", num(t.mean_queue_wait_us)),
+                ("mean_busy_us", num(t.mean_busy_us)),
+                ("worker_chunks", arr(t.worker_chunks.iter().map(|&c| num(c as f64)))),
+                ("worker_rates", arr(t.worker_rates.iter().map(|&r| num(r)))),
+            ]));
         }
     }
 
@@ -77,4 +109,18 @@ fn main() {
         uni_sps / rho_sps,
         1.0 + 320.0 / (3.0 * 32.0)
     );
+
+    // Machine-readable perf record (steps/sec per method × workers).
+    let doc = obj(vec![
+        ("bench", s("pipeline")),
+        ("scale", num(ctx.scale)),
+        ("epochs", num(base.epochs as f64)),
+        ("uniform_over_rho_sync", num(uni_sps / rho_sps)),
+        ("entries", Value::Array(entries)),
+    ]);
+    let path = std::path::Path::new("BENCH_pipeline.json");
+    match std::fs::write(path, doc.to_json() + "\n") {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
 }

@@ -91,25 +91,34 @@ fn main() {
     let theta = rt.init(3).unwrap().theta;
     let big: Vec<u32> = (0..3200u32).map(|i| i % 20_000).collect();
     let (bxs, bys) = ds.gather(&big);
-    let bil = vec![0.5f32; 3200];
+    // zero-copy dispatch: the batch and il cross into the pool as Arc
+    // refcount bumps, one gather for the whole sweep
+    let batch = rho::runtime::pool::CandBatch::for_scoring(bxs, bys);
+    let bil = std::sync::Arc::new(vec![0.5f32; 3200]);
     let mut base_mean = 0.0f32;
     for workers in [1usize, 2, 4] {
-        let pool =
-            ScoringPool::new(fwd_meta, sel_meta, None, &PoolConfig { workers, queue_depth: 16 })
-                .unwrap();
+        let pool = ScoringPool::new(
+            fwd_meta,
+            sel_meta,
+            None,
+            &PoolConfig { workers, lane_depth: 16, ..PoolConfig::default() },
+        )
+        .unwrap();
         let mut h = LatencyHist::new();
         for _ in 0..20 {
             let t = Instant::now();
-            std::hint::black_box(pool.rho(&theta, &bxs, &bys, &bil).unwrap());
+            std::hint::black_box(pool.rho(&theta, &batch, &bil).unwrap());
             h.record(t.elapsed());
         }
         if workers == 1 {
             base_mean = h.mean_us();
         }
+        let t = rho::coordinator::metrics::DispatchTimings::from_report(&pool.report());
         println!(
-            "pool rho 3200 pts, workers={workers:<2}              {} (speedup {:.2}x)",
+            "pool rho 3200 pts, workers={workers:<2}              {} (speedup {:.2}x, queue-wait {:.0}us/chunk)",
             h.summary(),
-            base_mean / h.mean_us()
+            base_mean / h.mean_us(),
+            t.mean_queue_wait_us
         );
     }
 }

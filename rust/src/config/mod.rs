@@ -46,9 +46,16 @@ pub struct RunConfig {
     /// is built, 0 means one worker per core — see
     /// `PoolConfig::from_run`).
     pub workers: usize,
-    /// Max in-flight scoring chunks before pool dispatch blocks
-    /// (backpressure).
+    /// Legacy total in-flight scoring-chunk bound; when `lane_depth`
+    /// is 0 the per-worker lane capacity is derived from it
+    /// (`ceil(queue_depth / workers)`, min 1).
     pub queue_depth: usize,
+    /// Max in-flight scoring chunks per worker lane before pool
+    /// dispatch blocks (backpressure); 0 = derive from `queue_depth`.
+    pub lane_depth: usize,
+    /// EMA smoothing in (0, 1] for observed per-worker service rates
+    /// (rate-aware dispatch); higher chases recent observations harder.
+    pub rate_alpha: f64,
     /// Candidate batches the engine's producer buffers ahead of the
     /// trainer (min 1).
     pub prefetch: usize,
@@ -79,6 +86,8 @@ impl Default for RunConfig {
             svp_frac: 0.5,
             workers: 0,
             queue_depth: 32,
+            lane_depth: 0,
+            rate_alpha: 0.3,
             prefetch: 4,
             events: String::new(),
         }
@@ -118,6 +127,8 @@ impl RunConfig {
             "svp_frac" => self.svp_frac = v.parse()?,
             "workers" => self.workers = v.parse()?,
             "queue_depth" => self.queue_depth = v.parse()?,
+            "lane_depth" => self.lane_depth = v.parse()?,
+            "rate_alpha" => self.rate_alpha = v.parse()?,
             "prefetch" => self.prefetch = v.parse()?,
             "events" => self.events = v.into(),
             other => bail!("unknown config key `{other}`"),
@@ -167,6 +178,9 @@ impl RunConfig {
         if self.lr <= 0.0 {
             bail!("lr must be positive");
         }
+        if !(self.rate_alpha > 0.0 && self.rate_alpha <= 1.0) {
+            bail!("rate_alpha must be in (0, 1], got {}", self.rate_alpha);
+        }
         Ok(())
     }
 
@@ -211,8 +225,25 @@ mod tests {
     #[test]
     fn pool_sizing_keys_apply() {
         let mut c = RunConfig::default();
-        c.apply_pairs(["workers=12", "queue_depth=64", "prefetch=8"]).unwrap();
+        c.apply_pairs(["workers=12", "queue_depth=64", "prefetch=8", "lane_depth=6", "rate_alpha=0.5"])
+            .unwrap();
         assert_eq!((c.workers, c.queue_depth, c.prefetch), (12, 64, 8));
+        assert_eq!(c.lane_depth, 6);
+        assert_eq!(c.rate_alpha, 0.5);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn rate_alpha_bounds_validated() {
+        let mut c = RunConfig::default();
+        assert!((c.rate_alpha - 0.3).abs() < 1e-12, "default alpha");
+        assert_eq!(c.lane_depth, 0, "default lane_depth derives from queue_depth");
+        c.rate_alpha = 0.0;
+        assert!(c.validate().is_err());
+        c.rate_alpha = 1.5;
+        assert!(c.validate().is_err());
+        c.rate_alpha = 1.0;
+        c.validate().unwrap();
     }
 
     #[test]

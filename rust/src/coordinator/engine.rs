@@ -2,13 +2,19 @@
 //! loop for every selection `Method`.
 //!
 //! Shape (paper §3 "simple parallelized selection", generalized): a
-//! producer thread samples candidate batches without replacement and
-//! gathers their rows ahead of the trainer, bounded by a prefetch
-//! channel (backpressure). The consumer walks a
-//! [`selection::provider`](crate::selection::provider) stack that
-//! computes exactly the signals `cfg.method` ranks on — fused RHO
-//! scores, fwd stats, MC-dropout, precomputed or online IL —
-//! optionally fanning out over the parallel [`ScoringPool`], then
+//! producer thread samples candidate batches without replacement,
+//! gathers their rows AND their precomputed-IL slice ahead of the
+//! trainer, bounded by a prefetch channel (backpressure) — the
+//! channel is the double buffer that hides every gather behind the
+//! train step. A second producer-side thread materializes the
+//! test-set eval buffer concurrently with the first train steps, so
+//! when the consumer reaches an eval boundary the rows are already
+//! gathered and are reused for every subsequent eval (the old loop
+//! re-gathered the whole test set each time, synchronously). The
+//! consumer walks a [`selection::provider`](crate::selection::provider)
+//! stack that computes exactly the signals `cfg.method` ranks on —
+//! fused RHO scores, fwd stats, MC-dropout, precomputed or online IL
+//! — optionally fanning out over the parallel [`ScoringPool`], then
 //! selects, trains, evaluates, and tracks. The synchronous
 //! [`Trainer`](super::trainer::Trainer) facade and the deployment
 //! pipeline ([`run_pipelined`]) are thin configurations of this one
@@ -17,11 +23,18 @@
 //! `tests/trainer_integration.rs`).
 //!
 //! Hot-path guarantees: candidate batches cross the channel as
-//! `Arc<CandBatch>` and are never cloned; the gradient step slices
-//! selected rows straight out of the candidate buffer the producer
-//! already materialized (no re-gather); and scoring snapshots theta
-//! via the versioned `Arc` in [`TrainState`](crate::runtime::params::TrainState)
-//! (refcount bump, no per-step full-parameter copy).
+//! [`Arc<CandBatch>`] and are never cloned — the scoring pool's
+//! workers slice `(start, take)` windows straight out of the shared
+//! buffer (zero-copy dispatch, see [`crate::runtime::pool`]); the
+//! gradient step slices selected rows out of the same buffer (no
+//! re-gather); scoring snapshots theta via the versioned `Arc` in
+//! [`TrainState`](crate::runtime::params::TrainState) (refcount bump,
+//! no per-step full-parameter copy); and the precomputed-IL slice
+//! reaches the fused-RHO workers as a refcount bump on the
+//! producer-side gather. When a pool is attached, per-worker load and
+//! dispatch/queue-wait timings are emitted through the event log at
+//! every eval boundary and returned in
+//! [`RunResult::pool_timings`](super::trainer::RunResult).
 
 use anyhow::{anyhow, bail, Context, Result};
 use std::sync::mpsc::sync_channel;
@@ -29,7 +42,7 @@ use std::sync::Arc;
 
 use crate::config::RunConfig;
 use crate::coordinator::events::EventLog;
-use crate::coordinator::metrics::{Curve, EvalPoint};
+use crate::coordinator::metrics::{Curve, DispatchTimings, EvalPoint};
 use crate::coordinator::tracker::SelectionTracker;
 use crate::coordinator::trainer::{IlContext, RunResult};
 use crate::data::loader::EpochSampler;
@@ -42,18 +55,7 @@ use crate::util::math::top_k_indices;
 use crate::util::rng::Pcg32;
 use crate::util::timer::Stopwatch;
 
-/// One producer-prepared candidate batch: the sampled dataset indices
-/// plus their gathered rows, shared with the scoring providers by
-/// reference (no per-step index or feature clones).
-pub struct CandBatch {
-    pub step: u64,
-    /// The sampler crossed an epoch boundary serving this batch
-    /// (drives tracker/event epoch accounting on the consumer side).
-    pub rolled: bool,
-    pub idx: Vec<u32>,
-    pub xs: Vec<f32>,
-    pub ys: Vec<i32>,
-}
+pub use crate::runtime::pool::CandBatch;
 
 /// The unified engine. `pool: None` scores inline on the calling
 /// thread (the reference shape); `pool: Some` fans scoring out across
@@ -161,25 +163,46 @@ impl<'a> Engine<'a> {
         let mut tracker = SelectionTracker::new();
         let mut last_acc = 0.0f32;
         let sw = Stopwatch::start();
+        // Per-run pool observability: pools are cached across runs, so
+        // subtract a run-start snapshot from the cumulative counters.
+        let pool_start = self.pool.map(|p| p.report());
 
-        // --- producer + consumer -------------------------------------
+        // --- producers + consumer ------------------------------------
         let seed = cfg.seed;
+        // The precomputed-IL table is gathered producer-side (the
+        // consumer's IL provider becomes a refcount bump); online IL
+        // scores with live parameters, so nothing to pre-gather there.
+        let producer_il: Option<&[f32]> =
+            if method.needs_il() && il_state.is_none() { il_values } else { None };
         let (tx, rx) = sync_channel::<Arc<CandBatch>>(self.prefetch_depth.max(1));
+        // Eval double buffer: the test-set rows materialize on their
+        // own thread while the first train steps run, then serve every
+        // eval boundary without re-gathering.
+        let (etx, erx) = sync_channel::<(Vec<f32>, Vec<i32>)>(1);
+        let test_set = &bundle.test;
         std::thread::scope(|scope| -> Result<()> {
             let producer = scope.spawn(move || {
                 let mut sampler = EpochSampler::new(n, seed ^ 0xBA7C);
                 for step in 1..=total_steps {
                     let (idx, rolled) = sampler.take_batch(big);
                     let (xs, ys) = train.gather(&idx);
-                    if tx.send(Arc::new(CandBatch { step, rolled, idx, xs, ys })).is_err() {
+                    let il = producer_il.map(|table| {
+                        Arc::new(idx.iter().map(|&i| table[i as usize]).collect::<Vec<f32>>())
+                    });
+                    if tx.send(Arc::new(CandBatch { step, rolled, idx, xs, ys, il })).is_err() {
                         return; // consumer gone
                     }
                 }
+            });
+            scope.spawn(move || {
+                let idx: Vec<u32> = (0..test_set.len() as u32).collect();
+                let _ = etx.send(test_set.gather(&idx)); // consumer may be gone
             });
 
             let res = (|| -> Result<()> {
                 let (mut sel_xs, mut sel_ys) = (Vec::new(), Vec::new());
                 let mut sig = SignalSet::default();
+                let mut eval_buf: Option<(Vec<f32>, Vec<i32>)> = None;
                 let mut mcd_seed = cfg.seed as i32;
                 let d = self.target.d;
                 for _ in 0..total_steps {
@@ -198,12 +221,9 @@ impl<'a> Engine<'a> {
                     sig.clear();
                     {
                         let ctx = StepCtx {
-                            step: b.step,
                             theta: &state.theta,
                             il_theta: il_state.as_ref().map(|s| &s.theta),
-                            idx: &b.idx,
-                            xs: &b.xs,
-                            ys: &b.ys,
+                            batch: &b,
                             mcd_seed,
                         };
                         for p in providers.iter_mut() {
@@ -211,7 +231,7 @@ impl<'a> Engine<'a> {
                                 .with_context(|| format!("signal provider `{}`", p.name()))?;
                         }
                     }
-                    let sel = select(method, &sig.candidates(b.idx.len()), cfg.nb, &mut rng);
+                    let sel = select(method, &sig.candidates(b.n()), cfg.nb, &mut rng);
 
                     // property tracking (ground-truth meta of selected points)
                     if cfg.track_props {
@@ -249,7 +269,15 @@ impl<'a> Engine<'a> {
                     }
 
                     if b.step % eval_every == 0 || b.step == total_steps {
-                        let ev = self.target.eval_on(&state.theta, &bundle.test)?;
+                        // first boundary: adopt the producer-side
+                        // gather (normally long since materialized)
+                        if eval_buf.is_none() {
+                            eval_buf = Some(
+                                erx.recv().map_err(|_| anyhow!("eval gather thread died"))?,
+                            );
+                        }
+                        let (exs, eys) = eval_buf.as_ref().expect("just filled");
+                        let ev = self.target.eval_on_gathered(&state.theta, exs, eys)?;
                         last_acc = ev.accuracy;
                         let epoch = b.step as f64 / steps_per_epoch as f64;
                         events.eval(b.step, epoch, ev.accuracy, ev.mean_loss);
@@ -259,18 +287,28 @@ impl<'a> Engine<'a> {
                             accuracy: ev.accuracy,
                             loss: ev.mean_loss,
                         });
+                        if let (Some(p), Some(start)) = (self.pool, &pool_start) {
+                            events.pool_stats(&DispatchTimings::from_report(
+                                &p.report().since(start),
+                            ));
+                        }
                     }
                 }
                 Ok(())
             })();
-            // Unblock a producer stuck on a full channel before joining
+            // Unblock producers stuck on a full channel before joining
             // (early error paths), then surface producer panics.
             drop(rx);
+            drop(erx);
             producer.join().map_err(|_| anyhow!("candidate producer panicked"))?;
             res
         })?;
 
         tracker.roll_epoch(last_acc);
+        let pool_timings = match (self.pool, &pool_start) {
+            (Some(p), Some(start)) => Some(DispatchTimings::from_report(&p.report().since(start))),
+            _ => None,
+        };
         events.run_end(last_acc, sw.elapsed_s());
 
         let il_final_accuracy = match (&il_state, self.il_rt) {
@@ -284,6 +322,7 @@ impl<'a> Engine<'a> {
             steps: total_steps,
             train_secs: sw.elapsed_s(),
             il_final_accuracy,
+            pool_timings,
         })
     }
 }

@@ -90,6 +90,24 @@ impl EventLog {
         );
     }
 
+    /// Scoring-pool load-balance observability: per-worker chunk
+    /// loads and EMA rates plus dispatch/queue-wait timings, emitted
+    /// at every eval boundary (cumulative since run start).
+    pub fn pool_stats(&mut self, t: &crate::coordinator::metrics::DispatchTimings) {
+        self.emit(
+            "pool_stats",
+            vec![
+                ("dispatches", num(t.dispatches as f64)),
+                ("chunks", num(t.chunks as f64)),
+                ("mean_queue_wait_us", num(t.mean_queue_wait_us)),
+                ("mean_busy_us", num(t.mean_busy_us)),
+                ("imbalance", num(t.imbalance())),
+                ("worker_chunks", arr(t.worker_chunks.iter().map(|&c| num(c as f64)))),
+                ("worker_rates", arr(t.worker_rates.iter().map(|&r| num(r)))),
+            ],
+        );
+    }
+
     pub fn epoch_roll(&mut self, epoch: usize, frac_noisy: f32) {
         self.emit(
             "epoch",
@@ -157,6 +175,31 @@ mod tests {
         log.step(1, 1.0, &[], 0.0);
         log.run_end(0.5, 0.1);
         assert_eq!(log.written, 0);
+    }
+
+    #[test]
+    fn pool_stats_event_round_trips() {
+        let path = tmp("c").join("run.jsonl");
+        let mut log = EventLog::create(&path).unwrap();
+        let t = crate::coordinator::metrics::DispatchTimings {
+            dispatches: 3,
+            chunks: 12,
+            mean_queue_wait_us: 42.0,
+            mean_busy_us: 1200.0,
+            worker_chunks: vec![9, 3],
+            worker_rates: vec![3.0, 1.0],
+        };
+        log.pool_stats(&t);
+        log.run_end(0.0, 0.0);
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("pool_stats"));
+        assert_eq!(v.get("chunks").unwrap().as_f64(), Some(12.0));
+        assert_eq!(v.get("worker_chunks").unwrap().as_array().unwrap().len(), 2);
+        assert_eq!(v.get("worker_rates").unwrap().as_array().unwrap()[0].as_f64(), Some(3.0));
+        assert!(v.get("imbalance").unwrap().as_f64().unwrap() > 1.0);
+        std::fs::remove_dir_all(tmp("c")).ok();
     }
 
     #[test]

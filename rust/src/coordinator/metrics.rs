@@ -1,9 +1,73 @@
 //! Training curves and the paper's headline metric: epochs (or steps)
-//! to reach a target test accuracy (§4.0 Evaluation).
+//! to reach a target test accuracy (§4.0 Evaluation) — plus the
+//! scoring-pool dispatch/queue-wait timings that make rate-aware
+//! balancing observable per run.
 
 use std::path::Path;
 
+use crate::runtime::pool::PoolReport;
 use crate::util::csvio::CsvWriter;
+
+/// Per-run scoring-pool dispatch timings, aggregated from a
+/// [`PoolReport`] delta (pools are cached across runs). The headline
+/// numbers for the ISSUE-2 hot path: how long chunks sat in worker
+/// lanes (`mean_queue_wait_us`), how long workers computed
+/// (`mean_busy_us`), and how evenly the rate-aware planner spread the
+/// load (`worker_chunks` / `imbalance`).
+#[derive(Clone, Debug, Default)]
+pub struct DispatchTimings {
+    pub dispatches: u64,
+    pub chunks: u64,
+    /// Mean per-chunk lane wait (enqueue → worker pickup).
+    pub mean_queue_wait_us: f64,
+    /// Mean per-chunk worker execution time.
+    pub mean_busy_us: f64,
+    /// Chunks processed per worker.
+    pub worker_chunks: Vec<u64>,
+    /// Point-in-time EMA service-rate estimates (chunks/sec).
+    pub worker_rates: Vec<f64>,
+}
+
+impl DispatchTimings {
+    pub fn from_report(r: &PoolReport) -> DispatchTimings {
+        let per_chunk = 1e6 / r.chunks.max(1) as f64;
+        DispatchTimings {
+            dispatches: r.dispatches,
+            chunks: r.chunks,
+            mean_queue_wait_us: r.queue_wait_s * per_chunk,
+            mean_busy_us: r.busy_s * per_chunk,
+            worker_chunks: r.per_worker.iter().map(|w| w.chunks).collect(),
+            worker_rates: r.per_worker.iter().map(|w| w.rate).collect(),
+        }
+    }
+
+    /// Max/mean chunk-count ratio across workers: 1.0 is perfectly
+    /// balanced; >> 1.0 means one lane dominated. On heterogeneous
+    /// hosts imbalance in *chunks* is expected and healthy — the
+    /// planner matches it to service rates so *time* stays balanced.
+    pub fn imbalance(&self) -> f64 {
+        let k = self.worker_chunks.len();
+        if k == 0 || self.chunks == 0 {
+            return 1.0;
+        }
+        let max = *self.worker_chunks.iter().max().unwrap() as f64;
+        let mean = self.chunks as f64 / k as f64;
+        if mean > 0.0 { max / mean } else { 1.0 }
+    }
+
+    /// One-line run-report rendering.
+    pub fn summary(&self) -> String {
+        format!(
+            "pool: {} dispatches, {} chunks, queue-wait {:.0}us/chunk, busy {:.0}us/chunk, loads {:?} (imbalance {:.2}x)",
+            self.dispatches,
+            self.chunks,
+            self.mean_queue_wait_us,
+            self.mean_busy_us,
+            self.worker_chunks,
+            self.imbalance()
+        )
+    }
+}
 
 /// One test-set evaluation during training.
 #[derive(Clone, Copy, Debug)]
@@ -139,5 +203,30 @@ mod tests {
     fn fmt_matches_paper_convention() {
         assert_eq!(fmt_epochs(Some(13.0)), "13.0");
         assert_eq!(fmt_epochs(None), "NR");
+    }
+
+    #[test]
+    fn dispatch_timings_aggregate_report() {
+        use crate::runtime::pool::WorkerStat;
+        let r = PoolReport {
+            dispatches: 4,
+            chunks: 10,
+            queue_wait_s: 0.001, // 100us per chunk
+            busy_s: 0.01,        // 1000us per chunk
+            per_worker: vec![
+                WorkerStat { chunks: 8, busy_s: 0.008, rate: 4.0 },
+                WorkerStat { chunks: 2, busy_s: 0.002, rate: 1.0 },
+            ],
+        };
+        let t = DispatchTimings::from_report(&r);
+        assert_eq!((t.dispatches, t.chunks), (4, 10));
+        assert!((t.mean_queue_wait_us - 100.0).abs() < 1e-6);
+        assert!((t.mean_busy_us - 1000.0).abs() < 1e-6);
+        assert_eq!(t.worker_chunks, vec![8, 2]);
+        // 8 of 10 chunks on one of two workers: max/mean = 8/5
+        assert!((t.imbalance() - 1.6).abs() < 1e-9);
+        assert!(t.summary().contains("10 chunks"));
+        // empty report is balanced by definition
+        assert_eq!(DispatchTimings::default().imbalance(), 1.0);
     }
 }

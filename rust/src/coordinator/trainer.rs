@@ -15,7 +15,7 @@ use anyhow::Result;
 
 use crate::config::RunConfig;
 use crate::coordinator::engine::Engine;
-use crate::coordinator::metrics::Curve;
+use crate::coordinator::metrics::{Curve, DispatchTimings};
 use crate::coordinator::tracker::SelectionTracker;
 use crate::data::Bundle;
 use crate::runtime::handle::ModelRuntime;
@@ -41,6 +41,9 @@ pub struct RunResult {
     /// Final accuracy of the (possibly online-updated) IL model
     /// (Fig. 7 right). None unless online_il.
     pub il_final_accuracy: Option<f32>,
+    /// Scoring-pool dispatch/queue-wait timings + per-worker load for
+    /// this run (None when no pool was attached).
+    pub pool_timings: Option<DispatchTimings>,
 }
 
 /// Algorithm-1 training orchestrator (engine facade).

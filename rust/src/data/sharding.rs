@@ -3,6 +3,12 @@
 //! workers without the diminishing returns of gradient parallelism, so
 //! B_t is split into near-equal contiguous shards, one per worker, and
 //! shard sizes are rebalanced from observed worker throughput.
+//!
+//! [`plan_dispatch`] is the pool's chunk planner: chunk *boundaries*
+//! are always the fixed artifact-shaped windows `[k·nb, k·nb + take)`
+//! (identical to uniform dispatch, so scores stay bit-identical
+//! whatever the rates say), while chunk *counts* per worker follow
+//! [`proportional_shards`] over the [`RateEma`] service rates.
 
 /// Split `n` items into `k` contiguous shards whose sizes differ by at
 /// most one. Returns (start, len) pairs; empty shards allowed if k > n.
@@ -80,6 +86,86 @@ pub fn ema_update(rates: &mut [f64], observed: &[f64], alpha: f64) {
             *r = if *r > 0.0 { alpha * o + (1.0 - alpha) * *r } else { o };
         }
     }
+}
+
+/// Per-worker EMA service rates (chunks/sec), sampled from dispatch
+/// completion timestamps. Starts all-zero, which [`proportional_shards`]
+/// treats as "no information yet" and falls back to an even split.
+#[derive(Clone, Debug)]
+pub struct RateEma {
+    rates: Vec<f64>,
+    alpha: f64,
+}
+
+impl RateEma {
+    /// Default smoothing when the caller passes an out-of-range alpha.
+    pub const DEFAULT_ALPHA: f64 = 0.3;
+
+    /// `alpha` outside (0, 1] — including NaN — falls back to
+    /// [`Self::DEFAULT_ALPHA`] instead of poisoning every subsequent
+    /// EMA update.
+    pub fn new(workers: usize, alpha: f64) -> RateEma {
+        let alpha = if alpha > 0.0 && alpha <= 1.0 { alpha } else { Self::DEFAULT_ALPHA };
+        RateEma { rates: vec![0.0; workers], alpha }
+    }
+
+    /// Fold one dispatch's observed rates in (zeros/NaN/inf observations
+    /// are ignored per worker, so idle workers keep their last estimate).
+    pub fn observe(&mut self, observed: &[f64]) {
+        ema_update(&mut self.rates, observed, self.alpha);
+    }
+
+    pub fn rates(&self) -> &[f64] {
+        &self.rates
+    }
+
+    /// Overwrite the estimates wholesale (ops/test hook: inject a
+    /// hostile or known-skewed rate vector).
+    pub fn set(&mut self, rates: &[f64]) {
+        let k = self.rates.len();
+        self.rates.clear();
+        self.rates.extend(rates.iter().copied().chain(std::iter::repeat(0.0)).take(k));
+    }
+}
+
+/// One planned scoring chunk: the candidate window
+/// `[start, start + take)` of the batch (row base `chunk * nb`),
+/// assigned to `worker`'s request lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkPlan {
+    /// Global chunk index within the dispatch (response routing key).
+    pub chunk: usize,
+    /// First candidate row of the window.
+    pub start: usize,
+    /// Real rows in the window (`< nb` only for the ragged tail).
+    pub take: usize,
+    /// Lane the chunk is sent to.
+    pub worker: usize,
+}
+
+/// Plan one pool dispatch of `n` candidates through artifact-shaped
+/// chunks of `nb` rows across `rates.len()` workers.
+///
+/// Invariants (property-tested below):
+/// - chunk boundaries are exactly the uniform-dispatch boundaries
+///   `start = k·nb`, `take = min(nb, n − start)` — rate skew moves
+///   chunks *between lanes*, never resizes them, so per-chunk scores
+///   are bitwise-independent of the rate vector;
+/// - every candidate is covered exactly once;
+/// - chunk counts per worker follow [`proportional_shards`] (even
+///   split under degenerate rates, no starvation while chunks remain).
+pub fn plan_dispatch(n: usize, nb: usize, rates: &[f64]) -> Vec<ChunkPlan> {
+    assert!(nb > 0);
+    let chunks = n.div_ceil(nb);
+    let shards = proportional_shards(chunks, rates);
+    let mut out = Vec::with_capacity(chunks);
+    for (worker, &(shard_start, shard_len)) in shards.iter().enumerate() {
+        for chunk in shard_start..shard_start + shard_len {
+            let start = chunk * nb;
+            out.push(ChunkPlan { chunk, start, take: nb.min(n - start), worker });
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -221,5 +307,122 @@ mod tests {
         let mut rates = vec![10.0, 0.0];
         ema_update(&mut rates, &[20.0, 5.0], 0.5);
         assert_eq!(rates, vec![15.0, 5.0]);
+    }
+
+    #[test]
+    fn rate_ema_sanitizes_hostile_alpha() {
+        for bad in [f64::NAN, 0.0, -1.0, 2.0, f64::INFINITY] {
+            let mut ema = RateEma::new(2, bad);
+            ema.observe(&[10.0, 10.0]);
+            ema.observe(&[20.0, 20.0]);
+            assert!(
+                ema.rates().iter().all(|r| r.is_finite() && *r > 0.0),
+                "alpha {bad} poisoned rates: {:?}",
+                ema.rates()
+            );
+        }
+    }
+
+    #[test]
+    fn rate_ema_ignores_degenerate_observations() {
+        let mut ema = RateEma::new(3, 0.5);
+        assert_eq!(ema.rates(), &[0.0, 0.0, 0.0]);
+        ema.observe(&[10.0, f64::NAN, 0.0]);
+        assert_eq!(ema.rates(), &[10.0, 0.0, 0.0]);
+        ema.observe(&[20.0, 4.0, f64::INFINITY]);
+        assert_eq!(ema.rates(), &[15.0, 4.0, 0.0]);
+        ema.set(&[1.0, 2.0]); // short vector pads with zeros
+        assert_eq!(ema.rates(), &[1.0, 2.0, 0.0]);
+    }
+
+    fn hostile_rates(rng: &mut crate::util::rng::Pcg32, k: usize) -> Vec<f64> {
+        (0..k)
+            .map(|_| match rng.below(6) {
+                0 => 0.0,
+                1 => f64::NAN,
+                2 => f64::INFINITY,
+                3 => 1e-12,
+                4 => 1e12,
+                _ => rng.f32() as f64 * 100.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn plan_dispatch_covers_every_candidate_exactly_once_prop() {
+        // Satellite guarantee, part 1: under hostile/degenerate EMA
+        // rates, the union of planned windows is a disjoint cover of
+        // [0, n) and every global chunk index appears exactly once.
+        prop::check("plan-dispatch-cover", 150, |rng| {
+            let nb = 1 + rng.below(320);
+            let n = rng.below(10_000);
+            let k = 1 + rng.below(16);
+            let rates = hostile_rates(rng, k);
+            let plan = plan_dispatch(n, nb, &rates);
+            let chunks = n.div_ceil(nb);
+            if plan.len() != chunks {
+                return Err(format!("{} chunks planned, want {chunks}", plan.len()));
+            }
+            let mut covered = vec![0u8; n];
+            let mut seen_chunk = vec![false; chunks];
+            for c in &plan {
+                if c.worker >= k {
+                    return Err(format!("bogus worker {}", c.worker));
+                }
+                if seen_chunk[c.chunk] {
+                    return Err(format!("chunk {} planned twice", c.chunk));
+                }
+                seen_chunk[c.chunk] = true;
+                for i in c.start..c.start + c.take {
+                    covered[i] += 1;
+                }
+            }
+            if covered.iter().any(|&c| c != 1) {
+                return Err("a candidate was scored zero or multiple times".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn plan_dispatch_boundaries_match_uniform_dispatch_prop() {
+        // Satellite guarantee, part 2: chunk windows are byte-for-byte
+        // the uniform-dispatch windows regardless of the rate vector —
+        // the precondition for bitwise-equal scores (each fixed window
+        // is scored by the same deterministic executable wherever it
+        // lands).
+        prop::check("plan-dispatch-uniform-boundaries", 150, |rng| {
+            let nb = 1 + rng.below(320);
+            let n = rng.below(10_000);
+            let k = 1 + rng.below(16);
+            let rates = hostile_rates(rng, k);
+            for c in plan_dispatch(n, nb, &rates) {
+                if c.start != c.chunk * nb {
+                    return Err(format!("chunk {} starts at {}", c.chunk, c.start));
+                }
+                if c.take != nb.min(n - c.start) {
+                    return Err(format!("chunk {} resized to {}", c.chunk, c.take));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn plan_dispatch_tracks_rates_and_respects_no_starvation() {
+        // 10 chunks, 4x rate skew: the fast lane gets ~4x the chunks.
+        let plan = plan_dispatch(3200, 320, &[4.0, 1.0]);
+        let per: Vec<usize> =
+            (0..2).map(|w| plan.iter().filter(|c| c.worker == w).count()).collect();
+        assert_eq!(per.iter().sum::<usize>(), 10);
+        assert_eq!(per, vec![8, 2]);
+        // all-degenerate rates fall back to the even split
+        let plan = plan_dispatch(3200, 320, &[0.0, f64::NAN]);
+        let per: Vec<usize> =
+            (0..2).map(|w| plan.iter().filter(|c| c.worker == w).count()).collect();
+        assert_eq!(per, vec![5, 5]);
+        // extreme skew still feeds the slow lane (rate probe)
+        let plan = plan_dispatch(3200, 320, &[1e9, 1e-9]);
+        assert!(plan.iter().any(|c| c.worker == 1), "slow lane starved");
     }
 }

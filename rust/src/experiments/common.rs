@@ -26,9 +26,12 @@ pub struct Lab {
     runtimes: RefCell<HashMap<(String, usize, usize, usize), Rc<ModelRuntime>>>,
     il_cache: RefCell<HashMap<String, Rc<IlContext>>>,
     bundles: RefCell<HashMap<String, Rc<Bundle>>>,
-    /// Pools keyed by (arch, d, c, workers, queue_depth) — workers own
-    /// compiled executables, so reuse across runs matters.
-    pools: RefCell<HashMap<(String, usize, usize, usize, usize), Rc<ScoringPool>>>,
+    /// Pools keyed by (arch, d, c, workers, lane_depth, rate_alpha
+    /// bits) — workers own compiled executables, so reuse across runs
+    /// matters. (EMA rate state carries across runs of the same pool;
+    /// that's intended — it is a host property, not a run property.)
+    #[allow(clippy::type_complexity)]
+    pools: RefCell<HashMap<(String, usize, usize, usize, usize, u64), Rc<ScoringPool>>>,
     pub scale: f64,
 }
 
@@ -117,14 +120,15 @@ impl Lab {
     }
 
     /// Scoring pool for `cfg`'s (arch, dataset) combo, sized from
-    /// `cfg.workers` / `cfg.queue_depth` (see `PoolConfig::from_run`).
-    /// Cached: pool workers each hold compiled executables. Attaches
-    /// the mcdropout artifact when the manifest has one, so App. G
-    /// methods stream through the pool too.
+    /// `cfg.workers` / `cfg.lane_depth` / `cfg.rate_alpha` (see
+    /// `PoolConfig::from_run`). Cached: pool workers each hold
+    /// compiled executables. Attaches the mcdropout artifact when the
+    /// manifest has one, so App. G methods stream through the pool
+    /// too.
     pub fn pool(&self, cfg: &RunConfig) -> Result<Rc<ScoringPool>> {
         let (d, c) = catalog::dims_for(&cfg.dataset);
         let pc = PoolConfig::from_run(cfg);
-        let key = (cfg.arch.clone(), d, c, pc.workers, pc.queue_depth);
+        let key = (cfg.arch.clone(), d, c, pc.workers, pc.lane_depth, pc.rate_alpha.to_bits());
         if let Some(p) = self.pools.borrow().get(&key) {
             return Ok(Rc::clone(p));
         }

@@ -46,7 +46,7 @@ fn print_help() {
          experiments: {}\n\n\
          config keys: dataset arch il_arch method epochs seed nb select_frac lr wd\n\
          eval_every scale track_props no_holdout online_il il_lr_scale\n\
-         il_epochs svp_frac workers queue_depth prefetch events",
+         il_epochs svp_frac workers queue_depth lane_depth rate_alpha prefetch events",
         experiments::ALL.join(" ")
     );
 }
@@ -69,6 +69,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
     );
     for p in &res.curve.points {
         println!("  epoch {:>6.2}  step {:>6}  acc {:.4}  loss {:.4}", p.epoch, p.step, p.accuracy, p.loss);
+    }
+    if let Some(t) = &res.pool_timings {
+        println!("{}", t.summary());
     }
     let out = ctx.out_dir("train")?;
     res.curve.write_csv(&out.join(format!("{}.csv", cfg.tag().replace('/', "_"))))?;

@@ -291,12 +291,19 @@ impl ModelRuntime {
     pub fn eval_on(&self, theta: &[f32], ds: &Dataset) -> Result<EvalResult> {
         let idx: Vec<u32> = (0..ds.len() as u32).collect();
         let (xs, ys) = ds.gather(&idx);
-        let stats = self.fwd(theta, &xs, &ys)?;
-        let n = ds.len();
+        self.eval_on_gathered(theta, &xs, &ys)
+    }
+
+    /// [`eval_on`](Self::eval_on) over rows someone else already
+    /// gathered — the engine's double-buffered eval path materializes
+    /// the test set once on a producer-side thread and reuses the
+    /// buffer at every eval boundary instead of re-gathering.
+    pub fn eval_on_gathered(&self, theta: &[f32], xs: &[f32], ys: &[i32]) -> Result<EvalResult> {
+        let stats = self.fwd(theta, xs, ys)?;
         Ok(EvalResult {
             accuracy: crate::util::math::mean(&stats.correct),
             mean_loss: crate::util::math::mean(&stats.loss),
-            n,
+            n: ys.len(),
         })
     }
 

@@ -11,4 +11,4 @@ pub mod pool;
 pub use artifact::{ArtifactMeta, Manifest};
 pub use handle::{cpu_client, EvalResult, FwdStats, McdStats, ModelRuntime};
 pub use params::TrainState;
-pub use pool::{PoolConfig, ScoringPool};
+pub use pool::{CandBatch, PoolConfig, PoolReport, ScoringPool, WorkerStat};

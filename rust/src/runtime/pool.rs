@@ -9,73 +9,161 @@
 //! stats (`mcdropout`, App. G methods) when an mcdropout artifact is
 //! attached at construction.
 //!
+//! ## Zero-copy dispatch
+//!
+//! A request is a *window*: an [`Arc<CandBatch>`] refcount bump (the
+//! buffer the engine's producer already gathered) plus `(start, take)`
+//! bounds. The dispatcher never copies candidate rows — workers slice
+//! their window straight out of the shared buffer, and only the ragged
+//! tail chunk is padded (worker-side, into a per-worker scratch buffer,
+//! repeating the chunk's first row exactly like the inline
+//! `ModelRuntime` path so pooled scores stay bit-identical to it).
+//! Workers also cache the theta literal across chunks of the same
+//! parameter snapshot (`Arc::ptr_eq`), so one dispatch uploads theta
+//! once per worker, not once per chunk.
+//!
+//! ## Rate-aware lanes
+//!
+//! Each worker owns a private bounded request lane (backpressure:
+//! `lane_depth` in-flight chunks per worker), replacing the old single
+//! shared queue, so a fast worker is never head-of-line blocked behind
+//! a slow one. How many chunks each lane receives is decided by
+//! [`plan_dispatch`]: per-worker EMA service rates
+//! ([`RateEma`], sampled from completion timestamps) drive
+//! [`proportional_shards`](crate::data::sharding::proportional_shards)
+//! over the chunk count. Chunk *boundaries* stay the uniform
+//! artifact-shaped windows whatever the rates say — rate skew moves
+//! chunks between lanes, never resizes them — which is what pins
+//! rate-aware scores bitwise to uniform dispatch (property-tested in
+//! `data::sharding`, artifact-tested in `tests/pool_integration.rs`).
+//!
 //! The `xla` handles are not `Send`, so every worker owns a private
-//! PJRT client + executables, created inside the worker thread. Work
-//! arrives over a shared bounded queue (backpressure: requests block
-//! when `queue_depth` chunks are already in flight); plain data
-//! (`Vec<f32>`) crosses the thread boundary, never XLA handles.
+//! PJRT client + executables, created inside the worker thread; plain
+//! data crosses the thread boundary, never XLA handles.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
+use xla::Literal;
 
 use crate::config::RunConfig;
+use crate::data::sharding::{plan_dispatch, ChunkPlan, RateEma};
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::executor::{lit_f32, lit_i32, Executor};
 use crate::runtime::handle::{FwdStats, McdStats};
+
+/// One producer-prepared candidate batch: the sampled dataset indices
+/// plus their gathered rows, shared by `Arc` between the engine, the
+/// signal providers, and the pool workers (no per-step row copies
+/// anywhere on the scoring path). `il` is the producer-side gather of
+/// the precomputed irreducible-loss table for these indices, when the
+/// selection method consumes one.
+pub struct CandBatch {
+    pub step: u64,
+    /// The sampler crossed an epoch boundary serving this batch
+    /// (drives tracker/event epoch accounting on the consumer side).
+    pub rolled: bool,
+    /// Dataset indices of the candidates.
+    pub idx: Vec<u32>,
+    /// Row-major features, `n() * d`.
+    pub xs: Vec<f32>,
+    pub ys: Vec<i32>,
+    /// Precomputed IL values for `idx`, gathered producer-side so the
+    /// consumer's IL provider is one refcount bump.
+    pub il: Option<Arc<Vec<f32>>>,
+}
+
+impl CandBatch {
+    /// Number of candidates.
+    pub fn n(&self) -> usize {
+        self.ys.len()
+    }
+
+    /// A bare scoring batch with no sampler bookkeeping — the shape
+    /// benches and tests feed straight to the pool.
+    pub fn for_scoring(xs: Vec<f32>, ys: Vec<i32>) -> Arc<CandBatch> {
+        Arc::new(CandBatch { step: 0, rolled: false, idx: Vec::new(), xs, ys, il: None })
+    }
+}
 
 /// Pool construction parameters.
 #[derive(Clone, Debug)]
 pub struct PoolConfig {
     pub workers: usize,
-    /// Max in-flight chunks before `score*` blocks (backpressure).
-    pub queue_depth: usize,
+    /// Max in-flight chunks per worker lane before dispatch blocks
+    /// (backpressure).
+    pub lane_depth: usize,
+    /// EMA smoothing for observed per-worker service rates in (0, 1];
+    /// higher chases recent observations harder.
+    pub rate_alpha: f64,
 }
 
 impl Default for PoolConfig {
     /// One worker per available core. There is deliberately no hidden
     /// upper clamp — large hosts size explicitly through
-    /// [`PoolConfig::from_run`] (`workers` / `queue_depth` config keys).
+    /// [`PoolConfig::from_run`] (`workers` / `lane_depth` /
+    /// `rate_alpha` config keys).
     fn default() -> Self {
         let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
-        PoolConfig { workers: workers.max(1), queue_depth: 32 }
+        PoolConfig { workers: workers.max(1), lane_depth: 8, rate_alpha: RateEma::DEFAULT_ALPHA }
     }
 }
 
 impl PoolConfig {
-    /// Pool sizing from a run config: `workers == 0` means "auto"
-    /// (one per core); `queue_depth` is taken as-is (min 1).
+    /// Pool sizing from a run config: `workers == 0` means "auto" (one
+    /// per core); `lane_depth == 0` derives per-lane capacity from the
+    /// legacy `queue_depth` total so older configs keep their overall
+    /// backpressure bound; `rate_alpha` outside (0, 1] falls back to
+    /// the default.
     pub fn from_run(cfg: &RunConfig) -> PoolConfig {
         let auto = PoolConfig::default();
-        PoolConfig {
-            workers: if cfg.workers == 0 { auto.workers } else { cfg.workers },
-            queue_depth: cfg.queue_depth.max(1),
-        }
+        let workers = if cfg.workers == 0 { auto.workers } else { cfg.workers };
+        let lane_depth = if cfg.lane_depth > 0 {
+            cfg.lane_depth
+        } else {
+            cfg.queue_depth.div_ceil(workers).max(1)
+        };
+        let rate_alpha = if cfg.rate_alpha > 0.0 && cfg.rate_alpha <= 1.0 {
+            cfg.rate_alpha
+        } else {
+            auto.rate_alpha
+        };
+        PoolConfig { workers, lane_depth, rate_alpha }
     }
 }
 
-/// How one dispatched chunk should be scored.
+/// How one dispatch should be scored.
 #[derive(Clone, Copy)]
 enum ReqKind<'a> {
     Fwd,
-    Rho(&'a [f32]),
+    Rho(&'a Arc<Vec<f32>>),
     Mcd(i32),
 }
 
+/// Routing + timing envelope shared by every request variant.
+struct Window {
+    chunk: usize,
+    start: usize,
+    take: usize,
+    enqueued: Instant,
+}
+
 enum Request {
-    Fwd { chunk: usize, take: usize, theta: Arc<Vec<f32>>, xs: Vec<f32>, ys: Vec<i32> },
-    Rho {
-        chunk: usize,
-        take: usize,
-        theta: Arc<Vec<f32>>,
-        xs: Vec<f32>,
-        ys: Vec<i32>,
-        il: Vec<f32>,
-    },
-    Mcd { chunk: usize, take: usize, theta: Arc<Vec<f32>>, xs: Vec<f32>, ys: Vec<i32>, seed: i32 },
+    Fwd { w: Window, theta: Arc<Vec<f32>>, batch: Arc<CandBatch> },
+    Rho { w: Window, theta: Arc<Vec<f32>>, batch: Arc<CandBatch>, il: Arc<Vec<f32>> },
+    Mcd { w: Window, theta: Arc<Vec<f32>>, batch: Arc<CandBatch>, seed: i32 },
+}
+
+impl Request {
+    fn window(&self) -> &Window {
+        match self {
+            Request::Fwd { w, .. } | Request::Rho { w, .. } | Request::Mcd { w, .. } => w,
+        }
+    }
 }
 
 enum Payload {
@@ -88,13 +176,76 @@ struct Response {
     chunk: usize,
     take: usize,
     worker: usize,
+    /// Lane wait: enqueue → worker pickup.
+    queue_wait: Duration,
+    /// Worker execution time for the chunk.
+    busy: Duration,
     payload: Result<Payload, String>,
 }
 
-/// Shared-queue scoring pool over one (arch, d, c) combo's fwd/select
-/// (and optionally mcdropout) artifacts.
+/// Cumulative per-worker scoring statistics.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkerStat {
+    pub chunks: u64,
+    pub busy_s: f64,
+    /// Current EMA service-rate estimate (chunks/sec).
+    pub rate: f64,
+}
+
+/// Cumulative dispatch observability snapshot ([`ScoringPool::report`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PoolReport {
+    pub dispatches: u64,
+    pub chunks: u64,
+    /// Summed over chunks: lane wait before a worker picked it up.
+    pub queue_wait_s: f64,
+    /// Summed worker execution time.
+    pub busy_s: f64,
+    pub per_worker: Vec<WorkerStat>,
+}
+
+impl PoolReport {
+    /// Counters accumulated since an `earlier` snapshot of the same
+    /// pool (pools are cached across runs, so per-run observability
+    /// subtracts a run-start snapshot). Rate estimates are
+    /// point-in-time and taken from `self`.
+    pub fn since(&self, earlier: &PoolReport) -> PoolReport {
+        PoolReport {
+            dispatches: self.dispatches.saturating_sub(earlier.dispatches),
+            chunks: self.chunks.saturating_sub(earlier.chunks),
+            queue_wait_s: (self.queue_wait_s - earlier.queue_wait_s).max(0.0),
+            busy_s: (self.busy_s - earlier.busy_s).max(0.0),
+            per_worker: self
+                .per_worker
+                .iter()
+                .enumerate()
+                .map(|(i, w)| {
+                    let e = earlier.per_worker.get(i).cloned().unwrap_or_default();
+                    WorkerStat {
+                        chunks: w.chunks.saturating_sub(e.chunks),
+                        busy_s: (w.busy_s - e.busy_s).max(0.0),
+                        rate: w.rate,
+                    }
+                })
+                .collect(),
+        }
+    }
+}
+
+#[derive(Default)]
+struct StatsInner {
+    dispatches: u64,
+    chunks: u64,
+    queue_wait_s: f64,
+    busy_s: f64,
+    worker_chunks: Vec<u64>,
+    worker_busy_s: Vec<f64>,
+}
+
+/// Rate-aware, zero-copy scoring pool over one (arch, d, c) combo's
+/// fwd/select (and optionally mcdropout) artifacts.
 pub struct ScoringPool {
-    req_tx: Option<SyncSender<Request>>,
+    lanes: Vec<SyncSender<Request>>,
     resp_rx: Receiver<Response>,
     handles: Vec<JoinHandle<()>>,
     pub select_batch: usize,
@@ -103,6 +254,8 @@ pub struct ScoringPool {
     pub workers: usize,
     has_mcd: bool,
     processed: Vec<Arc<AtomicUsize>>,
+    rates: Mutex<RateEma>,
+    stats: Mutex<StatsInner>,
 }
 
 impl ScoringPool {
@@ -120,10 +273,17 @@ impl ScoringPool {
             .ok_or_else(|| anyhow!("fwd artifact has no batch size"))?;
         let d = fwd_meta.d;
         let param_count = fwd_meta.param_count;
-        // dispatch() pads every chunk to the fwd artifact's shape, so
-        // an mcdropout artifact with a different batch/d would fail
-        // per-request with confusing literal-shape errors — reject it
-        // here instead.
+        // Workers pad every chunk to the fwd artifact's shape, so a
+        // select/mcdropout artifact with a different batch/d would
+        // fail per-request with confusing literal-shape errors —
+        // reject the mismatch here instead.
+        if select_meta.batch() != Some(select_batch) || select_meta.d != d {
+            bail!(
+                "select artifact shape (batch {:?}, d {}) != fwd artifact (batch {select_batch}, d {d})",
+                select_meta.batch(),
+                select_meta.d
+            );
+        }
         if let Some(m) = mcd_meta {
             if m.batch() != Some(select_batch) || m.d != d {
                 bail!(
@@ -133,13 +293,14 @@ impl ScoringPool {
                 );
             }
         }
-        let (req_tx, req_rx) = sync_channel::<Request>(cfg.queue_depth.max(1));
-        let req_rx = Arc::new(Mutex::new(req_rx));
+        let workers = cfg.workers.max(1);
         let (resp_tx, resp_rx) = channel::<Response>();
+        let mut lanes = Vec::with_capacity(workers);
         let mut handles = Vec::new();
         let mut processed = Vec::new();
-        for wid in 0..cfg.workers.max(1) {
-            let rx = Arc::clone(&req_rx);
+        for wid in 0..workers {
+            let (lane_tx, lane_rx) = sync_channel::<Request>(cfg.lane_depth.max(1));
+            lanes.push(lane_tx);
             let tx = resp_tx.clone();
             let fwd_meta = fwd_meta.clone();
             let select_meta = select_meta.clone();
@@ -147,19 +308,25 @@ impl ScoringPool {
             let counter = Arc::new(AtomicUsize::new(0));
             processed.push(Arc::clone(&counter));
             handles.push(std::thread::spawn(move || {
-                worker_main(wid, rx, tx, fwd_meta, select_meta, mcd_meta, counter);
+                worker_main(wid, lane_rx, tx, fwd_meta, select_meta, mcd_meta, counter);
             }));
         }
         Ok(ScoringPool {
-            req_tx: Some(req_tx),
+            lanes,
             resp_rx,
             handles,
             select_batch,
             d,
             param_count,
-            workers: cfg.workers.max(1),
+            workers,
             has_mcd: mcd_meta.is_some(),
             processed,
+            rates: Mutex::new(RateEma::new(workers, cfg.rate_alpha)),
+            stats: Mutex::new(StatsInner {
+                worker_chunks: vec![0; workers],
+                worker_busy_s: vec![0.0; workers],
+                ..Default::default()
+            }),
         })
     }
 
@@ -173,50 +340,80 @@ impl ScoringPool {
         self.processed.iter().map(|c| c.load(Ordering::Relaxed)).collect()
     }
 
+    /// Current per-worker EMA service-rate estimates (chunks/sec).
+    pub fn worker_rates(&self) -> Vec<f64> {
+        self.rates.lock().unwrap().rates().to_vec()
+    }
+
+    /// Overwrite the EMA rate estimates (ops/test hook: warm a fresh
+    /// pool with known throughputs, or inject hostile skew to exercise
+    /// the proportional planner).
+    pub fn force_rates(&self, rates: &[f64]) {
+        self.rates.lock().unwrap().set(rates);
+    }
+
+    /// Cumulative dispatch/queue-wait observability snapshot.
+    pub fn report(&self) -> PoolReport {
+        let st = self.stats.lock().unwrap();
+        let rates = self.rates.lock().unwrap();
+        PoolReport {
+            dispatches: st.dispatches,
+            chunks: st.chunks,
+            queue_wait_s: st.queue_wait_s,
+            busy_s: st.busy_s,
+            per_worker: (0..self.workers)
+                .map(|w| WorkerStat {
+                    chunks: st.worker_chunks[w],
+                    busy_s: st.worker_busy_s[w],
+                    rate: rates.rates()[w],
+                })
+                .collect(),
+        }
+    }
+
     /// Parallel forward stats over an arbitrary-length candidate batch.
-    pub fn fwd(&self, theta: &Arc<Vec<f32>>, xs: &[f32], ys: &[i32]) -> Result<FwdStats> {
-        let chunks = self.dispatch(theta, xs, ys, ReqKind::Fwd)?;
+    pub fn fwd(&self, theta: &Arc<Vec<f32>>, batch: &Arc<CandBatch>) -> Result<FwdStats> {
+        let chunks = self.dispatch(theta, batch, ReqKind::Fwd)?;
+        let n = batch.n();
         let mut out = FwdStats::default();
-        let n = ys.len();
         out.loss.resize(n, 0.0);
         out.correct.resize(n, 0.0);
         out.gnorm.resize(n, 0.0);
         out.entropy.resize(n, 0.0);
-        for _ in 0..chunks {
-            let resp = self.resp_rx.recv().map_err(|_| anyhow!("pool workers died"))?;
-            let base = resp.chunk * self.select_batch;
-            match resp.payload {
-                Ok(Payload::Fwd { loss, correct, gnorm, entropy }) => {
-                    out.loss[base..base + resp.take].copy_from_slice(&loss[..resp.take]);
-                    out.correct[base..base + resp.take].copy_from_slice(&correct[..resp.take]);
-                    out.gnorm[base..base + resp.take].copy_from_slice(&gnorm[..resp.take]);
-                    out.entropy[base..base + resp.take].copy_from_slice(&entropy[..resp.take]);
-                }
-                Ok(_) => bail!("mismatched payload kind"),
-                Err(e) => bail!("worker {} failed: {e}", resp.worker),
+        self.collect(chunks, |base, take, payload| match payload {
+            Payload::Fwd { loss, correct, gnorm, entropy } => {
+                out.loss[base..base + take].copy_from_slice(&loss[..take]);
+                out.correct[base..base + take].copy_from_slice(&correct[..take]);
+                out.gnorm[base..base + take].copy_from_slice(&gnorm[..take]);
+                out.entropy[base..base + take].copy_from_slice(&entropy[..take]);
+                Ok(())
             }
-        }
+            _ => bail!("mismatched payload kind"),
+        })?;
         Ok(out)
     }
 
-    /// Parallel fused RHO scores over an arbitrary-length batch.
-    pub fn rho(&self, theta: &Arc<Vec<f32>>, xs: &[f32], ys: &[i32], il: &[f32]) -> Result<Vec<f32>> {
-        if il.len() != ys.len() {
-            bail!("il len mismatch");
+    /// Parallel fused RHO scores over an arbitrary-length batch. `il`
+    /// crosses to the workers as a refcount bump (producer-gathered
+    /// table slice or the online-IL scores).
+    pub fn rho(
+        &self,
+        theta: &Arc<Vec<f32>>,
+        batch: &Arc<CandBatch>,
+        il: &Arc<Vec<f32>>,
+    ) -> Result<Vec<f32>> {
+        if il.len() != batch.n() {
+            bail!("il len {} != batch {}", il.len(), batch.n());
         }
-        let chunks = self.dispatch(theta, xs, ys, ReqKind::Rho(il))?;
-        let mut scores = vec![0.0f32; ys.len()];
-        for _ in 0..chunks {
-            let resp = self.resp_rx.recv().map_err(|_| anyhow!("pool workers died"))?;
-            let base = resp.chunk * self.select_batch;
-            match resp.payload {
-                Ok(Payload::Rho { scores: s }) => {
-                    scores[base..base + resp.take].copy_from_slice(&s[..resp.take]);
-                }
-                Ok(_) => bail!("mismatched payload kind"),
-                Err(e) => bail!("worker {} failed: {e}", resp.worker),
+        let chunks = self.dispatch(theta, batch, ReqKind::Rho(il))?;
+        let mut scores = vec![0.0f32; batch.n()];
+        self.collect(chunks, |base, take, payload| match payload {
+            Payload::Rho { scores: s } => {
+                scores[base..base + take].copy_from_slice(&s[..take]);
+                Ok(())
             }
-        }
+            _ => bail!("mismatched payload kind"),
+        })?;
         Ok(scores)
     }
 
@@ -226,101 +423,236 @@ impl ScoringPool {
     pub fn mcdropout(
         &self,
         theta: &Arc<Vec<f32>>,
-        xs: &[f32],
-        ys: &[i32],
+        batch: &Arc<CandBatch>,
         seed: i32,
     ) -> Result<McdStats> {
         if !self.has_mcd {
             bail!("pool was built without an mcdropout artifact");
         }
-        let chunks = self.dispatch(theta, xs, ys, ReqKind::Mcd(seed))?;
+        let chunks = self.dispatch(theta, batch, ReqKind::Mcd(seed))?;
+        let n = batch.n();
         let mut out = McdStats::default();
-        let n = ys.len();
         out.loss.resize(n, 0.0);
         out.entropy.resize(n, 0.0);
         out.cond_entropy.resize(n, 0.0);
         out.bald.resize(n, 0.0);
-        for _ in 0..chunks {
-            let resp = self.resp_rx.recv().map_err(|_| anyhow!("pool workers died"))?;
-            let base = resp.chunk * self.select_batch;
-            match resp.payload {
-                Ok(Payload::Mcd { loss, entropy, cond_entropy, bald }) => {
-                    out.loss[base..base + resp.take].copy_from_slice(&loss[..resp.take]);
-                    out.entropy[base..base + resp.take].copy_from_slice(&entropy[..resp.take]);
-                    out.cond_entropy[base..base + resp.take]
-                        .copy_from_slice(&cond_entropy[..resp.take]);
-                    out.bald[base..base + resp.take].copy_from_slice(&bald[..resp.take]);
-                }
-                Ok(_) => bail!("mismatched payload kind"),
-                Err(e) => bail!("worker {} failed: {e}", resp.worker),
+        self.collect(chunks, |base, take, payload| match payload {
+            Payload::Mcd { loss, entropy, cond_entropy, bald } => {
+                out.loss[base..base + take].copy_from_slice(&loss[..take]);
+                out.entropy[base..base + take].copy_from_slice(&entropy[..take]);
+                out.cond_entropy[base..base + take].copy_from_slice(&cond_entropy[..take]);
+                out.bald[base..base + take].copy_from_slice(&bald[..take]);
+                Ok(())
             }
-        }
+            _ => bail!("mismatched payload kind"),
+        })?;
         Ok(out)
     }
 
+    /// Plan the dispatch and enqueue every chunk: one `(start, take)`
+    /// window + `Arc` refcount bumps per chunk, no row copies. Lanes
+    /// are filled with non-blocking sends in round-robin passes, so a
+    /// full (slow) lane never stalls feeding the others; only when
+    /// every lane with remaining work is at capacity does the
+    /// dispatcher back off briefly. `Window::enqueued` is stamped at
+    /// the successful send, so queue-wait measures lane residency
+    /// (enqueue → worker pickup), not dispatcher backpressure.
     fn dispatch(
         &self,
         theta: &Arc<Vec<f32>>,
-        xs: &[f32],
-        ys: &[i32],
+        batch: &Arc<CandBatch>,
         kind: ReqKind,
     ) -> Result<usize> {
         if theta.len() != self.param_count {
             bail!("theta len {} != {}", theta.len(), self.param_count);
         }
-        if xs.len() != ys.len() * self.d || ys.is_empty() {
+        if batch.xs.len() != batch.n() * self.d || batch.ys.is_empty() {
             bail!("bad batch shape");
         }
-        let nb = self.select_batch;
-        let n = ys.len();
-        let tx = self.req_tx.as_ref().expect("pool alive");
-        let mut chunk = 0;
-        let mut start = 0;
-        while start < n {
-            let take = nb.min(n - start);
-            // pad to nb by repeating the first row of the chunk
-            let mut cx = Vec::with_capacity(nb * self.d);
-            let mut cy = Vec::with_capacity(nb);
-            cx.extend_from_slice(&xs[start * self.d..(start + take) * self.d]);
-            cy.extend_from_slice(&ys[start..start + take]);
-            while cy.len() < nb {
-                cx.extend_from_slice(&xs[start * self.d..(start + 1) * self.d]);
-                cy.push(ys[start]);
-            }
-            let req = match kind {
-                ReqKind::Fwd => {
-                    Request::Fwd { chunk, take, theta: Arc::clone(theta), xs: cx, ys: cy }
-                }
-                ReqKind::Rho(il) => {
-                    let mut ci = Vec::with_capacity(nb);
-                    ci.extend_from_slice(&il[start..start + take]);
-                    ci.resize(nb, 0.0);
-                    Request::Rho { chunk, take, theta: Arc::clone(theta), xs: cx, ys: cy, il: ci }
-                }
-                ReqKind::Mcd(seed) => {
-                    Request::Mcd { chunk, take, theta: Arc::clone(theta), xs: cx, ys: cy, seed }
-                }
-            };
-            tx.send(req).map_err(|_| anyhow!("pool workers died"))?;
-            chunk += 1;
-            start += take;
+        let plan = {
+            let rates = self.rates.lock().unwrap();
+            plan_dispatch(batch.n(), self.select_batch, rates.rates())
+        };
+        let mut by_lane: Vec<Vec<ChunkPlan>> = vec![Vec::new(); self.workers];
+        for c in &plan {
+            by_lane[c.worker].push(*c);
         }
-        Ok(chunk)
+        let mut cursor = vec![0usize; self.workers];
+        let mut sent = 0;
+        while sent < plan.len() {
+            let mut progressed = false;
+            for lane in 0..self.workers {
+                while let Some(c) = by_lane[lane].get(cursor[lane]) {
+                    let w = Window {
+                        chunk: c.chunk,
+                        start: c.start,
+                        take: c.take,
+                        enqueued: Instant::now(),
+                    };
+                    let req = match kind {
+                        ReqKind::Fwd => {
+                            Request::Fwd { w, theta: Arc::clone(theta), batch: Arc::clone(batch) }
+                        }
+                        ReqKind::Rho(il) => Request::Rho {
+                            w,
+                            theta: Arc::clone(theta),
+                            batch: Arc::clone(batch),
+                            il: Arc::clone(il),
+                        },
+                        ReqKind::Mcd(seed) => Request::Mcd {
+                            w,
+                            theta: Arc::clone(theta),
+                            batch: Arc::clone(batch),
+                            seed,
+                        },
+                    };
+                    match self.lanes[lane].try_send(req) {
+                        Ok(()) => {
+                            cursor[lane] += 1;
+                            sent += 1;
+                            progressed = true;
+                        }
+                        Err(TrySendError::Full(_)) => break, // lane at capacity; next lane
+                        Err(TrySendError::Disconnected(_)) => bail!("pool workers died"),
+                    }
+                }
+            }
+            if !progressed {
+                // Every lane with remaining work is full: back off
+                // briefly instead of blocking on one specific lane
+                // (backpressure without head-of-line blocking).
+                std::thread::sleep(Duration::from_micros(50));
+            }
+        }
+        Ok(plan.len())
+    }
+
+    /// Drain exactly `chunks` responses, routing each payload to
+    /// `sink(row_base, take, payload)`. Always consumes the full
+    /// dispatch — even after a worker error — so a failed call can
+    /// never leave stale responses to poison the next one. Folds
+    /// completion timestamps into the rate EMA and the cumulative
+    /// dispatch/queue-wait stats.
+    fn collect(
+        &self,
+        chunks: usize,
+        mut sink: impl FnMut(usize, usize, Payload) -> Result<()>,
+    ) -> Result<()> {
+        let mut busy = vec![Duration::ZERO; self.workers];
+        let mut count = vec![0u64; self.workers];
+        let mut wait = Duration::ZERO;
+        let mut result = Ok(());
+        for _ in 0..chunks {
+            let resp = self.resp_rx.recv().map_err(|_| anyhow!("pool workers died"))?;
+            busy[resp.worker] += resp.busy;
+            count[resp.worker] += 1;
+            wait += resp.queue_wait;
+            match resp.payload {
+                Ok(p) => {
+                    if result.is_ok() {
+                        result = sink(resp.chunk * self.select_batch, resp.take, p);
+                    }
+                }
+                Err(e) => {
+                    if result.is_ok() {
+                        result = Err(anyhow!("worker {} failed: {e}", resp.worker));
+                    }
+                }
+            }
+        }
+        let observed: Vec<f64> = (0..self.workers)
+            .map(|w| {
+                let s = busy[w].as_secs_f64();
+                if s > 0.0 { count[w] as f64 / s } else { 0.0 }
+            })
+            .collect();
+        self.rates.lock().unwrap().observe(&observed);
+        let mut st = self.stats.lock().unwrap();
+        st.dispatches += 1;
+        st.chunks += chunks as u64;
+        st.queue_wait_s += wait.as_secs_f64();
+        for w in 0..self.workers {
+            st.busy_s += busy[w].as_secs_f64();
+            st.worker_chunks[w] += count[w];
+            st.worker_busy_s[w] += busy[w].as_secs_f64();
+        }
+        result
     }
 }
 
 impl Drop for ScoringPool {
     fn drop(&mut self) {
-        drop(self.req_tx.take()); // close the queue; workers exit
+        self.lanes.clear(); // close every lane; workers exit
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
 }
 
+/// Slice the chunk window out of the shared batch, or pad the ragged
+/// tail into the worker's scratch buffers by repeating the chunk's
+/// first row — the exact padding rule of the inline
+/// `ModelRuntime::for_chunks`, so pooled and inline scores agree
+/// bitwise.
+fn chunk_views<'a>(
+    batch: &'a CandBatch,
+    d: usize,
+    nb: usize,
+    start: usize,
+    take: usize,
+    pad_x: &'a mut Vec<f32>,
+    pad_y: &'a mut Vec<i32>,
+) -> (&'a [f32], &'a [i32]) {
+    if take == nb {
+        (&batch.xs[start * d..(start + nb) * d], &batch.ys[start..start + nb])
+    } else {
+        pad_x.clear();
+        pad_y.clear();
+        pad_x.extend_from_slice(&batch.xs[start * d..(start + take) * d]);
+        pad_y.extend_from_slice(&batch.ys[start..start + take]);
+        while pad_y.len() < nb {
+            pad_x.extend_from_slice(&batch.xs[start * d..(start + 1) * d]);
+            pad_y.push(batch.ys[start]);
+        }
+        (pad_x, pad_y)
+    }
+}
+
+/// IL window for a chunk: direct slice, or zero-padded tail (matching
+/// the inline `select_rho` padding).
+fn il_view<'a>(il: &'a [f32], nb: usize, start: usize, take: usize, pad: &'a mut Vec<f32>) -> &'a [f32] {
+    if take == nb {
+        &il[start..start + nb]
+    } else {
+        pad.clear();
+        pad.extend_from_slice(&il[start..start + take]);
+        pad.resize(nb, 0.0);
+        pad
+    }
+}
+
+/// The theta literal for this chunk, rebuilt only when the parameter
+/// snapshot actually changed (`Arc::ptr_eq`): one theta upload per
+/// worker per train step, not per chunk. Holding the `Arc` in the
+/// cache key makes pointer comparison ABA-safe.
+fn theta_lit<'a>(
+    cache: &'a mut Option<(Arc<Vec<f32>>, Literal)>,
+    theta: &Arc<Vec<f32>>,
+) -> Result<&'a Literal> {
+    let stale = match cache {
+        Some((held, _)) => !Arc::ptr_eq(held, theta),
+        None => true,
+    };
+    if stale {
+        let lit = lit_f32(theta, &[theta.len()])?;
+        *cache = Some((Arc::clone(theta), lit));
+    }
+    Ok(&cache.as_ref().expect("just filled").1)
+}
+
 fn worker_main(
     wid: usize,
-    rx: Arc<Mutex<Receiver<Request>>>,
+    rx: Receiver<Request>,
     tx: Sender<Response>,
     fwd_meta: ArtifactMeta,
     select_meta: ArtifactMeta,
@@ -344,36 +676,43 @@ fn worker_main(
     let (fwd_exe, select_exe, mcd_exe) = match setup {
         Ok(p) => p,
         Err(e) => {
-            // Surface the failure on the first request.
-            while let Ok(req) = rx.lock().unwrap().recv() {
-                let (chunk, take) = match &req {
-                    Request::Fwd { chunk, take, .. }
-                    | Request::Rho { chunk, take, .. }
-                    | Request::Mcd { chunk, take, .. } => (*chunk, *take),
-                };
+            // Surface the failure on every request in this lane.
+            while let Ok(req) = rx.recv() {
+                let w = req.window();
                 let _ = tx.send(Response {
-                    chunk,
-                    take,
+                    chunk: w.chunk,
+                    take: w.take,
                     worker: wid,
+                    queue_wait: w.enqueued.elapsed(),
+                    busy: Duration::ZERO,
                     payload: Err(format!("worker setup failed: {e:#}")),
                 });
             }
             return;
         }
     };
+    let nb = fwd_meta.batch().expect("validated at pool construction");
+    let d = fwd_meta.d;
+    let mut pad_x: Vec<f32> = Vec::new();
+    let mut pad_y: Vec<i32> = Vec::new();
+    let mut pad_il: Vec<f32> = Vec::new();
+    let mut theta_cache: Option<(Arc<Vec<f32>>, Literal)> = None;
     loop {
-        let req = match rx.lock().unwrap().recv() {
+        let req = match rx.recv() {
             Ok(r) => r,
-            Err(_) => return, // queue closed
+            Err(_) => return, // lane closed
         };
+        let picked_up = Instant::now();
+        let queue_wait = picked_up.duration_since(req.window().enqueued);
         let (chunk, take, payload) = match req {
-            Request::Fwd { chunk, take, theta, xs, ys } => {
+            Request::Fwd { w, theta, batch } => {
                 let res = (|| -> Result<Payload> {
-                    let nb = fwd_meta.batch().unwrap();
+                    let (cx, cy) =
+                        chunk_views(&batch, d, nb, w.start, w.take, &mut pad_x, &mut pad_y);
                     let args = [
-                        lit_f32(&theta, &[theta.len()])?,
-                        lit_f32(&xs, &[nb, fwd_meta.d])?,
-                        lit_i32(&ys, &[nb])?,
+                        theta_lit(&mut theta_cache, &theta)?,
+                        &lit_f32(cx, &[nb, d])?,
+                        &lit_i32(cy, &[nb])?,
                     ];
                     let outs = fwd_exe.call_f32(&args)?;
                     let mut it = outs.into_iter();
@@ -384,34 +723,37 @@ fn worker_main(
                         entropy: it.next().unwrap(),
                     })
                 })();
-                (chunk, take, res.map_err(|e| format!("{e:#}")))
+                (w.chunk, w.take, res.map_err(|e| format!("{e:#}")))
             }
-            Request::Rho { chunk, take, theta, xs, ys, il } => {
+            Request::Rho { w, theta, batch, il } => {
                 let res = (|| -> Result<Payload> {
-                    let nb = select_meta.batch().unwrap();
+                    let (cx, cy) =
+                        chunk_views(&batch, d, nb, w.start, w.take, &mut pad_x, &mut pad_y);
+                    let ci = il_view(&il, nb, w.start, w.take, &mut pad_il);
+                    // select shape == fwd shape, validated at pool construction
                     let args = [
-                        lit_f32(&theta, &[theta.len()])?,
-                        lit_f32(&xs, &[nb, select_meta.d])?,
-                        lit_i32(&ys, &[nb])?,
-                        lit_f32(&il, &[nb])?,
+                        theta_lit(&mut theta_cache, &theta)?,
+                        &lit_f32(cx, &[nb, d])?,
+                        &lit_i32(cy, &[nb])?,
+                        &lit_f32(ci, &[nb])?,
                     ];
                     let outs = select_exe.call_f32(&args)?;
                     Ok(Payload::Rho { scores: outs.into_iter().next().unwrap() })
                 })();
-                (chunk, take, res.map_err(|e| format!("{e:#}")))
+                (w.chunk, w.take, res.map_err(|e| format!("{e:#}")))
             }
-            Request::Mcd { chunk, take, theta, xs, ys, seed } => {
+            Request::Mcd { w, theta, batch, seed } => {
                 let res = (|| -> Result<Payload> {
                     let exe = mcd_exe
                         .as_ref()
                         .ok_or_else(|| anyhow!("pool has no mcdropout executable"))?;
-                    let meta = mcd_meta.as_ref().expect("exe implies meta");
-                    let nb = meta.batch().ok_or_else(|| anyhow!("mcdropout artifact has no batch"))?;
+                    let (cx, cy) =
+                        chunk_views(&batch, d, nb, w.start, w.take, &mut pad_x, &mut pad_y);
                     let args = [
-                        lit_f32(&theta, &[theta.len()])?,
-                        lit_f32(&xs, &[nb, meta.d])?,
-                        lit_i32(&ys, &[nb])?,
-                        lit_i32(&[seed], &[1])?,
+                        theta_lit(&mut theta_cache, &theta)?,
+                        &lit_f32(cx, &[nb, d])?,
+                        &lit_i32(cy, &[nb])?,
+                        &lit_i32(&[seed], &[1])?,
                     ];
                     let outs = exe.call_f32(&args)?;
                     let mut it = outs.into_iter();
@@ -422,11 +764,12 @@ fn worker_main(
                         bald: it.next().unwrap(),
                     })
                 })();
-                (chunk, take, res.map_err(|e| format!("{e:#}")))
+                (w.chunk, w.take, res.map_err(|e| format!("{e:#}")))
             }
         };
         counter.fetch_add(1, Ordering::Relaxed);
-        if tx.send(Response { chunk, take, worker: wid, payload }).is_err() {
+        let resp = Response { chunk, take, worker: wid, queue_wait, busy: picked_up.elapsed(), payload };
+        if tx.send(resp).is_err() {
             return; // pool dropped
         }
     }
@@ -441,18 +784,81 @@ mod tests {
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
         let cfg = PoolConfig::default();
         assert_eq!(cfg.workers, cores.max(1), "workers must track core count, no hidden clamp");
-        assert!(cfg.queue_depth >= 1);
+        assert!(cfg.lane_depth >= 1);
+        assert!(cfg.rate_alpha > 0.0 && cfg.rate_alpha <= 1.0);
     }
 
     #[test]
-    fn from_run_plumbs_workers_and_queue_depth() {
-        let rc = RunConfig { workers: 13, queue_depth: 5, ..Default::default() };
+    fn from_run_plumbs_lane_depth_and_rate_alpha() {
+        let rc = RunConfig { workers: 13, lane_depth: 5, rate_alpha: 0.7, ..Default::default() };
         let pc = PoolConfig::from_run(&rc);
-        assert_eq!((pc.workers, pc.queue_depth), (13, 5));
-        // workers=0 means auto-size; queue_depth is clamped to >= 1
-        let rc = RunConfig { workers: 0, queue_depth: 0, ..Default::default() };
+        assert_eq!((pc.workers, pc.lane_depth), (13, 5));
+        assert_eq!(pc.rate_alpha, 0.7);
+        // workers=0 means auto-size; lane_depth=0 derives per-lane
+        // capacity from the legacy queue_depth total (min 1)
+        let rc = RunConfig { workers: 4, lane_depth: 0, queue_depth: 32, ..Default::default() };
+        let pc = PoolConfig::from_run(&rc);
+        assert_eq!(pc.lane_depth, 8);
+        let rc = RunConfig { workers: 0, lane_depth: 0, queue_depth: 0, ..Default::default() };
         let pc = PoolConfig::from_run(&rc);
         assert_eq!(pc.workers, PoolConfig::default().workers);
-        assert_eq!(pc.queue_depth, 1);
+        assert_eq!(pc.lane_depth, 1);
+        // out-of-range alpha falls back to the default
+        let rc = RunConfig { rate_alpha: 1.5, ..Default::default() };
+        assert_eq!(PoolConfig::from_run(&rc).rate_alpha, PoolConfig::default().rate_alpha);
+    }
+
+    #[test]
+    fn cand_batch_for_scoring_shape() {
+        let b = CandBatch::for_scoring(vec![1.0; 12], vec![0, 1, 2]);
+        assert_eq!(b.n(), 3);
+        assert!(b.il.is_none() && b.idx.is_empty());
+        assert_eq!(b.step, 0);
+    }
+
+    #[test]
+    fn pool_report_since_subtracts_counters_keeps_rates() {
+        let earlier = PoolReport {
+            dispatches: 2,
+            chunks: 10,
+            queue_wait_s: 1.0,
+            busy_s: 4.0,
+            per_worker: vec![WorkerStat { chunks: 10, busy_s: 4.0, rate: 2.0 }],
+        };
+        let later = PoolReport {
+            dispatches: 5,
+            chunks: 25,
+            queue_wait_s: 1.5,
+            busy_s: 9.0,
+            per_worker: vec![WorkerStat { chunks: 25, busy_s: 9.0, rate: 3.0 }],
+        };
+        let d = later.since(&earlier);
+        assert_eq!((d.dispatches, d.chunks), (3, 15));
+        assert!((d.queue_wait_s - 0.5).abs() < 1e-12);
+        assert!((d.busy_s - 5.0).abs() < 1e-12);
+        assert_eq!(d.per_worker[0].chunks, 15);
+        assert_eq!(d.per_worker[0].rate, 3.0, "rates are point-in-time, not deltas");
+        // self-delta is zero
+        let z = later.since(&later);
+        assert_eq!((z.dispatches, z.chunks), (0, 0));
+    }
+
+    #[test]
+    fn chunk_views_pads_tail_by_repeating_first_row() {
+        let batch = CandBatch::for_scoring(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![7, 8, 9]);
+        let (mut px, mut py) = (Vec::new(), Vec::new());
+        // full chunk: direct slice, no padding
+        let (cx, cy) = chunk_views(&batch, 2, 2, 0, 2, &mut px, &mut py);
+        assert_eq!(cx, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(cy, &[7, 8]);
+        // ragged tail at start=2, take=1, nb=2: repeat the chunk's own
+        // first row (row 2), exactly like ModelRuntime::for_chunks
+        let (cx, cy) = chunk_views(&batch, 2, 2, 2, 1, &mut px, &mut py);
+        assert_eq!(cx, &[5.0, 6.0, 5.0, 6.0]);
+        assert_eq!(cy, &[9, 9]);
+        let mut pil = Vec::new();
+        let il = [0.1f32, 0.2, 0.3];
+        assert_eq!(il_view(&il, 2, 0, 2, &mut pil), &[0.1, 0.2]);
+        assert_eq!(il_view(&il, 2, 2, 1, &mut pil), &[0.3, 0.0], "tail il pads with zeros");
     }
 }

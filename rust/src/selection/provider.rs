@@ -10,13 +10,22 @@
 //! exactly what the selection rule consumes — fanned out over the
 //! parallel [`ScoringPool`] when one is attached, inline through the
 //! [`ModelRuntime`] otherwise.
+//!
+//! Providers see the candidate batch as the shared [`CandBatch`] the
+//! producer gathered (`StepCtx::batch`), not as borrowed slices: the
+//! pool-backed providers forward the whole buffer as a refcount bump
+//! and workers slice their own `(start, take)` windows out of it, so
+//! no provider ever copies candidate rows. IL values likewise travel
+//! as `Arc<Vec<f32>>` — producer-gathered for the precomputed table,
+//! freshly scored for online IL — and reach the fused-RHO workers
+//! without a copy.
 
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
 use crate::runtime::handle::{McdStats, ModelRuntime};
-use crate::runtime::pool::ScoringPool;
+use crate::runtime::pool::{CandBatch, ScoringPool};
 use crate::selection::{Candidates, Method};
 
 /// Where a provider executes its model programs.
@@ -28,28 +37,25 @@ pub enum Backend<'a> {
     Pool(&'a ScoringPool),
 }
 
-/// Per-step provider inputs. Slices borrow from the prefetched
-/// candidate batch; `theta` is the zero-copy parameter snapshot
+/// Per-step provider inputs. `batch` is the producer-gathered
+/// candidate buffer (indices + rows + optional precomputed-IL slice),
+/// shared by `Arc`; `theta` is the zero-copy parameter snapshot
 /// (versioned by the optimizer step — see `TrainState::theta_snapshot`).
 pub struct StepCtx<'a> {
-    pub step: u64,
     pub theta: &'a Arc<Vec<f32>>,
     /// Current IL-model parameters (online IL only).
     pub il_theta: Option<&'a Arc<Vec<f32>>>,
-    /// Dataset indices of the candidates.
-    pub idx: &'a [u32],
-    pub xs: &'a [f32],
-    pub ys: &'a [i32],
+    /// The shared candidate batch window providers score.
+    pub batch: &'a Arc<CandBatch>,
     /// Per-step MC-dropout seed.
     pub mcd_seed: i32,
 }
 
 /// The signals produced for one candidate batch. Owns its buffers so
-/// [`Candidates`] can borrow them for ranking; reset each step.
-/// Buffers are freshly allocated per step (as the fwd/pool calls
-/// already return owned vectors) — the hot-path guarantees concern
-/// the theta snapshot and candidate-batch reuse, not these
-/// `n_B`-sized score vectors.
+/// [`Candidates`] can borrow them for ranking; reset each step. The
+/// `il` signal is an `Arc` because it crosses to the pool workers
+/// (fused RHO) — everything else is an `n_B`-sized vector freshly
+/// returned by the fwd/pool calls.
 #[derive(Clone, Debug, Default)]
 pub struct SignalSet {
     pub loss: Option<Vec<f32>>,
@@ -60,7 +66,7 @@ pub struct SignalSet {
     /// current `select` rule (`Candidates` has no entropy field) —
     /// carried for diagnostics and future entropy-ranked methods.
     pub entropy: Option<Vec<f32>>,
-    pub il: Option<Vec<f32>>,
+    pub il: Option<Arc<Vec<f32>>>,
     pub rho: Option<Vec<f32>>,
     pub mcd: Option<McdStats>,
 }
@@ -76,7 +82,7 @@ impl SignalSet {
             n,
             loss: self.loss.as_deref(),
             gnorm: self.gnorm.as_deref(),
-            il: self.il.as_deref(),
+            il: self.il.as_ref().map(|a| a.as_slice()),
             rho: self.rho.as_deref(),
             mcd: self.mcd.as_ref(),
         }
@@ -92,8 +98,11 @@ pub trait SignalProvider {
     fn provide(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()>;
 }
 
-/// Precomputed irreducible losses, looked up by candidate dataset
-/// index (Algorithm 1's amortized IL table).
+/// Precomputed irreducible losses (Algorithm 1's amortized IL table).
+/// The engine's producer gathers the per-batch slice ahead of time
+/// (`CandBatch::il`), so the step-time cost is one refcount bump; the
+/// table lookup only runs as a fallback for batches built outside the
+/// engine (unit tests, ad-hoc scoring).
 pub struct Precomputed<'a> {
     pub values: &'a [f32],
 }
@@ -104,7 +113,12 @@ impl SignalProvider for Precomputed<'_> {
     }
 
     fn provide(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
-        out.il = Some(ctx.idx.iter().map(|&i| self.values[i as usize]).collect());
+        out.il = Some(match &ctx.batch.il {
+            Some(pre) => Arc::clone(pre),
+            None => Arc::new(
+                ctx.batch.idx.iter().map(|&i| self.values[i as usize]).collect::<Vec<f32>>(),
+            ),
+        });
         Ok(())
     }
 }
@@ -124,7 +138,7 @@ impl SignalProvider for OnlineIl<'_> {
         let th = ctx
             .il_theta
             .ok_or_else(|| anyhow!("online IL scoring needs the IL-model state"))?;
-        out.il = Some(self.il_rt.fwd(th, ctx.xs, ctx.ys)?.loss);
+        out.il = Some(Arc::new(self.il_rt.fwd(th, &ctx.batch.xs, &ctx.batch.ys)?.loss));
         Ok(())
     }
 }
@@ -141,15 +155,13 @@ impl SignalProvider for FusedRho<'_> {
     }
 
     fn provide(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
-        let scores = {
-            let il = out
-                .il
-                .as_deref()
-                .ok_or_else(|| anyhow!("FusedRho needs an `il` provider earlier in the stack"))?;
-            match self.backend {
-                Backend::Pool(p) => p.rho(ctx.theta, ctx.xs, ctx.ys, il)?,
-                Backend::Inline(rt) => rt.select_rho(ctx.theta, ctx.xs, ctx.ys, il)?,
-            }
+        let il = out
+            .il
+            .clone()
+            .ok_or_else(|| anyhow!("FusedRho needs an `il` provider earlier in the stack"))?;
+        let scores = match self.backend {
+            Backend::Pool(p) => p.rho(ctx.theta, ctx.batch, &il)?,
+            Backend::Inline(rt) => rt.select_rho(ctx.theta, &ctx.batch.xs, &ctx.batch.ys, &il)?,
         };
         out.rho = Some(scores);
         Ok(())
@@ -170,8 +182,8 @@ impl SignalProvider for FwdStats<'_> {
 
     fn provide(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
         let stats = match self.backend {
-            Backend::Pool(p) => p.fwd(ctx.theta, ctx.xs, ctx.ys)?,
-            Backend::Inline(rt) => rt.fwd(ctx.theta, ctx.xs, ctx.ys)?,
+            Backend::Pool(p) => p.fwd(ctx.theta, ctx.batch)?,
+            Backend::Inline(rt) => rt.fwd(ctx.theta, &ctx.batch.xs, &ctx.batch.ys)?,
         };
         out.loss = Some(stats.loss);
         out.gnorm = Some(stats.gnorm);
@@ -193,8 +205,8 @@ impl SignalProvider for McDropout<'_> {
 
     fn provide(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
         let stats = match self.backend {
-            Backend::Pool(p) => p.mcdropout(ctx.theta, ctx.xs, ctx.ys, ctx.mcd_seed)?,
-            Backend::Inline(rt) => rt.mcdropout(ctx.theta, ctx.xs, ctx.ys, ctx.mcd_seed)?,
+            Backend::Pool(p) => p.mcdropout(ctx.theta, ctx.batch, ctx.mcd_seed)?,
+            Backend::Inline(rt) => rt.mcdropout(ctx.theta, &ctx.batch.xs, &ctx.batch.ys, ctx.mcd_seed)?,
         };
         out.mcd = Some(stats);
         Ok(())
@@ -263,31 +275,51 @@ pub fn stack<'a>(spec: &StackSpec<'a>) -> Result<Vec<Box<dyn SignalProvider + 'a
 mod tests {
     use super::*;
 
-    fn ctx<'a>(
-        theta: &'a Arc<Vec<f32>>,
-        idx: &'a [u32],
-        xs: &'a [f32],
-        ys: &'a [i32],
-    ) -> StepCtx<'a> {
-        StepCtx { step: 1, theta, il_theta: None, idx, xs, ys, mcd_seed: 0 }
+    fn batch(idx: &[u32], il: Option<Vec<f32>>) -> Arc<CandBatch> {
+        Arc::new(CandBatch {
+            step: 1,
+            rolled: false,
+            idx: idx.to_vec(),
+            xs: Vec::new(),
+            ys: vec![0; idx.len()],
+            il: il.map(Arc::new),
+        })
+    }
+
+    fn ctx<'a>(theta: &'a Arc<Vec<f32>>, batch: &'a Arc<CandBatch>) -> StepCtx<'a> {
+        StepCtx { theta, il_theta: None, batch, mcd_seed: 0 }
     }
 
     #[test]
-    fn precomputed_gathers_by_dataset_index() {
+    fn precomputed_falls_back_to_table_lookup_by_dataset_index() {
         let table = [0.5f32, 1.5, 2.5, 3.5];
         let mut p = Precomputed { values: &table };
         let theta: Arc<Vec<f32>> = Arc::new(Vec::new());
-        let idx = [3u32, 0, 2];
+        let b = batch(&[3, 0, 2], None);
         let mut sig = SignalSet::default();
-        p.provide(&ctx(&theta, &idx, &[], &[]), &mut sig).unwrap();
-        assert_eq!(sig.il, Some(vec![3.5, 0.5, 2.5]));
+        p.provide(&ctx(&theta, &b), &mut sig).unwrap();
+        assert_eq!(sig.il.as_deref(), Some(&vec![3.5, 0.5, 2.5]));
+    }
+
+    #[test]
+    fn precomputed_reuses_producer_gather_as_refcount_bump() {
+        let table = [9.0f32; 4]; // deliberately different from the gather
+        let mut p = Precomputed { values: &table };
+        let theta: Arc<Vec<f32>> = Arc::new(Vec::new());
+        let b = batch(&[1, 2], Some(vec![1.5, 2.5]));
+        let mut sig = SignalSet::default();
+        p.provide(&ctx(&theta, &b), &mut sig).unwrap();
+        // the producer-gathered slice wins, and it is the same
+        // allocation (no copy)
+        assert_eq!(sig.il.as_deref(), Some(&vec![1.5, 2.5]));
+        assert!(Arc::ptr_eq(sig.il.as_ref().unwrap(), b.il.as_ref().unwrap()));
     }
 
     #[test]
     fn signal_set_borrows_into_candidates() {
         let mut sig = SignalSet::default();
         sig.loss = Some(vec![1.0, 2.0]);
-        sig.il = Some(vec![0.5, 0.25]);
+        sig.il = Some(Arc::new(vec![0.5, 0.25]));
         let c = sig.candidates(2);
         assert_eq!(c.n, 2);
         assert_eq!(c.loss, Some(&[1.0f32, 2.0][..]));

@@ -1,12 +1,16 @@
 //! Integration: the parallel scoring pool must agree exactly with the
-//! single-threaded runtime and survive odd batch shapes + backpressure.
+//! single-threaded runtime, survive odd batch shapes + backpressure,
+//! and — the ISSUE-2 acceptance gate — produce bitwise-identical
+//! scores under rate-aware dispatch with arbitrarily hostile EMA
+//! rates (rate skew moves chunks between lanes, never changes what is
+//! computed).
 
 use std::rc::Rc;
 use std::sync::Arc;
 
 use rho::runtime::artifact::{default_dir, Manifest};
 use rho::runtime::handle::{cpu_client, ModelRuntime};
-use rho::runtime::pool::{PoolConfig, ScoringPool};
+use rho::runtime::pool::{CandBatch, PoolConfig, ScoringPool};
 
 fn setup() -> Option<(Manifest, Rc<xla::PjRtClient>)> {
     let dir = default_dir();
@@ -20,15 +24,16 @@ fn setup() -> Option<(Manifest, Rc<xla::PjRtClient>)> {
 fn mk_pool(manifest: &Manifest, workers: usize) -> ScoringPool {
     let fwd = manifest.find("mlp_small", 64, 10, "fwd_b320").unwrap();
     let sel = manifest.find("mlp_small", 64, 10, "select_b320").unwrap();
-    ScoringPool::new(fwd, sel, None, &PoolConfig { workers, queue_depth: 4 }).unwrap()
+    ScoringPool::new(fwd, sel, None, &PoolConfig { workers, lane_depth: 4, ..PoolConfig::default() })
+        .unwrap()
 }
 
-fn rand_batch(n: usize, seed: u64) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+fn rand_batch(n: usize, seed: u64) -> (Arc<CandBatch>, Arc<Vec<f32>>) {
     let mut rng = rho::util::rng::Pcg32::new(seed, 1);
     let xs: Vec<f32> = (0..n * 64).map(|_| rng.gauss()).collect();
     let ys: Vec<i32> = (0..n).map(|_| rng.below(10) as i32).collect();
     let il: Vec<f32> = (0..n).map(|_| rng.f32() * 2.0).collect();
-    (xs, ys, il)
+    (CandBatch::for_scoring(xs, ys), Arc::new(il))
 }
 
 #[test]
@@ -39,9 +44,9 @@ fn pool_fwd_matches_single_thread() {
     let theta = st.theta_snapshot();
     let pool = mk_pool(&manifest, 2);
     for n in [320usize, 1000, 33] {
-        let (xs, ys, _) = rand_batch(n, n as u64);
-        let a = pool.fwd(&theta, &xs, &ys).unwrap();
-        let b = rt.fwd(&st.theta, &xs, &ys).unwrap();
+        let (batch, _) = rand_batch(n, n as u64);
+        let a = pool.fwd(&theta, &batch).unwrap();
+        let b = rt.fwd(&st.theta, &batch.xs, &batch.ys).unwrap();
         assert_eq!(a.loss.len(), n);
         for i in 0..n {
             assert!((a.loss[i] - b.loss[i]).abs() < 1e-5, "n={n} i={i}");
@@ -57,13 +62,66 @@ fn pool_rho_matches_single_thread() {
     let st = rt.init(2).unwrap();
     let theta = st.theta_snapshot();
     let pool = mk_pool(&manifest, 3);
-    let (xs, ys, il) = rand_batch(737, 9);
-    let a = pool.rho(&theta, &xs, &ys, &il).unwrap();
-    let b = rt.select_rho(&st.theta, &xs, &ys, &il).unwrap();
+    let (batch, il) = rand_batch(737, 9);
+    let a = pool.rho(&theta, &batch, &il).unwrap();
+    let b = rt.select_rho(&st.theta, &batch.xs, &batch.ys, &il).unwrap();
     assert_eq!(a.len(), 737);
     for i in 0..737 {
         assert!((a[i] - b[i]).abs() < 1e-5, "i={i}: {} vs {}", a[i], b[i]);
     }
+}
+
+#[test]
+fn hostile_rate_dispatch_is_bitwise_equal_to_uniform() {
+    // The parity pin for the zero-copy, rate-aware dispatch rewrite:
+    // for every request kind, scores under degenerate/hostile forced
+    // EMA rates must be bitwise-identical to the even (uniform) split
+    // a fresh pool starts from — chunk windows never move or resize,
+    // only their lane assignment does.
+    let Some((manifest, client)) = setup() else { return };
+    let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_small", 64, 10).unwrap();
+    let st = rt.init(4).unwrap();
+    let theta = st.theta_snapshot();
+    let pool = mk_pool(&manifest, 3);
+    let (batch, il) = rand_batch(1601, 13); // 6 chunks, ragged tail of 1
+    // fresh pool: all-zero rates -> even fallback == PR 1 uniform split
+    let rho_uniform = pool.rho(&theta, &batch, &il).unwrap();
+    let fwd_uniform = pool.fwd(&theta, &batch).unwrap();
+    for rates in [
+        &[1e9, 1e-9, 0.0][..],
+        &[f64::NAN, f64::INFINITY, 3.0][..],
+        &[0.0, 0.0, 0.0][..],
+        &[5.0, 1.0, 1.0][..],
+    ] {
+        pool.force_rates(rates);
+        assert_eq!(pool.rho(&theta, &batch, &il).unwrap(), rho_uniform, "rates {rates:?}");
+        pool.force_rates(rates);
+        assert_eq!(pool.fwd(&theta, &batch).unwrap().loss, fwd_uniform.loss, "rates {rates:?}");
+    }
+    // and the inline runtime agrees to float tolerance as ever
+    let b = rt.select_rho(&st.theta, &batch.xs, &batch.ys, &il).unwrap();
+    for i in 0..1601 {
+        assert!((rho_uniform[i] - b[i]).abs() < 1e-5, "i={i}");
+    }
+}
+
+#[test]
+fn skewed_rates_move_load_between_lanes() {
+    // Rate awareness must actually steer chunk counts: with a forced
+    // 4:1 rate split over 10 chunks, worker 0's lane gets 8.
+    let Some((manifest, _client)) = setup() else { return };
+    let pool = mk_pool(&manifest, 2);
+    let st_theta = {
+        let rt = ModelRuntime::load(cpu_client().unwrap(), &manifest, "mlp_small", 64, 10).unwrap();
+        rt.init(3).unwrap().theta
+    };
+    let (batch, il) = rand_batch(320 * 10, 5);
+    pool.force_rates(&[4.0, 1.0]);
+    let before = pool.worker_loads();
+    pool.rho(&st_theta, &batch, &il).unwrap();
+    let after = pool.worker_loads();
+    let delta: Vec<usize> = after.iter().zip(&before).map(|(a, b)| a - b).collect();
+    assert_eq!(delta, vec![8, 2], "proportional plan not honored");
 }
 
 #[test]
@@ -76,11 +134,20 @@ fn pool_distributes_load_across_workers() {
         rt.init(3).unwrap().theta
     };
     // 20 chunks of work
-    let (xs, ys, il) = rand_batch(320 * 20, 5);
-    pool.rho(&st_theta, &xs, &ys, &il).unwrap();
+    let (batch, il) = rand_batch(320 * 20, 5);
+    pool.rho(&st_theta, &batch, &il).unwrap();
     let loads = pool.worker_loads();
     assert_eq!(loads.iter().sum::<usize>(), 20);
     assert!(loads.iter().all(|&l| l > 0), "a worker starved: {loads:?}");
+    // the dispatch/queue-wait stats saw the work
+    let report = pool.report();
+    assert_eq!(report.dispatches, 1);
+    assert_eq!(report.chunks, 20);
+    assert!(report.busy_s > 0.0);
+    assert_eq!(report.per_worker.len(), 2);
+    assert_eq!(report.per_worker.iter().map(|w| w.chunks).sum::<u64>(), 20);
+    // service rates were observed for both workers
+    assert!(pool.worker_rates().iter().all(|&r| r > 0.0), "{:?}", pool.worker_rates());
 }
 
 #[test]
@@ -93,21 +160,32 @@ fn pool_mcdropout_matches_single_thread() {
     };
     let fwd = manifest.find("mlp_base", 64, 10, "fwd_b320").unwrap();
     let sel = manifest.find("mlp_base", 64, 10, "select_b320").unwrap();
-    let pool =
-        ScoringPool::new(fwd, sel, Some(mcd), &PoolConfig { workers: 2, queue_depth: 4 }).unwrap();
+    let pool = ScoringPool::new(
+        fwd,
+        sel,
+        Some(mcd),
+        &PoolConfig { workers: 2, lane_depth: 4, ..PoolConfig::default() },
+    )
+    .unwrap();
     assert!(pool.has_mcdropout());
     let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_base", 64, 10).unwrap();
     let st = rt.init(5).unwrap();
     let theta = st.theta_snapshot();
-    let (xs, ys, _) = rand_batch(500, 11);
-    let a = pool.mcdropout(&theta, &xs, &ys, 42).unwrap();
-    let b = rt.mcdropout(&st.theta, &xs, &ys, 42).unwrap();
+    let (batch, _) = rand_batch(500, 11);
+    let a = pool.mcdropout(&theta, &batch, 42).unwrap();
+    let b = rt.mcdropout(&st.theta, &batch.xs, &batch.ys, 42).unwrap();
     assert_eq!(a.loss.len(), 500);
     for i in 0..500 {
         assert!((a.loss[i] - b.loss[i]).abs() < 1e-5, "loss i={i}");
         assert!((a.bald[i] - b.bald[i]).abs() < 1e-5, "bald i={i}");
         assert!((a.entropy[i] - b.entropy[i]).abs() < 1e-5, "entropy i={i}");
     }
+    // mcdropout parity under hostile rates, same pin as rho/fwd
+    let uniform = a;
+    pool.force_rates(&[1e-9, 1e9]);
+    let skewed = pool.mcdropout(&theta, &batch, 42).unwrap();
+    assert_eq!(skewed.loss, uniform.loss);
+    assert_eq!(skewed.bald, uniform.bald);
 }
 
 #[test]
@@ -117,8 +195,8 @@ fn pool_without_mcd_artifact_rejects_mcd_requests() {
     assert!(!pool.has_mcdropout());
     let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_small", 64, 10).unwrap();
     let theta = rt.init(1).unwrap().theta;
-    let (xs, ys, _) = rand_batch(32, 3);
-    assert!(pool.mcdropout(&theta, &xs, &ys, 1).is_err());
+    let (batch, _) = rand_batch(32, 3);
+    assert!(pool.mcdropout(&theta, &batch, 1).is_err());
 }
 
 #[test]
@@ -126,10 +204,20 @@ fn pool_rejects_bad_shapes() {
     let Some((manifest, _client)) = setup() else { return };
     let pool = mk_pool(&manifest, 1);
     let theta = Arc::new(vec![0.0f32; 3]); // wrong param count
-    let (xs, ys, il) = rand_batch(32, 7);
-    assert!(pool.rho(&theta, &xs, &ys, &il).is_err());
+    let (batch, il) = rand_batch(32, 7);
+    assert!(pool.rho(&theta, &batch, &il).is_err());
     let theta_ok = Arc::new(vec![0.0f32; pool_param_count(&manifest)]);
-    assert!(pool.rho(&theta_ok, &xs, &ys[..10], &il).is_err(), "mismatched ys len accepted");
+    let short_il = Arc::new(il[..10].to_vec());
+    assert!(pool.rho(&theta_ok, &batch, &short_il).is_err(), "mismatched il len accepted");
+    let ragged = Arc::new(CandBatch {
+        step: 0,
+        rolled: false,
+        idx: Vec::new(),
+        xs: batch.xs[..100].to_vec(), // not n * d
+        ys: batch.ys.clone(),
+        il: None,
+    });
+    assert!(pool.fwd(&theta_ok, &ragged).is_err(), "bad xs/ys shape accepted");
 }
 
 fn pool_param_count(manifest: &Manifest) -> usize {

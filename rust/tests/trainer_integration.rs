@@ -126,8 +126,13 @@ fn pipelined_matches_synchronous_exactly() {
     let manifest = &lab.manifest;
     let fwd = manifest.find(&cfg.arch, 64, 10, "fwd_b320").unwrap();
     let sel = manifest.find(&cfg.arch, 64, 10, "select_b320").unwrap();
-    let pool =
-        ScoringPool::new(fwd, sel, None, &PoolConfig { workers: 2, queue_depth: 4 }).unwrap();
+    let pool = ScoringPool::new(
+        fwd,
+        sel,
+        None,
+        &PoolConfig { workers: 2, lane_depth: 4, ..PoolConfig::default() },
+    )
+    .unwrap();
     let (pipe_curve, sps) = run_pipelined(&cfg, &target, &pool, &bundle, Some(&il), 3).unwrap();
 
     assert!(sps > 0.0);
@@ -163,8 +168,13 @@ fn engine_workers1_is_bit_identical_to_reference_across_methods() {
 
         let fwd = lab.manifest.find(&cfg.arch, 64, 10, "fwd_b320").unwrap();
         let sel = lab.manifest.find(&cfg.arch, 64, 10, "select_b320").unwrap();
-        let pool =
-            ScoringPool::new(fwd, sel, None, &PoolConfig { workers: 1, queue_depth: 4 }).unwrap();
+        let pool = ScoringPool::new(
+            fwd,
+            sel,
+            None,
+            &PoolConfig { workers: 1, lane_depth: 4, ..PoolConfig::default() },
+        )
+        .unwrap();
         let (curve, _) = run_pipelined(&cfg, &target, &pool, &bundle, il_ref, 3).unwrap();
 
         assert_eq!(
