@@ -1,24 +1,25 @@
 //! Parallelized selection (paper §3): run the same RHO-LOSS training
-//! synchronously and through the streaming pipeline (prefetch producer
-//! + multi-worker scoring pool with bounded-queue backpressure), and
-//! compare steps/sec. Forward-pass scoring parallelises without the
-//! diminishing returns of gradient parallelism — this example shows
-//! that dimension directly.
+//! inline and through `Session`s with a `target` compute plane of
+//! growing size (prefetch producer + multi-worker scoring pool with
+//! per-lane backpressure), and compare steps/sec. Forward-pass
+//! scoring parallelises without the diminishing returns of gradient
+//! parallelism — this example shows that dimension directly.
 //!
 //! ```sh
 //! cargo run --release --example parallel_pipeline
 //! ```
 
+use std::rc::Rc;
+
 use anyhow::Result;
 
 use rho::config::RunConfig;
-use rho::coordinator::engine::run_pipelined;
-use rho::coordinator::trainer::Trainer;
+use rho::coordinator::Session;
 use rho::experiments::common::Lab;
 use rho::experiments::ExpCtx;
+use rho::runtime::plane::ComputePlane;
 use rho::runtime::pool::{PoolConfig, ScoringPool};
 use rho::selection::Method;
-use rho::util::timer::Stopwatch;
 
 fn main() -> Result<()> {
     let scale: f64 = std::env::var("RHO_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.3);
@@ -37,20 +38,19 @@ fn main() -> Result<()> {
     let target = lab.runtime(&cfg.arch, &cfg.dataset)?;
     let il = lab.il_context(&cfg, &bundle)?;
 
-    // --- synchronous reference ---------------------------------------
-    let sw = Stopwatch::start();
-    let sync_res = Trainer::new(&cfg, &target).run(&bundle, Some(&il))?;
-    let sync_sps = sync_res.steps as f64 / sw.elapsed_s();
+    // --- inline reference --------------------------------------------
+    let sync_res = Session::new(&cfg, &target).run(&bundle, Some(&il))?;
+    let sync_sps = sync_res.steps_per_sec();
     println!(
-        "synchronous:  {:>6.1} steps/s (final acc {:.3})",
+        "inline:       {:>6.1} steps/s (final acc {:.3})",
         sync_sps,
         sync_res.curve.final_accuracy()
     );
 
-    // --- pipelined with scoring pool ----------------------------------
+    // --- sessions with a growing target plane -------------------------
+    let (d, c) = rho::data::catalog::dims_for(&cfg.dataset);
     let manifest = &lab.manifest;
     for workers in [1usize, 2, 4] {
-        let (d, c) = rho::data::catalog::dims_for(&cfg.dataset);
         let fwd = manifest.find(&cfg.arch, d, c, &format!("fwd_b{}", manifest.select_batch))?;
         let sel = manifest.find(&cfg.arch, d, c, &format!("select_b{}", manifest.select_batch))?;
         let pool = ScoringPool::new(
@@ -59,19 +59,21 @@ fn main() -> Result<()> {
             None,
             &PoolConfig { workers, lane_depth: 16, ..PoolConfig::default() },
         )?;
-        let (curve, sps) = run_pipelined(&cfg, &target, &pool, &bundle, Some(&il), 4)?;
-        let t = rho::coordinator::metrics::DispatchTimings::from_report(&pool.report());
+        let plane = ComputePlane::new("target", cfg.arch.clone(), Rc::new(pool));
+        let res = Session::new(&cfg, &target).plane(&plane).prefetch(4).run(&bundle, Some(&il))?;
+        let sps = res.steps_per_sec();
+        let t = &res.plane_timings[0];
         println!(
-            "pipelined w={workers}: {:>6.1} steps/s ({:+.0}% vs sync, final acc {:.3}, loads {:?}, \
+            "plane w={workers}:    {:>6.1} steps/s ({:+.0}% vs inline, final acc {:.3}, loads {:?}, \
              queue-wait {:.0}us/chunk, rates {:?})",
             sps,
             (sps / sync_sps - 1.0) * 100.0,
-            curve.final_accuracy(),
-            pool.worker_loads(),
+            res.curve.final_accuracy(),
+            t.worker_chunks,
             t.mean_queue_wait_us,
             t.worker_rates.iter().map(|r| (r * 10.0).round() / 10.0).collect::<Vec<_>>()
         );
     }
-    println!("\n(selection forward passes parallelise across workers — paper §3)");
+    println!("\n(selection forward passes parallelise across plane workers — paper §3)");
     Ok(())
 }

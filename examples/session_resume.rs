@@ -1,0 +1,94 @@
+//! The `Session` builder end-to-end: a two-plane run (expensive
+//! target arch on the `target` plane, cheap IL arch scoring + async
+//! updating on the `il` plane — the paper's amortization asymmetry as
+//! run construction) with periodic checkpointing, interrupted on
+//! purpose, then resumed to completion. The resumed eval curve
+//! continues from the saved step; a mismatched resume errors instead
+//! of silently restarting.
+//!
+//! ```sh
+//! cargo run --release --example session_resume
+//! ```
+
+use anyhow::Result;
+
+use rho::config::RunConfig;
+use rho::coordinator::Session;
+use rho::experiments::common::Lab;
+use rho::experiments::ExpCtx;
+use rho::selection::Method;
+
+fn main() -> Result<()> {
+    let scale: f64 = std::env::var("RHO_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(0.3);
+    let ctx = ExpCtx::new(scale);
+    let lab = Lab::new(&ctx)?;
+    let mut cfg = RunConfig {
+        dataset: "clothing1m".into(),
+        arch: "mlp_base".into(),
+        il_arch: "mlp_small".into(),
+        method: Method::RhoLoss,
+        online_il: true,
+        epochs: 6,
+        il_epochs: 8,
+        workers: 2,
+        ..Default::default()
+    };
+    // the [planes] table, programmatically: one worker is plenty for
+    // the cheap IL arch; the target plane keeps the run-level sizing
+    cfg.apply_pairs(["plane.il.workers=1"])?;
+    let bundle = lab.bundle(&cfg.dataset);
+    let target = lab.runtime(&cfg.arch, &cfg.dataset)?;
+    let il_rt = lab.runtime(&cfg.il_arch, &cfg.dataset)?;
+    let il = lab.il_context(&cfg, &bundle)?;
+    let planes = lab.planes(&cfg)?;
+    for p in &planes {
+        println!("plane `{}` -> arch {} ({} workers)", p.name, p.arch, p.pool.workers);
+    }
+
+    let ckpt = std::env::temp_dir().join("rho-session-resume-example.ckpt");
+    let steps_per_epoch = bundle.train.len().div_ceil(cfg.big_batch()) as u64;
+
+    // --- first leg: 3 of 6 epochs, checkpointing every epoch ---------
+    let mut first_leg = cfg.clone();
+    first_leg.epochs = 3;
+    let first = Session::new(&first_leg, &target)
+        .il_runtime(&il_rt)
+        .planes(planes.iter())
+        .checkpoint_every(steps_per_epoch)
+        .checkpoint_path(&ckpt)
+        .run(&bundle, Some(&il))?;
+    println!(
+        "\nfirst leg:  {} steps, acc {:.3}, checkpoint at {}",
+        first.steps,
+        first.curve.final_accuracy(),
+        ckpt.display()
+    );
+
+    // --- resumed leg: the full 6-epoch run continues from step 3e ----
+    let resumed = Session::new(&cfg, &target)
+        .il_runtime(&il_rt)
+        .planes(planes.iter())
+        .resume_from(&ckpt)
+        .run(&bundle, Some(&il))?;
+    println!("resumed leg: {} steps, acc {:.3}", resumed.steps, resumed.curve.final_accuracy());
+    for p in &resumed.curve.points {
+        println!("  epoch {:>4.1}  step {:>6}  acc {:.3}", p.epoch, p.step, p.accuracy);
+    }
+    let first_resumed_step = resumed.curve.points.first().map(|p| p.step).unwrap_or(0);
+    println!(
+        "curve continues from step {} (> saved step {})",
+        first_resumed_step,
+        steps_per_epoch * 3
+    );
+
+    // --- a mismatched resume is an error, never a silent restart -----
+    let mut wrong = cfg.clone();
+    wrong.arch = "mlp_small".into();
+    let wrong_target = lab.runtime(&wrong.arch, &wrong.dataset)?;
+    match Session::new(&wrong, &wrong_target).resume_from(&ckpt).run(&bundle, Some(&il)) {
+        Err(e) => println!("\nmismatched resume refused as expected:\n  {e:#}"),
+        Ok(_) => println!("\nBUG: mismatched resume was accepted"),
+    }
+    std::fs::remove_file(&ckpt).ok();
+    Ok(())
+}

@@ -1,33 +1,52 @@
 //! End-to-end engine throughput (steps/sec): the unified streaming
 //! engine across selection methods (uniform / train_loss / rho_loss)
-//! and pool sizes (workers ∈ {1, 4}), against each method's
-//! synchronous inline reference. This regenerates the paper's §3
-//! parallelized-selection claim at bench scale — now for every
-//! method, not just fused RHO — and is the primary L3 perf target
+//! and target-plane sizes (workers ∈ {1, 4}), against each method's
+//! inline reference. This regenerates the paper's §3
+//! parallelized-selection claim at bench scale — for every method,
+//! not just fused RHO — and is the primary L3 perf target
 //! (EXPERIMENTS.md §Perf).
 //!
 //! Besides the human-readable table, every run (over)writes its
 //! measured numbers to `BENCH_pipeline.json` (one entry per method ×
-//! workers, plus pool dispatch/queue-wait timings); committing the
-//! file per PR makes the perf trajectory machine-trackable across
-//! PRs.
+//! workers, plus per-plane dispatch/queue-wait timings); committing
+//! the file per PR makes the perf trajectory machine-trackable.
+//!
+//! `RHO_BENCH_SMOKE=1` switches to smoke mode (tiny dataset scale, 1
+//! epoch — a handful of steps per method, one worker) so CI can prove
+//! the harness end-to-end and upload the JSON without paying bench
+//! wall-clock; when artifacts are missing the JSON still lands with
+//! `"skipped": true`.
+
+use std::rc::Rc;
 
 use rho::config::RunConfig;
-use rho::coordinator::engine::run_pipelined;
-use rho::coordinator::metrics::DispatchTimings;
-use rho::coordinator::trainer::{IlContext, Trainer};
+use rho::coordinator::{IlContext, Session};
 use rho::experiments::common::Lab;
 use rho::experiments::ExpCtx;
+use rho::runtime::plane::ComputePlane;
 use rho::runtime::pool::{PoolConfig, ScoringPool};
 use rho::selection::Method;
 use rho::util::json::{arr, num, obj, s, Value};
-use rho::util::timer::Stopwatch;
+
+fn write_doc(doc: Value) {
+    let path = std::path::Path::new("BENCH_pipeline.json");
+    match std::fs::write(path, doc.to_json() + "\n") {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
 
 fn main() {
-    println!("== bench_pipeline ==");
-    let ctx = ExpCtx::new(0.25);
+    let smoke = std::env::var("RHO_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    println!("== bench_pipeline{} ==", if smoke { " (smoke)" } else { "" });
+    let ctx = ExpCtx::new(if smoke { 0.05 } else { 0.25 });
     if !ctx.artifacts.join("manifest.json").exists() {
         println!("(artifacts missing: run `make artifacts`)");
+        write_doc(obj(vec![
+            ("bench", s("pipeline")),
+            ("skipped", Value::Bool(true)),
+            ("reason", s("artifact manifest missing")),
+        ]));
         return;
     }
     let lab = Lab::new(&ctx).unwrap();
@@ -36,10 +55,11 @@ fn main() {
         arch: "mlp_base".into(),
         il_arch: "mlp_small".into(),
         method: Method::RhoLoss,
-        epochs: 3,
-        il_epochs: 4,
+        epochs: if smoke { 1 } else { 3 },
+        il_epochs: if smoke { 1 } else { 4 },
         ..Default::default()
     };
+    let worker_sweep: &[usize] = if smoke { &[1] } else { &[1, 4] };
     let bundle = lab.bundle(&base.dataset);
     let target = lab.runtime(&base.arch, &base.dataset).unwrap();
     let (d, c) = rho::data::catalog::dims_for(&base.dataset);
@@ -58,18 +78,17 @@ fn main() {
         };
         let il_ref = il.as_deref();
 
-        let sw = Stopwatch::start();
-        let sync = Trainer::new(&cfg, &target).run(&bundle, il_ref).unwrap();
-        let sync_sps = sync.steps as f64 / sw.elapsed_s();
+        let sync = Session::new(&cfg, &target).run(&bundle, il_ref).unwrap();
+        let sync_sps = sync.steps_per_sec();
         sync_by_method.insert(method, sync_sps);
-        println!("{:<12} sync (inline):      {sync_sps:>7.1} steps/s", method.name());
+        println!("{:<12} inline:             {sync_sps:>7.1} steps/s", method.name());
         entries.push(obj(vec![
             ("method", s(method.name())),
-            ("workers", num(0.0)), // 0 = synchronous inline reference
+            ("workers", num(0.0)), // 0 = inline reference
             ("steps_per_sec", num(sync_sps)),
         ]));
 
-        for workers in [1usize, 4] {
+        for &workers in worker_sweep {
             let pool = ScoringPool::new(
                 fwd,
                 sel,
@@ -77,10 +96,16 @@ fn main() {
                 &PoolConfig { workers, lane_depth: 16, ..PoolConfig::default() },
             )
             .unwrap();
-            let (_, sps) = run_pipelined(&cfg, &target, &pool, &bundle, il_ref, 4).unwrap();
-            let t = DispatchTimings::from_report(&pool.report());
+            let plane = ComputePlane::new("target", base.arch.clone(), Rc::new(pool));
+            let res = Session::new(&cfg, &target)
+                .plane(&plane)
+                .prefetch(4)
+                .run(&bundle, il_ref)
+                .unwrap();
+            let sps = res.steps_per_sec();
+            let t = res.plane_timings.first().cloned().unwrap_or_default();
             println!(
-                "{:<12} pool workers={workers}:    {sps:>7.1} steps/s ({:+.0}% vs sync, queue-wait {:.0}us/chunk)",
+                "{:<12} plane workers={workers}:   {sps:>7.1} steps/s ({:+.0}% vs inline, queue-wait {:.0}us/chunk)",
                 method.name(),
                 (sps / sync_sps - 1.0) * 100.0,
                 t.mean_queue_wait_us
@@ -90,37 +115,34 @@ fn main() {
                 ("workers", num(workers as f64)),
                 ("steps_per_sec", num(sps)),
                 ("vs_sync_pct", num((sps / sync_sps - 1.0) * 100.0)),
+                ("plane", s(&t.plane)),
                 ("dispatches", num(t.dispatches as f64)),
                 ("chunks", num(t.chunks as f64)),
                 ("mean_queue_wait_us", num(t.mean_queue_wait_us)),
                 ("mean_busy_us", num(t.mean_busy_us)),
-                ("worker_chunks", arr(t.worker_chunks.iter().map(|&c| num(c as f64)))),
+                ("worker_chunks", arr(t.worker_chunks.iter().map(|&ch| num(ch as f64)))),
                 ("worker_rates", arr(t.worker_rates.iter().map(|&r| num(r)))),
             ]));
         }
     }
 
     // Selection-overhead ratio (paper §3: the selection fwd pass costs
-    // n_B/(3 n_b) of a train step in theory), from the sync runs above.
+    // n_B/(3 n_b) of a train step in theory), from the inline runs.
     let uni_sps = sync_by_method[&Method::Uniform];
     let rho_sps = sync_by_method[&Method::RhoLoss];
     println!(
-        "uniform/rho sync ratio: {:.2}x (paper theory ~{:.2}x fwd-only)",
+        "uniform/rho inline ratio: {:.2}x (paper theory ~{:.2}x fwd-only)",
         uni_sps / rho_sps,
         1.0 + 320.0 / (3.0 * 32.0)
     );
 
     // Machine-readable perf record (steps/sec per method × workers).
-    let doc = obj(vec![
+    write_doc(obj(vec![
         ("bench", s("pipeline")),
+        ("smoke", Value::Bool(smoke)),
         ("scale", num(ctx.scale)),
         ("epochs", num(base.epochs as f64)),
         ("uniform_over_rho_sync", num(uni_sps / rho_sps)),
         ("entries", Value::Array(entries)),
-    ]);
-    let path = std::path::Path::new("BENCH_pipeline.json");
-    match std::fs::write(path, doc.to_json() + "\n") {
-        Ok(()) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
-    }
+    ]));
 }

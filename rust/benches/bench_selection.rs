@@ -113,7 +113,7 @@ fn main() {
         if workers == 1 {
             base_mean = h.mean_us();
         }
-        let t = rho::coordinator::metrics::DispatchTimings::from_report(&pool.report());
+        let t = rho::coordinator::metrics::DispatchTimings::from_report("target", &pool.report());
         println!(
             "pool rho 3200 pts, workers={workers:<2}              {} (speedup {:.2}x, queue-wait {:.0}us/chunk)",
             h.summary(),

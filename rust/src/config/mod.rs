@@ -1,6 +1,14 @@
 //! Run configuration: defaults mirror the paper's §4.0 setup
 //! (AdamW defaults, n_b=32, n_B=320 => 10% selected), overridable from
 //! `key=value` pairs (CLI) or a config file with one pair per line.
+//!
+//! Config files may additionally use a `[planes]` section: keys inside
+//! it (`il.workers = 2`, `il.arch = mlp_small`, `target.workers = 4`)
+//! are shorthand for the flat `plane.<name>.<field>` keys, which also
+//! work from the CLI. Each named [`PlaneSpec`] sizes one compute plane
+//! independently (see `runtime::plane`). Checkpoint/resume is
+//! configured by `checkpoint_every` / `checkpoint_path` / `resume`
+//! (or the `--checkpoint-every` / `--resume` CLI flags).
 
 use anyhow::{anyhow, bail, Result};
 
@@ -61,6 +69,31 @@ pub struct RunConfig {
     pub prefetch: usize,
     /// JSONL event-log path ("" = disabled).
     pub events: String,
+    /// Engine steps between session checkpoints (0 = no checkpointing;
+    /// the final step is always checkpointed when enabled).
+    pub checkpoint_every: usize,
+    /// Session-checkpoint file ("" = derive `checkpoints/<tag>.ckpt`).
+    pub checkpoint_path: String,
+    /// Resume from this session checkpoint ("" = fresh run). A
+    /// checkpoint whose shapes/identity don't match the run errors out
+    /// — never a silent restart.
+    pub resume: String,
+    /// Named compute-plane sizing overrides (the `[planes]` table /
+    /// `plane.<name>.<field>` keys).
+    pub planes: Vec<PlaneSpec>,
+}
+
+/// Per-plane sizing/arch overrides. Unset fields inherit the
+/// run-level `workers` / `lane_depth` / `rate_alpha` keys (and the
+/// plane's conventional arch: target arch for `target`/`mcd`,
+/// `il_arch` for `il`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PlaneSpec {
+    pub name: String,
+    pub arch: Option<String>,
+    pub workers: Option<usize>,
+    pub lane_depth: Option<usize>,
+    pub rate_alpha: Option<f64>,
 }
 
 impl Default for RunConfig {
@@ -90,6 +123,10 @@ impl Default for RunConfig {
             rate_alpha: 0.3,
             prefetch: 4,
             events: String::new(),
+            checkpoint_every: 0,
+            checkpoint_path: String::new(),
+            resume: String::new(),
+            planes: Vec::new(),
         }
     }
 }
@@ -131,9 +168,58 @@ impl RunConfig {
             "rate_alpha" => self.rate_alpha = v.parse()?,
             "prefetch" => self.prefetch = v.parse()?,
             "events" => self.events = v.into(),
+            "checkpoint_every" => self.checkpoint_every = v.parse()?,
+            "checkpoint_path" => self.checkpoint_path = v.into(),
+            "resume" => self.resume = v.into(),
+            k if k.starts_with("plane.") => self.set_plane(k, v)?,
             other => bail!("unknown config key `{other}`"),
         }
         Ok(())
+    }
+
+    /// Apply one `plane.<name>.<field>` override (the flat spelling of
+    /// the `[planes]` table).
+    fn set_plane(&mut self, key: &str, v: &str) -> Result<()> {
+        let rest = key.strip_prefix("plane.").expect("caller matched the prefix");
+        let (name, field) = rest
+            .split_once('.')
+            .ok_or_else(|| anyhow!("expected plane.<name>.<field>, got `{key}`"))?;
+        if name.is_empty() {
+            bail!("empty plane name in `{key}`");
+        }
+        let spec = match self.planes.iter_mut().position(|s| s.name == name) {
+            Some(i) => &mut self.planes[i],
+            None => {
+                self.planes.push(PlaneSpec { name: name.to_string(), ..Default::default() });
+                self.planes.last_mut().expect("just pushed")
+            }
+        };
+        match field {
+            "arch" => spec.arch = Some(v.into()),
+            "workers" => spec.workers = Some(v.parse()?),
+            "lane_depth" => spec.lane_depth = Some(v.parse()?),
+            "rate_alpha" => spec.rate_alpha = Some(v.parse()?),
+            other => {
+                bail!("unknown plane field `{other}` (known: arch workers lane_depth rate_alpha)")
+            }
+        }
+        Ok(())
+    }
+
+    /// The named plane's spec, when the config declares one.
+    pub fn plane(&self, name: &str) -> Option<&PlaneSpec> {
+        self.planes.iter().find(|s| s.name == name)
+    }
+
+    /// Where session checkpoints go: the explicit `checkpoint_path`,
+    /// or `checkpoints/<tag>.ckpt`.
+    pub fn checkpoint_file(&self) -> std::path::PathBuf {
+        if self.checkpoint_path.is_empty() {
+            std::path::PathBuf::from("checkpoints")
+                .join(format!("{}.ckpt", self.tag().replace('/', "_")))
+        } else {
+            std::path::PathBuf::from(&self.checkpoint_path)
+        }
     }
 
     /// Apply a sequence of `key=value` strings.
@@ -148,17 +234,32 @@ impl RunConfig {
     }
 
     /// Parse a config file: one `key = value` per line, `#` comments.
+    /// A `[planes]` section prefixes its keys with `plane.` (so
+    /// `il.workers = 2` becomes `plane.il.workers=2`); `[run]` returns
+    /// to the flat namespace.
     pub fn apply_file(&mut self, path: &std::path::Path) -> Result<()> {
         let text = std::fs::read_to_string(path)?;
+        let mut prefix: &str = "";
         for (lineno, line) in text.lines().enumerate() {
             let line = line.split('#').next().unwrap_or("").trim();
             if line.is_empty() {
                 continue;
             }
+            if let Some(section) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                prefix = match section.trim() {
+                    "run" => "",
+                    "planes" => "plane.",
+                    other => bail!(
+                        "{path:?}:{}: unknown section `[{other}]` (known: [run] [planes])",
+                        lineno + 1
+                    ),
+                };
+                continue;
+            }
             let (k, v) = line
                 .split_once('=')
                 .ok_or_else(|| anyhow!("{path:?}:{}: expected key = value", lineno + 1))?;
-            self.set(k, v)
+            self.set(&format!("{prefix}{}", k.trim()), v)
                 .map_err(|e| anyhow!("{path:?}:{}: {e}", lineno + 1))?;
         }
         Ok(())
@@ -180,6 +281,18 @@ impl RunConfig {
         }
         if !(self.rate_alpha > 0.0 && self.rate_alpha <= 1.0) {
             bail!("rate_alpha must be in (0, 1], got {}", self.rate_alpha);
+        }
+        for spec in &self.planes {
+            if let Some(ra) = spec.rate_alpha {
+                if !(ra > 0.0 && ra <= 1.0) {
+                    bail!("plane.{}.rate_alpha must be in (0, 1], got {ra}", spec.name);
+                }
+            }
+            if let Some(arch) = &spec.arch {
+                if arch.is_empty() {
+                    bail!("plane.{}.arch must not be empty", spec.name);
+                }
+            }
         }
         Ok(())
     }
@@ -289,6 +402,69 @@ mod tests {
         c.select_frac = 0.1;
         c.lr = -1.0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn plane_table_keys_apply() {
+        let mut c = RunConfig::default();
+        c.apply_pairs([
+            "plane.il.workers=2",
+            "plane.il.arch=mlp_small",
+            "plane.il.rate_alpha=0.5",
+            "plane.target.workers=4",
+            "plane.target.lane_depth=6",
+        ])
+        .unwrap();
+        let il = c.plane("il").unwrap();
+        assert_eq!(il.arch.as_deref(), Some("mlp_small"));
+        assert_eq!((il.workers, il.lane_depth), (Some(2), None));
+        assert_eq!(il.rate_alpha, Some(0.5));
+        let target = c.plane("target").unwrap();
+        assert_eq!((target.workers, target.lane_depth), (Some(4), Some(6)));
+        assert!(target.arch.is_none());
+        assert!(c.plane("mcd").is_none());
+        c.validate().unwrap();
+        // bad field / empty name / bad spec alpha all rejected
+        assert!(c.set("plane.il.queue", "3").is_err());
+        assert!(c.set("plane..workers", "3").is_err());
+        c.set("plane.il.rate_alpha", "1.5").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn checkpoint_keys_round_trip() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.checkpoint_every, 0);
+        c.apply_pairs(["checkpoint_every=500", "resume=out/run.ckpt"]).unwrap();
+        assert_eq!(c.checkpoint_every, 500);
+        assert_eq!(c.resume, "out/run.ckpt");
+        // derived default path is tag-based; explicit path wins
+        assert!(c.checkpoint_file().to_string_lossy().ends_with(".ckpt"));
+        assert!(c.checkpoint_file().starts_with("checkpoints"));
+        c.apply_pairs(["checkpoint_path=my/ckpt.bin"]).unwrap();
+        assert_eq!(c.checkpoint_file(), std::path::PathBuf::from("my/ckpt.bin"));
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn planes_section_in_config_file() {
+        let dir = std::env::temp_dir().join(format!("rho-cfg-planes-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.cfg");
+        std::fs::write(
+            &path,
+            "method = rho_loss\nonline_il = true\n\n[planes]\ntarget.workers = 4\nil.workers = 2 # small arch\nil.arch = logreg\n\n[run]\nepochs = 5\n",
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        c.apply_file(&path).unwrap();
+        assert_eq!(c.epochs, 5, "[run] returns to the flat namespace");
+        assert_eq!(c.plane("target").unwrap().workers, Some(4));
+        assert_eq!(c.plane("il").unwrap().arch.as_deref(), Some("logreg"));
+        // unknown section rejected
+        std::fs::write(&path, "[pools]\nx = 1\n").unwrap();
+        assert!(c.apply_file(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,308 @@
+//! Session checkpoints: periodic snapshots of everything a
+//! Clothing-1M-scale run needs to continue from the saved step —
+//! target `TrainState` (+ the online-IL state when present), the
+//! selection RNG cursor, and the run identity used to refuse
+//! mismatched resumes.
+//!
+//! Resume semantics: the engine restores the RNG, fast-forwards the
+//! (deterministic) epoch sampler to the saved step, and continues the
+//! loop at `step + 1`, so the eval curve *continues* — points keep
+//! their absolute step numbers — instead of silently restarting.
+//! Identity or shape drift (different dataset/arch/method, parameter
+//! count, train-set size) is an error by design: a checkpoint never
+//! quietly initializes a fresh run.
+//!
+//! Writes are atomic (temp file + rename) so a crash mid-checkpoint
+//! leaves the previous checkpoint intact.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::RunConfig;
+use crate::runtime::params::TrainState;
+
+const MAGIC: &[u8; 8] = b"RHOSESS1";
+
+/// One saved session cursor + model state(s).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionCheckpoint {
+    /// Run identity, validated on resume.
+    pub dataset: String,
+    pub arch: String,
+    pub il_arch: String,
+    pub method: String,
+    /// Train-set length the sampler was built over.
+    pub n_train: u64,
+    /// Engine step this checkpoint was taken after.
+    pub step: u64,
+    /// Last test accuracy (epoch-roll bookkeeping continuity).
+    pub last_acc: f32,
+    /// Selection-RNG cursor.
+    pub rng: (u64, u64),
+    pub target: TrainState,
+    /// Online-IL model state, when the run updates one.
+    pub il: Option<TrainState>,
+}
+
+impl SessionCheckpoint {
+    /// Atomic write: serialize to `<path>.tmp`, then rename over.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let tmp = path.with_extension("ckpt.tmp");
+        {
+            let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+            w.write_all(MAGIC)?;
+            for s in [&self.dataset, &self.arch, &self.il_arch, &self.method] {
+                write_str(&mut w, s)?;
+            }
+            w.write_all(&self.n_train.to_le_bytes())?;
+            w.write_all(&self.step.to_le_bytes())?;
+            w.write_all(&self.last_acc.to_le_bytes())?;
+            w.write_all(&self.rng.0.to_le_bytes())?;
+            w.write_all(&self.rng.1.to_le_bytes())?;
+            self.target.write_to(&mut w)?;
+            match &self.il {
+                Some(st) => {
+                    w.write_all(&[1u8])?;
+                    st.write_to(&mut w)?;
+                }
+                None => w.write_all(&[0u8])?,
+            }
+            w.flush()?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("installing checkpoint {path:?}"))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<SessionCheckpoint> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening session checkpoint {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?} is not a RHO session checkpoint (bad magic {magic:?})");
+        }
+        let dataset = read_str(&mut r)?;
+        let arch = read_str(&mut r)?;
+        let il_arch = read_str(&mut r)?;
+        let method = read_str(&mut r)?;
+        let n_train = read_u64(&mut r)?;
+        let step = read_u64(&mut r)?;
+        let mut f32buf = [0u8; 4];
+        r.read_exact(&mut f32buf)?;
+        let last_acc = f32::from_le_bytes(f32buf);
+        let rng = (read_u64(&mut r)?, read_u64(&mut r)?);
+        let target = TrainState::read_from(&mut r)?;
+        let mut flag = [0u8; 1];
+        r.read_exact(&mut flag)?;
+        let il = match flag[0] {
+            0 => None,
+            1 => Some(TrainState::read_from(&mut r)?),
+            other => bail!("{path:?}: bad IL-state flag {other}"),
+        };
+        Ok(SessionCheckpoint {
+            dataset,
+            arch,
+            il_arch,
+            method,
+            n_train,
+            step,
+            last_acc,
+            rng,
+            target,
+            il,
+        })
+    }
+
+    /// Refuse to resume into a run this checkpoint was not saved for.
+    /// Every mismatch is an error (never a silent restart): run
+    /// identity (dataset/arch/method), parameter-vector shape,
+    /// train-set size, online-IL presence, and cursor overrun.
+    pub fn validate_for(
+        &self,
+        cfg: &RunConfig,
+        target_param_count: usize,
+        n_train: usize,
+        total_steps: u64,
+    ) -> Result<()> {
+        if self.dataset != cfg.dataset {
+            bail!("checkpoint is for dataset `{}`, run is `{}`", self.dataset, cfg.dataset);
+        }
+        if self.arch != cfg.arch {
+            bail!("checkpoint is for arch `{}`, run is `{}`", self.arch, cfg.arch);
+        }
+        if self.method != cfg.method.name() {
+            bail!("checkpoint is for method `{}`, run is `{}`", self.method, cfg.method.name());
+        }
+        if self.target.theta.len() != target_param_count {
+            bail!(
+                "checkpoint has {} target params, model `{}` expects {} (shape mismatch)",
+                self.target.theta.len(),
+                cfg.arch,
+                target_param_count
+            );
+        }
+        if self.n_train != n_train as u64 {
+            bail!(
+                "checkpoint sampled over {} train points, run has {} (shape mismatch)",
+                self.n_train,
+                n_train
+            );
+        }
+        if cfg.online_il && self.il.is_none() {
+            bail!("run sets online_il but the checkpoint carries no IL state");
+        }
+        // The IL arch only binds the run when the saved IL state will
+        // actually be restored into an IL runtime.
+        if cfg.online_il && self.il.is_some() && self.il_arch != cfg.il_arch {
+            bail!(
+                "checkpoint's IL state is for il_arch `{}`, run is `{}`",
+                self.il_arch,
+                cfg.il_arch
+            );
+        }
+        if self.step >= total_steps {
+            bail!(
+                "checkpoint is at step {} but the run only has {} total steps — raise `epochs` to continue training",
+                self.step,
+                total_steps
+            );
+        }
+        Ok(())
+    }
+}
+
+fn write_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    let bytes = s.as_bytes();
+    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn read_str<R: Read>(r: &mut R) -> Result<String> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > 1 << 20 {
+        bail!("unreasonable string length {len} in checkpoint");
+    }
+    let mut bytes = vec![0u8; len];
+    r.read_exact(&mut bytes)?;
+    Ok(String::from_utf8(bytes)?)
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::Method;
+
+    fn sample() -> SessionCheckpoint {
+        let mut target = TrainState::new(vec![1.0, -2.0, 3.5]);
+        target.m[0] = 0.25;
+        target.step = 7;
+        let mut il = TrainState::new(vec![0.5, 0.5]);
+        il.v[1] = 0.125;
+        SessionCheckpoint {
+            dataset: "cifar10".into(),
+            arch: "mlp_base".into(),
+            il_arch: "mlp_small".into(),
+            method: "rho_loss".into(),
+            n_train: 1000,
+            step: 40,
+            last_acc: 0.625,
+            rng: (0xDEAD_BEEF, 43),
+            target,
+            il: Some(il),
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("rho-sess-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_with_and_without_il() {
+        let dir = tmp("rt");
+        let path = dir.join("s.ckpt");
+        let mut c = sample();
+        c.save(&path).unwrap();
+        assert_eq!(SessionCheckpoint::load(&path).unwrap(), c);
+        c.il = None;
+        c.save(&path).unwrap();
+        assert_eq!(SessionCheckpoint::load(&path).unwrap(), c);
+        // atomic write leaves no temp droppings
+        assert!(!path.with_extension("ckpt.tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_and_trainstate_files() {
+        let dir = tmp("bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(SessionCheckpoint::load(&path).is_err());
+        // a bare TrainState checkpoint has the wrong magic
+        TrainState::new(vec![1.0]).save(&path).unwrap();
+        assert!(SessionCheckpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn validate_refuses_every_mismatch() {
+        let c = sample();
+        let cfg = RunConfig {
+            dataset: "cifar10".into(),
+            arch: "mlp_base".into(),
+            method: Method::RhoLoss,
+            online_il: true,
+            ..Default::default()
+        };
+        c.validate_for(&cfg, 3, 1000, 100).unwrap();
+        // identity mismatches
+        let mut bad = cfg.clone();
+        bad.dataset = "qmnist".into();
+        assert!(c.validate_for(&bad, 3, 1000, 100).is_err());
+        let mut bad = cfg.clone();
+        bad.arch = "cnn_small".into();
+        assert!(c.validate_for(&bad, 3, 1000, 100).unwrap_err().to_string().contains("arch"));
+        let mut bad = cfg.clone();
+        bad.method = Method::Uniform;
+        assert!(c.validate_for(&bad, 3, 1000, 100).is_err());
+        // shape mismatches
+        let err = c.validate_for(&cfg, 99, 1000, 100).unwrap_err().to_string();
+        assert!(err.contains("shape mismatch"), "{err}");
+        assert!(c.validate_for(&cfg, 3, 999, 100).is_err());
+        // cursor overrun and missing IL state
+        assert!(c.validate_for(&cfg, 3, 1000, 40).is_err());
+        let mut no_il = c.clone();
+        no_il.il = None;
+        assert!(no_il.validate_for(&cfg, 3, 1000, 100).is_err());
+        // online-IL resume must keep the IL arch too...
+        let mut bad = cfg.clone();
+        bad.il_arch = "logreg".into();
+        let err = c.validate_for(&bad, 3, 1000, 100).unwrap_err().to_string();
+        assert!(err.contains("il_arch"), "{err}");
+        // ...but il_arch is free to differ when the run ignores IL state
+        bad.online_il = false;
+        bad.method = Method::Uniform;
+        let mut no_il_run = c.clone();
+        no_il_run.method = "uniform".into();
+        no_il_run.validate_for(&bad, 3, 1000, 100).unwrap();
+    }
+}

@@ -1,5 +1,6 @@
 //! The unified streaming selection engine: ONE pipelined training
-//! loop for every selection `Method`.
+//! loop for every selection `Method`, scored across named compute
+//! planes.
 //!
 //! Shape (paper §3 "simple parallelized selection", generalized): a
 //! producer thread samples candidate batches without replacement,
@@ -9,46 +10,70 @@
 //! train step. A second producer-side thread materializes the
 //! test-set eval buffer concurrently with the first train steps, so
 //! when the consumer reaches an eval boundary the rows are already
-//! gathered and are reused for every subsequent eval (the old loop
-//! re-gathered the whole test set each time, synchronously). The
-//! consumer walks a [`selection::provider`](crate::selection::provider)
-//! stack that computes exactly the signals `cfg.method` ranks on —
-//! fused RHO scores, fwd stats, MC-dropout, precomputed or online IL
-//! — optionally fanning out over the parallel [`ScoringPool`], then
-//! selects, trains, evaluates, and tracks. The synchronous
-//! [`Trainer`](super::trainer::Trainer) facade and the deployment
-//! pipeline ([`run_pipelined`]) are thin configurations of this one
-//! engine, so the two shapes can never drift; with one pool worker
-//! the curves are bit-identical to the inline reference (asserted in
-//! `tests/trainer_integration.rs`).
+//! gathered and are reused for every subsequent eval. The consumer
+//! walks a [`selection::provider`](crate::selection::provider) stack
+//! that computes exactly the signals `cfg.method` ranks on — fused
+//! RHO scores, fwd stats, MC-dropout, precomputed or online IL — each
+//! provider bound to its named [`ComputePlane`] out of the session's
+//! [`PlaneSet`] (inline fallback when a plane is absent), then
+//! selects, trains, evaluates, and tracks. The [`Session`]
+//! (`coordinator::session`) builder is the front door; with one
+//! worker per plane the curves are bit-identical to the inline
+//! reference (asserted in `tests/session_integration.rs`).
+//!
+//! Multi-plane asymmetry (the paper's cheap-IL-vs-expensive-target
+//! economics): the `target` plane runs the fused RHO path on the
+//! target arch's own workers while the `il` plane scores online IL on
+//! *its* arch's workers — and when the `il` plane carries a train
+//! artifact, the online-IL AdamW update runs asynchronously on the
+//! plane's updater thread ([`IlUpdater`]), overlapped with the target
+//! gradient step and the next batch's scoring dispatch, synchronized
+//! (FIFO) before the next IL score so the trajectory stays
+//! bitwise-identical to inline updating.
+//!
+//! Checkpoint/resume: with `checkpoint_every > 0` the engine
+//! atomically writes a [`SessionCheckpoint`] — target (+ online-IL)
+//! `TrainState`, selection-RNG cursor, run identity — every N steps
+//! and at the final step. A resumed run restores the RNG,
+//! fast-forwards the deterministic sampler, and continues the loop at
+//! `step + 1`, so eval points keep their absolute step numbers;
+//! identity or shape mismatches are hard errors, never silent
+//! restarts. (Selection-property tracking restarts at the resume
+//! point — the tracker is derived observability, not run state.)
 //!
 //! Hot-path guarantees: candidate batches cross the channel as
-//! [`Arc<CandBatch>`] and are never cloned — the scoring pool's
-//! workers slice `(start, take)` windows straight out of the shared
-//! buffer (zero-copy dispatch, see [`crate::runtime::pool`]); the
-//! gradient step slices selected rows out of the same buffer (no
-//! re-gather); scoring snapshots theta via the versioned `Arc` in
+//! [`Arc<CandBatch>`] and are never cloned — every plane's workers
+//! slice `(start, take)` windows straight out of the shared buffer
+//! (zero-copy dispatch, see [`crate::runtime::pool`]); the gradient
+//! step slices selected rows out of the same buffer (no re-gather);
+//! scoring snapshots theta via the versioned `Arc` in
 //! [`TrainState`](crate::runtime::params::TrainState) (refcount bump,
 //! no per-step full-parameter copy); and the precomputed-IL slice
 //! reaches the fused-RHO workers as a refcount bump on the
-//! producer-side gather. When a pool is attached, per-worker load and
-//! dispatch/queue-wait timings are emitted through the event log at
+//! producer-side gather. Per-plane load and dispatch/queue-wait
+//! timings are emitted through the event log (keyed by plane name) at
 //! every eval boundary and returned in
-//! [`RunResult::pool_timings`](super::trainer::RunResult).
+//! [`RunResult::plane_timings`](super::session::RunResult).
 
 use anyhow::{anyhow, bail, Context, Result};
+use std::path::PathBuf;
+use std::rc::Rc;
 use std::sync::mpsc::sync_channel;
 use std::sync::Arc;
 
 use crate::config::RunConfig;
+use crate::coordinator::checkpoint::SessionCheckpoint;
 use crate::coordinator::events::EventLog;
 use crate::coordinator::metrics::{Curve, DispatchTimings, EvalPoint};
+use crate::coordinator::session::{IlContext, RunResult};
 use crate::coordinator::tracker::SelectionTracker;
-use crate::coordinator::trainer::{IlContext, RunResult};
 use crate::data::loader::EpochSampler;
 use crate::data::{Bundle, Dataset};
 use crate::runtime::handle::ModelRuntime;
-use crate::runtime::pool::ScoringPool;
+use crate::runtime::params::TrainState;
+use crate::runtime::plane::{ComputePlane, PlaneSet, PLANE_IL, PLANE_MCD, PLANE_TARGET};
+use crate::runtime::pool::PoolReport;
+use crate::runtime::updater::IlUpdater;
 use crate::selection::provider::{self, SignalSet, StackSpec, StepCtx};
 use crate::selection::select;
 use crate::util::math::top_k_indices;
@@ -57,25 +82,57 @@ use crate::util::timer::Stopwatch;
 
 pub use crate::runtime::pool::CandBatch;
 
-/// The unified engine. `pool: None` scores inline on the calling
-/// thread (the reference shape); `pool: Some` fans scoring out across
-/// workers (the deployment shape). Either way the loop, curve,
-/// tracker, and event semantics are identical.
+#[allow(unused_imports)] // doc links
+use crate::coordinator::session::Session;
+
+/// How the online-IL model advances: inline on the consumer thread
+/// (the reference shape) or asynchronously on the `il` plane's
+/// updater thread (updates overlap target work; FIFO sync before the
+/// next IL score keeps the trajectory bitwise-identical).
+enum IlDriver {
+    None,
+    Inline(TrainState),
+    Async(IlUpdater),
+}
+
+/// The unified engine. An empty [`PlaneSet`] scores inline on the
+/// calling thread (the reference shape); registered planes fan each
+/// signal family out across their own workers (the deployment shape).
+/// Either way the loop, curve, tracker, and event semantics are
+/// identical. Construct through [`Session`] unless you are wiring the
+/// loop by hand.
 pub struct Engine<'a> {
     pub cfg: &'a RunConfig,
     pub target: &'a ModelRuntime,
     /// IL-model runtime: required by `needs_il` methods when
     /// `online_il` is set, and by the SVP proxy filter.
     pub il_rt: Option<&'a ModelRuntime>,
-    /// Optional parallel scoring pool (paper §3).
-    pub pool: Option<&'a ScoringPool>,
+    /// Named compute planes (paper §3, generalized to one pool per
+    /// model/signal family).
+    pub planes: PlaneSet<'a>,
     /// Candidate batches buffered ahead of the consumer (min 1).
     pub prefetch_depth: usize,
+    /// Engine steps between session checkpoints (0 = off; the final
+    /// step is also checkpointed when enabled).
+    pub checkpoint_every: u64,
+    /// Checkpoint file (None = derive from the config when enabled).
+    pub checkpoint_path: Option<PathBuf>,
+    /// Resume from this session checkpoint before stepping.
+    pub resume: Option<PathBuf>,
 }
 
 impl<'a> Engine<'a> {
     pub fn new(cfg: &'a RunConfig, target: &'a ModelRuntime) -> Self {
-        Engine { cfg, target, il_rt: None, pool: None, prefetch_depth: cfg.prefetch }
+        Engine {
+            cfg,
+            target,
+            il_rt: None,
+            planes: PlaneSet::default(),
+            prefetch_depth: cfg.prefetch,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            resume: None,
+        }
     }
 
     /// Run the full Algorithm-1 loop on `bundle.train`, evaluating on
@@ -88,8 +145,39 @@ impl<'a> Engine<'a> {
         if method.needs_il() && il.is_none() {
             bail!("method `{}` needs an IlContext", method.name());
         }
-        if method.needs_mcdropout() && !self.target.has_mcdropout() {
-            bail!("method `{}` needs an mcdropout artifact for `{}`", method.name(), self.target.arch);
+        // The `target` and `mcd` planes score with the TARGET model's
+        // parameters — a plane compiled from a different shape would
+        // die at the first dispatch with an opaque literal error (or,
+        // worse, score a same-sized wrong arch silently). Reject the
+        // mismatch up front, before any IL prep is paid for.
+        for name in [PLANE_TARGET, PLANE_MCD] {
+            if let Some(p) = self.planes.get(name) {
+                if p.pool.param_count() != self.target.param_count || p.pool.d() != self.target.d {
+                    bail!(
+                        "`{name}` plane (arch `{}`, {} params, d {}) does not match the target \
+                         runtime `{}` ({} params, d {})",
+                        p.arch,
+                        p.pool.param_count(),
+                        p.pool.d(),
+                        self.target.arch,
+                        self.target.param_count,
+                        self.target.d
+                    );
+                }
+            }
+        }
+        // MC-dropout only ever binds the `mcd` plane, the `target`
+        // plane, or the inline runtime (see provider::stack) — an
+        // artifact on any other plane can't serve it.
+        let pooled_mcd = [PLANE_MCD, PLANE_TARGET]
+            .iter()
+            .any(|n| self.planes.pool(n).map(|p| p.has_mcdropout()).unwrap_or(false));
+        if method.needs_mcdropout() && !self.target.has_mcdropout() && !pooled_mcd {
+            bail!(
+                "method `{}` needs an mcdropout artifact for `{}` (inline, or on the `mcd`/`target` plane)",
+                method.name(),
+                self.target.arch
+            );
         }
 
         // --- SVP offline core-set filter (proxy = IL model) ---------
@@ -113,32 +201,91 @@ impl<'a> Engine<'a> {
             bail!("empty train set");
         }
 
-        // --- run state ----------------------------------------------
-        let mut rng = Pcg32::new(cfg.seed, 53);
-        let mut state = self.target.init(cfg.seed as i32)?;
-        let mut il_state = match (cfg.online_il, il) {
-            (true, Some(c)) => Some(
-                c.state
-                    .clone()
-                    .ok_or_else(|| anyhow!("online_il needs IlContext.state"))?,
-            ),
-            _ => None,
-        };
-        if cfg.online_il && self.il_rt.is_none() {
-            bail!("online_il needs il_rt");
-        }
-
         let big = cfg.big_batch();
         let steps_per_epoch = n.div_ceil(big) as u64;
         let eval_every = if cfg.eval_every == 0 { steps_per_epoch } else { cfg.eval_every as u64 };
         let total_steps = steps_per_epoch * cfg.epochs as u64;
 
-        let mut events = if cfg.events.is_empty() {
-            EventLog::disabled()
-        } else {
-            EventLog::create(std::path::Path::new(&cfg.events))?
+        // --- resume --------------------------------------------------
+        let resumed: Option<SessionCheckpoint> = match &self.resume {
+            Some(path) => {
+                let ckpt = SessionCheckpoint::load(path)?;
+                ckpt.validate_for(cfg, self.target.param_count, n, total_steps)
+                    .with_context(|| format!("refusing to resume from {path:?}"))?;
+                Some(ckpt)
+            }
+            None => None,
+        };
+        let start_step: u64 = resumed.as_ref().map(|c| c.step).unwrap_or(0);
+
+        // --- run state ----------------------------------------------
+        let mut rng = match &resumed {
+            Some(c) => Pcg32::from_state(c.rng),
+            None => Pcg32::new(cfg.seed, 53),
+        };
+        let mut state = match &resumed {
+            Some(c) => c.target.clone(),
+            None => self.target.init(cfg.seed as i32)?,
+        };
+        if cfg.online_il && self.il_rt.is_none() {
+            bail!("online_il needs il_rt");
+        }
+        let il_initial: Option<TrainState> = match (cfg.online_il, il) {
+            (true, Some(c)) => Some(match resumed.as_ref().and_then(|r| r.il.clone()) {
+                Some(st) => st,
+                None => c
+                    .state
+                    .clone()
+                    .ok_or_else(|| anyhow!("online_il needs IlContext.state"))?,
+            }),
+            _ => None,
+        };
+        // Online-IL driver: async on the `il` plane's updater thread
+        // when the plane carries a train artifact, inline otherwise.
+        let il_plane = self.planes.get(PLANE_IL);
+        if let (Some(st), Some(il_rt)) = (&il_initial, self.il_rt) {
+            if st.theta.len() != il_rt.param_count {
+                bail!(
+                    "IL state has {} params but the IL runtime `{}` expects {} (shape mismatch — \
+                     wrong `il_arch` for this checkpoint/context?)",
+                    st.theta.len(),
+                    il_rt.arch,
+                    il_rt.param_count
+                );
+            }
+        }
+        if let (Some(p), true) = (il_plane, il_initial.is_some()) {
+            let il_rt = self.il_rt.expect("online_il validated above");
+            if p.pool.param_count() != il_rt.param_count || p.pool.d() != il_rt.d {
+                bail!(
+                    "`il` plane (arch `{}`, {} params, d {}) does not match the IL runtime `{}` ({} params, d {})",
+                    p.arch,
+                    p.pool.param_count(),
+                    p.pool.d(),
+                    il_rt.arch,
+                    il_rt.param_count,
+                    il_rt.d
+                );
+            }
+        }
+        let mut il_driver = match il_initial {
+            Some(st) => match il_plane.and_then(|p| p.train_meta.as_ref()) {
+                Some(meta) => IlDriver::Async(IlUpdater::spawn(meta, st)?),
+                None => IlDriver::Inline(st),
+            },
+            None => IlDriver::None,
+        };
+        let online_il = !matches!(il_driver, IlDriver::None);
+
+        let mut events = match (cfg.events.is_empty(), resumed.is_some()) {
+            (true, _) => EventLog::disabled(),
+            (false, true) => EventLog::append(std::path::Path::new(&cfg.events))?,
+            (false, false) => EventLog::create(std::path::Path::new(&cfg.events))?,
         };
         events.run_start(&cfg.tag(), n, total_steps);
+        if let (Some(c), Some(path)) = (&resumed, &self.resume) {
+            events.resume(c.step, &path.to_string_lossy());
+        }
         if let Some(ilc) = il {
             events.il_ready(
                 ilc.values.len(),
@@ -147,25 +294,39 @@ impl<'a> Engine<'a> {
             );
         }
 
-        // Signal providers: exactly what `method` ranks on, in
-        // dependency order (IL before fused RHO).
+        // Signal providers: exactly what `method` ranks on, each bound
+        // to its compute plane, in dependency order (IL before fused
+        // RHO).
         let mut providers = provider::stack(&StackSpec {
             method,
             track_props: cfg.track_props,
-            online_il: il_state.is_some(),
+            online_il,
             target: self.target,
             il_rt: self.il_rt,
-            pool: self.pool,
+            planes: self.planes,
             il_values,
         })?;
 
         let mut curve = Curve::default();
         let mut tracker = SelectionTracker::new();
-        let mut last_acc = 0.0f32;
+        let mut last_acc = resumed.as_ref().map(|c| c.last_acc).unwrap_or(0.0);
         let sw = Stopwatch::start();
-        // Per-run pool observability: pools are cached across runs, so
-        // subtract a run-start snapshot from the cumulative counters.
-        let pool_start = self.pool.map(|p| p.report());
+        // Per-run, per-plane observability: pools are cached across
+        // runs, so subtract a run-start snapshot from the cumulative
+        // counters. Planes sharing one pool (same PlaneKey) are
+        // reported once, under the first name that registered it.
+        let mut plane_list: Vec<&ComputePlane> = Vec::new();
+        for p in self.planes.iter() {
+            if !plane_list.iter().any(|q| Rc::ptr_eq(&q.pool, &p.pool)) {
+                plane_list.push(p);
+            }
+        }
+        let pool_start: Vec<PoolReport> = plane_list.iter().map(|p| p.pool.report()).collect();
+        let ckpt_path: Option<PathBuf> = if self.checkpoint_every > 0 {
+            Some(self.checkpoint_path.clone().unwrap_or_else(|| cfg.checkpoint_file()))
+        } else {
+            None
+        };
 
         // --- producers + consumer ------------------------------------
         let seed = cfg.seed;
@@ -173,7 +334,7 @@ impl<'a> Engine<'a> {
         // consumer's IL provider becomes a refcount bump); online IL
         // scores with live parameters, so nothing to pre-gather there.
         let producer_il: Option<&[f32]> =
-            if method.needs_il() && il_state.is_none() { il_values } else { None };
+            if method.needs_il() && !online_il { il_values } else { None };
         let (tx, rx) = sync_channel::<Arc<CandBatch>>(self.prefetch_depth.max(1));
         // Eval double buffer: the test-set rows materialize on their
         // own thread while the first train steps run, then serve every
@@ -183,7 +344,14 @@ impl<'a> Engine<'a> {
         std::thread::scope(|scope| -> Result<()> {
             let producer = scope.spawn(move || {
                 let mut sampler = EpochSampler::new(n, seed ^ 0xBA7C);
-                for step in 1..=total_steps {
+                // Deterministic fast-forward to the resume cursor:
+                // replay the index stream only (shuffles, no gathers,
+                // no scoring) — cheap even for long runs.
+                let mut skip = Vec::new();
+                for _ in 0..start_step {
+                    sampler.next_batch(big, &mut skip);
+                }
+                for step in (start_step + 1)..=total_steps {
                     let (idx, rolled) = sampler.take_batch(big);
                     let (xs, ys) = train.gather(&idx);
                     let il = producer_il.map(|table| {
@@ -204,8 +372,13 @@ impl<'a> Engine<'a> {
                 let mut sig = SignalSet::default();
                 let mut eval_buf: Option<(Vec<f32>, Vec<i32>)> = None;
                 let mut mcd_seed = cfg.seed as i32;
+                if method.needs_mcdropout() {
+                    // the seed advances once per step — rejoin the
+                    // sequence at the resume cursor
+                    mcd_seed = mcd_seed.wrapping_add(start_step as i32);
+                }
                 let d = self.target.d;
-                for _ in 0..total_steps {
+                for _ in start_step..total_steps {
                     let b = rx.recv().map_err(|_| anyhow!("candidate producer died"))?;
                     if b.rolled {
                         tracker.roll_epoch(last_acc);
@@ -217,12 +390,20 @@ impl<'a> Engine<'a> {
                         mcd_seed = mcd_seed.wrapping_add(1);
                     }
 
-                    // scoring signals via the provider stack
+                    // scoring signals via the provider stack; for an
+                    // async IL driver this is the FIFO sync point —
+                    // every queued IL update has been applied before
+                    // the snapshot returns
+                    let il_theta_step: Option<Arc<Vec<f32>>> = match &il_driver {
+                        IlDriver::Inline(st) => Some(st.theta_snapshot()),
+                        IlDriver::Async(u) => Some(u.theta()?),
+                        IlDriver::None => None,
+                    };
                     sig.clear();
                     {
                         let ctx = StepCtx {
                             theta: &state.theta,
-                            il_theta: il_state.as_ref().map(|s| &s.theta),
+                            il_theta: il_theta_step.as_ref(),
                             batch: &b,
                             mcd_seed,
                         };
@@ -255,16 +436,27 @@ impl<'a> Engine<'a> {
                         let wbase = chunk_i * self.target.train_batch;
                         let w = &sel.weights[wbase..wbase + chunk.len()];
                         self.target.train_step(&mut state, &sel_xs, &sel_ys, w, cfg.lr, cfg.wd)?;
-                        // online IL model update on the same acquired batch
-                        if let (Some(ist), Some(il_rt)) = (&mut il_state, self.il_rt) {
-                            il_rt.train_step(
-                                ist,
-                                &sel_xs,
-                                &sel_ys,
-                                w,
-                                cfg.lr * cfg.il_lr_scale,
-                                cfg.wd,
-                            )?;
+                        // online IL update on the same acquired batch:
+                        // pushed to the plane's updater thread (overlaps
+                        // the remaining chunks / eval / next dispatch)
+                        // or applied inline
+                        match &mut il_driver {
+                            IlDriver::Async(u) => {
+                                u.push(&sel_xs, &sel_ys, w, cfg.lr * cfg.il_lr_scale, cfg.wd)?
+                            }
+                            IlDriver::Inline(ist) => {
+                                let il_rt =
+                                    self.il_rt.ok_or_else(|| anyhow!("online_il needs il_rt"))?;
+                                il_rt.train_step(
+                                    ist,
+                                    &sel_xs,
+                                    &sel_ys,
+                                    w,
+                                    cfg.lr * cfg.il_lr_scale,
+                                    cfg.wd,
+                                )?;
+                            }
+                            IlDriver::None => {}
                         }
                     }
 
@@ -287,10 +479,38 @@ impl<'a> Engine<'a> {
                             accuracy: ev.accuracy,
                             loss: ev.mean_loss,
                         });
-                        if let (Some(p), Some(start)) = (self.pool, &pool_start) {
-                            events.pool_stats(&DispatchTimings::from_report(
-                                &p.report().since(start),
-                            ));
+                        for (p, start) in plane_list.iter().zip(&pool_start) {
+                            events.pool_stats(
+                                &p.name,
+                                &DispatchTimings::from_report(&p.name, &p.pool.report().since(start)),
+                            );
+                        }
+                    }
+
+                    // periodic session checkpoint (atomic write); the
+                    // async IL driver is synced so the saved IL state
+                    // reflects every update up to this step
+                    if let Some(path) = &ckpt_path {
+                        if b.step % self.checkpoint_every == 0 || b.step == total_steps {
+                            let il_snap = match &il_driver {
+                                IlDriver::Inline(st) => Some(st.clone()),
+                                IlDriver::Async(u) => Some(u.snapshot()?),
+                                IlDriver::None => None,
+                            };
+                            SessionCheckpoint {
+                                dataset: cfg.dataset.clone(),
+                                arch: cfg.arch.clone(),
+                                il_arch: cfg.il_arch.clone(),
+                                method: method.name().to_string(),
+                                n_train: n as u64,
+                                step: b.step,
+                                last_acc,
+                                rng: rng.state(),
+                                target: state.clone(),
+                                il: il_snap,
+                            }
+                            .save(path)?;
+                            events.checkpoint(b.step, &path.to_string_lossy());
                         }
                     }
                 }
@@ -305,46 +525,35 @@ impl<'a> Engine<'a> {
         })?;
 
         tracker.roll_epoch(last_acc);
-        let pool_timings = match (self.pool, &pool_start) {
-            (Some(p), Some(start)) => Some(DispatchTimings::from_report(&p.report().since(start))),
-            _ => None,
-        };
+        let plane_timings: Vec<DispatchTimings> = plane_list
+            .iter()
+            .zip(&pool_start)
+            .map(|(p, start)| DispatchTimings::from_report(&p.name, &p.pool.report().since(start)))
+            .collect();
         events.run_end(last_acc, sw.elapsed_s());
 
-        let il_final_accuracy = match (&il_state, self.il_rt) {
-            (Some(ist), Some(il_rt)) => Some(il_rt.eval_on(&ist.theta, &bundle.test)?.accuracy),
-            _ => None,
+        let il_final_accuracy = match il_driver {
+            IlDriver::Inline(st) => {
+                let il_rt = self.il_rt.ok_or_else(|| anyhow!("online_il needs il_rt"))?;
+                Some(il_rt.eval_on(&st.theta, &bundle.test)?.accuracy)
+            }
+            IlDriver::Async(u) => {
+                let st = u.finish()?;
+                let il_rt = self.il_rt.ok_or_else(|| anyhow!("online_il needs il_rt"))?;
+                Some(il_rt.eval_on(&st.theta, &bundle.test)?.accuracy)
+            }
+            IlDriver::None => None,
         };
         Ok(RunResult {
             curve,
             tracker,
             state,
-            steps: total_steps,
+            steps: total_steps - start_step,
             train_secs: sw.elapsed_s(),
             il_final_accuracy,
-            pool_timings,
+            plane_timings,
         })
     }
-}
-
-/// Deployment-shape entry point: run `cfg.method` through the engine
-/// with an explicit scoring pool and prefetch depth. Returns the
-/// curve plus achieved steps/sec for the perf harness. Covers every
-/// `Method` that needs no IL *runtime* (pass `il: None` for methods
-/// that don't use IL values); for SVP or `online_il` — which need an
-/// `il_rt` — construct an [`Engine`] directly and set its `il_rt`.
-pub fn run_pipelined(
-    cfg: &RunConfig,
-    target: &ModelRuntime,
-    pool: &ScoringPool,
-    bundle: &Bundle,
-    il: Option<&IlContext>,
-    prefetch_depth: usize,
-) -> Result<(Curve, f64)> {
-    let res = Engine { cfg, target, il_rt: None, pool: Some(pool), prefetch_depth }
-        .run(bundle, il)?;
-    let sps = if res.train_secs > 0.0 { res.steps as f64 / res.train_secs } else { 0.0 };
-    Ok((res.curve, sps))
 }
 
 /// SVP core-set: keep the `frac` highest-proxy-entropy points

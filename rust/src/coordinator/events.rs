@@ -32,7 +32,17 @@ impl EventLog {
         Ok(EventLog { w: Some(BufWriter::new(File::create(path)?)), written: 0, errors: 0 })
     }
 
-    /// A sink that drops everything (the default in Trainer).
+    /// Append to an existing log (resumed sessions continue the same
+    /// JSONL stream instead of truncating the pre-resume history).
+    pub fn append(path: &Path) -> std::io::Result<EventLog> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(EventLog { w: Some(BufWriter::new(f)), written: 0, errors: 0 })
+    }
+
+    /// A sink that drops everything (the default in Session).
     pub fn disabled() -> EventLog {
         EventLog { w: None, written: 0, errors: 0 }
     }
@@ -90,13 +100,15 @@ impl EventLog {
         );
     }
 
-    /// Scoring-pool load-balance observability: per-worker chunk
-    /// loads and EMA rates plus dispatch/queue-wait timings, emitted
-    /// at every eval boundary (cumulative since run start).
-    pub fn pool_stats(&mut self, t: &crate::coordinator::metrics::DispatchTimings) {
+    /// Per-plane scoring load-balance observability, keyed by plane
+    /// name: per-worker chunk loads and EMA rates plus
+    /// dispatch/queue-wait timings, emitted at every eval boundary
+    /// (cumulative since run start, one event per compute plane).
+    pub fn pool_stats(&mut self, plane: &str, t: &crate::coordinator::metrics::DispatchTimings) {
         self.emit(
             "pool_stats",
             vec![
+                ("plane", s(plane)),
                 ("dispatches", num(t.dispatches as f64)),
                 ("chunks", num(t.chunks as f64)),
                 ("mean_queue_wait_us", num(t.mean_queue_wait_us)),
@@ -106,6 +118,16 @@ impl EventLog {
                 ("worker_rates", arr(t.worker_rates.iter().map(|&r| num(r)))),
             ],
         );
+    }
+
+    /// A session checkpoint was written at `step`.
+    pub fn checkpoint(&mut self, step: u64, path: &str) {
+        self.emit("checkpoint", vec![("step", num(step as f64)), ("path", s(path))]);
+    }
+
+    /// The run resumed from a session checkpoint saved at `step`.
+    pub fn resume(&mut self, step: u64, path: &str) {
+        self.emit("resume", vec![("step", num(step as f64)), ("path", s(path))]);
     }
 
     pub fn epoch_roll(&mut self, epoch: usize, frac_noisy: f32) {
@@ -178,10 +200,11 @@ mod tests {
     }
 
     #[test]
-    fn pool_stats_event_round_trips() {
+    fn pool_stats_event_is_keyed_by_plane() {
         let path = tmp("c").join("run.jsonl");
         let mut log = EventLog::create(&path).unwrap();
         let t = crate::coordinator::metrics::DispatchTimings {
+            plane: "target".into(),
             dispatches: 3,
             chunks: 12,
             mean_queue_wait_us: 42.0,
@@ -189,17 +212,44 @@ mod tests {
             worker_chunks: vec![9, 3],
             worker_rates: vec![3.0, 1.0],
         };
-        log.pool_stats(&t);
+        log.pool_stats("target", &t);
+        log.pool_stats("il", &t);
         log.run_end(0.0, 0.0);
         drop(log);
         let text = std::fs::read_to_string(&path).unwrap();
         let v = json::parse(text.lines().next().unwrap()).unwrap();
         assert_eq!(v.get("kind").unwrap().as_str(), Some("pool_stats"));
+        assert_eq!(v.get("plane").unwrap().as_str(), Some("target"));
         assert_eq!(v.get("chunks").unwrap().as_f64(), Some(12.0));
         assert_eq!(v.get("worker_chunks").unwrap().as_array().unwrap().len(), 2);
         assert_eq!(v.get("worker_rates").unwrap().as_array().unwrap()[0].as_f64(), Some(3.0));
         assert!(v.get("imbalance").unwrap().as_f64().unwrap() > 1.0);
+        let v2 = json::parse(text.lines().nth(1).unwrap()).unwrap();
+        assert_eq!(v2.get("plane").unwrap().as_str(), Some("il"));
         std::fs::remove_dir_all(tmp("c")).ok();
+    }
+
+    #[test]
+    fn checkpoint_resume_events_and_append_mode() {
+        let path = tmp("d").join("run.jsonl");
+        let mut log = EventLog::create(&path).unwrap();
+        log.checkpoint(500, "checkpoints/run.ckpt");
+        drop(log);
+        // a resumed session appends instead of truncating
+        let mut log = EventLog::append(&path).unwrap();
+        log.resume(500, "checkpoints/run.ckpt");
+        log.run_end(0.9, 1.0);
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "append kept the pre-resume history");
+        let ck = json::parse(lines[0]).unwrap();
+        assert_eq!(ck.get("kind").unwrap().as_str(), Some("checkpoint"));
+        assert_eq!(ck.get("step").unwrap().as_f64(), Some(500.0));
+        let rs = json::parse(lines[1]).unwrap();
+        assert_eq!(rs.get("kind").unwrap().as_str(), Some("resume"));
+        assert_eq!(rs.get("path").unwrap().as_str(), Some("checkpoints/run.ckpt"));
+        std::fs::remove_dir_all(tmp("d")).ok();
     }
 
     #[test]

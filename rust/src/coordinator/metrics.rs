@@ -8,14 +8,19 @@ use std::path::Path;
 use crate::runtime::pool::PoolReport;
 use crate::util::csvio::CsvWriter;
 
-/// Per-run scoring-pool dispatch timings, aggregated from a
-/// [`PoolReport`] delta (pools are cached across runs). The headline
-/// numbers for the ISSUE-2 hot path: how long chunks sat in worker
-/// lanes (`mean_queue_wait_us`), how long workers computed
+/// Per-plane scoring dispatch timings, aggregated from one plane
+/// pool's [`PoolReport`] delta (pools are cached across runs). The
+/// headline numbers for the scoring hot path: how long chunks sat in
+/// worker lanes (`mean_queue_wait_us`), how long workers computed
 /// (`mean_busy_us`), and how evenly the rate-aware planner spread the
-/// load (`worker_chunks` / `imbalance`).
+/// load (`worker_chunks` / `imbalance`). Combine the per-plane
+/// entries of a run with [`DispatchTimings::aggregate`] for the
+/// fleet-wide view.
 #[derive(Clone, Debug, Default)]
 pub struct DispatchTimings {
+    /// Compute-plane name this entry describes (`"all"` for an
+    /// [`aggregate`](Self::aggregate) across planes).
+    pub plane: String,
     pub dispatches: u64,
     pub chunks: u64,
     /// Mean per-chunk lane wait (enqueue → worker pickup).
@@ -29,9 +34,10 @@ pub struct DispatchTimings {
 }
 
 impl DispatchTimings {
-    pub fn from_report(r: &PoolReport) -> DispatchTimings {
+    pub fn from_report(plane: &str, r: &PoolReport) -> DispatchTimings {
         let per_chunk = 1e6 / r.chunks.max(1) as f64;
         DispatchTimings {
+            plane: plane.to_string(),
             dispatches: r.dispatches,
             chunks: r.chunks,
             mean_queue_wait_us: r.queue_wait_s * per_chunk,
@@ -41,10 +47,38 @@ impl DispatchTimings {
         }
     }
 
+    /// Fold per-plane timings into one `"all"` entry: counters sum,
+    /// per-chunk means re-weight by chunk count, and the worker
+    /// vectors concatenate in plane order — so [`imbalance`]
+    /// (max/mean) reads across *every* worker of *every* plane and
+    /// exposes a plane whose lanes dominate the run.
+    ///
+    /// [`imbalance`]: Self::imbalance
+    pub fn aggregate<'a>(parts: impl IntoIterator<Item = &'a DispatchTimings>) -> DispatchTimings {
+        let mut out = DispatchTimings { plane: "all".to_string(), ..Default::default() };
+        let mut wait_us_total = 0.0;
+        let mut busy_us_total = 0.0;
+        for t in parts {
+            out.dispatches += t.dispatches;
+            out.chunks += t.chunks;
+            wait_us_total += t.mean_queue_wait_us * t.chunks as f64;
+            busy_us_total += t.mean_busy_us * t.chunks as f64;
+            out.worker_chunks.extend_from_slice(&t.worker_chunks);
+            out.worker_rates.extend_from_slice(&t.worker_rates);
+        }
+        if out.chunks > 0 {
+            out.mean_queue_wait_us = wait_us_total / out.chunks as f64;
+            out.mean_busy_us = busy_us_total / out.chunks as f64;
+        }
+        out
+    }
+
     /// Max/mean chunk-count ratio across workers: 1.0 is perfectly
     /// balanced; >> 1.0 means one lane dominated. On heterogeneous
     /// hosts imbalance in *chunks* is expected and healthy — the
     /// planner matches it to service rates so *time* stays balanced.
+    /// On an [`aggregate`](Self::aggregate) entry the ratio spans
+    /// every worker of every plane.
     pub fn imbalance(&self) -> f64 {
         let k = self.worker_chunks.len();
         if k == 0 || self.chunks == 0 {
@@ -58,7 +92,8 @@ impl DispatchTimings {
     /// One-line run-report rendering.
     pub fn summary(&self) -> String {
         format!(
-            "pool: {} dispatches, {} chunks, queue-wait {:.0}us/chunk, busy {:.0}us/chunk, loads {:?} (imbalance {:.2}x)",
+            "plane `{}`: {} dispatches, {} chunks, queue-wait {:.0}us/chunk, busy {:.0}us/chunk, loads {:?} (imbalance {:.2}x)",
+            self.plane,
             self.dispatches,
             self.chunks,
             self.mean_queue_wait_us,
@@ -123,7 +158,19 @@ impl Curve {
     }
 
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
-        let mut w = CsvWriter::create(path, &["epoch", "step", "accuracy", "loss"])?;
+        self.csv_into(CsvWriter::create(path, Self::CSV_HEADER)?)
+    }
+
+    /// Append rows to an existing curve CSV (header only when the file
+    /// is new) — a resumed run extends the pre-resume history instead
+    /// of overwriting it, matching the event log's append semantics.
+    pub fn append_csv(&self, path: &Path) -> std::io::Result<()> {
+        self.csv_into(CsvWriter::append(path, Self::CSV_HEADER)?)
+    }
+
+    const CSV_HEADER: &'static [&'static str] = &["epoch", "step", "accuracy", "loss"];
+
+    fn csv_into(&self, mut w: CsvWriter) -> std::io::Result<()> {
         for p in &self.points {
             w.rowf(&[p.epoch, p.step as f64, p.accuracy as f64, p.loss as f64])?;
         }
@@ -218,7 +265,8 @@ mod tests {
                 WorkerStat { chunks: 2, busy_s: 0.002, rate: 1.0 },
             ],
         };
-        let t = DispatchTimings::from_report(&r);
+        let t = DispatchTimings::from_report("target", &r);
+        assert_eq!(t.plane, "target");
         assert_eq!((t.dispatches, t.chunks), (4, 10));
         assert!((t.mean_queue_wait_us - 100.0).abs() < 1e-6);
         assert!((t.mean_busy_us - 1000.0).abs() < 1e-6);
@@ -226,7 +274,45 @@ mod tests {
         // 8 of 10 chunks on one of two workers: max/mean = 8/5
         assert!((t.imbalance() - 1.6).abs() < 1e-9);
         assert!(t.summary().contains("10 chunks"));
+        assert!(t.summary().contains("`target`"));
         // empty report is balanced by definition
         assert_eq!(DispatchTimings::default().imbalance(), 1.0);
+    }
+
+    #[test]
+    fn aggregate_spans_planes() {
+        let target = DispatchTimings {
+            plane: "target".into(),
+            dispatches: 4,
+            chunks: 30,
+            mean_queue_wait_us: 100.0,
+            mean_busy_us: 1000.0,
+            worker_chunks: vec![20, 10],
+            worker_rates: vec![2.0, 1.0],
+        };
+        let il = DispatchTimings {
+            plane: "il".into(),
+            dispatches: 4,
+            chunks: 10,
+            mean_queue_wait_us: 500.0,
+            mean_busy_us: 200.0,
+            worker_chunks: vec![10],
+            worker_rates: vec![5.0],
+        };
+        let all = DispatchTimings::aggregate([&target, &il]);
+        assert_eq!(all.plane, "all");
+        assert_eq!((all.dispatches, all.chunks), (8, 40));
+        // chunk-weighted means: (100*30 + 500*10)/40, (1000*30 + 200*10)/40
+        assert!((all.mean_queue_wait_us - 200.0).abs() < 1e-9);
+        assert!((all.mean_busy_us - 800.0).abs() < 1e-9);
+        // worker vectors concatenate in plane order...
+        assert_eq!(all.worker_chunks, vec![20, 10, 10]);
+        assert_eq!(all.worker_rates, vec![2.0, 1.0, 5.0]);
+        // ...so imbalance reads across every worker of every plane:
+        // max 20 vs mean 40/3
+        assert!((all.imbalance() - 1.5).abs() < 1e-9);
+        // aggregating nothing is the balanced empty entry
+        let none = DispatchTimings::aggregate(std::iter::empty::<&DispatchTimings>());
+        assert_eq!((none.chunks, none.imbalance()), (0, 1.0));
     }
 }

@@ -1,6 +1,6 @@
 //! L3 coordinator: the unified streaming selection engine, the
-//! Algorithm-1 `Trainer` facade, IL-model machinery, metrics, and
-//! selection-property tracking.
+//! [`Session`] run-construction API, IL-model machinery, metrics,
+//! checkpointing, and selection-property tracking.
 //!
 //! Architecture: [`engine::Engine`] is the single training loop. A
 //! producer thread prefetches candidate batches over a bounded
@@ -8,23 +8,28 @@
 //! [`selection::provider`](crate::selection::provider) signal
 //! providers — fused RHO, fwd stats, MC-dropout, precomputed/online
 //! IL — that compute exactly what the configured `Method` ranks on,
-//! optionally fanned out across the parallel scoring pool. The
-//! synchronous [`Trainer`] and the deployment pipeline
-//! ([`run_pipelined`]) are thin configurations of the same engine, so
-//! every Table-2 baseline and App. G method gets prefetch + pool
-//! parallelism, and reference semantics are bit-identical at one
-//! worker.
+//! each provider bound to a named compute plane
+//! ([`crate::runtime::plane`]): the target arch scores on the
+//! `target` plane's workers while a cheap IL arch scores (and
+//! asynchronously updates) on the `il` plane's. Runs are assembled
+//! with the [`Session`] builder, which also surfaces periodic
+//! [`checkpoint::SessionCheckpoint`] writes and resume for
+//! Clothing-1M-scale runs. Reference semantics are bit-identical at
+//! one worker per plane, asserted by the parity suite in
+//! `tests/session_integration.rs`.
 
+pub mod checkpoint;
 pub mod engine;
 pub mod events;
 pub mod il_model;
 pub mod metrics;
+pub mod session;
 pub mod tracker;
-pub mod trainer;
 
-pub use engine::{run_pipelined, CandBatch, Engine};
+pub use checkpoint::SessionCheckpoint;
+pub use engine::{CandBatch, Engine};
 pub use events::EventLog;
 pub use il_model::{compute_il, no_holdout_il, train_il, IlModel, IlTrainConfig};
 pub use metrics::{fmt_epochs, mean_curve, Curve, EvalPoint};
+pub use session::{IlContext, RunResult, Session};
 pub use tracker::SelectionTracker;
-pub use trainer::{IlContext, RunResult, Trainer};

@@ -1,0 +1,177 @@
+//! `Session`: the run-construction API. One builder assembles a
+//! training run over a registry of named compute planes —
+//! independently-sized scoring pools for the target model, the online
+//! IL model, and MC-dropout (see [`crate::runtime::plane`]) — plus
+//! first-class periodic checkpointing and resume for
+//! Clothing-1M-scale runs.
+//!
+//! ```no_run
+//! # use rho::config::RunConfig; use rho::coordinator::Session;
+//! # fn demo(cfg: &RunConfig, target: &rho::runtime::ModelRuntime,
+//! #         il_rt: &rho::runtime::ModelRuntime,
+//! #         target_plane: &rho::runtime::ComputePlane,
+//! #         il_plane: &rho::runtime::ComputePlane,
+//! #         bundle: &rho::data::Bundle) -> anyhow::Result<()> {
+//! let result = Session::new(cfg, target)
+//!     .il_runtime(il_rt)
+//!     .plane(target_plane)      // fused RHO on the target arch's workers
+//!     .plane(il_plane)          // online IL on its own (cheap) arch + workers
+//!     .checkpoint_every(10_000) // periodic TrainState checkpoints
+//!     .run(bundle, None)?;
+//! # Ok(()) }
+//! ```
+//!
+//! `Session` replaces the old borrow-parameter chain
+//! (`Trainer::new(..).with_il_rt(..).with_pool(..)`): instead of one
+//! anonymous pool threaded through every layer, a run names its
+//! planes and each `SignalProvider` binds to the plane its method's
+//! [`compute_needs`](crate::selection::Method::compute_needs)
+//! declares. All loop semantics live in [`Engine`]; `Session` is the
+//! ergonomic front door and the only construction path the CLI,
+//! experiments, examples, and benches use.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::engine::Engine;
+use crate::coordinator::metrics::{Curve, DispatchTimings};
+use crate::coordinator::tracker::SelectionTracker;
+use crate::data::Bundle;
+use crate::runtime::handle::ModelRuntime;
+use crate::runtime::params::TrainState;
+use crate::runtime::plane::{ComputePlane, PlaneSet};
+
+/// Precomputed irreducible-loss context for IL-based methods.
+pub struct IlContext {
+    /// IL[i] per train-set index (Algorithm 1 lines 2-3).
+    pub values: Vec<f32>,
+    /// IL-model state, for `online_il` (the non-approximated selection
+    /// function of Table 4 / Fig. 7) and for the SVP proxy.
+    pub state: Option<TrainState>,
+}
+
+/// Everything a finished run reports.
+pub struct RunResult {
+    pub curve: Curve,
+    pub tracker: SelectionTracker,
+    pub state: TrainState,
+    pub steps: u64,
+    pub train_secs: f64,
+    /// Final accuracy of the (possibly online-updated) IL model
+    /// (Fig. 7 right). None unless online_il.
+    pub il_final_accuracy: Option<f32>,
+    /// Per-plane dispatch/queue-wait timings + worker load for this
+    /// run, one entry per registered compute plane (empty when the run
+    /// scored inline). Aggregate across planes with
+    /// [`DispatchTimings::aggregate`].
+    pub plane_timings: Vec<DispatchTimings>,
+}
+
+impl RunResult {
+    /// Achieved engine throughput.
+    pub fn steps_per_sec(&self) -> f64 {
+        if self.train_secs > 0.0 { self.steps as f64 / self.train_secs } else { 0.0 }
+    }
+}
+
+/// Builder for one training run over named compute planes.
+pub struct Session<'a> {
+    cfg: &'a RunConfig,
+    target: &'a ModelRuntime,
+    il_rt: Option<&'a ModelRuntime>,
+    planes: PlaneSet<'a>,
+    prefetch: usize,
+    checkpoint_every: u64,
+    checkpoint_path: Option<PathBuf>,
+    resume: Option<PathBuf>,
+}
+
+impl<'a> Session<'a> {
+    /// Start a session; checkpoint/resume/prefetch default from the
+    /// config (`checkpoint_every` / `checkpoint_path` / `resume` /
+    /// `prefetch` keys) and the builder methods override.
+    pub fn new(cfg: &'a RunConfig, target: &'a ModelRuntime) -> Self {
+        Session {
+            cfg,
+            target,
+            il_rt: None,
+            planes: PlaneSet::default(),
+            prefetch: cfg.prefetch,
+            checkpoint_every: cfg.checkpoint_every as u64,
+            checkpoint_path: (cfg.checkpoint_every > 0 || !cfg.checkpoint_path.is_empty())
+                .then(|| cfg.checkpoint_file()),
+            resume: (!cfg.resume.is_empty()).then(|| PathBuf::from(&cfg.resume)),
+        }
+    }
+
+    /// IL-model runtime: required by `needs_il` methods when
+    /// `online_il` is set, and by the SVP proxy filter.
+    pub fn il_runtime(mut self, il_rt: &'a ModelRuntime) -> Self {
+        self.il_rt = Some(il_rt);
+        self
+    }
+
+    /// Register one named compute plane (same-name registration
+    /// replaces — layer a default registry, then override one plane).
+    pub fn plane(mut self, plane: &'a ComputePlane) -> Self {
+        self.planes.insert(plane);
+        self
+    }
+
+    /// Register every plane of an iterator (e.g. a `Lab` registry).
+    pub fn planes(mut self, planes: impl IntoIterator<Item = &'a ComputePlane>) -> Self {
+        for p in planes {
+            self.planes.insert(p);
+        }
+        self
+    }
+
+    /// Producer prefetch depth (candidate batches buffered ahead).
+    pub fn prefetch(mut self, depth: usize) -> Self {
+        self.prefetch = depth;
+        self
+    }
+
+    /// Checkpoint the session every `steps` engine steps (and at the
+    /// final step) to the config-derived path.
+    pub fn checkpoint_every(mut self, steps: u64) -> Self {
+        self.checkpoint_every = steps;
+        if self.checkpoint_path.is_none() && steps > 0 {
+            self.checkpoint_path = Some(self.cfg.checkpoint_file());
+        }
+        self
+    }
+
+    /// Explicit checkpoint file (overrides the config-derived path).
+    pub fn checkpoint_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.checkpoint_path = Some(path.into());
+        self
+    }
+
+    /// Resume from a session checkpoint. Identity/shape mismatches
+    /// error out — a checkpoint never silently restarts a run.
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.resume = Some(path.into());
+        self
+    }
+
+    /// Run the full Algorithm-1 loop on `bundle.train`, evaluating on
+    /// `bundle.test`. `il` carries the precomputed IL values for
+    /// IL-based methods (and the proxy/initial state for SVP and
+    /// online IL).
+    pub fn run(&self, bundle: &Bundle, il: Option<&IlContext>) -> Result<RunResult> {
+        Engine {
+            cfg: self.cfg,
+            target: self.target,
+            il_rt: self.il_rt,
+            planes: self.planes,
+            prefetch_depth: self.prefetch,
+            checkpoint_every: self.checkpoint_every,
+            checkpoint_path: self.checkpoint_path.clone(),
+            resume: self.resume.clone(),
+        }
+        .run(bundle, il)
+    }
+}

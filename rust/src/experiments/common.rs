@@ -1,37 +1,43 @@
 //! Shared experiment machinery: runtime caching, IL-context
 //! preparation/reuse (the paper amortizes one IL model across many
-//! target runs), and multi-seed training sweeps.
+//! target runs), the [`ComputePlane`] registry, and multi-seed
+//! training sweeps.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use xla::PjRtClient;
 
 use crate::config::RunConfig;
 use crate::coordinator::il_model::{compute_il, no_holdout_il, train_il, IlTrainConfig};
-use crate::coordinator::trainer::{IlContext, RunResult, Trainer};
+use crate::coordinator::session::{IlContext, RunResult, Session};
 use crate::data::{catalog, Bundle};
 use crate::experiments::ExpCtx;
 use crate::runtime::artifact::Manifest;
 use crate::runtime::handle::{cpu_client, ModelRuntime};
+use crate::runtime::plane::{
+    plane_pool_config, ComputePlane, PlaneKey, KNOWN_PLANES, PLANE_IL, PLANE_MCD, PLANE_TARGET,
+};
 use crate::runtime::pool::{PoolConfig, ScoringPool};
 
-/// Lazily-loaded runtimes + cached IL contexts + scoring pools over
-/// one PJRT client.
+/// Lazily-loaded runtimes + cached IL contexts + the compute-plane
+/// registry over one PJRT client.
 pub struct Lab {
     pub manifest: Manifest,
     client: Rc<PjRtClient>,
     runtimes: RefCell<HashMap<(String, usize, usize, usize), Rc<ModelRuntime>>>,
     il_cache: RefCell<HashMap<String, Rc<IlContext>>>,
     bundles: RefCell<HashMap<String, Rc<Bundle>>>,
-    /// Pools keyed by (arch, d, c, workers, lane_depth, rate_alpha
-    /// bits) — workers own compiled executables, so reuse across runs
-    /// matters. (EMA rate state carries across runs of the same pool;
-    /// that's intended — it is a host property, not a run property.)
-    #[allow(clippy::type_complexity)]
-    pools: RefCell<HashMap<(String, usize, usize, usize, usize, u64), Rc<ScoringPool>>>,
+    /// The ComputePlane registry's pool cache, keyed by [`PlaneKey`]
+    /// (arch + data dims + pool sizing, `Hash`/`Eq` derived on the
+    /// struct — no anonymous bit-cast tuple slots). Workers own
+    /// compiled executables, so reuse across runs matters; two planes
+    /// whose keys collide intentionally share one pool. (EMA rate
+    /// state carries across runs of the same pool; that's intended —
+    /// it is a host property, not a run property.)
+    pools: RefCell<HashMap<PlaneKey, Rc<ScoringPool>>>,
     pub scale: f64,
 }
 
@@ -119,30 +125,90 @@ impl Lab {
         Ok(ctx)
     }
 
-    /// Scoring pool for `cfg`'s (arch, dataset) combo, sized from
-    /// `cfg.workers` / `cfg.lane_depth` / `cfg.rate_alpha` (see
-    /// `PoolConfig::from_run`). Cached: pool workers each hold
-    /// compiled executables. Attaches the mcdropout artifact when the
-    /// manifest has one, so App. G methods stream through the pool
-    /// too.
-    pub fn pool(&self, cfg: &RunConfig) -> Result<Rc<ScoringPool>> {
-        let (d, c) = catalog::dims_for(&cfg.dataset);
-        let pc = PoolConfig::from_run(cfg);
-        let key = (cfg.arch.clone(), d, c, pc.workers, pc.lane_depth, pc.rate_alpha.to_bits());
+    /// One pool from the registry cache, building (and caching) it on
+    /// first use for its [`PlaneKey`].
+    fn pool_for(
+        &self,
+        arch: &str,
+        dataset: &str,
+        pc: &PoolConfig,
+        require_mcd: bool,
+    ) -> Result<Rc<ScoringPool>> {
+        let (d, c) = catalog::dims_for(dataset);
+        let key = PlaneKey::new(arch, d, c, pc);
         if let Some(p) = self.pools.borrow().get(&key) {
+            if require_mcd && !p.has_mcdropout() {
+                bail!("cached pool for `{arch}` has no mcdropout artifact");
+            }
             return Ok(Rc::clone(p));
         }
         let nb = self.manifest.select_batch;
-        let fwd = self.manifest.find(&cfg.arch, d, c, &format!("fwd_b{nb}"))?;
-        let sel = self.manifest.find(&cfg.arch, d, c, &format!("select_b{nb}"))?;
-        let mcd = self.manifest.find(&cfg.arch, d, c, &format!("mcdropout_b{nb}")).ok();
-        let pool = Rc::new(ScoringPool::new(fwd, sel, mcd, &pc)?);
+        let fwd = self.manifest.find(arch, d, c, &format!("fwd_b{nb}"))?;
+        let sel = self.manifest.find(arch, d, c, &format!("select_b{nb}"))?;
+        let mcd = self.manifest.find(arch, d, c, &format!("mcdropout_b{nb}")).ok();
+        if require_mcd && mcd.is_none() {
+            bail!("`{arch}` has no mcdropout artifact — the `mcd` plane needs one");
+        }
+        let pool = Rc::new(ScoringPool::new(fwd, sel, mcd, pc)?);
         self.pools.borrow_mut().insert(key, Rc::clone(&pool));
         Ok(pool)
     }
 
-    /// One full training run per `cfg` (IL prepared on demand; a
-    /// scoring pool attached when `cfg.workers > 0`).
+    /// Resolve the ComputePlane registry for `cfg`: the `target` plane
+    /// when `workers > 0` (or an explicit `plane.target` spec), plus
+    /// every plane the config's `[planes]` table declares — `il` on
+    /// the IL arch (carrying its train artifact so online-IL updates
+    /// run asynchronously in-plane), `mcd` on an mcdropout-capable
+    /// arch. Pools come from the [`PlaneKey`]-keyed cache, so planes
+    /// with identical keys share workers.
+    pub fn planes(&self, cfg: &RunConfig) -> Result<Vec<ComputePlane>> {
+        for spec in &cfg.planes {
+            if !KNOWN_PLANES.contains(&spec.name.as_str()) {
+                bail!("unknown plane `{}` (known: {KNOWN_PLANES:?})", spec.name);
+            }
+        }
+        let mut out = Vec::new();
+        if cfg.workers > 0 || cfg.plane(PLANE_TARGET).is_some() {
+            let spec = cfg.plane(PLANE_TARGET);
+            let arch = spec.and_then(|s| s.arch.as_deref()).unwrap_or(&cfg.arch);
+            let pc = plane_pool_config(cfg, spec);
+            out.push(ComputePlane::new(
+                PLANE_TARGET,
+                arch,
+                self.pool_for(arch, &cfg.dataset, &pc, false)?,
+            ));
+        }
+        if let Some(spec) = cfg.plane(PLANE_IL) {
+            let arch = spec.arch.as_deref().unwrap_or(&cfg.il_arch);
+            let pc = plane_pool_config(cfg, Some(spec));
+            let (d, c) = catalog::dims_for(&cfg.dataset);
+            let train_meta = self
+                .manifest
+                .find(arch, d, c, &format!("train_b{}", self.manifest.train_batch))
+                .ok()
+                .cloned();
+            let mut plane =
+                ComputePlane::new(PLANE_IL, arch, self.pool_for(arch, &cfg.dataset, &pc, false)?);
+            if let Some(meta) = train_meta {
+                plane = plane.with_train_meta(meta);
+            }
+            out.push(plane);
+        }
+        if let Some(spec) = cfg.plane(PLANE_MCD) {
+            let arch = spec.arch.as_deref().unwrap_or(&cfg.arch);
+            let pc = plane_pool_config(cfg, Some(spec));
+            out.push(ComputePlane::new(
+                PLANE_MCD,
+                arch,
+                self.pool_for(arch, &cfg.dataset, &pc, true)?,
+            ));
+        }
+        Ok(out)
+    }
+
+    /// One full training run per `cfg` through the [`Session`] builder
+    /// (IL prepared on demand; the plane registry resolved from the
+    /// config — checkpoint/resume keys flow through the session too).
     pub fn run_one(&self, cfg: &RunConfig, bundle: &Bundle) -> Result<RunResult> {
         let target = self.runtime(&cfg.arch, &cfg.dataset)?;
         let needs_il =
@@ -153,15 +219,13 @@ impl Lab {
         } else {
             None
         };
-        let pool = if cfg.workers > 0 { Some(self.pool(cfg)?) } else { None };
-        let mut trainer = Trainer::new(cfg, &target);
+        let planes = self.planes(cfg)?;
+        let mut session = Session::new(cfg, &target);
         if let Some(rt) = il_rt.as_deref() {
-            trainer = trainer.with_il_rt(rt);
+            session = session.il_runtime(rt);
         }
-        if let Some(p) = pool.as_deref() {
-            trainer = trainer.with_pool(p);
-        }
-        trainer.run(bundle, il.as_deref())
+        session = session.planes(planes.iter());
+        session.run(bundle, il.as_deref())
     }
 
     /// Same config across seeds; returns one result per seed.

@@ -37,7 +37,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
     combos.push((Method::RhoLoss, "mlp_base"));
 
     for (method, il_arch) in combos {
-        let run_on = |dataset: &str, epochs: usize| -> Result<crate::coordinator::trainer::RunResult> {
+        let run_on = |dataset: &str, epochs: usize| -> Result<crate::coordinator::session::RunResult> {
             let cfg = RunConfig {
                 dataset: dataset.into(),
                 arch: "mlp_base".into(),

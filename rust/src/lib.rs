@@ -6,8 +6,9 @@
 //! stack:
 //!
 //! - **L3 (this crate)** — the training coordinator: streaming
-//!   candidate sampling, parallel scoring pool, selection functions,
-//!   Algorithm-1 trainer, IL-model machinery, metrics, experiments.
+//!   candidate sampling, named compute planes (per-arch scoring
+//!   pools), selection functions, the Algorithm-1 `Session` engine
+//!   with checkpoint/resume, IL-model machinery, metrics, experiments.
 //! - **L2** — JAX model zoo, AOT-lowered to HLO text (`python/compile`).
 //! - **L1** — Pallas scoring kernels fused into the same artifacts.
 //!

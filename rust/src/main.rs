@@ -42,20 +42,60 @@ fn real_main() -> Result<()> {
 fn print_help() {
     println!(
         "rho — RHO-LOSS coordinator (Mindermann et al., ICML 2022)\n\n\
-         usage:\n  rho train [key=value ...]\n  rho inspect [key=value ...]   score one candidate batch, compare methods\n  rho exp <id|all> [--scale F] [--seeds a,b] [--epoch-scale F]\n  rho artifacts\n  rho info\n\n\
+         usage:\n  rho train [key=value ...] [--checkpoint-every N] [--resume PATH]\n  rho inspect [key=value ...]   score one candidate batch, compare methods\n  rho exp <id|all> [--scale F] [--seeds a,b] [--epoch-scale F]\n  rho artifacts\n  rho info\n\n\
          experiments: {}\n\n\
          config keys: dataset arch il_arch method epochs seed nb select_frac lr wd\n\
          eval_every scale track_props no_holdout online_il il_lr_scale\n\
-         il_epochs svp_frac workers queue_depth lane_depth rate_alpha prefetch events",
+         il_epochs svp_frac workers queue_depth lane_depth rate_alpha prefetch events\n\
+         checkpoint_every checkpoint_path resume\n\n\
+         compute planes ([planes] table): plane.<name>.arch plane.<name>.workers\n\
+         plane.<name>.lane_depth plane.<name>.rate_alpha   (names: target il mcd)\n\
+         e.g. rho train method=rho_loss online_il=true workers=4 \\\n              plane.il.workers=2 plane.il.arch=mlp_small",
         experiments::ALL.join(" ")
     );
 }
 
 fn cmd_train(args: &[String]) -> Result<()> {
     let mut cfg = RunConfig::default();
-    cfg.apply_pairs(args.iter().map(String::as_str))?;
+    // `--checkpoint-every N` / `--resume P` / `--checkpoint-path P`
+    // are flag spellings of the matching config keys; key=value pairs
+    // and flags may interleave.
+    let mut pairs: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        let flag_key = match args[i].as_str() {
+            "--checkpoint-every" => Some("checkpoint_every"),
+            "--checkpoint-path" => Some("checkpoint_path"),
+            "--resume" => Some("resume"),
+            _ => None,
+        };
+        match flag_key {
+            Some(key) => {
+                let v = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("{} needs a value", args[i]))?;
+                pairs.push(format!("{key}={v}"));
+                i += 2;
+            }
+            None => {
+                pairs.push(args[i].clone());
+                i += 1;
+            }
+        }
+    }
+    cfg.apply_pairs(pairs.iter().map(String::as_str))?;
     cfg.validate()?;
     println!("run: {}", cfg.tag());
+    if !cfg.resume.is_empty() {
+        println!("resuming from {}", cfg.resume);
+    }
+    if cfg.checkpoint_every > 0 {
+        println!(
+            "checkpointing every {} steps to {}",
+            cfg.checkpoint_every,
+            cfg.checkpoint_file().display()
+        );
+    }
     let ctx = ExpCtx::new(cfg.scale);
     let lab = experiments::common::Lab::new(&ctx)?;
     let bundle = lab.bundle(&cfg.dataset);
@@ -70,11 +110,24 @@ fn cmd_train(args: &[String]) -> Result<()> {
     for p in &res.curve.points {
         println!("  epoch {:>6.2}  step {:>6}  acc {:.4}  loss {:.4}", p.epoch, p.step, p.accuracy, p.loss);
     }
-    if let Some(t) = &res.pool_timings {
+    for t in &res.plane_timings {
         println!("{}", t.summary());
     }
+    if res.plane_timings.len() > 1 {
+        println!(
+            "{}",
+            rho::coordinator::metrics::DispatchTimings::aggregate(&res.plane_timings).summary()
+        );
+    }
     let out = ctx.out_dir("train")?;
-    res.curve.write_csv(&out.join(format!("{}.csv", cfg.tag().replace('/', "_"))))?;
+    let csv = out.join(format!("{}.csv", cfg.tag().replace('/', "_")));
+    if cfg.resume.is_empty() {
+        res.curve.write_csv(&csv)?;
+    } else {
+        // a resumed run's curve holds only post-resume points — extend
+        // the first leg's CSV instead of clobbering it
+        res.curve.append_csv(&csv)?;
+    }
     if cfg.track_props {
         println!(
             "selected: noisy={:.3} low_relevance={:.3} already_correct={:.3}",

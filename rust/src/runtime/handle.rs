@@ -229,62 +229,7 @@ impl ModelRuntime {
         lr: f32,
         wd: f32,
     ) -> Result<f32> {
-        let n = ys.len();
-        let nb = self.train_batch;
-        if n == 0 || n > nb {
-            bail!("train batch size {n} not in 1..={nb}");
-        }
-        if xs.len() != n * self.d || w.len() != n {
-            bail!("train batch shape mismatch");
-        }
-        if state.theta.len() != self.param_count {
-            bail!("state params {} != model {}", state.theta.len(), self.param_count);
-        }
-        // Pad to the artifact batch with zero-weight repeats of row 0;
-        // rescale weights so mean(w*ce) over nb equals mean over n.
-        let scale = nb as f32 / n as f32;
-        let (px, py, pw);
-        let (xs, ys, w): (&[f32], &[i32], &[f32]) = if n == nb {
-            (xs, ys, w)
-        } else {
-            let mut vx = Vec::with_capacity(nb * self.d);
-            vx.extend_from_slice(xs);
-            let mut vy = Vec::with_capacity(nb);
-            vy.extend_from_slice(ys);
-            let mut vw: Vec<f32> = w.to_vec();
-            while vy.len() < nb {
-                vx.extend_from_slice(&xs[..self.d]);
-                vy.push(ys[0]);
-                vw.push(0.0);
-            }
-            px = vx;
-            py = vy;
-            pw = vw;
-            (&px, &py, &pw)
-        };
-        let w_scaled: Vec<f32> = w.iter().map(|&x| x * scale).collect();
-        let args = [
-            lit_f32(&state.theta, &[self.param_count])?,
-            lit_f32(&state.m, &[self.param_count])?,
-            lit_f32(&state.v, &[self.param_count])?,
-            lit_f32(&[(state.step + 1) as f32], &[1])?,
-            lit_f32(xs, &[nb, self.d])?,
-            lit_i32(ys, &[nb])?,
-            lit_f32(&w_scaled, &[nb])?,
-            lit_f32(&[lr], &[1])?,
-            lit_f32(&[wd], &[1])?,
-        ];
-        let outs = self.train_exe.call(&args)?;
-        let mut it = outs.into_iter();
-        // Swap in the freshly materialized parameters as a new Arc:
-        // outstanding scoring snapshots keep the old version alive and
-        // no caller ever pays a full-theta copy for a snapshot.
-        state.theta = std::sync::Arc::new(it.next().unwrap().to_vec::<f32>()?);
-        state.m = it.next().unwrap().to_vec::<f32>()?;
-        state.v = it.next().unwrap().to_vec::<f32>()?;
-        let loss = it.next().unwrap().to_vec::<f32>()?[0];
-        state.step += 1;
-        Ok(loss)
+        train_step_raw(&self.train_exe, self.param_count, self.train_batch, self.d, state, xs, ys, w, lr, wd)
     }
 
     /// Accuracy + mean loss over a whole dataset (chunked).
@@ -353,6 +298,82 @@ impl ModelRuntime {
         }
         Ok(())
     }
+}
+
+/// The AdamW step shared by every train-capable execution surface:
+/// [`ModelRuntime::train_step`] and the asynchronous per-plane updater
+/// ([`crate::runtime::updater::IlUpdater`]) both funnel through this
+/// one function, so an update applied on a plane's own thread is
+/// bitwise-identical to the inline path by construction.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn train_step_raw(
+    train_exe: &Executor,
+    param_count: usize,
+    train_batch: usize,
+    d: usize,
+    state: &mut TrainState,
+    xs: &[f32],
+    ys: &[i32],
+    w: &[f32],
+    lr: f32,
+    wd: f32,
+) -> Result<f32> {
+    let n = ys.len();
+    let nb = train_batch;
+    if n == 0 || n > nb {
+        bail!("train batch size {n} not in 1..={nb}");
+    }
+    if xs.len() != n * d || w.len() != n {
+        bail!("train batch shape mismatch");
+    }
+    if state.theta.len() != param_count {
+        bail!("state params {} != model {}", state.theta.len(), param_count);
+    }
+    // Pad to the artifact batch with zero-weight repeats of row 0;
+    // rescale weights so mean(w*ce) over nb equals mean over n.
+    let scale = nb as f32 / n as f32;
+    let (px, py, pw);
+    let (xs, ys, w): (&[f32], &[i32], &[f32]) = if n == nb {
+        (xs, ys, w)
+    } else {
+        let mut vx = Vec::with_capacity(nb * d);
+        vx.extend_from_slice(xs);
+        let mut vy = Vec::with_capacity(nb);
+        vy.extend_from_slice(ys);
+        let mut vw: Vec<f32> = w.to_vec();
+        while vy.len() < nb {
+            vx.extend_from_slice(&xs[..d]);
+            vy.push(ys[0]);
+            vw.push(0.0);
+        }
+        px = vx;
+        py = vy;
+        pw = vw;
+        (&px, &py, &pw)
+    };
+    let w_scaled: Vec<f32> = w.iter().map(|&x| x * scale).collect();
+    let args = [
+        lit_f32(&state.theta, &[param_count])?,
+        lit_f32(&state.m, &[param_count])?,
+        lit_f32(&state.v, &[param_count])?,
+        lit_f32(&[(state.step + 1) as f32], &[1])?,
+        lit_f32(xs, &[nb, d])?,
+        lit_i32(ys, &[nb])?,
+        lit_f32(&w_scaled, &[nb])?,
+        lit_f32(&[lr], &[1])?,
+        lit_f32(&[wd], &[1])?,
+    ];
+    let outs = train_exe.call(&args)?;
+    let mut it = outs.into_iter();
+    // Swap in the freshly materialized parameters as a new Arc:
+    // outstanding scoring snapshots keep the old version alive and
+    // no caller ever pays a full-theta copy for a snapshot.
+    state.theta = std::sync::Arc::new(it.next().unwrap().to_vec::<f32>()?);
+    state.m = it.next().unwrap().to_vec::<f32>()?;
+    state.v = it.next().unwrap().to_vec::<f32>()?;
+    let loss = it.next().unwrap().to_vec::<f32>()?[0];
+    state.step += 1;
+    Ok(loss)
 }
 
 /// Shared CPU client for single-threaded use (pool workers create

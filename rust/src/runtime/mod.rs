@@ -1,14 +1,23 @@
 //! Runtime: loads the AOT-compiled HLO artifacts (PJRT CPU via the
 //! `xla` crate) and exposes typed model operations to the coordinator.
 //! Python never runs here — `make artifacts` happened at build time.
+//!
+//! Parallel scoring is organized as [`plane`] compute planes: named,
+//! independently-sized [`pool::ScoringPool`]s (each compiled from its
+//! own arch's artifacts), with [`updater::IlUpdater`] providing
+//! asynchronous in-plane model updates for online IL.
 
 pub mod artifact;
 pub mod executor;
 pub mod handle;
 pub mod params;
+pub mod plane;
 pub mod pool;
+pub mod updater;
 
 pub use artifact::{ArtifactMeta, Manifest};
 pub use handle::{cpu_client, EvalResult, FwdStats, McdStats, ModelRuntime};
 pub use params::TrainState;
+pub use plane::{ComputePlane, PlaneKey, PlaneSet, PLANE_IL, PLANE_MCD, PLANE_TARGET};
 pub use pool::{CandBatch, PoolConfig, PoolReport, ScoringPool, WorkerStat};
+pub use updater::IlUpdater;

@@ -47,13 +47,9 @@ impl TrainState {
 
     const MAGIC: &'static [u8; 8] = b"RHOCKPT1";
 
-    /// Serialize to a little-endian binary checkpoint.
-    pub fn save(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
-        w.write_all(Self::MAGIC)?;
+    /// Write the little-endian binary body (no magic) to any sink —
+    /// the session checkpoint embeds `TrainState`s this way.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
         w.write_all(&(self.theta.len() as u64).to_le_bytes())?;
         w.write_all(&self.step.to_le_bytes())?;
         for vec in [self.theta.as_slice(), self.m.as_slice(), self.v.as_slice()] {
@@ -64,15 +60,8 @@ impl TrainState {
         Ok(())
     }
 
-    pub fn load(path: &Path) -> Result<TrainState> {
-        let mut r = std::io::BufReader::new(
-            std::fs::File::open(path).with_context(|| format!("opening checkpoint {path:?}"))?,
-        );
-        let mut magic = [0u8; 8];
-        r.read_exact(&mut magic)?;
-        if &magic != Self::MAGIC {
-            bail!("{path:?} is not a RHO checkpoint (bad magic {magic:?})");
-        }
+    /// Inverse of [`write_to`](Self::write_to).
+    pub fn read_from<R: Read>(r: &mut R) -> Result<TrainState> {
         let mut u64buf = [0u8; 8];
         r.read_exact(&mut u64buf)?;
         let n = u64::from_le_bytes(u64buf) as usize;
@@ -87,6 +76,28 @@ impl TrainState {
         let m = read_vec(n)?;
         let v = read_vec(n)?;
         Ok(TrainState { theta: Arc::new(theta), m, v, step })
+    }
+
+    /// Serialize to a little-endian binary checkpoint.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(Self::MAGIC)?;
+        self.write_to(&mut w)
+    }
+
+    pub fn load(path: &Path) -> Result<TrainState> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening checkpoint {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("{path:?} is not a RHO checkpoint (bad magic {magic:?})");
+        }
+        Self::read_from(&mut r)
     }
 }
 

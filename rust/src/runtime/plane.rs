@@ -1,0 +1,228 @@
+//! Compute planes: named, independently-sized scoring pools.
+//!
+//! The paper's headline economics (Clothing-1M, 18x fewer steps)
+//! amortize a *cheap* IL model against an expensive target model. A
+//! [`ComputePlane`] makes that asymmetry a first-class run-construction
+//! concept: each plane is one [`ScoringPool`] compiled from its *own*
+//! arch/batch artifacts with its own worker count, lane depth, and
+//! rate-EMA config. A run assembles a [`PlaneSet`] of named planes —
+//! [`PLANE_TARGET`] for target-model scoring (fused RHO, fwd stats),
+//! [`PLANE_IL`] for online-IL scoring/updates on the small IL arch,
+//! [`PLANE_MCD`] for MC-dropout — and
+//! [`selection::provider::stack`](crate::selection::provider::stack)
+//! binds every `SignalProvider` to its plane from the method's
+//! [`compute_needs`](crate::selection::Method::compute_needs)
+//! declaration, falling back to inline scoring when a plane is absent.
+//!
+//! Plane pools are expensive (each worker compiles its own
+//! executables), so they are cached across runs keyed by [`PlaneKey`]
+//! — a proper struct key with derived `Hash`/`Eq` over the arch, data
+//! dims, and pool sizing (`rate_alpha` enters through its IEEE bit
+//! pattern, the one total-equality reading of an `f64`).
+
+use std::rc::Rc;
+
+use crate::config::{PlaneSpec, RunConfig};
+use crate::runtime::artifact::ArtifactMeta;
+use crate::runtime::pool::{PoolConfig, ScoringPool};
+
+/// Plane that scores target-model signals (fwd stats / fused RHO).
+pub const PLANE_TARGET: &str = "target";
+/// Plane that scores (and asynchronously updates) the online IL model.
+pub const PLANE_IL: &str = "il";
+/// Plane that serves MC-dropout uncertainty scoring.
+pub const PLANE_MCD: &str = "mcd";
+/// Every plane name the run constructors know how to materialize.
+pub const KNOWN_PLANES: &[&str] = &[PLANE_TARGET, PLANE_IL, PLANE_MCD];
+
+/// Cache/identity key of one compiled plane pool. Two configs that
+/// hash equal share one pool (and its workers' compiled executables);
+/// anything that changes what the workers compute or how they are
+/// sized is part of the key.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlaneKey {
+    pub arch: String,
+    pub d: usize,
+    pub c: usize,
+    pub workers: usize,
+    pub lane_depth: usize,
+    /// `rate_alpha` as IEEE-754 bits — `f64` has no `Eq`/`Hash`; the
+    /// bit pattern is the total-equality reading (named here instead of
+    /// an anonymous bit-cast tuple slot, so the cast can't silently
+    /// collide with another `u64` field).
+    rate_alpha_bits: u64,
+}
+
+impl PlaneKey {
+    pub fn new(arch: &str, d: usize, c: usize, pc: &PoolConfig) -> PlaneKey {
+        PlaneKey {
+            arch: arch.to_string(),
+            d,
+            c,
+            workers: pc.workers,
+            lane_depth: pc.lane_depth,
+            rate_alpha_bits: pc.rate_alpha.to_bits(),
+        }
+    }
+
+    pub fn rate_alpha(&self) -> f64 {
+        f64::from_bits(self.rate_alpha_bits)
+    }
+}
+
+/// One named scoring plane: a pool compiled from `arch`'s artifacts,
+/// plus (optionally) that arch's train-step artifact for asynchronous
+/// in-plane model updates — the online-IL updater overlaps the IL
+/// AdamW step with the next batch's target-plane scoring.
+pub struct ComputePlane {
+    pub name: String,
+    pub arch: String,
+    pub pool: Rc<ScoringPool>,
+    /// Train-step artifact for async updates on this plane (the
+    /// online-IL updater); `None` for score-only planes.
+    pub train_meta: Option<ArtifactMeta>,
+}
+
+impl ComputePlane {
+    pub fn new(name: impl Into<String>, arch: impl Into<String>, pool: Rc<ScoringPool>) -> Self {
+        ComputePlane { name: name.into(), arch: arch.into(), pool, train_meta: None }
+    }
+
+    pub fn with_train_meta(mut self, meta: ArtifactMeta) -> Self {
+        self.train_meta = Some(meta);
+        self
+    }
+}
+
+/// The per-run registry view: the named planes one `Session` scores
+/// through. Lookup is by name; inserting a plane under an existing
+/// name replaces it (last registration wins, so callers can layer a
+/// default registry and then override one plane).
+#[derive(Clone, Copy, Default)]
+pub struct PlaneSet<'a> {
+    // Small fixed population (a handful of names) — a linear scan
+    // beats a map and keeps the set `Copy`-cheap to thread around.
+    planes: [Option<&'a ComputePlane>; 4],
+    len: usize,
+}
+
+impl<'a> PlaneSet<'a> {
+    pub fn insert(&mut self, plane: &'a ComputePlane) {
+        for slot in self.planes.iter_mut().take(self.len) {
+            if slot.map(|p| p.name == plane.name).unwrap_or(false) {
+                *slot = Some(plane);
+                return;
+            }
+        }
+        assert!(self.len < self.planes.len(), "PlaneSet supports at most 4 planes");
+        self.planes[self.len] = Some(plane);
+        self.len += 1;
+    }
+
+    pub fn get(&self, name: &str) -> Option<&'a ComputePlane> {
+        self.planes.iter().take(self.len).flatten().find(|p| p.name == name).copied()
+    }
+
+    /// The scoring pool of a named plane, when registered.
+    pub fn pool(&self, name: &str) -> Option<&'a ScoringPool> {
+        self.get(name).map(|p| p.pool.as_ref())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &'a ComputePlane> + '_ {
+        self.planes.iter().take(self.len).flatten().copied()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+}
+
+/// Pool sizing for one plane: the run-level `workers` / `lane_depth` /
+/// `rate_alpha` keys are the base (via [`PoolConfig::from_run`]), and
+/// the plane's `[planes]`-table spec overrides field by field — so
+/// `plane.il.workers=2` sizes the IL plane independently of the
+/// target plane. A spec `workers` of 0 means "auto" (one per core),
+/// mirroring the run-level key.
+pub fn plane_pool_config(cfg: &RunConfig, spec: Option<&PlaneSpec>) -> PoolConfig {
+    let mut pc = PoolConfig::from_run(cfg);
+    if let Some(s) = spec {
+        if let Some(w) = s.workers {
+            pc.workers = if w == 0 { PoolConfig::default().workers } else { w };
+        }
+        if let Some(ld) = s.lane_depth {
+            pc.lane_depth = ld.max(1);
+        }
+        if let Some(ra) = s.rate_alpha {
+            if ra > 0.0 && ra <= 1.0 {
+                pc.rate_alpha = ra;
+            }
+        }
+    }
+    pc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::hash_map::DefaultHasher;
+    use std::hash::{Hash, Hasher};
+
+    fn pc(workers: usize, lane_depth: usize, rate_alpha: f64) -> PoolConfig {
+        PoolConfig { workers, lane_depth, rate_alpha }
+    }
+
+    fn hash_of(k: &PlaneKey) -> u64 {
+        let mut h = DefaultHasher::new();
+        k.hash(&mut h);
+        h.finish()
+    }
+
+    #[test]
+    fn plane_key_equality_tracks_every_sizing_field() {
+        let base = PlaneKey::new("mlp_base", 64, 10, &pc(4, 8, 0.3));
+        assert_eq!(base, PlaneKey::new("mlp_base", 64, 10, &pc(4, 8, 0.3)));
+        assert_eq!(hash_of(&base), hash_of(&PlaneKey::new("mlp_base", 64, 10, &pc(4, 8, 0.3))));
+        assert_ne!(base, PlaneKey::new("mlp_small", 64, 10, &pc(4, 8, 0.3)));
+        assert_ne!(base, PlaneKey::new("mlp_base", 32, 10, &pc(4, 8, 0.3)));
+        assert_ne!(base, PlaneKey::new("mlp_base", 64, 10, &pc(2, 8, 0.3)));
+        assert_ne!(base, PlaneKey::new("mlp_base", 64, 10, &pc(4, 2, 0.3)));
+        assert_ne!(base, PlaneKey::new("mlp_base", 64, 10, &pc(4, 8, 0.5)));
+        assert!((base.rate_alpha() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plane_pool_config_overrides_field_by_field() {
+        let cfg = RunConfig { workers: 4, lane_depth: 8, rate_alpha: 0.3, ..Default::default() };
+        // no spec: run-level sizing
+        let base = plane_pool_config(&cfg, None);
+        assert_eq!((base.workers, base.lane_depth), (4, 8));
+        // spec overrides only what it names
+        let spec = PlaneSpec {
+            name: "il".into(),
+            arch: Some("mlp_small".into()),
+            workers: Some(2),
+            lane_depth: None,
+            rate_alpha: Some(0.7),
+        };
+        let il = plane_pool_config(&cfg, Some(&spec));
+        assert_eq!((il.workers, il.lane_depth), (2, 8));
+        assert!((il.rate_alpha - 0.7).abs() < 1e-12);
+        // workers=0 in a spec means auto-size, like the run-level key
+        let auto = PlaneSpec { name: "il".into(), workers: Some(0), ..Default::default() };
+        assert_eq!(plane_pool_config(&cfg, Some(&auto)).workers, PoolConfig::default().workers);
+        // out-of-range alpha in a spec is ignored, not propagated
+        let bad = PlaneSpec { name: "il".into(), rate_alpha: Some(2.0), ..Default::default() };
+        assert!((plane_pool_config(&cfg, Some(&bad)).rate_alpha - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_planes_cover_the_provider_bindings() {
+        assert!(KNOWN_PLANES.contains(&PLANE_TARGET));
+        assert!(KNOWN_PLANES.contains(&PLANE_IL));
+        assert!(KNOWN_PLANES.contains(&PLANE_MCD));
+    }
+}

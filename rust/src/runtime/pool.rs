@@ -37,6 +37,18 @@
 //! rate-aware scores bitwise to uniform dispatch (property-tested in
 //! `data::sharding`, artifact-tested in `tests/pool_integration.rs`).
 //!
+//! ## Pools as compute planes
+//!
+//! A pool is compiled for exactly one `(arch, d, c)` artifact combo —
+//! it says nothing about *which* model's parameters it scores. The
+//! [`crate::runtime::plane`] module names pools (`target`, `il`,
+//! `mcd`, …) and sizes each independently; a cheap IL arch then runs
+//! on its own workers next to the target plane. Everything here is
+//! naturally per-plane: each plane's pool has its own lanes, rate EMA,
+//! [`PoolReport`], and per-worker theta-literal cache (the cache keys
+//! on the parameter `Arc`, so an IL plane caches IL theta exactly like
+//! the target plane caches target theta).
+//!
 //! The `xla` handles are not `Send`, so every worker owns a private
 //! PJRT client + executables, created inside the worker thread; plain
 //! data crosses the thread boundary, never XLA handles.
@@ -333,6 +345,18 @@ impl ScoringPool {
     /// Whether this pool can serve `mcdropout` requests.
     pub fn has_mcdropout(&self) -> bool {
         self.has_mcd
+    }
+
+    /// Flattened parameter count of the arch this pool was compiled
+    /// for — planes scoring a *different* model (e.g. the `il` plane)
+    /// are validated against this before any dispatch.
+    pub fn param_count(&self) -> usize {
+        self.param_count
+    }
+
+    /// Feature dimension of the pool's artifacts.
+    pub fn d(&self) -> usize {
+        self.d
     }
 
     /// Per-worker processed-chunk counts (load-balance observability).

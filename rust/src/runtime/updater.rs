@@ -1,0 +1,174 @@
+//! Asynchronous in-plane model updates: the online-IL AdamW step runs
+//! on a dedicated thread owning its own PJRT client + train
+//! executable, so the (cheap) IL update overlaps the target model's
+//! gradient step, the eval boundary, and the next batch's scoring
+//! dispatch instead of serializing after every chunk on the consumer
+//! thread.
+//!
+//! Ordering is the whole contract: updates are applied strictly in
+//! the order they were pushed, and a [`theta`](IlUpdater::theta) /
+//! [`snapshot`](IlUpdater::snapshot) request is answered only after
+//! every previously-pushed update has been applied (the request rides
+//! the same FIFO channel). Combined with the updater funnelling
+//! through the exact `train_step_raw` the inline path uses, the IL
+//! parameter trajectory is bitwise-identical to inline updating — the
+//! parity tests in `tests/session_integration.rs` assert it
+//! curve-for-curve.
+//!
+//! Errors are latched: a failed step poisons the updater, subsequent
+//! updates are dropped, and the failure surfaces at the next sync
+//! point (never silently).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::artifact::ArtifactMeta;
+use crate::runtime::executor::Executor;
+use crate::runtime::handle::train_step_raw;
+use crate::runtime::params::TrainState;
+
+enum Msg {
+    Update { xs: Vec<f32>, ys: Vec<i32>, w: Vec<f32>, lr: f32, wd: f32 },
+    /// Reply with the post-all-prior-updates parameter Arc — the
+    /// per-step sync on the consumer's hot path, one refcount bump.
+    Theta(Sender<Result<Arc<Vec<f32>>, String>>),
+    /// Reply with the full state clone (theta + AdamW moments) — only
+    /// the checkpoint writer needs this; it deep-copies m and v.
+    Snapshot(Sender<Result<TrainState, String>>),
+}
+
+/// Handle to one plane's update thread. Dropping it (or calling
+/// [`finish`](IlUpdater::finish)) closes the channel and joins.
+pub struct IlUpdater {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<TrainState>>,
+}
+
+impl IlUpdater {
+    /// Spawn the update thread around an initial state. `train_meta`
+    /// must be the *same* train-step artifact the inline path would
+    /// use (same arch, same train batch) — that is what makes the
+    /// async trajectory bitwise-equal to the inline one.
+    pub fn spawn(train_meta: &ArtifactMeta, state: TrainState) -> Result<IlUpdater> {
+        let nb = train_meta
+            .batch()
+            .ok_or_else(|| anyhow!("train artifact `{}` has no batch size", train_meta.program))?;
+        if state.theta.len() != train_meta.param_count {
+            bail!(
+                "updater state has {} params, train artifact `{}` expects {}",
+                state.theta.len(),
+                train_meta.name,
+                train_meta.param_count
+            );
+        }
+        let (tx, rx) = channel::<Msg>();
+        let meta = train_meta.clone();
+        let handle = std::thread::spawn(move || updater_main(rx, meta, nb, state));
+        Ok(IlUpdater { tx, handle: Some(handle) })
+    }
+
+    /// Queue one AdamW step; applied in push order. Errors surface at
+    /// the next sync point, not here.
+    pub fn push(&self, xs: &[f32], ys: &[i32], w: &[f32], lr: f32, wd: f32) -> Result<()> {
+        self.tx
+            .send(Msg::Update { xs: xs.to_vec(), ys: ys.to_vec(), w: w.to_vec(), lr, wd })
+            .map_err(|_| anyhow!("IL updater thread died"))
+    }
+
+    /// Synchronize: block until every queued update has been applied,
+    /// then return the current parameter snapshot. One Arc refcount
+    /// bump crosses the channel — never the AdamW moments; this runs
+    /// on the consumer's critical path every step.
+    pub fn theta(&self) -> Result<Arc<Vec<f32>>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx.send(Msg::Theta(reply_tx)).map_err(|_| anyhow!("IL updater thread died"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("IL updater thread died"))?
+            .map_err(|e| anyhow!("IL update failed: {e}"))
+    }
+
+    /// Synchronize and clone the full state (theta + AdamW moments) —
+    /// the checkpoint writer needs all of it.
+    pub fn snapshot(&self) -> Result<TrainState> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx.send(Msg::Snapshot(reply_tx)).map_err(|_| anyhow!("IL updater thread died"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("IL updater thread died"))?
+            .map_err(|e| anyhow!("IL update failed: {e}"))
+    }
+
+    /// Drain, stop the thread, and take the final state. A latched
+    /// update error is surfaced here if no sync saw it earlier.
+    pub fn finish(mut self) -> Result<TrainState> {
+        // One last sync so a latched error is reported rather than
+        // swallowed by the join below.
+        let last = self.snapshot()?;
+        let handle = self.handle.take().expect("finish consumes the updater once");
+        drop(self); // closes tx; thread exits its recv loop
+        handle.join().map_err(|_| anyhow!("IL updater thread panicked"))?;
+        Ok(last)
+    }
+}
+
+impl Drop for IlUpdater {
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            // Closing tx happens when self's fields drop; but tx is
+            // still alive here — replace it so the thread sees EOF.
+            let (dead_tx, _) = channel::<Msg>();
+            let tx = std::mem::replace(&mut self.tx, dead_tx);
+            drop(tx);
+            let _ = h.join();
+        }
+    }
+}
+
+fn updater_main(rx: Receiver<Msg>, meta: ArtifactMeta, nb: usize, mut state: TrainState) -> TrainState {
+    // Private client + executable (xla handles are thread-local).
+    // Unlike the long-lived cached pool workers, an updater lives for
+    // one run — so the client is held (and dropped at thread exit)
+    // rather than leaked; the `(exe, client)` field order makes the
+    // executable drop before the client it references.
+    let setup: Result<(Executor, xla::PjRtClient)> = (|| {
+        let client = xla::PjRtClient::cpu()?;
+        let exe = Executor::load(&client, &meta)?;
+        Ok((exe, client))
+    })();
+    let mut latched: Option<String> = match &setup {
+        Ok(_) => None,
+        Err(e) => Some(format!("updater setup failed: {e:#}")),
+    };
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Update { xs, ys, w, lr, wd } => {
+                if latched.is_some() {
+                    continue; // poisoned: drop updates, keep draining
+                }
+                let exe = &setup.as_ref().expect("latched covers setup failure").0;
+                if let Err(e) =
+                    train_step_raw(exe, meta.param_count, nb, meta.d, &mut state, &xs, &ys, &w, lr, wd)
+                {
+                    latched = Some(format!("{e:#}"));
+                }
+            }
+            Msg::Theta(reply) => {
+                let _ = reply.send(match &latched {
+                    Some(e) => Err(e.clone()),
+                    None => Ok(Arc::clone(&state.theta)),
+                });
+            }
+            Msg::Snapshot(reply) => {
+                let _ = reply.send(match &latched {
+                    Some(e) => Err(e.clone()),
+                    None => Ok(state.clone()),
+                });
+            }
+        }
+    }
+    state
+}

@@ -5,13 +5,18 @@
 //! step and picks `n_b` of them (plus optional per-example gradient
 //! weights for importance-sampling debiasing).
 //!
-//! Each [`Method`] declares the signals its ranking rule consumes via
-//! [`Method::signal_needs`]; the [`provider`] module turns that
+//! Each [`Method`] declares what it consumes via
+//! [`Method::compute_needs`]: the signal families its ranking rule
+//! reads ([`SignalNeeds`]) *and* the named compute plane each family
+//! should score on (`target` / `il` / `mcd` — see
+//! [`crate::runtime::plane`]). The [`provider`] module turns that
 //! declaration into an ordered stack of `SignalProvider`s (fused RHO,
-//! fwd stats, MC-dropout, precomputed/online IL) that the streaming
-//! engine (`coordinator::engine`) walks each step — so every method
-//! gathers exactly the signals it ranks on, through the parallel
-//! scoring pool when one is attached.
+//! fwd stats, MC-dropout, precomputed/online IL), binding each
+//! provider to its plane's pool when the session registered one and
+//! falling back to inline scoring otherwise — so every method gathers
+//! exactly the signals it ranks on, on the hardware slice meant for
+//! them (a cheap IL arch on its own workers, the target arch on the
+//! target plane).
 
 pub mod diagnostics;
 pub mod provider;
@@ -115,6 +120,22 @@ impl Method {
         matches!(self, Method::Svp)
     }
 
+    /// The full compute-needs declaration: which signal families the
+    /// rule consumes and which named compute plane each family scores
+    /// on. `selection::provider::stack` binds every provider to its
+    /// plane from this (inline fallback when the plane is absent), so
+    /// the declaration — not the call site — decides where model
+    /// programs run.
+    pub fn compute_needs(&self) -> ComputeNeeds {
+        let signals = self.signal_needs();
+        ComputeNeeds {
+            signals,
+            score_plane: (signals.loss || signals.gnorm).then_some(crate::runtime::plane::PLANE_TARGET),
+            il_plane: signals.il.then_some(crate::runtime::plane::PLANE_IL),
+            mcd_plane: signals.mcd.then_some(crate::runtime::plane::PLANE_MCD),
+        }
+    }
+
     /// The signals this method's ranking rule actually consumes. The
     /// engine gathers exactly these (plus `correct` when property
     /// tracking is on), so e.g. SVP/uniform runs pay for no forward
@@ -146,6 +167,23 @@ pub struct SignalNeeds {
     pub gnorm: bool,
     pub il: bool,
     pub mcd: bool,
+}
+
+/// A method's compute declaration: the signal families it ranks on and
+/// the named compute plane each family should execute on. A `None`
+/// plane means the family is unused; a named plane that the session
+/// did not register falls back to the target plane (MC-dropout) or to
+/// inline scoring on the calling thread.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ComputeNeeds {
+    pub signals: SignalNeeds,
+    /// Plane for target-model scoring (fwd stats / fused RHO).
+    pub score_plane: Option<&'static str>,
+    /// Plane for IL scoring — and, for online IL, asynchronous IL
+    /// updates overlapped with target-plane work.
+    pub il_plane: Option<&'static str>,
+    /// Plane for MC-dropout uncertainty scoring.
+    pub mcd_plane: Option<&'static str>,
 }
 
 /// Per-candidate scoring signals for one step. Slices are aligned with
@@ -386,6 +424,29 @@ mod tests {
             // IL-based methods declare il
             assert_eq!(m.signal_needs().il, m.needs_il(), "{}", m.name());
         }
+    }
+
+    #[test]
+    fn compute_needs_bind_signals_to_planes() {
+        use crate::runtime::plane::{PLANE_IL, PLANE_MCD, PLANE_TARGET};
+        for m in Method::ALL {
+            let cn = m.compute_needs();
+            assert_eq!(cn.signals, m.signal_needs(), "{}", m.name());
+            // every consumed family names a plane, every unused one doesn't
+            assert_eq!(
+                cn.score_plane,
+                (cn.signals.loss || cn.signals.gnorm).then_some(PLANE_TARGET),
+                "{}",
+                m.name()
+            );
+            assert_eq!(cn.il_plane, cn.signals.il.then_some(PLANE_IL), "{}", m.name());
+            assert_eq!(cn.mcd_plane, cn.signals.mcd.then_some(PLANE_MCD), "{}", m.name());
+        }
+        // the paper's method scores loss+il: target plane + il plane
+        let rho = Method::RhoLoss.compute_needs();
+        assert_eq!((rho.score_plane, rho.il_plane, rho.mcd_plane), (Some(PLANE_TARGET), Some(PLANE_IL), None));
+        // uniform declares nothing and runs on no plane
+        assert_eq!(Method::Uniform.compute_needs(), ComputeNeeds::default());
     }
 
     #[test]

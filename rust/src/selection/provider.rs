@@ -6,10 +6,15 @@
 //! MC-dropout uncertainty, or irreducible losses (precomputed lookup
 //! or online IL-model scoring). [`stack`] assembles the minimal
 //! ordered provider list for a [`Method`] from its
-//! [`Method::signal_needs`] declaration, so the engine gathers
-//! exactly what the selection rule consumes — fanned out over the
-//! parallel [`ScoringPool`] when one is attached, inline through the
-//! [`ModelRuntime`] otherwise.
+//! [`Method::compute_needs`] declaration and binds each provider to
+//! its named compute plane out of the session's [`PlaneSet`]: target
+//! signals fan out over the `target` plane's [`ScoringPool`], online
+//! IL scores on the `il` plane (its own arch, its own workers),
+//! MC-dropout on the `mcd` plane — with per-family fallback to the
+//! target plane or to inline [`ModelRuntime`] scoring when a plane is
+//! absent. The binding lives here, not at the call sites, so a session
+//! changes *where* signals compute by registering planes, never by
+//! rewriting the loop.
 //!
 //! Providers see the candidate batch as the shared [`CandBatch`] the
 //! producer gathered (`StepCtx::batch`), not as borrowed slices: the
@@ -25,6 +30,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::runtime::handle::{McdStats, ModelRuntime};
+use crate::runtime::plane::{PlaneSet, PLANE_TARGET};
 use crate::runtime::pool::{CandBatch, ScoringPool};
 use crate::selection::{Candidates, Method};
 
@@ -124,9 +130,12 @@ impl SignalProvider for Precomputed<'_> {
 }
 
 /// Online (non-approximated) IL: score candidates with the current
-/// IL-model parameters (paper Table 4 / Fig. 7).
+/// IL-model parameters (paper Table 4 / Fig. 7). With a pool backend
+/// (the `il` compute plane) the IL forward pass runs on the plane's
+/// own workers — compiled from the *IL* arch's artifacts — instead of
+/// inline on the consumer thread.
 pub struct OnlineIl<'a> {
-    pub il_rt: &'a ModelRuntime,
+    pub backend: Backend<'a>,
 }
 
 impl SignalProvider for OnlineIl<'_> {
@@ -138,7 +147,11 @@ impl SignalProvider for OnlineIl<'_> {
         let th = ctx
             .il_theta
             .ok_or_else(|| anyhow!("online IL scoring needs the IL-model state"))?;
-        out.il = Some(Arc::new(self.il_rt.fwd(th, &ctx.batch.xs, &ctx.batch.ys)?.loss));
+        let loss = match self.backend {
+            Backend::Pool(p) => p.fwd(th, ctx.batch)?.loss,
+            Backend::Inline(rt) => rt.fwd(th, &ctx.batch.xs, &ctx.batch.ys)?.loss,
+        };
+        out.il = Some(Arc::new(loss));
         Ok(())
     }
 }
@@ -222,7 +235,9 @@ pub struct StackSpec<'a> {
     pub online_il: bool,
     pub target: &'a ModelRuntime,
     pub il_rt: Option<&'a ModelRuntime>,
-    pub pool: Option<&'a ScoringPool>,
+    /// The session's named compute planes; providers bind to the plane
+    /// their method's `compute_needs` names, with inline fallback.
+    pub planes: PlaneSet<'a>,
     /// Precomputed IL table indexed by train-set position (None when
     /// unavailable, e.g. after the SVP filter re-indexes the set).
     pub il_values: Option<&'a [f32]>,
@@ -230,24 +245,41 @@ pub struct StackSpec<'a> {
 
 /// Assemble the ordered provider stack for a method: IL first (fused
 /// RHO consumes it), then fwd stats / fused RHO / MC-dropout as the
-/// method's `signal_needs` demand.
+/// method's `compute_needs` demand — each bound to its declared
+/// compute plane when the session registered one.
 pub fn stack<'a>(spec: &StackSpec<'a>) -> Result<Vec<Box<dyn SignalProvider + 'a>>> {
-    let needs = spec.method.signal_needs();
-    let scoring = match spec.pool {
+    let needs = spec.method.compute_needs();
+    let signals = needs.signals;
+    // Target-model scoring: the declared plane (property tracking
+    // forces target fwd stats even for methods that declare none).
+    let score_plane = needs.score_plane.unwrap_or(PLANE_TARGET);
+    let scoring = match spec.planes.pool(score_plane) {
         Some(p) => Backend::Pool(p),
         None => Backend::Inline(spec.target),
     };
-    // MC-dropout goes through the pool only when the pool carries the
-    // artifact; otherwise it scores inline on the target runtime.
-    let mcd_backend = match spec.pool {
-        Some(p) if p.has_mcdropout() => Backend::Pool(p),
-        _ => Backend::Inline(spec.target),
-    };
+    // MC-dropout binds to its declared plane, falls back to the target
+    // plane, and only through a pool that carries the artifact;
+    // otherwise it scores inline on the target runtime.
+    let mcd_backend = needs
+        .mcd_plane
+        .and_then(|n| spec.planes.pool(n))
+        .filter(|p| p.has_mcdropout())
+        .or_else(|| spec.planes.pool(PLANE_TARGET).filter(|p| p.has_mcdropout()))
+        .map(Backend::Pool)
+        .unwrap_or(Backend::Inline(spec.target));
     let mut out: Vec<Box<dyn SignalProvider + 'a>> = Vec::new();
-    if needs.il {
+    if signals.il {
         if spec.online_il {
-            let il_rt = spec.il_rt.ok_or_else(|| anyhow!("online IL needs an IL runtime"))?;
-            out.push(Box::new(OnlineIl { il_rt }));
+            // Online IL scores on its own plane when registered (the
+            // plane's pool is compiled from the IL arch's artifacts);
+            // inline on the IL runtime otherwise.
+            let backend = match needs.il_plane.and_then(|n| spec.planes.pool(n)) {
+                Some(p) => Backend::Pool(p),
+                None => Backend::Inline(
+                    spec.il_rt.ok_or_else(|| anyhow!("online IL needs an IL runtime"))?,
+                ),
+            };
+            out.push(Box::new(OnlineIl { backend }));
         } else {
             let values = spec.il_values.ok_or_else(|| {
                 anyhow!("method `{}` needs precomputed IL values", spec.method.name())
@@ -259,13 +291,13 @@ pub fn stack<'a>(spec: &StackSpec<'a>) -> Result<Vec<Box<dyn SignalProvider + 'a
     // property tracking needs the full stats anyway (then `select`
     // falls back to loss - il).
     let fused = spec.method == Method::RhoLoss && !spec.track_props;
-    if spec.track_props || ((needs.loss || needs.gnorm) && !fused) {
+    if spec.track_props || ((signals.loss || signals.gnorm) && !fused) {
         out.push(Box::new(FwdStats { backend: scoring }));
     }
     if fused {
         out.push(Box::new(FusedRho { backend: scoring }));
     }
-    if needs.mcd {
+    if signals.mcd {
         out.push(Box::new(McDropout { backend: mcd_backend }));
     }
     Ok(out)

@@ -20,6 +20,22 @@ impl CsvWriter {
         Ok(CsvWriter { w, cols: header.len() })
     }
 
+    /// Open for appending: the header is written only when the file is
+    /// new (or empty), so a resumed run extends an existing curve CSV
+    /// instead of clobbering the pre-resume history.
+    pub fn append(path: &Path, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        let fresh = file.metadata()?.len() == 0;
+        let mut w = BufWriter::new(file);
+        if fresh {
+            writeln!(w, "{}", header.join(","))?;
+        }
+        Ok(CsvWriter { w, cols: header.len() })
+    }
+
     /// Write one row; panics on column-count mismatch (programmer error).
     pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
         assert_eq!(fields.len(), self.cols, "csv row arity mismatch");

@@ -220,6 +220,54 @@ fn pool_rejects_bad_shapes() {
     assert!(pool.fwd(&theta_ok, &ragged).is_err(), "bad xs/ys shape accepted");
 }
 
+#[test]
+fn pool_exposes_plane_shape_accessors() {
+    // the engine validates an `il` plane against the IL runtime
+    // through these before any dispatch
+    let Some((manifest, _client)) = setup() else { return };
+    let pool = mk_pool(&manifest, 1);
+    assert_eq!(pool.param_count(), pool_param_count(&manifest));
+    assert_eq!(pool.d(), 64);
+}
+
+#[test]
+fn online_il_provider_pool_vs_inline_parity() {
+    // Provider-level pooled-OnlineIl vs inline-OnlineIl parity: the
+    // same IL parameters scoring the same candidate batch must
+    // produce identical `il` signals whether the forward pass runs on
+    // the `il` plane's worker or inline on the calling thread.
+    use rho::runtime::plane::{ComputePlane, PLANE_IL};
+    use rho::selection::provider::{Backend, OnlineIl, SignalProvider, SignalSet, StepCtx};
+
+    let Some((manifest, client)) = setup() else { return };
+    let il_rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_small", 64, 10).unwrap();
+    let il_state = il_rt.init(21).unwrap();
+    let il_theta = il_state.theta_snapshot();
+    let plane = ComputePlane::new(PLANE_IL, "mlp_small", Rc::new(mk_pool(&manifest, 2)));
+    for n in [320usize, 777, 33] {
+        let (batch, _) = rand_batch(n, 0xBEEF ^ n as u64);
+        let theta = Arc::new(Vec::new()); // target theta unused by OnlineIl
+        let score = |backend: Backend| {
+            let mut sig = SignalSet::default();
+            let ctx =
+                StepCtx { theta: &theta, il_theta: Some(&il_theta), batch: &batch, mcd_seed: 0 };
+            OnlineIl { backend }.provide(&ctx, &mut sig).unwrap();
+            sig.il.unwrap()
+        };
+        let inline = score(Backend::Inline(&il_rt));
+        let pooled = score(Backend::Pool(&plane.pool));
+        assert_eq!(inline.len(), n);
+        for i in 0..n {
+            assert!(
+                (inline[i] - pooled[i]).abs() < 1e-6,
+                "n={n} i={i}: inline {} vs pooled {}",
+                inline[i],
+                pooled[i]
+            );
+        }
+    }
+}
+
 fn pool_param_count(manifest: &Manifest) -> usize {
     manifest.find("mlp_small", 64, 10, "init").unwrap().param_count
 }

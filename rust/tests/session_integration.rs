@@ -1,0 +1,478 @@
+//! Integration: the unified streaming engine end-to-end on small
+//! synthetic bundles through the `Session` builder — learning
+//! happens, RHO-LOSS beats uniform under noise, every method runs
+//! through the engine (inline and pooled), multi-plane runs reproduce
+//! the single-plane curves bitwise at one worker per plane, and
+//! checkpoint/resume continues the eval curve from the saved step.
+
+use std::rc::Rc;
+
+use rho::config::RunConfig;
+use rho::coordinator::Session;
+use rho::experiments::common::Lab;
+use rho::experiments::ExpCtx;
+use rho::runtime::plane::ComputePlane;
+use rho::runtime::pool::{PoolConfig, ScoringPool};
+use rho::selection::Method;
+
+fn lab() -> Option<Lab> {
+    let ctx = ExpCtx::new(0.25);
+    if !ctx.artifacts.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Lab::new(&ctx).unwrap())
+}
+
+fn base_cfg(method: Method) -> RunConfig {
+    RunConfig {
+        dataset: "qmnist".into(),
+        arch: "mlp_small".into(),
+        il_arch: "logreg".into(),
+        method,
+        epochs: 8,
+        il_epochs: 6,
+        seed: 1,
+        ..Default::default()
+    }
+}
+
+/// One-worker plane over `arch`'s fwd/select artifacts.
+fn plane_w1(lab: &Lab, name: &str, arch: &str) -> ComputePlane {
+    let fwd = lab.manifest.find(arch, 64, 10, "fwd_b320").unwrap();
+    let sel = lab.manifest.find(arch, 64, 10, "select_b320").unwrap();
+    let pool = ScoringPool::new(
+        fwd,
+        sel,
+        None,
+        &PoolConfig { workers: 1, lane_depth: 4, ..PoolConfig::default() },
+    )
+    .unwrap();
+    ComputePlane::new(name, arch, Rc::new(pool))
+}
+
+fn assert_curves_bitwise(a: &rho::coordinator::Curve, b: &rho::coordinator::Curve, what: &str) {
+    assert_eq!(a.points.len(), b.points.len(), "{what}: eval schedule drifted");
+    for (x, y) in a.points.iter().zip(&b.points) {
+        assert_eq!(x.step, y.step, "{what}");
+        assert_eq!(
+            x.accuracy.to_bits(),
+            y.accuracy.to_bits(),
+            "{what}: diverged at step {} ({} vs {})",
+            x.step,
+            x.accuracy,
+            y.accuracy
+        );
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{what}: loss at step {}", x.step);
+    }
+}
+
+#[test]
+fn uniform_training_learns() {
+    let Some(lab) = lab() else { return };
+    let cfg = base_cfg(Method::Uniform);
+    let bundle = lab.bundle(&cfg.dataset);
+    let res = lab.run_one(&cfg, &bundle).unwrap();
+    assert!(
+        res.curve.final_accuracy() > 0.5,
+        "uniform failed to learn: {}",
+        res.curve.final_accuracy()
+    );
+    assert_eq!(res.curve.points.len(), 8, "one eval per epoch expected");
+    assert!(res.steps > 0);
+}
+
+#[test]
+fn every_method_runs_one_epoch() {
+    let Some(lab) = lab() else { return };
+    for &method in Method::ALL {
+        let mut cfg = base_cfg(method);
+        cfg.epochs = 1;
+        // mcdropout methods need an arch with the artifact
+        if method.needs_mcdropout() {
+            cfg.arch = "mlp_base".into();
+        }
+        let bundle = lab.bundle(&cfg.dataset);
+        let res = lab
+            .run_one(&cfg, &bundle)
+            .unwrap_or_else(|e| panic!("method {} failed: {e:#}", method.name()));
+        assert!(res.curve.final_accuracy() > 0.05, "method {}", method.name());
+    }
+}
+
+#[test]
+fn rho_beats_uniform_under_label_noise() {
+    let Some(lab) = lab() else { return };
+    let bundle = std::rc::Rc::new(rho::data::catalog::with_uniform_noise(
+        (*lab.bundle("qmnist")).clone(),
+        0.2,
+        7,
+    ));
+    let mut uni_cfg = base_cfg(Method::Uniform);
+    uni_cfg.epochs = 10;
+    let mut rho_cfg = base_cfg(Method::RhoLoss);
+    rho_cfg.epochs = 10;
+    rho_cfg.il_arch = "mlp_small".into();
+    rho_cfg.il_epochs = 6;
+    let uni = lab.run_one(&uni_cfg, &bundle).unwrap();
+    let rho = lab.run_one(&rho_cfg, &bundle).unwrap();
+    assert!(
+        rho.curve.final_accuracy() >= uni.curve.final_accuracy() - 0.02,
+        "rho {} clearly below uniform {} on noisy data",
+        rho.curve.final_accuracy(),
+        uni.curve.final_accuracy()
+    );
+}
+
+#[test]
+fn tracker_sees_ground_truth_noise() {
+    let Some(lab) = lab() else { return };
+    let bundle = std::rc::Rc::new(rho::data::catalog::with_uniform_noise(
+        (*lab.bundle("qmnist")).clone(),
+        0.15,
+        9,
+    ));
+    let mut cfg = base_cfg(Method::TrainLoss);
+    cfg.track_props = true;
+    cfg.epochs = 4;
+    let res = lab.run_one(&cfg, &bundle).unwrap();
+    // train-loss selection must over-select corrupted points
+    assert!(
+        res.tracker.frac_noisy() > 0.15,
+        "train-loss selected only {:.3} noisy (base rate 0.15)",
+        res.tracker.frac_noisy()
+    );
+}
+
+#[test]
+fn pooled_session_matches_inline_exactly() {
+    let Some(lab) = lab() else { return };
+    let mut cfg = base_cfg(Method::RhoLoss);
+    cfg.il_arch = "mlp_small".into();
+    cfg.epochs = 3;
+    let bundle = lab.bundle(&cfg.dataset);
+    let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+    let il = lab.il_context(&cfg, &bundle).unwrap();
+
+    let inline = Session::new(&cfg, &target).run(&bundle, Some(&il)).unwrap();
+
+    let fwd = lab.manifest.find(&cfg.arch, 64, 10, "fwd_b320").unwrap();
+    let sel = lab.manifest.find(&cfg.arch, 64, 10, "select_b320").unwrap();
+    let pool = ScoringPool::new(
+        fwd,
+        sel,
+        None,
+        &PoolConfig { workers: 2, lane_depth: 4, ..PoolConfig::default() },
+    )
+    .unwrap();
+    let plane = ComputePlane::new("target", cfg.arch.clone(), Rc::new(pool));
+    let pooled =
+        Session::new(&cfg, &target).plane(&plane).prefetch(3).run(&bundle, Some(&il)).unwrap();
+
+    assert!(pooled.steps_per_sec() > 0.0);
+    assert_eq!(pooled.plane_timings.len(), 1, "one registered plane reports timings");
+    assert_eq!(pooled.plane_timings[0].plane, "target");
+    assert!(pooled.plane_timings[0].chunks > 0);
+    assert_eq!(inline.curve.points.len(), pooled.curve.points.len());
+    for (a, b) in inline.curve.points.iter().zip(&pooled.curve.points) {
+        assert_eq!(a.step, b.step);
+        assert!(
+            (a.accuracy - b.accuracy).abs() < 1e-6,
+            "pooled session diverged from inline at step {}: {} vs {}",
+            a.step,
+            a.accuracy,
+            b.accuracy
+        );
+    }
+}
+
+#[test]
+fn session_workers1_is_bit_identical_to_reference_across_methods() {
+    // Acceptance gate of the engine: for rho_loss, train_loss, AND
+    // uniform, a session with a one-worker target plane must
+    // reproduce the inline reference curve point for point.
+    let Some(lab) = lab() else { return };
+    for method in [Method::RhoLoss, Method::TrainLoss, Method::Uniform] {
+        let mut cfg = base_cfg(method);
+        cfg.il_arch = "mlp_small".into();
+        cfg.epochs = 2;
+        let bundle = lab.bundle(&cfg.dataset);
+        let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+        let il = if method.needs_il() { Some(lab.il_context(&cfg, &bundle).unwrap()) } else { None };
+        let il_ref = il.as_deref();
+
+        let reference = Session::new(&cfg, &target).run(&bundle, il_ref).unwrap();
+        let plane = plane_w1(&lab, "target", &cfg.arch);
+        let pooled =
+            Session::new(&cfg, &target).plane(&plane).prefetch(3).run(&bundle, il_ref).unwrap();
+        assert_curves_bitwise(&reference.curve, &pooled.curve, method.name());
+    }
+}
+
+#[test]
+fn two_plane_online_il_matches_single_plane_bitwise() {
+    // The multi-plane acceptance gate: a `target` + `il` two-plane
+    // run (IL scoring on its own arch's pool, IL updates on the
+    // plane's async updater thread) must produce bitwise-identical
+    // rho_loss selection scores — hence bitwise-identical curves —
+    // to the single-plane and inline paths at workers=1.
+    let Some(lab) = lab() else { return };
+    let mut cfg = base_cfg(Method::RhoLoss);
+    // genuinely multi-arch: expensive target, cheap IL model — the
+    // paper's amortization asymmetry, now expressible per plane
+    cfg.arch = "mlp_base".into();
+    cfg.il_arch = "mlp_small".into();
+    cfg.online_il = true;
+    cfg.epochs = 2;
+    let bundle = lab.bundle(&cfg.dataset);
+    let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+    let il_rt = lab.runtime(&cfg.il_arch, &cfg.dataset).unwrap();
+    let il = lab.il_context(&cfg, &bundle).unwrap();
+
+    // reference: fully inline (no planes)
+    let inline =
+        Session::new(&cfg, &target).il_runtime(&il_rt).run(&bundle, Some(&il)).unwrap();
+
+    // single plane: target pool only, IL inline
+    let target_plane = plane_w1(&lab, "target", &cfg.arch);
+    let single = Session::new(&cfg, &target)
+        .il_runtime(&il_rt)
+        .plane(&target_plane)
+        .run(&bundle, Some(&il))
+        .unwrap();
+    assert_curves_bitwise(&inline.curve, &single.curve, "single-plane vs inline");
+
+    // two planes: target + il (own arch, own worker, async updates)
+    let train_prog = format!("train_b{}", lab.manifest.train_batch);
+    let train_meta = lab.manifest.find(&cfg.il_arch, 64, 10, &train_prog).unwrap().clone();
+    let il_plane = plane_w1(&lab, "il", &cfg.il_arch).with_train_meta(train_meta);
+    let two = Session::new(&cfg, &target)
+        .il_runtime(&il_rt)
+        .plane(&target_plane)
+        .plane(&il_plane)
+        .run(&bundle, Some(&il))
+        .unwrap();
+    assert_curves_bitwise(&single.curve, &two.curve, "two-plane vs single-plane");
+    assert_eq!(two.plane_timings.len(), 2, "both planes report timings");
+    assert!(two.plane_timings.iter().any(|t| t.plane == "il" && t.chunks > 0), "il plane scored");
+    // the online-updated IL model ends at the same accuracy
+    assert_eq!(
+        inline.il_final_accuracy.unwrap().to_bits(),
+        two.il_final_accuracy.unwrap().to_bits(),
+        "async IL updater drifted from inline updates"
+    );
+}
+
+#[test]
+fn pooled_online_il_matches_inline_online_il() {
+    // Pooled-OnlineIl vs inline-OnlineIl parity: same run, the only
+    // difference being *where* the IL forward pass executes (the
+    // `il` plane's worker vs the consumer thread). Score-only plane —
+    // no train artifact — so updates stay inline in both runs.
+    let Some(lab) = lab() else { return };
+    let mut cfg = base_cfg(Method::RhoLoss);
+    cfg.il_arch = "mlp_small".into();
+    cfg.online_il = true;
+    cfg.epochs = 2;
+    let bundle = lab.bundle(&cfg.dataset);
+    let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+    let il_rt = lab.runtime(&cfg.il_arch, &cfg.dataset).unwrap();
+    let il = lab.il_context(&cfg, &bundle).unwrap();
+
+    let inline =
+        Session::new(&cfg, &target).il_runtime(&il_rt).run(&bundle, Some(&il)).unwrap();
+    let il_plane = plane_w1(&lab, "il", &cfg.il_arch);
+    let pooled = Session::new(&cfg, &target)
+        .il_runtime(&il_rt)
+        .plane(&il_plane)
+        .run(&bundle, Some(&il))
+        .unwrap();
+    assert_curves_bitwise(&inline.curve, &pooled.curve, "pooled OnlineIl vs inline OnlineIl");
+    assert_eq!(
+        inline.il_final_accuracy.unwrap().to_bits(),
+        pooled.il_final_accuracy.unwrap().to_bits()
+    );
+}
+
+#[test]
+fn lab_resolves_plane_registry_from_config() {
+    let Some(lab) = lab() else { return };
+    let mut cfg = base_cfg(Method::RhoLoss);
+    cfg.il_arch = "mlp_small".into();
+    cfg.online_il = true;
+    cfg.workers = 1;
+    cfg.apply_pairs(["plane.il.workers=1"]).unwrap();
+    let planes = lab.planes(&cfg).unwrap();
+    let names: Vec<&str> = planes.iter().map(|p| p.name.as_str()).collect();
+    assert_eq!(names, vec!["target", "il"]);
+    assert_eq!(planes[1].arch, "mlp_small", "il plane defaults to il_arch");
+    assert!(planes[1].train_meta.is_some(), "il plane carries its train artifact");
+    // identical sizing+arch ⇒ the registry shares one pool
+    let mut same = cfg.clone();
+    same.apply_pairs(["plane.il.arch=mlp_small"]).unwrap();
+    same.arch = "mlp_small".into();
+    let shared = lab.planes(&same).unwrap();
+    assert!(Rc::ptr_eq(&shared[0].pool, &shared[1].pool), "same PlaneKey shares the pool");
+    // unknown plane names are rejected
+    let mut bad = cfg.clone();
+    bad.apply_pairs(["plane.proxy.workers=2"]).unwrap();
+    match lab.planes(&bad) {
+        Ok(_) => panic!("unknown plane name accepted"),
+        Err(e) => assert!(e.to_string().contains("unknown plane"), "{e}"),
+    }
+    // a full run through the config-declared registry still works
+    let bundle = lab.bundle(&cfg.dataset);
+    cfg.epochs = 1;
+    let res = lab.run_one(&cfg, &bundle).unwrap();
+    assert_eq!(res.plane_timings.len(), 2);
+}
+
+#[test]
+fn checkpoint_resume_continues_curve() {
+    // Resume must CONTINUE the eval curve from the saved step —
+    // points keep their absolute step numbers and match an
+    // uninterrupted reference run bitwise (RNG + sampler + model
+    // state all round-trip).
+    let Some(lab) = lab() else { return };
+    let dir = std::env::temp_dir().join(format!("rho-resume-{}", std::process::id()));
+    for method in [Method::Uniform, Method::RhoLoss] {
+        let mut cfg = base_cfg(method);
+        cfg.il_arch = "mlp_small".into();
+        cfg.epochs = 4;
+        let bundle = lab.bundle(&cfg.dataset);
+        let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+        let il = if method.needs_il() { Some(lab.il_context(&cfg, &bundle).unwrap()) } else { None };
+        let il_ref = il.as_deref();
+        let spe = bundle.train.len().div_ceil(cfg.big_batch()) as u64;
+        let ckpt = dir.join(format!("{}.ckpt", method.name()));
+
+        let reference = Session::new(&cfg, &target).run(&bundle, il_ref).unwrap();
+
+        // first half: 2 epochs, checkpointed at its final step
+        let mut half = cfg.clone();
+        half.epochs = 2;
+        let first = Session::new(&half, &target)
+            .checkpoint_every(spe * 2)
+            .checkpoint_path(&ckpt)
+            .run(&bundle, il_ref)
+            .unwrap();
+        assert!(ckpt.exists(), "{}: checkpoint not written", method.name());
+        assert_eq!(first.curve.points.last().unwrap().step, spe * 2);
+
+        // second half: resume the 4-epoch run from the saved step
+        let resumed =
+            Session::new(&cfg, &target).resume_from(&ckpt).run(&bundle, il_ref).unwrap();
+        assert_eq!(resumed.steps, spe * 2, "{}: resumed run re-ran steps", method.name());
+        let first_point = resumed.curve.points.first().unwrap();
+        assert_eq!(first_point.step, spe * 3, "{}: curve restarted instead of continuing", method.name());
+        // the resumed tail must equal the uninterrupted reference tail
+        let tail: Vec<_> = reference
+            .curve
+            .points
+            .iter()
+            .filter(|p| p.step > spe * 2)
+            .copied()
+            .collect();
+        assert_eq!(tail.len(), resumed.curve.points.len(), "{}", method.name());
+        for (a, b) in tail.iter().zip(&resumed.curve.points) {
+            assert_eq!(a.step, b.step, "{}", method.name());
+            assert_eq!(
+                a.accuracy.to_bits(),
+                b.accuracy.to_bits(),
+                "{}: resume diverged at step {}",
+                method.name(),
+                a.step
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_refuses_mismatched_runs() {
+    let Some(lab) = lab() else { return };
+    let dir = std::env::temp_dir().join(format!("rho-resume-bad-{}", std::process::id()));
+    let mut cfg = base_cfg(Method::Uniform);
+    cfg.epochs = 2;
+    let bundle = lab.bundle(&cfg.dataset);
+    let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+    let spe = bundle.train.len().div_ceil(cfg.big_batch()) as u64;
+    let ckpt = dir.join("u.ckpt");
+    Session::new(&cfg, &target)
+        .checkpoint_every(spe)
+        .checkpoint_path(&ckpt)
+        .run(&bundle, None)
+        .unwrap();
+
+    // arch mismatch: error, not a silent restart
+    let mut bad = cfg.clone();
+    bad.arch = "mlp_base".into();
+    let target2 = lab.runtime(&bad.arch, &bad.dataset).unwrap();
+    let err = Session::new(&bad, &target2)
+        .resume_from(&ckpt)
+        .run(&bundle, None)
+        .err()
+        .expect("arch-mismatched resume must fail");
+    assert!(format!("{err:#}").contains("arch"), "unexpected error: {err:#}");
+
+    // method mismatch
+    let mut bad = cfg.clone();
+    bad.method = Method::TrainLoss;
+    assert!(Session::new(&bad, &target).resume_from(&ckpt).run(&bundle, None).is_err());
+
+    // cursor overrun: the checkpoint is already at this run's end
+    assert!(Session::new(&cfg, &target).resume_from(&ckpt).run(&bundle, None).is_err());
+
+    // garbage file
+    let junk = dir.join("junk.ckpt");
+    std::fs::write(&junk, b"nope").unwrap();
+    assert!(Session::new(&cfg, &target).resume_from(&junk).run(&bundle, None).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn every_method_streams_through_the_pool() {
+    // The whole point of the unified engine: all of Method::ALL run
+    // the producer/plane path, not just fused RHO.
+    let Some(lab) = lab() else { return };
+    for &method in Method::ALL {
+        let mut cfg = base_cfg(method);
+        cfg.epochs = 1;
+        cfg.workers = 2; // Lab registers a target plane
+        if method.needs_mcdropout() {
+            cfg.arch = "mlp_base".into();
+        }
+        let bundle = lab.bundle(&cfg.dataset);
+        let res = lab
+            .run_one(&cfg, &bundle)
+            .unwrap_or_else(|e| panic!("method {} failed through pool: {e:#}", method.name()));
+        assert!(res.curve.final_accuracy() > 0.05, "method {}", method.name());
+    }
+}
+
+#[test]
+fn svp_coreset_filters_and_trains() {
+    let Some(lab) = lab() else { return };
+    let mut cfg = base_cfg(Method::Svp);
+    cfg.il_arch = "mlp_small".into();
+    cfg.svp_frac = 0.5;
+    cfg.epochs = 3;
+    let bundle = lab.bundle(&cfg.dataset);
+    let res = lab.run_one(&cfg, &bundle).unwrap();
+    // core-set halves the train set -> steps per epoch halve
+    let full_steps = (bundle.train.len().div_ceil(cfg.big_batch())) as u64 * 3;
+    assert!(res.steps <= full_steps, "SVP did not filter: {} steps", res.steps);
+}
+
+#[test]
+fn online_il_reports_il_accuracy() {
+    let Some(lab) = lab() else { return };
+    let mut cfg = base_cfg(Method::RhoLoss);
+    cfg.il_arch = "mlp_small".into();
+    cfg.online_il = true;
+    cfg.epochs = 2;
+    let bundle = lab.bundle(&cfg.dataset);
+    let res = lab.run_one(&cfg, &bundle).unwrap();
+    let acc = res.il_final_accuracy.expect("online_il must report IL accuracy");
+    assert!((0.0..=1.0).contains(&acc));
+}
