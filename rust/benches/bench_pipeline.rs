@@ -1,15 +1,17 @@
 //! End-to-end engine throughput (steps/sec): the unified streaming
-//! engine across selection methods (uniform / train_loss / rho_loss)
-//! and target-plane sizes (workers ∈ {1, 4}), against each method's
-//! inline reference. This regenerates the paper's §3
+//! engine across selection methods (uniform / train_loss / rho_loss),
+//! target-plane sizes (workers ∈ {1, 4}), and data sources
+//! (`memory` vs `shards` — the mmap ShardStore data plane), against
+//! each method's inline reference. This regenerates the paper's §3
 //! parallelized-selection claim at bench scale — for every method,
 //! not just fused RHO — and is the primary L3 perf target
 //! (EXPERIMENTS.md §Perf).
 //!
 //! Besides the human-readable table, every run (over)writes its
 //! measured numbers to `BENCH_pipeline.json` (one entry per method ×
-//! workers, plus per-plane dispatch/queue-wait timings); committing
-//! the file per PR makes the perf trajectory machine-trackable.
+//! workers × source, plus per-plane dispatch/queue-wait timings and
+//! the shard-ingest bytes/sec); committing the file per PR makes the
+//! perf trajectory machine-trackable.
 //!
 //! `RHO_BENCH_SMOKE=1` switches to smoke mode (tiny dataset scale, 1
 //! epoch — a handful of steps per method, one worker) so CI can prove
@@ -84,6 +86,7 @@ fn main() {
         println!("{:<12} inline:             {sync_sps:>7.1} steps/s", method.name());
         entries.push(obj(vec![
             ("method", s(method.name())),
+            ("source", s("memory")),
             ("workers", num(0.0)), // 0 = inline reference
             ("steps_per_sec", num(sync_sps)),
         ]));
@@ -112,6 +115,7 @@ fn main() {
             );
             entries.push(obj(vec![
                 ("method", s(method.name())),
+                ("source", s("memory")),
                 ("workers", num(workers as f64)),
                 ("steps_per_sec", num(sps)),
                 ("vs_sync_pct", num((sps / sync_sps - 1.0) * 100.0)),
@@ -126,6 +130,65 @@ fn main() {
         }
     }
 
+    // --- source=shards axis: the on-disk data plane ------------------
+    // Ingest the bundle once (measuring bytes/sec), write IL sidecars
+    // straight from the amortized IL table, then stream the same runs
+    // from the mmap'd store. At workers=1 the curves are bitwise the
+    // memory curves (tests/store_integration.rs); here we record what
+    // the substrate swap costs in steps/sec.
+    let store_dir =
+        std::env::temp_dir().join(format!("rho-bench-store-{}", std::process::id()));
+    std::fs::remove_dir_all(&store_dir).ok();
+    let ingest_sw = rho::util::timer::Stopwatch::start();
+    let report = rho::data::store::ingest_bundle(&bundle, &store_dir, 1024).unwrap();
+    let ingest_secs = ingest_sw.elapsed_s();
+    let ingest_bps = if ingest_secs > 0.0 { report.total_bytes() as f64 / ingest_secs } else { 0.0 };
+    println!(
+        "ingest: {} rows, {:.1} MiB at {:.0} MiB/s -> {}",
+        report.total_rows(),
+        report.total_bytes() as f64 / (1024.0 * 1024.0),
+        ingest_bps / (1024.0 * 1024.0),
+        store_dir.display()
+    );
+    {
+        // sidecars from the already-computed IL table (score-il's output
+        // bytes, without re-measuring IL training here)
+        let mut rho_cfg = base.clone();
+        rho_cfg.method = Method::RhoLoss;
+        let il = lab.il_context(&rho_cfg, &bundle).unwrap();
+        let store = rho::data::store::ShardStore::open(&store_dir).unwrap();
+        let mut off = 0usize;
+        for shard in store.train.shards() {
+            rho::data::store::write_sidecar(&shard.path, &il.values[off..off + shard.rows])
+                .unwrap();
+            off += shard.rows;
+        }
+    }
+    let shard_workers: Vec<usize> = if smoke { vec![0] } else { vec![0, 4] };
+    for method in [Method::Uniform, Method::RhoLoss] {
+        for &workers in &shard_workers {
+            let mut cfg = base.clone();
+            cfg.method = method;
+            cfg.workers = workers;
+            cfg.source = format!("shards://{}", store_dir.display());
+            let res = lab.run_auto(&cfg).unwrap();
+            let sps = res.steps_per_sec();
+            let vs = sync_by_method.get(&method).copied().unwrap_or(0.0);
+            println!(
+                "{:<12} shards workers={workers}:  {sps:>7.1} steps/s ({:+.0}% vs memory inline)",
+                method.name(),
+                if vs > 0.0 { (sps / vs - 1.0) * 100.0 } else { 0.0 }
+            );
+            entries.push(obj(vec![
+                ("method", s(method.name())),
+                ("source", s("shards")),
+                ("workers", num(workers as f64)),
+                ("steps_per_sec", num(sps)),
+            ]));
+        }
+    }
+    std::fs::remove_dir_all(&store_dir).ok();
+
     // Selection-overhead ratio (paper §3: the selection fwd pass costs
     // n_B/(3 n_b) of a train step in theory), from the inline runs.
     let uni_sps = sync_by_method[&Method::Uniform];
@@ -136,13 +199,16 @@ fn main() {
         1.0 + 320.0 / (3.0 * 32.0)
     );
 
-    // Machine-readable perf record (steps/sec per method × workers).
+    // Machine-readable perf record (steps/sec per method × workers ×
+    // source, plus the shard-ingest throughput).
     write_doc(obj(vec![
         ("bench", s("pipeline")),
         ("smoke", Value::Bool(smoke)),
         ("scale", num(ctx.scale)),
         ("epochs", num(base.epochs as f64)),
         ("uniform_over_rho_sync", num(uni_sps / rho_sps)),
+        ("ingest_bytes_per_sec", num(ingest_bps)),
+        ("ingest_rows", num(report.total_rows() as f64)),
         ("entries", Value::Array(entries)),
     ]));
 }

@@ -9,6 +9,17 @@
 //! independently (see `runtime::plane`). Checkpoint/resume is
 //! configured by `checkpoint_every` / `checkpoint_path` / `resume`
 //! (or the `--checkpoint-every` / `--resume` CLI flags).
+//!
+//! A `[data]` section configures the data plane: `source`
+//! (`shards://<dir>` streams an ingested shard store; empty = build
+//! the in-memory catalog dataset), `shard_rows` (two-level sampling
+//! block size for *in-memory* sources — declare the same value a
+//! store was ingested with to make a memory run bitwise-comparable to
+//! its sharded twin; 0 = one global block), and `window` (row-shuffle
+//! window of the stream sampler; 0 = full epoch). The flat spellings
+//! `data.source` / `data.shard_rows` / `data.window` (and bare
+//! `source` / `shard_rows` / `window`) work from the CLI, as does
+//! `rho train --data shards://<dir>`.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -78,6 +89,15 @@ pub struct RunConfig {
     /// checkpoint whose shapes/identity don't match the run errors out
     /// — never a silent restart.
     pub resume: String,
+    /// Train-data source: "" builds the in-memory catalog dataset;
+    /// `shards://<dir>` streams an ingested shard store.
+    pub source: String,
+    /// Two-level sampling block size for in-memory sources (0 = one
+    /// global block). Sharded sources always use their real layout.
+    pub shard_rows: usize,
+    /// Stream-sampler row-shuffle window (0 = full epoch). Bounds how
+    /// many shards must be resident at once.
+    pub window: usize,
     /// Named compute-plane sizing overrides (the `[planes]` table /
     /// `plane.<name>.<field>` keys).
     pub planes: Vec<PlaneSpec>,
@@ -126,6 +146,9 @@ impl Default for RunConfig {
             checkpoint_every: 0,
             checkpoint_path: String::new(),
             resume: String::new(),
+            source: String::new(),
+            shard_rows: 0,
+            window: 0,
             planes: Vec::new(),
         }
     }
@@ -171,6 +194,11 @@ impl RunConfig {
             "checkpoint_every" => self.checkpoint_every = v.parse()?,
             "checkpoint_path" => self.checkpoint_path = v.into(),
             "resume" => self.resume = v.into(),
+            // `data=` is the CLI spelling used everywhere a source is
+            // named (`rho score-il data=shards://…`, `--data` on train)
+            "source" | "data" | "data.source" => self.source = v.into(),
+            "shard_rows" | "data.shard_rows" => self.shard_rows = v.parse()?,
+            "window" | "data.window" => self.window = v.parse()?,
             k if k.starts_with("plane.") => self.set_plane(k, v)?,
             other => bail!("unknown config key `{other}`"),
         }
@@ -249,8 +277,9 @@ impl RunConfig {
                 prefix = match section.trim() {
                     "run" => "",
                     "planes" => "plane.",
+                    "data" => "data.",
                     other => bail!(
-                        "{path:?}:{}: unknown section `[{other}]` (known: [run] [planes])",
+                        "{path:?}:{}: unknown section `[{other}]` (known: [run] [planes] [data])",
                         lineno + 1
                     ),
                 };
@@ -281,6 +310,9 @@ impl RunConfig {
         }
         if !(self.rate_alpha > 0.0 && self.rate_alpha <= 1.0) {
             bail!("rate_alpha must be in (0, 1], got {}", self.rate_alpha);
+        }
+        if !self.source.is_empty() && crate::data::store::parse_source(&self.source).is_none() {
+            bail!("source must be `shards://<dir>` or empty, got `{}`", self.source);
         }
         for spec in &self.planes {
             if let Some(ra) = spec.rate_alpha {
@@ -429,6 +461,47 @@ mod tests {
         assert!(c.set("plane..workers", "3").is_err());
         c.set("plane.il.rate_alpha", "1.5").unwrap();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn data_keys_round_trip() {
+        let mut c = RunConfig::default();
+        assert!(c.source.is_empty());
+        assert_eq!((c.shard_rows, c.window), (0, 0));
+        c.apply_pairs(["source=shards://stores/c10", "shard_rows=4096", "window=8192"]).unwrap();
+        assert_eq!(c.source, "shards://stores/c10");
+        // `data=` is the spelling score-il and the docs use
+        c.apply_pairs(["data=shards://stores/other"]).unwrap();
+        assert_eq!(c.source, "shards://stores/other");
+        c.source = "shards://stores/c10".into();
+        assert_eq!((c.shard_rows, c.window), (4096, 8192));
+        c.validate().unwrap();
+        // flat data.* spellings hit the same fields
+        c.apply_pairs(["data.shard_rows=64", "data.window=0", "data.source="]).unwrap();
+        assert_eq!((c.shard_rows, c.window), (64, 0));
+        assert!(c.source.is_empty());
+        // a non-URI source is rejected at validation
+        c.source = "stores/c10".into();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("shards://"), "{err}");
+    }
+
+    #[test]
+    fn data_section_in_config_file() {
+        let dir = std::env::temp_dir().join(format!("rho-cfg-data-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.cfg");
+        std::fs::write(
+            &path,
+            "method = uniform\n[data]\nsource = shards://stores/web\nwindow = 2048\n[run]\nepochs = 2\n",
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        c.apply_file(&path).unwrap();
+        assert_eq!(c.source, "shards://stores/web");
+        assert_eq!(c.window, 2048);
+        assert_eq!(c.epochs, 2);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

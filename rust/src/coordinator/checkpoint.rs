@@ -4,16 +4,25 @@
 //! selection RNG cursor, and the run identity used to refuse
 //! mismatched resumes.
 //!
-//! Resume semantics: the engine restores the RNG, fast-forwards the
-//! (deterministic) epoch sampler to the saved step, and continues the
-//! loop at `step + 1`, so the eval curve *continues* — points keep
-//! their absolute step numbers — instead of silently restarting.
-//! Identity or shape drift (different dataset/arch/method, parameter
-//! count, train-set size) is an error by design: a checkpoint never
-//! quietly initializes a fresh run.
+//! Resume semantics: the engine restores the selection RNG and the
+//! serialized *sampler cursor* — the stream sampler's (epoch,
+//! position, epoch-start RNG state) triple — and continues the loop at
+//! `step + 1`, so the eval curve *continues* — points keep their
+//! absolute step numbers — instead of silently restarting. The cursor
+//! makes resume O(one epoch's index generation) instead of a
+//! full-history replay, which is what a sharded multi-day run needs;
+//! it is position-exact even mid-shard and mid-window. Identity or
+//! shape drift (different dataset/arch/method, parameter count,
+//! train-set size) is an error by design: a checkpoint never quietly
+//! initializes a fresh run — and a format-version bump (v1 → v2 added
+//! the cursor) is a hard error too, never a lossy best-effort read.
 //!
-//! Writes are atomic (temp file + rename) so a crash mid-checkpoint
-//! leaves the previous checkpoint intact.
+//! Writes are atomic (temp file + rename over `path`, which is never
+//! touched any other way, so a crash mid-checkpoint leaves the
+//! previous checkpoint intact at `path`) — and two-generation: the
+//! checkpoint being replaced is first *copied* to `<path>.prev`, so an
+//! older known-good resume point survives each overwrite (useful both
+//! for paranoia and for resuming from the previous periodic cursor).
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -21,9 +30,12 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::config::RunConfig;
+use crate::data::loader::SamplerCursor;
 use crate::runtime::params::TrainState;
 
-const MAGIC: &[u8; 8] = b"RHOSESS1";
+const MAGIC: &[u8; 8] = b"RHOSESS2";
+/// The pre-sampler-cursor format, refused with a version message.
+const MAGIC_V1: &[u8; 8] = b"RHOSESS1";
 
 /// One saved session cursor + model state(s).
 #[derive(Clone, Debug, PartialEq)]
@@ -41,13 +53,35 @@ pub struct SessionCheckpoint {
     pub last_acc: f32,
     /// Selection-RNG cursor.
     pub rng: (u64, u64),
+    /// Stream-sampler cursor (epoch, position, epoch-start RNG state)
+    /// at `step` — restores the index stream without replaying the run.
+    pub sampler: SamplerCursor,
+    /// Effective sampler window the run used (config `window`).
+    pub window: u64,
+    /// Data-identity hash: the
+    /// [`ShardLayout::fingerprint`](crate::data::loader::ShardLayout)
+    /// of the run's block layout, XORed (for shard sources) with a
+    /// digest of the per-shard payload checksums. Both fields are
+    /// validated by the engine on resume: a changed window /
+    /// `shard_rows` / store *content* / memory↔shards swap would
+    /// silently produce a different run, so each is a hard error.
+    pub layout_hash: u64,
     pub target: TrainState,
     /// Online-IL model state, when the run updates one.
     pub il: Option<TrainState>,
 }
 
 impl SessionCheckpoint {
-    /// Atomic write: serialize to `<path>.tmp`, then rename over.
+    /// Where the previous checkpoint generation is demoted to.
+    pub fn prev_path(path: &Path) -> std::path::PathBuf {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(".prev");
+        std::path::PathBuf::from(os)
+    }
+
+    /// Atomic two-generation write: serialize to a temp file, demote
+    /// any existing checkpoint to [`prev_path`](Self::prev_path), then
+    /// rename over.
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
@@ -66,6 +100,12 @@ impl SessionCheckpoint {
             w.write_all(&self.last_acc.to_le_bytes())?;
             w.write_all(&self.rng.0.to_le_bytes())?;
             w.write_all(&self.rng.1.to_le_bytes())?;
+            w.write_all(&self.sampler.epoch.to_le_bytes())?;
+            w.write_all(&self.sampler.pos.to_le_bytes())?;
+            w.write_all(&self.sampler.rng.0.to_le_bytes())?;
+            w.write_all(&self.sampler.rng.1.to_le_bytes())?;
+            w.write_all(&self.window.to_le_bytes())?;
+            w.write_all(&self.layout_hash.to_le_bytes())?;
             self.target.write_to(&mut w)?;
             match &self.il {
                 Some(st) => {
@@ -75,6 +115,15 @@ impl SessionCheckpoint {
                 None => w.write_all(&[0u8])?,
             }
             w.flush()?;
+        }
+        if path.exists() {
+            // Demote by COPY, not rename: `path` must hold a valid
+            // checkpoint at every instant (the only mutation of `path`
+            // is the atomic rename below). A crash mid-copy can only
+            // truncate `.prev`, which is the best-effort fallback
+            // generation, never the primary.
+            std::fs::copy(path, Self::prev_path(path))
+                .with_context(|| format!("demoting previous checkpoint {path:?}"))?;
         }
         std::fs::rename(&tmp, path)
             .with_context(|| format!("installing checkpoint {path:?}"))?;
@@ -88,6 +137,12 @@ impl SessionCheckpoint {
         );
         let mut magic = [0u8; 8];
         r.read_exact(&mut magic)?;
+        if &magic == MAGIC_V1 {
+            bail!(
+                "{path:?} is a v1 session checkpoint; this build reads v2 (v2 added the \
+                 sampler cursor) — re-run from scratch or checkpoint with the matching build"
+            );
+        }
         if &magic != MAGIC {
             bail!("{path:?} is not a RHO session checkpoint (bad magic {magic:?})");
         }
@@ -101,6 +156,13 @@ impl SessionCheckpoint {
         r.read_exact(&mut f32buf)?;
         let last_acc = f32::from_le_bytes(f32buf);
         let rng = (read_u64(&mut r)?, read_u64(&mut r)?);
+        let sampler = SamplerCursor {
+            epoch: read_u64(&mut r)?,
+            pos: read_u64(&mut r)?,
+            rng: (read_u64(&mut r)?, read_u64(&mut r)?),
+        };
+        let window = read_u64(&mut r)?;
+        let layout_hash = read_u64(&mut r)?;
         let target = TrainState::read_from(&mut r)?;
         let mut flag = [0u8; 1];
         r.read_exact(&mut flag)?;
@@ -118,6 +180,9 @@ impl SessionCheckpoint {
             step,
             last_acc,
             rng,
+            sampler,
+            window,
+            layout_hash,
             target,
             il,
         })
@@ -226,6 +291,9 @@ mod tests {
             step: 40,
             last_acc: 0.625,
             rng: (0xDEAD_BEEF, 43),
+            sampler: SamplerCursor { epoch: 3, pos: 777, rng: (0x1234, 0x5678) },
+            window: 960,
+            layout_hash: 0xFEED_F00D,
             target,
             il: Some(il),
         }
@@ -242,9 +310,14 @@ mod tests {
         let mut c = sample();
         c.save(&path).unwrap();
         assert_eq!(SessionCheckpoint::load(&path).unwrap(), c);
+        let first = c.clone();
         c.il = None;
+        c.step = 41;
         c.save(&path).unwrap();
         assert_eq!(SessionCheckpoint::load(&path).unwrap(), c);
+        // two-generation: the replaced checkpoint survives at .prev
+        let prev = SessionCheckpoint::prev_path(&path);
+        assert_eq!(SessionCheckpoint::load(&prev).unwrap(), first);
         // atomic write leaves no temp droppings
         assert!(!path.with_extension("ckpt.tmp").exists());
         std::fs::remove_dir_all(&dir).ok();
@@ -260,6 +333,20 @@ mod tests {
         // a bare TrainState checkpoint has the wrong magic
         TrainState::new(vec![1.0]).save(&path).unwrap();
         assert!(SessionCheckpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v1_checkpoints_are_refused_with_a_version_error() {
+        let dir = tmp("v1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("old.ckpt");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V1);
+        bytes.extend_from_slice(&[0u8; 64]); // truncated body; magic decides
+        std::fs::write(&path, bytes).unwrap();
+        let err = SessionCheckpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("v1") && err.contains("sampler cursor"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

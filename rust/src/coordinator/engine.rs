@@ -1,6 +1,18 @@
 //! The unified streaming selection engine: ONE pipelined training
 //! loop for every selection `Method`, scored across named compute
-//! planes.
+//! planes, over any [`DataSource`] — a dense in-memory [`Dataset`] or
+//! an on-disk [`ShardSet`](crate::data::store::ShardSet).
+//!
+//! Data plane: the producer samples through the two-level
+//! [`StreamSampler`] (shard-order shuffle + bounded-window row
+//! shuffle; a dense source degenerates to the classic global shuffle)
+//! and gathers rows through the `DataSource` trait — for a mapped
+//! shard store that gather reads straight out of the page cache with
+//! no deserialization. When the source wants it, a third scoped
+//! thread prefetches the sampler's *next window* off-thread
+//! (`madvise(WILLNEED)` per upcoming shard), so shard faults overlap
+//! scoring instead of stalling the gather. The `run_summary` event
+//! reports the source kind and resident bytes up front.
 //!
 //! Shape (paper §3 "simple parallelized selection", generalized): a
 //! producer thread samples candidate batches without replacement,
@@ -33,9 +45,12 @@
 //!
 //! Checkpoint/resume: with `checkpoint_every > 0` the engine
 //! atomically writes a [`SessionCheckpoint`] — target (+ online-IL)
-//! `TrainState`, selection-RNG cursor, run identity — every N steps
-//! and at the final step. A resumed run restores the RNG,
-//! fast-forwards the deterministic sampler, and continues the loop at
+//! `TrainState`, selection-RNG cursor, **sampler cursor**, run
+//! identity — every N steps and at the final step. A resumed run
+//! restores the RNG and re-enters the index stream at the serialized
+//! [`SamplerCursor`](crate::data::loader::SamplerCursor) (exact even
+//! mid-shard and mid-window, O(one epoch) instead of a
+//! full-history replay) and continues the loop at
 //! `step + 1`, so eval points keep their absolute step numbers;
 //! identity or shape mismatches are hard errors, never silent
 //! restarts. (Selection-property tracking restarts at the resume
@@ -67,7 +82,8 @@ use crate::coordinator::events::EventLog;
 use crate::coordinator::metrics::{Curve, DispatchTimings, EvalPoint};
 use crate::coordinator::session::{IlContext, RunResult};
 use crate::coordinator::tracker::SelectionTracker;
-use crate::data::loader::EpochSampler;
+use crate::data::loader::{ShardLayout, StreamSampler};
+use crate::data::store::{materialize_subset, DataSource};
 use crate::data::{Bundle, Dataset};
 use crate::runtime::handle::ModelRuntime;
 use crate::runtime::params::TrainState;
@@ -121,6 +137,21 @@ pub struct Engine<'a> {
     pub resume: Option<PathBuf>,
 }
 
+/// The data a run trains and evaluates on: any [`DataSource`] for the
+/// streamed train rows, plus a dense test set for the eval buffer.
+/// Build one from a [`Bundle`] (`RunData::from(&bundle)`) or assemble
+/// it around a [`ShardSet`](crate::data::store::ShardSet).
+pub struct RunData<'a> {
+    pub train: &'a dyn DataSource,
+    pub test: &'a Dataset,
+}
+
+impl<'a> From<&'a Bundle> for RunData<'a> {
+    fn from(b: &'a Bundle) -> RunData<'a> {
+        RunData { train: &b.train, test: &b.test }
+    }
+}
+
 impl<'a> Engine<'a> {
     pub fn new(cfg: &'a RunConfig, target: &'a ModelRuntime) -> Self {
         Engine {
@@ -139,6 +170,13 @@ impl<'a> Engine<'a> {
     /// `bundle.test`. `il` carries the precomputed IL values for
     /// IL-based methods (and the proxy state for SVP).
     pub fn run(&self, bundle: &Bundle, il: Option<&IlContext>) -> Result<RunResult> {
+        self.run_data(&RunData::from(bundle), il)
+    }
+
+    /// Run over an explicit [`RunData`] — the entry point that accepts
+    /// a sharded train source (`Session::run_data` is the usual front
+    /// door).
+    pub fn run_data(&self, data: &RunData, il: Option<&IlContext>) -> Result<RunResult> {
         let cfg = self.cfg;
         cfg.validate()?;
         let method = cfg.method;
@@ -180,26 +218,56 @@ impl<'a> Engine<'a> {
             );
         }
 
+        // The train source must match the target arch's input shape —
+        // a shard store ingested for a different dataset dies here
+        // with a named mismatch instead of an opaque literal error.
+        if data.train.dim() != self.target.d || data.train.classes() != self.target.c {
+            bail!(
+                "train source ({} features, {} classes, kind `{}`) does not match the target \
+                 runtime `{}` (d {}, c {})",
+                data.train.dim(),
+                data.train.classes(),
+                data.train.source_kind(),
+                self.target.arch,
+                self.target.d,
+                self.target.c
+            );
+        }
+
         // --- SVP offline core-set filter (proxy = IL model) ---------
         let filtered;
         let mut il_values: Option<&[f32]> = il.map(|c| c.values.as_slice());
-        let train: &Dataset = if method.is_offline_filter() {
+        let train: &dyn DataSource = if method.is_offline_filter() {
             let proxy_state = il
                 .and_then(|c| c.state.as_ref())
                 .ok_or_else(|| anyhow!("SVP needs a trained proxy (IlContext.state)"))?;
             let il_rt = self.il_rt.ok_or_else(|| anyhow!("SVP needs il_rt"))?;
-            filtered = svp_coreset(il_rt, &proxy_state.theta, &bundle.train, cfg.svp_frac)?;
+            filtered = svp_coreset(il_rt, &proxy_state.theta, data.train, cfg.svp_frac)?;
             // IL values are indexed by the original train set; after
             // filtering they no longer align. SVP doesn't use them.
             il_values = None;
             &filtered
         } else {
-            &bundle.train
+            data.train
         };
         let n = train.len();
         if n == 0 {
             bail!("empty train set");
         }
+        // Two-level sampling layout: a sharded source streams its real
+        // shard layout; a dense source declares the layout the config
+        // asks for (`shard_rows`, 0 = one global block) — which is
+        // exactly what makes a memory run bitwise-comparable to its
+        // sharded twin.
+        let layout = train.layout().unwrap_or_else(|| ShardLayout::chunked(n, cfg.shard_rows));
+        // Resume identity of the data: block layout, plus (for shard
+        // sources) the per-shard content checksums — a re-ingested
+        // store with identical shape but different bytes must refuse
+        // to resume, and so must a memory<->shards swap.
+        let data_hash = match train.content_fingerprint() {
+            Some(content) => layout.fingerprint() ^ content,
+            None => layout.fingerprint(),
+        };
 
         let big = cfg.big_batch();
         let steps_per_epoch = n.div_ceil(big) as u64;
@@ -212,6 +280,25 @@ impl<'a> Engine<'a> {
                 let ckpt = SessionCheckpoint::load(path)?;
                 ckpt.validate_for(cfg, self.target.param_count, n, total_steps)
                     .with_context(|| format!("refusing to resume from {path:?}"))?;
+                // The index stream is a pure function of (layout,
+                // window, cursor); a changed window / shard_rows /
+                // store would silently diverge, so it is a hard error
+                // like every other identity mismatch.
+                if ckpt.window != cfg.window as u64 {
+                    bail!(
+                        "refusing to resume from {path:?}: checkpoint used sampler window {}, \
+                         run sets {} — the index stream would diverge",
+                        ckpt.window,
+                        cfg.window
+                    );
+                }
+                if ckpt.layout_hash != data_hash {
+                    bail!(
+                        "refusing to resume from {path:?}: the data layout or content changed \
+                         (different shard_rows, a re-ingested or different store, or a \
+                         memory<->shards swap) — the run would silently diverge"
+                    );
+                }
                 Some(ckpt)
             }
             None => None,
@@ -283,6 +370,13 @@ impl<'a> Engine<'a> {
             (false, false) => EventLog::create(std::path::Path::new(&cfg.events))?,
         };
         events.run_start(&cfg.tag(), n, total_steps);
+        events.run_summary(
+            train.source_kind(),
+            train.nbytes(),
+            n,
+            train.dim(),
+            train.classes(),
+        );
         if let (Some(c), Some(path)) = (&resumed, &self.resume) {
             events.resume(c.step, &path.to_string_lossy());
         }
@@ -335,33 +429,66 @@ impl<'a> Engine<'a> {
         // scores with live parameters, so nothing to pre-gather there.
         let producer_il: Option<&[f32]> =
             if method.needs_il() && !online_il { il_values } else { None };
+        // Two-level sampler, restored to the serialized cursor on
+        // resume (validated here, before any thread spawns).
+        let mut sampler = StreamSampler::new(layout, cfg.window, seed ^ 0xBA7C);
+        if let Some(c) = &resumed {
+            sampler
+                .restore(c.sampler)
+                .with_context(|| "restoring the sampler cursor from the checkpoint")?;
+        }
         let (tx, rx) = sync_channel::<Arc<CandBatch>>(self.prefetch_depth.max(1));
         // Eval double buffer: the test-set rows materialize on their
         // own thread while the first train steps run, then serve every
         // eval boundary without re-gathering.
         let (etx, erx) = sync_channel::<(Vec<f32>, Vec<i32>)>(1);
-        let test_set = &bundle.test;
+        // Window prefetcher: sharded sources get their *next* shuffle
+        // window's shards advised off-thread, overlapping page-ins
+        // with scoring. A lagging hint is dropped (`try_send`), never
+        // a stall.
+        let (ptx, prx) = sync_channel::<Vec<u32>>(2);
+        let test_set = data.test;
         std::thread::scope(|scope| -> Result<()> {
+            // Hints only pay off when the window is a strict subset of
+            // the epoch (bounded locality); a full-epoch window means
+            // uniform access over the whole store, where per-step O(n)
+            // hint copies would be pure hot-path overhead.
+            let wants_prefetch = train.wants_prefetch() && sampler.window() < sampler.len();
+            let hint_stride = (sampler.window() / 2).max(big);
             let producer = scope.spawn(move || {
-                let mut sampler = EpochSampler::new(n, seed ^ 0xBA7C);
-                // Deterministic fast-forward to the resume cursor:
-                // replay the index stream only (shuffles, no gathers,
-                // no scoring) — cheap even for long runs.
-                let mut skip = Vec::new();
-                for _ in 0..start_step {
-                    sampler.next_batch(big, &mut skip);
-                }
+                let mut next_hint_pos = 0u64;
                 for step in (start_step + 1)..=total_steps {
                     let (idx, rolled) = sampler.take_batch(big);
+                    let cursor = sampler.cursor();
+                    if wants_prefetch && (rolled || cursor.pos >= next_hint_pos) {
+                        // re-hint every half window (bounded copy of at
+                        // most `window` indices, dropped if the
+                        // prefetcher lags)
+                        let up = sampler.upcoming();
+                        if !up.is_empty() {
+                            let _ = ptx.try_send(up.to_vec());
+                        }
+                        next_hint_pos = cursor.pos + hint_stride as u64;
+                    }
                     let (xs, ys) = train.gather(&idx);
                     let il = producer_il.map(|table| {
                         Arc::new(idx.iter().map(|&i| table[i as usize]).collect::<Vec<f32>>())
                     });
-                    if tx.send(Arc::new(CandBatch { step, rolled, idx, xs, ys, il })).is_err() {
+                    let batch = CandBatch { step, rolled, idx, xs, ys, il, cursor };
+                    if tx.send(Arc::new(batch)).is_err() {
                         return; // consumer gone
                     }
                 }
             });
+            if wants_prefetch {
+                scope.spawn(move || {
+                    while let Ok(up) = prx.recv() {
+                        train.prefetch(&up);
+                    }
+                });
+            } else {
+                drop(prx);
+            }
             scope.spawn(move || {
                 let idx: Vec<u32> = (0..test_set.len() as u32).collect();
                 let _ = etx.send(test_set.gather(&idx)); // consumer may be gone
@@ -506,6 +633,9 @@ impl<'a> Engine<'a> {
                                 step: b.step,
                                 last_acc,
                                 rng: rng.state(),
+                                sampler: b.cursor,
+                                window: cfg.window as u64,
+                                layout_hash: data_hash,
                                 target: state.clone(),
                                 il: il_snap,
                             }
@@ -535,12 +665,12 @@ impl<'a> Engine<'a> {
         let il_final_accuracy = match il_driver {
             IlDriver::Inline(st) => {
                 let il_rt = self.il_rt.ok_or_else(|| anyhow!("online_il needs il_rt"))?;
-                Some(il_rt.eval_on(&st.theta, &bundle.test)?.accuracy)
+                Some(il_rt.eval_on(&st.theta, data.test)?.accuracy)
             }
             IlDriver::Async(u) => {
                 let st = u.finish()?;
                 let il_rt = self.il_rt.ok_or_else(|| anyhow!("online_il needs il_rt"))?;
-                Some(il_rt.eval_on(&st.theta, &bundle.test)?.accuracy)
+                Some(il_rt.eval_on(&st.theta, data.test)?.accuracy)
             }
             IlDriver::None => None,
         };
@@ -557,11 +687,13 @@ impl<'a> Engine<'a> {
 }
 
 /// SVP core-set: keep the `frac` highest-proxy-entropy points
-/// (Coleman et al. '20, max-entropy variant).
+/// (Coleman et al. '20, max-entropy variant). Works over any source;
+/// the kept core-set is materialized dense (it is `frac` of the
+/// corpus and gets random-accessed every step).
 fn svp_coreset(
     il_rt: &ModelRuntime,
     proxy_theta: &[f32],
-    train: &Dataset,
+    train: &dyn DataSource,
     frac: f32,
 ) -> Result<Dataset> {
     let idx: Vec<u32> = (0..train.len() as u32).collect();
@@ -570,5 +702,5 @@ fn svp_coreset(
     let keep = ((train.len() as f32 * frac).round() as usize).clamp(1, train.len());
     let top = top_k_indices(&stats.entropy, keep);
     let keep_idx: Vec<u32> = top.into_iter().map(|i| i as u32).collect();
-    Ok(train.subset(&keep_idx))
+    Ok(materialize_subset(train, &keep_idx))
 }

@@ -76,6 +76,23 @@ impl EventLog {
         );
     }
 
+    /// Data-substrate summary for the run: where the train rows live
+    /// (`memory` vs `shards`), how many process-resident bytes the
+    /// source owns, and its logical shape — the numbers that make
+    /// memory-vs-shards tradeoffs visible in the event stream.
+    pub fn run_summary(&mut self, source: &str, resident_bytes: u64, n: usize, d: usize, classes: usize) {
+        self.emit(
+            "run_summary",
+            vec![
+                ("source", s(source)),
+                ("resident_bytes", num(resident_bytes as f64)),
+                ("n", num(n as f64)),
+                ("d", num(d as f64)),
+                ("classes", num(classes as f64)),
+            ],
+        );
+    }
+
     pub fn step(&mut self, step: u64, train_loss: f32, picked: &[u32], mean_score: f32) {
         self.emit(
             "step",
@@ -250,6 +267,22 @@ mod tests {
         assert_eq!(rs.get("kind").unwrap().as_str(), Some("resume"));
         assert_eq!(rs.get("path").unwrap().as_str(), Some("checkpoints/run.ckpt"));
         std::fs::remove_dir_all(tmp("d")).ok();
+    }
+
+    #[test]
+    fn run_summary_reports_source_and_bytes() {
+        let path = tmp("rs").join("run.jsonl");
+        let mut log = EventLog::create(&path).unwrap();
+        log.run_summary("shards", 4096, 1000, 64, 10);
+        log.run_end(0.0, 0.0);
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("run_summary"));
+        assert_eq!(v.get("source").unwrap().as_str(), Some("shards"));
+        assert_eq!(v.get("resident_bytes").unwrap().as_f64(), Some(4096.0));
+        assert_eq!(v.get("n").unwrap().as_f64(), Some(1000.0));
+        std::fs::remove_dir_all(tmp("rs")).ok();
     }
 
     #[test]

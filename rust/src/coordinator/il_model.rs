@@ -111,3 +111,60 @@ pub fn no_holdout_il(
     }
     Ok(il)
 }
+
+/// Outcome of scoring a shard store's train split.
+#[derive(Clone, Debug)]
+pub struct SidecarReport {
+    pub shards: usize,
+    pub rows: usize,
+    pub mean_il: f32,
+    pub best_val_loss: f32,
+    pub val_accuracy: f32,
+}
+
+/// `rho score-il`: train the IL model on a store's holdout split, then
+/// run the IL plane over every train shard ONCE, writing one `.il`
+/// sidecar per shard (atomic each) plus the IL model state at the
+/// store root. Every later `rho train` on this store reuses the
+/// sidecars — the paper's "computed once and reused across runs"
+/// amortization — with zero IL forward passes at training time.
+///
+/// Per-row IL values are batch-independent (the MLP forward pass is
+/// row-wise), so per-shard scoring writes the same bits a whole-set
+/// [`compute_il`] pass would.
+pub fn score_store_il(
+    store: &crate::data::store::ShardStore,
+    il_rt: &ModelRuntime,
+    cfg: &IlTrainConfig,
+) -> Result<SidecarReport> {
+    use crate::data::store::write_sidecar;
+    for split in ["holdout", "val"] {
+        if !store.has_split(split) {
+            anyhow::bail!(
+                "store {:?} has no {split}/ split — score-il trains the IL model on holdout \
+                 data (ingest from a catalog bundle)",
+                store.root
+            );
+        }
+    }
+    let holdout = store.materialize("holdout")?;
+    let val = store.materialize("val")?;
+    let model = train_il(il_rt, &holdout, &val, cfg)?;
+    let mut rows = 0usize;
+    let mut sum = 0.0f64;
+    for shard in store.train.shards() {
+        let ys: Vec<i32> = shard.ys().iter().map(|&y| y as i32).collect();
+        let loss = il_rt.fwd(&model.state.theta, shard.xs(), &ys)?.loss;
+        sum += loss.iter().map(|&l| l as f64).sum::<f64>();
+        rows += loss.len();
+        write_sidecar(&shard.path, &loss)?;
+    }
+    model.state.save(&store.il_state_path())?;
+    Ok(SidecarReport {
+        shards: store.train.shards().len(),
+        rows,
+        mean_il: if rows > 0 { (sum / rows as f64) as f32 } else { 0.0 },
+        best_val_loss: model.best_val_loss,
+        val_accuracy: model.val_accuracy,
+    })
+}

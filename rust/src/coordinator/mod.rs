@@ -27,7 +27,7 @@ pub mod session;
 pub mod tracker;
 
 pub use checkpoint::SessionCheckpoint;
-pub use engine::{CandBatch, Engine};
+pub use engine::{CandBatch, Engine, RunData};
 pub use events::EventLog;
 pub use il_model::{compute_il, no_holdout_il, train_il, IlModel, IlTrainConfig};
 pub use metrics::{fmt_epochs, mean_curve, Curve, EvalPoint};

@@ -35,7 +35,7 @@ use std::path::PathBuf;
 use anyhow::Result;
 
 use crate::config::RunConfig;
-use crate::coordinator::engine::Engine;
+use crate::coordinator::engine::{Engine, RunData};
 use crate::coordinator::metrics::{Curve, DispatchTimings};
 use crate::coordinator::tracker::SelectionTracker;
 use crate::data::Bundle;
@@ -162,6 +162,12 @@ impl<'a> Session<'a> {
     /// IL-based methods (and the proxy/initial state for SVP and
     /// online IL).
     pub fn run(&self, bundle: &Bundle, il: Option<&IlContext>) -> Result<RunResult> {
+        self.run_data(&RunData::from(bundle), il)
+    }
+
+    /// Run over an explicit [`RunData`] — the entry point for sharded
+    /// train sources (`RunData { train: &shard_set, test: &test_ds }`).
+    pub fn run_data(&self, data: &RunData, il: Option<&IlContext>) -> Result<RunResult> {
         Engine {
             cfg: self.cfg,
             target: self.target,
@@ -172,6 +178,6 @@ impl<'a> Session<'a> {
             checkpoint_path: self.checkpoint_path.clone(),
             resume: self.resume.clone(),
         }
-        .run(bundle, il)
+        .run_data(data, il)
     }
 }

@@ -6,7 +6,7 @@
 //! low-relevance, or duplicates (`PointMeta`), so these fractions are
 //! exact rather than estimated.
 
-use crate::data::Dataset;
+use crate::data::store::DataSource;
 
 /// Running counts for one epoch.
 #[derive(Clone, Copy, Debug, Default)]
@@ -34,17 +34,19 @@ impl SelectionTracker {
         Self::default()
     }
 
-    /// Record one step's selected points. `correct` is the per-point
-    /// already-classified-correctly indicator at selection time (None
-    /// when the fused RHO path skipped the fwd stats).
+    /// Record one step's selected points (from any [`DataSource`] —
+    /// in-memory or sharded stores both know their ground truth).
+    /// `correct` is the per-point already-classified-correctly
+    /// indicator at selection time (None when the fused RHO path
+    /// skipped the fwd stats).
     pub fn record(
         &mut self,
-        ds: &Dataset,
+        ds: &dyn DataSource,
         picked_dataset_idx: &[u32],
         correct: Option<&[f32]>,
     ) {
         for (j, &i) in picked_dataset_idx.iter().enumerate() {
-            let m = ds.meta[i as usize];
+            let m = ds.point_meta(i);
             self.current.selected += 1;
             self.current.noisy += usize::from(m.noisy);
             self.current.low_relevance += usize::from(m.low_relevance);
@@ -105,7 +107,7 @@ impl SelectionTracker {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::PointMeta;
+    use crate::data::{Dataset, PointMeta};
 
     fn ds() -> Dataset {
         let mut d = Dataset::empty(1, 2);

@@ -3,8 +3,103 @@
 //! This is the "online batch selection" data feed (paper §2): each
 //! step draws a large batch `B_t` of `n_B` indices without replacement;
 //! replacement happens when the next epoch starts (random shuffling).
+//!
+//! Two samplers share those semantics:
+//!
+//! - [`EpochSampler`] — the original dense sampler: one global
+//!   Fisher-Yates permutation per epoch. Right when the whole dataset
+//!   sits in memory.
+//! - [`StreamSampler`] — the two-level sampler the engine uses for
+//!   *sharded* sources (and, degenerately, for in-memory ones): per
+//!   epoch it shuffles the **shard order**, then shuffles rows within
+//!   a bounded **window** of the resulting stream. A row is never
+//!   displaced more than `window` positions from its shard-stream
+//!   slot, so a reader only ever needs the shards overlapping the
+//!   current window resident — that bounded locality is what makes
+//!   larger-than-memory stores streamable. With a single shard and a
+//!   full-dataset window it draws the *bit-identical* first-epoch
+//!   permutation `EpochSampler` draws (same RNG stream), and every
+//!   epoch is generated fresh from the epoch-start RNG state, so a
+//!   [`SamplerCursor`] (epoch, position, epoch-start state) is a
+//!   complete, O(n)-restorable checkpoint of the stream — that cursor
+//!   is what `SessionCheckpoint` serializes.
+
+use anyhow::{bail, Result};
 
 use crate::util::rng::Pcg32;
+
+/// Row-count layout of a (possibly sharded) data source: how many rows
+/// each storage block holds, in storage order. The sampler only needs
+/// the layout — not the data — so an in-memory dataset can sample with
+/// the *same* stream semantics as a shard directory by declaring the
+/// same layout (the memory-vs-shards bitwise-parity contract).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardLayout {
+    blocks: Vec<u32>,
+}
+
+impl ShardLayout {
+    /// One block covering the whole set (dense in-memory layout).
+    pub fn single(n: usize) -> ShardLayout {
+        ShardLayout { blocks: vec![n as u32] }
+    }
+
+    /// Chunk `n` rows into `shard_rows`-sized blocks (ragged tail kept);
+    /// `shard_rows == 0` means a single block.
+    pub fn chunked(n: usize, shard_rows: usize) -> ShardLayout {
+        if shard_rows == 0 || shard_rows >= n {
+            return ShardLayout::single(n);
+        }
+        let mut blocks = Vec::with_capacity(n.div_ceil(shard_rows));
+        let mut left = n;
+        while left > 0 {
+            let take = left.min(shard_rows);
+            blocks.push(take as u32);
+            left -= take;
+        }
+        ShardLayout { blocks }
+    }
+
+    /// Layout from explicit per-block row counts (a shard directory).
+    pub fn from_blocks(blocks: Vec<u32>) -> ShardLayout {
+        assert!(!blocks.is_empty(), "layout needs at least one block");
+        ShardLayout { blocks }
+    }
+
+    pub fn total(&self) -> usize {
+        self.blocks.iter().map(|&b| b as usize).sum()
+    }
+
+    pub fn blocks(&self) -> &[u32] {
+        &self.blocks
+    }
+
+    /// Stable fingerprint of the block structure (XXH64 over the LE
+    /// block sizes). Serialized into session checkpoints so resuming
+    /// under a different layout (changed `shard_rows`, different
+    /// store, memory↔shards swap with equal `n`) is a hard error —
+    /// the index stream would silently diverge otherwise.
+    pub fn fingerprint(&self) -> u64 {
+        let mut bytes = Vec::with_capacity(self.blocks.len() * 4);
+        for &b in &self.blocks {
+            bytes.extend_from_slice(&b.to_le_bytes());
+        }
+        crate::util::hash::xxh64(&bytes, 0x5AD0_11AE)
+    }
+}
+
+/// Resumable position of a [`StreamSampler`]: the epoch index, the
+/// row position within the epoch, and the PCG32 state captured at the
+/// *start* of the epoch's order generation. Restoring replays only the
+/// current epoch's (gather-free) order generation — O(n) swaps — then
+/// seeks to `pos`; the RNG lands exactly where the saved run left it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SamplerCursor {
+    pub epoch: u64,
+    pub pos: u64,
+    /// `Pcg32::state()` at the start of the current epoch.
+    pub rng: (u64, u64),
+}
 
 /// Streams candidate-batch index slices over a dataset, reshuffling at
 /// every epoch boundary.
@@ -62,6 +157,150 @@ impl EpochSampler {
         let mut idx = Vec::with_capacity(n.min(self.order.len()));
         let rolled = self.next_batch(n, &mut idx);
         (idx, rolled)
+    }
+}
+
+/// Two-level streaming sampler over a [`ShardLayout`] (see module
+/// docs): per epoch, shuffle shard order, then shuffle rows within
+/// bounded windows of the shard stream. Deterministic under `Pcg32`
+/// and checkpointable via [`SamplerCursor`].
+pub struct StreamSampler {
+    layout: ShardLayout,
+    /// Effective shuffle-window size in rows (>= 1, <= n).
+    window: usize,
+    order: Vec<u32>,
+    pos: usize,
+    pub epoch: usize,
+    rng: Pcg32,
+    /// RNG state at the start of the current epoch (cursor anchor).
+    epoch_rng: (u64, u64),
+}
+
+impl StreamSampler {
+    /// `window == 0` means a full-epoch window (global shuffle). The
+    /// RNG stream id matches [`EpochSampler`]'s, so the degenerate
+    /// single-block + full-window configuration reproduces its first
+    /// epoch bit for bit.
+    pub fn new(layout: ShardLayout, window: usize, seed: u64) -> StreamSampler {
+        let n = layout.total();
+        assert!(n > 0, "empty layout");
+        let window = if window == 0 { n } else { window.min(n) };
+        let mut s = StreamSampler {
+            layout,
+            window,
+            order: Vec::with_capacity(n),
+            pos: 0,
+            epoch: 0,
+            rng: Pcg32::new(seed, 21),
+            epoch_rng: (0, 0),
+        };
+        s.gen_epoch_order();
+        s
+    }
+
+    /// Regenerate `order` for the current epoch from the current RNG
+    /// state: shard-order shuffle, then windowed row shuffle. Always
+    /// starts from the identity shard stream, so the epoch is a pure
+    /// function of `(layout, window, epoch-start RNG state)` — the
+    /// property cursor restore relies on.
+    fn gen_epoch_order(&mut self) {
+        self.epoch_rng = self.rng.state();
+        let mut block_ids: Vec<u32> = (0..self.layout.blocks.len() as u32).collect();
+        self.rng.shuffle(&mut block_ids);
+        // block start offsets in storage order
+        let mut starts = Vec::with_capacity(self.layout.blocks.len());
+        let mut acc = 0u32;
+        for &b in &self.layout.blocks {
+            starts.push(acc);
+            acc += b;
+        }
+        self.order.clear();
+        for &b in &block_ids {
+            let (start, len) = (starts[b as usize], self.layout.blocks[b as usize]);
+            self.order.extend(start..start + len);
+        }
+        for chunk in self.order.chunks_mut(self.window) {
+            self.rng.shuffle(chunk);
+        }
+        self.pos = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    pub fn batches_per_epoch(&self, nb: usize) -> usize {
+        self.order.len().div_ceil(nb)
+    }
+
+    /// Next candidate batch of up to `n` indices; `true` when this
+    /// call crossed an epoch boundary (same contract as
+    /// [`EpochSampler::next_batch`]).
+    pub fn next_batch(&mut self, n: usize, out: &mut Vec<u32>) -> bool {
+        out.clear();
+        let mut rolled = false;
+        if self.pos >= self.order.len() {
+            self.epoch += 1;
+            self.gen_epoch_order();
+            rolled = true;
+        }
+        let take = n.min(self.order.len() - self.pos);
+        out.extend_from_slice(&self.order[self.pos..self.pos + take]);
+        self.pos += take;
+        rolled
+    }
+
+    /// Owned-buffer variant for the engine's producer (see
+    /// [`EpochSampler::take_batch`]).
+    pub fn take_batch(&mut self, n: usize) -> (Vec<u32>, bool) {
+        let mut idx = Vec::with_capacity(n.min(self.order.len()));
+        let rolled = self.next_batch(n, &mut idx);
+        (idx, rolled)
+    }
+
+    /// Effective shuffle-window size in rows (`n` when constructed
+    /// with `window == 0`). A full-epoch window means accesses are
+    /// uniform over the whole set — prefetch hints carry no locality
+    /// then, which is why the engine only hints in windowed mode.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// The not-yet-served tail of the current shuffle window — the rows
+    /// a prefetcher should have resident next. (Bounded: at most
+    /// `window` rows.)
+    pub fn upcoming(&self) -> &[u32] {
+        let hi = (self.pos + self.window).min(self.order.len());
+        &self.order[self.pos..hi]
+    }
+
+    /// Checkpointable stream position (see [`SamplerCursor`]).
+    pub fn cursor(&self) -> SamplerCursor {
+        SamplerCursor { epoch: self.epoch as u64, pos: self.pos as u64, rng: self.epoch_rng }
+    }
+
+    /// Restore a cursor saved by [`cursor`](Self::cursor) on a sampler
+    /// built over the *same* layout, window, and seed: re-seeds the RNG
+    /// to the cursor's epoch-start state, regenerates that epoch's
+    /// order, and seeks to the saved position. The continuation is
+    /// bitwise-identical to the uninterrupted stream.
+    pub fn restore(&mut self, cur: SamplerCursor) -> Result<()> {
+        if cur.pos as usize > self.order.len() {
+            bail!(
+                "sampler cursor position {} exceeds epoch length {} (layout mismatch?)",
+                cur.pos,
+                self.order.len()
+            );
+        }
+        self.rng = Pcg32::from_state(cur.rng);
+        self.epoch = cur.epoch as usize;
+        self.gen_epoch_order();
+        self.pos = cur.pos as usize;
+        Ok(())
     }
 }
 
@@ -146,6 +385,164 @@ mod tests {
             a.next_batch(7, &mut ba);
             b.next_batch(7, &mut bb);
             assert_eq!(ba, bb);
+        }
+    }
+
+    // ---- StreamSampler -------------------------------------------------
+
+    #[test]
+    fn chunked_layout_shapes() {
+        assert_eq!(ShardLayout::single(10).blocks(), &[10]);
+        assert_eq!(ShardLayout::chunked(10, 0).blocks(), &[10]);
+        assert_eq!(ShardLayout::chunked(10, 4).blocks(), &[4, 4, 2]);
+        assert_eq!(ShardLayout::chunked(8, 4).blocks(), &[4, 4]);
+        assert_eq!(ShardLayout::chunked(3, 4).blocks(), &[3]);
+        assert_eq!(ShardLayout::chunked(10, 4).total(), 10);
+    }
+
+    #[test]
+    fn degenerate_stream_matches_epoch_sampler_first_epoch() {
+        // Single block + full window must reproduce EpochSampler's
+        // first-epoch permutation bit for bit (same RNG stream) — this
+        // is what keeps default in-memory runs on the engine's new
+        // sampler identical to the old one within an epoch.
+        let (n, seed) = (137usize, 0xBA7Cu64);
+        let mut dense = EpochSampler::new(n, seed);
+        let mut stream = StreamSampler::new(ShardLayout::single(n), 0, seed);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for _ in 0..dense.batches_per_epoch(13) {
+            let ra = dense.next_batch(13, &mut a);
+            let rb = stream.next_batch(13, &mut b);
+            assert_eq!(a, b, "index stream diverged");
+            assert_eq!(ra, rb);
+        }
+    }
+
+    #[test]
+    fn stream_covers_every_point_each_epoch_prop() {
+        prop::check("stream-epoch-coverage", 25, |rng| {
+            let n = 10 + rng.below(400);
+            let shard_rows = 1 + rng.below(n);
+            let window = 1 + rng.below(2 * n);
+            let nb = 1 + rng.below(48);
+            let mut s =
+                StreamSampler::new(ShardLayout::chunked(n, shard_rows), window, rng.next_u64());
+            let mut buf = Vec::new();
+            // two full epochs: every point exactly once per epoch
+            for epoch in 0..2 {
+                let mut seen = HashSet::new();
+                for batch in 0..s.batches_per_epoch(nb) {
+                    let rolled = s.next_batch(nb, &mut buf);
+                    if rolled != (epoch > 0 && batch == 0) {
+                        return Err(format!("unexpected roll at epoch {epoch} batch {batch}"));
+                    }
+                    for &i in &buf {
+                        if i as usize >= n || !seen.insert(i) {
+                            return Err(format!("bad/duplicate index {i} in epoch {epoch}"));
+                        }
+                    }
+                }
+                if seen.len() != n {
+                    return Err(format!("epoch {epoch} served {} of {n}", seen.len()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn window_bounds_row_displacement() {
+        // A row may move at most `window` positions from its slot in
+        // the shuffled shard stream — the bounded-locality guarantee a
+        // prefetching reader relies on.
+        prop::check("stream-window-bound", 20, |rng| {
+            let n = 50 + rng.below(300);
+            let shard_rows = 1 + rng.below(n);
+            let window = 1 + rng.below(n);
+            let seed = rng.next_u64();
+            let layout = ShardLayout::chunked(n, shard_rows);
+            let mut s = StreamSampler::new(layout.clone(), window, seed);
+            // reconstruct the pre-window-shuffle stream with the same RNG
+            let mut check_rng = Pcg32::new(seed, 21);
+            let mut block_ids: Vec<u32> = (0..layout.blocks().len() as u32).collect();
+            check_rng.shuffle(&mut block_ids);
+            let mut starts = vec![0u32];
+            for &b in layout.blocks() {
+                starts.push(starts.last().unwrap() + b);
+            }
+            let mut stream_pos = vec![0usize; n];
+            let mut p = 0usize;
+            for &b in &block_ids {
+                for r in starts[b as usize]..starts[b as usize] + layout.blocks()[b as usize] {
+                    stream_pos[r as usize] = p;
+                    p += 1;
+                }
+            }
+            let mut buf = Vec::new();
+            let mut final_pos = vec![0usize; n];
+            let mut at = 0usize;
+            for _ in 0..s.batches_per_epoch(32) {
+                s.next_batch(32, &mut buf);
+                for &i in &buf {
+                    final_pos[i as usize] = at;
+                    at += 1;
+                }
+            }
+            for i in 0..n {
+                let d = final_pos[i].abs_diff(stream_pos[i]);
+                if d >= window {
+                    return Err(format!(
+                        "row {i} displaced {d} >= window {window} (n {n}, shard_rows {shard_rows})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cursor_restore_continues_bitwise() {
+        prop::check("stream-cursor-restore", 20, |rng| {
+            let n = 20 + rng.below(300);
+            let shard_rows = 1 + rng.below(n);
+            let window = 1 + rng.below(n);
+            let nb = 1 + rng.below(40);
+            let seed = rng.next_u64();
+            let layout = ShardLayout::chunked(n, shard_rows);
+            let mut a = StreamSampler::new(layout.clone(), window, seed);
+            // run anywhere into the second epoch (exercises mid-shard,
+            // mid-window, and post-roll cursors)
+            let steps = 1 + rng.below(2 * n.div_ceil(nb));
+            let mut buf = Vec::new();
+            for _ in 0..steps {
+                a.next_batch(nb, &mut buf);
+            }
+            let cur = a.cursor();
+            let mut b = StreamSampler::new(layout, window, seed);
+            b.restore(cur).map_err(|e| e.to_string())?;
+            if b.cursor() != cur {
+                return Err("cursor did not round-trip".into());
+            }
+            let (mut ba, mut bb) = (Vec::new(), Vec::new());
+            for _ in 0..(3 * n.div_ceil(nb)) {
+                let ra = a.next_batch(nb, &mut ba);
+                let rb = b.next_batch(nb, &mut bb);
+                if ba != bb || ra != rb {
+                    return Err("restored stream diverged".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn upcoming_is_bounded_by_window() {
+        let mut s = StreamSampler::new(ShardLayout::chunked(100, 16), 24, 5);
+        assert_eq!(s.upcoming().len(), 24);
+        let mut buf = Vec::new();
+        for _ in 0..s.batches_per_epoch(32) {
+            s.next_batch(32, &mut buf);
+            assert!(s.upcoming().len() <= 24);
         }
     }
 }

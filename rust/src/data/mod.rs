@@ -6,6 +6,7 @@ pub mod catalog;
 pub mod loader;
 pub mod noise;
 pub mod sharding;
+pub mod store;
 pub mod synth;
 
 /// Ground-truth provenance flags for one training point. The paper has
@@ -44,6 +45,14 @@ impl Dataset {
 
     pub fn is_empty(&self) -> bool {
         self.ys.is_empty()
+    }
+
+    /// Resident bytes of the dense buffers (features + labels + meta)
+    /// — the memory-vs-shards number the `run_summary` event reports.
+    pub fn nbytes(&self) -> u64 {
+        (self.xs.len() * std::mem::size_of::<f32>()
+            + self.ys.len() * std::mem::size_of::<u32>()
+            + self.meta.len() * std::mem::size_of::<PointMeta>()) as u64
     }
 
     /// Feature row of point `i`.
@@ -184,5 +193,12 @@ mod tests {
         let ds = tiny();
         assert_eq!(ds.class_counts(), vec![1, 1, 1]);
         assert!((ds.frac_noisy() - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nbytes_counts_all_columns() {
+        let ds = tiny(); // 3 rows, d=2
+        assert_eq!(ds.nbytes(), (6 * 4 + 3 * 4 + 3 * std::mem::size_of::<PointMeta>()) as u64);
+        assert_eq!(Dataset::empty(8, 2).nbytes(), 0);
     }
 }

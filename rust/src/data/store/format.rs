@@ -1,0 +1,283 @@
+//! The versioned binary shard format (and its IL-sidecar sibling).
+//!
+//! One shard file (`shard-NNNNN.rsd`) is a fixed 64-byte header
+//! followed by a columnar payload:
+//!
+//! ```text
+//! offset  size          field
+//! 0       8             magic  "RHOSHARD"
+//! 8       4             format version (u32 LE, currently 1)
+//! 12      4             d        — feature dim (u32 LE)
+//! 16      4             classes  (u32 LE)
+//! 20      8             rows     (u64 LE, > 0)
+//! 28      8             XXH64 of the payload (seed 0, u64 LE)
+//! 36      28            reserved (zero)
+//! 64      rows*d*4      xs   — row-major f32 LE features
+//! ...     rows*4        ys   — u32 LE labels
+//! ...     rows*1        meta — packed PointMeta flag bytes
+//! ```
+//!
+//! The header is 64 bytes so every column is at least 4-byte aligned
+//! from any page-aligned mapping base — that alignment is what lets
+//! [`ShardReader`](super::reader::ShardReader) hand out `&[f32]` /
+//! `&[u32]` slices straight over the mapped region (zero copy). The
+//! checksum covers the whole payload; readers refuse a shard whose
+//! hash, magic, version, or byte length disagrees with the header —
+//! corruption and format drift are hard errors, never silent skips.
+//!
+//! An IL sidecar (`shard-NNNNN.il`) carries one precomputed
+//! irreducible-loss f32 per row of its shard, in row order, behind the
+//! same magic/version/rows/checksum discipline (32-byte header).
+
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+use crate::data::PointMeta;
+use crate::util::hash::xxh64;
+
+pub const SHARD_MAGIC: &[u8; 8] = b"RHOSHARD";
+pub const SHARD_VERSION: u32 = 1;
+pub const HEADER_LEN: usize = 64;
+
+pub const SIDECAR_MAGIC: &[u8; 8] = b"RHOILSCR";
+pub const SIDECAR_VERSION: u32 = 1;
+pub const SIDECAR_HEADER_LEN: usize = 32;
+
+/// File name of shard `i` within a split directory.
+pub fn shard_file_name(i: usize) -> String {
+    format!("shard-{i:05}.rsd")
+}
+
+/// The IL-sidecar path that belongs to a shard file.
+pub fn sidecar_path(shard: &Path) -> PathBuf {
+    shard.with_extension("il")
+}
+
+/// Pack ground-truth provenance flags into the on-disk meta byte.
+pub fn pack_meta(m: PointMeta) -> u8 {
+    u8::from(m.noisy)
+        | (u8::from(m.low_relevance) << 1)
+        | (u8::from(m.duplicate) << 2)
+        | (u8::from(m.ambiguous) << 3)
+}
+
+pub fn unpack_meta(b: u8) -> PointMeta {
+    PointMeta {
+        noisy: b & 1 != 0,
+        low_relevance: b & 2 != 0,
+        duplicate: b & 4 != 0,
+        ambiguous: b & 8 != 0,
+    }
+}
+
+/// Decoded shard header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardHeader {
+    pub d: u32,
+    pub classes: u32,
+    pub rows: u64,
+    pub checksum: u64,
+}
+
+impl ShardHeader {
+    /// Payload byte length implied by the header. `None` when the
+    /// header's `rows`/`d` would overflow — header fields are not
+    /// covered by the payload checksum, so a corrupt/crafted header
+    /// must fail here with a named error, not wrap in release builds
+    /// and alias a plausible length.
+    pub fn payload_len(&self) -> Option<u64> {
+        let rows = self.rows;
+        let xs = rows.checked_mul(self.d as u64)?.checked_mul(4)?;
+        xs.checked_add(rows.checked_mul(4)?)?.checked_add(rows)
+    }
+
+    /// Total file length implied by the header (`None` on overflow).
+    pub fn file_len(&self) -> Option<u64> {
+        self.payload_len()?.checked_add(HEADER_LEN as u64)
+    }
+
+    pub fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut h = [0u8; HEADER_LEN];
+        h[0..8].copy_from_slice(SHARD_MAGIC);
+        h[8..12].copy_from_slice(&SHARD_VERSION.to_le_bytes());
+        h[12..16].copy_from_slice(&self.d.to_le_bytes());
+        h[16..20].copy_from_slice(&self.classes.to_le_bytes());
+        h[20..28].copy_from_slice(&self.rows.to_le_bytes());
+        h[28..36].copy_from_slice(&self.checksum.to_le_bytes());
+        h
+    }
+
+    /// Decode and structurally validate a header. `what` names the file
+    /// in errors.
+    pub fn decode(bytes: &[u8], what: &Path) -> Result<ShardHeader> {
+        if bytes.len() < HEADER_LEN {
+            bail!("{what:?}: {} bytes is too short for a shard header", bytes.len());
+        }
+        if &bytes[0..8] != SHARD_MAGIC {
+            bail!("{what:?} is not a RHO shard (bad magic {:?})", &bytes[0..8]);
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+        if version != SHARD_VERSION {
+            bail!(
+                "{what:?}: shard format version {version}, this build reads version {SHARD_VERSION} \
+                 — re-ingest the store (format versions are never silently coerced)"
+            );
+        }
+        let d = u32::from_le_bytes(bytes[12..16].try_into().expect("4 bytes"));
+        let classes = u32::from_le_bytes(bytes[16..20].try_into().expect("4 bytes"));
+        let rows = u64::from_le_bytes(bytes[20..28].try_into().expect("8 bytes"));
+        let checksum = u64::from_le_bytes(bytes[28..36].try_into().expect("8 bytes"));
+        if d == 0 || classes == 0 || rows == 0 {
+            bail!("{what:?}: degenerate shard header (d {d}, classes {classes}, rows {rows})");
+        }
+        Ok(ShardHeader { d, classes, rows, checksum })
+    }
+}
+
+/// Build one complete shard file image (header + payload) in memory.
+/// The writer buffers at most one shard, so `rows` is bounded by its
+/// `shard_rows`.
+pub fn encode_shard(d: usize, classes: usize, xs: &[f32], ys: &[u32], meta: &[u8]) -> Vec<u8> {
+    let rows = ys.len();
+    assert_eq!(xs.len(), rows * d, "xs length");
+    assert_eq!(meta.len(), rows, "meta length");
+    assert!(rows > 0, "empty shard");
+    let mut payload = Vec::with_capacity(rows * d * 4 + rows * 4 + rows);
+    for &x in xs {
+        payload.extend_from_slice(&x.to_le_bytes());
+    }
+    for &y in ys {
+        payload.extend_from_slice(&y.to_le_bytes());
+    }
+    payload.extend_from_slice(meta);
+    let header = ShardHeader {
+        d: d as u32,
+        classes: classes as u32,
+        rows: rows as u64,
+        checksum: xxh64(&payload, 0),
+    };
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&header.encode());
+    out.append(&mut payload);
+    out
+}
+
+/// Build one complete IL-sidecar file image for a shard's `values`.
+pub fn encode_sidecar(values: &[f32]) -> Vec<u8> {
+    assert!(!values.is_empty(), "empty sidecar");
+    let mut payload = Vec::with_capacity(values.len() * 4);
+    for &v in values {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    let mut out = Vec::with_capacity(SIDECAR_HEADER_LEN + payload.len());
+    out.extend_from_slice(SIDECAR_MAGIC);
+    out.extend_from_slice(&SIDECAR_VERSION.to_le_bytes());
+    out.extend_from_slice(&[0u8; 4]);
+    out.extend_from_slice(&(values.len() as u64).to_le_bytes());
+    out.extend_from_slice(&xxh64(&payload, 0).to_le_bytes());
+    debug_assert_eq!(out.len(), SIDECAR_HEADER_LEN);
+    out.append(&mut payload);
+    out
+}
+
+/// Decode + fully validate an IL sidecar; returns the per-row values.
+pub fn decode_sidecar(bytes: &[u8], what: &Path) -> Result<Vec<f32>> {
+    if bytes.len() < SIDECAR_HEADER_LEN {
+        bail!("{what:?}: {} bytes is too short for an IL sidecar", bytes.len());
+    }
+    if &bytes[0..8] != SIDECAR_MAGIC {
+        bail!("{what:?} is not a RHO IL sidecar (bad magic {:?})", &bytes[0..8]);
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+    if version != SIDECAR_VERSION {
+        bail!("{what:?}: sidecar version {version}, this build reads {SIDECAR_VERSION}");
+    }
+    let rows = u64::from_le_bytes(bytes[16..24].try_into().expect("8 bytes"));
+    let checksum = u64::from_le_bytes(bytes[24..32].try_into().expect("8 bytes"));
+    let payload = &bytes[SIDECAR_HEADER_LEN..];
+    if rows.checked_mul(4) != Some(payload.len() as u64) {
+        bail!("{what:?}: sidecar claims {rows} rows but carries {} payload bytes", payload.len());
+    }
+    if xxh64(payload, 0) != checksum {
+        bail!("{what:?}: sidecar checksum mismatch (corrupted or truncated)");
+    }
+    Ok(payload.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().expect("4 bytes"))).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_byte_round_trips_all_16_combos() {
+        for bits in 0u8..16 {
+            let m = unpack_meta(bits);
+            assert_eq!(pack_meta(m), bits);
+        }
+        // unknown high bits are dropped on unpack
+        assert_eq!(pack_meta(unpack_meta(0xF0)), 0);
+    }
+
+    #[test]
+    fn header_round_trips() {
+        let h = ShardHeader { d: 64, classes: 10, rows: 1234, checksum: 0xDEAD_BEEF_CAFE_F00D };
+        let enc = h.encode();
+        assert_eq!(enc.len(), HEADER_LEN);
+        let dec = ShardHeader::decode(&enc, Path::new("x.rsd")).unwrap();
+        assert_eq!(dec, h);
+        assert_eq!(h.file_len(), Some((HEADER_LEN + 1234 * 64 * 4 + 1234 * 4 + 1234) as u64));
+        // a corrupt/crafted header can't wrap into a plausible length
+        let huge = ShardHeader { d: u32::MAX, classes: 2, rows: u64::MAX / 2, checksum: 0 };
+        assert_eq!(huge.payload_len(), None);
+        assert_eq!(huge.file_len(), None);
+    }
+
+    #[test]
+    fn header_rejects_bad_magic_version_and_degenerate_dims() {
+        let h = ShardHeader { d: 8, classes: 2, rows: 4, checksum: 1 }.encode();
+        let mut bad = h;
+        bad[0] = b'X';
+        assert!(ShardHeader::decode(&bad, Path::new("x")).unwrap_err().to_string().contains("magic"));
+        let mut bad = h;
+        bad[8] = 99;
+        let err = ShardHeader::decode(&bad, Path::new("x")).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+        let zero_rows = ShardHeader { d: 8, classes: 2, rows: 0, checksum: 1 }.encode();
+        assert!(ShardHeader::decode(&zero_rows, Path::new("x")).is_err());
+        assert!(ShardHeader::decode(&h[..10], Path::new("x")).is_err());
+    }
+
+    #[test]
+    fn shard_image_is_self_consistent() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let ys = [0u32, 2];
+        let meta = [pack_meta(PointMeta { noisy: true, ..Default::default() }), 0];
+        let img = encode_shard(3, 3, &xs, &ys, &meta);
+        let h = ShardHeader::decode(&img, Path::new("s.rsd")).unwrap();
+        assert_eq!((h.d, h.classes, h.rows), (3, 3, 2));
+        assert_eq!(h.file_len(), Some(img.len() as u64));
+        assert_eq!(xxh64(&img[HEADER_LEN..], 0), h.checksum);
+    }
+
+    #[test]
+    fn sidecar_round_trips_and_refuses_corruption() {
+        let vals = [0.5f32, -1.25, 3.5];
+        let img = encode_sidecar(&vals);
+        assert_eq!(decode_sidecar(&img, Path::new("s.il")).unwrap(), vals);
+        let mut bad = img.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        let err = decode_sidecar(&bad, Path::new("s.il")).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        let mut bad = img.clone();
+        bad[8] = 9;
+        assert!(decode_sidecar(&bad, Path::new("s.il")).unwrap_err().to_string().contains("version"));
+        assert!(decode_sidecar(&img[..img.len() - 4], Path::new("s.il")).is_err());
+    }
+
+    #[test]
+    fn naming_helpers() {
+        assert_eq!(shard_file_name(7), "shard-00007.rsd");
+        assert_eq!(sidecar_path(Path::new("a/shard-00007.rsd")), PathBuf::from("a/shard-00007.il"));
+    }
+}

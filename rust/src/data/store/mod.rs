@@ -1,0 +1,574 @@
+//! ShardStore: the on-disk data plane.
+//!
+//! Everything above this module consumes training data through the
+//! [`DataSource`] trait — the paper-scale abstraction that lets the
+//! same engine stream a RAM-sized synthetic [`Dataset`] or a sharded
+//! on-disk corpus (`Clothing-1M`-shaped workloads) through one loop:
+//!
+//! - [`format`] — the versioned, xxhash-checksummed binary shard
+//!   layout (+ IL sidecars).
+//! - [`writer`] — streaming ingest ([`ShardWriter`], `rho ingest`)
+//!   with one-shard bounded memory.
+//! - [`reader`] — zero-copy [`ShardReader`]s (mmap with a heap
+//!   fallback, columns sliced straight over the mapped region).
+//! - [`ShardSet`] — one split directory of shards behind `DataSource`:
+//!   random-row gather across mapped shards, layout export for the
+//!   two-level [`StreamSampler`](crate::data::loader::StreamSampler),
+//!   `madvise`-based window prefetch, and the concatenated IL-sidecar
+//!   table (`rho score-il` writes it once; every later run's
+//!   `Precomputed` provider reads it back with **zero** IL forward
+//!   passes).
+//! - [`ShardStore`] — a multi-split store root (`train/` streamed,
+//!   `holdout`/`val`/`test` materialized on demand for IL training and
+//!   eval) plus `store.json` identity.
+//!
+//! Gather parity contract: a `ShardSet` ingested from a `Dataset`
+//! gathers bit-identical `(xs, ys)` buffers for any index list — the
+//! store writes the same IEEE bytes it was handed — so a sharded run
+//! is bitwise-reproducible against its in-memory twin (asserted in
+//! `tests/store_integration.rs`).
+
+pub mod format;
+pub mod reader;
+pub mod writer;
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::loader::ShardLayout;
+use crate::data::{Dataset, PointMeta};
+use crate::util::json;
+
+pub use reader::ShardReader;
+pub use writer::{ingest_bundle, ingest_csv, write_sidecar, IngestReport, ShardWriter};
+
+/// Store manifest file name at the store root.
+pub const STORE_MANIFEST: &str = "store.json";
+
+/// The split names a store may carry, in conventional order.
+pub const SPLITS: &[&str] = &["train", "holdout", "val", "test"];
+
+/// `shards://<dir>` → the store root. Any other string is not a shard
+/// source (the config's `source=""` means in-memory catalog data).
+pub fn parse_source(source: &str) -> Option<&Path> {
+    source.strip_prefix("shards://").map(Path::new)
+}
+
+/// Uniform view over training data: dense in-memory [`Dataset`] or
+/// on-disk [`ShardSet`]. The engine's producer, tracker, and SVP
+/// filter all consume this instead of a concrete container, so *where
+/// rows live* is a run-construction choice, not an engine rewrite.
+/// `Sync` because the engine's scoped producer/prefetcher threads
+/// share the source by reference.
+pub trait DataSource: Sync {
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Feature dimension.
+    fn dim(&self) -> usize;
+    fn classes(&self) -> usize;
+    /// `"memory"` or `"shards"` — surfaced in the `run_summary` event.
+    fn source_kind(&self) -> &'static str;
+    /// Process-resident bytes this source owns (mapped pages are the
+    /// kernel's, not ours — a mapped store reports only its tables).
+    fn nbytes(&self) -> u64;
+    /// Gather rows into contiguous (features, labels) buffers — the
+    /// exact semantics of [`Dataset::gather`], bit for bit.
+    fn gather(&self, idx: &[u32]) -> (Vec<f32>, Vec<i32>);
+    /// Ground-truth provenance flags of one point.
+    fn point_meta(&self, i: u32) -> PointMeta;
+    /// Physical block layout for the two-level sampler; `None` means
+    /// "dense" (the engine derives a layout from config instead).
+    fn layout(&self) -> Option<ShardLayout> {
+        None
+    }
+    /// Whether [`prefetch`](Self::prefetch) hints do anything — the
+    /// engine only spawns its prefetcher thread (and pays the index
+    /// copies) for sources that say yes.
+    fn wants_prefetch(&self) -> bool {
+        false
+    }
+    /// Hint that `upcoming` rows are about to be gathered (no-op for
+    /// memory sources; `madvise(WILLNEED)` per shard for mapped ones).
+    fn prefetch(&self, _upcoming: &[u32]) {}
+    /// Precomputed per-row IL table (sidecar-backed), when present.
+    fn il_table(&self) -> Option<&[f32]> {
+        None
+    }
+    /// Content identity beyond the block layout, folded into the
+    /// session-checkpoint data hash. `None` (dense sources) means only
+    /// the layout binds the resume; shard sources return a digest of
+    /// their per-shard payload checksums so a re-ingested store with
+    /// identical shape but different bytes is refused on resume.
+    fn content_fingerprint(&self) -> Option<u64> {
+        None
+    }
+}
+
+impl DataSource for Dataset {
+    fn len(&self) -> usize {
+        Dataset::len(self)
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn source_kind(&self) -> &'static str {
+        "memory"
+    }
+
+    fn nbytes(&self) -> u64 {
+        Dataset::nbytes(self)
+    }
+
+    fn gather(&self, idx: &[u32]) -> (Vec<f32>, Vec<i32>) {
+        Dataset::gather(self, idx)
+    }
+
+    fn point_meta(&self, i: u32) -> PointMeta {
+        self.meta[i as usize]
+    }
+}
+
+/// Materialize selected rows of any source into a dense [`Dataset`]
+/// (the SVP core-set filter's output shape).
+pub fn materialize_subset(src: &dyn DataSource, idx: &[u32]) -> Dataset {
+    let d = src.dim();
+    let mut out = Dataset::empty(d, src.classes());
+    let (xs, ys) = src.gather(idx);
+    for (k, &i) in idx.iter().enumerate() {
+        out.push(&xs[k * d..(k + 1) * d], ys[k] as u32, src.point_meta(i));
+    }
+    out
+}
+
+/// One split directory of validated shards behind [`DataSource`].
+pub struct ShardSet {
+    pub dir: PathBuf,
+    d: usize,
+    classes: usize,
+    rows: usize,
+    shards: Vec<ShardReader>,
+    /// Global row index where each shard starts (ascending).
+    starts: Vec<u32>,
+    /// Concatenated IL sidecar values (global row order), when every
+    /// shard carries one.
+    il: Option<Vec<f32>>,
+    /// Shards already advised `WILLNEED` (prefetch is idempotent).
+    advised: Mutex<Vec<bool>>,
+}
+
+impl ShardSet {
+    /// Open every `shard-*.rsd` of a split directory (name-sorted =
+    /// write order), validate uniform dims, and load IL sidecars when
+    /// the set carries them. A *partial* sidecar set is refused — it
+    /// means an interrupted `score-il`; re-run it.
+    pub fn open(dir: &Path) -> Result<ShardSet> {
+        let mut files: Vec<PathBuf> = std::fs::read_dir(dir)
+            .with_context(|| format!("reading split dir {dir:?}"))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.extension().map(|x| x == "rsd").unwrap_or(false)
+                    && p.file_name()
+                        .map(|n| n.to_string_lossy().starts_with("shard-"))
+                        .unwrap_or(false)
+            })
+            .collect();
+        // Numeric order, not lexicographic: zero-padding covers five
+        // digits, but a >99,999-shard split ("shard-100000.rsd") must
+        // still assemble in ingest order or the global row indexing
+        // (and every sidecar offset) silently shifts.
+        files.sort_by_key(|p| {
+            let num = p
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .and_then(|s| s.strip_prefix("shard-"))
+                .and_then(|s| s.parse::<u64>().ok());
+            (num.is_none(), num, p.clone())
+        });
+        if files.is_empty() {
+            bail!("{dir:?} contains no shard files (expected shard-*.rsd)");
+        }
+        let mut shards = Vec::with_capacity(files.len());
+        let mut starts = Vec::with_capacity(files.len());
+        let mut rows = 0usize;
+        for path in &files {
+            let r = ShardReader::open(path)?;
+            if let Some(first) = shards.first() {
+                let f: &ShardReader = first;
+                if r.d != f.d || r.classes != f.classes {
+                    bail!(
+                        "{path:?} is ({}, {} classes) but {dir:?} started as ({}, {} classes)",
+                        r.d,
+                        r.classes,
+                        f.d,
+                        f.classes
+                    );
+                }
+            }
+            starts.push(rows as u32);
+            rows += r.rows;
+            shards.push(r);
+        }
+        let with_sidecar = shards
+            .iter()
+            .filter(|r| format::sidecar_path(&r.path).exists())
+            .count();
+        let il = if with_sidecar == shards.len() {
+            let mut table = Vec::with_capacity(rows);
+            for r in &shards {
+                let path = format::sidecar_path(&r.path);
+                let bytes = std::fs::read(&path)?;
+                let vals = format::decode_sidecar(&bytes, &path)?;
+                if vals.len() != r.rows {
+                    bail!(
+                        "{path:?} carries {} IL values for a {}-row shard",
+                        vals.len(),
+                        r.rows
+                    );
+                }
+                table.extend_from_slice(&vals);
+            }
+            Some(table)
+        } else if with_sidecar > 0 {
+            bail!(
+                "{dir:?} has IL sidecars for {with_sidecar} of {} shards — interrupted \
+                 `rho score-il`? re-run it to complete the set",
+                shards.len()
+            );
+        } else {
+            None
+        };
+        let n_shards = shards.len();
+        let (d, classes) = (shards[0].d, shards[0].classes);
+        Ok(ShardSet {
+            dir: dir.to_path_buf(),
+            d,
+            classes,
+            rows,
+            shards,
+            starts,
+            il,
+            advised: Mutex::new(vec![false; n_shards]),
+        })
+    }
+
+    /// (shard index, row within shard) of a global row index.
+    fn locate(&self, row: u32) -> (usize, usize) {
+        debug_assert!((row as usize) < self.rows);
+        let s = self.starts.partition_point(|&start| start <= row) - 1;
+        (s, (row - self.starts[s]) as usize)
+    }
+
+    pub fn shards(&self) -> &[ShardReader] {
+        &self.shards
+    }
+
+    /// True when every shard has a validated IL sidecar.
+    pub fn has_il(&self) -> bool {
+        self.il.is_some()
+    }
+
+    /// Materialize the whole split as a dense [`Dataset`] (bitwise the
+    /// rows that were ingested).
+    pub fn to_dataset(&self) -> Dataset {
+        let mut ds = Dataset::empty(self.d, self.classes);
+        for r in &self.shards {
+            ds.xs.extend_from_slice(r.xs());
+            ds.ys.extend_from_slice(r.ys());
+            ds.meta.extend(r.meta_bytes().iter().map(|&b| format::unpack_meta(b)));
+        }
+        ds
+    }
+}
+
+impl DataSource for ShardSet {
+    fn len(&self) -> usize {
+        self.rows
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn source_kind(&self) -> &'static str {
+        "shards"
+    }
+
+    fn nbytes(&self) -> u64 {
+        let tables = (self.il.as_ref().map(|t| t.len() * 4).unwrap_or(0)
+            + self.starts.len() * 4) as u64;
+        tables + self.shards.iter().map(|r| r.resident_bytes()).sum::<u64>()
+    }
+
+    fn gather(&self, idx: &[u32]) -> (Vec<f32>, Vec<i32>) {
+        let mut xs = Vec::with_capacity(idx.len() * self.d);
+        let mut ys = Vec::with_capacity(idx.len());
+        for &i in idx {
+            let (s, r) = self.locate(i);
+            let shard = &self.shards[s];
+            xs.extend_from_slice(shard.x(r));
+            ys.push(shard.ys()[r] as i32);
+        }
+        (xs, ys)
+    }
+
+    fn point_meta(&self, i: u32) -> PointMeta {
+        let (s, r) = self.locate(i);
+        self.shards[s].meta(r)
+    }
+
+    fn layout(&self) -> Option<ShardLayout> {
+        Some(ShardLayout::from_blocks(self.shards.iter().map(|r| r.rows as u32).collect()))
+    }
+
+    fn wants_prefetch(&self) -> bool {
+        self.shards.iter().any(|r| r.is_mmap())
+    }
+
+    fn prefetch(&self, upcoming: &[u32]) {
+        let mut advised = match self.advised.lock() {
+            Ok(a) => a,
+            Err(_) => return, // a poisoned hint is a dropped hint
+        };
+        for &i in upcoming {
+            let (s, _) = self.locate(i);
+            if !advised[s] {
+                self.shards[s].advise_willneed();
+                advised[s] = true;
+            }
+        }
+        // Once every shard has been advised (≈ one epoch of coverage),
+        // re-arm the hints: under memory pressure the kernel evicts
+        // pages, and a multi-epoch larger-than-memory run needs the
+        // WILLNEED hints again next cycle, not just on first touch.
+        if advised.iter().all(|&a| a) {
+            advised.fill(false);
+        }
+    }
+
+    fn il_table(&self) -> Option<&[f32]> {
+        self.il.as_deref()
+    }
+
+    fn content_fingerprint(&self) -> Option<u64> {
+        let mut bytes = Vec::with_capacity(self.shards.len() * 8);
+        for r in &self.shards {
+            bytes.extend_from_slice(&r.checksum.to_le_bytes());
+        }
+        Some(crate::util::hash::xxh64(&bytes, 0x1DEA_CAFE))
+    }
+}
+
+/// A multi-split store root: streamed `train/` plus on-demand
+/// materialized eval splits, with `store.json` identity.
+pub struct ShardStore {
+    pub root: PathBuf,
+    pub name: String,
+    pub d: usize,
+    pub classes: usize,
+    pub shard_rows: usize,
+    pub train: ShardSet,
+}
+
+impl ShardStore {
+    pub fn open(root: &Path) -> Result<ShardStore> {
+        let manifest_path = root.join(STORE_MANIFEST);
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading store manifest {manifest_path:?} (not an ingested shard store?)"))?;
+        let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("{manifest_path:?}: {e}"))?;
+        let version = doc.get("version").and_then(|v| v.as_usize()).unwrap_or(0);
+        if version != 1 {
+            bail!("{manifest_path:?}: store version {version}, this build reads version 1");
+        }
+        let name = doc.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string();
+        let d = doc.get("d").and_then(|v| v.as_usize()).unwrap_or(0);
+        let classes = doc.get("classes").and_then(|v| v.as_usize()).unwrap_or(0);
+        let shard_rows = doc.get("shard_rows").and_then(|v| v.as_usize()).unwrap_or(0);
+        let train = ShardSet::open(&root.join("train"))?;
+        if train.dim() != d || DataSource::classes(&train) != classes {
+            bail!(
+                "{manifest_path:?} declares ({d}, {classes} classes) but train/ shards are ({}, {} classes)",
+                train.dim(),
+                DataSource::classes(&train)
+            );
+        }
+        Ok(ShardStore { root: root.to_path_buf(), name, d, classes, shard_rows, train })
+    }
+
+    pub fn has_split(&self, split: &str) -> bool {
+        self.root.join(split).is_dir()
+    }
+
+    /// Open a non-train split as a shard set.
+    pub fn split(&self, split: &str) -> Result<ShardSet> {
+        if !SPLITS.contains(&split) {
+            bail!("unknown split `{split}` (known: {SPLITS:?})");
+        }
+        ShardSet::open(&self.root.join(split))
+    }
+
+    /// Materialize a split as a dense dataset (IL training / eval need
+    /// dense buffers; these splits are small by construction).
+    pub fn materialize(&self, split: &str) -> Result<Dataset> {
+        Ok(self.split(split)?.to_dataset())
+    }
+
+    /// Where `rho score-il` persists the trained IL model state.
+    pub fn il_state_path(&self) -> PathBuf {
+        self.root.join("il_state.bin")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("rho-store-{}-{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn rand_ds(n: usize, d: usize, classes: usize, rng: &mut Pcg32) -> Dataset {
+        let mut ds = Dataset::empty(d, classes);
+        let mut x = vec![0.0f32; d];
+        for _ in 0..n {
+            for v in x.iter_mut() {
+                *v = rng.range_f32(-4.0, 4.0);
+            }
+            let meta = PointMeta {
+                noisy: rng.bernoulli(0.25),
+                duplicate: rng.bernoulli(0.1),
+                ..Default::default()
+            };
+            ds.push(&x, rng.below(classes) as u32, meta);
+        }
+        ds
+    }
+
+    #[test]
+    fn source_uri_parsing() {
+        assert_eq!(parse_source("shards://out/c10"), Some(Path::new("out/c10")));
+        assert!(parse_source("").is_none());
+        assert!(parse_source("cifar10").is_none());
+    }
+
+    #[test]
+    fn shard_set_gathers_bitwise_like_dataset() {
+        let dir = tmp("parity");
+        let mut rng = Pcg32::new(11, 1);
+        let ds = rand_ds(53, 5, 4, &mut rng);
+        let mut w = ShardWriter::create(&dir.join("train"), 5, 4, 8).unwrap();
+        w.push_dataset(&ds).unwrap();
+        w.finish().unwrap();
+        let set = ShardSet::open(&dir.join("train")).unwrap();
+        assert_eq!(DataSource::len(&set), 53);
+        assert_eq!(set.layout().unwrap().blocks().len(), 7, "6 full + ragged");
+        for _ in 0..20 {
+            let idx: Vec<u32> = (0..10).map(|_| rng.below(53) as u32).collect();
+            let (gx, gy) = DataSource::gather(&set, &idx);
+            let (ex, ey) = Dataset::gather(&ds, &idx);
+            assert_eq!(gy, ey);
+            assert_eq!(gx.len(), ex.len());
+            for (a, b) in gx.iter().zip(&ex) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        for i in 0..53u32 {
+            assert_eq!(set.point_meta(i), ds.meta[i as usize]);
+        }
+        // full materialization round-trips too
+        let back = set.to_dataset();
+        assert_eq!(back.xs, ds.xs);
+        assert_eq!(back.ys, ds.ys);
+        assert_eq!(back.meta, ds.meta);
+        set.prefetch(&[0, 20, 52]); // hint path is exercised, not observable
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_round_trips_bundle_and_validates_manifest() {
+        let dir = tmp("bundle");
+        let mut rng = Pcg32::new(3, 2);
+        let bundle = Bundle {
+            name: "mini".into(),
+            train: rand_ds(40, 4, 3, &mut rng),
+            holdout: rand_ds(20, 4, 3, &mut rng),
+            val: rand_ds(10, 4, 3, &mut rng),
+            test: rand_ds(12, 4, 3, &mut rng),
+        };
+        let report = ingest_bundle(&bundle, &dir, 16).unwrap();
+        assert_eq!(report.splits.len(), 4);
+        assert_eq!(report.total_rows(), 82);
+        let store = ShardStore::open(&dir).unwrap();
+        assert_eq!((store.name.as_str(), store.d, store.classes, store.shard_rows), ("mini", 4, 3, 16));
+        assert!(!store.train.has_il());
+        let test = store.materialize("test").unwrap();
+        assert_eq!(test.xs, bundle.test.xs);
+        assert!(store.has_split("val"));
+        assert!(store.split("bogus").is_err());
+        // manifest/dims drift is refused
+        let manifest = dir.join(STORE_MANIFEST);
+        let text = std::fs::read_to_string(&manifest).unwrap().replace("\"d\":4", "\"d\":9");
+        std::fs::write(&manifest, text).unwrap();
+        assert!(ShardStore::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sidecars_load_as_il_table_and_partial_sets_are_refused() {
+        let dir = tmp("sidecar");
+        let mut rng = Pcg32::new(9, 3);
+        let ds = rand_ds(20, 3, 2, &mut rng);
+        let mut w = ShardWriter::create(&dir.join("train"), 3, 2, 8).unwrap();
+        w.push_dataset(&ds).unwrap();
+        w.finish().unwrap();
+        let set = ShardSet::open(&dir.join("train")).unwrap();
+        let table: Vec<f32> = (0..20).map(|i| i as f32 * 0.125).collect();
+        let mut off = 0usize;
+        let paths: Vec<PathBuf> = set.shards().iter().map(|r| r.path.clone()).collect();
+        let rows: Vec<usize> = set.shards().iter().map(|r| r.rows).collect();
+        drop(set);
+        for (path, n) in paths.iter().zip(&rows) {
+            write_sidecar(path, &table[off..off + n]).unwrap();
+            off += n;
+        }
+        let set = ShardSet::open(&dir.join("train")).unwrap();
+        assert!(set.has_il());
+        assert_eq!(set.il_table().unwrap(), table.as_slice());
+        assert!(set.nbytes() >= 80, "il table counts as resident");
+        // partial sidecar set → hard error
+        std::fs::remove_file(format::sidecar_path(&paths[1])).unwrap();
+        let err = ShardSet::open(&dir.join("train")).unwrap_err().to_string();
+        assert!(err.contains("score-il"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    use crate::data::Bundle;
+
+    #[test]
+    fn materialize_subset_matches_dataset_subset() {
+        let mut rng = Pcg32::new(21, 4);
+        let ds = rand_ds(30, 4, 5, &mut rng);
+        let idx = [3u32, 0, 29, 7, 7];
+        let via_source = materialize_subset(&ds, &idx);
+        let direct = ds.subset(&idx);
+        assert_eq!(via_source.xs, direct.xs);
+        assert_eq!(via_source.ys, direct.ys);
+        assert_eq!(via_source.meta, direct.meta);
+    }
+}

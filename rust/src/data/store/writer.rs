@@ -1,0 +1,376 @@
+//! Streaming shard ingest: rows in, checksummed shard files out.
+//!
+//! [`ShardWriter`] buffers at most one shard (`shard_rows` rows) in
+//! memory — that bound is the whole point of the data plane: a corpus
+//! of any size streams through `push` with O(shard) residency. Each
+//! flush encodes the columnar payload, checksums it, and writes the
+//! file in one pass (`shard-NNNNN.rsd`, see
+//! [`format`](super::format)).
+//!
+//! [`ingest_bundle`] writes a full four-split store (one subdirectory
+//! per split + `store.json`); [`ingest_csv`] ingests an external
+//! `f0,...,fd-1,label` CSV into a train-only store. IL sidecars are
+//! written per shard by [`write_sidecar`] (atomic temp + rename, so a
+//! crashed `score-il` never leaves a half-written sidecar beside a
+//! good shard).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::store::format::{encode_shard, encode_sidecar, pack_meta, shard_file_name};
+use crate::data::store::STORE_MANIFEST;
+use crate::data::{Bundle, Dataset, PointMeta};
+use crate::util::json::{num, obj, s, Value};
+
+/// Outcome of writing one split directory.
+#[derive(Clone, Debug)]
+pub struct SplitSummary {
+    pub split: String,
+    pub rows: u64,
+    pub shards: usize,
+    pub bytes: u64,
+}
+
+/// Streams rows into `shard_rows`-sized shard files under one split
+/// directory. Buffered rows are bounded by one shard.
+pub struct ShardWriter {
+    dir: PathBuf,
+    d: usize,
+    classes: usize,
+    shard_rows: usize,
+    xs: Vec<f32>,
+    ys: Vec<u32>,
+    meta: Vec<u8>,
+    shards: usize,
+    rows: u64,
+    bytes: u64,
+}
+
+impl ShardWriter {
+    pub fn create(dir: &Path, d: usize, classes: usize, shard_rows: usize) -> Result<ShardWriter> {
+        if d == 0 || classes == 0 {
+            bail!("shard writer needs d > 0 and classes > 0 (got d {d}, classes {classes})");
+        }
+        if shard_rows == 0 {
+            bail!("shard_rows must be positive");
+        }
+        std::fs::create_dir_all(dir).with_context(|| format!("creating split dir {dir:?}"))?;
+        Ok(ShardWriter {
+            dir: dir.to_path_buf(),
+            d,
+            classes,
+            shard_rows,
+            xs: Vec::with_capacity(shard_rows * d),
+            ys: Vec::with_capacity(shard_rows),
+            meta: Vec::with_capacity(shard_rows),
+            shards: 0,
+            rows: 0,
+            bytes: 0,
+        })
+    }
+
+    /// Append one row; flushes a full shard to disk transparently.
+    pub fn push(&mut self, x: &[f32], y: u32, meta: PointMeta) -> Result<()> {
+        if x.len() != self.d {
+            bail!("row has {} features, writer expects {}", x.len(), self.d);
+        }
+        if y as usize >= self.classes {
+            bail!("label {y} out of range for {} classes", self.classes);
+        }
+        self.xs.extend_from_slice(x);
+        self.ys.push(y);
+        self.meta.push(pack_meta(meta));
+        self.rows += 1;
+        if self.ys.len() == self.shard_rows {
+            self.flush_shard()?;
+        }
+        Ok(())
+    }
+
+    /// Append every row of a dataset (dims must match).
+    pub fn push_dataset(&mut self, ds: &Dataset) -> Result<()> {
+        if ds.d != self.d || ds.classes != self.classes {
+            bail!(
+                "dataset is ({}, {} classes), writer is ({}, {} classes)",
+                ds.d,
+                ds.classes,
+                self.d,
+                self.classes
+            );
+        }
+        for i in 0..ds.len() {
+            self.push(ds.x(i), ds.ys[i], ds.meta[i])?;
+        }
+        Ok(())
+    }
+
+    fn flush_shard(&mut self) -> Result<()> {
+        if self.ys.is_empty() {
+            return Ok(());
+        }
+        let image = encode_shard(self.d, self.classes, &self.xs, &self.ys, &self.meta);
+        let path = self.dir.join(shard_file_name(self.shards));
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(&path).with_context(|| format!("creating shard {path:?}"))?,
+        );
+        f.write_all(&image)?;
+        f.flush()?;
+        self.bytes += image.len() as u64;
+        self.shards += 1;
+        self.xs.clear();
+        self.ys.clear();
+        self.meta.clear();
+        Ok(())
+    }
+
+    /// Flush the ragged final shard and summarize the split.
+    pub fn finish(mut self) -> Result<SplitSummary> {
+        self.flush_shard()?;
+        if self.rows == 0 {
+            bail!("split {:?} received no rows", self.dir);
+        }
+        let split = self
+            .dir
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        Ok(SplitSummary { split, rows: self.rows, shards: self.shards, bytes: self.bytes })
+    }
+}
+
+/// Write `<shard>.il` beside its shard, atomically.
+pub fn write_sidecar(shard_path: &Path, values: &[f32]) -> Result<()> {
+    let path = super::format::sidecar_path(shard_path);
+    let tmp = path.with_extension("il.tmp");
+    std::fs::write(&tmp, encode_sidecar(values))?;
+    std::fs::rename(&tmp, &path).with_context(|| format!("installing sidecar {path:?}"))?;
+    Ok(())
+}
+
+/// Outcome of one full ingest.
+#[derive(Clone, Debug)]
+pub struct IngestReport {
+    pub root: PathBuf,
+    pub name: String,
+    pub d: usize,
+    pub classes: usize,
+    pub shard_rows: usize,
+    pub splits: Vec<SplitSummary>,
+}
+
+impl IngestReport {
+    pub fn total_rows(&self) -> u64 {
+        self.splits.iter().map(|s| s.rows).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.splits.iter().map(|s| s.bytes).sum()
+    }
+}
+
+fn write_store_manifest(report: &IngestReport) -> Result<()> {
+    let splits = Value::Array(report.splits.iter().map(|sp| s(&sp.split)).collect());
+    let doc = obj(vec![
+        ("version", num(1.0)),
+        ("name", s(&report.name)),
+        ("d", num(report.d as f64)),
+        ("classes", num(report.classes as f64)),
+        ("shard_rows", num(report.shard_rows as f64)),
+        ("splits", splits),
+    ]);
+    std::fs::write(report.root.join(STORE_MANIFEST), doc.to_json() + "\n")?;
+    Ok(())
+}
+
+/// Ingest a full [`Bundle`] into `out/` — one split directory per
+/// non-empty split (`train`, `holdout`, `val`, `test`) plus the store
+/// manifest.
+pub fn ingest_bundle(bundle: &Bundle, out: &Path, shard_rows: usize) -> Result<IngestReport> {
+    let (d, classes) = (bundle.train.d, bundle.train.classes);
+    if bundle.train.is_empty() {
+        bail!("bundle `{}` has an empty train split", bundle.name);
+    }
+    let mut splits = Vec::new();
+    for (name, ds) in [
+        ("train", &bundle.train),
+        ("holdout", &bundle.holdout),
+        ("val", &bundle.val),
+        ("test", &bundle.test),
+    ] {
+        if ds.is_empty() {
+            continue;
+        }
+        let mut w = ShardWriter::create(&out.join(name), d, classes, shard_rows)?;
+        w.push_dataset(ds)?;
+        splits.push(w.finish()?);
+    }
+    let report = IngestReport {
+        root: out.to_path_buf(),
+        name: bundle.name.clone(),
+        d,
+        classes,
+        shard_rows,
+        splits,
+    };
+    write_store_manifest(&report)?;
+    Ok(report)
+}
+
+/// Ingest an external CSV (`f0,...,fd-1,label` per line, optional
+/// header) into a train-only store. Two *streamed* passes over the
+/// file — the first discovers `d` and the label range, the second
+/// pushes rows into shards — so ingest memory stays O(one shard + one
+/// line) even for larger-than-RAM corpora (the data plane's whole
+/// point).
+pub fn ingest_csv(csv: &Path, out: &Path, shard_rows: usize) -> Result<IngestReport> {
+    use std::io::BufRead;
+    let open = || -> Result<std::io::BufReader<std::fs::File>> {
+        Ok(std::io::BufReader::new(
+            std::fs::File::open(csv).with_context(|| format!("reading {csv:?}"))?,
+        ))
+    };
+    // pass 1: dims + label range (streamed)
+    let mut d = 0usize;
+    let mut max_label = 0u32;
+    let mut data_lines = 0usize;
+    let mut first_line = true;
+    for (i, line) in open()?.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        if fields.len() < 2 {
+            bail!("{csv:?}:{}: need at least one feature and a label", i + 1);
+        }
+        // header = the first NON-BLANK line when it doesn't parse as
+        // data (a leading blank line or BOM must not demote it)
+        let is_header = first_line && fields[0].parse::<f32>().is_err();
+        first_line = false;
+        if is_header {
+            continue;
+        }
+        if d == 0 {
+            d = fields.len() - 1;
+        } else if fields.len() - 1 != d {
+            bail!("{csv:?}:{}: {} features, earlier rows had {d}", i + 1, fields.len() - 1);
+        }
+        let y: u32 = fields[d]
+            .parse()
+            .map_err(|e| anyhow::anyhow!("{csv:?}:{}: bad label `{}`: {e}", i + 1, fields[d]))?;
+        max_label = max_label.max(y);
+        data_lines += 1;
+    }
+    if data_lines == 0 {
+        bail!("{csv:?} has no data rows");
+    }
+    let classes = max_label as usize + 1;
+    // pass 2: stream rows into shards
+    let mut w = ShardWriter::create(&out.join("train"), d, classes, shard_rows)?;
+    let mut x = vec![0.0f32; d];
+    let mut first_line = true;
+    for (i, line) in open()?.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        let is_header = first_line && fields[0].parse::<f32>().is_err();
+        first_line = false;
+        if is_header {
+            continue;
+        }
+        for (j, f) in fields[..d].iter().enumerate() {
+            x[j] = f
+                .parse()
+                .map_err(|e| anyhow::anyhow!("{csv:?}:{}: bad feature `{f}`: {e}", i + 1))?;
+        }
+        let y: u32 = fields[d].parse().expect("validated in first pass");
+        w.push(&x, y, PointMeta::default())?;
+    }
+    let name = csv.file_stem().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+    let report = IngestReport {
+        root: out.to_path_buf(),
+        name,
+        d,
+        classes,
+        shard_rows,
+        splits: vec![w.finish()?],
+    };
+    write_store_manifest(&report)?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::store::reader::ShardReader;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("rho-writer-{}-{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn tiny_ds(n: usize, d: usize, classes: usize) -> Dataset {
+        let mut ds = Dataset::empty(d, classes);
+        for i in 0..n {
+            let x: Vec<f32> = (0..d).map(|j| (i * d + j) as f32 * 0.25).collect();
+            let meta = PointMeta { noisy: i % 3 == 0, ..Default::default() };
+            ds.push(&x, (i % classes) as u32, meta);
+        }
+        ds
+    }
+
+    #[test]
+    fn writes_full_and_ragged_shards() {
+        let dir = tmp("ragged");
+        let ds = tiny_ds(10, 3, 4);
+        let mut w = ShardWriter::create(&dir.join("train"), 3, 4, 4).unwrap();
+        w.push_dataset(&ds).unwrap();
+        let sum = w.finish().unwrap();
+        assert_eq!((sum.rows, sum.shards), (10, 3), "4+4+2 rows");
+        let r0 = ShardReader::open(&dir.join("train").join(shard_file_name(0))).unwrap();
+        let r2 = ShardReader::open(&dir.join("train").join(shard_file_name(2))).unwrap();
+        assert_eq!((r0.rows, r2.rows), (4, 2));
+        assert_eq!(r2.x(1), ds.x(9), "ragged tail keeps row bytes");
+        assert!(r0.meta(0).noisy);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn writer_rejects_bad_rows() {
+        let dir = tmp("reject");
+        let mut w = ShardWriter::create(&dir.join("train"), 2, 3, 8).unwrap();
+        assert!(w.push(&[1.0], 0, PointMeta::default()).is_err(), "short row");
+        assert!(w.push(&[1.0, 2.0], 3, PointMeta::default()).is_err(), "label overflow");
+        assert!(ShardWriter::create(&dir.join("x"), 2, 3, 0).is_err(), "zero shard_rows");
+        let empty = ShardWriter::create(&dir.join("y"), 2, 3, 8).unwrap();
+        assert!(empty.finish().is_err(), "empty split refused");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn csv_ingest_round_trips() {
+        let dir = tmp("csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let csv = dir.join("mini.csv");
+        // leading blank line: the header is the first NON-blank line
+        std::fs::write(&csv, "\na,b,label\n0.5,1.5,0\n-1.0,2.0,2\n3.25,4.5,1\n").unwrap();
+        let report = ingest_csv(&csv, &dir.join("store"), 2).unwrap();
+        assert_eq!((report.d, report.classes), (2, 3));
+        assert_eq!(report.total_rows(), 3);
+        assert_eq!(report.splits[0].shards, 2);
+        let r = ShardReader::open(&dir.join("store/train").join(shard_file_name(0))).unwrap();
+        assert_eq!(r.xs(), &[0.5, 1.5, -1.0, 2.0]);
+        assert_eq!(r.ys(), &[0, 2]);
+        // malformed rows are refused
+        std::fs::write(&csv, "1.0,2.0,0\n1.0,0\n").unwrap();
+        assert!(ingest_csv(&csv, &dir.join("bad"), 2).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

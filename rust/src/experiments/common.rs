@@ -5,22 +5,38 @@
 
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use xla::PjRtClient;
 
 use crate::config::RunConfig;
+use crate::coordinator::engine::RunData;
 use crate::coordinator::il_model::{compute_il, no_holdout_il, train_il, IlTrainConfig};
 use crate::coordinator::session::{IlContext, RunResult, Session};
+use crate::data::store::{parse_source, DataSource, ShardStore};
 use crate::data::{catalog, Bundle};
 use crate::experiments::ExpCtx;
 use crate::runtime::artifact::Manifest;
 use crate::runtime::handle::{cpu_client, ModelRuntime};
+use crate::runtime::params::TrainState;
 use crate::runtime::plane::{
     plane_pool_config, ComputePlane, PlaneKey, KNOWN_PLANES, PLANE_IL, PLANE_MCD, PLANE_TARGET,
 };
 use crate::runtime::pool::{PoolConfig, ScoringPool};
+
+/// The fixed data seed every experiment (and `rho ingest`) builds
+/// catalog bundles with, so every method — and every *source* — sees
+/// identical bytes (the paper's comparison setup).
+pub const DATA_SEED: u64 = 0xD5EED;
+
+/// The IL-model training hyperparameters a [`RunConfig`] implies —
+/// shared by [`Lab::il_context`] and `rho score-il` so a sidecar
+/// written once is bit-identical to what an in-memory run computes.
+pub fn il_train_config(cfg: &RunConfig) -> IlTrainConfig {
+    IlTrainConfig { epochs: cfg.il_epochs, lr: cfg.lr, wd: cfg.wd, seed: DATA_SEED ^ 0x11 }
+}
 
 /// Lazily-loaded runtimes + cached IL contexts + the compute-plane
 /// registry over one PJRT client.
@@ -38,6 +54,8 @@ pub struct Lab {
     /// state carries across runs of the same pool; that's intended —
     /// it is a host property, not a run property.)
     pools: RefCell<HashMap<PlaneKey, Rc<ScoringPool>>>,
+    /// Opened shard stores, keyed by root path (`shards://` sources).
+    stores: RefCell<HashMap<PathBuf, Rc<ShardStore>>>,
     pub scale: f64,
 }
 
@@ -51,6 +69,7 @@ impl Lab {
             il_cache: RefCell::new(HashMap::new()),
             bundles: RefCell::new(HashMap::new()),
             pools: RefCell::new(HashMap::new()),
+            stores: RefCell::new(HashMap::new()),
             scale: ctx.scale,
         })
     }
@@ -63,6 +82,12 @@ impl Lab {
     /// Runtime with an explicit train-batch artifact.
     pub fn runtime_tb(&self, arch: &str, dataset: &str, tb: usize) -> Result<Rc<ModelRuntime>> {
         let (d, c) = catalog::dims_for(dataset);
+        self.runtime_dims(arch, d, c, tb)
+    }
+
+    /// Runtime for explicit data dims — the path shard stores (whose
+    /// dims come from `store.json`, not the catalog) load through.
+    pub fn runtime_dims(&self, arch: &str, d: usize, c: usize, tb: usize) -> Result<Rc<ModelRuntime>> {
         let key = (arch.to_string(), d, c, tb);
         if let Some(rt) = self.runtimes.borrow().get(&key) {
             return Ok(Rc::clone(rt));
@@ -76,10 +101,20 @@ impl Lab {
                 c,
                 tb,
             )
-            .with_context(|| format!("loading runtime {arch} for {dataset}"))?,
+            .with_context(|| format!("loading runtime {arch} (d {d}, c {c})"))?,
         );
         self.runtimes.borrow_mut().insert(key, Rc::clone(&rt));
         Ok(rt)
+    }
+
+    /// Open (and cache) a shard store by root path.
+    pub fn store(&self, root: &Path) -> Result<Rc<ShardStore>> {
+        if let Some(s) = self.stores.borrow().get(root) {
+            return Ok(Rc::clone(s));
+        }
+        let s = Rc::new(ShardStore::open(root)?);
+        self.stores.borrow_mut().insert(root.to_path_buf(), Rc::clone(&s));
+        Ok(s)
     }
 
     /// Dataset bundle, cached per (name); data seed is fixed so every
@@ -106,12 +141,7 @@ impl Lab {
             return Ok(Rc::clone(c));
         }
         let il_rt = self.runtime(&cfg.il_arch, &cfg.dataset)?;
-        let il_cfg = IlTrainConfig {
-            epochs: cfg.il_epochs,
-            lr: cfg.lr,
-            wd: cfg.wd,
-            seed: 0xD5EED ^ 0x11,
-        };
+        let il_cfg = il_train_config(cfg);
         let ctx = if cfg.no_holdout {
             let values = no_holdout_il(&il_rt, &bundle.train, &bundle.val, &il_cfg)?;
             IlContext { values, state: None }
@@ -130,11 +160,11 @@ impl Lab {
     fn pool_for(
         &self,
         arch: &str,
-        dataset: &str,
+        d: usize,
+        c: usize,
         pc: &PoolConfig,
         require_mcd: bool,
     ) -> Result<Rc<ScoringPool>> {
-        let (d, c) = catalog::dims_for(dataset);
         let key = PlaneKey::new(arch, d, c, pc);
         if let Some(p) = self.pools.borrow().get(&key) {
             if require_mcd && !p.has_mcdropout() {
@@ -162,6 +192,12 @@ impl Lab {
     /// arch. Pools come from the [`PlaneKey`]-keyed cache, so planes
     /// with identical keys share workers.
     pub fn planes(&self, cfg: &RunConfig) -> Result<Vec<ComputePlane>> {
+        let (d, c) = catalog::dims_for(&cfg.dataset);
+        self.planes_dims(cfg, d, c)
+    }
+
+    /// [`planes`](Self::planes) for explicit data dims (shard stores).
+    pub fn planes_dims(&self, cfg: &RunConfig, d: usize, c: usize) -> Result<Vec<ComputePlane>> {
         for spec in &cfg.planes {
             if !KNOWN_PLANES.contains(&spec.name.as_str()) {
                 bail!("unknown plane `{}` (known: {KNOWN_PLANES:?})", spec.name);
@@ -175,20 +211,19 @@ impl Lab {
             out.push(ComputePlane::new(
                 PLANE_TARGET,
                 arch,
-                self.pool_for(arch, &cfg.dataset, &pc, false)?,
+                self.pool_for(arch, d, c, &pc, false)?,
             ));
         }
         if let Some(spec) = cfg.plane(PLANE_IL) {
             let arch = spec.arch.as_deref().unwrap_or(&cfg.il_arch);
             let pc = plane_pool_config(cfg, Some(spec));
-            let (d, c) = catalog::dims_for(&cfg.dataset);
             let train_meta = self
                 .manifest
                 .find(arch, d, c, &format!("train_b{}", self.manifest.train_batch))
                 .ok()
                 .cloned();
             let mut plane =
-                ComputePlane::new(PLANE_IL, arch, self.pool_for(arch, &cfg.dataset, &pc, false)?);
+                ComputePlane::new(PLANE_IL, arch, self.pool_for(arch, d, c, &pc, false)?);
             if let Some(meta) = train_meta {
                 plane = plane.with_train_meta(meta);
             }
@@ -200,7 +235,7 @@ impl Lab {
             out.push(ComputePlane::new(
                 PLANE_MCD,
                 arch,
-                self.pool_for(arch, &cfg.dataset, &pc, true)?,
+                self.pool_for(arch, d, c, &pc, true)?,
             ));
         }
         Ok(out)
@@ -226,6 +261,98 @@ impl Lab {
         }
         session = session.planes(planes.iter());
         session.run(bundle, il.as_deref())
+    }
+
+    /// Run `cfg` against whatever data source it declares: the
+    /// in-memory catalog bundle (`source=""`) or a sharded store
+    /// (`source=shards://dir`). The CLI's entry point.
+    pub fn run_auto(&self, cfg: &RunConfig) -> Result<RunResult> {
+        match parse_source(&cfg.source) {
+            None => {
+                let bundle = self.bundle(&cfg.dataset);
+                self.run_one(cfg, &bundle)
+            }
+            Some(root) => self.run_sharded(cfg, root),
+        }
+    }
+
+    /// One training run streaming from an ingested shard store. IL
+    /// values come from the store's `score-il` sidecars — **zero** IL
+    /// forward passes happen here — and the run identity (tag,
+    /// checkpoints) binds to the store's ingested dataset name.
+    pub fn run_sharded(&self, cfg: &RunConfig, root: &Path) -> Result<RunResult> {
+        if cfg.no_holdout {
+            // Sidecars are holdout-trained (`score-il`); silently
+            // serving them for a no-holdout ablation would contaminate
+            // the result. Hard error, like every other silent-drift
+            // hazard on this path.
+            bail!(
+                "no_holdout=true is not supported for shards:// sources — sidecar IL values \
+                 are trained on the holdout split; run the no-holdout ablation on the \
+                 in-memory catalog source"
+            );
+        }
+        let store = self.store(root)?;
+        let mut cfg = cfg.clone();
+        cfg.dataset = store.name.clone();
+        let tb = self.manifest.train_batch;
+        let target = self.runtime_dims(&cfg.arch, store.d, store.classes, tb)?;
+        let needs_il =
+            cfg.method.needs_il() || cfg.method.is_offline_filter() || cfg.online_il;
+        let il = if needs_il { Some(self.store_il_context(&cfg, &store)?) } else { None };
+        let il_rt = if cfg.online_il || cfg.method.is_offline_filter() {
+            Some(self.runtime_dims(&cfg.il_arch, store.d, store.classes, tb)?)
+        } else {
+            None
+        };
+        let planes = self.planes_dims(&cfg, store.d, store.classes)?;
+        if !store.has_split("test") {
+            bail!(
+                "store {root:?} has no test/ split — ingest from a catalog bundle, or add one \
+                 (a train-only CSV store cannot evaluate)"
+            );
+        }
+        let test = store.materialize("test")?;
+        let mut session = Session::new(&cfg, &target);
+        if let Some(rt) = il_rt.as_deref() {
+            session = session.il_runtime(rt);
+        }
+        session = session.planes(planes.iter());
+        session.run_data(&RunData { train: &store.train, test: &test }, il.as_deref())
+    }
+
+    /// IL context for a shard store: the sidecar table `rho score-il`
+    /// persisted (plus the saved IL model state when online IL / SVP
+    /// needs it). Refuses to silently fall back to recomputation —
+    /// amortized IL is the point of the sidecars.
+    fn store_il_context(&self, cfg: &RunConfig, store: &ShardStore) -> Result<Rc<IlContext>> {
+        let key = format!("shards|{}", store.root.display());
+        if let Some(c) = self.il_cache.borrow().get(&key) {
+            return Ok(Rc::clone(c));
+        }
+        let table = store.train.il_table().ok_or_else(|| {
+            anyhow!(
+                "method `{}` needs IL values but store {:?} has no sidecars — run \
+                 `rho score-il data=shards://{}` once; every later run reuses them with \
+                 zero IL forward passes",
+                cfg.method.name(),
+                store.root,
+                store.root.display()
+            )
+        })?;
+        let state = match TrainState::load(&store.il_state_path()) {
+            Ok(st) => Some(st),
+            Err(_) if cfg.online_il || cfg.method.is_offline_filter() => bail!(
+                "`{}` needs the IL model state but {:?} is missing/unreadable — re-run \
+                 `rho score-il` (it writes the state beside the sidecars)",
+                if cfg.online_il { "online_il" } else { cfg.method.name() },
+                store.il_state_path()
+            ),
+            Err(_) => None,
+        };
+        let ctx = Rc::new(IlContext { values: table.to_vec(), state });
+        self.il_cache.borrow_mut().insert(key, Rc::clone(&ctx));
+        Ok(ctx)
     }
 
     /// Same config across seeds; returns one result per seed.

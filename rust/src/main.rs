@@ -2,12 +2,17 @@
 //!
 //! Subcommands:
 //!   rho train [key=value ...]    one training run (see config keys)
+//!   rho ingest <catalog|csv>     write a sharded on-disk store
+//!   rho score-il data=shards://D precompute IL sidecars for a store
 //!   rho exp <id|all> [opts]      regenerate a paper table/figure
 //!   rho artifacts                list loaded artifacts
 //!   rho info                     PJRT platform info
 //!
 //! Examples:
 //!   rho train dataset=clothing1m method=rho_loss epochs=10
+//!   rho ingest clothing1m --shard-rows 4096 --out stores/c1m
+//!   rho score-il data=shards://stores/c1m il_arch=mlp_small
+//!   rho train --data shards://stores/c1m method=rho_loss epochs=10
 //!   rho exp table2 --scale 0.5 --seeds 1,2,3
 
 use anyhow::{anyhow, bail, Result};
@@ -27,6 +32,8 @@ fn real_main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("train") => cmd_train(&args[1..]),
+        Some("ingest") => cmd_ingest(&args[1..]),
+        Some("score-il") => cmd_score_il(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
         Some("exp") => cmd_exp(&args[1..]),
         Some("artifacts") => cmd_artifacts(),
@@ -42,12 +49,14 @@ fn real_main() -> Result<()> {
 fn print_help() {
     println!(
         "rho — RHO-LOSS coordinator (Mindermann et al., ICML 2022)\n\n\
-         usage:\n  rho train [key=value ...] [--checkpoint-every N] [--resume PATH]\n  rho inspect [key=value ...]   score one candidate batch, compare methods\n  rho exp <id|all> [--scale F] [--seeds a,b] [--epoch-scale F]\n  rho artifacts\n  rho info\n\n\
+         usage:\n  rho train [key=value ...] [--data shards://DIR] [--checkpoint-every N] [--resume PATH]\n  rho ingest <catalog-name|file.csv> [--shard-rows N] [--out DIR] [--scale F]\n  rho score-il data=shards://DIR [il_arch=A] [il_epochs=N] [key=value ...]\n  rho inspect [key=value ...]   score one candidate batch, compare methods\n  rho exp <id|all> [--scale F] [--seeds a,b] [--epoch-scale F]\n  rho artifacts\n  rho info\n\n\
          experiments: {}\n\n\
          config keys: dataset arch il_arch method epochs seed nb select_frac lr wd\n\
          eval_every scale track_props no_holdout online_il il_lr_scale\n\
          il_epochs svp_frac workers queue_depth lane_depth rate_alpha prefetch events\n\
          checkpoint_every checkpoint_path resume\n\n\
+         data plane ([data] table): source (shards://DIR) shard_rows window\n\
+         e.g. rho ingest cifar10 --out stores/c10 && rho score-il data=shards://stores/c10 \\\n              && rho train --data shards://stores/c10 method=rho_loss\n\n\
          compute planes ([planes] table): plane.<name>.arch plane.<name>.workers\n\
          plane.<name>.lane_depth plane.<name>.rate_alpha   (names: target il mcd)\n\
          e.g. rho train method=rho_loss online_il=true workers=4 \\\n              plane.il.workers=2 plane.il.arch=mlp_small",
@@ -67,6 +76,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
             "--checkpoint-every" => Some("checkpoint_every"),
             "--checkpoint-path" => Some("checkpoint_path"),
             "--resume" => Some("resume"),
+            "--data" => Some("source"),
             _ => None,
         };
         match flag_key {
@@ -96,10 +106,12 @@ fn cmd_train(args: &[String]) -> Result<()> {
             cfg.checkpoint_file().display()
         );
     }
+    if !cfg.source.is_empty() {
+        println!("streaming train data from {}", cfg.source);
+    }
     let ctx = ExpCtx::new(cfg.scale);
     let lab = experiments::common::Lab::new(&ctx)?;
-    let bundle = lab.bundle(&cfg.dataset);
-    let res = lab.run_one(&cfg, &bundle)?;
+    let res = lab.run_auto(&cfg)?;
     println!(
         "steps={} time={:.1}s final_acc={:.3} best_acc={:.3}",
         res.steps,
@@ -137,6 +149,127 @@ fn cmd_train(args: &[String]) -> Result<()> {
         );
     }
     println!("epochs to 90% of best: {}", fmt_epochs(res.curve.epochs_to(0.9 * res.curve.best_accuracy())));
+    Ok(())
+}
+
+/// `rho ingest <catalog-name|file.csv> [--shard-rows N] [--out DIR]
+/// [--scale F] [--seed S]` — write a sharded on-disk store. Catalog
+/// names ingest the full four-split bundle (built with the fixed
+/// experiment data seed, so the store is bit-identical to what
+/// in-memory runs train on); a `.csv` path ingests an external
+/// train-only table. Needs no XLA artifacts — it is pure data-plane.
+fn cmd_ingest(args: &[String]) -> Result<()> {
+    let what = args.first().ok_or_else(|| {
+        anyhow!("usage: rho ingest <catalog-name|file.csv> [--shard-rows N] [--out DIR] [--scale F]")
+    })?;
+    let mut shard_rows = 4096usize;
+    let mut out: Option<String> = None;
+    let mut scale = 1.0f64;
+    let mut seed = rho::experiments::common::DATA_SEED;
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--shard-rows" => {
+                shard_rows =
+                    args.get(i + 1).ok_or_else(|| anyhow!("--shard-rows needs a value"))?.parse()?;
+                i += 2;
+            }
+            "--out" => {
+                out = Some(args.get(i + 1).ok_or_else(|| anyhow!("--out needs a value"))?.clone());
+                i += 2;
+            }
+            "--scale" => {
+                scale = args.get(i + 1).ok_or_else(|| anyhow!("--scale needs a value"))?.parse()?;
+                i += 2;
+            }
+            "--seed" => {
+                seed = args.get(i + 1).ok_or_else(|| anyhow!("--seed needs a value"))?.parse()?;
+                i += 2;
+            }
+            other => bail!("unknown ingest flag `{other}`"),
+        }
+    }
+    let sw = rho::util::timer::Stopwatch::start();
+    let report = if what.ends_with(".csv") {
+        // --scale/--seed shape catalog *synthesis*; a CSV is external
+        // data, so accepting-and-ignoring them would silently hand the
+        // user the full corpus they asked to subsample.
+        if scale != 1.0 || seed != rho::experiments::common::DATA_SEED {
+            bail!("--scale/--seed apply to catalog ingests only, not CSV files");
+        }
+        let out = out.unwrap_or_else(|| {
+            let stem = std::path::Path::new(what)
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "csv".into());
+            format!("stores/{stem}")
+        });
+        rho::data::store::ingest_csv(std::path::Path::new(what), std::path::Path::new(&out), shard_rows)?
+    } else {
+        let bundle = rho::data::catalog::build(what, seed, scale);
+        let out = out.unwrap_or_else(|| format!("stores/{what}"));
+        rho::data::store::ingest_bundle(&bundle, std::path::Path::new(&out), shard_rows)?
+    };
+    let secs = sw.elapsed_s();
+    let mb = report.total_bytes() as f64 / (1024.0 * 1024.0);
+    println!(
+        "ingested `{}` -> {} (d={}, classes={}, shard_rows={})",
+        report.name,
+        report.root.display(),
+        report.d,
+        report.classes,
+        report.shard_rows
+    );
+    for s in &report.splits {
+        println!("  {:<8} {:>8} rows  {:>3} shards  {:>10} bytes", s.split, s.rows, s.shards, s.bytes);
+    }
+    println!(
+        "total {} rows, {:.1} MiB in {:.2}s ({:.0} MiB/s)",
+        report.total_rows(),
+        mb,
+        secs,
+        if secs > 0.0 { mb / secs } else { 0.0 }
+    );
+    println!("next: rho score-il data=shards://{}", report.root.display());
+    Ok(())
+}
+
+/// `rho score-il data=shards://DIR [key=value ...]` — train the IL
+/// model on the store's holdout split and write one `.il` sidecar per
+/// train shard (plus the IL state at the store root). Run once; every
+/// later `rho train` on the store skips IL compute entirely.
+fn cmd_score_il(args: &[String]) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.apply_pairs(args.iter().map(String::as_str))?;
+    cfg.validate()?;
+    let root = rho::data::store::parse_source(&cfg.source)
+        .ok_or_else(|| anyhow!("score-il needs data=shards://DIR (got `{}`)", cfg.source))?;
+    let ctx = ExpCtx::new(cfg.scale);
+    let lab = rho::experiments::common::Lab::new(&ctx)?;
+    let store = lab.store(root)?;
+    let il_rt = lab.runtime_dims(&cfg.il_arch, store.d, store.classes, lab.manifest.train_batch)?;
+    println!(
+        "scoring IL over `{}` ({} train shards) with `{}`...",
+        store.name,
+        store.train.shards().len(),
+        cfg.il_arch
+    );
+    let sw = rho::util::timer::Stopwatch::start();
+    let report = rho::coordinator::il_model::score_store_il(
+        &store,
+        &il_rt,
+        &rho::experiments::common::il_train_config(&cfg),
+    )?;
+    println!(
+        "wrote {} sidecars ({} rows) in {:.2}s  mean_il={:.4}  il_val_loss={:.4}  il_val_acc={:.3}",
+        report.shards,
+        report.rows,
+        sw.elapsed_s(),
+        report.mean_il,
+        report.best_val_loss,
+        report.val_accuracy
+    );
+    println!("train with: rho train --data shards://{}", root.display());
     Ok(())
 }
 

@@ -63,6 +63,7 @@ use anyhow::{anyhow, bail, Result};
 use xla::Literal;
 
 use crate::config::RunConfig;
+use crate::data::loader::SamplerCursor;
 use crate::data::sharding::{plan_dispatch, ChunkPlan, RateEma};
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::executor::{lit_f32, lit_i32, Executor};
@@ -87,6 +88,11 @@ pub struct CandBatch {
     /// Precomputed IL values for `idx`, gathered producer-side so the
     /// consumer's IL provider is one refcount bump.
     pub il: Option<Arc<Vec<f32>>>,
+    /// Sampler stream position *after* this batch was drawn — the
+    /// consumer serializes it into `SessionCheckpoint` so a resumed
+    /// run re-enters the index stream exactly here (O(1 epoch), no
+    /// full-run replay).
+    pub cursor: SamplerCursor,
 }
 
 impl CandBatch {
@@ -98,7 +104,15 @@ impl CandBatch {
     /// A bare scoring batch with no sampler bookkeeping — the shape
     /// benches and tests feed straight to the pool.
     pub fn for_scoring(xs: Vec<f32>, ys: Vec<i32>) -> Arc<CandBatch> {
-        Arc::new(CandBatch { step: 0, rolled: false, idx: Vec::new(), xs, ys, il: None })
+        Arc::new(CandBatch {
+            step: 0,
+            rolled: false,
+            idx: Vec::new(),
+            xs,
+            ys,
+            il: None,
+            cursor: SamplerCursor::default(),
+        })
     }
 }
 

@@ -315,6 +315,7 @@ mod tests {
             xs: Vec::new(),
             ys: vec![0; idx.len()],
             il: il.map(Arc::new),
+            cursor: Default::default(),
         })
     }
 

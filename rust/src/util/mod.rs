@@ -3,6 +3,7 @@
 //! usual crates are absent).
 
 pub mod csvio;
+pub mod hash;
 pub mod json;
 pub mod math;
 pub mod prop;

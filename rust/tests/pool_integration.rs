@@ -216,6 +216,7 @@ fn pool_rejects_bad_shapes() {
         xs: batch.xs[..100].to_vec(), // not n * d
         ys: batch.ys.clone(),
         il: None,
+        cursor: Default::default(),
     });
     assert!(pool.fwd(&theta_ok, &ragged).is_err(), "bad xs/ys shape accepted");
 }

@@ -1,0 +1,406 @@
+//! Integration: the ShardStore data plane.
+//!
+//! Format-level properties (writer→reader roundtrip over arbitrary
+//! shapes, corruption/version refusal) run everywhere — they are pure
+//! data-plane and need no XLA artifacts. The end-to-end suite
+//! (`ingest → score-il → train` bitwise-parity against the in-memory
+//! twin, checkpoint/resume mid-shard) self-skips when the AOT artifact
+//! manifest is absent, like every other engine integration test.
+
+use std::path::PathBuf;
+
+use rho::config::RunConfig;
+use rho::coordinator::il_model::score_store_il;
+use rho::coordinator::SessionCheckpoint;
+use rho::data::store::{
+    ingest_bundle, DataSource, ShardReader, ShardSet, ShardStore, ShardWriter,
+};
+use rho::data::{Dataset, PointMeta};
+use rho::experiments::common::{il_train_config, Lab};
+use rho::experiments::ExpCtx;
+use rho::selection::Method;
+use rho::util::prop;
+use rho::util::rng::Pcg32;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("rho-store-it-{}-{name}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn rand_ds(n: usize, d: usize, classes: usize, rng: &mut Pcg32) -> Dataset {
+    let mut ds = Dataset::empty(d, classes);
+    let mut x = vec![0.0f32; d];
+    for _ in 0..n {
+        for v in x.iter_mut() {
+            *v = rng.gauss();
+        }
+        let meta = PointMeta {
+            noisy: rng.bernoulli(0.2),
+            low_relevance: rng.bernoulli(0.1),
+            duplicate: rng.bernoulli(0.05),
+            ambiguous: rng.bernoulli(0.05),
+        };
+        ds.push(&x, rng.below(classes) as u32, meta);
+    }
+    ds
+}
+
+// ---------- format properties (no artifacts needed) ------------------
+
+#[test]
+fn writer_reader_roundtrip_prop() {
+    // Arbitrary (n, d, shard_rows) — including ragged final shards and
+    // shard_rows > n — must round-trip every byte: features bitwise,
+    // labels, and all four meta flags.
+    prop::check("shard-roundtrip", 15, |rng| {
+        let n = 1 + rng.below(300);
+        let d = 1 + rng.below(12);
+        let classes = 2 + rng.below(8);
+        let shard_rows = 1 + rng.below(2 * n);
+        let ds = rand_ds(n, d, classes, rng);
+        let dir = tmp(&format!("prop-{n}-{d}-{shard_rows}"));
+        let mut w = ShardWriter::create(&dir.join("train"), d, classes, shard_rows)
+            .map_err(|e| e.to_string())?;
+        w.push_dataset(&ds).map_err(|e| e.to_string())?;
+        let sum = w.finish().map_err(|e| e.to_string())?;
+        if sum.rows as usize != n || sum.shards != n.div_ceil(shard_rows) {
+            return Err(format!("summary {sum:?} for n {n} shard_rows {shard_rows}"));
+        }
+        let set = ShardSet::open(&dir.join("train")).map_err(|e| e.to_string())?;
+        if DataSource::len(&set) != n {
+            return Err("row count drifted".into());
+        }
+        // random gathers + full materialization, bit for bit
+        let idx: Vec<u32> = (0..40).map(|_| rng.below(n) as u32).collect();
+        let (gx, gy) = DataSource::gather(&set, &idx);
+        let (ex, ey) = Dataset::gather(&ds, &idx);
+        if gy != ey || gx.iter().zip(&ex).any(|(a, b)| a.to_bits() != b.to_bits()) {
+            return Err("gather mismatch".into());
+        }
+        for i in 0..n as u32 {
+            if set.point_meta(i) != ds.meta[i as usize] {
+                return Err(format!("meta mismatch at {i}"));
+            }
+        }
+        let back = set.to_dataset();
+        if back.xs != ds.xs || back.ys != ds.ys || back.meta != ds.meta {
+            return Err("materialization mismatch".into());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}
+
+#[test]
+fn corrupted_and_mismatched_shards_refused_prop() {
+    prop::check("shard-refusal", 10, |rng| {
+        let n = 8 + rng.below(100);
+        let d = 1 + rng.below(6);
+        let ds = rand_ds(n, d, 3, rng);
+        let dir = tmp(&format!("bad-{n}-{d}"));
+        let mut w =
+            ShardWriter::create(&dir.join("train"), d, 3, n).map_err(|e| e.to_string())?;
+        w.push_dataset(&ds).map_err(|e| e.to_string())?;
+        w.finish().map_err(|e| e.to_string())?;
+        let path = dir.join("train").join("shard-00000.rsd");
+        let clean = std::fs::read(&path).unwrap();
+        // flip one random payload byte → checksum refusal
+        let mut bad = clean.clone();
+        let pos = 64 + rng.below(bad.len() - 64);
+        bad[pos] ^= 1 << rng.below(8);
+        std::fs::write(&path, &bad).unwrap();
+        match ShardReader::open(&path) {
+            Ok(_) => return Err(format!("corrupted byte {pos} accepted")),
+            Err(e) if e.to_string().contains("checksum") => {}
+            Err(e) => return Err(format!("wrong refusal: {e}")),
+        }
+        // version drift → hard version error
+        let mut bad = clean.clone();
+        bad[8] = bad[8].wrapping_add(1);
+        std::fs::write(&path, &bad).unwrap();
+        match ShardReader::open(&path) {
+            Ok(_) => return Err("version drift accepted".into()),
+            Err(e) if e.to_string().contains("version") => {}
+            Err(e) => return Err(format!("wrong refusal: {e}")),
+        }
+        // truncation → length error
+        std::fs::write(&path, &clean[..clean.len() - 1]).unwrap();
+        if ShardReader::open(&path).is_ok() {
+            return Err("truncated shard accepted".into());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        Ok(())
+    });
+}
+
+// ---------- end-to-end engine parity (needs artifacts) ----------------
+
+fn lab() -> Option<Lab> {
+    let ctx = ExpCtx::new(0.25);
+    if !ctx.artifacts.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Lab::new(&ctx).unwrap())
+}
+
+/// shard_rows is a multiple of the select batch (320) so per-shard IL
+/// scoring chunks exactly like the in-memory whole-set pass — the
+/// sidecar values are bit-identical by construction, not just by
+/// per-row independence.
+const SHARD_ROWS: usize = 640;
+const WINDOW: usize = 960;
+
+fn base_cfg(method: Method) -> RunConfig {
+    RunConfig {
+        dataset: "qmnist".into(),
+        arch: "mlp_small".into(),
+        il_arch: "mlp_small".into(),
+        method,
+        epochs: 2,
+        il_epochs: 4,
+        seed: 1,
+        shard_rows: SHARD_ROWS,
+        window: WINDOW,
+        ..Default::default()
+    }
+}
+
+/// Ingest the lab's qmnist bundle and write IL sidecars, once per
+/// test-process store dir.
+fn prepared_store(lab: &Lab, dir: &PathBuf, cfg: &RunConfig) -> ShardStore {
+    let bundle = lab.bundle(&cfg.dataset);
+    ingest_bundle(&bundle, dir, SHARD_ROWS).unwrap();
+    let store = ShardStore::open(dir).unwrap();
+    let il_rt = lab
+        .runtime_dims(&cfg.il_arch, store.d, store.classes, lab.manifest.train_batch)
+        .unwrap();
+    let report = score_store_il(&store, &il_rt, &il_train_config(cfg)).unwrap();
+    assert_eq!(report.rows, DataSource::len(&store.train));
+    // re-open so the sidecars are loaded as the IL table
+    ShardStore::open(dir).unwrap()
+}
+
+fn assert_curves_bitwise(a: &rho::coordinator::Curve, b: &rho::coordinator::Curve, what: &str) {
+    assert_eq!(a.points.len(), b.points.len(), "{what}: eval schedule drifted");
+    for (x, y) in a.points.iter().zip(&b.points) {
+        assert_eq!(x.step, y.step, "{what}");
+        assert_eq!(
+            x.accuracy.to_bits(),
+            y.accuracy.to_bits(),
+            "{what}: diverged at step {} ({} vs {})",
+            x.step,
+            x.accuracy,
+            y.accuracy
+        );
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{what}: loss at step {}", x.step);
+    }
+}
+
+#[test]
+fn sharded_run_matches_memory_bitwise() {
+    // THE acceptance gate: `rho ingest` → `rho score-il` → a sharded
+    // train run must produce a selection trajectory bitwise-identical
+    // to the equivalent in-memory run at workers=1, for rho_loss,
+    // train_loss, AND uniform — with the rho_loss leg reading IL from
+    // the sidecars: no IL runtime is even constructed for it
+    // (online_il=false, so the engine structurally performs ZERO IL
+    // forward passes during training; IL compute happened once, in
+    // score-il).
+    let Some(lab) = lab() else { return };
+    let dir = tmp("parity");
+    let store_cfg = base_cfg(Method::RhoLoss);
+    let _store = prepared_store(&lab, &dir, &store_cfg);
+    for method in [Method::RhoLoss, Method::TrainLoss, Method::Uniform] {
+        // memory twin: same seed, same two-level sampler layout
+        // (shard_rows/window declared in config)
+        let mem_cfg = base_cfg(method);
+        let bundle = lab.bundle(&mem_cfg.dataset);
+        let memory = lab.run_one(&mem_cfg, &bundle).unwrap();
+
+        let mut sh_cfg = base_cfg(method);
+        sh_cfg.source = format!("shards://{}", dir.display());
+        let sharded = lab.run_auto(&sh_cfg).unwrap();
+
+        assert_curves_bitwise(&memory.curve, &sharded.curve, method.name());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sharded_checkpoint_resume_continues_bitwise_mid_shard() {
+    // Resume a sharded run from (a) a MID-SHARD periodic checkpoint —
+    // step 13 ⇒ 960 rows into the epoch, not a multiple of the
+    // 640-row shards — surviving as `<path>.prev` thanks to
+    // two-generation rotation, and (b) the epoch-boundary final
+    // checkpoint. Both tails must equal the uninterrupted sharded
+    // reference bitwise.
+    let Some(lab) = lab() else { return };
+    let dir = tmp("resume");
+    let store_cfg = base_cfg(Method::RhoLoss);
+    let _store = prepared_store(&lab, &dir, &store_cfg);
+    let source = format!("shards://{}", dir.display());
+
+    let mut full = base_cfg(Method::RhoLoss);
+    full.source = source.clone();
+    full.epochs = 4;
+    let reference = lab.run_auto(&full).unwrap();
+    let spe = reference.curve.points[0].step; // eval once per epoch
+
+    let ckpt_dir = tmp("resume-ckpt");
+    let ckpt = ckpt_dir.join("leg.ckpt");
+    let mut first = base_cfg(Method::RhoLoss);
+    first.source = source.clone();
+    first.epochs = 2;
+    first.checkpoint_every = 13;
+    first.checkpoint_path = ckpt.to_string_lossy().into_owned();
+    lab.run_auto(&first).unwrap();
+
+    let final_ckpt = SessionCheckpoint::load(&ckpt).unwrap();
+    assert_eq!(final_ckpt.step, spe * 2, "final checkpoint at the leg's last step");
+    let prev = SessionCheckpoint::prev_path(&ckpt);
+    let mid = SessionCheckpoint::load(&prev).unwrap();
+    assert_eq!(mid.step, 13, "periodic checkpoint survived rotation");
+    assert!(mid.sampler.pos % SHARD_ROWS as u64 != 0, "cursor sits mid-shard");
+
+    for (what, path, from_step) in
+        [("mid-shard", &prev, 13u64), ("epoch-boundary", &ckpt, spe * 2)]
+    {
+        let mut res = full.clone();
+        res.resume = path.to_string_lossy().into_owned();
+        let resumed = lab.run_auto(&res).unwrap();
+        let tail: Vec<_> = reference
+            .curve
+            .points
+            .iter()
+            .filter(|p| p.step > from_step)
+            .copied()
+            .collect();
+        assert_eq!(tail.len(), resumed.curve.points.len(), "{what}: eval count");
+        for (a, b) in tail.iter().zip(&resumed.curve.points) {
+            assert_eq!(a.step, b.step, "{what}");
+            assert_eq!(
+                a.accuracy.to_bits(),
+                b.accuracy.to_bits(),
+                "{what}: resume diverged at step {}",
+                a.step
+            );
+        }
+    }
+
+    // Sampler/data drift must be a hard error, never a silently
+    // diverging stream: a changed window...
+    let mut bad = full.clone();
+    bad.resume = ckpt.to_string_lossy().into_owned();
+    bad.window = WINDOW + 64;
+    let err = lab.run_auto(&bad).unwrap_err().to_string();
+    assert!(err.contains("window"), "{err}");
+    // ...a changed layout (memory source, different shard_rows)...
+    let mut bad = base_cfg(Method::RhoLoss);
+    bad.epochs = 4;
+    bad.shard_rows = 320;
+    bad.resume = ckpt.to_string_lossy().into_owned();
+    let bundle = lab.bundle(&bad.dataset);
+    let err = lab.run_one(&bad, &bundle).unwrap_err().to_string();
+    assert!(err.contains("diverge"), "{err}");
+    // ...and a memory<->shards swap, even with the IDENTICAL layout:
+    // data identity is content-bearing for shard sources (per-shard
+    // checksums), so cross-source resume is refused rather than
+    // trusted on shape alone.
+    let mut twin = base_cfg(Method::RhoLoss);
+    twin.epochs = 4;
+    twin.resume = ckpt.to_string_lossy().into_owned();
+    let err = lab.run_one(&twin, &bundle).unwrap_err().to_string();
+    assert!(err.contains("diverge"), "{err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&ckpt_dir).ok();
+}
+
+
+#[test]
+fn sidecar_store_refuses_training_without_score_il() {
+    // An IL-needing method on a store with no sidecars must point the
+    // operator at `rho score-il`, not silently recompute.
+    let Some(lab) = lab() else { return };
+    let dir = tmp("noscore");
+    let cfg0 = base_cfg(Method::RhoLoss);
+    let bundle = lab.bundle(&cfg0.dataset);
+    ingest_bundle(&bundle, &dir, SHARD_ROWS).unwrap();
+    let mut cfg = base_cfg(Method::RhoLoss);
+    cfg.source = format!("shards://{}", dir.display());
+    let err = lab.run_auto(&cfg).unwrap_err().to_string();
+    assert!(err.contains("score-il"), "{err}");
+    // uniform needs no IL — the same store trains fine
+    let mut uni = base_cfg(Method::Uniform);
+    uni.source = format!("shards://{}", dir.display());
+    uni.epochs = 1;
+    let res = lab.run_auto(&uni).unwrap();
+    assert!(res.curve.final_accuracy() > 0.05);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_summary_reports_source_kind_and_bytes() {
+    // run_summary lands in the event log with kind=shards + resident
+    // bytes; the memory twin reports kind=memory with the dense bytes.
+    let Some(lab) = lab() else { return };
+    let dir = tmp("events");
+    let cfg0 = base_cfg(Method::Uniform);
+    let bundle = lab.bundle(&cfg0.dataset);
+    ingest_bundle(&bundle, &dir, SHARD_ROWS).unwrap();
+    let ev_dir = tmp("events-logs");
+    std::fs::create_dir_all(&ev_dir).unwrap();
+
+    let mut sh = base_cfg(Method::Uniform);
+    sh.epochs = 1;
+    sh.source = format!("shards://{}", dir.display());
+    sh.events = ev_dir.join("sh.jsonl").to_string_lossy().into_owned();
+    lab.run_auto(&sh).unwrap();
+    let text = std::fs::read_to_string(ev_dir.join("sh.jsonl")).unwrap();
+    let summary = text
+        .lines()
+        .map(|l| rho::util::json::parse(l).unwrap())
+        .find(|v| v.get("kind").and_then(|k| k.as_str()) == Some("run_summary"))
+        .expect("run_summary emitted");
+    assert_eq!(summary.get("source").unwrap().as_str(), Some("shards"));
+
+    let mut mem = base_cfg(Method::Uniform);
+    mem.epochs = 1;
+    mem.events = ev_dir.join("mem.jsonl").to_string_lossy().into_owned();
+    lab.run_one(&mem, &bundle).unwrap();
+    let text = std::fs::read_to_string(ev_dir.join("mem.jsonl")).unwrap();
+    let summary = text
+        .lines()
+        .map(|l| rho::util::json::parse(l).unwrap())
+        .find(|v| v.get("kind").and_then(|k| k.as_str()) == Some("run_summary"))
+        .expect("run_summary emitted");
+    assert_eq!(summary.get("source").unwrap().as_str(), Some("memory"));
+    let bytes = summary.get("resident_bytes").unwrap().as_f64().unwrap();
+    assert_eq!(bytes, bundle.train.nbytes() as f64, "memory source reports dense bytes");
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&ev_dir).ok();
+}
+
+#[test]
+fn sharded_pooled_run_matches_sharded_inline() {
+    // The data plane composes with the compute planes: a one-worker
+    // target plane over a sharded source reproduces the inline sharded
+    // curve bitwise (same contract the in-memory engine upholds).
+    let Some(lab) = lab() else { return };
+    let dir = tmp("pooled");
+    let store_cfg = base_cfg(Method::RhoLoss);
+    let _store = prepared_store(&lab, &dir, &store_cfg);
+    let mut inline_cfg = base_cfg(Method::RhoLoss);
+    inline_cfg.source = format!("shards://{}", dir.display());
+    let inline = lab.run_auto(&inline_cfg).unwrap();
+    let mut pooled_cfg = inline_cfg.clone();
+    pooled_cfg.workers = 1;
+    let pooled = lab.run_auto(&pooled_cfg).unwrap();
+    assert_curves_bitwise(&inline.curve, &pooled.curve, "sharded pooled vs inline");
+    assert_eq!(pooled.plane_timings.len(), 1);
+    assert!(pooled.plane_timings[0].chunks > 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
