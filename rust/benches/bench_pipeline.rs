@@ -38,16 +38,40 @@ fn write_doc(doc: Value) {
     }
 }
 
+/// The cross-plane overlap record for the two-plane `rho_loss` +
+/// `online_il` run: wall seconds each plane had work in flight, wall
+/// seconds they overlapped, and the per-step overlap headline. Always
+/// present in BENCH_pipeline.json (zeroed when skipped) so tooling can
+/// rely on the schema.
+fn overlap_doc(
+    target_inflight_s: f64,
+    il_inflight_s: f64,
+    overlap_s: f64,
+    per_step_s: f64,
+    steps: u64,
+) -> Value {
+    obj(vec![
+        ("target_inflight_s", num(target_inflight_s)),
+        ("il_inflight_s", num(il_inflight_s)),
+        ("overlap_s", num(overlap_s)),
+        ("per_step_s", num(per_step_s)),
+        ("steps", num(steps as f64)),
+    ])
+}
+
 fn main() {
     let smoke = std::env::var("RHO_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
     println!("== bench_pipeline{} ==", if smoke { " (smoke)" } else { "" });
     let ctx = ExpCtx::new(if smoke { 0.05 } else { 0.25 });
     if !ctx.artifacts.join("manifest.json").exists() {
         println!("(artifacts missing: run `make artifacts`)");
+        // The skipped record still carries the overlap schema so CI
+        // can assert the fields exist even on artifact-less runners.
         write_doc(obj(vec![
             ("bench", s("pipeline")),
             ("skipped", Value::Bool(true)),
             ("reason", s("artifact manifest missing")),
+            ("overlap", overlap_doc(0.0, 0.0, 0.0, 0.0, 0)),
         ]));
         return;
     }
@@ -124,11 +148,78 @@ fn main() {
                 ("chunks", num(t.chunks as f64)),
                 ("mean_queue_wait_us", num(t.mean_queue_wait_us)),
                 ("mean_busy_us", num(t.mean_busy_us)),
+                ("inflight_s", num(t.inflight_s)),
+                ("overlap_s", num(t.overlap_s)),
                 ("worker_chunks", arr(t.worker_chunks.iter().map(|&ch| num(ch as f64)))),
                 ("worker_rates", arr(t.worker_rates.iter().map(|&r| num(r)))),
             ]));
         }
     }
+
+    // --- cross-plane overlap: rho_loss + online_il -------------------
+    // The §3 economics lever the two-phase dispatch API opens: with
+    // track_props on, the stack is [OnlineIl(il plane), FwdStats
+    // (target plane)] and BOTH fwds submit before either resolves, so
+    // the cheap IL fwd is in flight concurrently with the expensive
+    // target fwd for the same batch (the fused-RHO variant serializes
+    // on its il-signal data dependency; `select` falls back to
+    // loss − il here). The per-step overlap metric below is the
+    // acceptance headline: >0 means the target-plane and il-plane
+    // forwards genuinely ran concurrently.
+    let overlap = {
+        let mut cfg = base.clone();
+        cfg.method = Method::RhoLoss;
+        cfg.online_il = true;
+        cfg.track_props = true;
+        let il = lab.il_context(&cfg, &bundle).unwrap();
+        let il_rt = lab.runtime(&cfg.il_arch, &cfg.dataset).unwrap();
+        let workers = if smoke { 1 } else { 2 };
+        let pc = PoolConfig { workers, lane_depth: 16, ..PoolConfig::default() };
+        let t_pool = ScoringPool::new(fwd, sel, None, &pc).unwrap();
+        let target_plane = ComputePlane::new("target", base.arch.clone(), Rc::new(t_pool));
+        let ifwd = lab.manifest.find(&cfg.il_arch, d, c, "fwd_b320").unwrap();
+        let isel = lab.manifest.find(&cfg.il_arch, d, c, "select_b320").unwrap();
+        let i_pool = ScoringPool::new(ifwd, isel, None, &pc).unwrap();
+        let il_plane = ComputePlane::new("il", cfg.il_arch.clone(), Rc::new(i_pool));
+        let res = Session::new(&cfg, &target)
+            .il_runtime(&il_rt)
+            .plane(&target_plane)
+            .plane(&il_plane)
+            .prefetch(4)
+            .run(&bundle, Some(&il))
+            .unwrap();
+        let sps = res.steps_per_sec();
+        let by_plane = |name: &str| {
+            res.plane_timings.iter().find(|t| t.plane == name).cloned().unwrap_or_default()
+        };
+        let (tp, ip) = (by_plane("target"), by_plane("il"));
+        println!(
+            "rho_loss+online_il 2-plane: {sps:>7.1} steps/s, overlap {:.2}ms/step \
+             (target in-flight {:.2}s ∥ il in-flight {:.2}s over {} steps)",
+            res.overlap_s_per_step() * 1e3,
+            tp.inflight_s,
+            ip.inflight_s,
+            res.steps
+        );
+        entries.push(obj(vec![
+            ("method", s("rho_loss")),
+            ("online_il", Value::Bool(true)),
+            ("source", s("memory")),
+            ("workers", num(workers as f64)),
+            ("steps_per_sec", num(sps)),
+            ("plane", s("target+il")),
+            ("inflight_s", num(tp.inflight_s + ip.inflight_s)),
+            ("overlap_s", num(res.cross_plane_overlap_s())),
+            ("overlap_s_per_step", num(res.overlap_s_per_step())),
+        ]));
+        overlap_doc(
+            tp.inflight_s,
+            ip.inflight_s,
+            res.cross_plane_overlap_s(),
+            res.overlap_s_per_step(),
+            res.steps,
+        )
+    };
 
     // --- source=shards axis: the on-disk data plane ------------------
     // Ingest the bundle once (measuring bytes/sec), write IL sidecars
@@ -209,6 +300,7 @@ fn main() {
         ("uniform_over_rho_sync", num(uni_sps / rho_sps)),
         ("ingest_bytes_per_sec", num(ingest_bps)),
         ("ingest_rows", num(report.total_rows() as f64)),
+        ("overlap", overlap),
         ("entries", Value::Array(entries)),
     ]));
 }

@@ -41,7 +41,17 @@
 //! plane's updater thread ([`IlUpdater`]), overlapped with the target
 //! gradient step and the next batch's scoring dispatch, synchronized
 //! (FIFO) before the next IL score so the trajectory stays
-//! bitwise-identical to inline updating.
+//! bitwise-identical to inline updating. Within a step, the provider
+//! stack executes the overlapped phase plan
+//! ([`provider::run_step`](crate::selection::provider::run_step)):
+//! every pool-backed provider *submits* its two-phase dispatch before
+//! any *resolves*, so the target plane's fwd and the il plane's fwd
+//! for the same candidate batch are in flight concurrently — a
+//! two-plane step pays max(plane latencies), not their sum — with the
+//! one data dependency (fused RHO consumes the IL signal) honored by
+//! resolving IL sources before the fused submit. Per-plane
+//! in-flight/overlap wall-clock lands in the `pool_stats` events and
+//! [`RunResult::plane_timings`](super::session::RunResult).
 //!
 //! Checkpoint/resume: with `checkpoint_every > 0` the engine
 //! atomically writes a [`SessionCheckpoint`] — target (+ online-IL)
@@ -72,7 +82,6 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::PathBuf;
-use std::rc::Rc;
 use std::sync::mpsc::sync_channel;
 use std::sync::Arc;
 
@@ -409,12 +418,7 @@ impl<'a> Engine<'a> {
         // runs, so subtract a run-start snapshot from the cumulative
         // counters. Planes sharing one pool (same PlaneKey) are
         // reported once, under the first name that registered it.
-        let mut plane_list: Vec<&ComputePlane> = Vec::new();
-        for p in self.planes.iter() {
-            if !plane_list.iter().any(|q| Rc::ptr_eq(&q.pool, &p.pool)) {
-                plane_list.push(p);
-            }
-        }
+        let plane_list: Vec<&ComputePlane> = self.planes.unique_planes();
         let pool_start: Vec<PoolReport> = plane_list.iter().map(|p| p.pool.report()).collect();
         let ckpt_path: Option<PathBuf> = if self.checkpoint_every > 0 {
             Some(self.checkpoint_path.clone().unwrap_or_else(|| cfg.checkpoint_file()))
@@ -517,10 +521,13 @@ impl<'a> Engine<'a> {
                         mcd_seed = mcd_seed.wrapping_add(1);
                     }
 
-                    // scoring signals via the provider stack; for an
-                    // async IL driver this is the FIFO sync point —
-                    // every queued IL update has been applied before
-                    // the snapshot returns
+                    // scoring signals via the provider stack's
+                    // overlapped phase plan (submit every pool-backed
+                    // provider before resolving any — see
+                    // provider::run_step); for an async IL driver the
+                    // theta snapshot is the FIFO sync point — every
+                    // queued IL update has been applied before it
+                    // returns
                     let il_theta_step: Option<Arc<Vec<f32>>> = match &il_driver {
                         IlDriver::Inline(st) => Some(st.theta_snapshot()),
                         IlDriver::Async(u) => Some(u.theta()?),
@@ -534,10 +541,7 @@ impl<'a> Engine<'a> {
                             batch: &b,
                             mcd_seed,
                         };
-                        for p in providers.iter_mut() {
-                            p.provide(&ctx, &mut sig)
-                                .with_context(|| format!("signal provider `{}`", p.name()))?;
-                        }
+                        provider::run_step(&mut providers, &ctx, &mut sig)?;
                     }
                     let sel = select(method, &sig.candidates(b.n()), cfg.nb, &mut rng);
 

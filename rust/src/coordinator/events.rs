@@ -130,6 +130,8 @@ impl EventLog {
                 ("chunks", num(t.chunks as f64)),
                 ("mean_queue_wait_us", num(t.mean_queue_wait_us)),
                 ("mean_busy_us", num(t.mean_busy_us)),
+                ("inflight_s", num(t.inflight_s)),
+                ("overlap_s", num(t.overlap_s)),
                 ("imbalance", num(t.imbalance())),
                 ("worker_chunks", arr(t.worker_chunks.iter().map(|&c| num(c as f64)))),
                 ("worker_rates", arr(t.worker_rates.iter().map(|&r| num(r)))),
@@ -226,6 +228,8 @@ mod tests {
             chunks: 12,
             mean_queue_wait_us: 42.0,
             mean_busy_us: 1200.0,
+            inflight_s: 1.5,
+            overlap_s: 0.75,
             worker_chunks: vec![9, 3],
             worker_rates: vec![3.0, 1.0],
         };
@@ -240,6 +244,8 @@ mod tests {
         assert_eq!(v.get("chunks").unwrap().as_f64(), Some(12.0));
         assert_eq!(v.get("worker_chunks").unwrap().as_array().unwrap().len(), 2);
         assert_eq!(v.get("worker_rates").unwrap().as_array().unwrap()[0].as_f64(), Some(3.0));
+        assert_eq!(v.get("inflight_s").unwrap().as_f64(), Some(1.5));
+        assert_eq!(v.get("overlap_s").unwrap().as_f64(), Some(0.75));
         assert!(v.get("imbalance").unwrap().as_f64().unwrap() > 1.0);
         let v2 = json::parse(text.lines().nth(1).unwrap()).unwrap();
         assert_eq!(v2.get("plane").unwrap().as_str(), Some("il"));

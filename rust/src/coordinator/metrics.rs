@@ -27,6 +27,13 @@ pub struct DispatchTimings {
     pub mean_queue_wait_us: f64,
     /// Mean per-chunk worker execution time.
     pub mean_busy_us: f64,
+    /// Wall seconds this plane had at least one dispatch in flight
+    /// (two-phase submit → wait).
+    pub inflight_s: f64,
+    /// Wall seconds this plane was in flight concurrently with
+    /// another plane — the cross-plane overlap the two-phase dispatch
+    /// API buys (0 for serialized/single-plane runs).
+    pub overlap_s: f64,
     /// Chunks processed per worker.
     pub worker_chunks: Vec<u64>,
     /// Point-in-time EMA service-rate estimates (chunks/sec).
@@ -42,6 +49,8 @@ impl DispatchTimings {
             chunks: r.chunks,
             mean_queue_wait_us: r.queue_wait_s * per_chunk,
             mean_busy_us: r.busy_s * per_chunk,
+            inflight_s: r.inflight_s,
+            overlap_s: r.overlap_s,
             worker_chunks: r.per_worker.iter().map(|w| w.chunks).collect(),
             worker_rates: r.per_worker.iter().map(|w| w.rate).collect(),
         }
@@ -63,6 +72,12 @@ impl DispatchTimings {
             out.chunks += t.chunks;
             wait_us_total += t.mean_queue_wait_us * t.chunks as f64;
             busy_us_total += t.mean_busy_us * t.chunks as f64;
+            // wall-clock sums over planes: in-flight seconds can
+            // exceed the run's wall time when planes overlap (that is
+            // the point); overlap counts each shared second once per
+            // participating plane
+            out.inflight_s += t.inflight_s;
+            out.overlap_s += t.overlap_s;
             out.worker_chunks.extend_from_slice(&t.worker_chunks);
             out.worker_rates.extend_from_slice(&t.worker_rates);
         }
@@ -92,12 +107,15 @@ impl DispatchTimings {
     /// One-line run-report rendering.
     pub fn summary(&self) -> String {
         format!(
-            "plane `{}`: {} dispatches, {} chunks, queue-wait {:.0}us/chunk, busy {:.0}us/chunk, loads {:?} (imbalance {:.2}x)",
+            "plane `{}`: {} dispatches, {} chunks, queue-wait {:.0}us/chunk, busy {:.0}us/chunk, \
+             in-flight {:.2}s (cross-plane overlap {:.2}s), loads {:?} (imbalance {:.2}x)",
             self.plane,
             self.dispatches,
             self.chunks,
             self.mean_queue_wait_us,
             self.mean_busy_us,
+            self.inflight_s,
+            self.overlap_s,
             self.worker_chunks,
             self.imbalance()
         )
@@ -260,6 +278,8 @@ mod tests {
             chunks: 10,
             queue_wait_s: 0.001, // 100us per chunk
             busy_s: 0.01,        // 1000us per chunk
+            inflight_s: 0.5,
+            overlap_s: 0.25,
             per_worker: vec![
                 WorkerStat { chunks: 8, busy_s: 0.008, rate: 4.0 },
                 WorkerStat { chunks: 2, busy_s: 0.002, rate: 1.0 },
@@ -270,11 +290,13 @@ mod tests {
         assert_eq!((t.dispatches, t.chunks), (4, 10));
         assert!((t.mean_queue_wait_us - 100.0).abs() < 1e-6);
         assert!((t.mean_busy_us - 1000.0).abs() < 1e-6);
+        assert_eq!((t.inflight_s, t.overlap_s), (0.5, 0.25));
         assert_eq!(t.worker_chunks, vec![8, 2]);
         // 8 of 10 chunks on one of two workers: max/mean = 8/5
         assert!((t.imbalance() - 1.6).abs() < 1e-9);
         assert!(t.summary().contains("10 chunks"));
         assert!(t.summary().contains("`target`"));
+        assert!(t.summary().contains("overlap 0.25s"), "{}", t.summary());
         // empty report is balanced by definition
         assert_eq!(DispatchTimings::default().imbalance(), 1.0);
     }
@@ -287,6 +309,8 @@ mod tests {
             chunks: 30,
             mean_queue_wait_us: 100.0,
             mean_busy_us: 1000.0,
+            inflight_s: 2.0,
+            overlap_s: 0.5,
             worker_chunks: vec![20, 10],
             worker_rates: vec![2.0, 1.0],
         };
@@ -296,12 +320,17 @@ mod tests {
             chunks: 10,
             mean_queue_wait_us: 500.0,
             mean_busy_us: 200.0,
+            inflight_s: 1.0,
+            overlap_s: 0.5,
             worker_chunks: vec![10],
             worker_rates: vec![5.0],
         };
         let all = DispatchTimings::aggregate([&target, &il]);
         assert_eq!(all.plane, "all");
         assert_eq!((all.dispatches, all.chunks), (8, 40));
+        // wall-clock fields sum across planes
+        assert!((all.inflight_s - 3.0).abs() < 1e-12);
+        assert!((all.overlap_s - 1.0).abs() < 1e-12);
         // chunk-weighted means: (100*30 + 500*10)/40, (1000*30 + 200*10)/40
         assert!((all.mean_queue_wait_us - 200.0).abs() < 1e-9);
         assert!((all.mean_busy_us - 800.0).abs() < 1e-9);

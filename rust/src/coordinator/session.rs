@@ -74,6 +74,21 @@ impl RunResult {
     pub fn steps_per_sec(&self) -> f64 {
         if self.train_secs > 0.0 { self.steps as f64 / self.train_secs } else { 0.0 }
     }
+
+    /// Wall seconds the busiest plane spent with a dispatch in flight
+    /// concurrently with another plane — the cross-plane overlap the
+    /// two-phase (submit/wait) dispatch buys. 0.0 for inline,
+    /// single-plane, or fully serialized runs.
+    pub fn cross_plane_overlap_s(&self) -> f64 {
+        self.plane_timings.iter().map(|t| t.overlap_s).fold(0.0, f64::max)
+    }
+
+    /// [`cross_plane_overlap_s`](Self::cross_plane_overlap_s) averaged
+    /// over the run's engine steps — the per-step overlap headline
+    /// `bench_pipeline` reports.
+    pub fn overlap_s_per_step(&self) -> f64 {
+        if self.steps > 0 { self.cross_plane_overlap_s() / self.steps as f64 } else { 0.0 }
+    }
 }
 
 /// Builder for one training run over named compute planes.

@@ -120,11 +120,23 @@ impl RateEma {
     }
 
     /// Overwrite the estimates wholesale (ops/test hook: inject a
-    /// hostile or known-skewed rate vector).
-    pub fn set(&mut self, rates: &[f64]) {
-        let k = self.rates.len();
+    /// hostile or known-skewed rate vector). The vector must name
+    /// every worker: this used to zero-pad a short vector, and
+    /// [`proportional_shards`] reads a zero rate as "no throughput",
+    /// so a hook typo silently starved the real lanes it omitted. A
+    /// length mismatch in either direction is now a hard error.
+    pub fn set(&mut self, rates: &[f64]) -> Result<(), String> {
+        if rates.len() != self.rates.len() {
+            return Err(format!(
+                "rate vector names {} workers but the pool has {} — refusing to pad/truncate \
+                 (zero-padded workers look dead to plan_dispatch and starve real lanes)",
+                rates.len(),
+                self.rates.len()
+            ));
+        }
         self.rates.clear();
-        self.rates.extend(rates.iter().copied().chain(std::iter::repeat(0.0)).take(k));
+        self.rates.extend_from_slice(rates);
+        Ok(())
     }
 }
 
@@ -331,8 +343,21 @@ mod tests {
         assert_eq!(ema.rates(), &[10.0, 0.0, 0.0]);
         ema.observe(&[20.0, 4.0, f64::INFINITY]);
         assert_eq!(ema.rates(), &[15.0, 4.0, 0.0]);
-        ema.set(&[1.0, 2.0]); // short vector pads with zeros
-        assert_eq!(ema.rates(), &[1.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn rate_ema_set_rejects_length_mismatch() {
+        let mut ema = RateEma::new(3, 0.5);
+        // a short injected vector must NOT silently zero-pad (padded
+        // workers would look dead to plan_dispatch and starve)
+        let err = ema.set(&[1.0, 2.0]).expect_err("short vector accepted");
+        assert!(err.contains("2 workers") && err.contains("3"), "unhelpful error: {err}");
+        assert_eq!(ema.rates(), &[0.0, 0.0, 0.0], "failed set must not mutate");
+        // a long vector must not silently truncate either
+        assert!(ema.set(&[1.0, 2.0, 3.0, 4.0]).is_err());
+        // exact length overwrites wholesale
+        ema.set(&[1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(ema.rates(), &[1.0, 2.0, 3.0]);
     }
 
     fn hostile_rates(rng: &mut crate::util::rng::Pcg32, k: usize) -> Vec<f64> {

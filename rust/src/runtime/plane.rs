@@ -132,6 +132,20 @@ impl<'a> PlaneSet<'a> {
         self.planes.iter().take(self.len).flatten().copied()
     }
 
+    /// The registered planes deduplicated by shared pool (planes with
+    /// the same `PlaneKey` share one `Rc<ScoringPool>`): per-run
+    /// reporting counts each pool once, under the first name that
+    /// registered it.
+    pub fn unique_planes(&self) -> Vec<&'a ComputePlane> {
+        let mut out: Vec<&'a ComputePlane> = Vec::new();
+        for p in self.iter() {
+            if !out.iter().any(|q| Rc::ptr_eq(&q.pool, &p.pool)) {
+                out.push(p);
+            }
+        }
+        out
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }

@@ -9,6 +9,29 @@
 //! stats (`mcdropout`, App. G methods) when an mcdropout artifact is
 //! attached at construction.
 //!
+//! ## Two-phase dispatch (submit / wait)
+//!
+//! Every scoring entry point is split in two: `submit_*` plans the
+//! chunk dispatch, enqueues it, and returns a [`PendingScores`]
+//! ticket; [`PendingScores::wait_fwd`] (/`wait_rho`/`wait_mcd`)
+//! drains and assembles the result. The classic one-shot calls
+//! (`fwd`/`rho`/`mcdropout`) are submit+wait back-to-back.
+//!
+//! All of a pool's responses funnel through one shared channel, so
+//! every dispatch is stamped with a monotonically increasing
+//! **sequence id** carried by each `Window`/`Response`: with several
+//! tickets outstanding on one pool, a wait that receives a response
+//! for a *different* ticket buffers it by sequence id instead of
+//! misrouting it. Dropping a ticket without waiting drains its full
+//! dispatch on `Drop` (folding timings into the pool stats, payloads
+//! discarded) — an abandoned call can never leave stale responses to
+//! poison the next one, the same invariant the old synchronous
+//! `collect` guaranteed by construction. Overlap across pools (the
+//! `target` plane's fwd in flight concurrently with the `il` plane's
+//! fwd) is what the engine's provider phase plan buys from this API;
+//! per-pool in-flight/overlap wall-clock is accounted by a
+//! process-wide ledger and surfaces in [`PoolReport`].
+//!
 //! ## Zero-copy dispatch
 //!
 //! A request is a *window*: an [`Arc<CandBatch>`] refcount bump (the
@@ -36,6 +59,9 @@
 //! chunks between lanes, never resizes them — which is what pins
 //! rate-aware scores bitwise to uniform dispatch (property-tested in
 //! `data::sharding`, artifact-tested in `tests/pool_integration.rs`).
+//! The same argument extends to overlapped dispatch: interleaving
+//! changes only *when* a window executes, never which rows it covers,
+//! so overlapped scores are bitwise-identical to serialized ones.
 //!
 //! ## Pools as compute planes
 //!
@@ -53,6 +79,8 @@
 //! PJRT client + executables, created inside the worker thread; plain
 //! data crosses the thread boundary, never XLA handles.
 
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -170,8 +198,12 @@ enum ReqKind<'a> {
     Mcd(i32),
 }
 
-/// Routing + timing envelope shared by every request variant.
+/// Routing + timing envelope shared by every request variant. `seq`
+/// is the dispatch sequence id: with several tickets outstanding on
+/// one pool, it is the only thing that routes a response back to the
+/// dispatch that asked for it.
 struct Window {
+    seq: u64,
     chunk: usize,
     start: usize,
     take: usize,
@@ -199,6 +231,8 @@ enum Payload {
 }
 
 struct Response {
+    /// Sequence id of the dispatch this chunk belongs to.
+    seq: u64,
     chunk: usize,
     take: usize,
     worker: usize,
@@ -227,6 +261,18 @@ pub struct PoolReport {
     pub queue_wait_s: f64,
     /// Summed worker execution time.
     pub busy_s: f64,
+    /// Wall seconds this pool had at least one dispatch in flight
+    /// (submit-start → wait-complete, enqueue backpressure included).
+    pub inflight_s: f64,
+    /// Wall seconds this pool was in flight while at least one *other*
+    /// pool also was — the cross-plane overlap the two-phase API buys.
+    /// The ledger is process-wide: pools driven concurrently from
+    /// unrelated threads/sessions of one process count toward each
+    /// other's overlap (a deliberate tradeoff — pools are cached
+    /// across runs, so attribution to one run is ambiguous; within the
+    /// engine's single-threaded loop the number reads exactly as
+    /// "this plane ∥ another plane of this step").
+    pub overlap_s: f64,
     pub per_worker: Vec<WorkerStat>,
 }
 
@@ -241,6 +287,8 @@ impl PoolReport {
             chunks: self.chunks.saturating_sub(earlier.chunks),
             queue_wait_s: (self.queue_wait_s - earlier.queue_wait_s).max(0.0),
             busy_s: (self.busy_s - earlier.busy_s).max(0.0),
+            inflight_s: (self.inflight_s - earlier.inflight_s).max(0.0),
+            overlap_s: (self.overlap_s - earlier.overlap_s).max(0.0),
             per_worker: self
                 .per_worker
                 .iter()
@@ -258,6 +306,118 @@ impl PoolReport {
     }
 }
 
+/// Process-wide in-flight/overlap ledger. Each pool reports dispatch
+/// begin/end transitions; a segment sweep attributes the wall-clock
+/// between consecutive transitions to every pool that was in flight
+/// during it (`inflight_s`), and additionally to those that shared the
+/// segment with another in-flight pool (`overlap_s` — the cross-plane
+/// concurrency metric). Global by design: "two planes in flight at
+/// once" is inherently a cross-pool fact, and pools are cached across
+/// runs, so per-run numbers subtract a run-start [`PoolReport`]
+/// snapshot like every other cumulative counter. Corollary: pools
+/// driven concurrently from unrelated threads of the same process
+/// (e.g. a parallel test harness) count toward each other's
+/// `overlap_s` — treat the metric as per-process concurrency, exact
+/// for the engine's single-threaded consumer loop.
+mod ledger {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    use std::time::Instant;
+
+    #[derive(Clone, Copy, Default)]
+    pub struct Overlap {
+        pub inflight_s: f64,
+        pub overlap_s: f64,
+    }
+
+    #[derive(Default)]
+    struct Entry {
+        open: usize,
+        acc: Overlap,
+    }
+
+    struct State {
+        epoch: Instant,
+        last: f64,
+        total_open: usize,
+        pools: HashMap<usize, Entry>,
+    }
+
+    fn state() -> &'static Mutex<State> {
+        static LEDGER: OnceLock<Mutex<State>> = OnceLock::new();
+        LEDGER.get_or_init(|| {
+            Mutex::new(State {
+                epoch: Instant::now(),
+                last: 0.0,
+                total_open: 0,
+                pools: HashMap::new(),
+            })
+        })
+    }
+
+    /// Close the segment `[last, now)`: every in-flight pool accrues
+    /// it as in-flight time; pools sharing it with another in-flight
+    /// pool accrue it as overlap too.
+    fn sweep(st: &mut State, now: f64) {
+        let dt = now - st.last;
+        if dt > 0.0 {
+            let total = st.total_open;
+            for e in st.pools.values_mut() {
+                if e.open > 0 {
+                    e.acc.inflight_s += dt;
+                    if total > e.open {
+                        e.acc.overlap_s += dt;
+                    }
+                }
+            }
+        }
+        st.last = now;
+    }
+
+    pub fn register(id: usize) {
+        let mut st = state().lock().unwrap();
+        st.pools.insert(id, Entry::default());
+    }
+
+    pub fn unregister(id: usize) {
+        let mut st = state().lock().unwrap();
+        let now = st.epoch.elapsed().as_secs_f64();
+        sweep(&mut st, now);
+        if let Some(e) = st.pools.remove(&id) {
+            st.total_open -= e.open;
+        }
+    }
+
+    pub fn begin(id: usize) {
+        let mut st = state().lock().unwrap();
+        let now = st.epoch.elapsed().as_secs_f64();
+        sweep(&mut st, now);
+        st.pools.entry(id).or_default().open += 1;
+        st.total_open += 1;
+    }
+
+    pub fn end(id: usize) {
+        let mut st = state().lock().unwrap();
+        let now = st.epoch.elapsed().as_secs_f64();
+        sweep(&mut st, now);
+        if let Some(e) = st.pools.get_mut(&id) {
+            if e.open > 0 {
+                e.open -= 1;
+                st.total_open -= 1;
+            }
+        }
+    }
+
+    pub fn snapshot(id: usize) -> Overlap {
+        let mut st = state().lock().unwrap();
+        let now = st.epoch.elapsed().as_secs_f64();
+        sweep(&mut st, now);
+        st.pools.get(&id).map(|e| e.acc).unwrap_or_default()
+    }
+}
+
+static NEXT_POOL_ID: AtomicUsize = AtomicUsize::new(0);
+
 #[derive(Default)]
 struct StatsInner {
     dispatches: u64,
@@ -266,6 +426,163 @@ struct StatsInner {
     busy_s: f64,
     worker_chunks: Vec<u64>,
     worker_busy_s: Vec<f64>,
+}
+
+/// What a [`PendingScores`] ticket will assemble when waited on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PendingKind {
+    Fwd,
+    Rho,
+    Mcd,
+}
+
+/// A submitted-but-not-yet-collected dispatch: the ticket half of the
+/// two-phase API. Hold several (on one pool or across planes) to keep
+/// their model work in flight concurrently, then `wait_*` each.
+/// Dropping a ticket without waiting drains its dispatch on `Drop`
+/// (blocking until every chunk response arrived, payloads discarded,
+/// timings folded into the pool stats) so the pool's response stream
+/// stays clean for the next caller.
+pub struct PendingScores<'p> {
+    pool: &'p ScoringPool,
+    seq: u64,
+    chunks: usize,
+    n: usize,
+    kind: PendingKind,
+    done: bool,
+    /// Set just before this ticket's own drain runs: if a panic
+    /// escapes the drain, the dispatch is part-consumed and `Drop`
+    /// must not re-drain (it would block on responses that already
+    /// arrived); any other drop may drain fully.
+    draining: bool,
+}
+
+impl<'p> PendingScores<'p> {
+    pub fn kind(&self) -> PendingKind {
+        self.kind
+    }
+
+    /// Chunks this dispatch enqueued (observability/tests).
+    pub fn chunks(&self) -> usize {
+        self.chunks
+    }
+
+    fn expect(&self, kind: PendingKind) -> Result<()> {
+        if self.kind != kind {
+            bail!("ticket holds a {:?} dispatch, not {kind:?}", self.kind);
+        }
+        Ok(())
+    }
+
+    /// Guard a worker payload column before slicing `take` values out
+    /// of it: a mis-built artifact returning a short vector must be a
+    /// named error, not a `copy_from_slice` panic mid-drain (a panic
+    /// inside the drain would leave the dispatch part-consumed, and
+    /// the unwinding ticket could then never drain the remainder).
+    fn column(col: &[f32], take: usize, what: &str) -> Result<&[f32]> {
+        if col.len() < take {
+            bail!("worker returned {} `{what}` values for a chunk of {take} rows", col.len());
+        }
+        Ok(&col[..take])
+    }
+
+    /// Drain this ticket's `fwd` dispatch and assemble the stats.
+    pub fn wait_fwd(mut self) -> Result<FwdStats> {
+        self.expect(PendingKind::Fwd)?;
+        let n = self.n;
+        let mut out = FwdStats::default();
+        out.loss.resize(n, 0.0);
+        out.correct.resize(n, 0.0);
+        out.gnorm.resize(n, 0.0);
+        out.entropy.resize(n, 0.0);
+        self.draining = true;
+        let res = self.pool.drain(self.seq, self.chunks, |base, take, payload| match payload {
+            Payload::Fwd { loss, correct, gnorm, entropy } => {
+                out.loss[base..base + take].copy_from_slice(Self::column(&loss, take, "loss")?);
+                out.correct[base..base + take]
+                    .copy_from_slice(Self::column(&correct, take, "correct")?);
+                out.gnorm[base..base + take].copy_from_slice(Self::column(&gnorm, take, "gnorm")?);
+                out.entropy[base..base + take]
+                    .copy_from_slice(Self::column(&entropy, take, "entropy")?);
+                Ok(())
+            }
+            _ => bail!("mismatched payload kind"),
+        });
+        self.done = true; // drain consumed the full dispatch either way
+        res?;
+        Ok(out)
+    }
+
+    /// Drain this ticket's `rho` dispatch and assemble the scores.
+    pub fn wait_rho(mut self) -> Result<Vec<f32>> {
+        self.expect(PendingKind::Rho)?;
+        let mut scores = vec![0.0f32; self.n];
+        self.draining = true;
+        let res = self.pool.drain(self.seq, self.chunks, |base, take, payload| match payload {
+            Payload::Rho { scores: s } => {
+                scores[base..base + take].copy_from_slice(Self::column(&s, take, "rho")?);
+                Ok(())
+            }
+            _ => bail!("mismatched payload kind"),
+        });
+        self.done = true;
+        res?;
+        Ok(scores)
+    }
+
+    /// Drain this ticket's `mcdropout` dispatch and assemble the stats.
+    pub fn wait_mcd(mut self) -> Result<McdStats> {
+        self.expect(PendingKind::Mcd)?;
+        let n = self.n;
+        let mut out = McdStats::default();
+        out.loss.resize(n, 0.0);
+        out.entropy.resize(n, 0.0);
+        out.cond_entropy.resize(n, 0.0);
+        out.bald.resize(n, 0.0);
+        self.draining = true;
+        let res = self.pool.drain(self.seq, self.chunks, |base, take, payload| match payload {
+            Payload::Mcd { loss, entropy, cond_entropy, bald } => {
+                out.loss[base..base + take].copy_from_slice(Self::column(&loss, take, "loss")?);
+                out.entropy[base..base + take]
+                    .copy_from_slice(Self::column(&entropy, take, "entropy")?);
+                out.cond_entropy[base..base + take]
+                    .copy_from_slice(Self::column(&cond_entropy, take, "cond_entropy")?);
+                out.bald[base..base + take].copy_from_slice(Self::column(&bald, take, "bald")?);
+                Ok(())
+            }
+            _ => bail!("mismatched payload kind"),
+        });
+        self.done = true;
+        res?;
+        Ok(out)
+    }
+}
+
+impl Drop for PendingScores<'_> {
+    fn drop(&mut self) {
+        if self.done {
+            return;
+        }
+        // If a panic escaped this ticket's OWN drain, the dispatch is
+        // part-consumed and a blocking re-drain would wait for
+        // responses that already arrived. Skip it — but still close
+        // the ledger interval: pools are cached across runs, so a
+        // caught panic must not leave a permanently-open dispatch
+        // inflating every later inflight/overlap reading (ledger::end
+        // is pure accounting, safe during unwind).
+        if self.draining {
+            self.pool.close_interval();
+            return;
+        }
+        // Abandoned ticket (including a caller-side panic unwinding
+        // past an un-waited ticket — the dispatch is fully un-consumed,
+        // so a complete drain is finite and leaves the cached pool
+        // clean): drain it, discarding payloads but keeping the
+        // timing/rate accounting, so its responses can never be
+        // misread by the next wait on this pool. Errors are
+        // deliberately swallowed — there is nobody to report them to.
+        let _ = self.pool.drain(self.seq, self.chunks, |_, _, _| Ok(()));
+    }
 }
 
 /// Rate-aware, zero-copy scoring pool over one (arch, d, c) combo's
@@ -282,6 +599,14 @@ pub struct ScoringPool {
     processed: Vec<Arc<AtomicUsize>>,
     rates: Mutex<RateEma>,
     stats: Mutex<StatsInner>,
+    /// Ledger key for in-flight/overlap accounting.
+    id: usize,
+    /// Next dispatch sequence id (the pool is single-consumer: the
+    /// response receiver pins it to one thread, so `Cell` suffices).
+    seq: Cell<u64>,
+    /// Responses received while waiting on a *different* ticket,
+    /// keyed by their dispatch sequence id.
+    buffered: RefCell<HashMap<u64, Vec<Response>>>,
 }
 
 impl ScoringPool {
@@ -337,6 +662,8 @@ impl ScoringPool {
                 worker_main(wid, lane_rx, tx, fwd_meta, select_meta, mcd_meta, counter);
             }));
         }
+        let id = NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed);
+        ledger::register(id);
         Ok(ScoringPool {
             lanes,
             resp_rx,
@@ -353,6 +680,9 @@ impl ScoringPool {
                 worker_busy_s: vec![0.0; workers],
                 ..Default::default()
             }),
+            id,
+            seq: Cell::new(0),
+            buffered: RefCell::new(HashMap::new()),
         })
     }
 
@@ -385,20 +715,30 @@ impl ScoringPool {
 
     /// Overwrite the EMA rate estimates (ops/test hook: warm a fresh
     /// pool with known throughputs, or inject hostile skew to exercise
-    /// the proportional planner).
-    pub fn force_rates(&self, rates: &[f64]) {
-        self.rates.lock().unwrap().set(rates);
+    /// the proportional planner). The vector must name every worker —
+    /// a length mismatch is a hard error, not a silent zero-pad.
+    pub fn force_rates(&self, rates: &[f64]) -> Result<()> {
+        self.rates.lock().unwrap().set(rates).map_err(|e| anyhow!("force_rates: {e}"))
+    }
+
+    /// Close one open ledger interval without draining (the
+    /// panic-unwind escape hatch of [`PendingScores`]'s `Drop`).
+    fn close_interval(&self) {
+        ledger::end(self.id);
     }
 
     /// Cumulative dispatch/queue-wait observability snapshot.
     pub fn report(&self) -> PoolReport {
         let st = self.stats.lock().unwrap();
         let rates = self.rates.lock().unwrap();
+        let ov = ledger::snapshot(self.id);
         PoolReport {
             dispatches: st.dispatches,
             chunks: st.chunks,
             queue_wait_s: st.queue_wait_s,
             busy_s: st.busy_s,
+            inflight_s: ov.inflight_s,
+            overlap_s: ov.overlap_s,
             per_worker: (0..self.workers)
                 .map(|w| WorkerStat {
                     chunks: st.worker_chunks[w],
@@ -409,108 +749,143 @@ impl ScoringPool {
         }
     }
 
-    /// Parallel forward stats over an arbitrary-length candidate batch.
-    pub fn fwd(&self, theta: &Arc<Vec<f32>>, batch: &Arc<CandBatch>) -> Result<FwdStats> {
-        let chunks = self.dispatch(theta, batch, ReqKind::Fwd)?;
-        let n = batch.n();
-        let mut out = FwdStats::default();
-        out.loss.resize(n, 0.0);
-        out.correct.resize(n, 0.0);
-        out.gnorm.resize(n, 0.0);
-        out.entropy.resize(n, 0.0);
-        self.collect(chunks, |base, take, payload| match payload {
-            Payload::Fwd { loss, correct, gnorm, entropy } => {
-                out.loss[base..base + take].copy_from_slice(&loss[..take]);
-                out.correct[base..base + take].copy_from_slice(&correct[..take]);
-                out.gnorm[base..base + take].copy_from_slice(&gnorm[..take]);
-                out.entropy[base..base + take].copy_from_slice(&entropy[..take]);
-                Ok(())
-            }
-            _ => bail!("mismatched payload kind"),
-        })?;
-        Ok(out)
+    // -- two-phase API --------------------------------------------------
+
+    /// Enqueue a full-fwd-stats dispatch; `wait_fwd` the ticket.
+    pub fn submit_fwd(
+        &self,
+        theta: &Arc<Vec<f32>>,
+        batch: &Arc<CandBatch>,
+    ) -> Result<PendingScores<'_>> {
+        self.submit(theta, batch, ReqKind::Fwd, PendingKind::Fwd)
     }
 
-    /// Parallel fused RHO scores over an arbitrary-length batch. `il`
+    /// Enqueue a fused-RHO dispatch; `wait_rho` the ticket. `il`
     /// crosses to the workers as a refcount bump (producer-gathered
     /// table slice or the online-IL scores).
+    pub fn submit_rho(
+        &self,
+        theta: &Arc<Vec<f32>>,
+        batch: &Arc<CandBatch>,
+        il: &Arc<Vec<f32>>,
+    ) -> Result<PendingScores<'_>> {
+        if il.len() != batch.n() {
+            bail!("il len {} != batch {}", il.len(), batch.n());
+        }
+        self.submit(theta, batch, ReqKind::Rho(il), PendingKind::Rho)
+    }
+
+    /// Enqueue an MC-dropout dispatch; `wait_mcd` the ticket. Every
+    /// chunk is scored with the same `seed`, matching the
+    /// single-threaded `ModelRuntime::mcdropout` chunking exactly.
+    pub fn submit_mcdropout(
+        &self,
+        theta: &Arc<Vec<f32>>,
+        batch: &Arc<CandBatch>,
+        seed: i32,
+    ) -> Result<PendingScores<'_>> {
+        if !self.has_mcd {
+            bail!("pool was built without an mcdropout artifact");
+        }
+        self.submit(theta, batch, ReqKind::Mcd(seed), PendingKind::Mcd)
+    }
+
+    // -- one-shot wrappers (submit + wait back-to-back) -----------------
+
+    /// Parallel forward stats over an arbitrary-length candidate batch.
+    pub fn fwd(&self, theta: &Arc<Vec<f32>>, batch: &Arc<CandBatch>) -> Result<FwdStats> {
+        self.submit_fwd(theta, batch)?.wait_fwd()
+    }
+
+    /// Parallel fused RHO scores over an arbitrary-length batch.
     pub fn rho(
         &self,
         theta: &Arc<Vec<f32>>,
         batch: &Arc<CandBatch>,
         il: &Arc<Vec<f32>>,
     ) -> Result<Vec<f32>> {
-        if il.len() != batch.n() {
-            bail!("il len {} != batch {}", il.len(), batch.n());
-        }
-        let chunks = self.dispatch(theta, batch, ReqKind::Rho(il))?;
-        let mut scores = vec![0.0f32; batch.n()];
-        self.collect(chunks, |base, take, payload| match payload {
-            Payload::Rho { scores: s } => {
-                scores[base..base + take].copy_from_slice(&s[..take]);
-                Ok(())
-            }
-            _ => bail!("mismatched payload kind"),
-        })?;
-        Ok(scores)
+        self.submit_rho(theta, batch, il)?.wait_rho()
     }
 
     /// Parallel MC-dropout uncertainty stats over an arbitrary-length
-    /// batch. Every chunk is scored with the same `seed`, matching the
-    /// single-threaded `ModelRuntime::mcdropout` chunking exactly.
+    /// batch.
     pub fn mcdropout(
         &self,
         theta: &Arc<Vec<f32>>,
         batch: &Arc<CandBatch>,
         seed: i32,
     ) -> Result<McdStats> {
-        if !self.has_mcd {
-            bail!("pool was built without an mcdropout artifact");
-        }
-        let chunks = self.dispatch(theta, batch, ReqKind::Mcd(seed))?;
-        let n = batch.n();
-        let mut out = McdStats::default();
-        out.loss.resize(n, 0.0);
-        out.entropy.resize(n, 0.0);
-        out.cond_entropy.resize(n, 0.0);
-        out.bald.resize(n, 0.0);
-        self.collect(chunks, |base, take, payload| match payload {
-            Payload::Mcd { loss, entropy, cond_entropy, bald } => {
-                out.loss[base..base + take].copy_from_slice(&loss[..take]);
-                out.entropy[base..base + take].copy_from_slice(&entropy[..take]);
-                out.cond_entropy[base..base + take].copy_from_slice(&cond_entropy[..take]);
-                out.bald[base..base + take].copy_from_slice(&bald[..take]);
-                Ok(())
-            }
-            _ => bail!("mismatched payload kind"),
-        })?;
-        Ok(out)
+        self.submit_mcdropout(theta, batch, seed)?.wait_mcd()
     }
 
-    /// Plan the dispatch and enqueue every chunk: one `(start, take)`
-    /// window + `Arc` refcount bumps per chunk, no row copies. Lanes
-    /// are filled with non-blocking sends in round-robin passes, so a
-    /// full (slow) lane never stalls feeding the others; only when
-    /// every lane with remaining work is at capacity does the
-    /// dispatcher back off briefly. `Window::enqueued` is stamped at
-    /// the successful send, so queue-wait measures lane residency
-    /// (enqueue → worker pickup), not dispatcher backpressure.
-    fn dispatch(
+    /// Validate shapes, plan the dispatch, and enqueue every chunk:
+    /// one `(start, take)` window + `Arc` refcount bumps per chunk, no
+    /// row copies. Lanes are filled with non-blocking sends in
+    /// round-robin passes, so a full (slow) lane never stalls feeding
+    /// the others; only when every lane with remaining work is at
+    /// capacity does the dispatcher back off briefly.
+    /// `Window::enqueued` is stamped at the successful send, so
+    /// queue-wait measures lane residency (enqueue → worker pickup),
+    /// not dispatcher backpressure. The returned ticket owns the
+    /// dispatch: waiting (or dropping) it drains exactly these chunks.
+    fn submit(
         &self,
         theta: &Arc<Vec<f32>>,
         batch: &Arc<CandBatch>,
         kind: ReqKind,
-    ) -> Result<usize> {
+        pending: PendingKind,
+    ) -> Result<PendingScores<'_>> {
         if theta.len() != self.param_count {
             bail!("theta len {} != {}", theta.len(), self.param_count);
         }
-        if batch.xs.len() != batch.n() * self.d || batch.ys.is_empty() {
-            bail!("bad batch shape");
+        let n = batch.n();
+        // Shape guard: every per-candidate column must agree on the
+        // row count, or the desync surfaces later as a worker-side
+        // slice panic (xs/ys in `chunk_views`) or an out-of-range
+        // dataset index downstream (idx in IL gathers / property
+        // tracking). Named errors here instead.
+        if n == 0 {
+            bail!("candidate batch shape mismatch: empty batch (no ys)");
         }
+        if batch.xs.len() != n * self.d {
+            bail!(
+                "candidate batch shape mismatch: {} xs values for {n} ys rows × d {} (expected {})",
+                batch.xs.len(),
+                self.d,
+                n * self.d
+            );
+        }
+        if !batch.idx.is_empty() && batch.idx.len() != n {
+            bail!(
+                "candidate batch shape mismatch: {} dataset indices for {n} ys rows — \
+                 idx and ys desynced",
+                batch.idx.len()
+            );
+        }
+        if let Some(il) = &batch.il {
+            if il.len() != n {
+                bail!(
+                    "candidate batch shape mismatch: producer-gathered il has {} values for {n} rows",
+                    il.len()
+                );
+            }
+        }
+        let seq = self.seq.get();
+        self.seq.set(seq + 1);
         let plan = {
             let rates = self.rates.lock().unwrap();
-            plan_dispatch(batch.n(), self.select_batch, rates.rates())
+            plan_dispatch(n, self.select_batch, rates.rates())
         };
+        // The in-flight interval opens here, BEFORE the enqueue loop:
+        // when a dispatch exceeds the pool's total lane capacity
+        // (chunks > workers × lane_depth) the loop below blocks on
+        // backpressure while workers already execute early chunks —
+        // that time is dispatch time and must show in
+        // `inflight_s`/`overlap_s`. (Note the same condition also
+        // delays the *return* of submit, partially re-serializing the
+        // phase plan for very large dispatches; size `lane_depth` so a
+        // candidate batch fits if full overlap matters.)
+        ledger::begin(self.id);
         let mut by_lane: Vec<Vec<ChunkPlan>> = vec![Vec::new(); self.workers];
         for c in &plan {
             by_lane[c.worker].push(*c);
@@ -522,6 +897,7 @@ impl ScoringPool {
             for lane in 0..self.workers {
                 while let Some(c) = by_lane[lane].get(cursor[lane]) {
                     let w = Window {
+                        seq,
                         chunk: c.chunk,
                         start: c.start,
                         take: c.take,
@@ -551,7 +927,10 @@ impl ScoringPool {
                             progressed = true;
                         }
                         Err(TrySendError::Full(_)) => break, // lane at capacity; next lane
-                        Err(TrySendError::Disconnected(_)) => bail!("pool workers died"),
+                        Err(TrySendError::Disconnected(_)) => {
+                            ledger::end(self.id); // no ticket will ever close this interval
+                            bail!("pool workers died");
+                        }
                     }
                 }
             }
@@ -562,17 +941,30 @@ impl ScoringPool {
                 std::thread::sleep(Duration::from_micros(50));
             }
         }
-        Ok(plan.len())
+        Ok(PendingScores {
+            pool: self,
+            seq,
+            chunks: plan.len(),
+            n,
+            kind: pending,
+            done: false,
+            draining: false,
+        })
     }
 
-    /// Drain exactly `chunks` responses, routing each payload to
-    /// `sink(row_base, take, payload)`. Always consumes the full
-    /// dispatch — even after a worker error — so a failed call can
-    /// never leave stale responses to poison the next one. Folds
-    /// completion timestamps into the rate EMA and the cumulative
-    /// dispatch/queue-wait stats.
-    fn collect(
+    /// Drain exactly the `chunks` responses of dispatch `seq`, routing
+    /// each payload to `sink(row_base, take, payload)`. Responses
+    /// already parked by an earlier interleaved wait are consumed
+    /// first; responses for *other* outstanding dispatches encountered
+    /// on the channel are parked for their own ticket. Always consumes
+    /// the full dispatch — even after a worker error — so a failed (or
+    /// abandoned) call can never leave stale responses to poison the
+    /// next one. Folds completion timestamps into the rate EMA, the
+    /// cumulative dispatch/queue-wait stats, and closes the dispatch's
+    /// in-flight ledger interval.
+    fn drain(
         &self,
+        seq: u64,
         chunks: usize,
         mut sink: impl FnMut(usize, usize, Payload) -> Result<()>,
     ) -> Result<()> {
@@ -580,8 +972,27 @@ impl ScoringPool {
         let mut count = vec![0u64; self.workers];
         let mut wait = Duration::ZERO;
         let mut result = Ok(());
-        for _ in 0..chunks {
-            let resp = self.resp_rx.recv().map_err(|_| anyhow!("pool workers died"))?;
+        let mut parked = self.buffered.borrow_mut().remove(&seq).unwrap_or_default();
+        let mut seen = 0usize;
+        while seen < chunks {
+            let resp = match parked.pop() {
+                Some(r) => r,
+                None => {
+                    let r = match self.resp_rx.recv() {
+                        Ok(r) => r,
+                        Err(_) => {
+                            ledger::end(self.id);
+                            return Err(anyhow!("pool workers died"));
+                        }
+                    };
+                    if r.seq != seq {
+                        self.buffered.borrow_mut().entry(r.seq).or_default().push(r);
+                        continue;
+                    }
+                    r
+                }
+            };
+            seen += 1;
             busy[resp.worker] += resp.busy;
             count[resp.worker] += 1;
             wait += resp.queue_wait;
@@ -598,6 +1009,7 @@ impl ScoringPool {
                 }
             }
         }
+        ledger::end(self.id);
         let observed: Vec<f64> = (0..self.workers)
             .map(|w| {
                 let s = busy[w].as_secs_f64();
@@ -624,6 +1036,7 @@ impl Drop for ScoringPool {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        ledger::unregister(self.id);
     }
 }
 
@@ -718,6 +1131,7 @@ fn worker_main(
             while let Ok(req) = rx.recv() {
                 let w = req.window();
                 let _ = tx.send(Response {
+                    seq: w.seq,
                     chunk: w.chunk,
                     take: w.take,
                     worker: wid,
@@ -742,7 +1156,7 @@ fn worker_main(
         };
         let picked_up = Instant::now();
         let queue_wait = picked_up.duration_since(req.window().enqueued);
-        let (chunk, take, payload) = match req {
+        let (seq, chunk, take, payload) = match req {
             Request::Fwd { w, theta, batch } => {
                 let res = (|| -> Result<Payload> {
                     let (cx, cy) =
@@ -761,7 +1175,7 @@ fn worker_main(
                         entropy: it.next().unwrap(),
                     })
                 })();
-                (w.chunk, w.take, res.map_err(|e| format!("{e:#}")))
+                (w.seq, w.chunk, w.take, res.map_err(|e| format!("{e:#}")))
             }
             Request::Rho { w, theta, batch, il } => {
                 let res = (|| -> Result<Payload> {
@@ -778,7 +1192,7 @@ fn worker_main(
                     let outs = select_exe.call_f32(&args)?;
                     Ok(Payload::Rho { scores: outs.into_iter().next().unwrap() })
                 })();
-                (w.chunk, w.take, res.map_err(|e| format!("{e:#}")))
+                (w.seq, w.chunk, w.take, res.map_err(|e| format!("{e:#}")))
             }
             Request::Mcd { w, theta, batch, seed } => {
                 let res = (|| -> Result<Payload> {
@@ -802,11 +1216,12 @@ fn worker_main(
                         bald: it.next().unwrap(),
                     })
                 })();
-                (w.chunk, w.take, res.map_err(|e| format!("{e:#}")))
+                (w.seq, w.chunk, w.take, res.map_err(|e| format!("{e:#}")))
             }
         };
         counter.fetch_add(1, Ordering::Relaxed);
-        let resp = Response { chunk, take, worker: wid, queue_wait, busy: picked_up.elapsed(), payload };
+        let busy = picked_up.elapsed();
+        let resp = Response { seq, chunk, take, worker: wid, queue_wait, busy, payload };
         if tx.send(resp).is_err() {
             return; // pool dropped
         }
@@ -861,6 +1276,8 @@ mod tests {
             chunks: 10,
             queue_wait_s: 1.0,
             busy_s: 4.0,
+            inflight_s: 2.0,
+            overlap_s: 0.5,
             per_worker: vec![WorkerStat { chunks: 10, busy_s: 4.0, rate: 2.0 }],
         };
         let later = PoolReport {
@@ -868,17 +1285,49 @@ mod tests {
             chunks: 25,
             queue_wait_s: 1.5,
             busy_s: 9.0,
+            inflight_s: 5.0,
+            overlap_s: 2.0,
             per_worker: vec![WorkerStat { chunks: 25, busy_s: 9.0, rate: 3.0 }],
         };
         let d = later.since(&earlier);
         assert_eq!((d.dispatches, d.chunks), (3, 15));
         assert!((d.queue_wait_s - 0.5).abs() < 1e-12);
         assert!((d.busy_s - 5.0).abs() < 1e-12);
+        assert!((d.inflight_s - 3.0).abs() < 1e-12);
+        assert!((d.overlap_s - 1.5).abs() < 1e-12);
         assert_eq!(d.per_worker[0].chunks, 15);
         assert_eq!(d.per_worker[0].rate, 3.0, "rates are point-in-time, not deltas");
         // self-delta is zero
         let z = later.since(&later);
         assert_eq!((z.dispatches, z.chunks), (0, 0));
+        assert_eq!((z.inflight_s, z.overlap_s), (0.0, 0.0));
+    }
+
+    #[test]
+    fn ledger_accounts_inflight_and_cross_pool_overlap() {
+        // Fake pool ids well above anything the atomic counter hands
+        // out during this test binary's lifetime.
+        let (a, b) = (usize::MAX - 1, usize::MAX - 2);
+        ledger::register(a);
+        ledger::register(b);
+        ledger::begin(a);
+        std::thread::sleep(Duration::from_millis(3));
+        ledger::begin(b); // both in flight from here
+        std::thread::sleep(Duration::from_millis(3));
+        ledger::end(b);
+        ledger::end(a);
+        let oa = ledger::snapshot(a);
+        let ob = ledger::snapshot(b);
+        assert!(oa.inflight_s > 0.0, "a never in flight");
+        assert!(ob.inflight_s > 0.0, "b never in flight");
+        // both pools shared an open segment, so both saw overlap —
+        // other tests' pools running concurrently can only add to it
+        assert!(oa.overlap_s > 0.0, "a saw no overlap: {}", oa.overlap_s);
+        assert!(ob.overlap_s > 0.0, "b saw no overlap: {}", ob.overlap_s);
+        // a was in flight strictly longer than it overlapped with b
+        assert!(oa.inflight_s >= oa.overlap_s);
+        ledger::unregister(a);
+        ledger::unregister(b);
     }
 
     #[test]

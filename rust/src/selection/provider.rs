@@ -16,6 +16,26 @@
 //! changes *where* signals compute by registering planes, never by
 //! rewriting the loop.
 //!
+//! ## Two-phase providers and the step phase plan
+//!
+//! Every provider is two-phase: [`SignalProvider::submit`] enqueues
+//! its pool dispatch (a [`PendingScores`] ticket held internally;
+//! no-op for inline or lookup providers) and
+//! [`SignalProvider::resolve`] waits and assembles the signal into
+//! the [`SignalSet`]. [`run_step`] executes the per-step phase plan
+//! over a stack: **submit every provider before resolving any**, so
+//! dispatches on different planes (and interleaved tickets on one
+//! plane) are in flight concurrently and a two-plane step costs
+//! max(plane latencies) instead of their sum. The one real data
+//! dependency is honored by [`Role`]: [`FusedRho`] *consumes* the
+//! `il` signal, so the IL source ([`Precomputed`] / [`OnlineIl`])
+//! resolves before FusedRho submits — and since the precomputed-IL
+//! resolve is a refcount bump, FusedRho, [`FwdStats`], and
+//! [`McDropout`] all overlap in the common amortized-IL case. Values
+//! are untouched by any of this (chunk windows, padding, and seeds
+//! never move), so overlapped curves are bitwise-identical to the
+//! serialized `provide` shape.
+//!
 //! Providers see the candidate batch as the shared [`CandBatch`] the
 //! producer gathered (`StepCtx::batch`), not as borrowed slices: the
 //! pool-backed providers forward the whole buffer as a refcount bump
@@ -27,11 +47,11 @@
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::runtime::handle::{McdStats, ModelRuntime};
 use crate::runtime::plane::{PlaneSet, PLANE_TARGET};
-use crate::runtime::pool::{CandBatch, ScoringPool};
+use crate::runtime::pool::{CandBatch, PendingScores, ScoringPool};
 use crate::selection::{Candidates, Method};
 
 /// Where a provider executes its model programs.
@@ -95,13 +115,85 @@ impl SignalSet {
     }
 }
 
-/// One family of scoring signals. Providers run in stack order; later
-/// providers may consume signals earlier ones produced ([`FusedRho`]
-/// reads `il`).
+/// A provider's position in the step's dispatch phase plan (see
+/// [`run_step`]): IL sources must resolve before IL consumers can
+/// submit; everything else is independent and overlaps freely.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// No cross-provider signal dependency in either direction.
+    Independent,
+    /// Produces the `il` signal other providers consume.
+    IlSource,
+    /// Consumes the `il` signal (submit must wait for the IL resolve).
+    IlConsumer,
+}
+
+/// One family of scoring signals, dispatched in two phases. The
+/// default shape is fully synchronous: `submit` no-ops and `resolve`
+/// does all the work, so an inline/lookup provider only implements
+/// `resolve`. Pool-backed providers override `submit` to enqueue
+/// their dispatch (holding the [`PendingScores`] ticket internally)
+/// and have `resolve` wait on it — falling back to the synchronous
+/// path when `resolve` is called without a prior `submit`.
 pub trait SignalProvider {
     fn name(&self) -> &'static str;
-    /// Compute this provider's signals for the candidate batch.
-    fn provide(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()>;
+
+    /// Dispatch-dependency role in the step phase plan.
+    fn role(&self) -> Role {
+        Role::Independent
+    }
+
+    /// Phase 1: enqueue this provider's pool work, if any. `out` is
+    /// the read-only view of signals resolved so far this step — an
+    /// [`Role::IlConsumer`] reads the `il` signal from it.
+    fn submit(&mut self, _ctx: &StepCtx, _out: &SignalSet) -> Result<()> {
+        Ok(())
+    }
+
+    /// Phase 2: wait on the submitted dispatch (or compute
+    /// synchronously) and assemble this provider's signals into `out`.
+    fn resolve(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()>;
+
+    /// One-shot convenience: submit + resolve back-to-back — the
+    /// serialized shape. Identical values, only wall-clock differs.
+    fn provide(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
+        self.submit(ctx, out)?;
+        self.resolve(ctx, out)
+    }
+}
+
+/// Execute one step of a provider stack under the overlapped phase
+/// plan:
+///
+/// 1. submit every non-IL-consumer (pool dispatches go in flight);
+/// 2. resolve the IL sources (a refcount bump for precomputed IL, a
+///    pool wait for online IL) so the `il` signal exists;
+/// 3. submit the IL consumers (fused RHO, now that `il` is readable);
+/// 4. resolve everything else in stack order.
+///
+/// Every phase preserves stack order within itself, and the values
+/// computed are bitwise those of the serialized walk — only the
+/// wall-clock interleaving changes. On error, providers still holding
+/// un-waited tickets drain them on drop, so a failed step never
+/// poisons the pools for the next caller.
+pub fn run_step(
+    providers: &mut [Box<dyn SignalProvider + '_>],
+    ctx: &StepCtx,
+    out: &mut SignalSet,
+) -> Result<()> {
+    for p in providers.iter_mut().filter(|p| p.role() != Role::IlConsumer) {
+        p.submit(ctx, out).with_context(|| format!("signal provider `{}` (submit)", p.name()))?;
+    }
+    for p in providers.iter_mut().filter(|p| p.role() == Role::IlSource) {
+        p.resolve(ctx, out).with_context(|| format!("signal provider `{}`", p.name()))?;
+    }
+    for p in providers.iter_mut().filter(|p| p.role() == Role::IlConsumer) {
+        p.submit(ctx, out).with_context(|| format!("signal provider `{}` (submit)", p.name()))?;
+    }
+    for p in providers.iter_mut().filter(|p| p.role() != Role::IlSource) {
+        p.resolve(ctx, out).with_context(|| format!("signal provider `{}`", p.name()))?;
+    }
+    Ok(())
 }
 
 /// Precomputed irreducible losses (Algorithm 1's amortized IL table).
@@ -118,12 +210,30 @@ impl SignalProvider for Precomputed<'_> {
         "precomputed_il"
     }
 
-    fn provide(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
+    fn role(&self) -> Role {
+        Role::IlSource
+    }
+
+    fn resolve(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
         out.il = Some(match &ctx.batch.il {
             Some(pre) => Arc::clone(pre),
-            None => Arc::new(
-                ctx.batch.idx.iter().map(|&i| self.values[i as usize]).collect::<Vec<f32>>(),
-            ),
+            None => {
+                let mut vals = Vec::with_capacity(ctx.batch.idx.len());
+                for &i in &ctx.batch.idx {
+                    // A stale table fed a re-indexed candidate set
+                    // (e.g. after the SVP filter) must error naming
+                    // the offending index, not panic mid-run.
+                    let v = self.values.get(i as usize).ok_or_else(|| {
+                        anyhow!(
+                            "precomputed IL table has {} entries but candidate dataset index {i} \
+                             is out of range — stale IL table for a re-indexed candidate set?",
+                            self.values.len()
+                        )
+                    })?;
+                    vals.push(*v);
+                }
+                Arc::new(vals)
+            }
         });
         Ok(())
     }
@@ -132,10 +242,22 @@ impl SignalProvider for Precomputed<'_> {
 /// Online (non-approximated) IL: score candidates with the current
 /// IL-model parameters (paper Table 4 / Fig. 7). With a pool backend
 /// (the `il` compute plane) the IL forward pass runs on the plane's
-/// own workers — compiled from the *IL* arch's artifacts — instead of
-/// inline on the consumer thread.
+/// own workers — compiled from the *IL* arch's artifacts — and is
+/// submitted in phase 1, so it is in flight concurrently with the
+/// target plane's dispatches.
 pub struct OnlineIl<'a> {
     pub backend: Backend<'a>,
+    pending: Option<PendingScores<'a>>,
+}
+
+impl<'a> OnlineIl<'a> {
+    pub fn new(backend: Backend<'a>) -> Self {
+        OnlineIl { backend, pending: None }
+    }
+
+    fn il_theta<'c>(ctx: &'c StepCtx) -> Result<&'c Arc<Vec<f32>>> {
+        ctx.il_theta.ok_or_else(|| anyhow!("online IL scoring needs the IL-model state"))
+    }
 }
 
 impl SignalProvider for OnlineIl<'_> {
@@ -143,13 +265,26 @@ impl SignalProvider for OnlineIl<'_> {
         "online_il"
     }
 
-    fn provide(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
-        let th = ctx
-            .il_theta
-            .ok_or_else(|| anyhow!("online IL scoring needs the IL-model state"))?;
-        let loss = match self.backend {
-            Backend::Pool(p) => p.fwd(th, ctx.batch)?.loss,
-            Backend::Inline(rt) => rt.fwd(th, &ctx.batch.xs, &ctx.batch.ys)?.loss,
+    fn role(&self) -> Role {
+        Role::IlSource
+    }
+
+    fn submit(&mut self, ctx: &StepCtx, _out: &SignalSet) -> Result<()> {
+        if let Backend::Pool(p) = self.backend {
+            self.pending = Some(p.submit_fwd(Self::il_theta(ctx)?, ctx.batch)?);
+        }
+        Ok(())
+    }
+
+    fn resolve(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
+        let loss = match self.pending.take() {
+            Some(t) => t.wait_fwd()?.loss,
+            None => match self.backend {
+                Backend::Pool(p) => p.fwd(Self::il_theta(ctx)?, ctx.batch)?.loss,
+                Backend::Inline(rt) => {
+                    rt.fwd(Self::il_theta(ctx)?, &ctx.batch.xs, &ctx.batch.ys)?.loss
+                }
+            },
         };
         out.il = Some(Arc::new(loss));
         Ok(())
@@ -157,9 +292,24 @@ impl SignalProvider for OnlineIl<'_> {
 }
 
 /// Fused RHO scores (Eq. 3) through the Pallas select artifact.
-/// Consumes the `il` signal produced earlier in the stack.
+/// Consumes the `il` signal produced earlier in the stack
+/// ([`Role::IlConsumer`]: its submit runs after the IL source
+/// resolved, overlapping with any still-in-flight fwd/mcd dispatches).
 pub struct FusedRho<'a> {
     pub backend: Backend<'a>,
+    pending: Option<PendingScores<'a>>,
+}
+
+impl<'a> FusedRho<'a> {
+    pub fn new(backend: Backend<'a>) -> Self {
+        FusedRho { backend, pending: None }
+    }
+}
+
+fn il_signal(out: &SignalSet) -> Result<Arc<Vec<f32>>> {
+    out.il
+        .clone()
+        .ok_or_else(|| anyhow!("FusedRho needs an `il` provider earlier in the stack"))
 }
 
 impl SignalProvider for FusedRho<'_> {
@@ -167,14 +317,29 @@ impl SignalProvider for FusedRho<'_> {
         "fused_rho"
     }
 
-    fn provide(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
-        let il = out
-            .il
-            .clone()
-            .ok_or_else(|| anyhow!("FusedRho needs an `il` provider earlier in the stack"))?;
-        let scores = match self.backend {
-            Backend::Pool(p) => p.rho(ctx.theta, ctx.batch, &il)?,
-            Backend::Inline(rt) => rt.select_rho(ctx.theta, &ctx.batch.xs, &ctx.batch.ys, &il)?,
+    fn role(&self) -> Role {
+        Role::IlConsumer
+    }
+
+    fn submit(&mut self, ctx: &StepCtx, out: &SignalSet) -> Result<()> {
+        if let Backend::Pool(p) = self.backend {
+            self.pending = Some(p.submit_rho(ctx.theta, ctx.batch, &il_signal(out)?)?);
+        }
+        Ok(())
+    }
+
+    fn resolve(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
+        let scores = match self.pending.take() {
+            Some(t) => t.wait_rho()?,
+            None => {
+                let il = il_signal(out)?;
+                match self.backend {
+                    Backend::Pool(p) => p.rho(ctx.theta, ctx.batch, &il)?,
+                    Backend::Inline(rt) => {
+                        rt.select_rho(ctx.theta, &ctx.batch.xs, &ctx.batch.ys, &il)?
+                    }
+                }
+            }
         };
         out.rho = Some(scores);
         Ok(())
@@ -186,6 +351,13 @@ impl SignalProvider for FusedRho<'_> {
 /// of property tracking.
 pub struct FwdStats<'a> {
     pub backend: Backend<'a>,
+    pending: Option<PendingScores<'a>>,
+}
+
+impl<'a> FwdStats<'a> {
+    pub fn new(backend: Backend<'a>) -> Self {
+        FwdStats { backend, pending: None }
+    }
 }
 
 impl SignalProvider for FwdStats<'_> {
@@ -193,10 +365,20 @@ impl SignalProvider for FwdStats<'_> {
         "fwd_stats"
     }
 
-    fn provide(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
-        let stats = match self.backend {
-            Backend::Pool(p) => p.fwd(ctx.theta, ctx.batch)?,
-            Backend::Inline(rt) => rt.fwd(ctx.theta, &ctx.batch.xs, &ctx.batch.ys)?,
+    fn submit(&mut self, ctx: &StepCtx, _out: &SignalSet) -> Result<()> {
+        if let Backend::Pool(p) = self.backend {
+            self.pending = Some(p.submit_fwd(ctx.theta, ctx.batch)?);
+        }
+        Ok(())
+    }
+
+    fn resolve(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
+        let stats = match self.pending.take() {
+            Some(t) => t.wait_fwd()?,
+            None => match self.backend {
+                Backend::Pool(p) => p.fwd(ctx.theta, ctx.batch)?,
+                Backend::Inline(rt) => rt.fwd(ctx.theta, &ctx.batch.xs, &ctx.batch.ys)?,
+            },
         };
         out.loss = Some(stats.loss);
         out.gnorm = Some(stats.gnorm);
@@ -209,6 +391,13 @@ impl SignalProvider for FwdStats<'_> {
 /// MC-dropout uncertainty stats (App. G methods).
 pub struct McDropout<'a> {
     pub backend: Backend<'a>,
+    pending: Option<PendingScores<'a>>,
+}
+
+impl<'a> McDropout<'a> {
+    pub fn new(backend: Backend<'a>) -> Self {
+        McDropout { backend, pending: None }
+    }
 }
 
 impl SignalProvider for McDropout<'_> {
@@ -216,10 +405,22 @@ impl SignalProvider for McDropout<'_> {
         "mcdropout"
     }
 
-    fn provide(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
-        let stats = match self.backend {
-            Backend::Pool(p) => p.mcdropout(ctx.theta, ctx.batch, ctx.mcd_seed)?,
-            Backend::Inline(rt) => rt.mcdropout(ctx.theta, &ctx.batch.xs, &ctx.batch.ys, ctx.mcd_seed)?,
+    fn submit(&mut self, ctx: &StepCtx, _out: &SignalSet) -> Result<()> {
+        if let Backend::Pool(p) = self.backend {
+            self.pending = Some(p.submit_mcdropout(ctx.theta, ctx.batch, ctx.mcd_seed)?);
+        }
+        Ok(())
+    }
+
+    fn resolve(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
+        let stats = match self.pending.take() {
+            Some(t) => t.wait_mcd()?,
+            None => match self.backend {
+                Backend::Pool(p) => p.mcdropout(ctx.theta, ctx.batch, ctx.mcd_seed)?,
+                Backend::Inline(rt) => {
+                    rt.mcdropout(ctx.theta, &ctx.batch.xs, &ctx.batch.ys, ctx.mcd_seed)?
+                }
+            },
         };
         out.mcd = Some(stats);
         Ok(())
@@ -246,7 +447,10 @@ pub struct StackSpec<'a> {
 /// Assemble the ordered provider stack for a method: IL first (fused
 /// RHO consumes it), then fwd stats / fused RHO / MC-dropout as the
 /// method's `compute_needs` demand — each bound to its declared
-/// compute plane when the session registered one.
+/// compute plane when the session registered one. Drive the stack with
+/// [`run_step`] for the overlapped phase plan (the engine does), or
+/// walk `provide` provider-by-provider for the serialized shape —
+/// both produce identical signals.
 pub fn stack<'a>(spec: &StackSpec<'a>) -> Result<Vec<Box<dyn SignalProvider + 'a>>> {
     let needs = spec.method.compute_needs();
     let signals = needs.signals;
@@ -279,7 +483,7 @@ pub fn stack<'a>(spec: &StackSpec<'a>) -> Result<Vec<Box<dyn SignalProvider + 'a
                     spec.il_rt.ok_or_else(|| anyhow!("online IL needs an IL runtime"))?,
                 ),
             };
-            out.push(Box::new(OnlineIl { backend }));
+            out.push(Box::new(OnlineIl::new(backend)));
         } else {
             let values = spec.il_values.ok_or_else(|| {
                 anyhow!("method `{}` needs precomputed IL values", spec.method.name())
@@ -292,13 +496,13 @@ pub fn stack<'a>(spec: &StackSpec<'a>) -> Result<Vec<Box<dyn SignalProvider + 'a
     // falls back to loss - il).
     let fused = spec.method == Method::RhoLoss && !spec.track_props;
     if spec.track_props || ((signals.loss || signals.gnorm) && !fused) {
-        out.push(Box::new(FwdStats { backend: scoring }));
+        out.push(Box::new(FwdStats::new(scoring)));
     }
     if fused {
-        out.push(Box::new(FusedRho { backend: scoring }));
+        out.push(Box::new(FusedRho::new(scoring)));
     }
     if signals.mcd {
-        out.push(Box::new(McDropout { backend: mcd_backend }));
+        out.push(Box::new(McDropout::new(mcd_backend)));
     }
     Ok(out)
 }
@@ -335,6 +539,23 @@ mod tests {
     }
 
     #[test]
+    fn precomputed_rejects_out_of_range_dataset_index() {
+        // A stale IL table fed a re-indexed (e.g. SVP-filtered)
+        // candidate set must error naming the offending index, not
+        // panic mid-run.
+        let table = [0.5f32, 1.5];
+        let mut p = Precomputed { values: &table };
+        let theta: Arc<Vec<f32>> = Arc::new(Vec::new());
+        let b = batch(&[1, 7, 0], None);
+        let mut sig = SignalSet::default();
+        let err = p.provide(&ctx(&theta, &b), &mut sig).expect_err("OOB index accepted");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("index 7"), "error must name the offending index: {msg}");
+        assert!(msg.contains("2 entries"), "error must name the table size: {msg}");
+        assert!(sig.il.is_none(), "partial gather must not land in the signal set");
+    }
+
+    #[test]
     fn precomputed_reuses_producer_gather_as_refcount_bump() {
         let table = [9.0f32; 4]; // deliberately different from the gather
         let mut p = Precomputed { values: &table };
@@ -346,6 +567,66 @@ mod tests {
         // allocation (no copy)
         assert_eq!(sig.il.as_deref(), Some(&vec![1.5, 2.5]));
         assert!(Arc::ptr_eq(sig.il.as_ref().unwrap(), b.il.as_ref().unwrap()));
+    }
+
+    #[test]
+    fn provider_roles_encode_the_il_dependency() {
+        // Both IL producers are sources (their resolve precedes the
+        // fused-RHO submit in run_step's phase plan); the default role
+        // is Independent. Pool/runtime-backed providers are covered by
+        // the integration parity suites.
+        let table = [0.5f32];
+        assert_eq!(Precomputed { values: &table }.role(), Role::IlSource);
+        struct Plain;
+        impl SignalProvider for Plain {
+            fn name(&self) -> &'static str {
+                "plain"
+            }
+            fn resolve(&mut self, _ctx: &StepCtx, _out: &mut SignalSet) -> Result<()> {
+                Ok(())
+            }
+        }
+        assert_eq!(Plain.role(), Role::Independent);
+    }
+
+    #[test]
+    fn run_step_resolves_sources_before_consumers_submit() {
+        // A minimal IL consumer that records whether the `il` signal
+        // was already readable at submit time — run_step's phase plan
+        // must have resolved the IL source first, even though both
+        // providers sit in the same stack.
+        use std::cell::Cell;
+        use std::rc::Rc;
+        struct SawIl {
+            flag: Rc<Cell<Option<bool>>>,
+        }
+        impl SignalProvider for SawIl {
+            fn name(&self) -> &'static str {
+                "saw_il"
+            }
+            fn role(&self) -> Role {
+                Role::IlConsumer
+            }
+            fn submit(&mut self, _ctx: &StepCtx, out: &SignalSet) -> Result<()> {
+                self.flag.set(Some(out.il.is_some()));
+                Ok(())
+            }
+            fn resolve(&mut self, _ctx: &StepCtx, _out: &mut SignalSet) -> Result<()> {
+                Ok(())
+            }
+        }
+        let table = [0.25f32, 0.75];
+        let theta: Arc<Vec<f32>> = Arc::new(Vec::new());
+        let b = batch(&[1, 0], None);
+        let flag = Rc::new(Cell::new(None));
+        let mut providers: Vec<Box<dyn SignalProvider>> = vec![
+            Box::new(Precomputed { values: &table }),
+            Box::new(SawIl { flag: Rc::clone(&flag) }),
+        ];
+        let mut sig = SignalSet::default();
+        run_step(&mut providers, &ctx(&theta, &b), &mut sig).unwrap();
+        assert_eq!(sig.il.as_deref(), Some(&vec![0.75, 0.25]));
+        assert_eq!(flag.get(), Some(true), "consumer submitted before the IL source resolved");
     }
 
     #[test]

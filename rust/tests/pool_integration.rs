@@ -1,9 +1,10 @@
 //! Integration: the parallel scoring pool must agree exactly with the
 //! single-threaded runtime, survive odd batch shapes + backpressure,
-//! and — the ISSUE-2 acceptance gate — produce bitwise-identical
-//! scores under rate-aware dispatch with arbitrarily hostile EMA
-//! rates (rate skew moves chunks between lanes, never changes what is
-//! computed).
+//! produce bitwise-identical scores under rate-aware dispatch with
+//! arbitrarily hostile EMA rates (rate skew moves chunks between
+//! lanes, never changes what is computed) — and, for the two-phase
+//! submit/wait API, route interleaved tickets' responses by sequence
+//! id and drain dropped tickets so no dispatch can poison the next.
 
 use std::rc::Rc;
 use std::sync::Arc;
@@ -93,9 +94,9 @@ fn hostile_rate_dispatch_is_bitwise_equal_to_uniform() {
         &[0.0, 0.0, 0.0][..],
         &[5.0, 1.0, 1.0][..],
     ] {
-        pool.force_rates(rates);
+        pool.force_rates(rates).unwrap();
         assert_eq!(pool.rho(&theta, &batch, &il).unwrap(), rho_uniform, "rates {rates:?}");
-        pool.force_rates(rates);
+        pool.force_rates(rates).unwrap();
         assert_eq!(pool.fwd(&theta, &batch).unwrap().loss, fwd_uniform.loss, "rates {rates:?}");
     }
     // and the inline runtime agrees to float tolerance as ever
@@ -116,7 +117,7 @@ fn skewed_rates_move_load_between_lanes() {
         rt.init(3).unwrap().theta
     };
     let (batch, il) = rand_batch(320 * 10, 5);
-    pool.force_rates(&[4.0, 1.0]);
+    pool.force_rates(&[4.0, 1.0]).unwrap();
     let before = pool.worker_loads();
     pool.rho(&st_theta, &batch, &il).unwrap();
     let after = pool.worker_loads();
@@ -182,7 +183,7 @@ fn pool_mcdropout_matches_single_thread() {
     }
     // mcdropout parity under hostile rates, same pin as rho/fwd
     let uniform = a;
-    pool.force_rates(&[1e-9, 1e9]);
+    pool.force_rates(&[1e-9, 1e9]).unwrap();
     let skewed = pool.mcdropout(&theta, &batch, 42).unwrap();
     assert_eq!(skewed.loss, uniform.loss);
     assert_eq!(skewed.bald, uniform.bald);
@@ -252,7 +253,7 @@ fn online_il_provider_pool_vs_inline_parity() {
             let mut sig = SignalSet::default();
             let ctx =
                 StepCtx { theta: &theta, il_theta: Some(&il_theta), batch: &batch, mcd_seed: 0 };
-            OnlineIl { backend }.provide(&ctx, &mut sig).unwrap();
+            OnlineIl::new(backend).provide(&ctx, &mut sig).unwrap();
             sig.il.unwrap()
         };
         let inline = score(Backend::Inline(&il_rt));
@@ -267,6 +268,183 @@ fn online_il_provider_pool_vs_inline_parity() {
             );
         }
     }
+}
+
+#[test]
+fn force_rates_rejects_length_mismatch() {
+    // The RateEma::set zero-pad hazard: a short injected vector used
+    // to mark the omitted workers dead, starving real lanes from a
+    // test/ops hook typo. Now a hard, named error.
+    let Some((manifest, _client)) = setup() else { return };
+    let pool = mk_pool(&manifest, 3);
+    let err = pool.force_rates(&[1.0, 2.0]).expect_err("short rate vector accepted");
+    assert!(format!("{err:#}").contains("2 workers"), "unhelpful error: {err:#}");
+    assert!(pool.force_rates(&[1.0, 2.0, 3.0, 4.0]).is_err(), "long vector accepted");
+    pool.force_rates(&[1.0, 2.0, 3.0]).unwrap();
+    assert_eq!(pool.worker_rates(), vec![1.0, 2.0, 3.0]);
+}
+
+#[test]
+fn two_phase_submit_wait_matches_sync_api() {
+    // The tentpole API pin: submit + wait assembles exactly what the
+    // one-shot call does (the one-shot IS submit+wait, but this keeps
+    // the split path honest if the wrappers ever diverge).
+    let Some((manifest, client)) = setup() else { return };
+    let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_small", 64, 10).unwrap();
+    let st = rt.init(8).unwrap();
+    let theta = st.theta_snapshot();
+    let pool = mk_pool(&manifest, 2);
+    let (batch, il) = rand_batch(991, 17); // ragged tail
+    let sync_fwd = pool.fwd(&theta, &batch).unwrap();
+    let sync_rho = pool.rho(&theta, &batch, &il).unwrap();
+    let t = pool.submit_fwd(&theta, &batch).unwrap();
+    assert!(t.chunks() > 0);
+    assert_eq!(pool.submit_fwd(&theta, &batch).unwrap().wait_fwd().unwrap().loss, sync_fwd.loss);
+    assert_eq!(t.wait_fwd().unwrap().gnorm, sync_fwd.gnorm);
+    assert_eq!(pool.submit_rho(&theta, &batch, &il).unwrap().wait_rho().unwrap(), sync_rho);
+    // waiting a ticket with the wrong kind is a named error
+    let t = pool.submit_fwd(&theta, &batch).unwrap();
+    assert!(t.wait_rho().is_err(), "kind-mismatched wait accepted");
+    // ...and the mismatch drain didn't poison the pool
+    assert_eq!(pool.rho(&theta, &batch, &il).unwrap(), sync_rho);
+}
+
+#[test]
+fn interleaved_tickets_route_out_of_order_responses() {
+    // Two outstanding dispatches on ONE pool under hostile forced
+    // rates, waited in reverse submission order: responses for the
+    // not-yet-waited ticket arrive interleaved on the shared channel
+    // and must buffer by sequence id, not bleed into the wrong
+    // assembly. Scores must stay bitwise the serialized ones.
+    let Some((manifest, client)) = setup() else { return };
+    let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_small", 64, 10).unwrap();
+    let st = rt.init(9).unwrap();
+    let theta = st.theta_snapshot();
+    let pool = mk_pool(&manifest, 3);
+    let (batch_a, il_a) = rand_batch(1601, 21); // 6 chunks, ragged tail
+    let (batch_b, _) = rand_batch(737, 22);
+    let fwd_ref = pool.fwd(&theta, &batch_b).unwrap();
+    let rho_ref = pool.rho(&theta, &batch_a, &il_a).unwrap();
+    let hostile: [&[f64]; 3] =
+        [&[1e9, 1e-9, 0.0], &[f64::NAN, f64::INFINITY, 3.0], &[5.0, 1.0, 1.0]];
+    for rates in hostile {
+        pool.force_rates(rates).unwrap();
+        let ta = pool.submit_rho(&theta, &batch_a, &il_a).unwrap();
+        let tb = pool.submit_fwd(&theta, &batch_b).unwrap();
+        // wait B first: every response of A that arrives meanwhile is
+        // parked for A's later wait
+        let fwd_b = tb.wait_fwd().unwrap();
+        let rho_a = ta.wait_rho().unwrap();
+        assert_eq!(fwd_b.loss, fwd_ref.loss, "rates {rates:?}");
+        assert_eq!(fwd_b.gnorm, fwd_ref.gnorm, "rates {rates:?}");
+        assert_eq!(rho_a, rho_ref, "rates {rates:?}");
+    }
+    // stats drained fully: nothing left in flight
+    let report = pool.report();
+    assert_eq!(
+        report.per_worker.iter().map(|w| w.chunks).sum::<u64>(),
+        report.chunks,
+        "per-worker chunk accounting desynced from the dispatch total"
+    );
+}
+
+#[test]
+fn dropped_ticket_does_not_poison_the_next_call() {
+    // Abandoning a submitted dispatch must drain it on Drop — the
+    // next call on the same pool collects exactly its own responses.
+    let Some((manifest, client)) = setup() else { return };
+    let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_small", 64, 10).unwrap();
+    let st = rt.init(10).unwrap();
+    let theta = st.theta_snapshot();
+    let pool = mk_pool(&manifest, 2);
+    let (batch, il) = rand_batch(1290, 31);
+    let rho_ref = pool.rho(&theta, &batch, &il).unwrap();
+    let fwd_ref = pool.fwd(&theta, &batch).unwrap();
+    let before = pool.report();
+    {
+        let _abandoned = pool.submit_fwd(&theta, &batch).unwrap();
+        // dropped here without wait
+    }
+    assert_eq!(pool.rho(&theta, &batch, &il).unwrap(), rho_ref, "poisoned by dropped ticket");
+    // drop with ANOTHER ticket outstanding: the drop-drain must park
+    // the live ticket's responses instead of eating them
+    let keep = pool.submit_rho(&theta, &batch, &il).unwrap();
+    {
+        let _abandoned = pool.submit_fwd(&theta, &batch).unwrap();
+    }
+    assert_eq!(keep.wait_rho().unwrap(), rho_ref, "live ticket lost responses to a drop-drain");
+    assert_eq!(pool.fwd(&theta, &batch).unwrap().loss, fwd_ref.loss);
+    // dropped dispatches are still accounted (their chunks were real
+    // work): 5 dispatches total since the snapshot
+    let delta = pool.report().since(&before);
+    assert_eq!(delta.dispatches, 5, "dropped dispatches vanished from the stats");
+    assert_eq!(delta.per_worker.iter().map(|w| w.chunks).sum::<u64>(), delta.chunks);
+}
+
+#[test]
+fn pool_rejects_desynced_batch_columns() {
+    // Satellite shape-guard: per-candidate columns that disagree on
+    // the row count must be a named error at dispatch, not a worker
+    // slice panic or an out-of-range index downstream.
+    let Some((manifest, _client)) = setup() else { return };
+    let pool = mk_pool(&manifest, 1);
+    let theta_ok = Arc::new(vec![0.0f32; pool_param_count(&manifest)]);
+    let (batch, _) = rand_batch(32, 41);
+    // idx desynced from ys (tracker/IL gathers would index OOB)
+    let desynced_idx = Arc::new(CandBatch {
+        step: 0,
+        rolled: false,
+        idx: vec![0, 1, 2], // 3 indices for 32 rows
+        xs: batch.xs.clone(),
+        ys: batch.ys.clone(),
+        il: None,
+        cursor: Default::default(),
+    });
+    let err = pool.fwd(&theta_ok, &desynced_idx).expect_err("desynced idx accepted");
+    assert!(format!("{err:#}").contains("idx"), "error must name the column: {err:#}");
+    // producer-gathered il desynced from ys
+    let desynced_il = Arc::new(CandBatch {
+        step: 0,
+        rolled: false,
+        idx: Vec::new(),
+        xs: batch.xs.clone(),
+        ys: batch.ys.clone(),
+        il: Some(Arc::new(vec![0.5; 7])),
+        cursor: Default::default(),
+    });
+    let err = pool.fwd(&theta_ok, &desynced_il).expect_err("desynced il accepted");
+    assert!(format!("{err:#}").contains("il"), "error must name the column: {err:#}");
+    // empty batch is named too
+    let empty = CandBatch::for_scoring(Vec::new(), Vec::new());
+    assert!(pool.fwd(&theta_ok, &empty).is_err(), "empty batch accepted");
+}
+
+#[test]
+fn overlapping_dispatches_account_inflight_and_overlap() {
+    // Two pools with a ticket in flight on each: both must report
+    // in-flight seconds, and — since their open intervals share a
+    // segment by construction (submit A, submit B, wait A, wait B) —
+    // both must report cross-plane overlap.
+    let Some((manifest, client)) = setup() else { return };
+    let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_small", 64, 10).unwrap();
+    let st = rt.init(12).unwrap();
+    let theta = st.theta_snapshot();
+    let pool_a = mk_pool(&manifest, 2);
+    let pool_b = mk_pool(&manifest, 2);
+    let (batch, il) = rand_batch(1601, 51);
+    let start_a = pool_a.report();
+    let start_b = pool_b.report();
+    let ta = pool_a.submit_rho(&theta, &batch, &il).unwrap();
+    let tb = pool_b.submit_fwd(&theta, &batch).unwrap();
+    let _ = ta.wait_rho().unwrap();
+    let _ = tb.wait_fwd().unwrap();
+    let a = pool_a.report().since(&start_a);
+    let b = pool_b.report().since(&start_b);
+    assert!(a.inflight_s > 0.0, "pool A reported no in-flight time");
+    assert!(b.inflight_s > 0.0, "pool B reported no in-flight time");
+    assert!(a.overlap_s > 0.0, "pool A reported no overlap: {a:?}");
+    assert!(b.overlap_s > 0.0, "pool B reported no overlap: {b:?}");
+    assert!(a.inflight_s >= a.overlap_s && b.inflight_s >= b.overlap_s);
 }
 
 fn pool_param_count(manifest: &Manifest) -> usize {

@@ -451,6 +451,102 @@ fn every_method_streams_through_the_pool() {
 }
 
 #[test]
+fn overlapped_two_plane_fwds_match_inline_bitwise_under_hostile_rates() {
+    // The overlapped-dispatch acceptance gate. rho_loss + online_il +
+    // track_props builds the stack [OnlineIl(il plane), FwdStats
+    // (target plane)]: both providers SUBMIT before either resolves,
+    // so the il-plane fwd and the target-plane fwd for the same
+    // candidate batch are in flight concurrently — the configuration
+    // the ROADMAP's "cross-plane overlapped dispatch" item names.
+    // (The fused-RHO variant serializes on its il data dependency and
+    // is covered by two_plane_online_il_matches_single_plane_bitwise.)
+    // Overlap must change wall-clock only: curves bitwise-equal to
+    // the fully inline reference at workers=1, under forced hostile
+    // EMA rates on both pools.
+    let Some(lab) = lab() else { return };
+    let mut cfg = base_cfg(Method::RhoLoss);
+    cfg.arch = "mlp_base".into();
+    cfg.il_arch = "mlp_small".into();
+    cfg.online_il = true;
+    cfg.track_props = true;
+    cfg.epochs = 2;
+    let bundle = lab.bundle(&cfg.dataset);
+    let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+    let il_rt = lab.runtime(&cfg.il_arch, &cfg.dataset).unwrap();
+    let il = lab.il_context(&cfg, &bundle).unwrap();
+
+    // serialized reference: fully inline (the PR-3 shape)
+    let inline =
+        Session::new(&cfg, &target).il_runtime(&il_rt).run(&bundle, Some(&il)).unwrap();
+
+    let target_plane = plane_w1(&lab, "target", &cfg.arch);
+    let il_plane = plane_w1(&lab, "il", &cfg.il_arch);
+    target_plane.pool.force_rates(&[f64::NAN]).unwrap();
+    il_plane.pool.force_rates(&[1e-9]).unwrap();
+    let two = Session::new(&cfg, &target)
+        .il_runtime(&il_rt)
+        .plane(&target_plane)
+        .plane(&il_plane)
+        .run(&bundle, Some(&il))
+        .unwrap();
+    assert_curves_bitwise(&inline.curve, &two.curve, "overlapped two-plane vs inline");
+    assert_eq!(
+        inline.il_final_accuracy.unwrap().to_bits(),
+        two.il_final_accuracy.unwrap().to_bits(),
+        "online-IL trajectory drifted under overlapped dispatch"
+    );
+    // and the overlap actually happened: every step had both planes'
+    // fwd dispatches in flight at once, so both report overlap time
+    assert_eq!(two.plane_timings.len(), 2);
+    for t in &two.plane_timings {
+        assert!(t.inflight_s > 0.0, "plane `{}` reported no in-flight time", t.plane);
+        assert!(
+            t.overlap_s > 0.0,
+            "plane `{}` reported no cross-plane overlap — dispatches serialized?",
+            t.plane
+        );
+        assert!(t.inflight_s >= t.overlap_s, "plane `{}`", t.plane);
+    }
+    assert!(two.cross_plane_overlap_s() > 0.0);
+    assert!(two.overlap_s_per_step() > 0.0);
+}
+
+#[test]
+fn mcd_with_tracking_interleaves_two_tickets_on_one_pool() {
+    // bald + track_props drives FwdStats AND McDropout through the
+    // same target pool; under the phase plan both submit before
+    // either resolves — two outstanding tickets on one pool every
+    // step, routed by dispatch sequence id. Curves must stay bitwise
+    // the inline reference.
+    let Some(lab) = lab() else { return };
+    let mut cfg = base_cfg(Method::Bald);
+    cfg.arch = "mlp_base".into();
+    cfg.track_props = true;
+    cfg.epochs = 2;
+    let bundle = lab.bundle(&cfg.dataset);
+    let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+    let inline = Session::new(&cfg, &target).run(&bundle, None).unwrap();
+
+    let fwd = lab.manifest.find(&cfg.arch, 64, 10, "fwd_b320").unwrap();
+    let sel = lab.manifest.find(&cfg.arch, 64, 10, "select_b320").unwrap();
+    let Ok(mcd) = lab.manifest.find(&cfg.arch, 64, 10, "mcdropout_b320") else {
+        eprintln!("skipping: no mcdropout artifact for {}", cfg.arch);
+        return;
+    };
+    let pool = ScoringPool::new(
+        fwd,
+        sel,
+        Some(mcd),
+        &PoolConfig { workers: 1, lane_depth: 4, ..PoolConfig::default() },
+    )
+    .unwrap();
+    let plane = ComputePlane::new("target", cfg.arch.clone(), Rc::new(pool));
+    let pooled = Session::new(&cfg, &target).plane(&plane).run(&bundle, None).unwrap();
+    assert_curves_bitwise(&inline.curve, &pooled.curve, "bald+tracking interleaved tickets");
+    assert!(pooled.plane_timings[0].chunks > 0);
+}
+
+#[test]
 fn svp_coreset_filters_and_trains() {
     let Some(lab) = lab() else { return };
     let mut cfg = base_cfg(Method::Svp);
