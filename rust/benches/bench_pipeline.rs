@@ -11,7 +11,10 @@
 //! measured numbers to `BENCH_pipeline.json` (one entry per method ×
 //! workers × source, plus per-plane dispatch/queue-wait timings and
 //! the shard-ingest bytes/sec); committing the file per PR makes the
-//! perf trajectory machine-trackable.
+//! perf trajectory machine-trackable. The two-plane rho_loss +
+//! online_il run is additionally swept over `speculate` ∈ {0, 1} and
+//! records `train_overlap_s` — the scoring wall-clock that ran under
+//! an open gradient step, i.e. what staleness-1 speculation buys.
 //!
 //! `RHO_BENCH_SMOKE=1` switches to smoke mode (tiny dataset scale, 1
 //! epoch — a handful of steps per method, one worker) so CI can prove
@@ -40,14 +43,16 @@ fn write_doc(doc: Value) {
 
 /// The cross-plane overlap record for the two-plane `rho_loss` +
 /// `online_il` run: wall seconds each plane had work in flight, wall
-/// seconds they overlapped, and the per-step overlap headline. Always
-/// present in BENCH_pipeline.json (zeroed when skipped) so tooling can
-/// rely on the schema.
+/// seconds they overlapped, the per-step overlap headline, and the
+/// scoring-over-train overlap `speculate=1` buys. Always present in
+/// BENCH_pipeline.json (zeroed when skipped) so tooling can rely on
+/// the schema.
 fn overlap_doc(
     target_inflight_s: f64,
     il_inflight_s: f64,
     overlap_s: f64,
     per_step_s: f64,
+    train_overlap_s: f64,
     steps: u64,
 ) -> Value {
     obj(vec![
@@ -55,8 +60,15 @@ fn overlap_doc(
         ("il_inflight_s", num(il_inflight_s)),
         ("overlap_s", num(overlap_s)),
         ("per_step_s", num(per_step_s)),
+        ("train_overlap_s", num(train_overlap_s)),
         ("steps", num(steps as f64)),
     ])
+}
+
+/// The `speculate` sweep axis, recorded top-level so tooling can
+/// discover which speculation settings the entries cover.
+fn speculate_axis() -> Value {
+    arr([num(0.0), num(1.0)])
 }
 
 fn main() {
@@ -71,7 +83,8 @@ fn main() {
             ("bench", s("pipeline")),
             ("skipped", Value::Bool(true)),
             ("reason", s("artifact manifest missing")),
-            ("overlap", overlap_doc(0.0, 0.0, 0.0, 0.0, 0)),
+            ("speculate", speculate_axis()),
+            ("overlap", overlap_doc(0.0, 0.0, 0.0, 0.0, 0.0, 0)),
         ]));
         return;
     }
@@ -163,9 +176,13 @@ fn main() {
     // the cheap IL fwd is in flight concurrently with the expensive
     // target fwd for the same batch (the fused-RHO variant serializes
     // on its il-signal data dependency; `select` falls back to
-    // loss − il here). The per-step overlap metric below is the
-    // acceptance headline: >0 means the target-plane and il-plane
-    // forwards genuinely ran concurrently.
+    // loss − il here). The run is swept over speculate ∈ {0, 1}: the
+    // speculative leg additionally submits batch t+1's target fwd
+    // before step t's gradient update, so `train_overlap_s` (scoring
+    // wall-clock under an open train step) goes >0 only at
+    // speculate=1. The per-step overlap metric below is the acceptance
+    // headline: >0 means the target-plane and il-plane forwards
+    // genuinely ran concurrently.
     let overlap = {
         let mut cfg = base.clone();
         cfg.method = Method::RhoLoss;
@@ -175,50 +192,67 @@ fn main() {
         let il_rt = lab.runtime(&cfg.il_arch, &cfg.dataset).unwrap();
         let workers = if smoke { 1 } else { 2 };
         let pc = PoolConfig { workers, lane_depth: 16, ..PoolConfig::default() };
-        let t_pool = ScoringPool::new(fwd, sel, None, &pc).unwrap();
-        let target_plane = ComputePlane::new("target", base.arch.clone(), Rc::new(t_pool));
         let ifwd = lab.manifest.find(&cfg.il_arch, d, c, "fwd_b320").unwrap();
         let isel = lab.manifest.find(&cfg.il_arch, d, c, "select_b320").unwrap();
-        let i_pool = ScoringPool::new(ifwd, isel, None, &pc).unwrap();
-        let il_plane = ComputePlane::new("il", cfg.il_arch.clone(), Rc::new(i_pool));
-        let res = Session::new(&cfg, &target)
-            .il_runtime(&il_rt)
-            .plane(&target_plane)
-            .plane(&il_plane)
-            .prefetch(4)
-            .run(&bundle, Some(&il))
-            .unwrap();
-        let sps = res.steps_per_sec();
-        let by_plane = |name: &str| {
-            res.plane_timings.iter().find(|t| t.plane == name).cloned().unwrap_or_default()
-        };
-        let (tp, ip) = (by_plane("target"), by_plane("il"));
-        println!(
-            "rho_loss+online_il 2-plane: {sps:>7.1} steps/s, overlap {:.2}ms/step \
-             (target in-flight {:.2}s ∥ il in-flight {:.2}s over {} steps)",
-            res.overlap_s_per_step() * 1e3,
-            tp.inflight_s,
-            ip.inflight_s,
-            res.steps
-        );
-        entries.push(obj(vec![
-            ("method", s("rho_loss")),
-            ("online_il", Value::Bool(true)),
-            ("source", s("memory")),
-            ("workers", num(workers as f64)),
-            ("steps_per_sec", num(sps)),
-            ("plane", s("target+il")),
-            ("inflight_s", num(tp.inflight_s + ip.inflight_s)),
-            ("overlap_s", num(res.cross_plane_overlap_s())),
-            ("overlap_s_per_step", num(res.overlap_s_per_step())),
-        ]));
-        overlap_doc(
-            tp.inflight_s,
-            ip.inflight_s,
-            res.cross_plane_overlap_s(),
-            res.overlap_s_per_step(),
-            res.steps,
-        )
+        let mut headline = overlap_doc(0.0, 0.0, 0.0, 0.0, 0.0, 0);
+        for speculate in [false, true] {
+            // Fresh pools per sweep point so worker threads and ledger
+            // counters start cold for both settings.
+            let t_pool = ScoringPool::new(fwd, sel, None, &pc).unwrap();
+            let target_plane =
+                ComputePlane::new("target", base.arch.clone(), Rc::new(t_pool));
+            let i_pool = ScoringPool::new(ifwd, isel, None, &pc).unwrap();
+            let il_plane = ComputePlane::new("il", cfg.il_arch.clone(), Rc::new(i_pool));
+            let res = Session::new(&cfg, &target)
+                .il_runtime(&il_rt)
+                .plane(&target_plane)
+                .plane(&il_plane)
+                .prefetch(4)
+                .speculate(speculate)
+                .run(&bundle, Some(&il))
+                .unwrap();
+            let sps = res.steps_per_sec();
+            let by_plane = |name: &str| {
+                res.plane_timings.iter().find(|t| t.plane == name).cloned().unwrap_or_default()
+            };
+            let (tp, ip) = (by_plane("target"), by_plane("il"));
+            println!(
+                "rho_loss+online_il 2-plane speculate={}: {sps:>7.1} steps/s, overlap \
+                 {:.2}ms/step, over-train {:.2}s, spec-hit {:.0}% \
+                 (target in-flight {:.2}s ∥ il in-flight {:.2}s over {} steps)",
+                speculate as u8,
+                res.overlap_s_per_step() * 1e3,
+                res.train_overlap_s(),
+                res.spec_hit_ratio() * 100.0,
+                tp.inflight_s,
+                ip.inflight_s,
+                res.steps
+            );
+            entries.push(obj(vec![
+                ("method", s("rho_loss")),
+                ("online_il", Value::Bool(true)),
+                ("source", s("memory")),
+                ("workers", num(workers as f64)),
+                ("speculate", num(speculate as u8 as f64)),
+                ("steps_per_sec", num(sps)),
+                ("plane", s("target+il")),
+                ("inflight_s", num(tp.inflight_s + ip.inflight_s)),
+                ("overlap_s", num(res.cross_plane_overlap_s())),
+                ("overlap_s_per_step", num(res.overlap_s_per_step())),
+                ("train_overlap_s", num(res.train_overlap_s())),
+                ("spec_hit_ratio", num(res.spec_hit_ratio())),
+                ("accepted_stale", num(res.accepted_stale as f64)),
+            ]));
+            headline = overlap_doc(
+                tp.inflight_s,
+                ip.inflight_s,
+                res.cross_plane_overlap_s(),
+                res.overlap_s_per_step(),
+                res.train_overlap_s(),
+                res.steps,
+            );
+        }
+        headline
     };
 
     // --- source=shards axis: the on-disk data plane ------------------
@@ -300,6 +334,7 @@ fn main() {
         ("uniform_over_rho_sync", num(uni_sps / rho_sps)),
         ("ingest_bytes_per_sec", num(ingest_bps)),
         ("ingest_rows", num(report.total_rows() as f64)),
+        ("speculate", speculate_axis()),
         ("overlap", overlap),
         ("entries", Value::Array(entries)),
     ]));

@@ -88,7 +88,7 @@ fn main() {
     let fwd_meta = manifest.find("mlp_base", 256, 10, "fwd_b320").unwrap();
     let sel_meta = manifest.find("mlp_base", 256, 10, "select_b320").unwrap();
     let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_base", 256, 10).unwrap();
-    let theta = rt.init(3).unwrap().theta;
+    let theta = rt.init(3).unwrap().theta_snapshot();
     let big: Vec<u32> = (0..3200u32).map(|i| i % 20_000).collect();
     let (bxs, bys) = ds.gather(&big);
     // zero-copy dispatch: the batch and il cross into the pool as Arc

@@ -78,6 +78,11 @@ pub struct RunConfig {
     /// Candidate batches the engine's producer buffers ahead of the
     /// trainer (min 1).
     pub prefetch: usize,
+    /// Speculative pipelined stepping: score batch t+1 against θ_t
+    /// while step t's gradient update runs, accepting the staleness-1
+    /// ranking (paper's ranking-drift robustness). Off = the
+    /// bitwise-reference serialized walk.
+    pub speculate: bool,
     /// JSONL event-log path ("" = disabled).
     pub events: String,
     /// Engine steps between session checkpoints (0 = no checkpointing;
@@ -142,6 +147,7 @@ impl Default for RunConfig {
             lane_depth: 0,
             rate_alpha: 0.3,
             prefetch: 4,
+            speculate: false,
             events: String::new(),
             checkpoint_every: 0,
             checkpoint_path: String::new(),
@@ -190,6 +196,7 @@ impl RunConfig {
             "lane_depth" => self.lane_depth = v.parse()?,
             "rate_alpha" => self.rate_alpha = v.parse()?,
             "prefetch" => self.prefetch = v.parse()?,
+            "speculate" => self.speculate = parse_bool(v)?,
             "events" => self.events = v.into(),
             "checkpoint_every" => self.checkpoint_every = v.parse()?,
             "checkpoint_path" => self.checkpoint_path = v.into(),
@@ -400,6 +407,28 @@ mod tests {
         assert_eq!(c.epochs, 3);
         assert_eq!(c.big_batch(), 64);
         assert!(c.track_props);
+    }
+
+    #[test]
+    fn speculate_key_round_trips() {
+        // default-off: the serialized walk is the bitwise reference
+        let mut c = RunConfig::default();
+        assert!(!c.speculate);
+        c.apply_pairs(["speculate=1"]).unwrap();
+        assert!(c.speculate);
+        c.apply_pairs(["speculate=0"]).unwrap();
+        assert!(!c.speculate);
+        c.apply_pairs(["speculate=true"]).unwrap();
+        assert!(c.speculate);
+        c.validate().unwrap();
+        // ...and it stays out of the run identity tag (same run,
+        // different wall-clock shape)
+        let mut a = RunConfig::default();
+        let mut b = RunConfig::default();
+        b.speculate = true;
+        assert_eq!(a.tag(), b.tag());
+        a.speculate = true;
+        assert_eq!(a.tag(), b.tag());
     }
 
     #[test]

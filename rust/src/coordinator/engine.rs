@@ -53,6 +53,36 @@
 //! in-flight/overlap wall-clock lands in the `pool_stats` events and
 //! [`RunResult::plane_timings`](super::session::RunResult).
 //!
+//! ## The step loop and speculative pipelining
+//!
+//! Each consumer iteration walks: sync IL theta → score the candidate
+//! batch through the provider phase plan → select → (optionally
+//! submit-ahead) → train on the selected rows → eval/checkpoint at
+//! boundaries. With `speculate = 0` (default) the walk is strictly
+//! serialized — score(θ_t, B_t) → train → score(θ_{t+1}, B_{t+1}) —
+//! and is bitwise-identical to the pre-speculation engine. With
+//! `speculate = 1` the loop takes batch t+1 off the producer channel
+//! *before* the gradient step and enqueues its pool dispatches against
+//! the θ_t snapshot
+//! ([`provider::submit_ahead`](crate::selection::provider::submit_ahead)),
+//! so scoring runs under the open train step (the paper's
+//! ranking-drift robustness licenses accepting the staleness-1
+//! ranking); at step t+1 the normal
+//! [`run_step`](crate::selection::provider::run_step) walk waits on
+//! those tickets — idempotent submits — with `StepCtx::theta` still
+//! the θ_t snapshot, so pooled and inline runs accept the *same*
+//! stale ranking and a fixed seed stays deterministic. The gradient
+//! step holds a [`TrainSpan`] guard, so every second the scoring
+//! planes were in flight under it accrues as `train_overlap_s` in the
+//! pool ledger — the attribution `bench_pipeline` sweeps. Online-IL
+//! signals never ride the speculative leg: IL parameters update
+//! during the overlapped train step and are always scored fresh.
+//! Checkpoints drain first (`provider::flush` + drop the stale
+//! snapshot, counted in `RunResult::spec_flushes`), so a resumed run
+//! re-derives batch t+1 from the serialized sampler cursor and scores
+//! it fresh exactly like the uninterrupted run does after its flush —
+//! resume stays bitwise-exact with no checkpoint-format change.
+//!
 //! Checkpoint/resume: with `checkpoint_every > 0` the engine
 //! atomically writes a [`SessionCheckpoint`] — target (+ online-IL)
 //! `TrainState`, selection-RNG cursor, **sampler cursor**, run
@@ -95,9 +125,9 @@ use crate::data::loader::{ShardLayout, StreamSampler};
 use crate::data::store::{materialize_subset, DataSource};
 use crate::data::{Bundle, Dataset};
 use crate::runtime::handle::ModelRuntime;
-use crate::runtime::params::TrainState;
+use crate::runtime::params::{ThetaSnapshot, TrainState};
 use crate::runtime::plane::{ComputePlane, PlaneSet, PLANE_IL, PLANE_MCD, PLANE_TARGET};
-use crate::runtime::pool::PoolReport;
+use crate::runtime::pool::{PoolReport, TrainSpan};
 use crate::runtime::updater::IlUpdater;
 use crate::selection::provider::{self, SignalSet, StackSpec, StepCtx};
 use crate::selection::select;
@@ -118,6 +148,16 @@ enum IlDriver {
     None,
     Inline(TrainState),
     Async(IlUpdater),
+}
+
+/// One batch of speculative lookahead: batch t+1 taken off the
+/// producer channel at step t, plus the θ_t snapshot its pool
+/// dispatches were submitted against. `theta` drops to `None` when a
+/// checkpoint flushes the speculation — the step then re-scores fresh
+/// (exactly what a resumed run would do).
+struct Lookahead {
+    batch: Arc<CandBatch>,
+    theta: Option<ThetaSnapshot>,
 }
 
 /// The unified engine. An empty [`PlaneSet`] scores inline on the
@@ -144,6 +184,11 @@ pub struct Engine<'a> {
     pub checkpoint_path: Option<PathBuf>,
     /// Resume from this session checkpoint before stepping.
     pub resume: Option<PathBuf>,
+    /// Speculative pipelined stepping: score batch t+1 against θ_t
+    /// while step t's gradient update runs, accepting the staleness-1
+    /// ranking. Off by default — the serialized walk is the bitwise
+    /// reference.
+    pub speculate: bool,
 }
 
 /// The data a run trains and evaluates on: any [`DataSource`] for the
@@ -172,6 +217,7 @@ impl<'a> Engine<'a> {
             checkpoint_every: 0,
             checkpoint_path: None,
             resume: None,
+            speculate: false,
         }
     }
 
@@ -413,6 +459,10 @@ impl<'a> Engine<'a> {
         let mut curve = Curve::default();
         let mut tracker = SelectionTracker::new();
         let mut last_acc = resumed.as_ref().map(|c| c.last_acc).unwrap_or(0.0);
+        // Speculation observability: steps that accepted a stale
+        // (θ_{t-1}) ranking, and lookaheads flushed by a checkpoint.
+        let mut accepted_stale: u64 = 0;
+        let mut spec_flushes: u64 = 0;
         let sw = Stopwatch::start();
         // Per-run, per-plane observability: pools are cached across
         // runs, so subtract a run-start snapshot from the cumulative
@@ -502,24 +552,37 @@ impl<'a> Engine<'a> {
                 let (mut sel_xs, mut sel_ys) = (Vec::new(), Vec::new());
                 let mut sig = SignalSet::default();
                 let mut eval_buf: Option<(Vec<f32>, Vec<i32>)> = None;
-                let mut mcd_seed = cfg.seed as i32;
-                if method.needs_mcdropout() {
-                    // the seed advances once per step — rejoin the
-                    // sequence at the resume cursor
-                    mcd_seed = mcd_seed.wrapping_add(start_step as i32);
-                }
+                // MC-dropout seeds are a pure per-step function
+                // (seed + step, wrapping), so a resumed run and a
+                // speculative lookahead both rejoin the sequence
+                // exactly.
+                let step_seed = |step: u64| {
+                    if method.needs_mcdropout() {
+                        (cfg.seed as i32).wrapping_add(step as i32)
+                    } else {
+                        cfg.seed as i32
+                    }
+                };
+                let mut lookahead: Option<Lookahead> = None;
                 let d = self.target.d;
                 for _ in start_step..total_steps {
-                    let b = rx.recv().map_err(|_| anyhow!("candidate producer died"))?;
+                    // A step's batch is the armed lookahead when one
+                    // exists (speculate=1), else fresh off the channel
+                    // — the speculate=0 path recvs here exactly like
+                    // the serialized engine always has.
+                    let (b, stale_theta) = match lookahead.take() {
+                        Some(la) => (la.batch, la.theta),
+                        None => {
+                            (rx.recv().map_err(|_| anyhow!("candidate producer died"))?, None)
+                        }
+                    };
                     if b.rolled {
                         tracker.roll_epoch(last_acc);
                         let e = tracker.epochs.len();
                         let fnoisy = tracker.noisy_by_epoch().last().copied().unwrap_or(0.0);
                         events.epoch_roll(e, fnoisy);
                     }
-                    if method.needs_mcdropout() {
-                        mcd_seed = mcd_seed.wrapping_add(1);
-                    }
+                    let mcd_seed = step_seed(b.step);
 
                     // scoring signals via the provider stack's
                     // overlapped phase plan (submit every pool-backed
@@ -528,15 +591,28 @@ impl<'a> Engine<'a> {
                     // theta snapshot is the FIFO sync point — every
                     // queued IL update has been applied before it
                     // returns
-                    let il_theta_step: Option<Arc<Vec<f32>>> = match &il_driver {
+                    let il_theta_step: Option<ThetaSnapshot> = match &il_driver {
                         IlDriver::Inline(st) => Some(st.theta_snapshot()),
                         IlDriver::Async(u) => Some(u.theta()?),
                         IlDriver::None => None,
                     };
                     sig.clear();
+                    // Accepted staleness: a step entered through an
+                    // un-flushed lookahead scores with the θ of the
+                    // *previous* step — uniformly, whether its
+                    // dispatches were pre-submitted (pools; run_step's
+                    // idempotent submits just wait) or computed now
+                    // (inline fallback).
+                    let score_theta: ThetaSnapshot = match stale_theta {
+                        Some(snap) => {
+                            accepted_stale += 1;
+                            snap
+                        }
+                        None => state.theta_snapshot(),
+                    };
                     {
                         let ctx = StepCtx {
-                            theta: &state.theta,
+                            theta: &score_theta,
                             il_theta: il_theta_step.as_ref(),
                             batch: &b,
                             mcd_seed,
@@ -555,8 +631,38 @@ impl<'a> Engine<'a> {
                         tracker.record(train, &picked_ds, correct.as_deref());
                     }
 
+                    // --- speculative lookahead (speculate=1) --------
+                    // Take batch t+1 off the channel now and enqueue
+                    // its pool dispatches against θ_t, so they run
+                    // under the gradient step below. IL stays off this
+                    // leg when it tracks live parameters (see
+                    // provider::submit_ahead); the θ_t snapshot is
+                    // stashed so step t+1 resolves against exactly the
+                    // parameters it was submitted with.
+                    if self.speculate && b.step < total_steps {
+                        let next =
+                            rx.recv().map_err(|_| anyhow!("candidate producer died"))?;
+                        let theta_now = state.theta_snapshot();
+                        let mut scratch = SignalSet::default();
+                        {
+                            let ctx_next = StepCtx {
+                                theta: &theta_now,
+                                il_theta: None,
+                                batch: &next,
+                                mcd_seed: step_seed(next.step),
+                            };
+                            provider::submit_ahead(&mut providers, &ctx_next, &mut scratch)?;
+                        }
+                        lookahead = Some(Lookahead { batch: next, theta: Some(theta_now) });
+                    }
+
                     // gradient step(s): selected rows come straight out
-                    // of the candidate buffer the producer gathered
+                    // of the candidate buffer the producer gathered.
+                    // The TrainSpan guard marks the step open in the
+                    // pool ledger: any scoring in flight under it (the
+                    // speculative dispatches above) accrues
+                    // train_overlap_s.
+                    let _train_span = TrainSpan::begin();
                     for (chunk_i, chunk) in sel.picked.chunks(self.target.train_batch).enumerate() {
                         sel_xs.clear();
                         sel_ys.clear();
@@ -590,6 +696,7 @@ impl<'a> Engine<'a> {
                             IlDriver::None => {}
                         }
                     }
+                    drop(_train_span);
 
                     if b.step % eval_every == 0 || b.step == total_steps {
                         // first boundary: adopt the producer-side
@@ -623,6 +730,21 @@ impl<'a> Engine<'a> {
                     // reflects every update up to this step
                     if let Some(path) = &ckpt_path {
                         if b.step % self.checkpoint_every == 0 || b.step == total_steps {
+                            // Drain-before-save: a speculative ticket
+                            // must not straddle the checkpoint. Drop
+                            // the stack's held tickets (the pools
+                            // drain them) and the stale θ — the next
+                            // step re-scores fresh, which is exactly
+                            // what a run resumed from this checkpoint
+                            // does (it re-derives batch t+1 from the
+                            // serialized sampler cursor), so the two
+                            // trajectories stay bitwise-equal.
+                            if let Some(la) = &mut lookahead {
+                                if la.theta.take().is_some() {
+                                    provider::flush(&mut providers);
+                                    spec_flushes += 1;
+                                }
+                            }
                             let il_snap = match &il_driver {
                                 IlDriver::Inline(st) => Some(st.clone()),
                                 IlDriver::Async(u) => Some(u.snapshot()?),
@@ -664,6 +786,9 @@ impl<'a> Engine<'a> {
             .zip(&pool_start)
             .map(|(p, start)| DispatchTimings::from_report(&p.name, &p.pool.report().since(start)))
             .collect();
+        if self.speculate {
+            events.speculation(accepted_stale, spec_flushes, total_steps - start_step);
+        }
         events.run_end(last_acc, sw.elapsed_s());
 
         let il_final_accuracy = match il_driver {
@@ -686,6 +811,8 @@ impl<'a> Engine<'a> {
             train_secs: sw.elapsed_s(),
             il_final_accuracy,
             plane_timings,
+            accepted_stale,
+            spec_flushes,
         })
     }
 }

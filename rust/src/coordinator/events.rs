@@ -132,6 +132,7 @@ impl EventLog {
                 ("mean_busy_us", num(t.mean_busy_us)),
                 ("inflight_s", num(t.inflight_s)),
                 ("overlap_s", num(t.overlap_s)),
+                ("train_overlap_s", num(t.train_overlap_s)),
                 ("imbalance", num(t.imbalance())),
                 ("worker_chunks", arr(t.worker_chunks.iter().map(|&c| num(c as f64)))),
                 ("worker_rates", arr(t.worker_rates.iter().map(|&r| num(r)))),
@@ -172,6 +173,24 @@ impl EventLog {
         if let Some(w) = self.w.as_mut() {
             let _ = w.flush();
         }
+    }
+
+    /// Speculative-stepping summary (`speculate=1`): how many steps
+    /// accepted the staleness-1 ranking, how many lookaheads a
+    /// checkpoint flushed, and the per-step hit ratio — what staleness
+    /// actually bought, next to the `train_overlap_s` attribution in
+    /// `pool_stats`.
+    pub fn speculation(&mut self, accepted_stale: u64, flushes: u64, steps: u64) {
+        let hit = if steps > 0 { accepted_stale as f64 / steps as f64 } else { 0.0 };
+        self.emit(
+            "speculation",
+            vec![
+                ("accepted_stale", num(accepted_stale as f64)),
+                ("spec_flushes", num(flushes as f64)),
+                ("hit_ratio", num(hit)),
+                ("steps", num(steps as f64)),
+            ],
+        );
     }
 }
 
@@ -230,6 +249,7 @@ mod tests {
             mean_busy_us: 1200.0,
             inflight_s: 1.5,
             overlap_s: 0.75,
+            train_overlap_s: 0.5,
             worker_chunks: vec![9, 3],
             worker_rates: vec![3.0, 1.0],
         };
@@ -246,10 +266,27 @@ mod tests {
         assert_eq!(v.get("worker_rates").unwrap().as_array().unwrap()[0].as_f64(), Some(3.0));
         assert_eq!(v.get("inflight_s").unwrap().as_f64(), Some(1.5));
         assert_eq!(v.get("overlap_s").unwrap().as_f64(), Some(0.75));
+        assert_eq!(v.get("train_overlap_s").unwrap().as_f64(), Some(0.5));
         assert!(v.get("imbalance").unwrap().as_f64().unwrap() > 1.0);
         let v2 = json::parse(text.lines().nth(1).unwrap()).unwrap();
         assert_eq!(v2.get("plane").unwrap().as_str(), Some("il"));
         std::fs::remove_dir_all(tmp("c")).ok();
+    }
+
+    #[test]
+    fn speculation_event_reports_hit_ratio() {
+        let path = tmp("sp").join("run.jsonl");
+        let mut log = EventLog::create(&path).unwrap();
+        log.speculation(7, 1, 8);
+        log.run_end(0.0, 0.0);
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("speculation"));
+        assert_eq!(v.get("accepted_stale").unwrap().as_f64(), Some(7.0));
+        assert_eq!(v.get("spec_flushes").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("hit_ratio").unwrap().as_f64(), Some(0.875));
+        std::fs::remove_dir_all(tmp("sp")).ok();
     }
 
     #[test]

@@ -34,6 +34,10 @@ pub struct DispatchTimings {
     /// another plane — the cross-plane overlap the two-phase dispatch
     /// API buys (0 for serialized/single-plane runs).
     pub overlap_s: f64,
+    /// Wall seconds this plane was in flight while a gradient step was
+    /// open — the scoring-over-train overlap speculative stepping
+    /// (`speculate=1`) buys (0 for the serialized walk).
+    pub train_overlap_s: f64,
     /// Chunks processed per worker.
     pub worker_chunks: Vec<u64>,
     /// Point-in-time EMA service-rate estimates (chunks/sec).
@@ -51,6 +55,7 @@ impl DispatchTimings {
             mean_busy_us: r.busy_s * per_chunk,
             inflight_s: r.inflight_s,
             overlap_s: r.overlap_s,
+            train_overlap_s: r.train_overlap_s,
             worker_chunks: r.per_worker.iter().map(|w| w.chunks).collect(),
             worker_rates: r.per_worker.iter().map(|w| w.rate).collect(),
         }
@@ -78,6 +83,7 @@ impl DispatchTimings {
             // participating plane
             out.inflight_s += t.inflight_s;
             out.overlap_s += t.overlap_s;
+            out.train_overlap_s += t.train_overlap_s;
             out.worker_chunks.extend_from_slice(&t.worker_chunks);
             out.worker_rates.extend_from_slice(&t.worker_rates);
         }
@@ -108,7 +114,8 @@ impl DispatchTimings {
     pub fn summary(&self) -> String {
         format!(
             "plane `{}`: {} dispatches, {} chunks, queue-wait {:.0}us/chunk, busy {:.0}us/chunk, \
-             in-flight {:.2}s (cross-plane overlap {:.2}s), loads {:?} (imbalance {:.2}x)",
+             in-flight {:.2}s (cross-plane overlap {:.2}s, over-train {:.2}s), loads {:?} \
+             (imbalance {:.2}x)",
             self.plane,
             self.dispatches,
             self.chunks,
@@ -116,6 +123,7 @@ impl DispatchTimings {
             self.mean_busy_us,
             self.inflight_s,
             self.overlap_s,
+            self.train_overlap_s,
             self.worker_chunks,
             self.imbalance()
         )
@@ -280,6 +288,7 @@ mod tests {
             busy_s: 0.01,        // 1000us per chunk
             inflight_s: 0.5,
             overlap_s: 0.25,
+            train_overlap_s: 0.125,
             per_worker: vec![
                 WorkerStat { chunks: 8, busy_s: 0.008, rate: 4.0 },
                 WorkerStat { chunks: 2, busy_s: 0.002, rate: 1.0 },
@@ -291,6 +300,7 @@ mod tests {
         assert!((t.mean_queue_wait_us - 100.0).abs() < 1e-6);
         assert!((t.mean_busy_us - 1000.0).abs() < 1e-6);
         assert_eq!((t.inflight_s, t.overlap_s), (0.5, 0.25));
+        assert_eq!(t.train_overlap_s, 0.125);
         assert_eq!(t.worker_chunks, vec![8, 2]);
         // 8 of 10 chunks on one of two workers: max/mean = 8/5
         assert!((t.imbalance() - 1.6).abs() < 1e-9);
@@ -311,6 +321,7 @@ mod tests {
             mean_busy_us: 1000.0,
             inflight_s: 2.0,
             overlap_s: 0.5,
+            train_overlap_s: 0.25,
             worker_chunks: vec![20, 10],
             worker_rates: vec![2.0, 1.0],
         };
@@ -322,6 +333,7 @@ mod tests {
             mean_busy_us: 200.0,
             inflight_s: 1.0,
             overlap_s: 0.5,
+            train_overlap_s: 0.75,
             worker_chunks: vec![10],
             worker_rates: vec![5.0],
         };
@@ -331,6 +343,7 @@ mod tests {
         // wall-clock fields sum across planes
         assert!((all.inflight_s - 3.0).abs() < 1e-12);
         assert!((all.overlap_s - 1.0).abs() < 1e-12);
+        assert!((all.train_overlap_s - 1.0).abs() < 1e-12);
         // chunk-weighted means: (100*30 + 500*10)/40, (1000*30 + 200*10)/40
         assert!((all.mean_queue_wait_us - 200.0).abs() < 1e-9);
         assert!((all.mean_busy_us - 800.0).abs() < 1e-9);

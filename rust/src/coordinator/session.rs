@@ -67,6 +67,12 @@ pub struct RunResult {
     /// scored inline). Aggregate across planes with
     /// [`DispatchTimings::aggregate`].
     pub plane_timings: Vec<DispatchTimings>,
+    /// Steps that accepted a staleness-1 ranking (scored against the
+    /// previous step's θ). 0 unless `speculate` was on.
+    pub accepted_stale: u64,
+    /// Speculative lookaheads cancelled by the drain-before-save
+    /// checkpoint guard (those steps re-scored fresh).
+    pub spec_flushes: u64,
 }
 
 impl RunResult {
@@ -89,6 +95,20 @@ impl RunResult {
     pub fn overlap_s_per_step(&self) -> f64 {
         if self.steps > 0 { self.cross_plane_overlap_s() / self.steps as f64 } else { 0.0 }
     }
+
+    /// Fraction of engine steps that accepted the speculative stale
+    /// ranking — the speculation hit ratio `bench_pipeline` reports
+    /// (flushed or non-speculated steps score fresh and don't count).
+    pub fn spec_hit_ratio(&self) -> f64 {
+        if self.steps > 0 { self.accepted_stale as f64 / self.steps as f64 } else { 0.0 }
+    }
+
+    /// Scoring wall-clock that ran under an open gradient step, max
+    /// over planes — the scoring-over-train overlap `speculate=1`
+    /// buys. 0.0 for the serialized walk.
+    pub fn train_overlap_s(&self) -> f64 {
+        self.plane_timings.iter().map(|t| t.train_overlap_s).fold(0.0, f64::max)
+    }
 }
 
 /// Builder for one training run over named compute planes.
@@ -101,6 +121,7 @@ pub struct Session<'a> {
     checkpoint_every: u64,
     checkpoint_path: Option<PathBuf>,
     resume: Option<PathBuf>,
+    speculate: bool,
 }
 
 impl<'a> Session<'a> {
@@ -118,7 +139,17 @@ impl<'a> Session<'a> {
             checkpoint_path: (cfg.checkpoint_every > 0 || !cfg.checkpoint_path.is_empty())
                 .then(|| cfg.checkpoint_file()),
             resume: (!cfg.resume.is_empty()).then(|| PathBuf::from(&cfg.resume)),
+            speculate: cfg.speculate,
         }
+    }
+
+    /// Speculative pipelined stepping: score batch t+1 against θ_t
+    /// while step t's gradient update runs, accepting the staleness-1
+    /// ranking (defaults from the config's `speculate` key; off is the
+    /// bitwise-reference serialized walk).
+    pub fn speculate(mut self, on: bool) -> Self {
+        self.speculate = on;
+        self
     }
 
     /// IL-model runtime: required by `needs_il` methods when
@@ -192,6 +223,7 @@ impl<'a> Session<'a> {
             checkpoint_every: self.checkpoint_every,
             checkpoint_path: self.checkpoint_path.clone(),
             resume: self.resume.clone(),
+            speculate: self.speculate,
         }
         .run_data(data, il)
     }

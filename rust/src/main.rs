@@ -49,12 +49,12 @@ fn real_main() -> Result<()> {
 fn print_help() {
     println!(
         "rho — RHO-LOSS coordinator (Mindermann et al., ICML 2022)\n\n\
-         usage:\n  rho train [key=value ...] [--data shards://DIR] [--checkpoint-every N] [--resume PATH]\n  rho ingest <catalog-name|file.csv> [--shard-rows N] [--out DIR] [--scale F]\n  rho score-il data=shards://DIR [il_arch=A] [il_epochs=N] [key=value ...]\n  rho inspect [key=value ...]   score one candidate batch, compare methods\n  rho exp <id|all> [--scale F] [--seeds a,b] [--epoch-scale F]\n  rho artifacts\n  rho info\n\n\
+         usage:\n  rho train [key=value ...] [--data shards://DIR] [--checkpoint-every N] [--resume PATH] [--speculate]\n  rho ingest <catalog-name|file.csv> [--shard-rows N] [--out DIR] [--scale F]\n  rho score-il data=shards://DIR [il_arch=A] [il_epochs=N] [key=value ...]\n  rho inspect [key=value ...]   score one candidate batch, compare methods\n  rho exp <id|all> [--scale F] [--seeds a,b] [--epoch-scale F]\n  rho artifacts\n  rho info\n\n\
          experiments: {}\n\n\
          config keys: dataset arch il_arch method epochs seed nb select_frac lr wd\n\
          eval_every scale track_props no_holdout online_il il_lr_scale\n\
          il_epochs svp_frac workers queue_depth lane_depth rate_alpha prefetch events\n\
-         checkpoint_every checkpoint_path resume\n\n\
+         checkpoint_every checkpoint_path resume speculate\n\n\
          data plane ([data] table): source (shards://DIR) shard_rows window\n\
          e.g. rho ingest cifar10 --out stores/c10 && rho score-il data=shards://stores/c10 \\\n              && rho train --data shards://stores/c10 method=rho_loss\n\n\
          compute planes ([planes] table): plane.<name>.arch plane.<name>.workers\n\
@@ -68,10 +68,15 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let mut cfg = RunConfig::default();
     // `--checkpoint-every N` / `--resume P` / `--checkpoint-path P`
     // are flag spellings of the matching config keys; key=value pairs
-    // and flags may interleave.
+    // and flags may interleave. `--speculate` is value-less.
     let mut pairs: Vec<String> = Vec::new();
     let mut i = 0;
     while i < args.len() {
+        if args[i] == "--speculate" {
+            pairs.push("speculate=1".into());
+            i += 1;
+            continue;
+        }
         let flag_key = match args[i].as_str() {
             "--checkpoint-every" => Some("checkpoint_every"),
             "--checkpoint-path" => Some("checkpoint_path"),

@@ -365,10 +365,13 @@ pub(crate) fn train_step_raw(
     ];
     let outs = train_exe.call(&args)?;
     let mut it = outs.into_iter();
-    // Swap in the freshly materialized parameters as a new Arc:
-    // outstanding scoring snapshots keep the old version alive and
-    // no caller ever pays a full-theta copy for a snapshot.
+    // Swap in the freshly materialized parameters as a new Arc under
+    // a freshly minted snapshot version: outstanding scoring snapshots
+    // keep the old allocation alive (no caller ever pays a full-theta
+    // copy), and the version — not the address, which the allocator
+    // may reuse — is what worker caches key on.
     state.theta = std::sync::Arc::new(it.next().unwrap().to_vec::<f32>()?);
+    state.version = crate::runtime::params::next_theta_version();
     state.m = it.next().unwrap().to_vec::<f32>()?;
     state.v = it.next().unwrap().to_vec::<f32>()?;
     let loss = it.next().unwrap().to_vec::<f32>()?[0];

@@ -6,9 +6,52 @@
 
 use std::io::{Read, Write};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
+
+/// Process-global mint for parameter-snapshot versions. Every freshly
+/// installed theta allocation gets a number no other install in this
+/// process ever reuses — unlike the allocation's address (a freed and
+/// reallocated `Arc` can alias the old pointer once scoring tickets
+/// outlive a train step) and unlike the optimizer `step` (pools are
+/// cached across runs, so two runs both at step N would collide).
+static NEXT_THETA_VERSION: AtomicU64 = AtomicU64::new(1);
+
+/// Mint a fresh, process-unique snapshot version.
+pub fn next_theta_version() -> u64 {
+    NEXT_THETA_VERSION.fetch_add(1, Ordering::Relaxed)
+}
+
+/// A zero-copy view of one installed parameter vector: the shared
+/// allocation plus the process-unique `version` minted when it was
+/// installed. The pool workers key their per-worker theta-literal
+/// cache on `version` — never on the allocation address — so a
+/// speculative ticket scored against θ_t can never be confused with
+/// θ_{t+1} even if the allocator reuses the freed block.
+#[derive(Clone, Debug)]
+pub struct ThetaSnapshot {
+    pub version: u64,
+    pub data: Arc<Vec<f32>>,
+}
+
+impl ThetaSnapshot {
+    /// Wrap an allocation under a freshly minted version — for
+    /// parameters that never pass through a [`TrainState`] (tests,
+    /// ad-hoc scoring of an externally produced theta).
+    pub fn fresh(data: Arc<Vec<f32>>) -> ThetaSnapshot {
+        ThetaSnapshot { version: next_theta_version(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
 
 /// Flattened parameters + AdamW state. `step` is the number of
 /// optimizer steps already taken (the HLO train program receives
@@ -18,31 +61,55 @@ use anyhow::{bail, Context, Result};
 /// place: each train step installs the freshly materialized parameter
 /// vector as a new `Arc`, so concurrent consumers (the scoring pool,
 /// the streaming engine's providers) snapshot it with a refcount bump
-/// instead of copying `param_count` floats. `step` doubles as the
-/// snapshot version — two states with equal `step` along one run hold
-/// the same `theta` allocation.
-#[derive(Clone, Debug, PartialEq)]
+/// instead of copying `param_count` floats. `version` identifies the
+/// installed allocation process-uniquely (minted from
+/// [`next_theta_version`] at construction and at every swap); it is
+/// runtime-only cache identity, not run state — checkpoints neither
+/// serialize it nor compare it.
+#[derive(Clone, Debug)]
 pub struct TrainState {
     pub theta: Arc<Vec<f32>>,
     pub m: Vec<f32>,
     pub v: Vec<f32>,
     pub step: u64,
+    /// Snapshot version of the currently installed `theta` allocation.
+    pub version: u64,
+}
+
+impl PartialEq for TrainState {
+    /// Semantic equality: parameters, moments, and step. `version` is
+    /// per-process cache identity and deliberately excluded — a
+    /// checkpoint roundtrip restores an *equal* state under a fresh
+    /// version.
+    fn eq(&self, other: &Self) -> bool {
+        self.theta == other.theta
+            && self.m == other.m
+            && self.v == other.v
+            && self.step == other.step
+    }
 }
 
 impl TrainState {
     /// Fresh optimizer state around initialized parameters.
     pub fn new(theta: Vec<f32>) -> Self {
         let n = theta.len();
-        TrainState { theta: Arc::new(theta), m: vec![0.0; n], v: vec![0.0; n], step: 0 }
+        TrainState {
+            theta: Arc::new(theta),
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            step: 0,
+            version: next_theta_version(),
+        }
     }
 
     pub fn param_count(&self) -> usize {
         self.theta.len()
     }
 
-    /// Zero-copy parameter snapshot for scoring, versioned by `step`.
-    pub fn theta_snapshot(&self) -> Arc<Vec<f32>> {
-        Arc::clone(&self.theta)
+    /// Zero-copy parameter snapshot for scoring: a refcount bump on
+    /// the installed allocation, stamped with its install version.
+    pub fn theta_snapshot(&self) -> ThetaSnapshot {
+        ThetaSnapshot { version: self.version, data: Arc::clone(&self.theta) }
     }
 
     const MAGIC: &'static [u8; 8] = b"RHOCKPT1";
@@ -75,7 +142,7 @@ impl TrainState {
         let theta = read_vec(n)?;
         let m = read_vec(n)?;
         let v = read_vec(n)?;
-        Ok(TrainState { theta: Arc::new(theta), m, v, step })
+        Ok(TrainState { theta: Arc::new(theta), m, v, step, version: next_theta_version() })
     }
 
     /// Serialize to a little-endian binary checkpoint.
@@ -136,8 +203,40 @@ mod tests {
         let st = TrainState::new(vec![1.0, 2.0, 3.0]);
         let before = Arc::strong_count(&st.theta);
         let snap = st.theta_snapshot();
-        assert!(Arc::ptr_eq(&snap, &st.theta), "snapshot copied theta");
+        assert!(Arc::ptr_eq(&snap.data, &st.theta), "snapshot copied theta");
         assert_eq!(Arc::strong_count(&st.theta), before + 1);
+        assert_eq!(snap.version, st.version, "snapshot must carry the install version");
+    }
+
+    #[test]
+    fn snapshot_versions_are_process_unique() {
+        // Distinct installs mint distinct versions even when the
+        // allocator hands back the same address (the Arc::ptr_eq ABA
+        // hazard the worker cache used to carry): identity is the
+        // counter, never the pointer.
+        let a = TrainState::new(vec![1.0; 4]);
+        let b = TrainState::new(vec![1.0; 4]);
+        assert_ne!(a.version, b.version);
+        let s1 = ThetaSnapshot::fresh(Arc::new(vec![0.0; 2]));
+        let s2 = ThetaSnapshot::fresh(Arc::clone(&s1.data));
+        assert!(Arc::ptr_eq(&s1.data, &s2.data), "same allocation on purpose");
+        assert_ne!(s1.version, s2.version, "same pointer must still get a fresh version");
+        // cloning a snapshot shares both allocation and version — it
+        // is the same install, so the worker cache must treat it so
+        let c = s1.clone();
+        assert_eq!(c.version, s1.version);
+    }
+
+    #[test]
+    fn state_equality_ignores_version() {
+        // `version` is per-process cache identity, not run state: a
+        // checkpoint roundtrip (fresh version) must compare equal.
+        let a = TrainState::new(vec![1.0, 2.0]);
+        let mut b = a.clone();
+        b.version = next_theta_version();
+        assert_eq!(a, b);
+        b.step += 1;
+        assert_ne!(a, b);
     }
 
     #[test]

@@ -32,6 +32,19 @@
 //! per-pool in-flight/overlap wall-clock is accounted by a
 //! process-wide ledger and surfaces in [`PoolReport`].
 //!
+//! A ticket's lifetime is NOT bounded by a train step: the engine's
+//! speculative mode (`speculate=1`) submits step t+1's dispatch before
+//! step t's gradient update and waits it after, so tickets routinely
+//! span a full train step. Two things make that safe: thetas cross
+//! the API as [`ThetaSnapshot`]s — allocation plus a process-unique
+//! install *version*, which the per-worker theta-literal cache keys on
+//! (an allocation address can be reused by the allocator while a
+//! lookahead ticket still holds the old theta; the version cannot) —
+//! and the ledger tracks a third segment class, `train_overlap_s`:
+//! wall-clock a pool spent in flight while the engine had a gradient
+//! step open ([`TrainSpan`]), the number that shows what speculation
+//! actually bought.
+//!
 //! ## Zero-copy dispatch
 //!
 //! A request is a *window*: an [`Arc<CandBatch>`] refcount bump (the
@@ -42,8 +55,8 @@
 //! repeating the chunk's first row exactly like the inline
 //! `ModelRuntime` path so pooled scores stay bit-identical to it).
 //! Workers also cache the theta literal across chunks of the same
-//! parameter snapshot (`Arc::ptr_eq`), so one dispatch uploads theta
-//! once per worker, not once per chunk.
+//! parameter snapshot (keyed by [`ThetaSnapshot::version`]), so one
+//! dispatch uploads theta once per worker, not once per chunk.
 //!
 //! ## Rate-aware lanes
 //!
@@ -96,6 +109,7 @@ use crate::data::sharding::{plan_dispatch, ChunkPlan, RateEma};
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::executor::{lit_f32, lit_i32, Executor};
 use crate::runtime::handle::{FwdStats, McdStats};
+use crate::runtime::params::ThetaSnapshot;
 
 /// One producer-prepared candidate batch: the sampled dataset indices
 /// plus their gathered rows, shared by `Arc` between the engine, the
@@ -211,9 +225,9 @@ struct Window {
 }
 
 enum Request {
-    Fwd { w: Window, theta: Arc<Vec<f32>>, batch: Arc<CandBatch> },
-    Rho { w: Window, theta: Arc<Vec<f32>>, batch: Arc<CandBatch>, il: Arc<Vec<f32>> },
-    Mcd { w: Window, theta: Arc<Vec<f32>>, batch: Arc<CandBatch>, seed: i32 },
+    Fwd { w: Window, theta: ThetaSnapshot, batch: Arc<CandBatch> },
+    Rho { w: Window, theta: ThetaSnapshot, batch: Arc<CandBatch>, il: Arc<Vec<f32>> },
+    Mcd { w: Window, theta: ThetaSnapshot, batch: Arc<CandBatch>, seed: i32 },
 }
 
 impl Request {
@@ -273,6 +287,11 @@ pub struct PoolReport {
     /// engine's single-threaded loop the number reads exactly as
     /// "this plane ∥ another plane of this step").
     pub overlap_s: f64,
+    /// Wall seconds this pool was in flight while a gradient step was
+    /// open somewhere in the process (a [`TrainSpan`] guard held) —
+    /// the scoring-over-train overlap speculative selection buys.
+    /// Same process-wide caveats as `overlap_s`.
+    pub train_overlap_s: f64,
     pub per_worker: Vec<WorkerStat>,
 }
 
@@ -289,6 +308,7 @@ impl PoolReport {
             busy_s: (self.busy_s - earlier.busy_s).max(0.0),
             inflight_s: (self.inflight_s - earlier.inflight_s).max(0.0),
             overlap_s: (self.overlap_s - earlier.overlap_s).max(0.0),
+            train_overlap_s: (self.train_overlap_s - earlier.train_overlap_s).max(0.0),
             per_worker: self
                 .per_worker
                 .iter()
@@ -328,6 +348,10 @@ mod ledger {
     pub struct Overlap {
         pub inflight_s: f64,
         pub overlap_s: f64,
+        /// In-flight time spent while ≥1 gradient step was open
+        /// ([`super::TrainSpan`]) — the speculative scoring-over-train
+        /// segment class.
+        pub train_overlap_s: f64,
     }
 
     #[derive(Default)]
@@ -340,6 +364,9 @@ mod ledger {
         epoch: Instant,
         last: f64,
         total_open: usize,
+        /// Gradient steps currently open process-wide (TrainSpan
+        /// guards held) — not a pool, so tracked beside the map.
+        trains_open: usize,
         pools: HashMap<usize, Entry>,
     }
 
@@ -350,6 +377,7 @@ mod ledger {
                 epoch: Instant::now(),
                 last: 0.0,
                 total_open: 0,
+                trains_open: 0,
                 pools: HashMap::new(),
             })
         })
@@ -357,21 +385,41 @@ mod ledger {
 
     /// Close the segment `[last, now)`: every in-flight pool accrues
     /// it as in-flight time; pools sharing it with another in-flight
-    /// pool accrue it as overlap too.
+    /// pool accrue it as overlap too; pools sharing it with an open
+    /// gradient step accrue it as train overlap.
     fn sweep(st: &mut State, now: f64) {
         let dt = now - st.last;
         if dt > 0.0 {
             let total = st.total_open;
+            let training = st.trains_open > 0;
             for e in st.pools.values_mut() {
                 if e.open > 0 {
                     e.acc.inflight_s += dt;
                     if total > e.open {
                         e.acc.overlap_s += dt;
                     }
+                    if training {
+                        e.acc.train_overlap_s += dt;
+                    }
                 }
             }
         }
         st.last = now;
+    }
+
+    /// A gradient step opened (engine-side [`super::TrainSpan`]).
+    pub fn train_begin() {
+        let mut st = state().lock().unwrap();
+        let now = st.epoch.elapsed().as_secs_f64();
+        sweep(&mut st, now);
+        st.trains_open += 1;
+    }
+
+    pub fn train_end() {
+        let mut st = state().lock().unwrap();
+        let now = st.epoch.elapsed().as_secs_f64();
+        sweep(&mut st, now);
+        st.trains_open = st.trains_open.saturating_sub(1);
     }
 
     pub fn register(id: usize) {
@@ -413,6 +461,27 @@ mod ledger {
         let now = st.epoch.elapsed().as_secs_f64();
         sweep(&mut st, now);
         st.pools.get(&id).map(|e| e.acc).unwrap_or_default()
+    }
+}
+
+/// RAII guard marking "a gradient step is running" in the process-wide
+/// ledger: while at least one span is open, every pool's in-flight
+/// wall-clock also accrues as `train_overlap_s` — the attribution that
+/// shows how much scoring the engine's speculative mode actually hid
+/// behind the train step. The engine wraps each step's train-chunk
+/// loop in one span; dropping the guard closes it.
+pub struct TrainSpan(());
+
+impl TrainSpan {
+    pub fn begin() -> TrainSpan {
+        ledger::train_begin();
+        TrainSpan(())
+    }
+}
+
+impl Drop for TrainSpan {
+    fn drop(&mut self) {
+        ledger::train_end();
     }
 }
 
@@ -739,6 +808,7 @@ impl ScoringPool {
             busy_s: st.busy_s,
             inflight_s: ov.inflight_s,
             overlap_s: ov.overlap_s,
+            train_overlap_s: ov.train_overlap_s,
             per_worker: (0..self.workers)
                 .map(|w| WorkerStat {
                     chunks: st.worker_chunks[w],
@@ -754,7 +824,7 @@ impl ScoringPool {
     /// Enqueue a full-fwd-stats dispatch; `wait_fwd` the ticket.
     pub fn submit_fwd(
         &self,
-        theta: &Arc<Vec<f32>>,
+        theta: &ThetaSnapshot,
         batch: &Arc<CandBatch>,
     ) -> Result<PendingScores<'_>> {
         self.submit(theta, batch, ReqKind::Fwd, PendingKind::Fwd)
@@ -765,7 +835,7 @@ impl ScoringPool {
     /// table slice or the online-IL scores).
     pub fn submit_rho(
         &self,
-        theta: &Arc<Vec<f32>>,
+        theta: &ThetaSnapshot,
         batch: &Arc<CandBatch>,
         il: &Arc<Vec<f32>>,
     ) -> Result<PendingScores<'_>> {
@@ -780,7 +850,7 @@ impl ScoringPool {
     /// single-threaded `ModelRuntime::mcdropout` chunking exactly.
     pub fn submit_mcdropout(
         &self,
-        theta: &Arc<Vec<f32>>,
+        theta: &ThetaSnapshot,
         batch: &Arc<CandBatch>,
         seed: i32,
     ) -> Result<PendingScores<'_>> {
@@ -793,14 +863,14 @@ impl ScoringPool {
     // -- one-shot wrappers (submit + wait back-to-back) -----------------
 
     /// Parallel forward stats over an arbitrary-length candidate batch.
-    pub fn fwd(&self, theta: &Arc<Vec<f32>>, batch: &Arc<CandBatch>) -> Result<FwdStats> {
+    pub fn fwd(&self, theta: &ThetaSnapshot, batch: &Arc<CandBatch>) -> Result<FwdStats> {
         self.submit_fwd(theta, batch)?.wait_fwd()
     }
 
     /// Parallel fused RHO scores over an arbitrary-length batch.
     pub fn rho(
         &self,
-        theta: &Arc<Vec<f32>>,
+        theta: &ThetaSnapshot,
         batch: &Arc<CandBatch>,
         il: &Arc<Vec<f32>>,
     ) -> Result<Vec<f32>> {
@@ -811,7 +881,7 @@ impl ScoringPool {
     /// batch.
     pub fn mcdropout(
         &self,
-        theta: &Arc<Vec<f32>>,
+        theta: &ThetaSnapshot,
         batch: &Arc<CandBatch>,
         seed: i32,
     ) -> Result<McdStats> {
@@ -830,7 +900,7 @@ impl ScoringPool {
     /// dispatch: waiting (or dropping) it drains exactly these chunks.
     fn submit(
         &self,
-        theta: &Arc<Vec<f32>>,
+        theta: &ThetaSnapshot,
         batch: &Arc<CandBatch>,
         kind: ReqKind,
         pending: PendingKind,
@@ -905,17 +975,17 @@ impl ScoringPool {
                     };
                     let req = match kind {
                         ReqKind::Fwd => {
-                            Request::Fwd { w, theta: Arc::clone(theta), batch: Arc::clone(batch) }
+                            Request::Fwd { w, theta: theta.clone(), batch: Arc::clone(batch) }
                         }
                         ReqKind::Rho(il) => Request::Rho {
                             w,
-                            theta: Arc::clone(theta),
+                            theta: theta.clone(),
                             batch: Arc::clone(batch),
                             il: Arc::clone(il),
                         },
                         ReqKind::Mcd(seed) => Request::Mcd {
                             w,
-                            theta: Arc::clone(theta),
+                            theta: theta.clone(),
                             batch: Arc::clone(batch),
                             seed,
                         },
@@ -1083,20 +1153,23 @@ fn il_view<'a>(il: &'a [f32], nb: usize, start: usize, take: usize, pad: &'a mut
 }
 
 /// The theta literal for this chunk, rebuilt only when the parameter
-/// snapshot actually changed (`Arc::ptr_eq`): one theta upload per
-/// worker per train step, not per chunk. Holding the `Arc` in the
-/// cache key makes pointer comparison ABA-safe.
+/// snapshot actually changed: one theta upload per worker per install,
+/// not per chunk. The cache keys on the snapshot's process-unique
+/// install `version`, never the allocation address — once speculative
+/// tickets outlive a train step, a freed-and-reallocated `Arc` can
+/// alias the old pointer (`Arc::ptr_eq` would serve θ_t's literal for
+/// θ_{t+1}); the version counter cannot collide.
 fn theta_lit<'a>(
-    cache: &'a mut Option<(Arc<Vec<f32>>, Literal)>,
-    theta: &Arc<Vec<f32>>,
+    cache: &'a mut Option<(u64, Literal)>,
+    theta: &ThetaSnapshot,
 ) -> Result<&'a Literal> {
     let stale = match cache {
-        Some((held, _)) => !Arc::ptr_eq(held, theta),
+        Some((held, _)) => *held != theta.version,
         None => true,
     };
     if stale {
-        let lit = lit_f32(theta, &[theta.len()])?;
-        *cache = Some((Arc::clone(theta), lit));
+        let lit = lit_f32(&theta.data, &[theta.data.len()])?;
+        *cache = Some((theta.version, lit));
     }
     Ok(&cache.as_ref().expect("just filled").1)
 }
@@ -1148,7 +1221,7 @@ fn worker_main(
     let mut pad_x: Vec<f32> = Vec::new();
     let mut pad_y: Vec<i32> = Vec::new();
     let mut pad_il: Vec<f32> = Vec::new();
-    let mut theta_cache: Option<(Arc<Vec<f32>>, Literal)> = None;
+    let mut theta_cache: Option<(u64, Literal)> = None;
     loop {
         let req = match rx.recv() {
             Ok(r) => r,
@@ -1278,6 +1351,7 @@ mod tests {
             busy_s: 4.0,
             inflight_s: 2.0,
             overlap_s: 0.5,
+            train_overlap_s: 1.0,
             per_worker: vec![WorkerStat { chunks: 10, busy_s: 4.0, rate: 2.0 }],
         };
         let later = PoolReport {
@@ -1287,6 +1361,7 @@ mod tests {
             busy_s: 9.0,
             inflight_s: 5.0,
             overlap_s: 2.0,
+            train_overlap_s: 2.5,
             per_worker: vec![WorkerStat { chunks: 25, busy_s: 9.0, rate: 3.0 }],
         };
         let d = later.since(&earlier);
@@ -1295,6 +1370,7 @@ mod tests {
         assert!((d.busy_s - 5.0).abs() < 1e-12);
         assert!((d.inflight_s - 3.0).abs() < 1e-12);
         assert!((d.overlap_s - 1.5).abs() < 1e-12);
+        assert!((d.train_overlap_s - 1.5).abs() < 1e-12);
         assert_eq!(d.per_worker[0].chunks, 15);
         assert_eq!(d.per_worker[0].rate, 3.0, "rates are point-in-time, not deltas");
         // self-delta is zero
@@ -1328,6 +1404,54 @@ mod tests {
         assert!(oa.inflight_s >= oa.overlap_s);
         ledger::unregister(a);
         ledger::unregister(b);
+    }
+
+    #[test]
+    fn ledger_attributes_train_overlap_to_open_pools() {
+        let p = usize::MAX - 3;
+        ledger::register(p);
+        // In flight with no gradient step open: no train attribution.
+        ledger::begin(p);
+        std::thread::sleep(Duration::from_millis(3));
+        let before = ledger::snapshot(p).train_overlap_s;
+        {
+            let _span = TrainSpan::begin();
+            std::thread::sleep(Duration::from_millis(3));
+        } // span drops → train segment closes
+        std::thread::sleep(Duration::from_millis(3));
+        ledger::end(p);
+        let after = ledger::snapshot(p);
+        assert!(
+            after.train_overlap_s > before,
+            "in-flight wall-clock under an open TrainSpan must accrue train_overlap_s"
+        );
+        // Only the spanned slice counts: the pool was in flight ~9ms
+        // but trained-over for only ~3ms of it.
+        assert!(after.inflight_s > after.train_overlap_s - before);
+        ledger::unregister(p);
+    }
+
+    #[test]
+    fn theta_lit_cache_keys_on_version_not_pointer() {
+        let mut cache: Option<(u64, Literal)> = None;
+        let data = Arc::new(vec![1.0f32, 2.0, 3.0]);
+        let snap = ThetaSnapshot::fresh(Arc::clone(&data));
+        theta_lit(&mut cache, &snap).unwrap();
+        let v0 = cache.as_ref().unwrap().0;
+        assert_eq!(v0, snap.version);
+        // Same snapshot (clone shares the version): cache hit.
+        theta_lit(&mut cache, &snap.clone()).unwrap();
+        assert_eq!(cache.as_ref().unwrap().0, v0, "same install must not re-upload");
+        // Same allocation under a NEW install version — the ABA case a
+        // pointer-keyed cache gets wrong: must rebuild.
+        let reinstalled = ThetaSnapshot::fresh(data);
+        assert!(Arc::ptr_eq(&snap.data, &reinstalled.data));
+        theta_lit(&mut cache, &reinstalled).unwrap();
+        assert_eq!(
+            cache.as_ref().unwrap().0,
+            reinstalled.version,
+            "new install over an aliased allocation must refresh the literal"
+        );
     }
 
     #[test]

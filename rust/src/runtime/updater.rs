@@ -20,7 +20,6 @@
 //! point (never silently).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Result};
@@ -28,13 +27,14 @@ use anyhow::{anyhow, bail, Result};
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::executor::Executor;
 use crate::runtime::handle::train_step_raw;
-use crate::runtime::params::TrainState;
+use crate::runtime::params::{ThetaSnapshot, TrainState};
 
 enum Msg {
     Update { xs: Vec<f32>, ys: Vec<i32>, w: Vec<f32>, lr: f32, wd: f32 },
-    /// Reply with the post-all-prior-updates parameter Arc — the
-    /// per-step sync on the consumer's hot path, one refcount bump.
-    Theta(Sender<Result<Arc<Vec<f32>>, String>>),
+    /// Reply with the post-all-prior-updates parameter snapshot — the
+    /// per-step sync on the consumer's hot path, one refcount bump
+    /// (plus its install version, which worker caches key on).
+    Theta(Sender<Result<ThetaSnapshot, String>>),
     /// Reply with the full state clone (theta + AdamW moments) — only
     /// the checkpoint writer needs this; it deep-copies m and v.
     Snapshot(Sender<Result<TrainState, String>>),
@@ -82,7 +82,7 @@ impl IlUpdater {
     /// then return the current parameter snapshot. One Arc refcount
     /// bump crosses the channel — never the AdamW moments; this runs
     /// on the consumer's critical path every step.
-    pub fn theta(&self) -> Result<Arc<Vec<f32>>> {
+    pub fn theta(&self) -> Result<ThetaSnapshot> {
         let (reply_tx, reply_rx) = channel();
         self.tx.send(Msg::Theta(reply_tx)).map_err(|_| anyhow!("IL updater thread died"))?;
         reply_rx
@@ -159,7 +159,7 @@ fn updater_main(rx: Receiver<Msg>, meta: ArtifactMeta, nb: usize, mut state: Tra
             Msg::Theta(reply) => {
                 let _ = reply.send(match &latched {
                     Some(e) => Err(e.clone()),
-                    None => Ok(Arc::clone(&state.theta)),
+                    None => Ok(state.theta_snapshot()),
                 });
             }
             Msg::Snapshot(reply) => {

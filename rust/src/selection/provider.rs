@@ -36,6 +36,25 @@
 //! never move), so overlapped curves are bitwise-identical to the
 //! serialized `provide` shape.
 //!
+//! ## Speculative submit-ahead (staleness-1 pipelining)
+//!
+//! The engine's speculative mode adds a third leg: while step t's
+//! gradient update runs, [`submit_ahead`] enqueues step t+1's batch
+//! against the θ_t snapshot, and at step t+1 the normal [`run_step`]
+//! walk runs with the *same* stale `StepCtx::theta` — pool submits
+//! are idempotent (a provider already holding a ticket keeps it), so
+//! the speculated dispatches are simply waited on, and un-speculated
+//! providers submit then with the identical stale theta. Staleness
+//! gating is per-role: providers scoring against the target
+//! parameters are stale-by-design (the paper's ranking-drift result
+//! licenses staleness 1), but an IL source that tracks *evolving* IL
+//! parameters ([`SignalProvider::theta_dependent`]) must never
+//! pre-submit — online IL scores with the post-update IL theta at
+//! t+1, so [`submit_ahead`] only pre-resolves theta-independent IL
+//! sources (the precomputed table) and, only then, pre-submits the IL
+//! consumers. [`flush`] drops every held ticket (the pool drains them
+//! on drop) — the checkpoint writer's drain-before-save guard.
+//!
 //! Providers see the candidate batch as the shared [`CandBatch`] the
 //! producer gathered (`StepCtx::batch`), not as borrowed slices: the
 //! pool-backed providers forward the whole buffer as a refcount bump
@@ -50,6 +69,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Context, Result};
 
 use crate::runtime::handle::{McdStats, ModelRuntime};
+use crate::runtime::params::ThetaSnapshot;
 use crate::runtime::plane::{PlaneSet, PLANE_TARGET};
 use crate::runtime::pool::{CandBatch, PendingScores, ScoringPool};
 use crate::selection::{Candidates, Method};
@@ -65,12 +85,15 @@ pub enum Backend<'a> {
 
 /// Per-step provider inputs. `batch` is the producer-gathered
 /// candidate buffer (indices + rows + optional precomputed-IL slice),
-/// shared by `Arc`; `theta` is the zero-copy parameter snapshot
-/// (versioned by the optimizer step — see `TrainState::theta_snapshot`).
+/// shared by `Arc`; `theta` is the zero-copy parameter snapshot with
+/// its process-unique install version (see
+/// `TrainState::theta_snapshot`) — under speculation it is
+/// deliberately the *previous* step's snapshot.
 pub struct StepCtx<'a> {
-    pub theta: &'a Arc<Vec<f32>>,
-    /// Current IL-model parameters (online IL only).
-    pub il_theta: Option<&'a Arc<Vec<f32>>>,
+    pub theta: &'a ThetaSnapshot,
+    /// Current IL-model parameters (online IL only). Always the fresh
+    /// post-update snapshot, never speculated — see [`submit_ahead`].
+    pub il_theta: Option<&'a ThetaSnapshot>,
     /// The shared candidate batch window providers score.
     pub batch: &'a Arc<CandBatch>,
     /// Per-step MC-dropout seed.
@@ -143,12 +166,35 @@ pub trait SignalProvider {
         Role::Independent
     }
 
+    /// Whether this provider's values track *evolving* model
+    /// parameters. [`submit_ahead`] uses it for staleness gating on
+    /// the IL side: a theta-independent IL source (the precomputed
+    /// table) may pre-resolve so its consumers can pre-submit, while
+    /// a theta-dependent one (online IL — its parameters update
+    /// during the train step being overlapped) must wait for step
+    /// t+1's fresh snapshot. Target-plane providers stay `true` but
+    /// are pre-submitted anyway — scoring against θ_t is the accepted
+    /// staleness, not a bug.
+    fn theta_dependent(&self) -> bool {
+        true
+    }
+
     /// Phase 1: enqueue this provider's pool work, if any. `out` is
     /// the read-only view of signals resolved so far this step — an
     /// [`Role::IlConsumer`] reads the `il` signal from it.
+    ///
+    /// Pool-backed implementations are idempotent: a provider already
+    /// holding an un-waited ticket (a speculative [`submit_ahead`])
+    /// keeps it and returns without dispatching again.
     fn submit(&mut self, _ctx: &StepCtx, _out: &SignalSet) -> Result<()> {
         Ok(())
     }
+
+    /// Drop any internally held dispatch ticket without consuming its
+    /// values (the pool drains abandoned chunks on ticket drop). The
+    /// engine calls this through [`flush`] before a checkpoint save so
+    /// no speculative work is outstanding in the saved state.
+    fn flush_pending(&mut self) {}
 
     /// Phase 2: wait on the submitted dispatch (or compute
     /// synchronously) and assemble this provider's signals into `out`.
@@ -196,6 +242,62 @@ pub fn run_step(
     Ok(())
 }
 
+/// Speculatively enqueue step t+1's dispatches against the θ_t
+/// snapshot while the gradient step runs (the engine's `speculate=1`
+/// lookahead leg). Mirrors [`run_step`]'s dependency order but stops
+/// short of any wait:
+///
+/// 1. submit every [`Role::Independent`] provider (fwd / mcd pool
+///    dispatches go in flight under the open train step);
+/// 2. only if **every** IL source is theta-independent
+///    ([`SignalProvider::theta_dependent`] is false — the precomputed
+///    table), resolve the sources into `scratch` and submit the IL
+///    consumers (fused RHO rides ahead too). With online IL the
+///    sources *and* consumers wait for t+1's fresh IL snapshot — the
+///    consumer then submits in [`run_step`] phase 3 with the same
+///    stale target theta, so staleness semantics are uniform.
+///
+/// `scratch` is a throwaway signal set: step t+1's real [`run_step`]
+/// re-resolves the IL sources into its own set with identical values
+/// (the precomputed resolve is a refcount bump / pure lookup).
+/// Idempotent submits make the follow-up `run_step` a pure wait for
+/// everything enqueued here.
+pub fn submit_ahead(
+    providers: &mut [Box<dyn SignalProvider + '_>],
+    ctx_next: &StepCtx,
+    scratch: &mut SignalSet,
+) -> Result<()> {
+    for p in providers.iter_mut().filter(|p| p.role() == Role::Independent) {
+        p.submit(ctx_next, scratch)
+            .with_context(|| format!("signal provider `{}` (submit-ahead)", p.name()))?;
+    }
+    let il_ahead = providers
+        .iter()
+        .filter(|p| p.role() == Role::IlSource)
+        .all(|p| !p.theta_dependent());
+    if il_ahead {
+        for p in providers.iter_mut().filter(|p| p.role() == Role::IlSource) {
+            p.resolve(ctx_next, scratch)
+                .with_context(|| format!("signal provider `{}` (resolve-ahead)", p.name()))?;
+        }
+        for p in providers.iter_mut().filter(|p| p.role() == Role::IlConsumer) {
+            p.submit(ctx_next, scratch)
+                .with_context(|| format!("signal provider `{}` (submit-ahead)", p.name()))?;
+        }
+    }
+    Ok(())
+}
+
+/// Drop every held ticket in the stack ([`SignalProvider::flush_pending`]);
+/// the pools drain the abandoned chunks. Used by the engine's
+/// drain-before-save checkpoint guard to cancel a speculative
+/// lookahead deterministically.
+pub fn flush(providers: &mut [Box<dyn SignalProvider + '_>]) {
+    for p in providers.iter_mut() {
+        p.flush_pending();
+    }
+}
+
 /// Precomputed irreducible losses (Algorithm 1's amortized IL table).
 /// The engine's producer gathers the per-batch slice ahead of time
 /// (`CandBatch::il`), so the step-time cost is one refcount bump; the
@@ -212,6 +314,13 @@ impl SignalProvider for Precomputed<'_> {
 
     fn role(&self) -> Role {
         Role::IlSource
+    }
+
+    /// The amortized table never moves with the model — it is safe to
+    /// pre-resolve in [`submit_ahead`] and its consumers may ride the
+    /// speculative leg.
+    fn theta_dependent(&self) -> bool {
+        false
     }
 
     fn resolve(&mut self, ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
@@ -255,7 +364,7 @@ impl<'a> OnlineIl<'a> {
         OnlineIl { backend, pending: None }
     }
 
-    fn il_theta<'c>(ctx: &'c StepCtx) -> Result<&'c Arc<Vec<f32>>> {
+    fn il_theta<'c>(ctx: &'c StepCtx) -> Result<&'c ThetaSnapshot> {
         ctx.il_theta.ok_or_else(|| anyhow!("online IL scoring needs the IL-model state"))
     }
 }
@@ -269,7 +378,15 @@ impl SignalProvider for OnlineIl<'_> {
         Role::IlSource
     }
 
+    // theta_dependent stays `true`: the IL parameters update during
+    // the very train step a speculative leg would overlap, and the
+    // fresh-IL contract (score with post-update IL theta) is part of
+    // the bitwise parity guarantee — so this source never pre-submits.
+
     fn submit(&mut self, ctx: &StepCtx, _out: &SignalSet) -> Result<()> {
+        if self.pending.is_some() {
+            return Ok(());
+        }
         if let Backend::Pool(p) = self.backend {
             self.pending = Some(p.submit_fwd(Self::il_theta(ctx)?, ctx.batch)?);
         }
@@ -282,12 +399,16 @@ impl SignalProvider for OnlineIl<'_> {
             None => match self.backend {
                 Backend::Pool(p) => p.fwd(Self::il_theta(ctx)?, ctx.batch)?.loss,
                 Backend::Inline(rt) => {
-                    rt.fwd(Self::il_theta(ctx)?, &ctx.batch.xs, &ctx.batch.ys)?.loss
+                    rt.fwd(&Self::il_theta(ctx)?.data, &ctx.batch.xs, &ctx.batch.ys)?.loss
                 }
             },
         };
         out.il = Some(Arc::new(loss));
         Ok(())
+    }
+
+    fn flush_pending(&mut self) {
+        self.pending = None;
     }
 }
 
@@ -322,6 +443,9 @@ impl SignalProvider for FusedRho<'_> {
     }
 
     fn submit(&mut self, ctx: &StepCtx, out: &SignalSet) -> Result<()> {
+        if self.pending.is_some() {
+            return Ok(());
+        }
         if let Backend::Pool(p) = self.backend {
             self.pending = Some(p.submit_rho(ctx.theta, ctx.batch, &il_signal(out)?)?);
         }
@@ -336,13 +460,17 @@ impl SignalProvider for FusedRho<'_> {
                 match self.backend {
                     Backend::Pool(p) => p.rho(ctx.theta, ctx.batch, &il)?,
                     Backend::Inline(rt) => {
-                        rt.select_rho(ctx.theta, &ctx.batch.xs, &ctx.batch.ys, &il)?
+                        rt.select_rho(&ctx.theta.data, &ctx.batch.xs, &ctx.batch.ys, &il)?
                     }
                 }
             }
         };
         out.rho = Some(scores);
         Ok(())
+    }
+
+    fn flush_pending(&mut self) {
+        self.pending = None;
     }
 }
 
@@ -366,6 +494,9 @@ impl SignalProvider for FwdStats<'_> {
     }
 
     fn submit(&mut self, ctx: &StepCtx, _out: &SignalSet) -> Result<()> {
+        if self.pending.is_some() {
+            return Ok(());
+        }
         if let Backend::Pool(p) = self.backend {
             self.pending = Some(p.submit_fwd(ctx.theta, ctx.batch)?);
         }
@@ -377,7 +508,7 @@ impl SignalProvider for FwdStats<'_> {
             Some(t) => t.wait_fwd()?,
             None => match self.backend {
                 Backend::Pool(p) => p.fwd(ctx.theta, ctx.batch)?,
-                Backend::Inline(rt) => rt.fwd(ctx.theta, &ctx.batch.xs, &ctx.batch.ys)?,
+                Backend::Inline(rt) => rt.fwd(&ctx.theta.data, &ctx.batch.xs, &ctx.batch.ys)?,
             },
         };
         out.loss = Some(stats.loss);
@@ -385,6 +516,10 @@ impl SignalProvider for FwdStats<'_> {
         out.correct = Some(stats.correct);
         out.entropy = Some(stats.entropy);
         Ok(())
+    }
+
+    fn flush_pending(&mut self) {
+        self.pending = None;
     }
 }
 
@@ -406,6 +541,9 @@ impl SignalProvider for McDropout<'_> {
     }
 
     fn submit(&mut self, ctx: &StepCtx, _out: &SignalSet) -> Result<()> {
+        if self.pending.is_some() {
+            return Ok(());
+        }
         if let Backend::Pool(p) = self.backend {
             self.pending = Some(p.submit_mcdropout(ctx.theta, ctx.batch, ctx.mcd_seed)?);
         }
@@ -418,12 +556,16 @@ impl SignalProvider for McDropout<'_> {
             None => match self.backend {
                 Backend::Pool(p) => p.mcdropout(ctx.theta, ctx.batch, ctx.mcd_seed)?,
                 Backend::Inline(rt) => {
-                    rt.mcdropout(ctx.theta, &ctx.batch.xs, &ctx.batch.ys, ctx.mcd_seed)?
+                    rt.mcdropout(&ctx.theta.data, &ctx.batch.xs, &ctx.batch.ys, ctx.mcd_seed)?
                 }
             },
         };
         out.mcd = Some(stats);
         Ok(())
+    }
+
+    fn flush_pending(&mut self) {
+        self.pending = None;
     }
 }
 
@@ -523,15 +665,19 @@ mod tests {
         })
     }
 
-    fn ctx<'a>(theta: &'a Arc<Vec<f32>>, batch: &'a Arc<CandBatch>) -> StepCtx<'a> {
+    fn ctx<'a>(theta: &'a ThetaSnapshot, batch: &'a Arc<CandBatch>) -> StepCtx<'a> {
         StepCtx { theta, il_theta: None, batch, mcd_seed: 0 }
+    }
+
+    fn empty_theta() -> ThetaSnapshot {
+        ThetaSnapshot::fresh(Arc::new(Vec::new()))
     }
 
     #[test]
     fn precomputed_falls_back_to_table_lookup_by_dataset_index() {
         let table = [0.5f32, 1.5, 2.5, 3.5];
         let mut p = Precomputed { values: &table };
-        let theta: Arc<Vec<f32>> = Arc::new(Vec::new());
+        let theta = empty_theta();
         let b = batch(&[3, 0, 2], None);
         let mut sig = SignalSet::default();
         p.provide(&ctx(&theta, &b), &mut sig).unwrap();
@@ -545,7 +691,7 @@ mod tests {
         // panic mid-run.
         let table = [0.5f32, 1.5];
         let mut p = Precomputed { values: &table };
-        let theta: Arc<Vec<f32>> = Arc::new(Vec::new());
+        let theta = empty_theta();
         let b = batch(&[1, 7, 0], None);
         let mut sig = SignalSet::default();
         let err = p.provide(&ctx(&theta, &b), &mut sig).expect_err("OOB index accepted");
@@ -559,7 +705,7 @@ mod tests {
     fn precomputed_reuses_producer_gather_as_refcount_bump() {
         let table = [9.0f32; 4]; // deliberately different from the gather
         let mut p = Precomputed { values: &table };
-        let theta: Arc<Vec<f32>> = Arc::new(Vec::new());
+        let theta = empty_theta();
         let b = batch(&[1, 2], Some(vec![1.5, 2.5]));
         let mut sig = SignalSet::default();
         p.provide(&ctx(&theta, &b), &mut sig).unwrap();
@@ -616,7 +762,7 @@ mod tests {
             }
         }
         let table = [0.25f32, 0.75];
-        let theta: Arc<Vec<f32>> = Arc::new(Vec::new());
+        let theta = empty_theta();
         let b = batch(&[1, 0], None);
         let flag = Rc::new(Cell::new(None));
         let mut providers: Vec<Box<dyn SignalProvider>> = vec![
@@ -627,6 +773,76 @@ mod tests {
         run_step(&mut providers, &ctx(&theta, &b), &mut sig).unwrap();
         assert_eq!(sig.il.as_deref(), Some(&vec![0.75, 0.25]));
         assert_eq!(flag.get(), Some(true), "consumer submitted before the IL source resolved");
+    }
+
+    #[test]
+    fn submit_ahead_gates_consumers_on_il_theta_dependence() {
+        // A fake IL consumer recording each submit and whether `il`
+        // was readable, plus a theta-dependent fake IL source. With
+        // the precomputed (theta-independent) source the consumer
+        // pre-submits and sees il; with the theta-dependent source the
+        // whole IL leg must stay off the speculative path.
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        struct Consumer {
+            submits: Rc<RefCell<Vec<bool>>>,
+        }
+        impl SignalProvider for Consumer {
+            fn name(&self) -> &'static str {
+                "consumer"
+            }
+            fn role(&self) -> Role {
+                Role::IlConsumer
+            }
+            fn submit(&mut self, _ctx: &StepCtx, out: &SignalSet) -> Result<()> {
+                self.submits.borrow_mut().push(out.il.is_some());
+                Ok(())
+            }
+            fn resolve(&mut self, _ctx: &StepCtx, _out: &mut SignalSet) -> Result<()> {
+                Ok(())
+            }
+        }
+        struct LiveIl;
+        impl SignalProvider for LiveIl {
+            fn name(&self) -> &'static str {
+                "live_il"
+            }
+            fn role(&self) -> Role {
+                Role::IlSource
+            }
+            // default theta_dependent() == true — the online-IL shape
+            fn resolve(&mut self, _ctx: &StepCtx, out: &mut SignalSet) -> Result<()> {
+                out.il = Some(Arc::new(vec![0.0]));
+                Ok(())
+            }
+        }
+        let theta = empty_theta();
+        let b = batch(&[0], None);
+        let table = [0.5f32];
+
+        let submits = Rc::new(RefCell::new(Vec::new()));
+        let mut ahead_ok: Vec<Box<dyn SignalProvider>> = vec![
+            Box::new(Precomputed { values: &table }),
+            Box::new(Consumer { submits: Rc::clone(&submits) }),
+        ];
+        let mut scratch = SignalSet::default();
+        submit_ahead(&mut ahead_ok, &ctx(&theta, &b), &mut scratch).unwrap();
+        assert_eq!(
+            submits.borrow().as_slice(),
+            &[true],
+            "theta-independent IL: consumer pre-submits with il resolved"
+        );
+
+        let submits = Rc::new(RefCell::new(Vec::new()));
+        let mut ahead_blocked: Vec<Box<dyn SignalProvider>> =
+            vec![Box::new(LiveIl), Box::new(Consumer { submits: Rc::clone(&submits) })];
+        let mut scratch = SignalSet::default();
+        submit_ahead(&mut ahead_blocked, &ctx(&theta, &b), &mut scratch).unwrap();
+        assert!(
+            submits.borrow().is_empty(),
+            "theta-dependent IL source must keep consumers off the speculative leg"
+        );
+        assert!(scratch.il.is_none(), "the live source must not pre-resolve either");
     }
 
     #[test]

@@ -11,6 +11,7 @@ use std::sync::Arc;
 
 use rho::runtime::artifact::{default_dir, Manifest};
 use rho::runtime::handle::{cpu_client, ModelRuntime};
+use rho::runtime::params::ThetaSnapshot;
 use rho::runtime::pool::{CandBatch, PoolConfig, ScoringPool};
 
 fn setup() -> Option<(Manifest, Rc<xla::PjRtClient>)> {
@@ -114,7 +115,7 @@ fn skewed_rates_move_load_between_lanes() {
     let pool = mk_pool(&manifest, 2);
     let st_theta = {
         let rt = ModelRuntime::load(cpu_client().unwrap(), &manifest, "mlp_small", 64, 10).unwrap();
-        rt.init(3).unwrap().theta
+        rt.init(3).unwrap().theta_snapshot()
     };
     let (batch, il) = rand_batch(320 * 10, 5);
     pool.force_rates(&[4.0, 1.0]).unwrap();
@@ -132,7 +133,7 @@ fn pool_distributes_load_across_workers() {
     let pool = mk_pool(&manifest, 2);
     let st_theta = {
         let rt = ModelRuntime::load(cpu_client().unwrap(), &manifest, "mlp_small", 64, 10).unwrap();
-        rt.init(3).unwrap().theta
+        rt.init(3).unwrap().theta_snapshot()
     };
     // 20 chunks of work
     let (batch, il) = rand_batch(320 * 20, 5);
@@ -195,7 +196,7 @@ fn pool_without_mcd_artifact_rejects_mcd_requests() {
     let pool = mk_pool(&manifest, 1);
     assert!(!pool.has_mcdropout());
     let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_small", 64, 10).unwrap();
-    let theta = rt.init(1).unwrap().theta;
+    let theta = rt.init(1).unwrap().theta_snapshot();
     let (batch, _) = rand_batch(32, 3);
     assert!(pool.mcdropout(&theta, &batch, 1).is_err());
 }
@@ -204,10 +205,10 @@ fn pool_without_mcd_artifact_rejects_mcd_requests() {
 fn pool_rejects_bad_shapes() {
     let Some((manifest, _client)) = setup() else { return };
     let pool = mk_pool(&manifest, 1);
-    let theta = Arc::new(vec![0.0f32; 3]); // wrong param count
+    let theta = ThetaSnapshot::fresh(Arc::new(vec![0.0f32; 3])); // wrong param count
     let (batch, il) = rand_batch(32, 7);
     assert!(pool.rho(&theta, &batch, &il).is_err());
-    let theta_ok = Arc::new(vec![0.0f32; pool_param_count(&manifest)]);
+    let theta_ok = ThetaSnapshot::fresh(Arc::new(vec![0.0f32; pool_param_count(&manifest)]));
     let short_il = Arc::new(il[..10].to_vec());
     assert!(pool.rho(&theta_ok, &batch, &short_il).is_err(), "mismatched il len accepted");
     let ragged = Arc::new(CandBatch {
@@ -248,7 +249,8 @@ fn online_il_provider_pool_vs_inline_parity() {
     let plane = ComputePlane::new(PLANE_IL, "mlp_small", Rc::new(mk_pool(&manifest, 2)));
     for n in [320usize, 777, 33] {
         let (batch, _) = rand_batch(n, 0xBEEF ^ n as u64);
-        let theta = Arc::new(Vec::new()); // target theta unused by OnlineIl
+        // target theta unused by OnlineIl
+        let theta = ThetaSnapshot::fresh(Arc::new(Vec::new()));
         let score = |backend: Backend| {
             let mut sig = SignalSet::default();
             let ctx =
@@ -388,7 +390,7 @@ fn pool_rejects_desynced_batch_columns() {
     // slice panic or an out-of-range index downstream.
     let Some((manifest, _client)) = setup() else { return };
     let pool = mk_pool(&manifest, 1);
-    let theta_ok = Arc::new(vec![0.0f32; pool_param_count(&manifest)]);
+    let theta_ok = ThetaSnapshot::fresh(Arc::new(vec![0.0f32; pool_param_count(&manifest)]));
     let (batch, _) = rand_batch(32, 41);
     // idx desynced from ys (tracker/IL gathers would index OOB)
     let desynced_idx = Arc::new(CandBatch {

@@ -37,18 +37,30 @@ fn base_cfg(method: Method) -> RunConfig {
     }
 }
 
-/// One-worker plane over `arch`'s fwd/select artifacts.
-fn plane_w1(lab: &Lab, name: &str, arch: &str) -> ComputePlane {
+/// Plane over `arch`'s fwd/select artifacts with `workers` workers.
+fn plane_w(lab: &Lab, name: &str, arch: &str, workers: usize) -> ComputePlane {
     let fwd = lab.manifest.find(arch, 64, 10, "fwd_b320").unwrap();
     let sel = lab.manifest.find(arch, 64, 10, "select_b320").unwrap();
     let pool = ScoringPool::new(
         fwd,
         sel,
         None,
-        &PoolConfig { workers: 1, lane_depth: 4, ..PoolConfig::default() },
+        &PoolConfig { workers, lane_depth: 4, ..PoolConfig::default() },
     )
     .unwrap();
     ComputePlane::new(name, arch, Rc::new(pool))
+}
+
+/// One-worker plane over `arch`'s fwd/select artifacts.
+fn plane_w1(lab: &Lab, name: &str, arch: &str) -> ComputePlane {
+    plane_w(lab, name, arch, 1)
+}
+
+/// Hostile EMA throughput estimates for an `n`-worker pool: NaN on
+/// the first worker, near-zero on the rest — the proportional planner
+/// must still produce value-identical scores.
+fn hostile_rates(n: usize) -> Vec<f64> {
+    (0..n).map(|i| if i == 0 { f64::NAN } else { 1e-9 }).collect()
 }
 
 fn assert_curves_bitwise(a: &rho::coordinator::Curve, b: &rho::coordinator::Curve, what: &str) {
@@ -509,6 +521,145 @@ fn overlapped_two_plane_fwds_match_inline_bitwise_under_hostile_rates() {
     }
     assert!(two.cross_plane_overlap_s() > 0.0);
     assert!(two.overlap_s_per_step() > 0.0);
+}
+
+#[test]
+fn speculate_off_is_bitwise_identical_across_methods_and_workers() {
+    // speculate=0 acceptance gate: with speculation disabled (the
+    // default) the engine must execute EXACTLY the serialized walk —
+    // curves bitwise-equal to the inline reference for rho_loss,
+    // train_loss, and uniform, at 1 and 4 workers, under hostile
+    // forced EMA rates on the target pool.
+    let Some(lab) = lab() else { return };
+    for method in [Method::RhoLoss, Method::TrainLoss, Method::Uniform] {
+        let mut cfg = base_cfg(method);
+        cfg.il_arch = "mlp_small".into();
+        cfg.epochs = 2;
+        let bundle = lab.bundle(&cfg.dataset);
+        let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+        let il =
+            if method.needs_il() { Some(lab.il_context(&cfg, &bundle).unwrap()) } else { None };
+        let il_ref = il.as_deref();
+        let reference = Session::new(&cfg, &target).run(&bundle, il_ref).unwrap();
+        for workers in [1usize, 4] {
+            let plane = plane_w(&lab, "target", &cfg.arch, workers);
+            plane.pool.force_rates(&hostile_rates(workers)).unwrap();
+            let pooled = Session::new(&cfg, &target)
+                .plane(&plane)
+                .prefetch(3)
+                .speculate(false)
+                .run(&bundle, il_ref)
+                .unwrap();
+            assert_curves_bitwise(
+                &reference.curve,
+                &pooled.curve,
+                &format!("{} speculate=0 workers={workers}", method.name()),
+            );
+            assert_eq!(
+                pooled.accepted_stale, 0,
+                "speculate=0 must never accept a stale ranking"
+            );
+            assert_eq!(pooled.spec_flushes, 0, "speculate=0 must never flush a lookahead");
+        }
+    }
+}
+
+#[test]
+fn speculate_on_is_deterministic_and_accepts_stale_rankings() {
+    // speculate=1 pin: the speculative walk is NOT required to match
+    // the serialized one (rankings are staleness-1 by design), but it
+    // must be deterministic — same seed ⇒ bitwise-identical curve —
+    // and must actually take the speculative path.
+    let Some(lab) = lab() else { return };
+    let mut cfg = base_cfg(Method::RhoLoss);
+    cfg.il_arch = "mlp_small".into();
+    cfg.epochs = 2;
+    let bundle = lab.bundle(&cfg.dataset);
+    let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+    let il = lab.il_context(&cfg, &bundle).unwrap();
+    let run = || {
+        let plane = plane_w(&lab, "target", &cfg.arch, 1);
+        Session::new(&cfg, &target)
+            .plane(&plane)
+            .prefetch(3)
+            .speculate(true)
+            .run(&bundle, Some(&il))
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert!(a.accepted_stale > 0, "speculation never engaged");
+    assert_eq!(a.accepted_stale, b.accepted_stale, "speculation nondeterministic across reruns");
+    assert_curves_bitwise(&a.curve, &b.curve, "speculate=1 rerun");
+    assert!(a.curve.final_accuracy() > 0.5, "speculative run failed to learn");
+}
+
+#[test]
+fn speculative_checkpoint_mid_lookahead_resumes_bitwise() {
+    // The drain-before-save guard: a checkpoint taken while a
+    // speculative lookahead is in flight must flush it, so a run
+    // killed at the checkpoint and resumed continues bitwise-equal to
+    // the uninterrupted run (which checkpoints — and therefore
+    // flushes — at the same cadence).
+    let Some(lab) = lab() else { return };
+    let dir = std::env::temp_dir().join(format!("rho-spec-resume-{}", std::process::id()));
+    let mut cfg = base_cfg(Method::RhoLoss);
+    cfg.il_arch = "mlp_small".into();
+    cfg.epochs = 4;
+    let bundle = lab.bundle(&cfg.dataset);
+    let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+    let il = lab.il_context(&cfg, &bundle).unwrap();
+    let spe = bundle.train.len().div_ceil(cfg.big_batch()) as u64;
+
+    // uninterrupted speculative run, checkpointing at the same cadence
+    let reference = Session::new(&cfg, &target)
+        .speculate(true)
+        .checkpoint_every(spe * 2)
+        .checkpoint_path(dir.join("ref.ckpt"))
+        .run(&bundle, Some(&il))
+        .unwrap();
+    assert!(reference.accepted_stale > 0, "speculation never engaged");
+    assert!(
+        reference.spec_flushes > 0,
+        "mid-run checkpoint never caught an in-flight lookahead"
+    );
+
+    // first half: checkpointed at step 2·spe, mid-lookahead territory
+    let ckpt = dir.join("half.ckpt");
+    let mut half = cfg.clone();
+    half.epochs = 2;
+    let first = Session::new(&half, &target)
+        .speculate(true)
+        .checkpoint_every(spe * 2)
+        .checkpoint_path(&ckpt)
+        .run(&bundle, Some(&il))
+        .unwrap();
+    assert!(ckpt.exists(), "checkpoint not written");
+    assert_eq!(first.curve.points.last().unwrap().step, spe * 2);
+
+    // resume the 4-epoch run from the saved step, speculation re-armed
+    let resumed = Session::new(&cfg, &target)
+        .speculate(true)
+        .resume_from(&ckpt)
+        .run(&bundle, Some(&il))
+        .unwrap();
+    assert_eq!(resumed.steps, spe * 2, "resumed run re-ran steps");
+    let tail: Vec<_> =
+        reference.curve.points.iter().filter(|p| p.step > spe * 2).copied().collect();
+    assert_eq!(tail.len(), resumed.curve.points.len());
+    for (a, b) in tail.iter().zip(&resumed.curve.points) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(
+            a.accuracy.to_bits(),
+            b.accuracy.to_bits(),
+            "speculative resume diverged at step {} ({} vs {})",
+            a.step,
+            a.accuracy,
+            b.accuracy
+        );
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss at step {}", a.step);
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
