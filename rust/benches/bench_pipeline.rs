@@ -9,9 +9,10 @@
 //!
 //! Besides the human-readable table, every run (over)writes its
 //! measured numbers to `BENCH_pipeline.json` (one entry per method ×
-//! workers × source, plus per-plane dispatch/queue-wait timings and
-//! the shard-ingest bytes/sec); committing the file per PR makes the
-//! perf trajectory machine-trackable. The two-plane rho_loss +
+//! workers × source, plus per-plane dispatch/queue-wait timings,
+//! supervision health/recovery counters, and the shard-ingest
+//! bytes/sec); committing the file per PR makes the perf trajectory
+//! machine-trackable. The two-plane rho_loss +
 //! online_il run is additionally swept over `speculate` ∈ {0, 1} and
 //! records `train_overlap_s` — the scoring wall-clock that ran under
 //! an open gradient step, i.e. what staleness-1 speculation buys.
@@ -165,6 +166,15 @@ fn main() {
                 ("overlap_s", num(t.overlap_s)),
                 ("worker_chunks", arr(t.worker_chunks.iter().map(|&ch| num(ch as f64)))),
                 ("worker_rates", arr(t.worker_rates.iter().map(|&r| num(r)))),
+                // supervision: all-zero / all-"live" on a healthy run,
+                // but the schema is always present so perf tooling can
+                // discard degraded measurements (a recovered run's
+                // steps/sec is not comparable to a healthy one's)
+                ("recovered_chunks", num(t.recovered_chunks as f64)),
+                ("worker_deaths", num(t.worker_deaths as f64)),
+                ("respawns", num(t.respawns as f64)),
+                ("deadline_expiries", num(t.deadline_expiries as f64)),
+                ("worker_health", arr(t.worker_health.iter().map(|h| s(h)))),
             ]));
         }
     }

@@ -106,6 +106,19 @@ pub struct RunConfig {
     /// Named compute-plane sizing overrides (the `[planes]` table /
     /// `plane.<name>.<field>` keys).
     pub planes: Vec<PlaneSpec>,
+    /// Deadline (ms) for every blocking scoring-pool wait; a dead or
+    /// wedged worker then surfaces as a typed `DispatchError` naming
+    /// the plane/worker/seq instead of hanging the run. 0 = no
+    /// deadline (the default; supervision still answers outright
+    /// worker *deaths* without it).
+    pub dispatch_timeout_ms: u64,
+    /// Respawn policy for dead pool workers: `never` (default),
+    /// `once`, or `always`. Parsed by `RespawnPolicy::parse`.
+    pub respawn: String,
+    /// Fault-injection plan (chaos testing; see `runtime::fault` for
+    /// the grammar). `RHO_FAULT` overrides this key when set. Empty =
+    /// no faults.
+    pub fault: String,
 }
 
 /// Per-plane sizing/arch overrides. Unset fields inherit the
@@ -156,6 +169,9 @@ impl Default for RunConfig {
             shard_rows: 0,
             window: 0,
             planes: Vec::new(),
+            dispatch_timeout_ms: 0,
+            respawn: String::new(),
+            fault: String::new(),
         }
     }
 }
@@ -206,6 +222,11 @@ impl RunConfig {
             "source" | "data" | "data.source" => self.source = v.into(),
             "shard_rows" | "data.shard_rows" => self.shard_rows = v.parse()?,
             "window" | "data.window" => self.window = v.parse()?,
+            "dispatch_timeout_ms" | "pool.dispatch_timeout_ms" => {
+                self.dispatch_timeout_ms = v.parse()?
+            }
+            "respawn" | "pool.respawn" => self.respawn = v.into(),
+            "fault" | "pool.fault" => self.fault = v.into(),
             k if k.starts_with("plane.") => self.set_plane(k, v)?,
             other => bail!("unknown config key `{other}`"),
         }
@@ -321,6 +342,13 @@ impl RunConfig {
         if !self.source.is_empty() && crate::data::store::parse_source(&self.source).is_none() {
             bail!("source must be `shards://<dir>` or empty, got `{}`", self.source);
         }
+        // Supervision keys: reject malformed values here with named
+        // errors — `PoolConfig::from_run` deliberately falls back to
+        // defaults (it also runs on cached-plane paths that predate
+        // validation), so this is where a typo'd policy or fault plan
+        // must fail loudly.
+        crate::runtime::pool::RespawnPolicy::parse(&self.respawn)?;
+        crate::runtime::fault::FaultPlan::parse(&self.fault)?;
         for spec in &self.planes {
             if let Some(ra) = spec.rate_alpha {
                 if !(ra > 0.0 && ra <= 1.0) {
@@ -531,6 +559,44 @@ mod tests {
         assert_eq!(c.window, 2048);
         assert_eq!(c.epochs, 2);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn supervision_keys_round_trip_and_validate() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.dispatch_timeout_ms, 0, "deadline must default off");
+        assert!(c.respawn.is_empty() && c.fault.is_empty());
+        c.apply_pairs([
+            "dispatch_timeout_ms=250",
+            "respawn=once",
+            "fault=worker_panic@plane=target,worker=1,step=3",
+        ])
+        .unwrap();
+        assert_eq!(c.dispatch_timeout_ms, 250);
+        assert_eq!(c.respawn, "once");
+        c.validate().unwrap();
+        // pool.-prefixed spellings hit the same fields (config-file
+        // `[run]` section + CLI symmetry with the plane keys)
+        c.apply_pairs(["pool.dispatch_timeout_ms=0", "pool.respawn=always", "pool.fault="])
+            .unwrap();
+        assert_eq!(c.dispatch_timeout_ms, 0);
+        assert_eq!(c.respawn, "always");
+        assert!(c.fault.is_empty());
+        c.validate().unwrap();
+        // malformed values fail validation with named errors
+        c.respawn = "twice".into();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("twice"), "{err}");
+        c.respawn.clear();
+        c.fault = "worker_painc@step=1".into();
+        let err = format!("{:#}", c.validate().unwrap_err());
+        assert!(err.contains("worker_painc"), "{err}");
+        c.fault.clear();
+        // ...and none of them perturb the run identity tag
+        let mut tagged = RunConfig::default();
+        tagged.apply_pairs(["dispatch_timeout_ms=99", "respawn=always", "fault=stall@ms=1"])
+            .unwrap();
+        assert_eq!(tagged.tag(), RunConfig::default().tag());
     }
 
     #[test]

@@ -83,6 +83,32 @@
 //! it fresh exactly like the uninterrupted run does after its flush —
 //! resume stays bitwise-exact with no checkpoint-format change.
 //!
+//! ## Fault tolerance
+//!
+//! The scoring planes are supervised (see [`crate::runtime::pool`]):
+//! a worker that panics or fails setup turns its lane into a zombie
+//! that answers every chunk with a named error, and the pool re-scores
+//! the failed chunks deterministically — chunk windows are pure
+//! functions of `(n, select_batch)` (never of worker count or rates),
+//! so an inline re-score with the same compiled artifacts is
+//! bitwise-identical to the answer the dead worker would have given.
+//! The engine diffs each plane's recovery counters every step and
+//! emits a `degraded` event (with the supervision causes) the step a
+//! fault is absorbed; per-run totals land in
+//! [`RunResult::recovered_chunks`] / `worker_deaths` / `respawns`.
+//! A *wedged* (not dead) lane is bounded by `dispatch_timeout_ms`:
+//! the expired wait surfaces as a typed
+//! [`DispatchError`](crate::runtime::pool::DispatchError) naming
+//! plane/worker/seq, the lane is excluded from planning, and the
+//! engine retries the step's scoring exactly once around it — same θ,
+//! same batch, same chunk grid. A failure on the speculative leg only
+//! costs the lookahead (flushed and re-scored fresh, like a
+//! checkpoint flush). An async IL updater failure latches and
+//! surfaces at the next FIFO sync as a typed
+//! [`UpdaterError`](crate::runtime::updater::UpdaterError). All of it
+//! is driven under test by the seeded [`FaultPlan`] harness
+//! (`RHO_FAULT` / `pool.fault`).
+//!
 //! Checkpoint/resume: with `checkpoint_every > 0` the engine
 //! atomically writes a [`SessionCheckpoint`] — target (+ online-IL)
 //! `TrainState`, selection-RNG cursor, **sampler cursor**, run
@@ -126,8 +152,9 @@ use crate::data::store::{materialize_subset, DataSource};
 use crate::data::{Bundle, Dataset};
 use crate::runtime::handle::ModelRuntime;
 use crate::runtime::params::{ThetaSnapshot, TrainState};
+use crate::runtime::fault::FaultPlan;
 use crate::runtime::plane::{ComputePlane, PlaneSet, PLANE_IL, PLANE_MCD, PLANE_TARGET};
-use crate::runtime::pool::{PoolReport, TrainSpan};
+use crate::runtime::pool::{DispatchError, PoolReport, RecoveryCounters, TrainSpan};
 use crate::runtime::updater::IlUpdater;
 use crate::selection::provider::{self, SignalSet, StackSpec, StepCtx};
 use crate::selection::select;
@@ -412,7 +439,15 @@ impl<'a> Engine<'a> {
         }
         let mut il_driver = match il_initial {
             Some(st) => match il_plane.and_then(|p| p.train_meta.as_ref()) {
-                Some(meta) => IlDriver::Async(IlUpdater::spawn(meta, st)?),
+                // The updater reports every failure under the plane's
+                // name, and runs the same fault schedule as the pools
+                // (its `updater_panic` specs fire nowhere else).
+                Some(meta) => IlDriver::Async(IlUpdater::spawn(
+                    meta,
+                    st,
+                    PLANE_IL,
+                    FaultPlan::from_config_env(&cfg.fault)?,
+                )?),
                 None => IlDriver::Inline(st),
             },
             None => IlDriver::None,
@@ -470,6 +505,12 @@ impl<'a> Engine<'a> {
         // reported once, under the first name that registered it.
         let plane_list: Vec<&ComputePlane> = self.planes.unique_planes();
         let pool_start: Vec<PoolReport> = plane_list.iter().map(|p| p.pool.report()).collect();
+        // Supervision: recovery counters are diffed every step (cheap
+        // — one uncontended lock per plane) so a fault surfaces as a
+        // `degraded` event at the step that absorbed it, not at the
+        // next eval boundary.
+        let mut last_recovery: Vec<RecoveryCounters> =
+            plane_list.iter().map(|p| p.pool.recovery_counters()).collect();
         let ckpt_path: Option<PathBuf> = if self.checkpoint_every > 0 {
             Some(self.checkpoint_path.clone().unwrap_or_else(|| cfg.checkpoint_file()))
         } else {
@@ -617,7 +658,36 @@ impl<'a> Engine<'a> {
                             batch: &b,
                             mcd_seed,
                         };
-                        provider::run_step(&mut providers, &ctx, &mut sig)?;
+                        if let Err(e) = provider::run_step(&mut providers, &ctx, &mut sig) {
+                            // A typed dispatch failure (a wedged lane
+                            // missed its deadline, or a lane channel
+                            // died) is retryable exactly once: the
+                            // failed wait already marked the lane
+                            // Stalled/Dead, so after flushing the
+                            // stack's part-consumed tickets a fresh
+                            // submit plans around it. Same θ, same
+                            // batch, same chunk grid — the retry is
+                            // bitwise-equivalent scoring on the
+                            // surviving lanes. A second failure is
+                            // fatal.
+                            let Some(de) = e.downcast_ref::<DispatchError>() else {
+                                return Err(e);
+                            };
+                            events.degraded(
+                                &de.plane,
+                                b.step,
+                                &format!("dispatch failed, re-scoring around the lane: {de}"),
+                                0,
+                                0,
+                                0,
+                                0,
+                            );
+                            provider::flush(&mut providers);
+                            sig.clear();
+                            provider::run_step(&mut providers, &ctx, &mut sig).with_context(
+                                || "re-scoring after a dispatch failure failed again",
+                            )?;
+                        }
                     }
                     let sel = select(method, &sig.candidates(b.n()), cfg.nb, &mut rng);
 
@@ -644,16 +714,41 @@ impl<'a> Engine<'a> {
                             rx.recv().map_err(|_| anyhow!("candidate producer died"))?;
                         let theta_now = state.theta_snapshot();
                         let mut scratch = SignalSet::default();
-                        {
+                        let submitted = {
                             let ctx_next = StepCtx {
                                 theta: &theta_now,
                                 il_theta: None,
                                 batch: &next,
                                 mcd_seed: step_seed(next.step),
                             };
-                            provider::submit_ahead(&mut providers, &ctx_next, &mut scratch)?;
+                            provider::submit_ahead(&mut providers, &ctx_next, &mut scratch)
+                        };
+                        match submitted {
+                            Ok(()) => {
+                                lookahead =
+                                    Some(Lookahead { batch: next, theta: Some(theta_now) })
+                            }
+                            // A dying lane surfacing on the speculative
+                            // leg costs the lookahead, never the run:
+                            // flush the part-submitted tickets and keep
+                            // the batch — step t+1 re-scores it fresh,
+                            // exactly like a checkpoint flush does.
+                            Err(e) if e.downcast_ref::<DispatchError>().is_some() => {
+                                events.degraded(
+                                    &e.downcast_ref::<DispatchError>().expect("just checked").plane,
+                                    b.step,
+                                    &format!("speculative submit failed, lookahead flushed: {e:#}"),
+                                    0,
+                                    0,
+                                    0,
+                                    0,
+                                );
+                                provider::flush(&mut providers);
+                                spec_flushes += 1;
+                                lookahead = Some(Lookahead { batch: next, theta: None });
+                            }
+                            Err(e) => return Err(e),
                         }
-                        lookahead = Some(Lookahead { batch: next, theta: Some(theta_now) });
                     }
 
                     // gradient step(s): selected rows come straight out
@@ -697,6 +792,42 @@ impl<'a> Engine<'a> {
                         }
                     }
                     drop(_train_span);
+
+                    // Any fault a plane absorbed inside this step's
+                    // dispatches (deterministic inline re-scores,
+                    // worker deaths, respawns, deadline expiries)
+                    // surfaces now as a `degraded` event carrying the
+                    // step's counter delta and the supervision causes.
+                    for (p, prev) in plane_list.iter().zip(last_recovery.iter_mut()) {
+                        let now = p.pool.recovery_counters();
+                        if now == *prev {
+                            continue;
+                        }
+                        let causes: Vec<String> = p
+                            .pool
+                            .worker_health()
+                            .iter()
+                            .enumerate()
+                            .filter_map(|(w, h)| {
+                                h.cause.as_ref().map(|c| format!("worker {w}: {c}"))
+                            })
+                            .collect();
+                        let detail = if causes.is_empty() {
+                            "recovered (faulted lane already respawned)".to_string()
+                        } else {
+                            causes.join("; ")
+                        };
+                        events.degraded(
+                            &p.name,
+                            b.step,
+                            &detail,
+                            now.recovered_chunks - prev.recovered_chunks,
+                            now.worker_deaths - prev.worker_deaths,
+                            now.respawns - prev.respawns,
+                            now.deadline_expiries - prev.deadline_expiries,
+                        );
+                        *prev = now;
+                    }
 
                     if b.step % eval_every == 0 || b.step == total_steps {
                         // first boundary: adopt the producer-side
@@ -803,6 +934,11 @@ impl<'a> Engine<'a> {
             }
             IlDriver::None => None,
         };
+        // Per-run recovery totals: the per-plane since-deltas already
+        // computed for `plane_timings`, summed across planes.
+        let recovered_chunks = plane_timings.iter().map(|t| t.recovered_chunks).sum();
+        let worker_deaths = plane_timings.iter().map(|t| t.worker_deaths).sum();
+        let respawns = plane_timings.iter().map(|t| t.respawns).sum();
         Ok(RunResult {
             curve,
             tracker,
@@ -813,6 +949,9 @@ impl<'a> Engine<'a> {
             plane_timings,
             accepted_stale,
             spec_flushes,
+            recovered_chunks,
+            worker_deaths,
+            respawns,
         })
     }
 }

@@ -136,6 +136,41 @@ impl EventLog {
                 ("imbalance", num(t.imbalance())),
                 ("worker_chunks", arr(t.worker_chunks.iter().map(|&c| num(c as f64)))),
                 ("worker_rates", arr(t.worker_rates.iter().map(|&r| num(r)))),
+                ("recovered_chunks", num(t.recovered_chunks as f64)),
+                ("worker_deaths", num(t.worker_deaths as f64)),
+                ("respawns", num(t.respawns as f64)),
+                ("deadline_expiries", num(t.deadline_expiries as f64)),
+                ("worker_health", arr(t.worker_health.iter().map(|h| s(h)))),
+            ],
+        );
+    }
+
+    /// A compute plane absorbed a fault this step: a worker died (its
+    /// chunks were re-scored deterministically), a dispatch deadline
+    /// expired, or a lane was respawned. The counters are the *delta*
+    /// for the step that absorbed the fault; `detail` carries the
+    /// supervision causes (panic messages, stall diagnoses).
+    #[allow(clippy::too_many_arguments)]
+    pub fn degraded(
+        &mut self,
+        plane: &str,
+        step: u64,
+        detail: &str,
+        recovered_chunks: u64,
+        worker_deaths: u64,
+        respawns: u64,
+        deadline_expiries: u64,
+    ) {
+        self.emit(
+            "degraded",
+            vec![
+                ("plane", s(plane)),
+                ("step", num(step as f64)),
+                ("detail", s(detail)),
+                ("recovered_chunks", num(recovered_chunks as f64)),
+                ("worker_deaths", num(worker_deaths as f64)),
+                ("respawns", num(respawns as f64)),
+                ("deadline_expiries", num(deadline_expiries as f64)),
             ],
         );
     }
@@ -252,6 +287,10 @@ mod tests {
             train_overlap_s: 0.5,
             worker_chunks: vec![9, 3],
             worker_rates: vec![3.0, 1.0],
+            recovered_chunks: 2,
+            worker_deaths: 1,
+            worker_health: vec!["live".into(), "dead".into()],
+            ..Default::default()
         };
         log.pool_stats("target", &t);
         log.pool_stats("il", &t);
@@ -268,9 +307,34 @@ mod tests {
         assert_eq!(v.get("overlap_s").unwrap().as_f64(), Some(0.75));
         assert_eq!(v.get("train_overlap_s").unwrap().as_f64(), Some(0.5));
         assert!(v.get("imbalance").unwrap().as_f64().unwrap() > 1.0);
+        // supervision lands next to the timings, keyed per worker
+        assert_eq!(v.get("recovered_chunks").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.get("worker_deaths").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("respawns").unwrap().as_f64(), Some(0.0));
+        let health = v.get("worker_health").unwrap().as_array().unwrap();
+        assert_eq!(health.len(), 2);
+        assert_eq!(health[1].as_str(), Some("dead"));
         let v2 = json::parse(text.lines().nth(1).unwrap()).unwrap();
         assert_eq!(v2.get("plane").unwrap().as_str(), Some("il"));
         std::fs::remove_dir_all(tmp("c")).ok();
+    }
+
+    #[test]
+    fn degraded_event_names_plane_and_counts() {
+        let path = tmp("dg").join("run.jsonl");
+        let mut log = EventLog::create(&path).unwrap();
+        log.degraded("target", 7, "worker 1 panicked: injected worker_panic", 3, 1, 0, 0);
+        log.run_end(0.0, 0.0);
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("degraded"));
+        assert_eq!(v.get("plane").unwrap().as_str(), Some("target"));
+        assert_eq!(v.get("step").unwrap().as_f64(), Some(7.0));
+        assert_eq!(v.get("recovered_chunks").unwrap().as_f64(), Some(3.0));
+        assert_eq!(v.get("worker_deaths").unwrap().as_f64(), Some(1.0));
+        assert!(v.get("detail").unwrap().as_str().unwrap().contains("panicked"));
+        std::fs::remove_dir_all(tmp("dg")).ok();
     }
 
     #[test]

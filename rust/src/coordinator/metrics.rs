@@ -38,10 +38,23 @@ pub struct DispatchTimings {
     /// open — the scoring-over-train overlap speculative stepping
     /// (`speculate=1`) buys (0 for the serialized walk).
     pub train_overlap_s: f64,
+    /// Chunks whose worker failed and that were re-scored
+    /// deterministically (surviving lanes or inline) — 0 on a healthy
+    /// run.
+    pub recovered_chunks: u64,
+    /// Workers observed dying (panic or setup failure).
+    pub worker_deaths: u64,
+    /// Lanes rebuilt by the respawn policy.
+    pub respawns: u64,
+    /// Dispatch waits abandoned by `dispatch_timeout_ms` expiry.
+    pub deadline_expiries: u64,
     /// Chunks processed per worker.
     pub worker_chunks: Vec<u64>,
     /// Point-in-time EMA service-rate estimates (chunks/sec).
     pub worker_rates: Vec<f64>,
+    /// Point-in-time per-worker supervision state (`"live"` /
+    /// `"stalled"` / `"dead"`), in lane order.
+    pub worker_health: Vec<String>,
 }
 
 impl DispatchTimings {
@@ -56,8 +69,13 @@ impl DispatchTimings {
             inflight_s: r.inflight_s,
             overlap_s: r.overlap_s,
             train_overlap_s: r.train_overlap_s,
+            recovered_chunks: r.recovered_chunks,
+            worker_deaths: r.worker_deaths,
+            respawns: r.respawns,
+            deadline_expiries: r.deadline_expiries,
             worker_chunks: r.per_worker.iter().map(|w| w.chunks).collect(),
             worker_rates: r.per_worker.iter().map(|w| w.rate).collect(),
+            worker_health: r.worker_health.iter().map(|h| h.state.name().to_string()).collect(),
         }
     }
 
@@ -84,8 +102,13 @@ impl DispatchTimings {
             out.inflight_s += t.inflight_s;
             out.overlap_s += t.overlap_s;
             out.train_overlap_s += t.train_overlap_s;
+            out.recovered_chunks += t.recovered_chunks;
+            out.worker_deaths += t.worker_deaths;
+            out.respawns += t.respawns;
+            out.deadline_expiries += t.deadline_expiries;
             out.worker_chunks.extend_from_slice(&t.worker_chunks);
             out.worker_rates.extend_from_slice(&t.worker_rates);
+            out.worker_health.extend_from_slice(&t.worker_health);
         }
         if out.chunks > 0 {
             out.mean_queue_wait_us = wait_us_total / out.chunks as f64;
@@ -110,9 +133,17 @@ impl DispatchTimings {
         if mean > 0.0 { max / mean } else { 1.0 }
     }
 
-    /// One-line run-report rendering.
+    /// Did this entry absorb any fault (death, recovery, respawn, or
+    /// deadline expiry)?
+    pub fn degraded(&self) -> bool {
+        self.recovered_chunks + self.worker_deaths + self.respawns + self.deadline_expiries > 0
+    }
+
+    /// One-line run-report rendering. Recovery counters render only
+    /// when something was actually absorbed — a healthy run reads
+    /// exactly as before.
     pub fn summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "plane `{}`: {} dispatches, {} chunks, queue-wait {:.0}us/chunk, busy {:.0}us/chunk, \
              in-flight {:.2}s (cross-plane overlap {:.2}s, over-train {:.2}s), loads {:?} \
              (imbalance {:.2}x)",
@@ -126,7 +157,19 @@ impl DispatchTimings {
             self.train_overlap_s,
             self.worker_chunks,
             self.imbalance()
-        )
+        );
+        if self.degraded() {
+            line.push_str(&format!(
+                ", DEGRADED: {} recovered chunks, {} deaths, {} respawns, {} deadline expiries, \
+                 health {:?}",
+                self.recovered_chunks,
+                self.worker_deaths,
+                self.respawns,
+                self.deadline_expiries,
+                self.worker_health
+            ));
+        }
+        line
     }
 }
 
@@ -280,7 +323,7 @@ mod tests {
 
     #[test]
     fn dispatch_timings_aggregate_report() {
-        use crate::runtime::pool::WorkerStat;
+        use crate::runtime::pool::{WorkerHealth, WorkerStat, WorkerState};
         let r = PoolReport {
             dispatches: 4,
             chunks: 10,
@@ -289,9 +332,21 @@ mod tests {
             inflight_s: 0.5,
             overlap_s: 0.25,
             train_overlap_s: 0.125,
+            recovered_chunks: 2,
+            worker_deaths: 1,
+            respawns: 0,
+            deadline_expiries: 0,
             per_worker: vec![
                 WorkerStat { chunks: 8, busy_s: 0.008, rate: 4.0 },
                 WorkerStat { chunks: 2, busy_s: 0.002, rate: 1.0 },
+            ],
+            worker_health: vec![
+                WorkerHealth::default(),
+                WorkerHealth {
+                    state: WorkerState::Dead,
+                    cause: Some("worker 1 panicked: boom".into()),
+                    respawns: 0,
+                },
             ],
         };
         let t = DispatchTimings::from_report("target", &r);
@@ -302,13 +357,22 @@ mod tests {
         assert_eq!((t.inflight_s, t.overlap_s), (0.5, 0.25));
         assert_eq!(t.train_overlap_s, 0.125);
         assert_eq!(t.worker_chunks, vec![8, 2]);
+        // supervision flows through: counters verbatim, health as
+        // state names in lane order
+        assert_eq!((t.recovered_chunks, t.worker_deaths), (2, 1));
+        assert_eq!(t.worker_health, vec!["live".to_string(), "dead".to_string()]);
+        assert!(t.degraded());
         // 8 of 10 chunks on one of two workers: max/mean = 8/5
         assert!((t.imbalance() - 1.6).abs() < 1e-9);
         assert!(t.summary().contains("10 chunks"));
         assert!(t.summary().contains("`target`"));
         assert!(t.summary().contains("overlap 0.25s"), "{}", t.summary());
-        // empty report is balanced by definition
+        assert!(t.summary().contains("DEGRADED: 2 recovered chunks"), "{}", t.summary());
+        // empty report is balanced by definition — and not degraded,
+        // so its summary stays the classic one-liner
         assert_eq!(DispatchTimings::default().imbalance(), 1.0);
+        assert!(!DispatchTimings::default().degraded());
+        assert!(!DispatchTimings::default().summary().contains("DEGRADED"));
     }
 
     #[test]
@@ -324,6 +388,10 @@ mod tests {
             train_overlap_s: 0.25,
             worker_chunks: vec![20, 10],
             worker_rates: vec![2.0, 1.0],
+            worker_health: vec!["live".into(), "dead".into()],
+            recovered_chunks: 3,
+            worker_deaths: 1,
+            ..Default::default()
         };
         let il = DispatchTimings {
             plane: "il".into(),
@@ -336,6 +404,8 @@ mod tests {
             train_overlap_s: 0.75,
             worker_chunks: vec![10],
             worker_rates: vec![5.0],
+            worker_health: vec!["live".into()],
+            ..Default::default()
         };
         let all = DispatchTimings::aggregate([&target, &il]);
         assert_eq!(all.plane, "all");
@@ -347,6 +417,10 @@ mod tests {
         // chunk-weighted means: (100*30 + 500*10)/40, (1000*30 + 200*10)/40
         assert!((all.mean_queue_wait_us - 200.0).abs() < 1e-9);
         assert!((all.mean_busy_us - 800.0).abs() < 1e-9);
+        // recovery counters sum; health concatenates like the worker
+        // vectors
+        assert_eq!((all.recovered_chunks, all.worker_deaths), (3, 1));
+        assert_eq!(all.worker_health, vec!["live", "dead", "live"]);
         // worker vectors concatenate in plane order...
         assert_eq!(all.worker_chunks, vec![20, 10, 10]);
         assert_eq!(all.worker_rates, vec![2.0, 1.0, 5.0]);

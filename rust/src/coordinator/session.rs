@@ -73,6 +73,15 @@ pub struct RunResult {
     /// Speculative lookaheads cancelled by the drain-before-save
     /// checkpoint guard (those steps re-scored fresh).
     pub spec_flushes: u64,
+    /// Chunks whose worker failed and that were re-scored
+    /// deterministically (surviving lanes or inline on the
+    /// coordinator), summed over every plane this run drove. 0 on a
+    /// healthy run.
+    pub recovered_chunks: u64,
+    /// Worker deaths absorbed during this run, summed over planes.
+    pub worker_deaths: u64,
+    /// Lanes rebuilt by the respawn policy during this run.
+    pub respawns: u64,
 }
 
 impl RunResult {
@@ -108,6 +117,12 @@ impl RunResult {
     /// buys. 0.0 for the serialized walk.
     pub fn train_overlap_s(&self) -> f64 {
         self.plane_timings.iter().map(|t| t.train_overlap_s).fold(0.0, f64::max)
+    }
+
+    /// Did any plane absorb a fault during this run (worker death,
+    /// deterministic re-score, or respawn)?
+    pub fn degraded(&self) -> bool {
+        self.recovered_chunks + self.worker_deaths + self.respawns > 0
     }
 }
 

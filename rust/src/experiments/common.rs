@@ -207,7 +207,7 @@ impl Lab {
         if cfg.workers > 0 || cfg.plane(PLANE_TARGET).is_some() {
             let spec = cfg.plane(PLANE_TARGET);
             let arch = spec.and_then(|s| s.arch.as_deref()).unwrap_or(&cfg.arch);
-            let pc = plane_pool_config(cfg, spec);
+            let pc = plane_pool_config(cfg, PLANE_TARGET, spec);
             out.push(ComputePlane::new(
                 PLANE_TARGET,
                 arch,
@@ -216,7 +216,7 @@ impl Lab {
         }
         if let Some(spec) = cfg.plane(PLANE_IL) {
             let arch = spec.arch.as_deref().unwrap_or(&cfg.il_arch);
-            let pc = plane_pool_config(cfg, Some(spec));
+            let pc = plane_pool_config(cfg, PLANE_IL, Some(spec));
             let train_meta = self
                 .manifest
                 .find(arch, d, c, &format!("train_b{}", self.manifest.train_batch))
@@ -231,7 +231,7 @@ impl Lab {
         }
         if let Some(spec) = cfg.plane(PLANE_MCD) {
             let arch = spec.arch.as_deref().unwrap_or(&cfg.arch);
-            let pc = plane_pool_config(cfg, Some(spec));
+            let pc = plane_pool_config(cfg, PLANE_MCD, Some(spec));
             out.push(ComputePlane::new(
                 PLANE_MCD,
                 arch,

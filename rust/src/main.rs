@@ -55,6 +55,9 @@ fn print_help() {
          eval_every scale track_props no_holdout online_il il_lr_scale\n\
          il_epochs svp_frac workers queue_depth lane_depth rate_alpha prefetch events\n\
          checkpoint_every checkpoint_path resume speculate\n\n\
+         supervision: pool.dispatch_timeout_ms (0=off) pool.respawn (never|once|always)\n\
+         pool.fault (chaos plan, e.g. 'worker_panic@plane=target,worker=1,step=7';\n\
+         env RHO_FAULT overrides)\n\n\
          data plane ([data] table): source (shards://DIR) shard_rows window\n\
          e.g. rho ingest cifar10 --out stores/c10 && rho score-il data=shards://stores/c10 \\\n              && rho train --data shards://stores/c10 method=rho_loss\n\n\
          compute planes ([planes] table): plane.<name>.arch plane.<name>.workers\n\
@@ -134,6 +137,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
         println!(
             "{}",
             rho::coordinator::metrics::DispatchTimings::aggregate(&res.plane_timings).summary()
+        );
+    }
+    if res.degraded() {
+        println!(
+            "run degraded but completed: {} chunks re-scored deterministically, {} worker \
+             deaths, {} respawns (see `degraded` events)",
+            res.recovered_chunks, res.worker_deaths, res.respawns
         );
     }
     let out = ctx.out_dir("train")?;

@@ -1,0 +1,321 @@
+//! Seeded fault-injection harness for the scoring planes.
+//!
+//! Chaos testing a concurrent pool is only useful if the chaos is
+//! *reproducible*: a fault that fires "sometimes" cannot pin the
+//! recovery path bitwise against the fault-free curve. A [`FaultPlan`]
+//! is therefore a deterministic schedule, not a probability: each
+//! [`FaultSpec`] names an injection point by coordinates that are
+//! themselves deterministic — the plane label, the worker id, and the
+//! producer-assigned batch step (`CandBatch::step`), none of which
+//! depend on thread timing — and fires exactly once.
+//!
+//! ## Grammar
+//!
+//! Plans parse from the `fault` config key or the `RHO_FAULT`
+//! environment variable (env wins), as `;`-separated specs:
+//!
+//! ```text
+//! worker_panic@plane=il,worker=1,step=7; stall@plane=target,worker=0,step=12,ms=500; updater_panic@step=9
+//! ```
+//!
+//! * `worker_panic` — the matched worker panics while processing the
+//!   matched request (exercises supervision + deterministic re-score).
+//! * `stall` — the matched worker sleeps `ms` milliseconds before
+//!   processing (exercises the dispatch deadline); `ms` is required.
+//! * `updater_panic` — the per-plane IL updater thread panics inside
+//!   the matched `train_step` push (`step` counts Update messages
+//!   processed, starting at 0).
+//!
+//! Every matcher key (`plane`, `worker`, `step`) is optional; an
+//! omitted key is a wildcard. Unknown kinds and keys are parse errors
+//! naming the offender — a typo'd plan must never silently become an
+//! empty one.
+//!
+//! ## Cost when empty
+//!
+//! Injection points are plain runtime checks, not `#[cfg]` gates, so
+//! the chaos suite runs against the production binary. Each check is
+//! `plan.is_empty()` first — one branch on an almost-always-empty
+//! slice — so the fault-free hot path pays a single predictable branch
+//! per request.
+//!
+//! ## Fire-once semantics
+//!
+//! Each spec carries an atomic `fired` flag; the first matching probe
+//! claims it (`swap`), every later probe passes through. Clones of a
+//! plan share the flags (the spec list is behind an `Arc`), so a plan
+//! threaded into several pools still fires each spec once per process
+//! — matchers that name a plane keep multi-plane schedules precise.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+/// What a matched injection point does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic the scoring worker mid-request.
+    WorkerPanic,
+    /// Sleep the scoring worker for `ms` before processing.
+    Stall,
+    /// Panic the IL updater thread inside a train-step push.
+    UpdaterPanic,
+}
+
+impl FaultKind {
+    fn name(self) -> &'static str {
+        match self {
+            FaultKind::WorkerPanic => "worker_panic",
+            FaultKind::Stall => "stall",
+            FaultKind::UpdaterPanic => "updater_panic",
+        }
+    }
+}
+
+/// One scheduled fault: a kind plus deterministic match coordinates.
+/// Unset coordinates are wildcards. Fires at most once.
+#[derive(Debug)]
+pub struct FaultSpec {
+    kind: FaultKind,
+    plane: Option<String>,
+    worker: Option<usize>,
+    step: Option<u64>,
+    ms: u64,
+    fired: AtomicBool,
+}
+
+impl FaultSpec {
+    fn matches(&self, plane: &str, worker: usize, step: u64) -> bool {
+        self.plane.as_deref().is_none_or(|p| p == plane)
+            && self.worker.is_none_or(|w| w == worker)
+            && self.step.is_none_or(|s| s == step)
+    }
+
+    /// Claim the one-shot flag; true exactly once.
+    fn fire(&self) -> bool {
+        !self.fired.swap(true, Ordering::Relaxed)
+    }
+}
+
+/// A parsed, shareable fault schedule. `Clone` shares the fire-once
+/// flags; [`FaultPlan::default`] is the empty plan (no faults, one
+/// branch per probe).
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    specs: Arc<[FaultSpec]>,
+    source: String,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan { specs: Arc::from(Vec::new()), source: String::new() }
+    }
+}
+
+impl FaultPlan {
+    /// The empty plan: every probe is one false branch.
+    pub fn empty() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// The normalized source string the plan parsed from. Stable
+    /// identity for cache keys (`PlaneKey`): two plans with the same
+    /// source behave identically modulo fired state.
+    pub fn source(&self) -> &str {
+        &self.source
+    }
+
+    /// Parse a plan from the grammar above. Whitespace-only input is
+    /// the empty plan.
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let mut specs = Vec::new();
+        for raw in text.split(';') {
+            let spec = raw.trim();
+            if spec.is_empty() {
+                continue;
+            }
+            let (kind_s, args) = match spec.split_once('@') {
+                Some((k, a)) => (k.trim(), a.trim()),
+                None => (spec, ""),
+            };
+            let kind = match kind_s {
+                "worker_panic" => FaultKind::WorkerPanic,
+                "stall" => FaultKind::Stall,
+                "updater_panic" => FaultKind::UpdaterPanic,
+                other => bail!(
+                    "unknown fault kind `{other}` in `{spec}` \
+                     (known: worker_panic stall updater_panic)"
+                ),
+            };
+            let (mut plane, mut worker, mut step, mut ms) = (None, None, None, None);
+            for pair in args.split(',') {
+                let pair = pair.trim();
+                if pair.is_empty() {
+                    continue;
+                }
+                let (k, v) = pair
+                    .split_once('=')
+                    .map(|(k, v)| (k.trim(), v.trim()))
+                    .ok_or_else(|| anyhow::anyhow!("fault matcher `{pair}` is not key=value"))?;
+                match k {
+                    "plane" => plane = Some(v.to_string()),
+                    "worker" => {
+                        worker = Some(v.parse::<usize>().map_err(|_| {
+                            anyhow::anyhow!("fault matcher worker=`{v}` is not an integer")
+                        })?)
+                    }
+                    "step" => {
+                        step = Some(v.parse::<u64>().map_err(|_| {
+                            anyhow::anyhow!("fault matcher step=`{v}` is not an integer")
+                        })?)
+                    }
+                    "ms" => {
+                        ms = Some(v.parse::<u64>().map_err(|_| {
+                            anyhow::anyhow!("fault matcher ms=`{v}` is not an integer")
+                        })?)
+                    }
+                    other => bail!(
+                        "unknown fault matcher key `{other}` in `{spec}` \
+                         (known: plane worker step ms)"
+                    ),
+                }
+            }
+            if kind == FaultKind::Stall && ms.is_none() {
+                bail!("stall fault `{spec}` needs ms=<milliseconds>");
+            }
+            if kind != FaultKind::Stall && ms.is_some() {
+                bail!("fault `{spec}`: ms= only applies to stall");
+            }
+            if kind == FaultKind::UpdaterPanic && (plane.is_some() || worker.is_some()) {
+                bail!("updater_panic fault `{spec}` only matches on step=");
+            }
+            specs.push(FaultSpec { kind, plane, worker, step, ms: ms.unwrap_or(0), fired: AtomicBool::new(false) });
+        }
+        let source = text.split(';').map(str::trim).filter(|s| !s.is_empty()).collect::<Vec<_>>().join("; ");
+        Ok(FaultPlan { specs: Arc::from(specs), source })
+    }
+
+    /// Parse the effective plan: `RHO_FAULT` when set (even to the
+    /// empty string — an explicit override), else the config string.
+    pub fn from_config_env(cfg_fault: &str) -> Result<FaultPlan> {
+        match std::env::var("RHO_FAULT") {
+            Ok(env) => FaultPlan::parse(&env),
+            Err(_) => FaultPlan::parse(cfg_fault),
+        }
+    }
+
+    fn probe(&self, kind: FaultKind, plane: &str, worker: usize, step: u64) -> Option<&FaultSpec> {
+        // is_empty() is the documented one-branch fast path.
+        if self.is_empty() {
+            return None;
+        }
+        self.specs
+            .iter()
+            .find(|s| s.kind == kind && s.matches(plane, worker, step) && s.fire())
+    }
+
+    /// Should this worker panic on this request? Claims the spec.
+    pub fn worker_panic(&self, plane: &str, worker: usize, step: u64) -> bool {
+        self.probe(FaultKind::WorkerPanic, plane, worker, step).is_some()
+    }
+
+    /// Should this worker stall before this request? Claims the spec
+    /// and returns the sleep duration.
+    pub fn stall_ms(&self, plane: &str, worker: usize, step: u64) -> Option<u64> {
+        self.probe(FaultKind::Stall, plane, worker, step).map(|s| s.ms)
+    }
+
+    /// Should the IL updater panic inside this Update push? `update`
+    /// is the 0-based count of Update messages the updater processed.
+    pub fn updater_panic(&self, update: u64) -> bool {
+        if self.is_empty() {
+            return false;
+        }
+        self.specs
+            .iter()
+            .any(|s| s.kind == FaultKind::UpdaterPanic && s.step.is_none_or(|n| n == update) && s.fire())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_whitespace_parse_to_the_empty_plan() {
+        for text in ["", "   ", " ; ; "] {
+            let plan = FaultPlan::parse(text).unwrap();
+            assert!(plan.is_empty(), "`{text}` must parse empty");
+            assert_eq!(plan.source(), "");
+        }
+        assert!(FaultPlan::empty().is_empty());
+        assert!(FaultPlan::default().is_empty());
+    }
+
+    #[test]
+    fn full_grammar_round_trips_and_matches() {
+        let plan = FaultPlan::parse(
+            "worker_panic@plane=il,worker=1,step=7; \
+             stall@plane=target,worker=0,step=12,ms=500; updater_panic@step=9",
+        )
+        .unwrap();
+        assert!(!plan.is_empty());
+        // Non-matching coordinates pass through.
+        assert!(!plan.worker_panic("il", 0, 7));
+        assert!(!plan.worker_panic("target", 1, 7));
+        assert!(!plan.worker_panic("il", 1, 6));
+        assert!(plan.stall_ms("target", 0, 7).is_none());
+        assert!(!plan.updater_panic(8));
+        // Matching coordinates fire with the right payload.
+        assert!(plan.worker_panic("il", 1, 7));
+        assert_eq!(plan.stall_ms("target", 0, 12), Some(500));
+        assert!(plan.updater_panic(9));
+    }
+
+    #[test]
+    fn each_spec_fires_exactly_once_even_across_clones() {
+        let plan = FaultPlan::parse("worker_panic@worker=2").unwrap();
+        let shared = plan.clone();
+        assert!(plan.worker_panic("target", 2, 0));
+        assert!(!plan.worker_panic("target", 2, 1), "spec must not re-fire");
+        assert!(!shared.worker_panic("target", 2, 2), "clones share the fired flag");
+    }
+
+    #[test]
+    fn omitted_matcher_keys_are_wildcards() {
+        let plan = FaultPlan::parse("worker_panic").unwrap();
+        assert!(plan.worker_panic("anything", 17, 12345));
+        let plan = FaultPlan::parse("stall@ms=5").unwrap();
+        assert_eq!(plan.stall_ms("il", 3, 99), Some(5));
+    }
+
+    #[test]
+    fn parse_errors_name_the_offender() {
+        let cases = [
+            ("worker_painc@step=1", "unknown fault kind"),
+            ("worker_panic@stpe=1", "unknown fault matcher key"),
+            ("worker_panic@worker=x", "not an integer"),
+            ("stall@worker=0", "needs ms="),
+            ("worker_panic@ms=5", "ms= only applies to stall"),
+            ("updater_panic@plane=il", "only matches on step="),
+            ("worker_panic@step", "not key=value"),
+        ];
+        for (text, needle) in cases {
+            let err = FaultPlan::parse(text).expect_err(text);
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "`{text}` -> `{msg}` missing `{needle}`");
+        }
+    }
+
+    #[test]
+    fn source_is_normalized_for_cache_identity() {
+        let a = FaultPlan::parse("worker_panic@step=1 ;  stall@ms=2 ; ").unwrap();
+        let b = FaultPlan::parse("worker_panic@step=1;stall@ms=2").unwrap();
+        assert_eq!(a.source(), b.source());
+    }
+}

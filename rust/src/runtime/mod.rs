@@ -5,10 +5,14 @@
 //! Parallel scoring is organized as [`plane`] compute planes: named,
 //! independently-sized [`pool::ScoringPool`]s (each compiled from its
 //! own arch's artifacts), with [`updater::IlUpdater`] providing
-//! asynchronous in-plane model updates for online IL.
+//! asynchronous in-plane model updates for online IL. The planes are
+//! supervised: per-worker health tracking, dispatch deadlines, and
+//! deterministic chunk-level recovery live in [`pool`], driven under
+//! test by the seeded [`fault`] injection harness.
 
 pub mod artifact;
 pub mod executor;
+pub mod fault;
 pub mod handle;
 pub mod params;
 pub mod plane;
@@ -16,8 +20,12 @@ pub mod pool;
 pub mod updater;
 
 pub use artifact::{ArtifactMeta, Manifest};
+pub use fault::FaultPlan;
 pub use handle::{cpu_client, EvalResult, FwdStats, McdStats, ModelRuntime};
 pub use params::TrainState;
 pub use plane::{ComputePlane, PlaneKey, PlaneSet, PLANE_IL, PLANE_MCD, PLANE_TARGET};
-pub use pool::{CandBatch, PoolConfig, PoolReport, ScoringPool, WorkerStat};
-pub use updater::IlUpdater;
+pub use pool::{
+    CandBatch, DispatchError, PoolConfig, PoolReport, RecoveryCounters, RespawnPolicy, ScoringPool,
+    WorkerHealth, WorkerStat, WorkerState,
+};
+pub use updater::{IlUpdater, UpdaterError};

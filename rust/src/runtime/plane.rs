@@ -17,14 +17,21 @@
 //! Plane pools are expensive (each worker compiles its own
 //! executables), so they are cached across runs keyed by [`PlaneKey`]
 //! — a proper struct key with derived `Hash`/`Eq` over the arch, data
-//! dims, and pool sizing (`rate_alpha` enters through its IEEE bit
-//! pattern, the one total-equality reading of an `f64`).
+//! dims, pool sizing (`rate_alpha` enters through its IEEE bit
+//! pattern, the one total-equality reading of an `f64`), and the
+//! supervision config (plane label, dispatch deadline, respawn
+//! policy, fault-plan source). The plane *label* entering the key
+//! means two same-arch planes no longer alias one pool — a deliberate
+//! trade: supervision state (worker health, fault matchers keyed on
+//! the plane label, degraded events) must name one plane
+//! unambiguously, and cross-plane pool sharing only ever saved memory
+//! in the unusual same-arch-same-sizing configuration.
 
 use std::rc::Rc;
 
 use crate::config::{PlaneSpec, RunConfig};
 use crate::runtime::artifact::ArtifactMeta;
-use crate::runtime::pool::{PoolConfig, ScoringPool};
+use crate::runtime::pool::{PoolConfig, RespawnPolicy, ScoringPool};
 
 /// Plane that scores target-model signals (fwd stats / fused RHO).
 pub const PLANE_TARGET: &str = "target";
@@ -51,6 +58,15 @@ pub struct PlaneKey {
     /// an anonymous bit-cast tuple slot, so the cast can't silently
     /// collide with another `u64` field).
     rate_alpha_bits: u64,
+    /// Plane label the pool supervises under (see the module doc on
+    /// why same-arch planes no longer share).
+    pub plane: String,
+    pub dispatch_timeout_ms: u64,
+    pub respawn: RespawnPolicy,
+    /// Normalized fault-plan source string ([`FaultPlan::source`]):
+    /// two pools with different injection schedules must never share
+    /// fired-flag state through the cache.
+    pub fault: String,
 }
 
 impl PlaneKey {
@@ -62,6 +78,10 @@ impl PlaneKey {
             workers: pc.workers,
             lane_depth: pc.lane_depth,
             rate_alpha_bits: pc.rate_alpha.to_bits(),
+            plane: pc.plane.clone(),
+            dispatch_timeout_ms: pc.dispatch_timeout_ms,
+            respawn: pc.respawn,
+            fault: pc.fault.source().to_string(),
         }
     }
 
@@ -160,9 +180,15 @@ impl<'a> PlaneSet<'a> {
 /// the plane's `[planes]`-table spec overrides field by field — so
 /// `plane.il.workers=2` sizes the IL plane independently of the
 /// target plane. A spec `workers` of 0 means "auto" (one per core),
-/// mirroring the run-level key.
-pub fn plane_pool_config(cfg: &RunConfig, spec: Option<&PlaneSpec>) -> PoolConfig {
+/// mirroring the run-level key. `name` becomes the pool's plane label:
+/// the coordinate supervision reports under ([`WorkerHealth`]
+/// registry, `DispatchError::plane`, degraded events) and the
+/// `plane=` matcher of fault specs.
+///
+/// [`WorkerHealth`]: crate::runtime::pool::WorkerHealth
+pub fn plane_pool_config(cfg: &RunConfig, name: &str, spec: Option<&PlaneSpec>) -> PoolConfig {
     let mut pc = PoolConfig::from_run(cfg);
+    pc.plane = name.to_string();
     if let Some(s) = spec {
         if let Some(w) = s.workers {
             pc.workers = if w == 0 { PoolConfig::default().workers } else { w };
@@ -186,7 +212,7 @@ mod tests {
     use std::hash::{Hash, Hasher};
 
     fn pc(workers: usize, lane_depth: usize, rate_alpha: f64) -> PoolConfig {
-        PoolConfig { workers, lane_depth, rate_alpha }
+        PoolConfig { workers, lane_depth, rate_alpha, ..Default::default() }
     }
 
     fn hash_of(k: &PlaneKey) -> u64 {
@@ -206,14 +232,40 @@ mod tests {
         assert_ne!(base, PlaneKey::new("mlp_base", 64, 10, &pc(4, 2, 0.3)));
         assert_ne!(base, PlaneKey::new("mlp_base", 64, 10, &pc(4, 8, 0.5)));
         assert!((base.rate_alpha() - 0.3).abs() < 1e-12);
+        // Supervision fields are part of the identity: a different
+        // plane label, deadline, respawn policy, or fault schedule
+        // must never share a cached pool (shared worker-health /
+        // fired-flag state would cross planes).
+        let mut labeled = pc(4, 8, 0.3);
+        labeled.plane = "il".into();
+        assert_ne!(base, PlaneKey::new("mlp_base", 64, 10, &labeled));
+        let mut deadlined = pc(4, 8, 0.3);
+        deadlined.dispatch_timeout_ms = 250;
+        assert_ne!(base, PlaneKey::new("mlp_base", 64, 10, &deadlined));
+        let mut respawning = pc(4, 8, 0.3);
+        respawning.respawn = RespawnPolicy::Always;
+        assert_ne!(base, PlaneKey::new("mlp_base", 64, 10, &respawning));
+        let mut faulted = pc(4, 8, 0.3);
+        faulted.fault = crate::runtime::fault::FaultPlan::parse("worker_panic@step=1").unwrap();
+        assert_ne!(base, PlaneKey::new("mlp_base", 64, 10, &faulted));
+        // …and the fault identity is the *normalized source*, so
+        // spacing differences don't fracture the cache.
+        let mut faulted2 = pc(4, 8, 0.3);
+        faulted2.fault =
+            crate::runtime::fault::FaultPlan::parse(" worker_panic@step=1 ; ").unwrap();
+        assert_eq!(
+            PlaneKey::new("mlp_base", 64, 10, &faulted),
+            PlaneKey::new("mlp_base", 64, 10, &faulted2)
+        );
     }
 
     #[test]
     fn plane_pool_config_overrides_field_by_field() {
         let cfg = RunConfig { workers: 4, lane_depth: 8, rate_alpha: 0.3, ..Default::default() };
-        // no spec: run-level sizing
-        let base = plane_pool_config(&cfg, None);
+        // no spec: run-level sizing; the plane label always lands
+        let base = plane_pool_config(&cfg, PLANE_TARGET, None);
         assert_eq!((base.workers, base.lane_depth), (4, 8));
+        assert_eq!(base.plane, PLANE_TARGET);
         // spec overrides only what it names
         let spec = PlaneSpec {
             name: "il".into(),
@@ -222,15 +274,30 @@ mod tests {
             lane_depth: None,
             rate_alpha: Some(0.7),
         };
-        let il = plane_pool_config(&cfg, Some(&spec));
+        let il = plane_pool_config(&cfg, PLANE_IL, Some(&spec));
         assert_eq!((il.workers, il.lane_depth), (2, 8));
         assert!((il.rate_alpha - 0.7).abs() < 1e-12);
+        assert_eq!(il.plane, PLANE_IL);
         // workers=0 in a spec means auto-size, like the run-level key
         let auto = PlaneSpec { name: "il".into(), workers: Some(0), ..Default::default() };
-        assert_eq!(plane_pool_config(&cfg, Some(&auto)).workers, PoolConfig::default().workers);
+        assert_eq!(
+            plane_pool_config(&cfg, PLANE_IL, Some(&auto)).workers,
+            PoolConfig::default().workers
+        );
         // out-of-range alpha in a spec is ignored, not propagated
         let bad = PlaneSpec { name: "il".into(), rate_alpha: Some(2.0), ..Default::default() };
-        assert!((plane_pool_config(&cfg, Some(&bad)).rate_alpha - 0.3).abs() < 1e-12);
+        assert!((plane_pool_config(&cfg, PLANE_IL, Some(&bad)).rate_alpha - 0.3).abs() < 1e-12);
+        // run-level supervision keys flow through to every plane
+        let sup = RunConfig {
+            dispatch_timeout_ms: 250,
+            respawn: "always".into(),
+            fault: "stall@plane=il,ms=5".into(),
+            ..Default::default()
+        };
+        let pc = plane_pool_config(&sup, PLANE_IL, None);
+        assert_eq!(pc.dispatch_timeout_ms, 250);
+        assert_eq!(pc.respawn, RespawnPolicy::Always);
+        assert_eq!(pc.fault.source(), "stall@plane=il,ms=5");
     }
 
     #[test]

@@ -76,6 +76,45 @@
 //! changes only *when* a window executes, never which rows it covers,
 //! so overlapped scores are bitwise-identical to serialized ones.
 //!
+//! ## Supervision, deadlines, deterministic recovery
+//!
+//! Worker threads are supervised, not trusted: each request is
+//! processed under `catch_unwind`, and every worker owns a shared
+//! [`WorkerHealth`] slot (Live/Stalled/Dead + failure cause) the pool
+//! reads when planning and reporting. A panicking worker answers its
+//! current chunk with a named error, flips its health to Dead, and
+//! enters a *zombie loop* that keeps answering (with errors) anything
+//! already in its lane — so a dead worker can never deadlock a drain,
+//! even with no deadline configured. For genuinely *wedged* workers
+//! (a hung XLA call), `pool.dispatch_timeout_ms` arms every blocking
+//! receive inside a wait: on expiry the outstanding workers are marked
+//! Stalled, the dispatch is abandoned (late responses are swallowed,
+//! never mis-parked), and the caller gets a typed [`DispatchError`]
+//! naming the plane, worker, and sequence id.
+//!
+//! Recovery is *deterministic*, not best-effort. Chunk boundaries are
+//! uniform and rate-independent (`start = chunk·nb`,
+//! `take = min(nb, n − start)` — the rate-aware-lanes invariant
+//! above), and the per-chunk compute is one shared function
+//! ([`exec_chunk`]) run against the same compiled artifacts whether it
+//! executes on a worker thread or on the coordinator: when a worker
+//! dies mid-dispatch, its chunks are re-scored inline from the
+//! dispatch's retained inputs with bitwise-identical results, counted
+//! in [`PoolReport::recovered_chunks`]. Future dispatches exclude
+//! dead (and stalled) lanes from the plan — rate skew already moves
+//! chunks between lanes without resizing them, so exclusion cannot
+//! drift scores either — and `pool.respawn = never|once|always`
+//! optionally rebuilds a dead worker from the pool's retained artifact
+//! metadata. Because supervision gives a pool per-plane identity
+//! (health, fault matching, and `degraded` diagnostics are named by
+//! plane), the plane *label* is part of [`super::plane::PlaneKey`]:
+//! same-arch planes no longer alias one pool.
+//!
+//! Fault injection (the chaos-test harness) threads a parsed
+//! [`FaultPlan`] into the worker loops: injection points are plain
+//! runtime probes costing one branch when the plan is empty — see
+//! [`crate::runtime::fault`].
+//!
 //! ## Pools as compute planes
 //!
 //! A pool is compiled for exactly one `(arch, d, c)` artifact combo —
@@ -92,11 +131,17 @@
 //! PJRT client + executables, created inside the worker thread; plain
 //! data crosses the thread boundary, never XLA handles.
 
+use std::any::Any;
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
+};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::thread;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -108,8 +153,20 @@ use crate::data::loader::SamplerCursor;
 use crate::data::sharding::{plan_dispatch, ChunkPlan, RateEma};
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::executor::{lit_f32, lit_i32, Executor};
+use crate::runtime::fault::FaultPlan;
 use crate::runtime::handle::{FwdStats, McdStats};
 use crate::runtime::params::ThetaSnapshot;
+
+/// Poison-recovering lock. Supervision metadata (worker health, the
+/// dispatch ledger, pool stats) consists of self-contained counter and
+/// interval updates: no guarded invariant spans a panic, so a poisoned
+/// mutex carries no torn state worth propagating. Without this, one
+/// panicking thread turns every later `lock().unwrap()` into a
+/// process-wide panic storm — the exact opposite of supervised
+/// degradation.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// One producer-prepared candidate batch: the sampled dataset indices
 /// plus their gathered rows, shared by `Arc` between the engine, the
@@ -158,6 +215,48 @@ impl CandBatch {
     }
 }
 
+/// What the pool does with a lane whose worker died.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum RespawnPolicy {
+    /// Dead lanes stay dead; their chunks re-score on surviving lanes
+    /// or inline on the coordinator.
+    #[default]
+    Never,
+    /// Each lane is rebuilt at most once over the pool's lifetime.
+    Once,
+    /// Every death rebuilds the lane.
+    Always,
+}
+
+impl RespawnPolicy {
+    /// Parse the `pool.respawn` config value.
+    pub fn parse(s: &str) -> Result<RespawnPolicy> {
+        match s.trim() {
+            "" | "never" => Ok(RespawnPolicy::Never),
+            "once" => Ok(RespawnPolicy::Once),
+            "always" => Ok(RespawnPolicy::Always),
+            other => bail!("unknown respawn policy `{other}` (known: never once always)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RespawnPolicy::Never => "never",
+            RespawnPolicy::Once => "once",
+            RespawnPolicy::Always => "always",
+        }
+    }
+
+    /// May a worker with `respawns` prior rebuilds be rebuilt again?
+    fn allows(self, respawns: u64) -> bool {
+        match self {
+            RespawnPolicy::Never => false,
+            RespawnPolicy::Once => respawns == 0,
+            RespawnPolicy::Always => true,
+        }
+    }
+}
+
 /// Pool construction parameters.
 #[derive(Clone, Debug)]
 pub struct PoolConfig {
@@ -168,6 +267,20 @@ pub struct PoolConfig {
     /// EMA smoothing for observed per-worker service rates in (0, 1];
     /// higher chases recent observations harder.
     pub rate_alpha: f64,
+    /// Plane label this pool serves — names the pool in supervision
+    /// diagnostics ([`DispatchError`], `degraded` events) and is the
+    /// `plane=` coordinate fault-plan matchers key on.
+    pub plane: String,
+    /// Deadline, in milliseconds, for each blocking receive inside a
+    /// dispatch wait; `0` (the default) waits forever. A dead worker
+    /// never needs the deadline (its zombie loop answers every chunk);
+    /// this is the bound on genuinely wedged workers.
+    pub dispatch_timeout_ms: u64,
+    /// What to do with a lane whose worker died.
+    pub respawn: RespawnPolicy,
+    /// Seeded fault-injection schedule (empty in production: one
+    /// branch per request).
+    pub fault: FaultPlan,
 }
 
 impl Default for PoolConfig {
@@ -177,7 +290,15 @@ impl Default for PoolConfig {
     /// `rate_alpha` config keys).
     fn default() -> Self {
         let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
-        PoolConfig { workers: workers.max(1), lane_depth: 8, rate_alpha: RateEma::DEFAULT_ALPHA }
+        PoolConfig {
+            workers: workers.max(1),
+            lane_depth: 8,
+            rate_alpha: RateEma::DEFAULT_ALPHA,
+            plane: String::new(),
+            dispatch_timeout_ms: 0,
+            respawn: RespawnPolicy::Never,
+            fault: FaultPlan::empty(),
+        }
     }
 }
 
@@ -186,7 +307,10 @@ impl PoolConfig {
     /// per core); `lane_depth == 0` derives per-lane capacity from the
     /// legacy `queue_depth` total so older configs keep their overall
     /// backpressure bound; `rate_alpha` outside (0, 1] falls back to
-    /// the default.
+    /// the default. Supervision keys plumb straight through; a
+    /// malformed `respawn`/`fault` value falls back to the default
+    /// here because [`RunConfig::validate`] already rejects it with a
+    /// named error on every real entry path.
     pub fn from_run(cfg: &RunConfig) -> PoolConfig {
         let auto = PoolConfig::default();
         let workers = if cfg.workers == 0 { auto.workers } else { cfg.workers };
@@ -200,9 +324,85 @@ impl PoolConfig {
         } else {
             auto.rate_alpha
         };
-        PoolConfig { workers, lane_depth, rate_alpha }
+        PoolConfig {
+            workers,
+            lane_depth,
+            rate_alpha,
+            plane: String::new(),
+            dispatch_timeout_ms: cfg.dispatch_timeout_ms,
+            respawn: RespawnPolicy::parse(&cfg.respawn).unwrap_or_default(),
+            fault: FaultPlan::from_config_env(&cfg.fault).unwrap_or_default(),
+        }
     }
 }
+
+/// Liveness of one pool worker, as seen by its supervisor.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WorkerState {
+    #[default]
+    Live,
+    /// Missed a dispatch deadline (or is inside an injected stall);
+    /// excluded from new plans until a response from it arrives.
+    Stalled,
+    /// Setup failed or a panic escaped a request; its lane is a zombie
+    /// (answers everything with errors) until respawned.
+    Dead,
+}
+
+impl WorkerState {
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkerState::Live => "live",
+            WorkerState::Stalled => "stalled",
+            WorkerState::Dead => "dead",
+        }
+    }
+}
+
+/// One worker's supervision record. Shared (behind a poison-recovering
+/// mutex) between the worker thread, which self-reports panics and
+/// injected stalls, and the pool, which marks deadline expiries and
+/// plans around non-Live lanes.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WorkerHealth {
+    pub state: WorkerState,
+    /// Panic message / setup error for Dead, stall diagnosis for
+    /// Stalled.
+    pub cause: Option<String>,
+    /// Times this lane was rebuilt by the respawn policy.
+    pub respawns: u64,
+}
+
+type HealthSlot = Arc<Mutex<WorkerHealth>>;
+
+/// Typed failure of one dispatch wait: names the plane, the worker
+/// (when one is attributable), and the dispatch sequence id, so a
+/// wedged lane surfaces as a diagnosable error instead of an eternal
+/// block. Crosses the provider/engine layers inside `anyhow` chains —
+/// `err.downcast_ref::<DispatchError>()` recovers it.
+#[derive(Clone, Debug)]
+pub struct DispatchError {
+    /// Plane label of the pool (empty for unlabeled pools).
+    pub plane: String,
+    pub worker: Option<usize>,
+    /// Dispatch sequence id of the failed wait.
+    pub seq: u64,
+    pub detail: String,
+}
+
+impl fmt::Display for DispatchError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let plane = if self.plane.is_empty() { "?" } else { &self.plane };
+        match self.worker {
+            Some(w) => {
+                write!(f, "dispatch seq {} on plane `{plane}` worker {w}: {}", self.seq, self.detail)
+            }
+            None => write!(f, "dispatch seq {} on plane `{plane}`: {}", self.seq, self.detail),
+        }
+    }
+}
+
+impl std::error::Error for DispatchError {}
 
 /// How one dispatch should be scored.
 #[derive(Clone, Copy)]
@@ -234,6 +434,16 @@ impl Request {
     fn window(&self) -> &Window {
         match self {
             Request::Fwd { w, .. } | Request::Rho { w, .. } | Request::Mcd { w, .. } => w,
+        }
+    }
+
+    /// The shared candidate batch — fault probes match on its
+    /// producer-assigned `step`, a deterministic coordinate.
+    fn batch(&self) -> &Arc<CandBatch> {
+        match self {
+            Request::Fwd { batch, .. } | Request::Rho { batch, .. } | Request::Mcd { batch, .. } => {
+                batch
+            }
         }
     }
 }
@@ -292,7 +502,21 @@ pub struct PoolReport {
     /// the scoring-over-train overlap speculative selection buys.
     /// Same process-wide caveats as `overlap_s`.
     pub train_overlap_s: f64,
+    /// Chunks whose worker failed and that were re-scored
+    /// deterministically (inline on the coordinator) — each one is a
+    /// chunk a pre-supervision pool would have failed the dispatch on.
+    pub recovered_chunks: u64,
+    /// Workers observed transitioning to [`WorkerState::Dead`] (a
+    /// respawned worker dying again counts again).
+    pub worker_deaths: u64,
+    /// Lanes rebuilt by the respawn policy.
+    pub respawns: u64,
+    /// Dispatch waits abandoned by `dispatch_timeout_ms` expiry.
+    pub deadline_expiries: u64,
     pub per_worker: Vec<WorkerStat>,
+    /// Point-in-time per-worker supervision snapshot (not a counter —
+    /// [`PoolReport::since`] carries it from the later report).
+    pub worker_health: Vec<WorkerHealth>,
 }
 
 impl PoolReport {
@@ -309,6 +533,11 @@ impl PoolReport {
             inflight_s: (self.inflight_s - earlier.inflight_s).max(0.0),
             overlap_s: (self.overlap_s - earlier.overlap_s).max(0.0),
             train_overlap_s: (self.train_overlap_s - earlier.train_overlap_s).max(0.0),
+            recovered_chunks: self.recovered_chunks.saturating_sub(earlier.recovered_chunks),
+            worker_deaths: self.worker_deaths.saturating_sub(earlier.worker_deaths),
+            respawns: self.respawns.saturating_sub(earlier.respawns),
+            deadline_expiries: self.deadline_expiries.saturating_sub(earlier.deadline_expiries),
+            worker_health: self.worker_health.clone(),
             per_worker: self
                 .per_worker
                 .iter()
@@ -409,26 +638,26 @@ mod ledger {
 
     /// A gradient step opened (engine-side [`super::TrainSpan`]).
     pub fn train_begin() {
-        let mut st = state().lock().unwrap();
+        let mut st = super::relock(state());
         let now = st.epoch.elapsed().as_secs_f64();
         sweep(&mut st, now);
         st.trains_open += 1;
     }
 
     pub fn train_end() {
-        let mut st = state().lock().unwrap();
+        let mut st = super::relock(state());
         let now = st.epoch.elapsed().as_secs_f64();
         sweep(&mut st, now);
         st.trains_open = st.trains_open.saturating_sub(1);
     }
 
     pub fn register(id: usize) {
-        let mut st = state().lock().unwrap();
+        let mut st = super::relock(state());
         st.pools.insert(id, Entry::default());
     }
 
     pub fn unregister(id: usize) {
-        let mut st = state().lock().unwrap();
+        let mut st = super::relock(state());
         let now = st.epoch.elapsed().as_secs_f64();
         sweep(&mut st, now);
         if let Some(e) = st.pools.remove(&id) {
@@ -437,7 +666,7 @@ mod ledger {
     }
 
     pub fn begin(id: usize) {
-        let mut st = state().lock().unwrap();
+        let mut st = super::relock(state());
         let now = st.epoch.elapsed().as_secs_f64();
         sweep(&mut st, now);
         st.pools.entry(id).or_default().open += 1;
@@ -445,7 +674,7 @@ mod ledger {
     }
 
     pub fn end(id: usize) {
-        let mut st = state().lock().unwrap();
+        let mut st = super::relock(state());
         let now = st.epoch.elapsed().as_secs_f64();
         sweep(&mut st, now);
         if let Some(e) = st.pools.get_mut(&id) {
@@ -457,7 +686,7 @@ mod ledger {
     }
 
     pub fn snapshot(id: usize) -> Overlap {
-        let mut st = state().lock().unwrap();
+        let mut st = super::relock(state());
         let now = st.epoch.elapsed().as_secs_f64();
         sweep(&mut st, now);
         st.pools.get(&id).map(|e| e.acc).unwrap_or_default()
@@ -493,8 +722,24 @@ struct StatsInner {
     chunks: u64,
     queue_wait_s: f64,
     busy_s: f64,
+    recovered_chunks: u64,
+    worker_deaths: u64,
+    respawns: u64,
+    deadline_expiries: u64,
     worker_chunks: Vec<u64>,
     worker_busy_s: Vec<f64>,
+}
+
+/// Recovery-counter snapshot cheap enough to poll every step (one
+/// uncontended stats lock — no ledger sweep, no rate lock). The
+/// engine diffs consecutive snapshots to emit `degraded` events the
+/// step a fault is absorbed, not at the next eval boundary.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryCounters {
+    pub recovered_chunks: u64,
+    pub worker_deaths: u64,
+    pub respawns: u64,
+    pub deadline_expiries: u64,
 }
 
 /// What a [`PendingScores`] ticket will assemble when waited on.
@@ -565,7 +810,8 @@ impl<'p> PendingScores<'p> {
         out.gnorm.resize(n, 0.0);
         out.entropy.resize(n, 0.0);
         self.draining = true;
-        let res = self.pool.drain(self.seq, self.chunks, |base, take, payload| match payload {
+        let res = self.pool.drain(self.seq, self.chunks, true, |base, take, payload| match payload
+        {
             Payload::Fwd { loss, correct, gnorm, entropy } => {
                 out.loss[base..base + take].copy_from_slice(Self::column(&loss, take, "loss")?);
                 out.correct[base..base + take]
@@ -587,7 +833,8 @@ impl<'p> PendingScores<'p> {
         self.expect(PendingKind::Rho)?;
         let mut scores = vec![0.0f32; self.n];
         self.draining = true;
-        let res = self.pool.drain(self.seq, self.chunks, |base, take, payload| match payload {
+        let res = self.pool.drain(self.seq, self.chunks, true, |base, take, payload| match payload
+        {
             Payload::Rho { scores: s } => {
                 scores[base..base + take].copy_from_slice(Self::column(&s, take, "rho")?);
                 Ok(())
@@ -609,7 +856,8 @@ impl<'p> PendingScores<'p> {
         out.cond_entropy.resize(n, 0.0);
         out.bald.resize(n, 0.0);
         self.draining = true;
-        let res = self.pool.drain(self.seq, self.chunks, |base, take, payload| match payload {
+        let res = self.pool.drain(self.seq, self.chunks, true, |base, take, payload| match payload
+        {
             Payload::Mcd { loss, entropy, cond_entropy, bald } => {
                 out.loss[base..base + take].copy_from_slice(Self::column(&loss, take, "loss")?);
                 out.entropy[base..base + take]
@@ -649,23 +897,130 @@ impl Drop for PendingScores<'_> {
         // clean): drain it, discarding payloads but keeping the
         // timing/rate accounting, so its responses can never be
         // misread by the next wait on this pool. Errors are
-        // deliberately swallowed — there is nobody to report them to.
-        let _ = self.pool.drain(self.seq, self.chunks, |_, _, _| Ok(()));
+        // deliberately swallowed — there is nobody to report them to —
+        // and `recover = false` skips inline re-scores whose payloads
+        // would be discarded anyway (deaths still get swept).
+        let _ = self.pool.drain(self.seq, self.chunks, false, |_, _, _| Ok(()));
+    }
+}
+
+/// Per-dispatch inputs retained until the dispatch drains, so a
+/// failed worker's chunks can be re-scored deterministically: the
+/// same theta snapshot, the same shared batch, the same il/seed — and
+/// chunk windows are pure functions of `(n, select_batch)`, so the
+/// re-score covers exactly the rows the dead worker would have.
+struct DispatchMeta {
+    theta: ThetaSnapshot,
+    batch: Arc<CandBatch>,
+    il: Option<Arc<Vec<f32>>>,
+    seed: i32,
+    kind: PendingKind,
+    /// Chunk → worker assignment of the plan (deadline diagnosis:
+    /// which worker still owes which outstanding chunk).
+    windows: Vec<ChunkPlan>,
+    /// No live lane existed at submit: nothing was enqueued, every
+    /// window goes straight to the inline scorer at drain.
+    inline_all: bool,
+}
+
+/// Worker-side mutable state shared by every chunk execution: pad
+/// buffers for the ragged tail and the version-keyed theta-literal
+/// cache. One per worker thread, and one inside [`InlineScorer`] —
+/// the inline recovery path reuses the identical machinery.
+#[derive(Default)]
+struct Scratch {
+    pad_x: Vec<f32>,
+    pad_y: Vec<i32>,
+    pad_il: Vec<f32>,
+    theta_cache: Option<(u64, Literal)>,
+}
+
+/// Coordinator-thread twin of a worker's executable set, built
+/// lazily from the pool's retained artifact metadata the first time
+/// recovery needs it. Scoring here runs [`exec_chunk`] — the same
+/// function the workers run — against executables loaded from the
+/// same artifacts, which is what pins recovered chunks bitwise.
+struct InlineScorer {
+    fwd: Executor,
+    select: Executor,
+    mcd: Option<Executor>,
+    scratch: Scratch,
+}
+
+impl InlineScorer {
+    fn new(
+        fwd_meta: &ArtifactMeta,
+        select_meta: &ArtifactMeta,
+        mcd_meta: Option<&ArtifactMeta>,
+    ) -> Result<InlineScorer> {
+        let client = xla::PjRtClient::cpu()?;
+        let fwd = Executor::load(&client, fwd_meta)?;
+        let select = Executor::load(&client, select_meta)?;
+        let mcd = match mcd_meta {
+            Some(meta) => Some(Executor::load(&client, meta)?),
+            None => None,
+        };
+        // Same lifetime contract as the workers: the executables keep
+        // the client alive through the C++ side; leak the Rust handle.
+        std::mem::forget(client);
+        Ok(InlineScorer { fwd, select, mcd, scratch: Scratch::default() })
+    }
+
+    /// Re-score one window of a retained dispatch.
+    fn score(&mut self, meta: &DispatchMeta, nb: usize, d: usize, chunk: usize, take: usize) -> Result<Payload> {
+        let w = Window { seq: 0, chunk, start: chunk * nb, take, enqueued: Instant::now() };
+        let req = match meta.kind {
+            PendingKind::Fwd => {
+                Request::Fwd { w, theta: meta.theta.clone(), batch: Arc::clone(&meta.batch) }
+            }
+            PendingKind::Rho => Request::Rho {
+                w,
+                theta: meta.theta.clone(),
+                batch: Arc::clone(&meta.batch),
+                il: Arc::clone(
+                    meta.il.as_ref().ok_or_else(|| anyhow!("rho dispatch retained no il"))?,
+                ),
+            },
+            PendingKind::Mcd => Request::Mcd {
+                w,
+                theta: meta.theta.clone(),
+                batch: Arc::clone(&meta.batch),
+                seed: meta.seed,
+            },
+        };
+        exec_chunk(&self.fwd, &self.select, self.mcd.as_ref(), nb, d, &mut self.scratch, &req)
     }
 }
 
 /// Rate-aware, zero-copy scoring pool over one (arch, d, c) combo's
 /// fwd/select (and optionally mcdropout) artifacts.
 pub struct ScoringPool {
-    lanes: Vec<SyncSender<Request>>,
+    /// Per-worker request lanes. `RefCell`: respawn replaces a dead
+    /// lane's sender in place (single-consumer pool, never contended).
+    lanes: RefCell<Vec<SyncSender<Request>>>,
     resp_rx: Receiver<Response>,
-    handles: Vec<JoinHandle<()>>,
+    /// Retained so respawned workers can clone a response sender.
+    resp_tx: Sender<Response>,
+    handles: RefCell<Vec<JoinHandle<()>>>,
     pub select_batch: usize,
     d: usize,
     param_count: usize,
     pub workers: usize,
     has_mcd: bool,
     processed: Vec<Arc<AtomicUsize>>,
+    /// Per-worker supervision slots, shared with the worker threads.
+    health: Vec<HealthSlot>,
+    /// Deaths already counted/respawned (so one death is one event).
+    seen_dead: RefCell<Vec<bool>>,
+    /// Artifact metadata retained for respawn + the inline scorer.
+    fwd_meta: ArtifactMeta,
+    select_meta: ArtifactMeta,
+    mcd_meta: Option<ArtifactMeta>,
+    lane_depth: usize,
+    plane: String,
+    dispatch_timeout_ms: u64,
+    respawn: RespawnPolicy,
+    fault: FaultPlan,
     rates: Mutex<RateEma>,
     stats: Mutex<StatsInner>,
     /// Ledger key for in-flight/overlap accounting.
@@ -676,6 +1031,17 @@ pub struct ScoringPool {
     /// Responses received while waiting on a *different* ticket,
     /// keyed by their dispatch sequence id.
     buffered: RefCell<HashMap<u64, Vec<Response>>>,
+    /// Retained dispatch inputs, keyed by sequence id; removed when
+    /// the dispatch drains (or its deadline expires).
+    pending_meta: RefCell<HashMap<u64, DispatchMeta>>,
+    /// Dispatches abandoned by a deadline expiry: late responses for
+    /// these are swallowed (never parked) so `buffered` cannot leak.
+    zombie_seqs: RefCell<HashMap<u64, usize>>,
+    /// Any worker currently Stalled? (Cheap guard so the per-response
+    /// un-stall check costs nothing on the healthy path.)
+    any_stalled: Cell<bool>,
+    /// Lazily-built coordinator-thread scorer for recovery.
+    inline: RefCell<Option<InlineScorer>>,
 }
 
 impl ScoringPool {
@@ -714,35 +1080,55 @@ impl ScoringPool {
             }
         }
         let workers = cfg.workers.max(1);
+        let lane_depth = cfg.lane_depth.max(1);
         let (resp_tx, resp_rx) = channel::<Response>();
         let mut lanes = Vec::with_capacity(workers);
         let mut handles = Vec::new();
         let mut processed = Vec::new();
+        let mut health = Vec::with_capacity(workers);
         for wid in 0..workers {
-            let (lane_tx, lane_rx) = sync_channel::<Request>(cfg.lane_depth.max(1));
+            let (lane_tx, lane_rx) = sync_channel::<Request>(lane_depth);
             lanes.push(lane_tx);
-            let tx = resp_tx.clone();
-            let fwd_meta = fwd_meta.clone();
-            let select_meta = select_meta.clone();
-            let mcd_meta = mcd_meta.cloned();
             let counter = Arc::new(AtomicUsize::new(0));
             processed.push(Arc::clone(&counter));
-            handles.push(std::thread::spawn(move || {
-                worker_main(wid, lane_rx, tx, fwd_meta, select_meta, mcd_meta, counter);
-            }));
+            let slot: HealthSlot = Arc::new(Mutex::new(WorkerHealth::default()));
+            health.push(Arc::clone(&slot));
+            handles.push(spawn_worker(
+                wid,
+                lane_rx,
+                resp_tx.clone(),
+                fwd_meta,
+                select_meta,
+                mcd_meta,
+                counter,
+                slot,
+                &cfg.plane,
+                &cfg.fault,
+            ));
         }
         let id = NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed);
         ledger::register(id);
         Ok(ScoringPool {
-            lanes,
+            lanes: RefCell::new(lanes),
             resp_rx,
-            handles,
+            resp_tx,
+            handles: RefCell::new(handles),
             select_batch,
             d,
             param_count,
             workers,
             has_mcd: mcd_meta.is_some(),
             processed,
+            health,
+            seen_dead: RefCell::new(vec![false; workers]),
+            fwd_meta: fwd_meta.clone(),
+            select_meta: select_meta.clone(),
+            mcd_meta: mcd_meta.cloned(),
+            lane_depth,
+            plane: cfg.plane.clone(),
+            dispatch_timeout_ms: cfg.dispatch_timeout_ms,
+            respawn: cfg.respawn,
+            fault: cfg.fault.clone(),
             rates: Mutex::new(RateEma::new(workers, cfg.rate_alpha)),
             stats: Mutex::new(StatsInner {
                 worker_chunks: vec![0; workers],
@@ -752,6 +1138,10 @@ impl ScoringPool {
             id,
             seq: Cell::new(0),
             buffered: RefCell::new(HashMap::new()),
+            pending_meta: RefCell::new(HashMap::new()),
+            zombie_seqs: RefCell::new(HashMap::new()),
+            any_stalled: Cell::new(false),
+            inline: RefCell::new(None),
         })
     }
 
@@ -796,6 +1186,27 @@ impl ScoringPool {
         ledger::end(self.id);
     }
 
+    /// Plane label this pool was built for (empty if unlabeled).
+    pub fn plane(&self) -> &str {
+        &self.plane
+    }
+
+    /// Point-in-time per-worker supervision snapshot.
+    pub fn worker_health(&self) -> Vec<WorkerHealth> {
+        self.health.iter().map(|h| relock(h).clone()).collect()
+    }
+
+    /// Recovery counters, cheap enough to diff every step.
+    pub fn recovery_counters(&self) -> RecoveryCounters {
+        let st = relock(&self.stats);
+        RecoveryCounters {
+            recovered_chunks: st.recovered_chunks,
+            worker_deaths: st.worker_deaths,
+            respawns: st.respawns,
+            deadline_expiries: st.deadline_expiries,
+        }
+    }
+
     /// Cumulative dispatch/queue-wait observability snapshot.
     pub fn report(&self) -> PoolReport {
         let st = self.stats.lock().unwrap();
@@ -809,6 +1220,10 @@ impl ScoringPool {
             inflight_s: ov.inflight_s,
             overlap_s: ov.overlap_s,
             train_overlap_s: ov.train_overlap_s,
+            recovered_chunks: st.recovered_chunks,
+            worker_deaths: st.worker_deaths,
+            respawns: st.respawns,
+            deadline_expiries: st.deadline_expiries,
             per_worker: (0..self.workers)
                 .map(|w| WorkerStat {
                     chunks: st.worker_chunks[w],
@@ -816,6 +1231,7 @@ impl ScoringPool {
                     rate: rates.rates()[w],
                 })
                 .collect(),
+            worker_health: self.worker_health(),
         }
     }
 
@@ -942,10 +1358,53 @@ impl ScoringPool {
         }
         let seq = self.seq.get();
         self.seq.set(seq + 1);
+        // Plan over *live* lanes only: a dead worker's zombie loop
+        // would answer every chunk with an error (pointless work), and
+        // a stalled worker already missed a deadline. Chunk windows
+        // are pure functions of (n, select_batch) — exclusion moves
+        // chunks between lanes exactly like rate skew does, without
+        // touching a window's rows, so scores stay bitwise-identical.
+        let alive: Vec<usize> = (0..self.workers)
+            .filter(|&w| relock(&self.health[w]).state == WorkerState::Live)
+            .collect();
+        let inline_all = alive.is_empty();
         let plan = {
             let rates = self.rates.lock().unwrap();
-            plan_dispatch(n, self.select_batch, rates.rates())
+            if alive.len() == self.workers {
+                plan_dispatch(n, self.select_batch, rates.rates())
+            } else if inline_all {
+                // No live lane at all: plan the same uniform windows
+                // over one pseudo-lane; nothing is enqueued and every
+                // window scores inline at drain (the run completes,
+                // degraded but exact).
+                plan_dispatch(n, self.select_batch, &[1.0])
+            } else {
+                let sub: Vec<f64> = alive.iter().map(|&w| rates.rates()[w]).collect();
+                let mut plan = plan_dispatch(n, self.select_batch, &sub);
+                for c in &mut plan {
+                    c.worker = alive[c.worker];
+                }
+                plan
+            }
         };
+        self.pending_meta.borrow_mut().insert(
+            seq,
+            DispatchMeta {
+                theta: theta.clone(),
+                batch: Arc::clone(batch),
+                il: match kind {
+                    ReqKind::Rho(il) => Some(Arc::clone(il)),
+                    _ => None,
+                },
+                seed: match kind {
+                    ReqKind::Mcd(s) => s,
+                    _ => 0,
+                },
+                kind: pending,
+                windows: plan.clone(),
+                inline_all,
+            },
+        );
         // The in-flight interval opens here, BEFORE the enqueue loop:
         // when a dispatch exceeds the pool's total lane capacity
         // (chunks > workers × lane_depth) the loop below blocks on
@@ -956,59 +1415,69 @@ impl ScoringPool {
         // phase plan for very large dispatches; size `lane_depth` so a
         // candidate batch fits if full overlap matters.)
         ledger::begin(self.id);
-        let mut by_lane: Vec<Vec<ChunkPlan>> = vec![Vec::new(); self.workers];
-        for c in &plan {
-            by_lane[c.worker].push(*c);
-        }
-        let mut cursor = vec![0usize; self.workers];
-        let mut sent = 0;
-        while sent < plan.len() {
-            let mut progressed = false;
-            for lane in 0..self.workers {
-                while let Some(c) = by_lane[lane].get(cursor[lane]) {
-                    let w = Window {
-                        seq,
-                        chunk: c.chunk,
-                        start: c.start,
-                        take: c.take,
-                        enqueued: Instant::now(),
-                    };
-                    let req = match kind {
-                        ReqKind::Fwd => {
-                            Request::Fwd { w, theta: theta.clone(), batch: Arc::clone(batch) }
-                        }
-                        ReqKind::Rho(il) => Request::Rho {
-                            w,
-                            theta: theta.clone(),
-                            batch: Arc::clone(batch),
-                            il: Arc::clone(il),
-                        },
-                        ReqKind::Mcd(seed) => Request::Mcd {
-                            w,
-                            theta: theta.clone(),
-                            batch: Arc::clone(batch),
-                            seed,
-                        },
-                    };
-                    match self.lanes[lane].try_send(req) {
-                        Ok(()) => {
-                            cursor[lane] += 1;
-                            sent += 1;
-                            progressed = true;
-                        }
-                        Err(TrySendError::Full(_)) => break, // lane at capacity; next lane
-                        Err(TrySendError::Disconnected(_)) => {
-                            ledger::end(self.id); // no ticket will ever close this interval
-                            bail!("pool workers died");
+        if !inline_all {
+            let lanes = self.lanes.borrow();
+            let mut by_lane: Vec<Vec<ChunkPlan>> = vec![Vec::new(); self.workers];
+            for c in &plan {
+                by_lane[c.worker].push(*c);
+            }
+            let mut cursor = vec![0usize; self.workers];
+            let mut sent = 0;
+            while sent < plan.len() {
+                let mut progressed = false;
+                for lane in 0..self.workers {
+                    while let Some(c) = by_lane[lane].get(cursor[lane]) {
+                        let w = Window {
+                            seq,
+                            chunk: c.chunk,
+                            start: c.start,
+                            take: c.take,
+                            enqueued: Instant::now(),
+                        };
+                        let req = match kind {
+                            ReqKind::Fwd => {
+                                Request::Fwd { w, theta: theta.clone(), batch: Arc::clone(batch) }
+                            }
+                            ReqKind::Rho(il) => Request::Rho {
+                                w,
+                                theta: theta.clone(),
+                                batch: Arc::clone(batch),
+                                il: Arc::clone(il),
+                            },
+                            ReqKind::Mcd(seed) => Request::Mcd {
+                                w,
+                                theta: theta.clone(),
+                                batch: Arc::clone(batch),
+                                seed,
+                            },
+                        };
+                        match lanes[lane].try_send(req) {
+                            Ok(()) => {
+                                cursor[lane] += 1;
+                                sent += 1;
+                                progressed = true;
+                            }
+                            Err(TrySendError::Full(_)) => break, // lane at capacity; next lane
+                            Err(TrySendError::Disconnected(_)) => {
+                                ledger::end(self.id); // no ticket will ever close this interval
+                                self.pending_meta.borrow_mut().remove(&seq);
+                                return Err(DispatchError {
+                                    plane: self.plane.clone(),
+                                    worker: Some(lane),
+                                    seq,
+                                    detail: "request lane disconnected".into(),
+                                }
+                                .into());
+                            }
                         }
                     }
                 }
-            }
-            if !progressed {
-                // Every lane with remaining work is full: back off
-                // briefly instead of blocking on one specific lane
-                // (backpressure without head-of-line blocking).
-                std::thread::sleep(Duration::from_micros(50));
+                if !progressed {
+                    // Every lane with remaining work is full: back off
+                    // briefly instead of blocking on one specific lane
+                    // (backpressure without head-of-line blocking).
+                    std::thread::sleep(Duration::from_micros(50));
+                }
             }
         }
         Ok(PendingScores {
@@ -1022,40 +1491,136 @@ impl ScoringPool {
         })
     }
 
-    /// Drain exactly the `chunks` responses of dispatch `seq`, routing
-    /// each payload to `sink(row_base, take, payload)`. Responses
-    /// already parked by an earlier interleaved wait are consumed
-    /// first; responses for *other* outstanding dispatches encountered
-    /// on the channel are parked for their own ticket. Always consumes
-    /// the full dispatch — even after a worker error — so a failed (or
-    /// abandoned) call can never leave stale responses to poison the
-    /// next one. Folds completion timestamps into the rate EMA, the
-    /// cumulative dispatch/queue-wait stats, and closes the dispatch's
-    /// in-flight ledger interval.
+    /// Drain the responses of dispatch `seq`, routing each payload to
+    /// `sink(row_base, take, payload)`. Responses already parked by an
+    /// earlier interleaved wait are consumed first; responses for
+    /// *other* outstanding dispatches encountered on the channel are
+    /// parked for their own ticket — or swallowed, if their dispatch
+    /// was abandoned by a deadline expiry. A worker failure does not
+    /// fail the dispatch: failed chunks are re-scored
+    /// deterministically on the coordinator (`recover`; the ticket
+    /// waits pass true, the abandoning `Drop` drain skips the wasted
+    /// work), newly-dead workers are counted and optionally
+    /// respawned, and only an unrecoverable failure surfaces — as a
+    /// typed [`DispatchError`]. With `dispatch_timeout_ms` configured
+    /// every blocking receive is bounded: expiry marks the owing
+    /// workers Stalled, abandons the dispatch, and returns the typed
+    /// error instead of blocking forever. Always folds completion
+    /// timestamps into the rate EMA and the cumulative stats, and
+    /// closes the dispatch's in-flight ledger interval.
     fn drain(
         &self,
         seq: u64,
         chunks: usize,
+        recover: bool,
         mut sink: impl FnMut(usize, usize, Payload) -> Result<()>,
     ) -> Result<()> {
+        let meta = self.pending_meta.borrow_mut().remove(&seq);
+        let inline_all = meta.as_ref().is_some_and(|m| m.inline_all);
+        let expected = if inline_all { 0 } else { chunks };
+        // chunk → owing worker, so a deadline expiry names who stalled.
+        let mut outstanding: HashMap<usize, usize> = match meta.as_ref() {
+            Some(m) if !inline_all => m.windows.iter().map(|c| (c.chunk, c.worker)).collect(),
+            _ => HashMap::new(),
+        };
         let mut busy = vec![Duration::ZERO; self.workers];
         let mut count = vec![0u64; self.workers];
         let mut wait = Duration::ZERO;
         let mut result = Ok(());
+        // (chunk, take, worker, cause) of chunks whose worker failed.
+        let mut failed: Vec<(usize, usize, usize, String)> = Vec::new();
         let mut parked = self.buffered.borrow_mut().remove(&seq).unwrap_or_default();
         let mut seen = 0usize;
-        while seen < chunks {
+        while seen < expected {
             let resp = match parked.pop() {
                 Some(r) => r,
                 None => {
-                    let r = match self.resp_rx.recv() {
+                    let recv = if self.dispatch_timeout_ms == 0 {
+                        self.resp_rx.recv().map_err(|_| RecvTimeoutError::Disconnected)
+                    } else {
+                        self.resp_rx.recv_timeout(Duration::from_millis(self.dispatch_timeout_ms))
+                    };
+                    let r = match recv {
                         Ok(r) => r,
-                        Err(_) => {
+                        Err(RecvTimeoutError::Disconnected) => {
+                            // Defensive only: the pool retains a
+                            // response sender for respawns, so the
+                            // channel cannot close while it is alive.
                             ledger::end(self.id);
-                            return Err(anyhow!("pool workers died"));
+                            return Err(DispatchError {
+                                plane: self.plane.clone(),
+                                worker: None,
+                                seq,
+                                detail: "response channel disconnected".into(),
+                            }
+                            .into());
+                        }
+                        Err(RecvTimeoutError::Timeout) => {
+                            // Deadline expiry: mark the owing workers
+                            // Stalled (excluded from future plans until
+                            // they answer something), abandon this
+                            // dispatch — its late responses will be
+                            // swallowed, never mis-parked — and
+                            // surface the typed error naming
+                            // plane/worker/seq.
+                            let mut owing: Vec<usize> = outstanding.values().copied().collect();
+                            owing.sort_unstable();
+                            owing.dedup();
+                            for &w in &owing {
+                                let mut h = relock(&self.health[w]);
+                                if h.state == WorkerState::Live {
+                                    h.state = WorkerState::Stalled;
+                                    h.cause = Some(format!(
+                                        "missed {}ms dispatch deadline (seq {seq})",
+                                        self.dispatch_timeout_ms
+                                    ));
+                                }
+                            }
+                            if !owing.is_empty() {
+                                self.any_stalled.set(true);
+                            }
+                            self.zombie_seqs.borrow_mut().insert(seq, expected - seen);
+                            ledger::end(self.id);
+                            let mut st = relock(&self.stats);
+                            st.dispatches += 1;
+                            st.chunks += seen as u64;
+                            st.deadline_expiries += 1;
+                            st.queue_wait_s += wait.as_secs_f64();
+                            for w in 0..self.workers {
+                                st.busy_s += busy[w].as_secs_f64();
+                                st.worker_chunks[w] += count[w];
+                                st.worker_busy_s[w] += busy[w].as_secs_f64();
+                            }
+                            return Err(DispatchError {
+                                plane: self.plane.clone(),
+                                worker: owing.first().copied(),
+                                seq,
+                                detail: format!(
+                                    "no response within {}ms; {} of {chunks} chunks \
+                                     outstanding on worker(s) {owing:?} (marked stalled)",
+                                    self.dispatch_timeout_ms,
+                                    expected - seen,
+                                ),
+                            }
+                            .into());
                         }
                     };
+                    // Any response proves its worker is serving again:
+                    // lift a deadline-expiry Stall.
+                    if self.any_stalled.get() {
+                        self.unstall(r.worker);
+                    }
                     if r.seq != seq {
+                        let mut zombies = self.zombie_seqs.borrow_mut();
+                        if let Some(left) = zombies.get_mut(&r.seq) {
+                            // Late response of an abandoned dispatch.
+                            *left = left.saturating_sub(1);
+                            if *left == 0 {
+                                zombies.remove(&r.seq);
+                            }
+                            continue;
+                        }
+                        drop(zombies);
                         self.buffered.borrow_mut().entry(r.seq).or_default().push(r);
                         continue;
                     }
@@ -1063,6 +1628,7 @@ impl ScoringPool {
                 }
             };
             seen += 1;
+            outstanding.remove(&resp.chunk);
             busy[resp.worker] += resp.busy;
             count[resp.worker] += 1;
             wait += resp.queue_wait;
@@ -1072,12 +1638,30 @@ impl ScoringPool {
                         result = sink(resp.chunk * self.select_batch, resp.take, p);
                     }
                 }
-                Err(e) => {
-                    if result.is_ok() {
-                        result = Err(anyhow!("worker {} failed: {e}", resp.worker));
-                    }
+                Err(e) => failed.push((resp.chunk, resp.take, resp.worker, e)),
+            }
+        }
+        if inline_all {
+            if let Some(m) = &meta {
+                for c in &m.windows {
+                    failed.push((c.chunk, c.take, usize::MAX, "no live worker lane".into()));
                 }
             }
+        }
+        // Deterministic recovery: re-score the failed windows inline,
+        // through the same exec_chunk + retained inputs the workers
+        // had. Skipped by the abandoning Drop drain (payloads are
+        // discarded anyway) and after a sink error (the dispatch
+        // already failed deterministically).
+        let mut recovered = 0u64;
+        if recover && !failed.is_empty() && result.is_ok() {
+            result = match self.recover_inline(seq, meta.as_ref(), &failed, &mut sink) {
+                Ok(n) => {
+                    recovered = n;
+                    Ok(())
+                }
+                Err(e) => Err(e),
+            };
         }
         ledger::end(self.id);
         let observed: Vec<f64> = (0..self.workers)
@@ -1087,10 +1671,14 @@ impl ScoringPool {
             })
             .collect();
         self.rates.lock().unwrap().observe(&observed);
+        let (deaths, spawns) = self.sweep_worker_deaths();
         let mut st = self.stats.lock().unwrap();
         st.dispatches += 1;
         st.chunks += chunks as u64;
         st.queue_wait_s += wait.as_secs_f64();
+        st.recovered_chunks += recovered;
+        st.worker_deaths += deaths;
+        st.respawns += spawns;
         for w in 0..self.workers {
             st.busy_s += busy[w].as_secs_f64();
             st.worker_chunks[w] += count[w];
@@ -1098,12 +1686,144 @@ impl ScoringPool {
         }
         result
     }
+
+    /// Lift a deadline-expiry Stall once the worker answers anything,
+    /// and clear the fast-path flag when nobody is stalled anymore.
+    fn unstall(&self, worker: usize) {
+        {
+            let mut h = relock(&self.health[worker]);
+            if h.state == WorkerState::Stalled {
+                h.state = WorkerState::Live;
+                h.cause = None;
+            }
+        }
+        let still = self.health.iter().any(|h| relock(h).state == WorkerState::Stalled);
+        self.any_stalled.set(still);
+    }
+
+    /// Re-score `failed` windows inline on the coordinator, feeding
+    /// recovered payloads through the same `sink` the worker responses
+    /// used. Bitwise-identical by construction: the retained inputs
+    /// are the dispatch's own theta/batch/il/seed `Arc`s, the windows
+    /// are the same `(chunk·nb, take)` coordinates, and the compute is
+    /// the same [`exec_chunk`] against executables loaded from the
+    /// same artifacts.
+    fn recover_inline(
+        &self,
+        seq: u64,
+        meta: Option<&DispatchMeta>,
+        failed: &[(usize, usize, usize, String)],
+        sink: &mut impl FnMut(usize, usize, Payload) -> Result<()>,
+    ) -> Result<u64> {
+        let first_worker = failed.first().and_then(|(_, _, w, _)| (*w != usize::MAX).then_some(*w));
+        let meta = match meta {
+            Some(m) => m,
+            None => {
+                // Unreachable through the public API (submit always
+                // retains); fail with the original worker cause.
+                let cause = failed.first().map(|(_, _, _, c)| c.as_str()).unwrap_or("?");
+                return Err(DispatchError {
+                    plane: self.plane.clone(),
+                    worker: first_worker,
+                    seq,
+                    detail: format!("worker failed ({cause}) and no retained inputs to re-score"),
+                }
+                .into());
+            }
+        };
+        let mut guard = self.inline.borrow_mut();
+        if guard.is_none() {
+            let scorer =
+                InlineScorer::new(&self.fwd_meta, &self.select_meta, self.mcd_meta.as_ref())
+                    .map_err(|e| DispatchError {
+                        plane: self.plane.clone(),
+                        worker: first_worker,
+                        seq,
+                        detail: format!("inline recovery scorer failed to build: {e:#}"),
+                    })?;
+            *guard = Some(scorer);
+        }
+        let scorer = guard.as_mut().expect("just built");
+        let mut recovered = 0u64;
+        for (chunk, take, worker, cause) in failed {
+            let payload = scorer
+                .score(meta, self.select_batch, self.d, *chunk, *take)
+                .map_err(|e| DispatchError {
+                    plane: self.plane.clone(),
+                    worker: (*worker != usize::MAX).then_some(*worker),
+                    seq,
+                    detail: format!(
+                        "chunk {chunk} failed ({cause}) and inline re-score also failed: {e:#}"
+                    ),
+                })?;
+            sink(chunk * self.select_batch, *take, payload)?;
+            recovered += 1;
+        }
+        Ok(recovered)
+    }
+
+    /// Count workers newly observed Dead and apply the respawn policy.
+    /// Returns `(new_deaths, new_respawns)` for the stats fold. A
+    /// respawned worker that dies again is a new death (and, under
+    /// `always`, a new respawn).
+    fn sweep_worker_deaths(&self) -> (u64, u64) {
+        let mut deaths = 0u64;
+        let mut spawns = 0u64;
+        let mut seen = self.seen_dead.borrow_mut();
+        for w in 0..self.workers {
+            let dead_respawns = {
+                let h = relock(&self.health[w]);
+                (h.state == WorkerState::Dead).then_some(h.respawns)
+            };
+            if let Some(prior) = dead_respawns {
+                if !seen[w] {
+                    seen[w] = true;
+                    deaths += 1;
+                    if self.respawn.allows(prior) {
+                        self.respawn_worker(w);
+                        seen[w] = false; // the rebuilt worker is watched anew
+                        spawns += 1;
+                    }
+                }
+            }
+        }
+        (deaths, spawns)
+    }
+
+    /// Rebuild worker `w`'s lane from the pool's retained artifact
+    /// metadata: fresh channel, fresh thread, same counter and health
+    /// slot (with `respawns` bumped). Replacing the lane sender drops
+    /// the old one, so the dead worker's zombie loop answers whatever
+    /// was still queued and exits; its thread joins at pool drop.
+    fn respawn_worker(&self, w: usize) {
+        let (lane_tx, lane_rx) = sync_channel::<Request>(self.lane_depth);
+        {
+            let mut h = relock(&self.health[w]);
+            h.state = WorkerState::Live;
+            h.cause = None;
+            h.respawns += 1;
+        }
+        let handle = spawn_worker(
+            w,
+            lane_rx,
+            self.resp_tx.clone(),
+            &self.fwd_meta,
+            &self.select_meta,
+            self.mcd_meta.as_ref(),
+            Arc::clone(&self.processed[w]),
+            Arc::clone(&self.health[w]),
+            &self.plane,
+            &self.fault,
+        );
+        self.lanes.borrow_mut()[w] = lane_tx;
+        self.handles.borrow_mut().push(handle);
+    }
 }
 
 impl Drop for ScoringPool {
     fn drop(&mut self) {
-        self.lanes.clear(); // close every lane; workers exit
-        for h in self.handles.drain(..) {
+        self.lanes.borrow_mut().clear(); // close every lane; workers (and zombies) exit
+        for h in self.handles.borrow_mut().drain(..) {
             let _ = h.join();
         }
         ledger::unregister(self.id);
@@ -1174,6 +1894,178 @@ fn theta_lit<'a>(
     Ok(&cache.as_ref().expect("just filled").1)
 }
 
+/// Score one chunk request against a set of loaded executables. This
+/// is the *only* chunk-scoring compute in the pool: the worker loop
+/// and the coordinator's [`InlineScorer`] recovery path both call it,
+/// which is what makes inline re-scores bitwise-identical to the
+/// scores a healthy worker would have produced.
+fn exec_chunk(
+    fwd_exe: &Executor,
+    select_exe: &Executor,
+    mcd_exe: Option<&Executor>,
+    nb: usize,
+    d: usize,
+    scratch: &mut Scratch,
+    req: &Request,
+) -> Result<Payload> {
+    match req {
+        Request::Fwd { w, theta, batch } => {
+            let (cx, cy) = chunk_views(
+                batch,
+                d,
+                nb,
+                w.start,
+                w.take,
+                &mut scratch.pad_x,
+                &mut scratch.pad_y,
+            );
+            let args = [
+                theta_lit(&mut scratch.theta_cache, theta)?,
+                &lit_f32(cx, &[nb, d])?,
+                &lit_i32(cy, &[nb])?,
+            ];
+            let outs = fwd_exe.call_f32(&args)?;
+            let mut it = outs.into_iter();
+            Ok(Payload::Fwd {
+                loss: it.next().unwrap(),
+                correct: it.next().unwrap(),
+                gnorm: it.next().unwrap(),
+                entropy: it.next().unwrap(),
+            })
+        }
+        Request::Rho { w, theta, batch, il } => {
+            let (cx, cy) = chunk_views(
+                batch,
+                d,
+                nb,
+                w.start,
+                w.take,
+                &mut scratch.pad_x,
+                &mut scratch.pad_y,
+            );
+            let ci = il_view(il, nb, w.start, w.take, &mut scratch.pad_il);
+            // select shape == fwd shape, validated at pool construction
+            let args = [
+                theta_lit(&mut scratch.theta_cache, theta)?,
+                &lit_f32(cx, &[nb, d])?,
+                &lit_i32(cy, &[nb])?,
+                &lit_f32(ci, &[nb])?,
+            ];
+            let outs = select_exe.call_f32(&args)?;
+            Ok(Payload::Rho { scores: outs.into_iter().next().unwrap() })
+        }
+        Request::Mcd { w, theta, batch, seed } => {
+            let exe = mcd_exe.ok_or_else(|| anyhow!("pool has no mcdropout executable"))?;
+            let (cx, cy) = chunk_views(
+                batch,
+                d,
+                nb,
+                w.start,
+                w.take,
+                &mut scratch.pad_x,
+                &mut scratch.pad_y,
+            );
+            let args = [
+                theta_lit(&mut scratch.theta_cache, theta)?,
+                &lit_f32(cx, &[nb, d])?,
+                &lit_i32(cy, &[nb])?,
+                &lit_i32(&[*seed], &[1])?,
+            ];
+            let outs = exe.call_f32(&args)?;
+            let mut it = outs.into_iter();
+            Ok(Payload::Mcd {
+                loss: it.next().unwrap(),
+                entropy: it.next().unwrap(),
+                cond_entropy: it.next().unwrap(),
+                bald: it.next().unwrap(),
+            })
+        }
+    }
+}
+
+/// Render a `catch_unwind` payload as the human cause string that ends
+/// up in `WorkerHealth::cause` and the chunk's error response.
+fn panic_cause(payload: Box<dyn Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Spawn one supervised worker thread. Clones the per-thread inputs
+/// here so [`ScoringPool::new`] and [`ScoringPool::respawn_worker`]
+/// share one call shape.
+#[allow(clippy::too_many_arguments)]
+fn spawn_worker(
+    wid: usize,
+    rx: Receiver<Request>,
+    tx: Sender<Response>,
+    fwd_meta: &ArtifactMeta,
+    select_meta: &ArtifactMeta,
+    mcd_meta: Option<&ArtifactMeta>,
+    counter: Arc<AtomicUsize>,
+    health: HealthSlot,
+    plane: &str,
+    fault: &FaultPlan,
+) -> JoinHandle<()> {
+    let fwd_meta = fwd_meta.clone();
+    let select_meta = select_meta.clone();
+    let mcd_meta = mcd_meta.cloned();
+    let plane = plane.to_string();
+    let fault = fault.clone();
+    thread::spawn(move || {
+        worker_main(wid, rx, tx, fwd_meta, select_meta, mcd_meta, counter, health, plane, fault)
+    })
+}
+
+/// Mark the worker Dead and answer every remaining + future request in
+/// its lane with a named error — the "zombie loop". A dead worker must
+/// keep consuming its lane: in-flight dispatches (and interleaved
+/// tickets) are still counting on one response per enqueued chunk, and
+/// an unanswered chunk would wedge a no-deadline drain forever. The
+/// loop ends when the pool (or a respawn) drops the lane sender.
+fn zombie_loop(
+    wid: usize,
+    rx: &Receiver<Request>,
+    tx: &Sender<Response>,
+    health: &HealthSlot,
+    cause: &str,
+    first: Option<(u64, usize, usize)>,
+) {
+    {
+        let mut h = relock(health);
+        h.state = WorkerState::Dead;
+        h.cause = Some(cause.to_string());
+    }
+    if let Some((seq, chunk, take)) = first {
+        let _ = tx.send(Response {
+            seq,
+            chunk,
+            take,
+            worker: wid,
+            queue_wait: Duration::ZERO,
+            busy: Duration::ZERO,
+            payload: Err(cause.to_string()),
+        });
+    }
+    while let Ok(req) = rx.recv() {
+        let w = req.window();
+        let _ = tx.send(Response {
+            seq: w.seq,
+            chunk: w.chunk,
+            take: w.take,
+            worker: wid,
+            queue_wait: w.enqueued.elapsed(),
+            busy: Duration::ZERO,
+            payload: Err(format!("worker {wid} is dead: {cause}")),
+        });
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn worker_main(
     wid: usize,
     rx: Receiver<Request>,
@@ -1182,6 +2074,9 @@ fn worker_main(
     select_meta: ArtifactMeta,
     mcd_meta: Option<ArtifactMeta>,
     counter: Arc<AtomicUsize>,
+    health: HealthSlot,
+    plane: String,
+    fault: FaultPlan,
 ) {
     // Private client + executables (xla handles are thread-local).
     let setup = (|| -> Result<(Executor, Executor, Option<Executor>)> {
@@ -1200,96 +2095,56 @@ fn worker_main(
     let (fwd_exe, select_exe, mcd_exe) = match setup {
         Ok(p) => p,
         Err(e) => {
-            // Surface the failure on every request in this lane.
-            while let Ok(req) = rx.recv() {
-                let w = req.window();
-                let _ = tx.send(Response {
-                    seq: w.seq,
-                    chunk: w.chunk,
-                    take: w.take,
-                    worker: wid,
-                    queue_wait: w.enqueued.elapsed(),
-                    busy: Duration::ZERO,
-                    payload: Err(format!("worker setup failed: {e:#}")),
-                });
-            }
+            zombie_loop(wid, &rx, &tx, &health, &format!("worker setup failed: {e:#}"), None);
             return;
         }
     };
     let nb = fwd_meta.batch().expect("validated at pool construction");
     let d = fwd_meta.d;
-    let mut pad_x: Vec<f32> = Vec::new();
-    let mut pad_y: Vec<i32> = Vec::new();
-    let mut pad_il: Vec<f32> = Vec::new();
-    let mut theta_cache: Option<(u64, Literal)> = None;
+    let mut scratch = Scratch::default();
     loop {
         let req = match rx.recv() {
             Ok(r) => r,
             Err(_) => return, // lane closed
         };
+        let (seq, chunk, take) = {
+            let w = req.window();
+            (w.seq, w.chunk, w.take)
+        };
+        let step = req.batch().step;
+        // Injected stall: visible in health while it lasts, so chaos
+        // tests can watch the Stalled → deadline → excluded sequence.
+        if let Some(ms) = fault.stall_ms(&plane, wid, step) {
+            {
+                let mut h = relock(&health);
+                h.state = WorkerState::Stalled;
+                h.cause = Some(format!("injected stall ({ms}ms)"));
+            }
+            thread::sleep(Duration::from_millis(ms));
+            let mut h = relock(&health);
+            if h.state == WorkerState::Stalled {
+                h.state = WorkerState::Live;
+                h.cause = None;
+            }
+        }
         let picked_up = Instant::now();
         let queue_wait = picked_up.duration_since(req.window().enqueued);
-        let (seq, chunk, take, payload) = match req {
-            Request::Fwd { w, theta, batch } => {
-                let res = (|| -> Result<Payload> {
-                    let (cx, cy) =
-                        chunk_views(&batch, d, nb, w.start, w.take, &mut pad_x, &mut pad_y);
-                    let args = [
-                        theta_lit(&mut theta_cache, &theta)?,
-                        &lit_f32(cx, &[nb, d])?,
-                        &lit_i32(cy, &[nb])?,
-                    ];
-                    let outs = fwd_exe.call_f32(&args)?;
-                    let mut it = outs.into_iter();
-                    Ok(Payload::Fwd {
-                        loss: it.next().unwrap(),
-                        correct: it.next().unwrap(),
-                        gnorm: it.next().unwrap(),
-                        entropy: it.next().unwrap(),
-                    })
-                })();
-                (w.seq, w.chunk, w.take, res.map_err(|e| format!("{e:#}")))
+        // The scratch buffers are only ever reused by THIS thread, and
+        // a panicking iteration falls through to the zombie loop which
+        // never touches them again — so AssertUnwindSafe is sound.
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            if fault.worker_panic(&plane, wid, step) {
+                panic!("injected worker_panic (plane `{plane}`, worker {wid}, step {step})");
             }
-            Request::Rho { w, theta, batch, il } => {
-                let res = (|| -> Result<Payload> {
-                    let (cx, cy) =
-                        chunk_views(&batch, d, nb, w.start, w.take, &mut pad_x, &mut pad_y);
-                    let ci = il_view(&il, nb, w.start, w.take, &mut pad_il);
-                    // select shape == fwd shape, validated at pool construction
-                    let args = [
-                        theta_lit(&mut theta_cache, &theta)?,
-                        &lit_f32(cx, &[nb, d])?,
-                        &lit_i32(cy, &[nb])?,
-                        &lit_f32(ci, &[nb])?,
-                    ];
-                    let outs = select_exe.call_f32(&args)?;
-                    Ok(Payload::Rho { scores: outs.into_iter().next().unwrap() })
-                })();
-                (w.seq, w.chunk, w.take, res.map_err(|e| format!("{e:#}")))
-            }
-            Request::Mcd { w, theta, batch, seed } => {
-                let res = (|| -> Result<Payload> {
-                    let exe = mcd_exe
-                        .as_ref()
-                        .ok_or_else(|| anyhow!("pool has no mcdropout executable"))?;
-                    let (cx, cy) =
-                        chunk_views(&batch, d, nb, w.start, w.take, &mut pad_x, &mut pad_y);
-                    let args = [
-                        theta_lit(&mut theta_cache, &theta)?,
-                        &lit_f32(cx, &[nb, d])?,
-                        &lit_i32(cy, &[nb])?,
-                        &lit_i32(&[seed], &[1])?,
-                    ];
-                    let outs = exe.call_f32(&args)?;
-                    let mut it = outs.into_iter();
-                    Ok(Payload::Mcd {
-                        loss: it.next().unwrap(),
-                        entropy: it.next().unwrap(),
-                        cond_entropy: it.next().unwrap(),
-                        bald: it.next().unwrap(),
-                    })
-                })();
-                (w.seq, w.chunk, w.take, res.map_err(|e| format!("{e:#}")))
+            exec_chunk(&fwd_exe, &select_exe, mcd_exe.as_ref(), nb, d, &mut scratch, &req)
+                .map_err(|e| format!("{e:#}"))
+        }));
+        let payload = match run {
+            Ok(p) => p,
+            Err(panic) => {
+                let cause = format!("worker {wid} panicked: {}", panic_cause(panic));
+                zombie_loop(wid, &rx, &tx, &health, &cause, Some((seq, chunk, take)));
+                return;
             }
         };
         counter.fetch_add(1, Ordering::Relaxed);
@@ -1352,7 +2207,12 @@ mod tests {
             inflight_s: 2.0,
             overlap_s: 0.5,
             train_overlap_s: 1.0,
+            recovered_chunks: 1,
+            worker_deaths: 1,
+            respawns: 0,
+            deadline_expiries: 0,
             per_worker: vec![WorkerStat { chunks: 10, busy_s: 4.0, rate: 2.0 }],
+            worker_health: vec![WorkerHealth::default()],
         };
         let later = PoolReport {
             dispatches: 5,
@@ -1362,7 +2222,16 @@ mod tests {
             inflight_s: 5.0,
             overlap_s: 2.0,
             train_overlap_s: 2.5,
+            recovered_chunks: 4,
+            worker_deaths: 2,
+            respawns: 1,
+            deadline_expiries: 1,
             per_worker: vec![WorkerStat { chunks: 25, busy_s: 9.0, rate: 3.0 }],
+            worker_health: vec![WorkerHealth {
+                state: WorkerState::Dead,
+                cause: Some("x".into()),
+                respawns: 1,
+            }],
         };
         let d = later.since(&earlier);
         assert_eq!((d.dispatches, d.chunks), (3, 15));
@@ -1371,12 +2240,71 @@ mod tests {
         assert!((d.inflight_s - 3.0).abs() < 1e-12);
         assert!((d.overlap_s - 1.5).abs() < 1e-12);
         assert!((d.train_overlap_s - 1.5).abs() < 1e-12);
+        // Recovery counters subtract like the others…
+        assert_eq!(
+            (d.recovered_chunks, d.worker_deaths, d.respawns, d.deadline_expiries),
+            (3, 1, 1, 1)
+        );
+        // …while health is point-in-time, carried from the later report.
+        assert_eq!(d.worker_health[0].state, WorkerState::Dead);
+        assert_eq!(d.worker_health[0].respawns, 1);
         assert_eq!(d.per_worker[0].chunks, 15);
         assert_eq!(d.per_worker[0].rate, 3.0, "rates are point-in-time, not deltas");
         // self-delta is zero
         let z = later.since(&later);
         assert_eq!((z.dispatches, z.chunks), (0, 0));
         assert_eq!((z.inflight_s, z.overlap_s), (0.0, 0.0));
+        assert_eq!((z.recovered_chunks, z.worker_deaths), (0, 0));
+    }
+
+    #[test]
+    fn respawn_policy_parses_and_bounds_respawns() {
+        assert_eq!(RespawnPolicy::parse("").unwrap(), RespawnPolicy::Never);
+        assert_eq!(RespawnPolicy::parse("never").unwrap(), RespawnPolicy::Never);
+        assert_eq!(RespawnPolicy::parse("once").unwrap(), RespawnPolicy::Once);
+        assert_eq!(RespawnPolicy::parse("always").unwrap(), RespawnPolicy::Always);
+        let err = format!("{:#}", RespawnPolicy::parse("twice").unwrap_err());
+        assert!(err.contains("twice"), "error must name the offender: {err}");
+        assert!(!RespawnPolicy::Never.allows(0));
+        assert!(RespawnPolicy::Once.allows(0));
+        assert!(!RespawnPolicy::Once.allows(1));
+        assert!(RespawnPolicy::Always.allows(7));
+    }
+
+    #[test]
+    fn relock_recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(41u32));
+        let poisoner = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        let mut v = relock(&m);
+        *v += 1;
+        assert_eq!(*v, 42);
+    }
+
+    #[test]
+    fn dispatch_error_names_plane_worker_seq() {
+        let e = DispatchError {
+            plane: "target".into(),
+            worker: Some(3),
+            seq: 17,
+            detail: "no response within 250ms".into(),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("plane `target`"), "{msg}");
+        assert!(msg.contains("worker 3"), "{msg}");
+        assert!(msg.contains("seq 17"), "{msg}");
+        // Workerless + unlabeled variant stays readable.
+        let e = DispatchError { plane: String::new(), worker: None, seq: 2, detail: "d".into() };
+        let msg = e.to_string();
+        assert!(msg.contains("plane `?`") && !msg.contains("worker"), "{msg}");
+        // And it round-trips through anyhow as a typed error.
+        let any: anyhow::Error = e.into();
+        assert_eq!(any.downcast_ref::<DispatchError>().unwrap().seq, 2);
     }
 
     #[test]

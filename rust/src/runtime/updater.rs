@@ -15,10 +15,18 @@
 //! parity tests in `tests/session_integration.rs` assert it
 //! curve-for-curve.
 //!
-//! Errors are latched: a failed step poisons the updater, subsequent
-//! updates are dropped, and the failure surfaces at the next sync
-//! point (never silently).
+//! Failures never pass silently: a failed *or panicked* step latches
+//! the updater (the step runs under `catch_unwind`, so the thread
+//! survives to report), subsequent updates are dropped, and the
+//! failure surfaces at the next sync point as a typed
+//! [`UpdaterError`] naming the updater. Should the thread die outright
+//! anyway, the closed channel is detected at the next push/sync — the
+//! same typed error, never a hang. The `updater_panic` injection point
+//! of [`FaultPlan`] drives the panic path under test, keyed on the
+//! 0-based ordinal of applied updates.
 
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
@@ -26,8 +34,28 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::artifact::ArtifactMeta;
 use crate::runtime::executor::Executor;
+use crate::runtime::fault::FaultPlan;
 use crate::runtime::handle::train_step_raw;
 use crate::runtime::params::{ThetaSnapshot, TrainState};
+
+/// Typed failure of an [`IlUpdater`]: which updater, and what
+/// happened. Crossing `anyhow` boundaries preserves it —
+/// `err.downcast_ref::<UpdaterError>()` recovers it at the engine.
+#[derive(Clone, Debug)]
+pub struct UpdaterError {
+    /// Updater label (the plane name it updates for).
+    pub updater: String,
+    pub detail: String,
+}
+
+impl fmt::Display for UpdaterError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let who = if self.updater.is_empty() { "?" } else { &self.updater };
+        write!(f, "IL updater `{who}`: {}", self.detail)
+    }
+}
+
+impl std::error::Error for UpdaterError {}
 
 enum Msg {
     Update { xs: Vec<f32>, ys: Vec<i32>, w: Vec<f32>, lr: f32, wd: f32 },
@@ -45,14 +73,24 @@ enum Msg {
 pub struct IlUpdater {
     tx: Sender<Msg>,
     handle: Option<JoinHandle<TrainState>>,
+    label: String,
 }
 
 impl IlUpdater {
     /// Spawn the update thread around an initial state. `train_meta`
     /// must be the *same* train-step artifact the inline path would
     /// use (same arch, same train batch) — that is what makes the
-    /// async trajectory bitwise-equal to the inline one.
-    pub fn spawn(train_meta: &ArtifactMeta, state: TrainState) -> Result<IlUpdater> {
+    /// async trajectory bitwise-equal to the inline one. `label` names
+    /// the updater in every error it ever reports (conventionally the
+    /// plane name); `fault` carries the `updater_panic` injection
+    /// schedule (pass [`FaultPlan::empty`] outside chaos tests — one
+    /// branch per update).
+    pub fn spawn(
+        train_meta: &ArtifactMeta,
+        state: TrainState,
+        label: &str,
+        fault: FaultPlan,
+    ) -> Result<IlUpdater> {
         let nb = train_meta
             .batch()
             .ok_or_else(|| anyhow!("train artifact `{}` has no batch size", train_meta.program))?;
@@ -66,16 +104,29 @@ impl IlUpdater {
         }
         let (tx, rx) = channel::<Msg>();
         let meta = train_meta.clone();
-        let handle = std::thread::spawn(move || updater_main(rx, meta, nb, state));
-        Ok(IlUpdater { tx, handle: Some(handle) })
+        let handle = std::thread::spawn(move || updater_main(rx, meta, nb, state, fault));
+        Ok(IlUpdater { tx, handle: Some(handle), label: label.to_string() })
     }
 
-    /// Queue one AdamW step; applied in push order. Errors surface at
-    /// the next sync point, not here.
+    fn dead(&self, when: &str) -> anyhow::Error {
+        UpdaterError {
+            updater: self.label.clone(),
+            detail: format!("thread died ({when} on a closed channel)"),
+        }
+        .into()
+    }
+
+    fn latched(&self, detail: &str) -> anyhow::Error {
+        UpdaterError { updater: self.label.clone(), detail: detail.to_string() }.into()
+    }
+
+    /// Queue one AdamW step; applied in push order. A latched step
+    /// failure surfaces at the next sync point, not here — but a dead
+    /// thread (closed channel) is a typed error immediately.
     pub fn push(&self, xs: &[f32], ys: &[i32], w: &[f32], lr: f32, wd: f32) -> Result<()> {
         self.tx
             .send(Msg::Update { xs: xs.to_vec(), ys: ys.to_vec(), w: w.to_vec(), lr, wd })
-            .map_err(|_| anyhow!("IL updater thread died"))
+            .map_err(|_| self.dead("push"))
     }
 
     /// Synchronize: block until every queued update has been applied,
@@ -84,22 +135,16 @@ impl IlUpdater {
     /// on the consumer's critical path every step.
     pub fn theta(&self) -> Result<ThetaSnapshot> {
         let (reply_tx, reply_rx) = channel();
-        self.tx.send(Msg::Theta(reply_tx)).map_err(|_| anyhow!("IL updater thread died"))?;
-        reply_rx
-            .recv()
-            .map_err(|_| anyhow!("IL updater thread died"))?
-            .map_err(|e| anyhow!("IL update failed: {e}"))
+        self.tx.send(Msg::Theta(reply_tx)).map_err(|_| self.dead("theta sync"))?;
+        reply_rx.recv().map_err(|_| self.dead("theta sync"))?.map_err(|e| self.latched(&e))
     }
 
     /// Synchronize and clone the full state (theta + AdamW moments) —
     /// the checkpoint writer needs all of it.
     pub fn snapshot(&self) -> Result<TrainState> {
         let (reply_tx, reply_rx) = channel();
-        self.tx.send(Msg::Snapshot(reply_tx)).map_err(|_| anyhow!("IL updater thread died"))?;
-        reply_rx
-            .recv()
-            .map_err(|_| anyhow!("IL updater thread died"))?
-            .map_err(|e| anyhow!("IL update failed: {e}"))
+        self.tx.send(Msg::Snapshot(reply_tx)).map_err(|_| self.dead("snapshot sync"))?;
+        reply_rx.recv().map_err(|_| self.dead("snapshot sync"))?.map_err(|e| self.latched(&e))
     }
 
     /// Drain, stop the thread, and take the final state. A latched
@@ -109,8 +154,14 @@ impl IlUpdater {
         // swallowed by the join below.
         let last = self.snapshot()?;
         let handle = self.handle.take().expect("finish consumes the updater once");
+        let label = self.label.clone();
         drop(self); // closes tx; thread exits its recv loop
-        handle.join().map_err(|_| anyhow!("IL updater thread panicked"))?;
+        handle.join().map_err(|_| {
+            anyhow::Error::from(UpdaterError {
+                updater: label,
+                detail: "thread panicked outside a train step".into(),
+            })
+        })?;
         Ok(last)
     }
 }
@@ -128,7 +179,13 @@ impl Drop for IlUpdater {
     }
 }
 
-fn updater_main(rx: Receiver<Msg>, meta: ArtifactMeta, nb: usize, mut state: TrainState) -> TrainState {
+fn updater_main(
+    rx: Receiver<Msg>,
+    meta: ArtifactMeta,
+    nb: usize,
+    mut state: TrainState,
+    fault: FaultPlan,
+) -> TrainState {
     // Private client + executable (xla handles are thread-local).
     // Unlike the long-lived cached pool workers, an updater lives for
     // one run — so the client is held (and dropped at thread exit)
@@ -143,17 +200,54 @@ fn updater_main(rx: Receiver<Msg>, meta: ArtifactMeta, nb: usize, mut state: Tra
         Ok(_) => None,
         Err(e) => Some(format!("updater setup failed: {e:#}")),
     };
+    // 0-based ordinal of Update messages processed — the deterministic
+    // coordinate `updater_panic@step=N` fault specs match on.
+    let mut update_count: u64 = 0;
     while let Ok(msg) = rx.recv() {
         match msg {
             Msg::Update { xs, ys, w, lr, wd } => {
+                let ordinal = update_count;
+                update_count += 1;
                 if latched.is_some() {
                     continue; // poisoned: drop updates, keep draining
                 }
                 let exe = &setup.as_ref().expect("latched covers setup failure").0;
-                if let Err(e) =
-                    train_step_raw(exe, meta.param_count, nb, meta.d, &mut state, &xs, &ys, &w, lr, wd)
-                {
-                    latched = Some(format!("{e:#}"));
+                // catch_unwind so a panicking step (xla FFI or
+                // injected) latches and reports at the next sync
+                // instead of killing the thread: the FIFO keeps
+                // serving syncs, and `state` — whatever half-written
+                // condition the panic left it in — is never read
+                // again (every reply path is latched from here on).
+                let step = catch_unwind(AssertUnwindSafe(|| {
+                    if fault.updater_panic(ordinal) {
+                        panic!("injected updater_panic (update {ordinal})");
+                    }
+                    train_step_raw(
+                        exe,
+                        meta.param_count,
+                        nb,
+                        meta.d,
+                        &mut state,
+                        &xs,
+                        &ys,
+                        &w,
+                        lr,
+                        wd,
+                    )
+                }));
+                match step {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => latched = Some(format!("{e:#}")),
+                    Err(panic) => {
+                        let cause = if let Some(s) = panic.downcast_ref::<&str>() {
+                            (*s).to_string()
+                        } else if let Some(s) = panic.downcast_ref::<String>() {
+                            s.clone()
+                        } else {
+                            "non-string panic payload".to_string()
+                        };
+                        latched = Some(format!("panicked in train step: {cause}"));
+                    }
                 }
             }
             Msg::Theta(reply) => {
@@ -171,4 +265,22 @@ fn updater_main(rx: Receiver<Msg>, meta: ArtifactMeta, nb: usize, mut state: Tra
         }
     }
     state
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn updater_error_names_the_updater() {
+        let e = UpdaterError { updater: "il".into(), detail: "panicked in train step: x".into() };
+        let msg = e.to_string();
+        assert!(msg.contains("IL updater `il`"), "{msg}");
+        assert!(msg.contains("panicked"), "{msg}");
+        let anon = UpdaterError { updater: String::new(), detail: "d".into() };
+        assert!(anon.to_string().contains('?'));
+        // Typed across the anyhow boundary.
+        let any: anyhow::Error = e.into();
+        assert_eq!(any.downcast_ref::<UpdaterError>().unwrap().updater, "il");
+    }
 }

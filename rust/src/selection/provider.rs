@@ -55,6 +55,16 @@
 //! consumers. [`flush`] drops every held ticket (the pool drains them
 //! on drop) — the checkpoint writer's drain-before-save guard.
 //!
+//! Failure plumbing: providers add `.with_context` narrative to a
+//! failed wait but never re-wrap the error value, so a typed
+//! [`DispatchError`](crate::runtime::pool::DispatchError) raised by a
+//! supervised pool (dead lane, missed dispatch deadline) survives the
+//! whole stack — the engine recovers it with
+//! `err.downcast_ref::<DispatchError>()` and retries the step's
+//! scoring once around the excluded lane. [`flush`] is also that
+//! recovery path's reset button: it clears part-consumed tickets so
+//! the retry re-submits from a clean response stream.
+//!
 //! Providers see the candidate batch as the shared [`CandBatch`] the
 //! producer gathered (`StepCtx::batch`), not as borrowed slices: the
 //! pool-backed providers forward the whole buffer as a refcount bump

@@ -5,14 +5,25 @@
 //! lanes, never changes what is computed) — and, for the two-phase
 //! submit/wait API, route interleaved tickets' responses by sequence
 //! id and drain dropped tickets so no dispatch can poison the next.
+//!
+//! The chaos suite (seeded [`FaultPlan`] injections) pins the
+//! supervision layer: a worker panic is absorbed with bitwise-
+//! identical scores (deterministic inline re-score of the dead lane's
+//! chunks), a wedged worker surfaces as a typed [`DispatchError`]
+//! naming plane/worker/seq at the dispatch deadline, the respawn
+//! policy rebuilds dead lanes, and a pool with zero live lanes still
+//! completes exactly.
 
 use std::rc::Rc;
 use std::sync::Arc;
 
 use rho::runtime::artifact::{default_dir, Manifest};
+use rho::runtime::fault::FaultPlan;
 use rho::runtime::handle::{cpu_client, ModelRuntime};
 use rho::runtime::params::ThetaSnapshot;
-use rho::runtime::pool::{CandBatch, PoolConfig, ScoringPool};
+use rho::runtime::pool::{
+    CandBatch, DispatchError, PoolConfig, RespawnPolicy, ScoringPool, WorkerState,
+};
 
 fn setup() -> Option<(Manifest, Rc<xla::PjRtClient>)> {
     let dir = default_dir();
@@ -447,6 +458,186 @@ fn overlapping_dispatches_account_inflight_and_overlap() {
     assert!(a.overlap_s > 0.0, "pool A reported no overlap: {a:?}");
     assert!(b.overlap_s > 0.0, "pool B reported no overlap: {b:?}");
     assert!(a.inflight_s >= a.overlap_s && b.inflight_s >= b.overlap_s);
+}
+
+// --- chaos suite: seeded fault injection against the supervisor -----
+
+/// A pool with the full supervision surface dialed in: plane label
+/// (the `plane=` coordinate fault matchers key on), dispatch deadline,
+/// respawn policy, and a parsed fault plan.
+fn mk_supervised_pool(
+    manifest: &Manifest,
+    workers: usize,
+    plane: &str,
+    fault: &str,
+    dispatch_timeout_ms: u64,
+    respawn: RespawnPolicy,
+) -> ScoringPool {
+    let fwd = manifest.find("mlp_small", 64, 10, "fwd_b320").unwrap();
+    let sel = manifest.find("mlp_small", 64, 10, "select_b320").unwrap();
+    ScoringPool::new(
+        fwd,
+        sel,
+        None,
+        &PoolConfig {
+            workers,
+            lane_depth: 4,
+            plane: plane.to_string(),
+            dispatch_timeout_ms,
+            respawn,
+            fault: FaultPlan::parse(fault).unwrap(),
+            ..PoolConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn injected_worker_panic_recovers_bitwise() {
+    // A worker panicking mid-dispatch at workers=4 must cost nothing
+    // but wall-clock: its chunks re-score inline through the identical
+    // exec path and compiled artifacts, so scores are bitwise equal to
+    // a healthy pool's — the PR 2 invariant (chunk windows are pure
+    // functions of (n, select_batch)) made recovery deterministic.
+    let Some((manifest, client)) = setup() else { return };
+    let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_small", 64, 10).unwrap();
+    let theta = rt.init(6).unwrap().theta_snapshot();
+    let (batch, il) = rand_batch(1601, 61); // 6 chunks, ragged tail
+    let healthy = mk_pool(&manifest, 4);
+    let rho_ref = healthy.rho(&theta, &batch, &il).unwrap();
+    let fwd_ref = healthy.fwd(&theta, &batch).unwrap();
+
+    let pool = mk_supervised_pool(
+        &manifest,
+        4,
+        "chaos",
+        "worker_panic@plane=chaos,worker=1,step=0",
+        0,
+        RespawnPolicy::Never,
+    );
+    let rho_chaos = pool.rho(&theta, &batch, &il).unwrap();
+    assert_eq!(rho_chaos, rho_ref, "recovered scores diverged from the healthy pool");
+    let c = pool.recovery_counters();
+    assert_eq!(c.worker_deaths, 1, "{c:?}");
+    assert!(c.recovered_chunks > 0, "{c:?}");
+    assert_eq!(c.respawns, 0, "{c:?}");
+    let health = pool.worker_health();
+    assert_eq!(health[1].state, WorkerState::Dead);
+    let cause = health[1].cause.as_deref().unwrap_or("");
+    assert!(cause.contains("injected worker_panic"), "cause lost the panic message: {cause}");
+    for (w, h) in health.iter().enumerate() {
+        if w != 1 {
+            assert_eq!(h.state, WorkerState::Live, "worker {w} wrongly marked: {h:?}");
+        }
+    }
+    // subsequent dispatches plan around the dead lane, still bitwise
+    assert_eq!(pool.fwd(&theta, &batch).unwrap().loss, fwd_ref.loss);
+    assert_eq!(pool.rho(&theta, &batch, &il).unwrap(), rho_ref);
+}
+
+#[test]
+fn deadline_expiry_surfaces_typed_dispatch_error() {
+    // A wedged (not dead) worker: the injected stall sleeps through
+    // the pool's dispatch deadline, so the wait must return a typed
+    // DispatchError naming plane/worker/seq instead of blocking, and
+    // the lane is excluded until it answers again.
+    let Some((manifest, client)) = setup() else { return };
+    let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_small", 64, 10).unwrap();
+    let theta = rt.init(7).unwrap().theta_snapshot();
+    let (batch, il) = rand_batch(1601, 62);
+    let pool = mk_supervised_pool(
+        &manifest,
+        2,
+        "slowpoke",
+        "stall@plane=slowpoke,worker=0,step=0,ms=1500",
+        250,
+        RespawnPolicy::Never,
+    );
+    let err = pool.rho(&theta, &batch, &il).expect_err("stalled lane met a 250ms deadline");
+    let de = err
+        .downcast_ref::<DispatchError>()
+        .expect("typed DispatchError lost in the anyhow chain");
+    assert_eq!(de.plane, "slowpoke");
+    assert_eq!(de.worker, Some(0), "wrong worker blamed: {de}");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("slowpoke"), "{msg}");
+    assert!(msg.contains("250ms"), "{msg}");
+    assert!(msg.contains(&format!("seq {}", de.seq)), "{msg}");
+    assert_eq!(pool.worker_health()[0].state, WorkerState::Stalled);
+    assert_eq!(pool.recovery_counters().deadline_expiries, 1);
+    // Once the injected stall ends, the worker's late answers to the
+    // abandoned dispatch are swallowed (never mis-parked) and un-stall
+    // it; the pool keeps scoring bitwise.
+    std::thread::sleep(std::time::Duration::from_millis(1800));
+    let rho_ref = mk_pool(&manifest, 2).rho(&theta, &batch, &il).unwrap();
+    assert_eq!(pool.rho(&theta, &batch, &il).unwrap(), rho_ref);
+}
+
+#[test]
+fn respawn_rebuilds_dead_lane_and_stays_bitwise() {
+    // respawn=always: the lane whose worker panicked is rebuilt from
+    // the plane's artifacts at the end of the absorbing drain; the
+    // rebuilt worker shares the plan's fired flags, so a fired
+    // worker_panic spec never re-fires on it.
+    let Some((manifest, client)) = setup() else { return };
+    let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_small", 64, 10).unwrap();
+    let theta = rt.init(8).unwrap().theta_snapshot();
+    let (batch, il) = rand_batch(1290, 63);
+    let rho_ref = mk_pool(&manifest, 2).rho(&theta, &batch, &il).unwrap();
+    let pool = mk_supervised_pool(
+        &manifest,
+        2,
+        "phoenix",
+        "worker_panic@plane=phoenix,worker=1,step=0",
+        0,
+        RespawnPolicy::Always,
+    );
+    assert_eq!(pool.rho(&theta, &batch, &il).unwrap(), rho_ref);
+    let c = pool.recovery_counters();
+    assert_eq!((c.worker_deaths, c.respawns), (1, 1), "{c:?}");
+    let health = pool.worker_health();
+    assert_eq!(health[1].state, WorkerState::Live, "lane not rebuilt: {:?}", health[1]);
+    assert_eq!(health[1].respawns, 1);
+    assert!(health[1].cause.is_none(), "stale cause on the rebuilt lane: {:?}", health[1]);
+    // the rebuilt lane serves the next dispatch; the fault stays fired
+    assert_eq!(pool.rho(&theta, &batch, &il).unwrap(), rho_ref);
+    assert_eq!(
+        pool.recovery_counters().worker_deaths,
+        1,
+        "fault re-fired on the respawned lane"
+    );
+}
+
+#[test]
+fn pool_with_no_live_lanes_scores_inline() {
+    // workers=1 and the only worker dies: the absorbing dispatch
+    // recovers its chunks inline, and every later dispatch plans
+    // `inline_all` (nothing enqueued, all windows scored on the
+    // coordinator) — the run completes, degraded but exact.
+    let Some((manifest, client)) = setup() else { return };
+    let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_small", 64, 10).unwrap();
+    let theta = rt.init(9).unwrap().theta_snapshot();
+    let (batch, il) = rand_batch(1000, 64); // 4 chunks
+    let healthy = mk_pool(&manifest, 1);
+    let rho_ref = healthy.rho(&theta, &batch, &il).unwrap();
+    let fwd_ref = healthy.fwd(&theta, &batch).unwrap();
+    let pool = mk_supervised_pool(
+        &manifest,
+        1,
+        "lonely",
+        "worker_panic@plane=lonely,worker=0,step=0",
+        0,
+        RespawnPolicy::Never,
+    );
+    assert_eq!(pool.rho(&theta, &batch, &il).unwrap(), rho_ref);
+    assert_eq!(pool.worker_health()[0].state, WorkerState::Dead);
+    // no live lane left at all — both request kinds still exact
+    assert_eq!(pool.fwd(&theta, &batch).unwrap().loss, fwd_ref.loss);
+    assert_eq!(pool.rho(&theta, &batch, &il).unwrap(), rho_ref);
+    let c = pool.recovery_counters();
+    // 4 chunks absorbed in dispatch 1 + 4 + 4 inline-all afterwards
+    assert_eq!(c.recovered_chunks, 12, "{c:?}");
+    assert_eq!(c.worker_deaths, 1, "{c:?}");
 }
 
 fn pool_param_count(manifest: &Manifest) -> usize {

@@ -4,6 +4,14 @@
 //! through the engine (inline and pooled), multi-plane runs reproduce
 //! the single-plane curves bitwise at one worker per plane, and
 //! checkpoint/resume continues the eval curve from the saved step.
+//!
+//! The chaos suite at the bottom drives the supervision layer through
+//! full runs: an injected worker panic is bitwise-transparent to the
+//! training curve, a checkpoint taken after a fault resumes bitwise, a
+//! wedged lane's deadline expiry is absorbed by the engine's
+//! retry-once path, the speculative walk survives a worker death, and
+//! an async IL updater panic surfaces as a typed error naming the
+//! updater.
 
 use std::rc::Rc;
 
@@ -11,8 +19,10 @@ use rho::config::RunConfig;
 use rho::coordinator::Session;
 use rho::experiments::common::Lab;
 use rho::experiments::ExpCtx;
+use rho::runtime::fault::FaultPlan;
 use rho::runtime::plane::ComputePlane;
 use rho::runtime::pool::{PoolConfig, ScoringPool};
+use rho::runtime::updater::UpdaterError;
 use rho::selection::Method;
 
 fn lab() -> Option<Lab> {
@@ -722,4 +732,292 @@ fn online_il_reports_il_accuracy() {
     let res = lab.run_one(&cfg, &bundle).unwrap();
     let acc = res.il_final_accuracy.expect("online_il must report IL accuracy");
     assert!((0.0..=1.0).contains(&acc));
+}
+
+// ---- chaos suite: the supervision layer under injected faults ------
+//
+// Fault plans are built with `FaultPlan::parse` and handed to the pool
+// directly (never via the RHO_FAULT env var — it is process-global and
+// these tests run in parallel), and every spec names its `plane=` so a
+// wildcard can't fire on another test's pool. In sessions the `step=`
+// coordinate is the 1-based engine step carried by each candidate
+// batch; `updater_panic@step=N` counts applied IL updates instead.
+
+/// Supervised plane: `workers` workers labelled `name`, a parsed chaos
+/// plan, and an optional dispatch deadline — the setup a
+/// `pool.fault=...` / `pool.dispatch_timeout_ms=...` config would
+/// produce for this plane.
+fn chaos_plane(
+    lab: &Lab,
+    name: &str,
+    arch: &str,
+    workers: usize,
+    fault: &str,
+    dispatch_timeout_ms: u64,
+) -> ComputePlane {
+    let fwd = lab.manifest.find(arch, 64, 10, "fwd_b320").unwrap();
+    let sel = lab.manifest.find(arch, 64, 10, "select_b320").unwrap();
+    let pool = ScoringPool::new(
+        fwd,
+        sel,
+        None,
+        &PoolConfig {
+            workers,
+            lane_depth: 4,
+            plane: name.to_string(),
+            dispatch_timeout_ms,
+            fault: FaultPlan::parse(fault).unwrap(),
+            ..PoolConfig::default()
+        },
+    )
+    .unwrap();
+    ComputePlane::new(name, arch, Rc::new(pool))
+}
+
+#[test]
+fn worker_panic_mid_run_is_bitwise_transparent() {
+    // The tentpole acceptance gate at session level: kill one of four
+    // workers mid-run and the training curve must stay bitwise-equal
+    // to the fault-free reference — chunk boundaries are pure
+    // functions of (n, select_batch), so the dead lane's chunks
+    // re-score identically on the survivors. (A session candidate
+    // batch is one select-chunk wide, and the planner hands a single
+    // chunk to lane 0 — so worker 0 is the lane that actually sees
+    // step-coordinate faults.)
+    let Some(lab) = lab() else { return };
+    let mut cfg = base_cfg(Method::RhoLoss);
+    cfg.il_arch = "mlp_small".into();
+    cfg.epochs = 2;
+    let bundle = lab.bundle(&cfg.dataset);
+    let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+    let il = lab.il_context(&cfg, &bundle).unwrap();
+
+    let reference = Session::new(&cfg, &target).run(&bundle, Some(&il)).unwrap();
+    assert!(!reference.degraded(), "fault-free run reported recovery");
+
+    let plane = chaos_plane(
+        &lab,
+        "target",
+        &cfg.arch,
+        4,
+        "worker_panic@plane=target,worker=0,step=3",
+        0,
+    );
+    let faulted = Session::new(&cfg, &target)
+        .plane(&plane)
+        .prefetch(3)
+        .speculate(false)
+        .run(&bundle, Some(&il))
+        .unwrap();
+    assert_curves_bitwise(
+        &reference.curve,
+        &faulted.curve,
+        "worker 0 of 4 panicked at step 3",
+    );
+    assert_eq!(faulted.worker_deaths, 1, "injected panic never fired");
+    assert!(faulted.recovered_chunks > 0, "death recorded but nothing re-scored");
+    assert_eq!(faulted.respawns, 0, "respawn=never must not rebuild the lane");
+    assert!(faulted.degraded());
+    // the plane's timings carry the same story, plus per-worker health
+    let t = &faulted.plane_timings[0];
+    assert_eq!(t.worker_deaths, 1);
+    assert!(t.recovered_chunks > 0);
+    assert_eq!(t.worker_health.len(), 4);
+    assert_eq!(t.worker_health.iter().filter(|s| s.as_str() == "dead").count(), 1);
+    assert_eq!(t.worker_health.iter().filter(|s| s.as_str() == "live").count(), 3);
+}
+
+#[test]
+fn checkpoint_after_fault_resumes_bitwise() {
+    // A checkpoint written AFTER a worker death captures recovered —
+    // bitwise-clean — state: resuming from it (here fully inline, the
+    // faulted pool long gone) must continue the uninterrupted
+    // reference curve point for point.
+    let Some(lab) = lab() else { return };
+    let dir = std::env::temp_dir().join(format!("rho-chaos-resume-{}", std::process::id()));
+    let mut cfg = base_cfg(Method::RhoLoss);
+    cfg.il_arch = "mlp_small".into();
+    cfg.epochs = 4;
+    let bundle = lab.bundle(&cfg.dataset);
+    let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+    let il = lab.il_context(&cfg, &bundle).unwrap();
+    let spe = bundle.train.len().div_ceil(cfg.big_batch()) as u64;
+
+    let reference = Session::new(&cfg, &target).run(&bundle, Some(&il)).unwrap();
+
+    // first half: 2 epochs through a pool that loses worker 0 at step
+    // 2, checkpointed at its final step
+    let ckpt = dir.join("chaos.ckpt");
+    let mut half = cfg.clone();
+    half.epochs = 2;
+    let plane = chaos_plane(
+        &lab,
+        "target",
+        &cfg.arch,
+        2,
+        "worker_panic@plane=target,worker=0,step=2",
+        0,
+    );
+    let first = Session::new(&half, &target)
+        .plane(&plane)
+        .checkpoint_every(spe * 2)
+        .checkpoint_path(&ckpt)
+        .run(&bundle, Some(&il))
+        .unwrap();
+    assert_eq!(first.worker_deaths, 1, "injected panic never fired");
+    assert!(first.recovered_chunks > 0);
+    assert!(ckpt.exists(), "checkpoint not written");
+    // the faulted first half already matches the reference prefix
+    for (a, b) in reference.curve.points.iter().zip(&first.curve.points) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(
+            a.accuracy.to_bits(),
+            b.accuracy.to_bits(),
+            "pre-checkpoint curve diverged at step {}",
+            a.step
+        );
+    }
+
+    // resume the 4-epoch run from the post-fault checkpoint
+    let resumed = Session::new(&cfg, &target).resume_from(&ckpt).run(&bundle, Some(&il)).unwrap();
+    let tail: Vec<_> =
+        reference.curve.points.iter().filter(|p| p.step > spe * 2).copied().collect();
+    assert_eq!(tail.len(), resumed.curve.points.len());
+    for (a, b) in tail.iter().zip(&resumed.curve.points) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(
+            a.accuracy.to_bits(),
+            b.accuracy.to_bits(),
+            "post-fault resume diverged at step {} ({} vs {})",
+            a.step,
+            a.accuracy,
+            b.accuracy
+        );
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss at step {}", a.step);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stalled_lane_deadline_is_absorbed_by_rescore() {
+    // Deadline + retry-once, end to end: worker 0 wedges for 2s at
+    // step 2, the 300ms dispatch deadline expires, the engine flushes
+    // the providers and re-scores around the stalled lane — against
+    // the same parameters, so the run completes bitwise-equal to the
+    // fault-free reference instead of dying.
+    let Some(lab) = lab() else { return };
+    let mut cfg = base_cfg(Method::RhoLoss);
+    cfg.il_arch = "mlp_small".into();
+    cfg.epochs = 2;
+    let bundle = lab.bundle(&cfg.dataset);
+    let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+    let il = lab.il_context(&cfg, &bundle).unwrap();
+
+    let reference = Session::new(&cfg, &target).run(&bundle, Some(&il)).unwrap();
+
+    let plane = chaos_plane(
+        &lab,
+        "target",
+        &cfg.arch,
+        2,
+        "stall@plane=target,worker=0,step=2,ms=2000",
+        300,
+    );
+    let faulted = Session::new(&cfg, &target)
+        .plane(&plane)
+        .speculate(false)
+        .run(&bundle, Some(&il))
+        .unwrap();
+    assert_curves_bitwise(&reference.curve, &faulted.curve, "deadline expiry + re-score");
+    let t = &faulted.plane_timings[0];
+    assert_eq!(t.deadline_expiries, 1, "deadline never fired");
+    assert_eq!(t.worker_deaths, 0, "a stall is not a death");
+}
+
+#[test]
+fn speculative_run_survives_worker_death() {
+    // speculate=1 through a worker death: the lookahead batch's chunks
+    // on the dead lane re-score inline bitwise, so the speculative
+    // walk — stale rankings and all — is unchanged from a fault-free
+    // speculative run at the same worker count.
+    let Some(lab) = lab() else { return };
+    let mut cfg = base_cfg(Method::RhoLoss);
+    cfg.il_arch = "mlp_small".into();
+    cfg.epochs = 2;
+    let bundle = lab.bundle(&cfg.dataset);
+    let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+    let il = lab.il_context(&cfg, &bundle).unwrap();
+
+    let healthy_plane = plane_w(&lab, "target", &cfg.arch, 2);
+    let healthy = Session::new(&cfg, &target)
+        .plane(&healthy_plane)
+        .speculate(true)
+        .run(&bundle, Some(&il))
+        .unwrap();
+    assert!(healthy.accepted_stale > 0, "speculation never engaged");
+
+    let plane = chaos_plane(
+        &lab,
+        "target",
+        &cfg.arch,
+        2,
+        "worker_panic@plane=target,worker=0,step=4",
+        0,
+    );
+    let faulted = Session::new(&cfg, &target)
+        .plane(&plane)
+        .speculate(true)
+        .run(&bundle, Some(&il))
+        .unwrap();
+    assert_curves_bitwise(&healthy.curve, &faulted.curve, "speculate=1 through a worker death");
+    assert_eq!(faulted.worker_deaths, 1, "injected panic never fired");
+    assert!(faulted.recovered_chunks > 0);
+    assert_eq!(
+        faulted.accepted_stale, healthy.accepted_stale,
+        "the death changed the speculative walk"
+    );
+    assert!(faulted.degraded());
+}
+
+#[test]
+fn updater_panic_surfaces_typed_error() {
+    // The async IL updater must never die silently: an injected panic
+    // in its train step latches and surfaces at the next sync as a
+    // typed UpdaterError naming the updater — the run fails loudly
+    // instead of training on frozen IL parameters.
+    let Some(lab) = lab() else { return };
+    let mut cfg = base_cfg(Method::RhoLoss);
+    cfg.arch = "mlp_base".into();
+    cfg.il_arch = "mlp_small".into();
+    cfg.online_il = true;
+    cfg.epochs = 2;
+    // the engine builds the updater's plan from config; pools are
+    // unaffected (no worker_panic/stall specs in it)
+    cfg.fault = "updater_panic@step=2".into();
+    let bundle = lab.bundle(&cfg.dataset);
+    let target = lab.runtime(&cfg.arch, &cfg.dataset).unwrap();
+    let il_rt = lab.runtime(&cfg.il_arch, &cfg.dataset).unwrap();
+    let il = lab.il_context(&cfg, &bundle).unwrap();
+    let train_prog = format!("train_b{}", lab.manifest.train_batch);
+    let train_meta = lab.manifest.find(&cfg.il_arch, 64, 10, &train_prog).unwrap().clone();
+    let target_plane = plane_w1(&lab, "target", &cfg.arch);
+    let il_plane = plane_w1(&lab, "il", &cfg.il_arch).with_train_meta(train_meta);
+
+    let err = Session::new(&cfg, &target)
+        .il_runtime(&il_rt)
+        .plane(&target_plane)
+        .plane(&il_plane)
+        .run(&bundle, Some(&il))
+        .err()
+        .expect("a panicking IL updater must fail the run");
+    let ue = err
+        .downcast_ref::<UpdaterError>()
+        .unwrap_or_else(|| panic!("error lost its UpdaterError identity: {err:#}"));
+    assert_eq!(ue.updater, "il", "error names the wrong updater");
+    assert!(
+        ue.detail.contains("injected updater_panic (update 2)"),
+        "unexpected detail: {}",
+        ue.detail
+    );
+    assert!(err.to_string().contains("IL updater `il`"));
 }
