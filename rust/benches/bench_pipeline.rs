@@ -1,8 +1,10 @@
 //! End-to-end engine throughput (steps/sec): the unified streaming
 //! engine across selection methods (uniform / train_loss / rho_loss),
 //! target-plane sizes (workers ∈ {1, 4}), and data sources
-//! (`memory` vs `shards` — the mmap ShardStore data plane), against
-//! each method's inline reference. This regenerates the paper's §3
+//! (`memory` vs `shards` — the mmap ShardStore data plane — vs
+//! `remote` — ranged reads over HTTP through the bounded LRU shard
+//! cache, served by the in-repo range server), against each method's
+//! inline reference. This regenerates the paper's §3
 //! parallelized-selection claim at bench scale — for every method,
 //! not just fused RHO — and is the primary L3 perf target
 //! (EXPERIMENTS.md §Perf).
@@ -10,7 +12,8 @@
 //! Besides the human-readable table, every run (over)writes its
 //! measured numbers to `BENCH_pipeline.json` (one entry per method ×
 //! workers × source, plus per-plane dispatch/queue-wait timings,
-//! supervision health/recovery counters, and the shard-ingest
+//! supervision health/recovery counters, remote cache
+//! hit/miss/eviction counters, and the shard-ingest
 //! bytes/sec); committing the file per PR makes the perf trajectory
 //! machine-trackable. The two-plane rho_loss +
 //! online_il run is additionally swept over `speculate` ∈ {0, 1} and
@@ -72,6 +75,20 @@ fn speculate_axis() -> Value {
     arr([num(0.0), num(1.0)])
 }
 
+/// Settled remote shard-cache counters for the whole bench run.
+/// Always present in BENCH_pipeline.json (zeroed when skipped) so CI
+/// can assert the schema even on artifact-less runners. NOTE: misses
+/// count gather-path stalls only — prefetch-satisfied fetches bypass
+/// the miss counter by design — so "the cache was exercised" is
+/// `hits + misses > 0`, never `misses > 0`.
+fn cache_doc(hits: f64, misses: f64, evictions: f64) -> Value {
+    obj(vec![
+        ("hits", num(hits)),
+        ("misses", num(misses)),
+        ("evictions", num(evictions)),
+    ])
+}
+
 fn main() {
     let smoke = std::env::var("RHO_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
     println!("== bench_pipeline{} ==", if smoke { " (smoke)" } else { "" });
@@ -86,6 +103,7 @@ fn main() {
             ("reason", s("artifact manifest missing")),
             ("speculate", speculate_axis()),
             ("overlap", overlap_doc(0.0, 0.0, 0.0, 0.0, 0.0, 0)),
+            ("cache", cache_doc(0.0, 0.0, 0.0)),
         ]));
         return;
     }
@@ -322,6 +340,64 @@ fn main() {
             ]));
         }
     }
+
+    // --- source=remote axis: the HTTP shard plane --------------------
+    // Serve the same store over loopback with the in-repo range server
+    // and stream the runs through a bounded LRU cache sized at half
+    // the train split, so eviction is live during the walk. Cache
+    // counters are recorded per entry as deltas (the RemoteStore — and
+    // its counters — persists across runs at the same url+cap).
+    let cache = {
+        let server = rho::data::store::TestServer::serve(&store_dir).unwrap();
+        let train_bytes = rho::data::store::StoreManifest::load(&store_dir)
+            .unwrap()
+            .split("train")
+            .unwrap()
+            .bytes();
+        let mut rem = base.clone();
+        rem.source = server.url();
+        rem.cache_bytes = train_bytes / 2;
+        let store = lab.remote(&rem).unwrap();
+        for method in [Method::Uniform, Method::RhoLoss] {
+            for &workers in &shard_workers {
+                let mut cfg = rem.clone();
+                cfg.method = method;
+                cfg.workers = workers;
+                let before = store.cache_stats();
+                let res = lab.run_auto(&cfg).unwrap();
+                let after = store.cache_stats();
+                let sps = res.steps_per_sec();
+                let vs = sync_by_method.get(&method).copied().unwrap_or(0.0);
+                println!(
+                    "{:<12} remote workers={workers}:  {sps:>7.1} steps/s ({:+.0}% vs memory \
+                     inline, cache {}h/{}m/{}e)",
+                    method.name(),
+                    if vs > 0.0 { (sps / vs - 1.0) * 100.0 } else { 0.0 },
+                    after.hits - before.hits,
+                    after.misses - before.misses,
+                    after.evictions - before.evictions
+                );
+                entries.push(obj(vec![
+                    ("method", s(method.name())),
+                    ("source", s("remote")),
+                    ("workers", num(workers as f64)),
+                    ("steps_per_sec", num(sps)),
+                    ("cache_hits", num((after.hits - before.hits) as f64)),
+                    ("cache_misses", num((after.misses - before.misses) as f64)),
+                    ("cache_evictions", num((after.evictions - before.evictions) as f64)),
+                ]));
+            }
+        }
+        let settled = store.cache_stats();
+        println!(
+            "remote cache (cap {:.1} MiB): {} hits, {} misses, {} evictions settled",
+            rem.cache_bytes as f64 / (1024.0 * 1024.0),
+            settled.hits,
+            settled.misses,
+            settled.evictions
+        );
+        cache_doc(settled.hits as f64, settled.misses as f64, settled.evictions as f64)
+    };
     std::fs::remove_dir_all(&store_dir).ok();
 
     // Selection-overhead ratio (paper §3: the selection fwd pass costs
@@ -346,6 +422,7 @@ fn main() {
         ("ingest_rows", num(report.total_rows() as f64)),
         ("speculate", speculate_axis()),
         ("overlap", overlap),
+        ("cache", cache),
         ("entries", Value::Array(entries)),
     ]));
 }

@@ -11,8 +11,10 @@
 //! (or the `--checkpoint-every` / `--resume` CLI flags).
 //!
 //! A `[data]` section configures the data plane: `source`
-//! (`shards://<dir>` streams an ingested shard store; empty = build
-//! the in-memory catalog dataset), `shard_rows` (two-level sampling
+//! (`shards://<dir>` streams an ingested shard store;
+//! `http://host[:port]/dir` streams a store served over HTTP ranged
+//! reads; empty = build the in-memory catalog dataset), `shard_rows`
+//! (two-level sampling
 //! block size for *in-memory* sources — declare the same value a
 //! store was ingested with to make a memory run bitwise-comparable to
 //! its sharded twin; 0 = one global block), and `window` (row-shuffle
@@ -20,6 +22,14 @@
 //! `data.source` / `data.shard_rows` / `data.window` (and bare
 //! `source` / `shard_rows` / `window`) work from the CLI, as does
 //! `rho train --data shards://<dir>`.
+//!
+//! A `[store]` section tunes the shard-fetch plane behind remote (and
+//! windowed-eviction local) sources: `cache_bytes` bounds the local
+//! shard cache (0 = unbounded), `fetch_timeout_ms` is the per-request
+//! HTTP deadline, `fetch_retries` bounds retry attempts on 5xx/connect
+//! errors. Flat spellings: `store.cache_bytes` /
+//! `store.fetch_timeout_ms` / `store.fetch_retries` (bare keys work
+//! too).
 
 use anyhow::{anyhow, bail, Result};
 
@@ -95,8 +105,19 @@ pub struct RunConfig {
     /// — never a silent restart.
     pub resume: String,
     /// Train-data source: "" builds the in-memory catalog dataset;
-    /// `shards://<dir>` streams an ingested shard store.
+    /// `shards://<dir>` streams an ingested shard store;
+    /// `http://host[:port]/dir` streams a remote store over ranged
+    /// reads (never fully downloaded — see `data::store::remote`).
     pub source: String,
+    /// Shard-cache byte bound for remote sources (0 = unbounded).
+    /// Residency never exceeds this + one in-flight shard.
+    pub cache_bytes: u64,
+    /// Per-request deadline (ms) for remote shard fetches.
+    pub fetch_timeout_ms: u64,
+    /// Retry attempts after a retryable fetch failure (5xx / connect
+    /// error / timeout). Checksum mismatches are never retried against
+    /// the same bytes — they surface as hard errors.
+    pub fetch_retries: u32,
     /// Two-level sampling block size for in-memory sources (0 = one
     /// global block). Sharded sources always use their real layout.
     pub shard_rows: usize,
@@ -166,6 +187,9 @@ impl Default for RunConfig {
             checkpoint_path: String::new(),
             resume: String::new(),
             source: String::new(),
+            cache_bytes: 0,
+            fetch_timeout_ms: 5000,
+            fetch_retries: 3,
             shard_rows: 0,
             window: 0,
             planes: Vec::new(),
@@ -222,6 +246,9 @@ impl RunConfig {
             "source" | "data" | "data.source" => self.source = v.into(),
             "shard_rows" | "data.shard_rows" => self.shard_rows = v.parse()?,
             "window" | "data.window" => self.window = v.parse()?,
+            "cache_bytes" | "store.cache_bytes" => self.cache_bytes = v.parse()?,
+            "fetch_timeout_ms" | "store.fetch_timeout_ms" => self.fetch_timeout_ms = v.parse()?,
+            "fetch_retries" | "store.fetch_retries" => self.fetch_retries = v.parse()?,
             "dispatch_timeout_ms" | "pool.dispatch_timeout_ms" => {
                 self.dispatch_timeout_ms = v.parse()?
             }
@@ -306,8 +333,9 @@ impl RunConfig {
                     "run" => "",
                     "planes" => "plane.",
                     "data" => "data.",
+                    "store" => "store.",
                     other => bail!(
-                        "{path:?}:{}: unknown section `[{other}]` (known: [run] [planes] [data])",
+                        "{path:?}:{}: unknown section `[{other}]` (known: [run] [planes] [data] [store])",
                         lineno + 1
                     ),
                 };
@@ -339,8 +367,16 @@ impl RunConfig {
         if !(self.rate_alpha > 0.0 && self.rate_alpha <= 1.0) {
             bail!("rate_alpha must be in (0, 1], got {}", self.rate_alpha);
         }
-        if !self.source.is_empty() && crate::data::store::parse_source(&self.source).is_none() {
-            bail!("source must be `shards://<dir>` or empty, got `{}`", self.source);
+        if !self.source.is_empty()
+            && matches!(
+                crate::data::store::classify_source(&self.source),
+                crate::data::store::SourceSpec::Memory
+            )
+        {
+            bail!(
+                "source must be `shards://<dir>`, `http://host[:port]/dir`, or empty, got `{}`",
+                self.source
+            );
         }
         // Supervision keys: reject malformed values here with named
         // errors — `PoolConfig::from_run` deliberately falls back to
@@ -541,6 +577,49 @@ mod tests {
         c.source = "stores/c10".into();
         let err = c.validate().unwrap_err().to_string();
         assert!(err.contains("shards://"), "{err}");
+        // http sources pass validation (the remote plane)
+        c.source = "http://127.0.0.1:8080/stores/c10".into();
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn store_keys_round_trip() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.cache_bytes, 0, "default cache is unbounded");
+        assert_eq!((c.fetch_timeout_ms, c.fetch_retries), (5000, 3));
+        c.apply_pairs(["cache_bytes=1048576", "fetch_timeout_ms=250", "fetch_retries=5"])
+            .unwrap();
+        assert_eq!(c.cache_bytes, 1_048_576);
+        assert_eq!((c.fetch_timeout_ms, c.fetch_retries), (250, 5));
+        // store.* spellings hit the same fields
+        c.apply_pairs(["store.cache_bytes=0", "store.fetch_timeout_ms=9000", "store.fetch_retries=0"])
+            .unwrap();
+        assert_eq!(c.cache_bytes, 0);
+        assert_eq!((c.fetch_timeout_ms, c.fetch_retries), (9000, 0));
+        c.validate().unwrap();
+        // ...and stay out of the run identity tag
+        let mut tagged = RunConfig::default();
+        tagged.apply_pairs(["cache_bytes=64"]).unwrap();
+        assert_eq!(tagged.tag(), RunConfig::default().tag());
+    }
+
+    #[test]
+    fn store_section_in_config_file() {
+        let dir = std::env::temp_dir().join(format!("rho-cfg-store-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.cfg");
+        std::fs::write(
+            &path,
+            "[data]\nsource = http://localhost:9000/c10\n[store]\ncache_bytes = 4096\nfetch_retries = 2\n[run]\nepochs = 1\n",
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        c.apply_file(&path).unwrap();
+        assert_eq!(c.source, "http://localhost:9000/c10");
+        assert_eq!((c.cache_bytes, c.fetch_retries), (4096, 2));
+        assert_eq!(c.epochs, 1);
+        c.validate().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

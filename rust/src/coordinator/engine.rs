@@ -11,8 +11,10 @@
 //! no deserialization. When the source wants it, a third scoped
 //! thread prefetches the sampler's *next window* off-thread
 //! (`madvise(WILLNEED)` per upcoming shard), so shard faults overlap
-//! scoring instead of stalling the gather. The `run_summary` event
-//! reports the source kind and resident bytes up front.
+//! scoring instead of stalling the gather; for a remote source the
+//! same hints drive windowed shard *fetches* into the bounded local
+//! cache. The `run_summary` event reports the source kind, total vs
+//! resident bytes, and final cache counters at the end of the run.
 //!
 //! Shape (paper §3 "simple parallelized selection", generalized): a
 //! producer thread samples candidate batches without replacement,
@@ -460,13 +462,6 @@ impl<'a> Engine<'a> {
             (false, false) => EventLog::create(std::path::Path::new(&cfg.events))?,
         };
         events.run_start(&cfg.tag(), n, total_steps);
-        events.run_summary(
-            train.source_kind(),
-            train.nbytes(),
-            n,
-            train.dim(),
-            train.classes(),
-        );
         if let (Some(c), Some(path)) = (&resumed, &self.resume) {
             events.resume(c.step, &path.to_string_lossy());
         }
@@ -920,6 +915,18 @@ impl<'a> Engine<'a> {
         if self.speculate {
             events.speculation(accepted_stale, spec_flushes, total_steps - start_step);
         }
+        // Emitted at the end of the run so a windowed remote source
+        // reports its settled residency and final cache counters, not
+        // the empty-cache start state.
+        events.run_summary(
+            train.source_kind(),
+            train.nbytes(),
+            train.resident_bytes(),
+            n,
+            train.dim(),
+            train.classes(),
+            train.cache_stats(),
+        );
         events.run_end(last_acc, sw.elapsed_s());
 
         let il_final_accuracy = match il_driver {

@@ -77,20 +77,38 @@ impl EventLog {
     }
 
     /// Data-substrate summary for the run: where the train rows live
-    /// (`memory` vs `shards`), how many process-resident bytes the
-    /// source owns, and its logical shape — the numbers that make
-    /// memory-vs-shards tradeoffs visible in the event stream.
-    pub fn run_summary(&mut self, source: &str, resident_bytes: u64, n: usize, d: usize, classes: usize) {
-        self.emit(
-            "run_summary",
-            vec![
-                ("source", s(source)),
-                ("resident_bytes", num(resident_bytes as f64)),
-                ("n", num(n as f64)),
-                ("d", num(d as f64)),
-                ("classes", num(classes as f64)),
-            ],
-        );
+    /// (`memory` / `shards` / `remote`), the split between total bytes
+    /// behind the source and process-resident bytes, its logical
+    /// shape, and — when a shard cache sits in the read path — the
+    /// final hit/miss/eviction counters. Emitted at the *end* of the
+    /// run so a windowed remote run's residency and cache numbers are
+    /// the settled post-training values, not the empty-cache start
+    /// state.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_summary(
+        &mut self,
+        source: &str,
+        nbytes: u64,
+        resident_bytes: u64,
+        n: usize,
+        d: usize,
+        classes: usize,
+        cache: Option<crate::data::store::CacheStats>,
+    ) {
+        let mut fields = vec![
+            ("source", s(source)),
+            ("nbytes", num(nbytes as f64)),
+            ("resident_bytes", num(resident_bytes as f64)),
+            ("n", num(n as f64)),
+            ("d", num(d as f64)),
+            ("classes", num(classes as f64)),
+        ];
+        if let Some(cs) = cache {
+            fields.push(("cache_hits", num(cs.hits as f64)));
+            fields.push(("cache_misses", num(cs.misses as f64)));
+            fields.push(("cache_evictions", num(cs.evictions as f64)));
+        }
+        self.emit("run_summary", fields);
     }
 
     pub fn step(&mut self, step: u64, train_loss: f32, picked: &[u32], mean_score: f32) {
@@ -380,15 +398,25 @@ mod tests {
     fn run_summary_reports_source_and_bytes() {
         let path = tmp("rs").join("run.jsonl");
         let mut log = EventLog::create(&path).unwrap();
-        log.run_summary("shards", 4096, 1000, 64, 10);
+        log.run_summary("shards", 8192, 4096, 1000, 64, 10, None);
+        let cache = crate::data::store::CacheStats { hits: 90, misses: 10, evictions: 4 };
+        log.run_summary("remote", 8192, 1024, 1000, 64, 10, Some(cache));
         log.run_end(0.0, 0.0);
         drop(log);
         let text = std::fs::read_to_string(&path).unwrap();
-        let v = json::parse(text.lines().next().unwrap()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        let v = json::parse(lines[0]).unwrap();
         assert_eq!(v.get("kind").unwrap().as_str(), Some("run_summary"));
         assert_eq!(v.get("source").unwrap().as_str(), Some("shards"));
+        assert_eq!(v.get("nbytes").unwrap().as_f64(), Some(8192.0));
         assert_eq!(v.get("resident_bytes").unwrap().as_f64(), Some(4096.0));
         assert_eq!(v.get("n").unwrap().as_f64(), Some(1000.0));
+        assert!(v.get("cache_hits").is_none(), "no cache in the path, no counters");
+        let r = json::parse(lines[1]).unwrap();
+        assert_eq!(r.get("source").unwrap().as_str(), Some("remote"));
+        assert_eq!(r.get("cache_hits").unwrap().as_f64(), Some(90.0));
+        assert_eq!(r.get("cache_misses").unwrap().as_f64(), Some(10.0));
+        assert_eq!(r.get("cache_evictions").unwrap().as_f64(), Some(4.0));
         std::fs::remove_dir_all(tmp("rs")).ok();
     }
 

@@ -74,6 +74,21 @@ impl ShardLayout {
         &self.blocks
     }
 
+    /// Block (shard) index containing global `row`. Linear scan over
+    /// the block table — callers on hot paths (remote prefetch and
+    /// windowed eviction) hold their own cumulative-start tables; this
+    /// is the convenience form for tests and one-off lookups.
+    pub fn block_of(&self, row: u32) -> usize {
+        let mut start = 0u64;
+        for (i, &b) in self.blocks.iter().enumerate() {
+            start += b as u64;
+            if (row as u64) < start {
+                return i;
+            }
+        }
+        self.blocks.len() - 1
+    }
+
     /// Stable fingerprint of the block structure (XXH64 over the LE
     /// block sizes). Serialized into session checkpoints so resuming
     /// under a different layout (changed `shard_rows`, different
@@ -309,6 +324,16 @@ mod tests {
     use super::*;
     use crate::util::prop;
     use std::collections::HashSet;
+
+    #[test]
+    fn block_of_maps_rows_to_their_shard() {
+        let l = ShardLayout::from_blocks(vec![4, 4, 2]);
+        assert_eq!(l.block_of(0), 0);
+        assert_eq!(l.block_of(3), 0);
+        assert_eq!(l.block_of(4), 1);
+        assert_eq!(l.block_of(8), 2);
+        assert_eq!(l.block_of(9), 2);
+    }
 
     #[test]
     fn covers_every_point_each_epoch_prop() {

@@ -1,0 +1,425 @@
+//! The versioned binary store manifest (`store.rman`) — the one file
+//! a remote reader needs before it can plan ranged reads.
+//!
+//! `store.json` stays the human-readable twin, but it names only the
+//! store-level shape (name/d/classes/shard_rows/splits). Serving a
+//! store over HTTP needs the *per-shard* geometry up front — byte
+//! offset, byte length, row count, payload checksum for every shard of
+//! every split — so a remote client can (1) locate the shard a row
+//! lives in, (2) issue one `Range: bytes=` read for exactly that
+//! shard, and (3) verify the payload on arrival without trusting the
+//! wire. That table is this file, rman-style: a fixed magic/version
+//! header, a small store preamble, then one offset/length/rows/checksum
+//! record per shard, and a trailing XXH64 of everything before it so a
+//! truncated or bit-flipped manifest is a hard open-time error.
+//!
+//! ```text
+//! [ magic "RHOMANIF" | version u32 ]
+//! [ d u32 | classes u32 | shard_rows u64 ]
+//! [ name_len u32 | name bytes (UTF-8) ]
+//! [ n_splits u32 ]
+//!   per split:
+//!   [ name_len u32 | name bytes | n_shards u32 ]
+//!     per shard:
+//!     [ offset u64 | length u64 | rows u64 | checksum u64 ]
+//! [ xxh64 of all preceding bytes (seed 0) u64 ]
+//! ```
+//!
+//! All integers little-endian. `offset` is the shard's byte offset in
+//! the split's *virtual concatenation* (shard files laid end to end in
+//! index order) — today every shard is its own file so readers derive
+//! per-file ranges from `length` alone, but the offsets mean a future
+//! single-blob split needs no format bump. `length` is the full shard
+//! file length (64-byte header + payload); `checksum` is the shard
+//! header's payload XXH64, so the manifest's checksum column and the
+//! shard files' own headers cross-check each other.
+//!
+//! `rho ingest` writes `store.rman` next to `store.json`. Stores
+//! ingested before the manifest existed still open:
+//! [`StoreManifest::load`] falls back to [`StoreManifest::from_store_dir`],
+//! which reconstructs the table from `store.json` plus each shard's
+//! 64-byte header (header reads only — no payload rehash; the payload
+//! checksum is still verified at shard-open/arrival time as always).
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use super::format::{shard_file_name, ShardHeader, HEADER_LEN};
+use super::{ShardStore, SPLITS, STORE_MANIFEST};
+use crate::util::hash::xxh64;
+
+pub const MANIFEST_MAGIC: &[u8; 8] = b"RHOMANIF";
+pub const MANIFEST_VERSION: u32 = 1;
+/// File name of the binary manifest at the store root.
+pub const MANIFEST_FILE: &str = "store.rman";
+
+/// One shard's geometry: where its bytes live in the split, how many
+/// rows it carries, and the payload checksum to verify on arrival.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardEntry {
+    /// Byte offset in the split's virtual concatenation.
+    pub offset: u64,
+    /// Full shard-file byte length (header + payload).
+    pub length: u64,
+    pub rows: u64,
+    /// Payload XXH64 (seed 0) — must equal the shard header's own.
+    pub checksum: u64,
+}
+
+/// The shard table of one split.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SplitManifest {
+    pub name: String,
+    pub shards: Vec<ShardEntry>,
+}
+
+impl SplitManifest {
+    pub fn rows(&self) -> u64 {
+        self.shards.iter().map(|s| s.rows).sum()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.length).sum()
+    }
+}
+
+/// The decoded manifest: store shape + per-split shard tables.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StoreManifest {
+    pub name: String,
+    pub d: u32,
+    pub classes: u32,
+    pub shard_rows: u64,
+    pub splits: Vec<SplitManifest>,
+}
+
+impl StoreManifest {
+    pub fn split(&self, name: &str) -> Option<&SplitManifest> {
+        self.splits.iter().find(|s| s.name == name)
+    }
+
+    /// Serialize to the on-disk/wire image (including the trailing
+    /// integrity hash).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + self.splits.iter().map(|s| s.shards.len()).sum::<usize>() * 32);
+        out.extend_from_slice(MANIFEST_MAGIC);
+        out.extend_from_slice(&MANIFEST_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.d.to_le_bytes());
+        out.extend_from_slice(&self.classes.to_le_bytes());
+        out.extend_from_slice(&self.shard_rows.to_le_bytes());
+        push_str(&mut out, &self.name);
+        out.extend_from_slice(&(self.splits.len() as u32).to_le_bytes());
+        for split in &self.splits {
+            push_str(&mut out, &split.name);
+            out.extend_from_slice(&(split.shards.len() as u32).to_le_bytes());
+            for s in &split.shards {
+                out.extend_from_slice(&s.offset.to_le_bytes());
+                out.extend_from_slice(&s.length.to_le_bytes());
+                out.extend_from_slice(&s.rows.to_le_bytes());
+                out.extend_from_slice(&s.checksum.to_le_bytes());
+            }
+        }
+        let h = xxh64(&out, 0);
+        out.extend_from_slice(&h.to_le_bytes());
+        out
+    }
+
+    /// Decode and fully validate a manifest image. `what` names the
+    /// source (file path or URL) in every error.
+    pub fn decode(bytes: &[u8], what: &str) -> Result<StoreManifest> {
+        if bytes.len() < 8 + 4 + 8 {
+            bail!("{what}: {} bytes is too short for a store manifest", bytes.len());
+        }
+        if &bytes[0..8] != MANIFEST_MAGIC {
+            bail!("{what} is not a RHO store manifest (bad magic {:?})", &bytes[0..8]);
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+        if version != MANIFEST_VERSION {
+            bail!(
+                "{what}: manifest format version {version}, this build reads version \
+                 {MANIFEST_VERSION} — re-ingest the store (format versions are never \
+                 silently coerced)"
+            );
+        }
+        let body = &bytes[..bytes.len() - 8];
+        let claimed = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().expect("8 bytes"));
+        if xxh64(body, 0) != claimed {
+            bail!("{what}: manifest checksum mismatch (truncated or corrupted)");
+        }
+        let mut r = Cursor { buf: body, pos: 12, what };
+        let d = r.u32()?;
+        let classes = r.u32()?;
+        let shard_rows = r.u64()?;
+        let name = r.string()?;
+        if d == 0 || classes == 0 || shard_rows == 0 {
+            bail!("{what}: degenerate manifest (d {d}, classes {classes}, shard_rows {shard_rows})");
+        }
+        let n_splits = r.u32()? as usize;
+        let mut splits = Vec::with_capacity(n_splits);
+        for _ in 0..n_splits {
+            let split_name = r.string()?;
+            let n_shards = r.u32()? as usize;
+            let mut shards = Vec::with_capacity(n_shards);
+            let mut expect_offset = 0u64;
+            for i in 0..n_shards {
+                let e = ShardEntry {
+                    offset: r.u64()?,
+                    length: r.u64()?,
+                    rows: r.u64()?,
+                    checksum: r.u64()?,
+                };
+                if e.rows == 0 || e.length <= HEADER_LEN as u64 {
+                    bail!(
+                        "{what}: split `{split_name}` shard {i} is degenerate \
+                         ({} rows, {} bytes)",
+                        e.rows,
+                        e.length
+                    );
+                }
+                if e.offset != expect_offset {
+                    bail!(
+                        "{what}: split `{split_name}` shard {i} offset {} does not follow the \
+                         previous shard (expected {expect_offset})",
+                        e.offset
+                    );
+                }
+                expect_offset += e.length;
+                shards.push(e);
+            }
+            splits.push(SplitManifest { name: split_name, shards });
+        }
+        if r.pos != body.len() {
+            bail!("{what}: {} trailing manifest bytes after the shard table", body.len() - r.pos);
+        }
+        Ok(StoreManifest { name, d, classes, shard_rows, splits })
+    }
+
+    /// Load the manifest of a local store: `store.rman` when present,
+    /// else reconstructed from `store.json` + shard headers (stores
+    /// ingested before the binary manifest existed).
+    pub fn load(root: &Path) -> Result<StoreManifest> {
+        let path = root.join(MANIFEST_FILE);
+        if path.exists() {
+            let bytes = std::fs::read(&path).with_context(|| {
+                format!("reading store manifest {path:?} (store dir {root:?})")
+            })?;
+            return Self::decode(&bytes, &path.display().to_string()).with_context(|| {
+                format!("decoding store manifest {path:?} (store dir {root:?})")
+            });
+        }
+        Self::from_store_dir(root)
+    }
+
+    /// Compatibility reconstruction for stores that predate
+    /// `store.rman`: read `store.json` for the shape, then each shard's
+    /// 64-byte header + file length for the table. Header reads only —
+    /// payload checksums are taken from the headers, not rehashed.
+    pub fn from_store_dir(root: &Path) -> Result<StoreManifest> {
+        let store = ShardStore::open(root)
+            .with_context(|| format!("reconstructing the manifest of pre-manifest store {root:?}"))?;
+        let mut splits = Vec::new();
+        for split in SPLITS {
+            let dir = root.join(split);
+            if !dir.is_dir() {
+                continue;
+            }
+            let mut shards = Vec::new();
+            let mut offset = 0u64;
+            for i in 0.. {
+                let path = dir.join(shard_file_name(i));
+                if !path.exists() {
+                    break;
+                }
+                let mut head = [0u8; HEADER_LEN];
+                let mut f = std::fs::File::open(&path)
+                    .with_context(|| format!("opening shard {path:?} (store dir {root:?})"))?;
+                std::io::Read::read_exact(&mut f, &mut head)
+                    .with_context(|| format!("reading the header of shard {path:?}"))?;
+                let h = ShardHeader::decode(&head, &path)?;
+                let length = f
+                    .metadata()
+                    .with_context(|| format!("statting shard {path:?}"))?
+                    .len();
+                if Some(length) != h.file_len() {
+                    bail!(
+                        "shard {path:?} is {length} bytes but its header implies {:?} \
+                         (truncated or trailing garbage)",
+                        h.file_len()
+                    );
+                }
+                shards.push(ShardEntry { offset, length, rows: h.rows, checksum: h.checksum });
+                offset += length;
+            }
+            if !shards.is_empty() {
+                splits.push(SplitManifest { name: split.to_string(), shards });
+            }
+        }
+        if splits.is_empty() {
+            bail!("store {root:?} has no shards in any split dir ({SPLITS:?})");
+        }
+        Ok(StoreManifest {
+            name: store.name.clone(),
+            d: store.d as u32,
+            classes: store.classes as u32,
+            shard_rows: store.shard_rows as u64,
+            splits,
+        })
+    }
+
+    /// Write `store.rman` at the store root (atomic tmp + rename, like
+    /// every other store artifact).
+    pub fn write(&self, root: &Path) -> Result<()> {
+        let path = root.join(MANIFEST_FILE);
+        let tmp = path.with_extension("rman.tmp");
+        std::fs::write(&tmp, self.encode())
+            .with_context(|| format!("writing store manifest {tmp:?} (store dir {root:?})"))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming store manifest into place at {path:?}"))?;
+        Ok(())
+    }
+
+    /// Resume-identity fingerprint of one split: XXH64 over its shard
+    /// checksums in order — bit-identical to what the local
+    /// `ShardSet::content_fingerprint` computes from the shard files
+    /// themselves, so remote and local opens of the same store agree.
+    pub fn content_fingerprint(&self, split: &str) -> Option<u64> {
+        let s = self.split(split)?;
+        let mut bytes = Vec::with_capacity(s.shards.len() * 8);
+        for e in &s.shards {
+            bytes.extend_from_slice(&e.checksum.to_le_bytes());
+        }
+        Some(xxh64(&bytes, 0x1DEA_CAFE))
+    }
+}
+
+fn push_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked little-endian reader over the manifest body — every
+/// short read is a named error, never a panic.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    what: &'a str,
+}
+
+impl Cursor<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "{}: manifest truncated ({} bytes needed at offset {}, {} available)",
+                self.what,
+                n,
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let b = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(b)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        if n > 4096 {
+            bail!("{}: manifest string length {n} is implausible (corrupt length field)", self.what);
+        }
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| anyhow::anyhow!("{}: manifest string is not UTF-8", self.what))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StoreManifest {
+        StoreManifest {
+            name: "qmnist".into(),
+            d: 64,
+            classes: 10,
+            shard_rows: 640,
+            splits: vec![
+                SplitManifest {
+                    name: "train".into(),
+                    shards: vec![
+                        ShardEntry { offset: 0, length: 1000, rows: 640, checksum: 0xAB },
+                        ShardEntry { offset: 1000, length: 700, rows: 360, checksum: 0xCD },
+                    ],
+                },
+                SplitManifest {
+                    name: "test".into(),
+                    shards: vec![ShardEntry { offset: 0, length: 500, rows: 200, checksum: 0xEF }],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn manifest_round_trips() {
+        let m = sample();
+        let img = m.encode();
+        let back = StoreManifest::decode(&img, "mem").unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.split("train").unwrap().rows(), 1000);
+        assert_eq!(back.split("train").unwrap().bytes(), 1700);
+        assert!(back.split("holdout").is_none());
+    }
+
+    #[test]
+    fn manifest_refuses_corruption_truncation_and_drift() {
+        let img = sample().encode();
+        // bit flip anywhere inside the body trips the trailing hash
+        let mut bad = img.clone();
+        bad[20] ^= 1;
+        let err = StoreManifest::decode(&bad, "m").unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        // truncation
+        assert!(StoreManifest::decode(&img[..img.len() - 3], "m").is_err());
+        assert!(StoreManifest::decode(&img[..10], "m").is_err());
+        // magic / version
+        let mut bad = img.clone();
+        bad[0] = b'X';
+        assert!(StoreManifest::decode(&bad, "m").unwrap_err().to_string().contains("magic"));
+        let mut bad = img.clone();
+        bad[8] = 9;
+        // version check runs before the hash check, so this names the version
+        let err = StoreManifest::decode(&bad, "m").unwrap_err().to_string();
+        assert!(err.contains("version 9"), "{err}");
+    }
+
+    #[test]
+    fn manifest_errors_name_the_source() {
+        let err = StoreManifest::decode(&[0u8; 4], "http://h/store.rman").unwrap_err().to_string();
+        assert!(err.contains("http://h/store.rman"), "{err}");
+    }
+
+    #[test]
+    fn decode_rejects_non_contiguous_offsets() {
+        let mut m = sample();
+        m.splits[0].shards[1].offset = 999;
+        let err = StoreManifest::decode(&m.encode(), "m").unwrap_err().to_string();
+        assert!(err.contains("offset"), "{err}");
+    }
+
+    #[test]
+    fn content_fingerprint_matches_shardset_formula() {
+        let m = sample();
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&0xABu64.to_le_bytes());
+        bytes.extend_from_slice(&0xCDu64.to_le_bytes());
+        assert_eq!(m.content_fingerprint("train"), Some(xxh64(&bytes, 0x1DEA_CAFE)));
+        assert_eq!(m.content_fingerprint("nope"), None);
+    }
+}

@@ -21,15 +21,45 @@
 //! - [`ShardStore`] — a multi-split store root (`train/` streamed,
 //!   `holdout`/`val`/`test` materialized on demand for IL training and
 //!   eval) plus `store.json` identity.
+//! - [`manifest`] — the versioned binary store manifest (`store.rman`):
+//!   one file that names every shard of every split with its byte
+//!   `{offset, length, rows, checksum}`, so a remote client learns the
+//!   whole store's geometry from **one** ranged read. Layout: magic
+//!   `RHOMANIF`, `version:u32`, store identity (`d`, `classes`,
+//!   `shard_rows`, name), then per split a name + shard entry table
+//!   (offsets contiguous per split), and a trailing `xxh64(body, 0)`
+//!   integrity hash. `rho ingest` writes it beside the human-readable
+//!   `store.json` twin; [`StoreManifest::from_store_dir`] synthesizes
+//!   one from any pre-manifest store on open, so old stores keep
+//!   working unchanged.
+//! - [`cache`] — [`ShardCache`], the bounded shard-payload LRU behind
+//!   every non-mmap read path. Invariant: resident bytes never exceed
+//!   `cache_bytes` + the one shard currently in flight; hits, misses,
+//!   and evictions are counted into `run_summary` and the bench doc.
+//! - [`remote`] — [`RemoteShardSet`]/[`RemoteStore`]: `DataSource`
+//!   over HTTP ranged reads (`http://host/dir` sources). Shards are
+//!   fetched on demand with per-request timeouts and bounded retries,
+//!   xxh64-verified on arrival, and parked in the shared [`ShardCache`]
+//!   — so a laptop-sized node trains bitwise-identically against a
+//!   store it never fully downloads. The same verify-and-cache path
+//!   doubles as the windowed-eviction local mode (`DirTransport`).
+//! - [`testserver`] — a threaded in-repo HTTP range server for tests,
+//!   with `FaultPlan`-driven fault knobs (`drop_conn`,
+//!   `corrupt_payload`, `http_503`).
 //!
 //! Gather parity contract: a `ShardSet` ingested from a `Dataset`
 //! gathers bit-identical `(xs, ys)` buffers for any index list — the
 //! store writes the same IEEE bytes it was handed — so a sharded run
-//! is bitwise-reproducible against its in-memory twin (asserted in
+//! is bitwise-reproducible against its in-memory twin, and a
+//! [`RemoteShardSet`] against both (asserted in
 //! `tests/store_integration.rs`).
 
+pub mod cache;
 pub mod format;
+pub mod manifest;
 pub mod reader;
+pub mod remote;
+pub mod testserver;
 pub mod writer;
 
 use std::path::{Path, PathBuf};
@@ -41,7 +71,11 @@ use crate::data::loader::ShardLayout;
 use crate::data::{Dataset, PointMeta};
 use crate::util::json;
 
+pub use cache::{CacheStats, ShardCache};
+pub use manifest::{StoreManifest, MANIFEST_FILE};
 pub use reader::ShardReader;
+pub use remote::{FetchOpts, RemoteShardSet, RemoteStore};
+pub use testserver::TestServer;
 pub use writer::{ingest_bundle, ingest_csv, write_sidecar, IngestReport, ShardWriter};
 
 /// Store manifest file name at the store root.
@@ -54,6 +88,30 @@ pub const SPLITS: &[&str] = &["train", "holdout", "val", "test"];
 /// source (the config's `source=""` means in-memory catalog data).
 pub fn parse_source(source: &str) -> Option<&Path> {
     source.strip_prefix("shards://").map(Path::new)
+}
+
+/// Where a run's training data lives, classified from `data.source`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SourceSpec {
+    /// `""` / a catalog name: dense in-memory [`Dataset`].
+    Memory,
+    /// `shards://<dir>`: a local [`ShardStore`] root.
+    Local(PathBuf),
+    /// `http://host[:port]/dir`: a [`RemoteStore`] served over ranged
+    /// reads.
+    Http(String),
+}
+
+/// Classify a `data.source` string into the three planes a run can be
+/// constructed over.
+pub fn classify_source(source: &str) -> SourceSpec {
+    if let Some(dir) = parse_source(source) {
+        SourceSpec::Local(dir.to_path_buf())
+    } else if source.starts_with("http://") {
+        SourceSpec::Http(source.to_string())
+    } else {
+        SourceSpec::Memory
+    }
 }
 
 /// Uniform view over training data: dense in-memory [`Dataset`] or
@@ -70,11 +128,28 @@ pub trait DataSource: Sync {
     /// Feature dimension.
     fn dim(&self) -> usize;
     fn classes(&self) -> usize;
-    /// `"memory"` or `"shards"` — surfaced in the `run_summary` event.
+    /// `"memory"`, `"shards"`, or `"remote"` — surfaced in the
+    /// `run_summary` event.
     fn source_kind(&self) -> &'static str;
-    /// Process-resident bytes this source owns (mapped pages are the
-    /// kernel's, not ours — a mapped store reports only its tables).
+    /// Total bytes behind this source — everything a full download
+    /// would occupy (shard files on disk or on the remote server,
+    /// plus the source's own tables). Contrast
+    /// [`resident_bytes`](Self::resident_bytes).
     fn nbytes(&self) -> u64;
+    /// Process-resident bytes this source owns *right now*: heap
+    /// buffers, cached shard payloads, and tables. Mapped pages are
+    /// the kernel's, not ours, so a mapped store reports only its
+    /// tables; a windowed remote source reports its cache occupancy.
+    /// Defaults to [`nbytes`](Self::nbytes) — dense sources are fully
+    /// resident by construction.
+    fn resident_bytes(&self) -> u64 {
+        self.nbytes()
+    }
+    /// Shard-cache hit/miss/eviction counters, for sources that fetch
+    /// through a [`ShardCache`]. `None` means "no cache in the path".
+    fn cache_stats(&self) -> Option<CacheStats> {
+        None
+    }
     /// Gather rows into contiguous (features, labels) buffers — the
     /// exact semantics of [`Dataset::gather`], bit for bit.
     fn gather(&self, idx: &[u32]) -> (Vec<f32>, Vec<i32>);
@@ -261,6 +336,12 @@ impl ShardSet {
         })
     }
 
+    /// Bytes of the source-owned side tables (IL values + shard
+    /// starts) — counted into both `nbytes` and `resident_bytes`.
+    fn table_bytes(&self) -> u64 {
+        (self.il.as_ref().map(|t| t.len() * 4).unwrap_or(0) + self.starts.len() * 4) as u64
+    }
+
     /// (shard index, row within shard) of a global row index.
     fn locate(&self, row: u32) -> (usize, usize) {
         debug_assert!((row as usize) < self.rows);
@@ -308,9 +389,11 @@ impl DataSource for ShardSet {
     }
 
     fn nbytes(&self) -> u64 {
-        let tables = (self.il.as_ref().map(|t| t.len() * 4).unwrap_or(0)
-            + self.starts.len() * 4) as u64;
-        tables + self.shards.iter().map(|r| r.resident_bytes()).sum::<u64>()
+        self.table_bytes() + self.shards.iter().map(|r| r.file_bytes()).sum::<u64>()
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.table_bytes() + self.shards.iter().map(|r| r.resident_bytes()).sum::<u64>()
     }
 
     fn gather(&self, idx: &[u32]) -> (Vec<f32>, Vec<i32>) {
@@ -386,9 +469,15 @@ pub struct ShardStore {
 impl ShardStore {
     pub fn open(root: &Path) -> Result<ShardStore> {
         let manifest_path = root.join(STORE_MANIFEST);
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading store manifest {manifest_path:?} (not an ingested shard store?)"))?;
-        let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("{manifest_path:?}: {e}"))?;
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading store manifest {manifest_path:?} (store dir {root:?} — not an \
+                 ingested shard store?)"
+            )
+        })?;
+        let doc = json::parse(&text).map_err(|e| {
+            anyhow::anyhow!("decoding store manifest {manifest_path:?} (store dir {root:?}): {e}")
+        })?;
         let version = doc.get("version").and_then(|v| v.as_usize()).unwrap_or(0);
         if version != 1 {
             bail!("{manifest_path:?}: store version {version}, this build reads version 1");
@@ -465,6 +554,13 @@ mod tests {
         assert_eq!(parse_source("shards://out/c10"), Some(Path::new("out/c10")));
         assert!(parse_source("").is_none());
         assert!(parse_source("cifar10").is_none());
+        assert_eq!(classify_source("shards://out/c10"), SourceSpec::Local("out/c10".into()));
+        assert_eq!(
+            classify_source("http://127.0.0.1:8080/c10"),
+            SourceSpec::Http("http://127.0.0.1:8080/c10".into())
+        );
+        assert_eq!(classify_source(""), SourceSpec::Memory);
+        assert_eq!(classify_source("cifar10"), SourceSpec::Memory);
     }
 
     #[test]
@@ -550,7 +646,12 @@ mod tests {
         let set = ShardSet::open(&dir.join("train")).unwrap();
         assert!(set.has_il());
         assert_eq!(set.il_table().unwrap(), table.as_slice());
-        assert!(set.nbytes() >= 80, "il table counts as resident");
+        assert!(set.resident_bytes() >= 80, "il table counts as resident");
+        assert!(
+            set.nbytes() >= set.resident_bytes(),
+            "total (files + tables) can never undercount residency for a local set"
+        );
+        assert!(set.cache_stats().is_none(), "mmap path has no shard cache");
         // partial sidecar set → hard error
         std::fs::remove_file(format::sidecar_path(&paths[1])).unwrap();
         let err = ShardSet::open(&dir.join("train")).unwrap_err().to_string();

@@ -88,10 +88,10 @@ impl Region {
         Ok(Region::Heap { words, len })
     }
 
-    fn open(f: File, len: usize) -> Result<Region> {
+    fn open(f: File, len: usize, no_mmap: bool) -> Result<Region> {
         #[cfg(unix)]
         {
-            if std::env::var_os("RHO_STORE_NO_MMAP").is_none() {
+            if !no_mmap {
                 use std::os::unix::io::AsRawFd;
                 let ptr = unsafe {
                     mm::mmap(
@@ -109,6 +109,8 @@ impl Region {
                 // fall through to the heap read on any mmap failure
             }
         }
+        #[cfg(not(unix))]
+        let _ = no_mmap;
         Region::heap(f, len)
     }
 
@@ -157,14 +159,23 @@ pub struct ShardReader {
 impl ShardReader {
     /// Open + fully validate one shard file. Refuses wrong magic,
     /// version drift, dimension/length inconsistencies, and payload
-    /// checksum mismatches.
+    /// checksum mismatches. The `RHO_STORE_NO_MMAP` test/ops hook is
+    /// read once, here at the call site — the actual mapping decision
+    /// is an explicit parameter ([`Self::open_with`]) so tests
+    /// exercise both paths without racing on process-global env state.
     pub fn open(path: &Path) -> Result<ShardReader> {
+        Self::open_with(path, std::env::var_os("RHO_STORE_NO_MMAP").is_some())
+    }
+
+    /// [`Self::open`] with the mapping decision made explicit:
+    /// `no_mmap = true` forces the 8-byte-aligned heap read.
+    pub fn open_with(path: &Path, no_mmap: bool) -> Result<ShardReader> {
         let f = File::open(path).with_context(|| format!("opening shard {path:?}"))?;
         let file_len = f.metadata()?.len() as usize;
         if file_len < HEADER_LEN {
             bail!("{path:?}: {file_len} bytes is too short to be a shard");
         }
-        let region = Region::open(f, file_len)?;
+        let region = Region::open(f, file_len, no_mmap)?;
         let bytes = region.bytes();
         let header = ShardHeader::decode(bytes, path)?;
         match header.file_len() {
@@ -246,6 +257,13 @@ impl ShardReader {
         unpack_meta(self.meta_bytes()[i])
     }
 
+    /// On-disk byte length of this shard's file (header + payload) —
+    /// the store-side total a source reports as `nbytes`, independent
+    /// of whether the bytes are mapped or heap-resident.
+    pub fn file_bytes(&self) -> u64 {
+        (HEADER_LEN + self.rows * self.d * 4 + self.rows * 4 + self.rows) as u64
+    }
+
     /// Heap bytes this reader actually owns (0 when mapped — mapped
     /// pages live in the kernel page cache, not the process heap).
     pub fn resident_bytes(&self) -> u64 {
@@ -300,18 +318,33 @@ mod tests {
 
     #[test]
     fn heap_fallback_reads_identically() {
+        // No env mutation: the mapping decision is an explicit
+        // parameter, so this runs safely under the parallel runner.
         let path = tmp("heap.rsd");
         std::fs::write(&path, sample_image()).unwrap();
-        std::env::set_var("RHO_STORE_NO_MMAP", "1");
-        let heap = ShardReader::open(&path).unwrap();
-        std::env::remove_var("RHO_STORE_NO_MMAP");
-        let mapped = ShardReader::open(&path).unwrap();
+        let heap = ShardReader::open_with(&path, true).unwrap();
+        let mapped = ShardReader::open_with(&path, false).unwrap();
         assert!(!heap.is_mmap());
         assert!(heap.resident_bytes() > 0);
+        assert_eq!(heap.file_bytes(), mapped.file_bytes());
+        assert_eq!(heap.file_bytes(), sample_image().len() as u64);
         assert_eq!(heap.xs(), mapped.xs());
         assert_eq!(heap.ys(), mapped.ys());
         assert_eq!(heap.meta_bytes(), mapped.meta_bytes());
         mapped.advise_willneed(); // exercised for coverage; no observable effect
+    }
+
+    #[test]
+    fn env_hook_still_routes_no_mmap() {
+        // The one test that must touch process env: serialized behind
+        // the shared env lock (`util::env_lock`).
+        let _guard = crate::util::env_lock();
+        let path = tmp("envhook.rsd");
+        std::fs::write(&path, sample_image()).unwrap();
+        std::env::set_var("RHO_STORE_NO_MMAP", "1");
+        let heap = ShardReader::open(&path);
+        std::env::remove_var("RHO_STORE_NO_MMAP");
+        assert!(!heap.unwrap().is_mmap());
     }
 
     #[test]

@@ -1,0 +1,778 @@
+//! The remote shard plane: train against a store you never fully
+//! download.
+//!
+//! [`RemoteShardSet`] is a [`DataSource`] whose shards live behind an
+//! HTTP server (`data.source = http://host:port/dir`). It plans from
+//! the binary [`StoreManifest`](super::manifest::StoreManifest)
+//! (fetched once at open), pulls each shard with one HTTP/1.1 *ranged
+//! read* (`Range: bytes=`) the first time a row in it is gathered or
+//! prefetched, verifies the payload XXH64 on arrival (a mismatch is a
+//! hard error — wire bytes are never trusted), and parks it in the
+//! bounded [`ShardCache`] where LRU eviction follows the sampler's
+//! shuffle window. The engine's existing prefetcher thread calls
+//! [`DataSource::prefetch`] with the sampler's upcoming window, which
+//! here means *fetch the next window's shards off-thread before
+//! `gather` needs them* — the same hook that `madvise`s a local mmap
+//! store warms the cache for a remote one.
+//!
+//! The HTTP client is std-only (`TcpStream`; the vendored crate set
+//! has no HTTP client): per-request connect/read/write timeouts,
+//! `Connection: close` (one connection per shard fetch — shards are
+//! hundreds of KB, connection reuse is not the bottleneck), bounded
+//! retry with exponential backoff on connect errors, timeouts, and
+//! 5xx responses. 4xx responses are fatal (404 is a distinct
+//! `NotFound`, used to probe optional IL sidecars).
+//!
+//! Determinism: the manifest carries the same per-shard rows and
+//! payload checksums the local `ShardSet` derives from the files, so
+//! `layout()` and `content_fingerprint()` are bit-identical to the
+//! local open — the same seed/config trains bitwise-identically over
+//! memory, local shards, or remote shards, and a mid-shard checkpoint
+//! written against one source resumes against another.
+//!
+//! The same machinery doubles as the *local eviction mode*: a
+//! [`DirTransport`] serves shard bytes from a local split dir through
+//! the identical verify-and-cache path, so an mmap-less host (or one
+//! whose RAM is smaller than the store) streams a local store under
+//! the same `store.cache_bytes` bound instead of holding every
+//! heap-fallback shard resident.
+//!
+//! Failure contract: `gather`/`point_meta` are infallible by trait, so
+//! an *unrecoverable* fetch failure (retries exhausted, checksum
+//! mismatch, manifest disagreement) panics with a message naming the
+//! shard and source. The panic propagates through the engine's scoped
+//! producer join ("candidate producer panicked") — a remote store that
+//! disappears mid-run ends the run loudly, never silently corrupts it.
+
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::cache::{CacheStats, ShardCache, ShardPayload};
+use super::format::{self, shard_file_name};
+use super::manifest::{ShardEntry, SplitManifest, StoreManifest, MANIFEST_FILE};
+use super::DataSource;
+use crate::data::loader::ShardLayout;
+use crate::data::{Dataset, PointMeta};
+
+/// Fetch policy for one remote store (from the `store.*` config keys).
+#[derive(Clone, Copy, Debug)]
+pub struct FetchOpts {
+    /// Per-request connect/read/write timeout (0 = wait forever).
+    pub timeout_ms: u64,
+    /// Retries after the first attempt on retryable failures
+    /// (connect/timeout/5xx), with 50ms·2^attempt backoff.
+    pub retries: u32,
+}
+
+impl Default for FetchOpts {
+    fn default() -> Self {
+        FetchOpts { timeout_ms: 5000, retries: 3 }
+    }
+}
+
+/// `http://host[:port]/dir` → (host, port, "/dir"). Only plain HTTP —
+/// this is a data plane for stores you control, not the open web.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HttpTarget {
+    pub host: String,
+    pub port: u16,
+    /// Normalized base path ("" or "/dir", no trailing slash).
+    pub base: String,
+}
+
+/// Parse an `http://` source URL. `None` when the string is not an
+/// HTTP source (it may still be `shards://` or a memory catalog name).
+pub fn parse_http_source(source: &str) -> Option<HttpTarget> {
+    let rest = source.strip_prefix("http://")?;
+    let (authority, path) = match rest.find('/') {
+        Some(i) => (&rest[..i], rest[i..].trim_end_matches('/')),
+        None => (rest, ""),
+    };
+    let (host, port) = match authority.rsplit_once(':') {
+        Some((h, p)) => (h, p.parse::<u16>().ok()?),
+        None => (authority, 80),
+    };
+    if host.is_empty() {
+        return None;
+    }
+    Some(HttpTarget { host: host.to_string(), port, base: path.to_string() })
+}
+
+/// Why a fetch failed — drives the retry/probe logic.
+#[derive(Debug)]
+pub enum FetchError {
+    /// 404 — the resource does not exist (used to probe sidecars).
+    NotFound(String),
+    /// Non-retryable failure (4xx other than 404, malformed response).
+    Fatal(String),
+    /// Retries exhausted on retryable failures (connect/timeout/5xx).
+    Exhausted(String),
+}
+
+impl std::fmt::Display for FetchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FetchError::NotFound(m) => write!(f, "not found: {m}"),
+            FetchError::Fatal(m) => write!(f, "{m}"),
+            FetchError::Exhausted(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for FetchError {}
+
+/// A minimal std-only HTTP/1.1 GET client bound to one host:port.
+/// Cheap to clone (no pooled connections — every request is
+/// `Connection: close`).
+#[derive(Clone, Debug)]
+pub struct HttpClient {
+    target: HttpTarget,
+    opts: FetchOpts,
+}
+
+impl HttpClient {
+    pub fn new(target: HttpTarget, opts: FetchOpts) -> HttpClient {
+        HttpClient { target, opts }
+    }
+
+    /// Absolute URL of a path under the target base (for errors/docs).
+    pub fn url(&self, path: &str) -> String {
+        format!("http://{}:{}{}{path}", self.target.host, self.target.port, self.target.base)
+    }
+
+    /// GET `base + path`, optionally with `Range: bytes=start-end`
+    /// (inclusive). Retries per [`FetchOpts`]; returns the body.
+    pub fn fetch(&self, path: &str, range: Option<(u64, u64)>) -> Result<Vec<u8>, FetchError> {
+        let mut last = String::new();
+        for attempt in 0..=self.opts.retries {
+            if attempt > 0 {
+                std::thread::sleep(Duration::from_millis(50u64 << (attempt - 1).min(6)));
+            }
+            match self.attempt(path, range) {
+                Ok((status, body)) => match status {
+                    200 | 206 => return Ok(body),
+                    404 => return Err(FetchError::NotFound(self.url(path))),
+                    s if s >= 500 => {
+                        last = format!("HTTP {s} from {}", self.url(path));
+                    }
+                    s => {
+                        return Err(FetchError::Fatal(format!(
+                            "HTTP {s} from {} (not retryable)",
+                            self.url(path)
+                        )))
+                    }
+                },
+                Err(e) => {
+                    last = format!("{} fetching {}", e, self.url(path));
+                }
+            }
+        }
+        Err(FetchError::Exhausted(format!(
+            "{last} (after {} attempts)",
+            self.opts.retries + 1
+        )))
+    }
+
+    /// One request/response cycle. Any `io::Error` (connect, timeout,
+    /// short read) is retryable; the caller classifies status codes.
+    fn attempt(&self, path: &str, range: Option<(u64, u64)>) -> std::io::Result<(u16, Vec<u8>)> {
+        let timeout = (self.opts.timeout_ms > 0)
+            .then(|| Duration::from_millis(self.opts.timeout_ms));
+        let addr = (self.target.host.as_str(), self.target.port)
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| {
+                std::io::Error::new(std::io::ErrorKind::NotFound, "host resolved to no address")
+            })?;
+        let mut stream = match timeout {
+            Some(t) => TcpStream::connect_timeout(&addr, t)?,
+            None => TcpStream::connect(addr)?,
+        };
+        stream.set_read_timeout(timeout)?;
+        stream.set_write_timeout(timeout)?;
+        let range_header = match range {
+            Some((a, b)) => format!("Range: bytes={a}-{b}\r\n"),
+            None => String::new(),
+        };
+        let req = format!(
+            "GET {}{path} HTTP/1.1\r\nHost: {}\r\n{range_header}Connection: close\r\n\r\n",
+            self.target.base, self.target.host
+        );
+        stream.write_all(req.as_bytes())?;
+        read_response(&mut stream)
+    }
+}
+
+/// Read one HTTP/1.1 response: status code + body (Content-Length
+/// exact when present, else read-to-EOF under `Connection: close`).
+fn read_response(stream: &mut TcpStream) -> std::io::Result<(u16, Vec<u8>)> {
+    let bad = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
+    // Accumulate until the header terminator; 64 KiB of headers is
+    // already implausible for a shard server.
+    let mut buf = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    let header_end = loop {
+        if let Some(i) = find_subslice(&buf, b"\r\n\r\n") {
+            break i + 4;
+        }
+        if buf.len() > 64 * 1024 {
+            return Err(bad("response headers exceed 64 KiB"));
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed before response headers completed",
+            ));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..header_end])
+        .map_err(|_| bad("response headers are not UTF-8"))?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad(&format!("malformed status line `{status_line}`")))?;
+    let content_length: Option<usize> = lines
+        .filter_map(|l| l.split_once(':'))
+        .find(|(k, _)| k.trim().eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.trim().parse().ok());
+    let mut body = buf[header_end..].to_vec();
+    match content_length {
+        Some(n) => {
+            if body.len() > n {
+                return Err(bad("body exceeds Content-Length"));
+            }
+            let start = body.len();
+            body.resize(n, 0);
+            stream.read_exact(&mut body[start..])?;
+        }
+        None => {
+            stream.read_to_end(&mut body)?;
+        }
+    }
+    Ok((status, body))
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Where a split's shard bytes come from: an HTTP range server or a
+/// local directory (the eviction mode for mmap-less / RAM-bounded
+/// hosts). Either way the bytes land in [`ShardPayload::from_bytes`],
+/// which verifies the checksum on every arrival.
+pub trait ShardTransport: Send + Sync {
+    /// Full file image of shard `i`.
+    fn fetch_shard(&self, i: usize, entry: &ShardEntry) -> Result<Vec<u8>>;
+    /// An auxiliary split file (e.g. an IL sidecar); `Ok(None)` when it
+    /// does not exist.
+    fn fetch_aux(&self, name: &str) -> Result<Option<Vec<u8>>>;
+    /// Human-readable location of shard `i` for error messages.
+    fn describe(&self, i: usize) -> String;
+    /// `run_summary` source kind for a set over this transport.
+    fn kind(&self) -> &'static str;
+}
+
+/// Ranged HTTP reads against `base/split/shard-NNNNN.rsd`.
+pub struct HttpTransport {
+    pub client: HttpClient,
+    /// Path under the client base, e.g. `/train`.
+    pub split_path: String,
+}
+
+impl ShardTransport for HttpTransport {
+    fn fetch_shard(&self, i: usize, entry: &ShardEntry) -> Result<Vec<u8>> {
+        let path = format!("{}/{}", self.split_path, shard_file_name(i));
+        // Every shard is its own file today, so the range is the whole
+        // file — but going through `Range:` keeps the server honest
+        // and is exactly the request shape a single-blob split needs.
+        let body = self
+            .client
+            .fetch(&path, Some((0, entry.length - 1)))
+            .with_context(|| format!("fetching shard {}", self.describe(i)))?;
+        if body.len() as u64 != entry.length {
+            bail!(
+                "{}: server returned {} bytes, manifest says {} (range request ignored or \
+                 store changed under us)",
+                self.describe(i),
+                body.len(),
+                entry.length
+            );
+        }
+        Ok(body)
+    }
+
+    fn fetch_aux(&self, name: &str) -> Result<Option<Vec<u8>>> {
+        match self.client.fetch(&format!("{}/{name}", self.split_path), None) {
+            Ok(b) => Ok(Some(b)),
+            Err(FetchError::NotFound(_)) => Ok(None),
+            Err(e) => Err(e).with_context(|| format!("fetching {name} over HTTP")),
+        }
+    }
+
+    fn describe(&self, i: usize) -> String {
+        self.client.url(&format!("{}/{}", self.split_path, shard_file_name(i)))
+    }
+
+    fn kind(&self) -> &'static str {
+        "remote"
+    }
+}
+
+/// Plain file reads from a local split dir — the local eviction mode.
+pub struct DirTransport {
+    pub dir: PathBuf,
+}
+
+impl ShardTransport for DirTransport {
+    fn fetch_shard(&self, i: usize, entry: &ShardEntry) -> Result<Vec<u8>> {
+        let path = self.dir.join(shard_file_name(i));
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading shard {path:?} (split dir {:?})", self.dir))?;
+        if bytes.len() as u64 != entry.length {
+            bail!(
+                "{path:?} is {} bytes, manifest says {} (store changed after the manifest \
+                 was written?)",
+                bytes.len(),
+                entry.length
+            );
+        }
+        Ok(bytes)
+    }
+
+    fn fetch_aux(&self, name: &str) -> Result<Option<Vec<u8>>> {
+        let path = self.dir.join(name);
+        if !path.exists() {
+            return Ok(None);
+        }
+        Ok(Some(std::fs::read(&path).with_context(|| format!("reading {path:?}"))?))
+    }
+
+    fn describe(&self, i: usize) -> String {
+        self.dir.join(shard_file_name(i)).display().to_string()
+    }
+
+    fn kind(&self) -> &'static str {
+        "shards"
+    }
+}
+
+/// One split served through a [`ShardTransport`] and the bounded
+/// [`ShardCache`] — the streaming counterpart of [`ShardSet`].
+///
+/// [`ShardSet`]: super::ShardSet
+pub struct RemoteShardSet {
+    transport: Box<dyn ShardTransport>,
+    entries: Vec<ShardEntry>,
+    d: usize,
+    classes: usize,
+    rows: usize,
+    /// Global row index where each shard starts (ascending).
+    starts: Vec<u32>,
+    /// Concatenated IL sidecar values, when every shard has one.
+    il: Option<Vec<f32>>,
+    cache: Arc<ShardCache>,
+    /// Σ manifest shard lengths — the store-side size of this split.
+    total_bytes: u64,
+}
+
+impl RemoteShardSet {
+    /// Assemble a split over any transport. Probes IL sidecars: a full
+    /// set loads as the precomputed-IL table, a partial set is refused
+    /// (interrupted `score-il`), none is fine.
+    pub fn open(
+        transport: Box<dyn ShardTransport>,
+        split: &SplitManifest,
+        d: usize,
+        classes: usize,
+        cache: Arc<ShardCache>,
+    ) -> Result<RemoteShardSet> {
+        if split.shards.is_empty() {
+            bail!("split `{}` has no shards in the manifest", split.name);
+        }
+        let mut starts = Vec::with_capacity(split.shards.len());
+        let mut rows = 0usize;
+        for e in &split.shards {
+            starts.push(rows as u32);
+            rows += e.rows as usize;
+        }
+        let total_bytes = split.bytes();
+        let mut il: Option<Vec<f32>> = None;
+        // One probe decides; after that, a hole in the set is an error.
+        let sidecar = |i: usize| {
+            format::sidecar_path(Path::new(&shard_file_name(i)))
+                .display()
+                .to_string()
+        };
+        if let Some(first) = transport.fetch_aux(&sidecar(0))? {
+            let mut table = Vec::with_capacity(rows);
+            let mut adopt = |bytes: Vec<u8>, i: usize, want: usize| -> Result<()> {
+                let name = sidecar(i);
+                let vals = format::decode_sidecar(&bytes, Path::new(&name))?;
+                if vals.len() != want {
+                    bail!("{name}: carries {} IL values for a {want}-row shard", vals.len());
+                }
+                table.extend_from_slice(&vals);
+                Ok(())
+            };
+            adopt(first, 0, split.shards[0].rows as usize)?;
+            for (i, e) in split.shards.iter().enumerate().skip(1) {
+                match transport.fetch_aux(&sidecar(i))? {
+                    Some(bytes) => adopt(bytes, i, e.rows as usize)?,
+                    None => bail!(
+                        "split `{}` has an IL sidecar for shard 0 but not shard {i} — \
+                         interrupted `rho score-il`? re-run it to complete the set",
+                        split.name
+                    ),
+                }
+            }
+            il = Some(table);
+        }
+        Ok(RemoteShardSet {
+            transport,
+            entries: split.shards.clone(),
+            d,
+            classes,
+            rows,
+            starts,
+            il,
+            cache,
+            total_bytes,
+        })
+    }
+
+    /// Open a local split dir in eviction mode: stream shards through
+    /// the bounded cache instead of mapping/holding them all.
+    pub fn over_dir(
+        root: &Path,
+        manifest: &StoreManifest,
+        split: &str,
+        cache: Arc<ShardCache>,
+    ) -> Result<RemoteShardSet> {
+        let sm = manifest
+            .split(split)
+            .ok_or_else(|| anyhow::anyhow!("store {root:?} has no `{split}` split in its manifest"))?;
+        RemoteShardSet::open(
+            Box::new(DirTransport { dir: root.join(split) }),
+            sm,
+            manifest.d as usize,
+            manifest.classes as usize,
+            cache,
+        )
+    }
+
+    /// (shard index, row within shard) of a global row index.
+    fn locate(&self, row: u32) -> (usize, usize) {
+        debug_assert!((row as usize) < self.rows);
+        let s = self.starts.partition_point(|&start| start <= row) - 1;
+        (s, (row - self.starts[s]) as usize)
+    }
+
+    /// Cache lookup or transport fetch+verify+insert. Fetch failures
+    /// here are `Result`s; [`DataSource::gather`] converts them to the
+    /// documented panic.
+    fn shard(&self, s: usize) -> Result<Arc<ShardPayload>> {
+        if let Some(p) = self.cache.get(s as u32) {
+            return Ok(p);
+        }
+        self.fetch_into_cache(s)
+    }
+
+    fn fetch_into_cache(&self, s: usize) -> Result<Arc<ShardPayload>> {
+        let entry = &self.entries[s];
+        let bytes = self.transport.fetch_shard(s, entry)?;
+        let what = self.transport.describe(s);
+        // from_bytes verifies header + payload XXH64 (the on-arrival
+        // check); then the manifest must agree — a served store whose
+        // shards differ from its manifest is refused, not trained on.
+        let payload = ShardPayload::from_bytes(&bytes, &what)?;
+        if payload.rows as u64 != entry.rows || payload.checksum != entry.checksum {
+            bail!(
+                "{what}: shard carries {} rows / checksum {:#018x} but the manifest says \
+                 {} rows / {:#018x} — store and manifest disagree",
+                payload.rows,
+                payload.checksum,
+                entry.rows,
+                entry.checksum
+            );
+        }
+        if payload.d != self.d || payload.classes != self.classes {
+            bail!(
+                "{what}: shard is ({}, {} classes) but the store manifest says ({}, {} classes)",
+                payload.d,
+                payload.classes,
+                self.d,
+                self.classes
+            );
+        }
+        Ok(self.cache.insert(s as u32, payload))
+    }
+
+    fn shard_or_die(&self, s: usize) -> Arc<ShardPayload> {
+        match self.shard(s) {
+            Ok(p) => p,
+            // gather/point_meta are infallible by trait; an
+            // unrecoverable fetch ends the run loudly (the engine's
+            // producer join reports the panic).
+            Err(e) => panic!(
+                "unrecoverable shard fetch for {}: {e:#}",
+                self.transport.describe(s)
+            ),
+        }
+    }
+
+    /// Materialize the whole split as a dense [`Dataset`] (eval splits
+    /// are small by construction; streamed shard by shard).
+    pub fn to_dataset(&self) -> Result<Dataset> {
+        let mut ds = Dataset::empty(self.d, self.classes);
+        for s in 0..self.entries.len() {
+            let p = self.shard(s)?;
+            for r in 0..p.rows {
+                ds.push(p.x(r), p.y(r), format::unpack_meta(p.meta(r)));
+            }
+        }
+        Ok(ds)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+impl DataSource for RemoteShardSet {
+    fn len(&self) -> usize {
+        self.rows
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn source_kind(&self) -> &'static str {
+        self.transport.kind()
+    }
+
+    fn nbytes(&self) -> u64 {
+        let tables = (self.il.as_ref().map(|t| t.len() * 4).unwrap_or(0)
+            + self.starts.len() * 4) as u64;
+        tables + self.total_bytes
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        let tables = (self.il.as_ref().map(|t| t.len() * 4).unwrap_or(0)
+            + self.starts.len() * 4) as u64;
+        tables + self.cache.bytes()
+    }
+
+    fn cache_stats(&self) -> Option<CacheStats> {
+        Some(self.cache.stats())
+    }
+
+    fn gather(&self, idx: &[u32]) -> (Vec<f32>, Vec<i32>) {
+        let mut xs = Vec::with_capacity(idx.len() * self.d);
+        let mut ys = Vec::with_capacity(idx.len());
+        // Memoize the last shard: within a window, consecutive rows
+        // cluster by shard, so most lookups skip the cache lock.
+        let mut held: Option<(usize, Arc<ShardPayload>)> = None;
+        for &i in idx {
+            let (s, r) = self.locate(i);
+            if held.as_ref().map(|(hs, _)| *hs) != Some(s) {
+                held = Some((s, self.shard_or_die(s)));
+            }
+            let (_, p) = held.as_ref().expect("set above");
+            xs.extend_from_slice(p.x(r));
+            ys.push(p.y(r) as i32);
+        }
+        (xs, ys)
+    }
+
+    fn point_meta(&self, i: u32) -> PointMeta {
+        let (s, r) = self.locate(i);
+        format::unpack_meta(self.shard_or_die(s).meta(r))
+    }
+
+    fn layout(&self) -> Option<ShardLayout> {
+        Some(ShardLayout::from_blocks(self.entries.iter().map(|e| e.rows as u32).collect()))
+    }
+
+    fn wants_prefetch(&self) -> bool {
+        true
+    }
+
+    /// The windowed-eviction hook: mark the upcoming window's shards
+    /// hot (so LRU pressure lands on shards the shuffle already left),
+    /// then fetch any that are missing — off-thread, on the engine's
+    /// prefetcher, ahead of the gather that needs them. Best-effort: a
+    /// failed prefetch is dropped; the gather path retries and owns
+    /// the hard error.
+    fn prefetch(&self, upcoming: &[u32]) {
+        let mut wanted = vec![false; self.entries.len()];
+        for &i in upcoming {
+            wanted[self.locate(i).0] = true;
+        }
+        let keys: Vec<u32> =
+            (0..wanted.len() as u32).filter(|&s| wanted[s as usize]).collect();
+        self.cache.touch(&keys);
+        for &s in &keys {
+            if !self.cache.contains(s) {
+                let _ = self.fetch_into_cache(s as usize);
+            }
+        }
+    }
+
+    fn il_table(&self) -> Option<&[f32]> {
+        self.il.as_deref()
+    }
+
+    fn content_fingerprint(&self) -> Option<u64> {
+        let mut bytes = Vec::with_capacity(self.entries.len() * 8);
+        for e in &self.entries {
+            bytes.extend_from_slice(&e.checksum.to_le_bytes());
+        }
+        Some(crate::util::hash::xxh64(&bytes, 0x1DEA_CAFE))
+    }
+}
+
+/// A remote store root: manifest + streamed `train/` + on-demand
+/// materialized eval splits — the HTTP counterpart of
+/// [`ShardStore`](super::ShardStore).
+pub struct RemoteStore {
+    pub url: String,
+    pub name: String,
+    pub d: usize,
+    pub classes: usize,
+    pub shard_rows: usize,
+    pub manifest: StoreManifest,
+    pub train: RemoteShardSet,
+    client: HttpClient,
+    cache: Arc<ShardCache>,
+}
+
+impl RemoteStore {
+    /// Open a store at `http://host:port/dir`: one GET for
+    /// `store.rman`, then assemble the streamed train split over a
+    /// cache bounded at `cache_bytes` (0 = unbounded).
+    pub fn open(url: &str, opts: FetchOpts, cache_bytes: u64) -> Result<RemoteStore> {
+        let target = parse_http_source(url)
+            .ok_or_else(|| anyhow::anyhow!("`{url}` is not an http://host[:port]/dir source"))?;
+        let client = HttpClient::new(target, opts);
+        let manifest_url = client.url(&format!("/{MANIFEST_FILE}"));
+        let bytes = client
+            .fetch(&format!("/{MANIFEST_FILE}"), None)
+            .map_err(|e| anyhow::anyhow!("{e}"))
+            .with_context(|| {
+                format!("fetching the store manifest {manifest_url} (is the store served \
+                         and ingested with a binary manifest?)")
+            })?;
+        let manifest = StoreManifest::decode(&bytes, &manifest_url)?;
+        let cache = Arc::new(ShardCache::new(cache_bytes));
+        let train_split = manifest
+            .split("train")
+            .ok_or_else(|| anyhow::anyhow!("{manifest_url}: store has no `train` split"))?;
+        let train = RemoteShardSet::open(
+            Box::new(HttpTransport { client: client.clone(), split_path: "/train".into() }),
+            train_split,
+            manifest.d as usize,
+            manifest.classes as usize,
+            Arc::clone(&cache),
+        )?;
+        Ok(RemoteStore {
+            url: url.trim_end_matches('/').to_string(),
+            name: manifest.name.clone(),
+            d: manifest.d as usize,
+            classes: manifest.classes as usize,
+            shard_rows: manifest.shard_rows as usize,
+            manifest,
+            train,
+            client,
+            cache,
+        })
+    }
+
+    pub fn has_split(&self, split: &str) -> bool {
+        self.manifest.split(split).is_some()
+    }
+
+    /// Fetch + materialize a non-train split as a dense dataset (eval
+    /// splits are small; they bypass the bounded train cache).
+    pub fn materialize(&self, split: &str) -> Result<Dataset> {
+        let sm = self
+            .manifest
+            .split(split)
+            .ok_or_else(|| anyhow::anyhow!("{} has no `{split}` split", self.url))?;
+        let set = RemoteShardSet::open(
+            Box::new(HttpTransport {
+                client: self.client.clone(),
+                split_path: format!("/{split}"),
+            }),
+            sm,
+            self.d,
+            self.classes,
+            Arc::new(ShardCache::new(0)),
+        )?;
+        set.to_dataset()
+    }
+
+    /// The train split's cache counters (for `run_summary` deltas and
+    /// the bench record).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    pub fn cache_bytes(&self) -> u64 {
+        self.cache.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn http_source_parsing() {
+        assert_eq!(
+            parse_http_source("http://127.0.0.1:8080/stores/c1m"),
+            Some(HttpTarget { host: "127.0.0.1".into(), port: 8080, base: "/stores/c1m".into() })
+        );
+        assert_eq!(
+            parse_http_source("http://data.host/d/"),
+            Some(HttpTarget { host: "data.host".into(), port: 80, base: "/d".into() })
+        );
+        assert_eq!(
+            parse_http_source("http://h:9000"),
+            Some(HttpTarget { host: "h".into(), port: 9000, base: "".into() })
+        );
+        assert!(parse_http_source("shards://dir").is_none());
+        assert!(parse_http_source("http://").is_none());
+        assert!(parse_http_source("http://h:notaport/x").is_none());
+        assert!(parse_http_source("qmnist").is_none());
+    }
+
+    #[test]
+    fn client_url_joins_base_and_path() {
+        let c = HttpClient::new(
+            HttpTarget { host: "h".into(), port: 81, base: "/dir".into() },
+            FetchOpts::default(),
+        );
+        assert_eq!(c.url("/train/shard-00000.rsd"), "http://h:81/dir/train/shard-00000.rsd");
+    }
+
+    #[test]
+    fn find_subslice_locates_header_end() {
+        assert_eq!(find_subslice(b"ab\r\n\r\ncd", b"\r\n\r\n"), Some(2));
+        assert_eq!(find_subslice(b"abcd", b"\r\n\r\n"), None);
+    }
+}

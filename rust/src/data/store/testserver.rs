@@ -1,0 +1,330 @@
+//! In-repo HTTP range server over a shard-store directory — the
+//! test/bench harness for the remote data plane. **Not a production
+//! server**: it exists so the integration suites, `bench_pipeline`'s
+//! remote axis, and CI's remote smoke leg can exercise
+//! [`RemoteStore`](super::remote::RemoteStore) hermetically against
+//! `127.0.0.1`, including under injected network faults.
+//!
+//! One accept-loop thread; each accepted connection is handled on its
+//! own short-lived thread (requests are `Connection: close`, one
+//! exchange per connection). `GET` only; `Range: bytes=a-b` answers
+//! `206 Partial Content` with a `Content-Range`, no range answers
+//! `200` with the whole file. Paths resolve under the served root with
+//! `..` components rejected.
+//!
+//! Fault knobs ride the PR-7 [`FaultPlan`] grammar — `drop_conn`,
+//! `corrupt_payload`, and `http_503` specs match on `step=` = the
+//! 0-based ordinal of accepted requests (deterministic: the client
+//! fetches serially) and fire once each:
+//!
+//! ```text
+//! http_503@step=2; corrupt_payload@step=5
+//! ```
+//!
+//! `corrupt_payload` flips the response body's last byte — for a shard
+//! or sidecar that is payload (never header) territory, so the client
+//! sees a clean header and a checksum mismatch, exactly the
+//! verify-on-arrival path the chaos suite pins.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::fault::FaultPlan;
+
+/// A running range server; shuts down (flag + wake + join) on drop.
+pub struct TestServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accepted: Arc<AtomicU64>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl TestServer {
+    /// Serve `root` on an ephemeral 127.0.0.1 port, no faults.
+    pub fn serve(root: &Path) -> Result<TestServer> {
+        Self::serve_with(root, FaultPlan::empty())
+    }
+
+    /// Serve `root` on an ephemeral 127.0.0.1 port under a fault plan.
+    pub fn serve_with(root: &Path, plan: FaultPlan) -> Result<TestServer> {
+        Self::serve_on(root, 0, plan)
+    }
+
+    /// Serve `root` on a fixed port (0 = ephemeral) — the
+    /// `rho serve-store` entry point for CI.
+    pub fn serve_on(root: &Path, port: u16, plan: FaultPlan) -> Result<TestServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("binding the test store server on 127.0.0.1:{port}"))?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let accepted = Arc::new(AtomicU64::new(0));
+        let root = root.to_path_buf();
+        let handle = {
+            let shutdown = Arc::clone(&shutdown);
+            let accepted = Arc::clone(&accepted);
+            std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if shutdown.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let ordinal = accepted.fetch_add(1, Ordering::Relaxed);
+                    let root = root.clone();
+                    let plan = plan.clone();
+                    std::thread::spawn(move || {
+                        // Per-connection errors (client went away,
+                        // malformed request) only end that exchange.
+                        let _ = handle_conn(stream, &root, &plan, ordinal);
+                    });
+                }
+            })
+        };
+        Ok(TestServer { addr, shutdown, accepted, handle: Some(handle) })
+    }
+
+    pub fn port(&self) -> u16 {
+        self.addr.port()
+    }
+
+    /// The store source URL clients pass as `data.source`.
+    pub fn url(&self) -> String {
+        format!("http://127.0.0.1:{}", self.addr.port())
+    }
+
+    /// Requests accepted so far (= the next request's fault ordinal).
+    pub fn requests(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for TestServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        // Wake the blocking accept so the loop observes the flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    root: &Path,
+    plan: &FaultPlan,
+    ordinal: u64,
+) -> std::io::Result<()> {
+    let (path, range) = match read_request(&mut stream)? {
+        Some(r) => r,
+        None => return Ok(()), // shutdown wake or EOF before a request
+    };
+    if plan.net_drop(ordinal) {
+        return Ok(()); // close without answering
+    }
+    if plan.net_503(ordinal) {
+        return write_simple(&mut stream, "503 Service Unavailable");
+    }
+    let Some(file) = resolve(root, &path) else {
+        return write_simple(&mut stream, "404 Not Found");
+    };
+    let Ok(bytes) = std::fs::read(&file) else {
+        return write_simple(&mut stream, "404 Not Found");
+    };
+    let total = bytes.len() as u64;
+    let (status, extra, mut body) = match range {
+        Some((a, b)) => {
+            if a > b || b >= total {
+                return write_simple(&mut stream, "416 Range Not Satisfiable");
+            }
+            (
+                "206 Partial Content",
+                format!("Content-Range: bytes {a}-{b}/{total}\r\n"),
+                bytes[a as usize..=b as usize].to_vec(),
+            )
+        }
+        None => ("200 OK", String::new(), bytes),
+    };
+    if plan.net_corrupt(ordinal) {
+        if let Some(last) = body.last_mut() {
+            *last ^= 0x40;
+        }
+    }
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Length: {}\r\n{extra}Connection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&body)
+}
+
+/// Read one request head; returns (path, parsed Range) or `None` for
+/// an empty connection (the shutdown wake).
+fn read_request(stream: &mut TcpStream) -> std::io::Result<Option<(String, Option<(u64, u64)>)>> {
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(i) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break i;
+        }
+        if buf.len() > 16 * 1024 {
+            return Ok(None);
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Ok(None);
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let Ok(head) = std::str::from_utf8(&buf[..head_end]) else {
+        return Ok(None);
+    };
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    if parts.next() != Some("GET") {
+        return Ok(None);
+    }
+    let Some(path) = parts.next() else {
+        return Ok(None);
+    };
+    let range = lines
+        .filter_map(|l| l.split_once(':'))
+        .find(|(k, _)| k.trim().eq_ignore_ascii_case("range"))
+        .and_then(|(_, v)| parse_range(v.trim()));
+    Ok(Some((path.to_string(), range)))
+}
+
+/// `bytes=a-b` (both bounds required — that is the only shape the
+/// client sends).
+fn parse_range(v: &str) -> Option<(u64, u64)> {
+    let (a, b) = v.strip_prefix("bytes=")?.split_once('-')?;
+    Some((a.trim().parse().ok()?, b.trim().parse().ok()?))
+}
+
+/// Resolve a request path under the served root; `None` rejects
+/// traversal (`..`) and absolute-component tricks.
+fn resolve(root: &Path, path: &str) -> Option<PathBuf> {
+    let rel = path.strip_prefix('/')?;
+    let mut out = root.to_path_buf();
+    for comp in rel.split('/') {
+        if comp.is_empty() || comp == "." {
+            continue;
+        }
+        if comp == ".." || comp.contains('\\') {
+            return None;
+        }
+        out.push(comp);
+    }
+    out.is_file().then_some(out)
+}
+
+fn write_simple(stream: &mut TcpStream, status: &str) -> std::io::Result<()> {
+    stream.write_all(
+        format!("HTTP/1.1 {status}\r\nContent-Length: 0\r\nConnection: close\r\n\r\n").as_bytes(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::store::remote::{parse_http_source, FetchError, FetchOpts, HttpClient};
+
+    fn tmp_root(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("rho-testserver-{}-{name}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(dir.join("train")).unwrap();
+        dir
+    }
+
+    fn client_for(srv: &TestServer) -> HttpClient {
+        HttpClient::new(
+            parse_http_source(&srv.url()).unwrap(),
+            FetchOpts { timeout_ms: 2000, retries: 2 },
+        )
+    }
+
+    #[test]
+    fn serves_full_and_ranged_reads() {
+        let root = tmp_root("basic");
+        std::fs::write(root.join("train/blob.bin"), (0u8..=99).collect::<Vec<u8>>()).unwrap();
+        let srv = TestServer::serve(&root).unwrap();
+        let c = client_for(&srv);
+        assert_eq!(c.fetch("/train/blob.bin", None).unwrap(), (0u8..=99).collect::<Vec<u8>>());
+        assert_eq!(c.fetch("/train/blob.bin", Some((10, 19))).unwrap(), (10u8..=19).collect::<Vec<u8>>());
+        assert!(srv.requests() >= 2);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn missing_paths_and_traversal_are_404() {
+        let root = tmp_root("sec");
+        std::fs::write(root.join("train/ok.bin"), b"fine").unwrap();
+        let srv = TestServer::serve(&root).unwrap();
+        let c = client_for(&srv);
+        assert!(matches!(c.fetch("/train/nope.bin", None), Err(FetchError::NotFound(_))));
+        assert!(matches!(c.fetch("/../etc/passwd", None), Err(FetchError::NotFound(_))));
+        assert!(matches!(c.fetch("/train/../../etc/passwd", None), Err(FetchError::NotFound(_))));
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn bad_ranges_are_fatal_not_retried() {
+        let root = tmp_root("range");
+        std::fs::write(root.join("train/blob.bin"), b"0123456789").unwrap();
+        let srv = TestServer::serve(&root).unwrap();
+        let c = client_for(&srv);
+        let before = srv.requests();
+        let err = c.fetch("/train/blob.bin", Some((20, 30))).unwrap_err();
+        assert!(matches!(err, FetchError::Fatal(_)), "{err}");
+        assert_eq!(srv.requests(), before + 1, "416 must not be retried");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn injected_faults_fire_by_request_ordinal_and_retry_recovers() {
+        let root = tmp_root("faults");
+        std::fs::write(root.join("train/blob.bin"), b"payload-bytes").unwrap();
+        // Request 0: 503. Request 1: dropped connection. Request 2 (the
+        // second retry) succeeds.
+        let plan = FaultPlan::parse("http_503@step=0; drop_conn@step=1").unwrap();
+        let srv = TestServer::serve_with(&root, plan).unwrap();
+        let c = client_for(&srv);
+        assert_eq!(c.fetch("/train/blob.bin", None).unwrap(), b"payload-bytes");
+        assert_eq!(srv.requests(), 3, "503 + drop + success = 3 requests");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn corrupt_payload_flips_a_body_byte() {
+        let root = tmp_root("corrupt");
+        std::fs::write(root.join("train/blob.bin"), b"abcd").unwrap();
+        let plan = FaultPlan::parse("corrupt_payload@step=0").unwrap();
+        let srv = TestServer::serve_with(&root, plan).unwrap();
+        let c = client_for(&srv);
+        let got = c.fetch("/train/blob.bin", None).unwrap();
+        assert_eq!(got, b"abc\x24", "last byte flipped by 0x40");
+        // the spec fired once; the next read is clean
+        assert_eq!(c.fetch("/train/blob.bin", None).unwrap(), b"abcd");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn retries_exhaust_with_a_named_error() {
+        let root = tmp_root("exhaust");
+        std::fs::write(root.join("train/blob.bin"), b"x").unwrap();
+        let plan =
+            FaultPlan::parse("http_503@step=0; http_503@step=1; http_503@step=2").unwrap();
+        let srv = TestServer::serve_with(&root, plan).unwrap();
+        let c = client_for(&srv); // retries=2 → 3 attempts, all 503
+        let err = c.fetch("/train/blob.bin", None).unwrap_err();
+        assert!(matches!(err, FetchError::Exhausted(_)), "{err}");
+        assert!(err.to_string().contains("HTTP 503"), "{err}");
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

@@ -181,6 +181,11 @@ fn write_store_manifest(report: &IngestReport) -> Result<()> {
         ("splits", splits),
     ]);
     std::fs::write(report.root.join(STORE_MANIFEST), doc.to_json() + "\n")?;
+    // The binary twin (`store.rman`): every shard's byte geometry +
+    // checksum in one checksummed file, so a remote client learns the
+    // whole store from a single ranged read. Synthesized from the
+    // just-written directory so the two manifests can never disagree.
+    super::manifest::StoreManifest::from_store_dir(&report.root)?.write(&report.root)?;
     Ok(())
 }
 
@@ -368,6 +373,11 @@ mod tests {
         let r = ShardReader::open(&dir.join("store/train").join(shard_file_name(0))).unwrap();
         assert_eq!(r.xs(), &[0.5, 1.5, -1.0, 2.0]);
         assert_eq!(r.ys(), &[0, 2]);
+        // ingest writes the binary manifest twin beside store.json
+        let m = crate::data::store::StoreManifest::load(&dir.join("store")).unwrap();
+        assert_eq!((m.d, m.classes), (2, 3));
+        assert_eq!(m.split("train").unwrap().shards.len(), 2);
+        assert!(dir.join("store").join(crate::data::store::MANIFEST_FILE).exists());
         // malformed rows are refused
         std::fs::write(&csv, "1.0,2.0,0\n1.0,0\n").unwrap();
         assert!(ingest_csv(&csv, &dir.join("bad"), 2).is_err());

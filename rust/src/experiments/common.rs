@@ -15,7 +15,9 @@ use crate::config::RunConfig;
 use crate::coordinator::engine::RunData;
 use crate::coordinator::il_model::{compute_il, no_holdout_il, train_il, IlTrainConfig};
 use crate::coordinator::session::{IlContext, RunResult, Session};
-use crate::data::store::{parse_source, DataSource, ShardStore};
+use crate::data::store::{
+    classify_source, DataSource, FetchOpts, RemoteStore, ShardStore, SourceSpec,
+};
 use crate::data::{catalog, Bundle};
 use crate::experiments::ExpCtx;
 use crate::runtime::artifact::Manifest;
@@ -56,6 +58,11 @@ pub struct Lab {
     pools: RefCell<HashMap<PlaneKey, Rc<ScoringPool>>>,
     /// Opened shard stores, keyed by root path (`shards://` sources).
     stores: RefCell<HashMap<PathBuf, Rc<ShardStore>>>,
+    /// Opened remote stores, keyed by URL + cache bound (`http://`
+    /// sources). The cache bound is part of the key because the shard
+    /// cache is built at open time — two runs with different
+    /// `cache_bytes` must not share one.
+    remotes: RefCell<HashMap<String, Rc<RemoteStore>>>,
     pub scale: f64,
 }
 
@@ -70,6 +77,7 @@ impl Lab {
             bundles: RefCell::new(HashMap::new()),
             pools: RefCell::new(HashMap::new()),
             stores: RefCell::new(HashMap::new()),
+            remotes: RefCell::new(HashMap::new()),
             scale: ctx.scale,
         })
     }
@@ -114,6 +122,19 @@ impl Lab {
         }
         let s = Rc::new(ShardStore::open(root)?);
         self.stores.borrow_mut().insert(root.to_path_buf(), Rc::clone(&s));
+        Ok(s)
+    }
+
+    /// Open (and cache) a remote store for `cfg`'s `http://` source —
+    /// one manifest GET per (URL, cache bound), shards fetched lazily.
+    pub fn remote(&self, cfg: &RunConfig) -> Result<Rc<RemoteStore>> {
+        let key = format!("{}|{}", cfg.source, cfg.cache_bytes);
+        if let Some(s) = self.remotes.borrow().get(&key) {
+            return Ok(Rc::clone(s));
+        }
+        let opts = FetchOpts { timeout_ms: cfg.fetch_timeout_ms, retries: cfg.fetch_retries };
+        let s = Rc::new(RemoteStore::open(&cfg.source, opts, cfg.cache_bytes)?);
+        self.remotes.borrow_mut().insert(key, Rc::clone(&s));
         Ok(s)
     }
 
@@ -264,15 +285,17 @@ impl Lab {
     }
 
     /// Run `cfg` against whatever data source it declares: the
-    /// in-memory catalog bundle (`source=""`) or a sharded store
-    /// (`source=shards://dir`). The CLI's entry point.
+    /// in-memory catalog bundle (`source=""`), a local sharded store
+    /// (`source=shards://dir`), or a remote store served over ranged
+    /// reads (`source=http://host/dir`). The CLI's entry point.
     pub fn run_auto(&self, cfg: &RunConfig) -> Result<RunResult> {
-        match parse_source(&cfg.source) {
-            None => {
+        match classify_source(&cfg.source) {
+            SourceSpec::Memory => {
                 let bundle = self.bundle(&cfg.dataset);
                 self.run_one(cfg, &bundle)
             }
-            Some(root) => self.run_sharded(cfg, root),
+            SourceSpec::Local(root) => self.run_sharded(cfg, &root),
+            SourceSpec::Http(_) => self.run_remote(cfg),
         }
     }
 
@@ -319,6 +342,78 @@ impl Lab {
         }
         session = session.planes(planes.iter());
         session.run_data(&RunData { train: &store.train, test: &test }, il.as_deref())
+    }
+
+    /// One training run streaming from a remote store over HTTP ranged
+    /// reads — the node trains against a store it never fully
+    /// downloads (shards arrive on demand into the bounded cache,
+    /// verified on arrival). Bitwise-identical to the same store run
+    /// locally: same manifest geometry, same sampler layout, same
+    /// gathered bytes.
+    pub fn run_remote(&self, cfg: &RunConfig) -> Result<RunResult> {
+        if cfg.no_holdout {
+            bail!(
+                "no_holdout=true is not supported for http:// sources — sidecar IL values \
+                 are trained on the holdout split; run the no-holdout ablation on the \
+                 in-memory catalog source"
+            );
+        }
+        if cfg.online_il || cfg.method.is_offline_filter() {
+            // Both need the trained IL model *state* (il_state.bin),
+            // which lives beside the store on the serving host's disk.
+            // Refusing beats silently retraining a different IL model.
+            bail!(
+                "`{}` needs the saved IL model state, which is not served remotely — run it \
+                 against a local copy of the store (`shards://<dir>`) instead of {}",
+                if cfg.online_il { "online_il" } else { cfg.method.name() },
+                cfg.source
+            );
+        }
+        let store = self.remote(cfg)?;
+        let mut cfg = cfg.clone();
+        cfg.dataset = store.name.clone();
+        let tb = self.manifest.train_batch;
+        let target = self.runtime_dims(&cfg.arch, store.d, store.classes, tb)?;
+        let il = if cfg.method.needs_il() {
+            Some(self.remote_il_context(&cfg, &store)?)
+        } else {
+            None
+        };
+        let planes = self.planes_dims(&cfg, store.d, store.classes)?;
+        if !store.has_split("test") {
+            bail!(
+                "store at {} has no test/ split — ingest from a catalog bundle, or add one \
+                 (a train-only CSV store cannot evaluate)",
+                store.url
+            );
+        }
+        let test = store.materialize("test")?;
+        let mut session = Session::new(&cfg, &target);
+        session = session.planes(planes.iter());
+        session.run_data(&RunData { train: &store.train, test: &test }, il.as_deref())
+    }
+
+    /// IL context for a remote store: the concatenated sidecar table
+    /// the server's store carries (fetched once at open). Like the
+    /// local path, recomputation is refused — but the fix runs on the
+    /// *serving* host, where the store directory lives.
+    fn remote_il_context(&self, cfg: &RunConfig, store: &RemoteStore) -> Result<Rc<IlContext>> {
+        let key = format!("remote|{}", store.url);
+        if let Some(c) = self.il_cache.borrow().get(&key) {
+            return Ok(Rc::clone(c));
+        }
+        let table = store.train.il_table().ok_or_else(|| {
+            anyhow!(
+                "method `{}` needs IL values but the store at {} serves no sidecars — on the \
+                 serving host, run `rho score-il data=shards://<store dir>` once; the server \
+                 picks the sidecars up on its next start",
+                cfg.method.name(),
+                store.url
+            )
+        })?;
+        let ctx = Rc::new(IlContext { values: table.to_vec(), state: None });
+        self.il_cache.borrow_mut().insert(key, Rc::clone(&ctx));
+        Ok(ctx)
     }
 
     /// IL context for a shard store: the sidecar table `rho score-il`

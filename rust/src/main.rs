@@ -4,6 +4,7 @@
 //!   rho train [key=value ...]    one training run (see config keys)
 //!   rho ingest <catalog|csv>     write a sharded on-disk store
 //!   rho score-il data=shards://D precompute IL sidecars for a store
+//!   rho serve-store <dir>        serve a store over HTTP ranged reads
 //!   rho exp <id|all> [opts]      regenerate a paper table/figure
 //!   rho artifacts                list loaded artifacts
 //!   rho info                     PJRT platform info
@@ -13,6 +14,8 @@
 //!   rho ingest clothing1m --shard-rows 4096 --out stores/c1m
 //!   rho score-il data=shards://stores/c1m il_arch=mlp_small
 //!   rho train --data shards://stores/c1m method=rho_loss epochs=10
+//!   rho serve-store stores/c1m --port 8080
+//!   rho train --data http://127.0.0.1:8080 cache_bytes=268435456
 //!   rho exp table2 --scale 0.5 --seeds 1,2,3
 
 use anyhow::{anyhow, bail, Result};
@@ -34,6 +37,7 @@ fn real_main() -> Result<()> {
         Some("train") => cmd_train(&args[1..]),
         Some("ingest") => cmd_ingest(&args[1..]),
         Some("score-il") => cmd_score_il(&args[1..]),
+        Some("serve-store") => cmd_serve_store(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
         Some("exp") => cmd_exp(&args[1..]),
         Some("artifacts") => cmd_artifacts(),
@@ -49,7 +53,7 @@ fn real_main() -> Result<()> {
 fn print_help() {
     println!(
         "rho — RHO-LOSS coordinator (Mindermann et al., ICML 2022)\n\n\
-         usage:\n  rho train [key=value ...] [--data shards://DIR] [--checkpoint-every N] [--resume PATH] [--speculate]\n  rho ingest <catalog-name|file.csv> [--shard-rows N] [--out DIR] [--scale F]\n  rho score-il data=shards://DIR [il_arch=A] [il_epochs=N] [key=value ...]\n  rho inspect [key=value ...]   score one candidate batch, compare methods\n  rho exp <id|all> [--scale F] [--seeds a,b] [--epoch-scale F]\n  rho artifacts\n  rho info\n\n\
+         usage:\n  rho train [key=value ...] [--data shards://DIR|http://HOST/DIR] [--checkpoint-every N] [--resume PATH] [--speculate]\n  rho ingest <catalog-name|file.csv> [--shard-rows N] [--out DIR] [--scale F]\n  rho score-il data=shards://DIR [il_arch=A] [il_epochs=N] [key=value ...]\n  rho serve-store <DIR> [--port N] [--fault SPEC]   serve a store over HTTP\n  rho inspect [key=value ...]   score one candidate batch, compare methods\n  rho exp <id|all> [--scale F] [--seeds a,b] [--epoch-scale F]\n  rho artifacts\n  rho info\n\n\
          experiments: {}\n\n\
          config keys: dataset arch il_arch method epochs seed nb select_frac lr wd\n\
          eval_every scale track_props no_holdout online_il il_lr_scale\n\
@@ -58,8 +62,11 @@ fn print_help() {
          supervision: pool.dispatch_timeout_ms (0=off) pool.respawn (never|once|always)\n\
          pool.fault (chaos plan, e.g. 'worker_panic@plane=target,worker=1,step=7';\n\
          env RHO_FAULT overrides)\n\n\
-         data plane ([data] table): source (shards://DIR) shard_rows window\n\
+         data plane ([data] table): source (shards://DIR | http://HOST/DIR) shard_rows window\n\
          e.g. rho ingest cifar10 --out stores/c10 && rho score-il data=shards://stores/c10 \\\n              && rho train --data shards://stores/c10 method=rho_loss\n\n\
+         remote store ([store] table): store.cache_bytes (0=unbounded)\n\
+         store.fetch_timeout_ms store.fetch_retries\n\
+         e.g. rho serve-store stores/c10 --port 8080 &\n              rho train --data http://127.0.0.1:8080 cache_bytes=268435456 window=8192\n\n\
          compute planes ([planes] table): plane.<name>.arch plane.<name>.workers\n\
          plane.<name>.lane_depth plane.<name>.rate_alpha   (names: target il mcd)\n\
          e.g. rho train method=rho_loss online_il=true workers=4 \\\n              plane.il.workers=2 plane.il.arch=mlp_small",
@@ -286,6 +293,61 @@ fn cmd_score_il(args: &[String]) -> Result<()> {
     );
     println!("train with: rho train --data shards://{}", root.display());
     Ok(())
+}
+
+/// `rho serve-store <DIR> [--port N] [--fault SPEC]` — serve an
+/// ingested store over HTTP ranged reads so remote nodes can train
+/// with `rho train --data http://host:port`. Pure data-plane: needs no
+/// XLA artifacts. `--fault` takes the chaos-plan grammar's net kinds
+/// (`drop_conn` / `corrupt_payload` / `http_503` at `step=<request>`)
+/// for failure drills. Serves until killed.
+fn cmd_serve_store(args: &[String]) -> Result<()> {
+    let root = args
+        .first()
+        .ok_or_else(|| anyhow!("usage: rho serve-store <DIR> [--port N] [--fault SPEC]"))?;
+    let mut port = 0u16;
+    let mut fault = String::new();
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--port" => {
+                port = args.get(i + 1).ok_or_else(|| anyhow!("--port needs a value"))?.parse()?;
+                i += 2;
+            }
+            "--fault" => {
+                fault = args.get(i + 1).ok_or_else(|| anyhow!("--fault needs a value"))?.clone();
+                i += 2;
+            }
+            other => bail!("unknown serve-store flag `{other}`"),
+        }
+    }
+    let root = std::path::Path::new(root);
+    // Load (or synthesize, for pre-manifest stores) the binary
+    // manifest up front: a bad store dir should fail here, not on the
+    // first client request — and writing `store.rman` now means every
+    // client can open the store with a single GET.
+    let manifest = rho::data::store::StoreManifest::load(root)?;
+    if !root.join(rho::data::store::MANIFEST_FILE).exists() {
+        manifest.write(root)?;
+        println!("wrote {} for pre-manifest store", rho::data::store::MANIFEST_FILE);
+    }
+    let plan = rho::runtime::fault::FaultPlan::parse(&fault)?;
+    let server = rho::data::store::TestServer::serve_on(root, port, plan)?;
+    println!(
+        "serving `{}` (d={}, classes={}) from {} at {}",
+        manifest.name,
+        manifest.d,
+        manifest.classes,
+        root.display(),
+        server.url()
+    );
+    for sp in &manifest.splits {
+        println!("  {:<8} {:>8} rows  {:>3} shards  {:>10} bytes", sp.name, sp.rows(), sp.shards.len(), sp.bytes());
+    }
+    println!("train with: rho train --data {}", server.url());
+    loop {
+        std::thread::park();
+    }
 }
 
 /// Score a single candidate batch with every applicable method and

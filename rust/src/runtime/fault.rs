@@ -25,6 +25,14 @@
 //! * `updater_panic` — the per-plane IL updater thread panics inside
 //!   the matched `train_step` push (`step` counts Update messages
 //!   processed, starting at 0).
+//! * `drop_conn` / `corrupt_payload` / `http_503` — network faults for
+//!   the remote data plane's test server
+//!   ([`data::store::testserver`](crate::data::store::testserver)):
+//!   the matched HTTP request's connection is closed before the body,
+//!   one payload byte is flipped, or a `503 Service Unavailable` is
+//!   answered. They match on `step=` only, where `step` is the 0-based
+//!   *request ordinal* the server has accepted (there is no plane or
+//!   worker on the wire).
 //!
 //! Every matcher key (`plane`, `worker`, `step`) is optional; an
 //! omitted key is a wildcard. Unknown kinds and keys are parse errors
@@ -61,6 +69,15 @@ pub enum FaultKind {
     Stall,
     /// Panic the IL updater thread inside a train-step push.
     UpdaterPanic,
+    /// Test server: close the matched request's connection before the
+    /// response body (exercises the client's connect/read retry).
+    DropConn,
+    /// Test server: flip one payload byte of the matched response
+    /// (exercises the verify-on-arrival hard error).
+    CorruptPayload,
+    /// Test server: answer the matched request with `503 Service
+    /// Unavailable` (exercises the 5xx retry-with-backoff path).
+    Http503,
 }
 
 impl FaultKind {
@@ -69,7 +86,16 @@ impl FaultKind {
             FaultKind::WorkerPanic => "worker_panic",
             FaultKind::Stall => "stall",
             FaultKind::UpdaterPanic => "updater_panic",
+            FaultKind::DropConn => "drop_conn",
+            FaultKind::CorruptPayload => "corrupt_payload",
+            FaultKind::Http503 => "http_503",
         }
+    }
+
+    /// Network faults live on the wire: no plane, no worker — they
+    /// match on the request ordinal alone.
+    fn is_net(self) -> bool {
+        matches!(self, FaultKind::DropConn | FaultKind::CorruptPayload | FaultKind::Http503)
     }
 }
 
@@ -147,9 +173,12 @@ impl FaultPlan {
                 "worker_panic" => FaultKind::WorkerPanic,
                 "stall" => FaultKind::Stall,
                 "updater_panic" => FaultKind::UpdaterPanic,
+                "drop_conn" => FaultKind::DropConn,
+                "corrupt_payload" => FaultKind::CorruptPayload,
+                "http_503" => FaultKind::Http503,
                 other => bail!(
                     "unknown fault kind `{other}` in `{spec}` \
-                     (known: worker_panic stall updater_panic)"
+                     (known: worker_panic stall updater_panic drop_conn corrupt_payload http_503)"
                 ),
             };
             let (mut plane, mut worker, mut step, mut ms) = (None, None, None, None);
@@ -193,6 +222,13 @@ impl FaultPlan {
             }
             if kind == FaultKind::UpdaterPanic && (plane.is_some() || worker.is_some()) {
                 bail!("updater_panic fault `{spec}` only matches on step=");
+            }
+            if kind.is_net() && (plane.is_some() || worker.is_some()) {
+                bail!(
+                    "{} fault `{spec}` only matches on step= (the request ordinal — \
+                     there is no plane or worker on the wire)",
+                    kind.name()
+                );
             }
             specs.push(FaultSpec { kind, plane, worker, step, ms: ms.unwrap_or(0), fired: AtomicBool::new(false) });
         }
@@ -240,6 +276,30 @@ impl FaultPlan {
             .iter()
             .any(|s| s.kind == FaultKind::UpdaterPanic && s.step.is_none_or(|n| n == update) && s.fire())
     }
+
+    fn net_probe(&self, kind: FaultKind, ordinal: u64) -> bool {
+        if self.is_empty() {
+            return false;
+        }
+        self.specs
+            .iter()
+            .any(|s| s.kind == kind && s.step.is_none_or(|n| n == ordinal) && s.fire())
+    }
+
+    /// Test server: drop the connection of request `ordinal`?
+    pub fn net_drop(&self, ordinal: u64) -> bool {
+        self.net_probe(FaultKind::DropConn, ordinal)
+    }
+
+    /// Test server: corrupt the payload of request `ordinal`?
+    pub fn net_corrupt(&self, ordinal: u64) -> bool {
+        self.net_probe(FaultKind::CorruptPayload, ordinal)
+    }
+
+    /// Test server: answer request `ordinal` with a 503?
+    pub fn net_503(&self, ordinal: u64) -> bool {
+        self.net_probe(FaultKind::Http503, ordinal)
+    }
 }
 
 #[cfg(test)]
@@ -278,6 +338,23 @@ mod tests {
     }
 
     #[test]
+    fn net_faults_match_the_request_ordinal_and_fire_once() {
+        let plan =
+            FaultPlan::parse("http_503@step=2; drop_conn@step=4; corrupt_payload@step=6").unwrap();
+        assert!(!plan.net_503(1));
+        assert!(plan.net_503(2));
+        assert!(!plan.net_503(2), "503 spec fires once");
+        assert!(!plan.net_drop(2));
+        assert!(plan.net_drop(4));
+        assert!(plan.net_corrupt(6));
+        assert!(!plan.net_corrupt(6));
+        // wildcard ordinal
+        let any = FaultPlan::parse("http_503").unwrap();
+        assert!(any.net_503(123));
+        assert!(!any.net_503(124));
+    }
+
+    #[test]
     fn each_spec_fires_exactly_once_even_across_clones() {
         let plan = FaultPlan::parse("worker_panic@worker=2").unwrap();
         let shared = plan.clone();
@@ -304,6 +381,9 @@ mod tests {
             ("worker_panic@ms=5", "ms= only applies to stall"),
             ("updater_panic@plane=il", "only matches on step="),
             ("worker_panic@step", "not key=value"),
+            ("drop_conn@plane=target", "only matches on step="),
+            ("http_503@worker=1", "only matches on step="),
+            ("corrupt_payload@ms=9", "ms= only applies to stall"),
         ];
         for (text, needle) in cases {
             let err = FaultPlan::parse(text).expect_err(text);

@@ -9,3 +9,16 @@ pub mod math;
 pub mod prop;
 pub mod rng;
 pub mod timer;
+
+/// Serialize tests that mutate process-global environment variables
+/// (`RHO_STORE_NO_MMAP`, `RHO_STORE_NO_VERIFY`, `RHO_FAULT`, ...).
+/// The test runner is parallel and `set_var`/`remove_var` are
+/// process-wide, so any test that must touch the environment takes
+/// this lock first; code paths should prefer explicit parameters
+/// (e.g. `ShardReader::open_with`) so most tests never need it.
+pub fn env_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    // A panicked holder doesn't invalidate the env (tests clean up
+    // with their own guards); clear the poison and carry on.
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}

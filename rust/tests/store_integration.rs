@@ -13,9 +13,11 @@ use rho::config::RunConfig;
 use rho::coordinator::il_model::score_store_il;
 use rho::coordinator::SessionCheckpoint;
 use rho::data::store::{
-    ingest_bundle, DataSource, ShardReader, ShardSet, ShardStore, ShardWriter,
+    ingest_bundle, DataSource, FetchOpts, RemoteShardSet, RemoteStore, ShardCache, ShardReader,
+    ShardSet, ShardStore, ShardWriter, StoreManifest, TestServer,
 };
-use rho::data::{Dataset, PointMeta};
+use rho::data::{Bundle, Dataset, PointMeta};
+use rho::runtime::fault::FaultPlan;
 use rho::experiments::common::{il_train_config, Lab};
 use rho::experiments::ExpCtx;
 use rho::selection::Method;
@@ -132,6 +134,171 @@ fn corrupted_and_mismatched_shards_refused_prop() {
         std::fs::remove_dir_all(&dir).ok();
         Ok(())
     });
+}
+
+// ---------- remote shard plane (no artifacts needed) ------------------
+
+fn tiny_bundle(n_train: usize, rng: &mut Pcg32) -> Bundle {
+    Bundle {
+        name: "mini".into(),
+        train: rand_ds(n_train, 4, 3, rng),
+        holdout: rand_ds(24, 4, 3, rng),
+        val: rand_ds(12, 4, 3, rng),
+        test: rand_ds(16, 4, 3, rng),
+    }
+}
+
+fn assert_datasets_bitwise(a: &Dataset, b: &Dataset, what: &str) {
+    assert_eq!(a.ys, b.ys, "{what}: labels");
+    assert_eq!(a.meta, b.meta, "{what}: meta flags");
+    assert_eq!(a.xs.len(), b.xs.len(), "{what}: feature count");
+    for (i, (x, y)) in a.xs.iter().zip(&b.xs).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: feature {i}");
+    }
+}
+
+#[test]
+fn remote_store_round_trips_bitwise_and_counts_cache() {
+    let dir = tmp("remote-rt");
+    let mut rng = Pcg32::new(41, 1);
+    let bundle = tiny_bundle(64, &mut rng);
+    ingest_bundle(&bundle, &dir, 8).unwrap();
+    let server = TestServer::serve(&dir).unwrap();
+    let store = RemoteStore::open(&server.url(), FetchOpts::default(), 0).unwrap();
+    assert_eq!((store.name.as_str(), store.d, store.classes), ("mini", 4, 3));
+    assert_eq!(store.train.source_kind(), "remote");
+    assert_eq!(DataSource::len(&store.train), 64);
+    // full materialization: every byte identical to what was ingested
+    let back = store.train.to_dataset().unwrap();
+    assert_datasets_bitwise(&back, &bundle.train, "remote train");
+    let stats = store.cache_stats();
+    assert_eq!(stats.misses, store.train.n_shards() as u64, "one fetch per shard");
+    assert_eq!(stats.evictions, 0, "unbounded cache never evicts");
+    // random gathers hit the warm cache, bit for bit
+    let idx: Vec<u32> = (0..40).map(|_| rng.below(64) as u32).collect();
+    let (gx, gy) = DataSource::gather(&store.train, &idx);
+    let (ex, ey) = Dataset::gather(&bundle.train, &idx);
+    assert_eq!(gy, ey);
+    for (a, b) in gx.iter().zip(&ex) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert!(store.cache_stats().hits > 0, "second pass reads the cache");
+    for i in 0..64u32 {
+        assert_eq!(store.train.point_meta(i), bundle.train.meta[i as usize]);
+    }
+    // eval splits materialize over the wire too
+    let test = store.materialize("test").unwrap();
+    assert_datasets_bitwise(&test, &bundle.test, "remote test");
+    // totals: the full store is bigger than what a warm train cache holds
+    assert!(store.train.nbytes() >= store.train.resident_bytes());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn remote_fetch_retries_through_503_and_dropped_connections() {
+    // Request ordinals: 0 = store.rman, 1 = sidecar probe (404). The
+    // first shard fetch is request 2 (503, once), its retry is request
+    // 3 (connection dropped, once), and request 4 succeeds — the run
+    // sees nothing but a slower first shard.
+    let dir = tmp("remote-503");
+    let mut rng = Pcg32::new(42, 2);
+    let bundle = tiny_bundle(40, &mut rng);
+    ingest_bundle(&bundle, &dir, 16).unwrap();
+    let plan = FaultPlan::parse("http_503@step=2;drop_conn@step=3").unwrap();
+    let server = TestServer::serve_with(&dir, plan).unwrap();
+    let store = RemoteStore::open(&server.url(), FetchOpts::default(), 0).unwrap();
+    let back = store.train.to_dataset().unwrap();
+    assert_datasets_bitwise(&back, &bundle.train, "post-retry train");
+    assert_eq!(
+        server.requests(),
+        2 + store.train.n_shards() as u64 + 2,
+        "manifest + probe + per-shard fetches + the two faulted attempts"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn remote_corrupt_payload_is_refused_not_retried_blind() {
+    let dir = tmp("remote-corrupt");
+    let mut rng = Pcg32::new(43, 3);
+    let bundle = tiny_bundle(40, &mut rng);
+    ingest_bundle(&bundle, &dir, 16).unwrap();
+    // Corrupt the first shard fetch (request 2). Verify-on-arrival
+    // must refuse the bytes with a hard checksum error — corruption is
+    // never "retried away" silently.
+    let plan = FaultPlan::parse("corrupt_payload@step=2").unwrap();
+    let server = TestServer::serve_with(&dir, plan).unwrap();
+    let store = RemoteStore::open(&server.url(), FetchOpts::default(), 0).unwrap();
+    let err = format!("{:#}", store.train.to_dataset().unwrap_err());
+    assert!(err.contains("checksum"), "{err}");
+    assert!(err.contains("shard-00000.rsd"), "names the shard: {err}");
+    // the fault fired once; an explicit second pass gets clean bytes
+    let back = store.train.to_dataset().unwrap();
+    assert_datasets_bitwise(&back, &bundle.train, "post-corruption retry");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn remote_residency_stays_bounded_under_windowed_walk() {
+    // THE bounded-residency gate: a windowed walk over a store many
+    // times larger than the cache keeps resident bytes ≤ cache_bytes +
+    // one in-flight shard (+ the set's own index tables) at every
+    // step, while evicting cold shards behind the window.
+    let dir = tmp("remote-bounded");
+    let mut rng = Pcg32::new(44, 4);
+    let bundle = tiny_bundle(160, &mut rng);
+    ingest_bundle(&bundle, &dir, 8).unwrap();
+    let manifest = StoreManifest::load(&dir).unwrap();
+    let max_shard = manifest.split("train").unwrap().shards.iter().map(|e| e.length).max().unwrap();
+    let cache_bytes = 3 * max_shard;
+    let server = TestServer::serve(&dir).unwrap();
+    let store = RemoteStore::open(&server.url(), FetchOpts::default(), cache_bytes).unwrap();
+    let n_shards = store.train.n_shards() as u64;
+    let tables = n_shards * 4; // starts table; no IL sidecars here
+    for start in (0..160u32).step_by(16) {
+        let window: Vec<u32> = (start..(start + 16).min(160)).collect();
+        store.train.prefetch(&window);
+        let (gx, gy) = DataSource::gather(&store.train, &window);
+        let (ex, ey) = Dataset::gather(&bundle.train, &window);
+        assert_eq!(gy, ey, "window at {start}");
+        for (a, b) in gx.iter().zip(&ex) {
+            assert_eq!(a.to_bits(), b.to_bits(), "window at {start}");
+        }
+        assert!(
+            store.train.resident_bytes() <= tables + cache_bytes + max_shard,
+            "residency {} exceeds bound {} after window at {start}",
+            store.train.resident_bytes(),
+            tables + cache_bytes + max_shard
+        );
+    }
+    let stats = store.cache_stats();
+    assert!(stats.evictions > 0, "a bounded walk over 20 shards must evict");
+    assert!(stats.hits > 0, "rows within a window share shards");
+    assert!(
+        store.train.resident_bytes() < store.train.nbytes(),
+        "the store was never fully downloaded"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn local_eviction_mode_streams_through_the_same_cache() {
+    // DirTransport: the heap-fallback local reader with windowed
+    // eviction — same verify-and-cache path as HTTP, no server.
+    let dir = tmp("dir-evict");
+    let mut rng = Pcg32::new(45, 5);
+    let bundle = tiny_bundle(96, &mut rng);
+    ingest_bundle(&bundle, &dir, 8).unwrap();
+    let manifest = StoreManifest::load(&dir).unwrap();
+    let max_shard = manifest.split("train").unwrap().shards.iter().map(|e| e.length).max().unwrap();
+    let cache = std::sync::Arc::new(ShardCache::new(2 * max_shard));
+    let set = RemoteShardSet::over_dir(&dir, &manifest, "train", cache).unwrap();
+    assert_eq!(set.source_kind(), "shards", "dir-backed eviction is still a local source");
+    let back = set.to_dataset().unwrap();
+    assert_datasets_bitwise(&back, &bundle.train, "dir eviction mode");
+    let stats = set.cache_stats().unwrap();
+    assert!(stats.evictions > 0, "cache holds 2 of 12 shards");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 // ---------- end-to-end engine parity (needs artifacts) ----------------
@@ -380,6 +547,27 @@ fn run_summary_reports_source_kind_and_bytes() {
     let bytes = summary.get("resident_bytes").unwrap().as_f64().unwrap();
     assert_eq!(bytes, bundle.train.nbytes() as f64, "memory source reports dense bytes");
 
+    // the remote twin reports kind=remote plus settled cache counters
+    let server = TestServer::serve(&dir).unwrap();
+    let mut rem = base_cfg(Method::Uniform);
+    rem.epochs = 1;
+    rem.source = server.url();
+    rem.events = ev_dir.join("rem.jsonl").to_string_lossy().into_owned();
+    lab.run_auto(&rem).unwrap();
+    let text = std::fs::read_to_string(ev_dir.join("rem.jsonl")).unwrap();
+    let summary = text
+        .lines()
+        .map(|l| rho::util::json::parse(l).unwrap())
+        .find(|v| v.get("kind").and_then(|k| k.as_str()) == Some("run_summary"))
+        .expect("run_summary emitted");
+    assert_eq!(summary.get("source").unwrap().as_str(), Some("remote"));
+    let total = summary.get("nbytes").unwrap().as_f64().unwrap();
+    let resident = summary.get("resident_bytes").unwrap().as_f64().unwrap();
+    assert!(total >= resident, "remote resident bytes never exceed the store size");
+    let hits = summary.get("cache_hits").unwrap().as_f64().unwrap();
+    let misses = summary.get("cache_misses").unwrap().as_f64().unwrap();
+    assert!(hits + misses > 0.0, "a remote run touches the cache");
+
     std::fs::remove_dir_all(&dir).ok();
     std::fs::remove_dir_all(&ev_dir).ok();
 }
@@ -403,4 +591,94 @@ fn sharded_pooled_run_matches_sharded_inline() {
     assert_eq!(pooled.plane_timings.len(), 1);
     assert!(pooled.plane_timings[0].chunks > 0);
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn remote_run_matches_memory_and_local_bitwise() {
+    // The remote acceptance gate: the same prepared store trained (a)
+    // from memory, (b) from local shards, and (c) over HTTP through a
+    // bounded cache produces ONE selection trajectory, bitwise, at
+    // workers ∈ {1, 4} — the node in (c) never holds the full store.
+    let Some(lab) = lab() else { return };
+    let dir = tmp("remote-parity");
+    let store_cfg = base_cfg(Method::RhoLoss);
+    let _store = prepared_store(&lab, &dir, &store_cfg);
+    let manifest = StoreManifest::load(&dir).unwrap();
+    let max_shard = manifest.split("train").unwrap().shards.iter().map(|e| e.length).max().unwrap();
+    let server = TestServer::serve(&dir).unwrap();
+    for workers in [1usize, 4] {
+        let mut mem_cfg = base_cfg(Method::RhoLoss);
+        mem_cfg.workers = workers;
+        let bundle = lab.bundle(&mem_cfg.dataset);
+        let memory = lab.run_one(&mem_cfg, &bundle).unwrap();
+
+        let mut local_cfg = base_cfg(Method::RhoLoss);
+        local_cfg.workers = workers;
+        local_cfg.source = format!("shards://{}", dir.display());
+        let local = lab.run_auto(&local_cfg).unwrap();
+
+        let mut rem_cfg = base_cfg(Method::RhoLoss);
+        rem_cfg.workers = workers;
+        rem_cfg.source = server.url();
+        // bound the cache so eviction is live during training (the
+        // window plus slack stays protected by prefetch touches)
+        rem_cfg.cache_bytes = 6 * max_shard;
+        let remote = lab.run_auto(&rem_cfg).unwrap();
+
+        let what = format!("workers={workers}");
+        assert_curves_bitwise(&memory.curve, &local.curve, &format!("{what} memory vs local"));
+        assert_curves_bitwise(&memory.curve, &remote.curve, &format!("{what} memory vs remote"));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn remote_checkpoint_resume_continues_bitwise_mid_shard() {
+    // Mid-shard resume THROUGH the remote plane: interrupt a remote
+    // run at a step whose sampler cursor sits inside a shard, resume
+    // against the same server, and match the uninterrupted remote
+    // reference bitwise. The content fingerprint binding is the same
+    // formula local sets use, so the checkpoint carries over.
+    let Some(lab) = lab() else { return };
+    let dir = tmp("remote-resume");
+    let store_cfg = base_cfg(Method::RhoLoss);
+    let _store = prepared_store(&lab, &dir, &store_cfg);
+    let server = TestServer::serve(&dir).unwrap();
+
+    let mut full = base_cfg(Method::RhoLoss);
+    full.source = server.url();
+    full.epochs = 4;
+    let reference = lab.run_auto(&full).unwrap();
+
+    let ckpt_dir = tmp("remote-resume-ckpt");
+    let ckpt = ckpt_dir.join("leg.ckpt");
+    let mut first = base_cfg(Method::RhoLoss);
+    first.source = server.url();
+    first.epochs = 2;
+    first.checkpoint_every = 13;
+    first.checkpoint_path = ckpt.to_string_lossy().into_owned();
+    lab.run_auto(&first).unwrap();
+
+    let prev = SessionCheckpoint::prev_path(&ckpt);
+    let mid = SessionCheckpoint::load(&prev).unwrap();
+    assert_eq!(mid.step, 13, "periodic checkpoint survived rotation");
+    assert!(mid.sampler.pos % SHARD_ROWS as u64 != 0, "cursor sits mid-shard");
+
+    let mut res = full.clone();
+    res.resume = prev.to_string_lossy().into_owned();
+    let resumed = lab.run_auto(&res).unwrap();
+    let tail: Vec<_> = reference.curve.points.iter().filter(|p| p.step > 13).copied().collect();
+    assert_eq!(tail.len(), resumed.curve.points.len(), "remote resume: eval count");
+    for (a, b) in tail.iter().zip(&resumed.curve.points) {
+        assert_eq!(a.step, b.step, "remote resume");
+        assert_eq!(
+            a.accuracy.to_bits(),
+            b.accuracy.to_bits(),
+            "remote resume diverged at step {}",
+            a.step
+        );
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&ckpt_dir).ok();
 }
