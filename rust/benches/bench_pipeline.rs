@@ -18,7 +18,10 @@
 //! machine-trackable. The two-plane rho_loss +
 //! online_il run is additionally swept over `speculate` ∈ {0, 1} and
 //! records `train_overlap_s` — the scoring wall-clock that ran under
-//! an open gradient step, i.e. what staleness-1 speculation buys.
+//! an open gradient step, i.e. what staleness-1 speculation buys. A
+//! `serve` record measures the multi-session scheduler: two weighted
+//! tenants time-sliced over one shared pool, with aggregate steps/sec
+//! and the DRR fairness imbalance.
 //!
 //! `RHO_BENCH_SMOKE=1` switches to smoke mode (tiny dataset scale, 1
 //! epoch — a handful of steps per method, one worker) so CI can prove
@@ -89,6 +92,21 @@ fn cache_doc(hits: f64, misses: f64, evictions: f64) -> Value {
     ])
 }
 
+/// The `rho serve` record: tenant count, aggregate steps/sec across
+/// the time-sliced two-tenant run, and the fairness imbalance — the
+/// worst per-tenant |pick share − weight share| observed while both
+/// tenants contended for slices (DRR bounds this by ~1/contended
+/// rounds). Always present in BENCH_pipeline.json (zeroed when
+/// skipped) so tooling can rely on the schema.
+fn serve_doc(tenants: f64, steps_per_sec: f64, imbalance: f64, per_tenant: Value) -> Value {
+    obj(vec![
+        ("tenants", num(tenants)),
+        ("steps_per_sec", num(steps_per_sec)),
+        ("imbalance", num(imbalance)),
+        ("per_tenant", per_tenant),
+    ])
+}
+
 fn main() {
     let smoke = std::env::var("RHO_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
     println!("== bench_pipeline{} ==", if smoke { " (smoke)" } else { "" });
@@ -104,6 +122,7 @@ fn main() {
             ("speculate", speculate_axis()),
             ("overlap", overlap_doc(0.0, 0.0, 0.0, 0.0, 0.0, 0)),
             ("cache", cache_doc(0.0, 0.0, 0.0)),
+            ("serve", serve_doc(0.0, 0.0, 0.0, Value::Array(Vec::new()))),
         ]));
         return;
     }
@@ -400,6 +419,83 @@ fn main() {
     };
     std::fs::remove_dir_all(&store_dir).ok();
 
+    // --- serve axis: two tenants time-sliced over one shared pool ----
+    // The multi-session scheduler's cost model: aggregate steps/sec
+    // for two weighted tenants sliced over a single PlaneKey-shared
+    // pool, plus the DRR fairness imbalance observed while both
+    // contended. A fresh Lab keeps the served pool registry cold, the
+    // same start state as a fresh `rho serve` daemon.
+    let serve = {
+        use rho::coordinator::scheduler::Daemon;
+        use rho::experiments::common::ServedLab;
+        let mut sbase = base.clone();
+        sbase.method = Method::RhoLoss;
+        sbase.workers = if smoke { 1 } else { 4 };
+        sbase.serve_slice_steps = if smoke { 8 } else { 16 };
+        sbase.serve_max_sessions = 4;
+        sbase.serve_dir = std::env::temp_dir()
+            .join(format!("rho-bench-serve-{}", std::process::id()))
+            .display()
+            .to_string();
+        let weights: &[(&str, f64)] = &[("a", 2.0), ("b", 1.0)];
+        let mut d =
+            Daemon::new(sbase.clone(), ServedLab::new(Lab::new(&ctx).unwrap(), sbase.workers));
+        for (i, (id, w)) in weights.iter().enumerate() {
+            d.submit(id, *w, &[("seed".to_string(), (i + 1).to_string())]).unwrap();
+        }
+        let sw = rho::util::timer::Stopwatch::start();
+        let mut picks: std::collections::HashMap<String, u64> = Default::default();
+        let mut contended = 0u64;
+        while d.runnable() > 1 {
+            if let Some(id) = d.tick() {
+                *picks.entry(id).or_default() += 1;
+                contended += 1;
+            }
+        }
+        while d.runnable() > 0 {
+            d.tick();
+        }
+        let secs = sw.elapsed_s();
+        let rows = d.status(None);
+        let total_steps: u64 = rows.iter().map(|r| r.steps).sum();
+        let total_w: f64 = weights.iter().map(|(_, w)| w).sum();
+        let imbalance = if contended == 0 {
+            0.0
+        } else {
+            weights
+                .iter()
+                .map(|(id, w)| {
+                    let share = *picks.get(*id).unwrap_or(&0) as f64 / contended as f64;
+                    (share - w / total_w).abs()
+                })
+                .fold(0.0, f64::max)
+        };
+        let sps = if secs > 0.0 { total_steps as f64 / secs } else { 0.0 };
+        println!(
+            "serve {} tenants (weights 2:1): {sps:>7.1} steps/s aggregate, fairness \
+             imbalance {imbalance:.3} over {contended} contended slices",
+            rows.len()
+        );
+        std::fs::remove_dir_all(&sbase.serve_dir).ok();
+        serve_doc(
+            rows.len() as f64,
+            sps,
+            imbalance,
+            Value::Array(
+                rows.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("tenant", s(&r.tenant)),
+                            ("steps", num(r.steps as f64)),
+                            ("slices", num(r.slices as f64)),
+                            ("train_secs", num(r.train_secs)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )
+    };
+
     // Selection-overhead ratio (paper §3: the selection fwd pass costs
     // n_B/(3 n_b) of a train step in theory), from the inline runs.
     let uni_sps = sync_by_method[&Method::Uniform];
@@ -423,6 +519,7 @@ fn main() {
         ("speculate", speculate_axis()),
         ("overlap", overlap),
         ("cache", cache),
+        ("serve", serve),
         ("entries", Value::Array(entries)),
     ]));
 }

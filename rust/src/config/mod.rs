@@ -30,6 +30,18 @@
 //! errors. Flat spellings: `store.cache_bytes` /
 //! `store.fetch_timeout_ms` / `store.fetch_retries` (bare keys work
 //! too).
+//!
+//! A `[serve]` section configures the `rho serve` multi-session
+//! daemon (see `coordinator::scheduler`): `port` (0 = ephemeral; the
+//! bound address is printed as `listening <addr>`), `max_sessions` /
+//! `max_resident_bytes` (admission control), `slice_steps` (engine
+//! steps per cooperative scheduling slice), and `dir` (where the
+//! daemon keeps per-tenant checkpoints and event logs). Flat
+//! spellings: `serve.port` etc. The per-run keys `tenant` (event-log
+//! key for multi-tenant accounting) and `step_limit` (pause the
+//! engine after N steps, checkpointing at the pause point) are what
+//! the daemon sets on each tenant's slice; both are also usable
+//! standalone.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -140,6 +152,29 @@ pub struct RunConfig {
     /// the grammar). `RHO_FAULT` overrides this key when set. Empty =
     /// no faults.
     pub fault: String,
+    /// Tenant id this run belongs to ("" = untenanted). Keys every
+    /// event the run emits (`pool_stats`, `run_summary`, ...) so one
+    /// shared event stream stays attributable per session; never part
+    /// of the run identity tag.
+    pub tenant: String,
+    /// Pause the engine after this many steps (0 = run to completion).
+    /// A paused run checkpoints at the pause step (when a checkpoint
+    /// path is configured) and resumes bitwise — the scheduling slice
+    /// primitive of `rho serve`. Pause steps add no eval points, so a
+    /// sliced run's curve is identical to its uninterrupted twin.
+    pub step_limit: usize,
+    /// `rho serve` control port (0 = bind an ephemeral port; the bound
+    /// address is printed as `listening <addr>`).
+    pub serve_port: u16,
+    /// Admission control: max concurrently admitted sessions.
+    pub serve_max_sessions: usize,
+    /// Admission control: max summed `DataSource::resident_bytes`
+    /// across admitted sessions (0 = unbounded).
+    pub serve_max_resident_bytes: u64,
+    /// Engine steps each tenant advances per scheduling slice (min 1).
+    pub serve_slice_steps: usize,
+    /// Daemon working directory for per-tenant checkpoints/event logs.
+    pub serve_dir: String,
 }
 
 /// Per-plane sizing/arch overrides. Unset fields inherit the
@@ -196,6 +231,13 @@ impl Default for RunConfig {
             dispatch_timeout_ms: 0,
             respawn: String::new(),
             fault: String::new(),
+            tenant: String::new(),
+            step_limit: 0,
+            serve_port: 0,
+            serve_max_sessions: 8,
+            serve_max_resident_bytes: 0,
+            serve_slice_steps: 8,
+            serve_dir: "serve".into(),
         }
     }
 }
@@ -254,6 +296,15 @@ impl RunConfig {
             }
             "respawn" | "pool.respawn" => self.respawn = v.into(),
             "fault" | "pool.fault" => self.fault = v.into(),
+            "tenant" => self.tenant = v.into(),
+            "step_limit" => self.step_limit = v.parse()?,
+            "serve_port" | "serve.port" => self.serve_port = v.parse()?,
+            "serve_max_sessions" | "serve.max_sessions" => self.serve_max_sessions = v.parse()?,
+            "serve_max_resident_bytes" | "serve.max_resident_bytes" => {
+                self.serve_max_resident_bytes = v.parse()?
+            }
+            "serve_slice_steps" | "serve.slice_steps" => self.serve_slice_steps = v.parse()?,
+            "serve_dir" | "serve.dir" => self.serve_dir = v.into(),
             k if k.starts_with("plane.") => self.set_plane(k, v)?,
             other => bail!("unknown config key `{other}`"),
         }
@@ -334,8 +385,9 @@ impl RunConfig {
                     "planes" => "plane.",
                     "data" => "data.",
                     "store" => "store.",
+                    "serve" => "serve.",
                     other => bail!(
-                        "{path:?}:{}: unknown section `[{other}]` (known: [run] [planes] [data] [store])",
+                        "{path:?}:{}: unknown section `[{other}]` (known: [run] [planes] [data] [store] [serve])",
                         lineno + 1
                     ),
                 };
@@ -385,6 +437,12 @@ impl RunConfig {
         // must fail loudly.
         crate::runtime::pool::RespawnPolicy::parse(&self.respawn)?;
         crate::runtime::fault::FaultPlan::parse(&self.fault)?;
+        if self.serve_max_sessions == 0 {
+            bail!("serve.max_sessions must be at least 1");
+        }
+        if self.tenant.contains(|c: char| c.is_whitespace() || c == '/') {
+            bail!("tenant id `{}` must not contain whitespace or `/`", self.tenant);
+        }
         for spec in &self.planes {
             if let Some(ra) = spec.rate_alpha {
                 if !(ra > 0.0 && ra <= 1.0) {
@@ -676,6 +734,74 @@ mod tests {
         tagged.apply_pairs(["dispatch_timeout_ms=99", "respawn=always", "fault=stall@ms=1"])
             .unwrap();
         assert_eq!(tagged.tag(), RunConfig::default().tag());
+    }
+
+    #[test]
+    fn serve_and_tenant_keys_round_trip() {
+        let mut c = RunConfig::default();
+        assert!(c.tenant.is_empty());
+        assert_eq!(c.step_limit, 0, "default runs to completion");
+        assert_eq!(c.serve_port, 0, "default serve port is ephemeral");
+        assert_eq!(c.serve_max_sessions, 8);
+        assert_eq!(c.serve_max_resident_bytes, 0);
+        assert_eq!(c.serve_slice_steps, 8);
+        assert_eq!(c.serve_dir, "serve");
+        c.apply_pairs([
+            "tenant=alice",
+            "step_limit=12",
+            "serve.port=8650",
+            "serve.max_sessions=2",
+            "serve.max_resident_bytes=1048576",
+            "serve.slice_steps=4",
+            "serve.dir=out/served",
+        ])
+        .unwrap();
+        assert_eq!(c.tenant, "alice");
+        assert_eq!(c.step_limit, 12);
+        assert_eq!(c.serve_port, 8650);
+        assert_eq!((c.serve_max_sessions, c.serve_max_resident_bytes), (2, 1_048_576));
+        assert_eq!(c.serve_slice_steps, 4);
+        assert_eq!(c.serve_dir, "out/served");
+        c.validate().unwrap();
+        // bare spellings hit the same fields
+        c.apply_pairs(["serve_port=0", "serve_max_sessions=8", "serve_slice_steps=1"]).unwrap();
+        assert_eq!((c.serve_port, c.serve_max_sessions, c.serve_slice_steps), (0, 8, 1));
+        c.validate().unwrap();
+        // zero sessions and hostile tenant ids fail validation
+        c.serve_max_sessions = 0;
+        assert!(c.validate().is_err());
+        c.serve_max_sessions = 1;
+        c.tenant = "a/b".into();
+        assert!(c.validate().is_err());
+        c.tenant = "a b".into();
+        assert!(c.validate().is_err());
+        c.tenant = "worker-7".into();
+        c.validate().unwrap();
+        // ...and none of it perturbs the run identity tag
+        let mut tagged = RunConfig::default();
+        tagged
+            .apply_pairs(["tenant=bob", "step_limit=3", "serve.max_sessions=2"])
+            .unwrap();
+        assert_eq!(tagged.tag(), RunConfig::default().tag());
+    }
+
+    #[test]
+    fn serve_section_in_config_file() {
+        let dir = std::env::temp_dir().join(format!("rho-cfg-serve-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.cfg");
+        std::fs::write(
+            &path,
+            "[serve]\nport = 0\nmax_sessions = 3\nslice_steps = 16\n[run]\nepochs = 2\n",
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        c.apply_file(&path).unwrap();
+        assert_eq!(c.serve_port, 0);
+        assert_eq!((c.serve_max_sessions, c.serve_slice_steps), (3, 16));
+        assert_eq!(c.epochs, 2, "[run] returns to the flat namespace");
+        c.validate().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

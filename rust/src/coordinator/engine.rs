@@ -218,6 +218,15 @@ pub struct Engine<'a> {
     /// ranking. Off by default — the serialized walk is the bitwise
     /// reference.
     pub speculate: bool,
+    /// Pause the run after this many steps (0 = run to completion).
+    /// The paused step is checkpointed (when a checkpoint path is
+    /// available) and adds no eval point, so a run advanced in
+    /// `step_limit`-sized slices — the `rho serve` scheduling shape —
+    /// produces, with `speculate = 0`, exactly the curve of its
+    /// uninterrupted twin. (With `speculate = 1` every pause flushes
+    /// the lookahead like a checkpoint does, so slice boundaries add
+    /// fresh-scored steps the solo run may not have.)
+    pub step_limit: u64,
 }
 
 /// The data a run trains and evaluates on: any [`DataSource`] for the
@@ -247,6 +256,7 @@ impl<'a> Engine<'a> {
             checkpoint_path: None,
             resume: None,
             speculate: false,
+            step_limit: 0,
         }
     }
 
@@ -388,6 +398,16 @@ impl<'a> Engine<'a> {
             None => None,
         };
         let start_step: u64 = resumed.as_ref().map(|c| c.step).unwrap_or(0);
+        // Scheduling slice: with a step limit the run walks only
+        // [start_step, end_step] this invocation and checkpoints at the
+        // pause point. Eval boundaries still key on `total_steps`, so a
+        // pause adds no eval point and the stitched curve equals the
+        // uninterrupted run's.
+        let end_step: u64 = if self.step_limit > 0 {
+            (start_step + self.step_limit).min(total_steps)
+        } else {
+            total_steps
+        };
 
         // --- run state ----------------------------------------------
         let mut rng = match &resumed {
@@ -461,6 +481,7 @@ impl<'a> Engine<'a> {
             (false, true) => EventLog::append(std::path::Path::new(&cfg.events))?,
             (false, false) => EventLog::create(std::path::Path::new(&cfg.events))?,
         };
+        events.set_tenant(&cfg.tenant);
         events.run_start(&cfg.tag(), n, total_steps);
         if let (Some(c), Some(path)) = (&resumed, &self.resume) {
             events.resume(c.step, &path.to_string_lossy());
@@ -506,7 +527,11 @@ impl<'a> Engine<'a> {
         // next eval boundary.
         let mut last_recovery: Vec<RecoveryCounters> =
             plane_list.iter().map(|p| p.pool.recovery_counters()).collect();
-        let ckpt_path: Option<PathBuf> = if self.checkpoint_every > 0 {
+        // A step-limited run always checkpoints its pause point —
+        // that's the only thing that makes the next slice resumable —
+        // so `step_limit > 0` enables the path even with periodic
+        // checkpointing off.
+        let ckpt_path: Option<PathBuf> = if self.checkpoint_every > 0 || end_step < total_steps {
             Some(self.checkpoint_path.clone().unwrap_or_else(|| cfg.checkpoint_file()))
         } else {
             None
@@ -547,7 +572,7 @@ impl<'a> Engine<'a> {
             let hint_stride = (sampler.window() / 2).max(big);
             let producer = scope.spawn(move || {
                 let mut next_hint_pos = 0u64;
-                for step in (start_step + 1)..=total_steps {
+                for step in (start_step + 1)..=end_step {
                     let (idx, rolled) = sampler.take_batch(big);
                     let cursor = sampler.cursor();
                     if wants_prefetch && (rolled || cursor.pos >= next_hint_pos) {
@@ -601,7 +626,7 @@ impl<'a> Engine<'a> {
                 };
                 let mut lookahead: Option<Lookahead> = None;
                 let d = self.target.d;
-                for _ in start_step..total_steps {
+                for _ in start_step..end_step {
                     // A step's batch is the armed lookahead when one
                     // exists (speculate=1), else fresh off the channel
                     // — the speculate=0 path recvs here exactly like
@@ -704,7 +729,7 @@ impl<'a> Engine<'a> {
                     // provider::submit_ahead); the θ_t snapshot is
                     // stashed so step t+1 resolves against exactly the
                     // parameters it was submitted with.
-                    if self.speculate && b.step < total_steps {
+                    if self.speculate && b.step < end_step {
                         let next =
                             rx.recv().map_err(|_| anyhow!("candidate producer died"))?;
                         let theta_now = state.theta_snapshot();
@@ -855,7 +880,9 @@ impl<'a> Engine<'a> {
                     // async IL driver is synced so the saved IL state
                     // reflects every update up to this step
                     if let Some(path) = &ckpt_path {
-                        if b.step % self.checkpoint_every == 0 || b.step == total_steps {
+                        if (self.checkpoint_every > 0 && b.step % self.checkpoint_every == 0)
+                            || b.step == end_step
+                        {
                             // Drain-before-save: a speculative ticket
                             // must not straddle the checkpoint. Drop
                             // the stack's held tickets (the pools
@@ -913,7 +940,7 @@ impl<'a> Engine<'a> {
             .map(|(p, start)| DispatchTimings::from_report(&p.name, &p.pool.report().since(start)))
             .collect();
         if self.speculate {
-            events.speculation(accepted_stale, spec_flushes, total_steps - start_step);
+            events.speculation(accepted_stale, spec_flushes, end_step - start_step);
         }
         // Emitted at the end of the run so a windowed remote source
         // reports its settled residency and final cache counters, not
@@ -950,7 +977,8 @@ impl<'a> Engine<'a> {
             curve,
             tracker,
             state,
-            steps: total_steps - start_step,
+            steps: end_step - start_step,
+            paused: end_step < total_steps,
             train_secs: sw.elapsed_s(),
             il_final_accuracy,
             plane_timings,

@@ -22,6 +22,11 @@ pub struct EventLog {
     pub written: u64,
     /// I/O errors swallowed (training must not die on log failure).
     pub errors: u64,
+    /// Tenant id stamped on every event ("" = untenanted, no field
+    /// emitted). Set by the engine from `RunConfig::tenant` so a
+    /// multi-session daemon's shared tooling can attribute
+    /// `pool_stats`/`run_summary` lines per session.
+    tenant: String,
 }
 
 impl EventLog {
@@ -29,7 +34,12 @@ impl EventLog {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        Ok(EventLog { w: Some(BufWriter::new(File::create(path)?)), written: 0, errors: 0 })
+        Ok(EventLog {
+            w: Some(BufWriter::new(File::create(path)?)),
+            written: 0,
+            errors: 0,
+            tenant: String::new(),
+        })
     }
 
     /// Append to an existing log (resumed sessions continue the same
@@ -39,16 +49,22 @@ impl EventLog {
             std::fs::create_dir_all(dir)?;
         }
         let f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
-        Ok(EventLog { w: Some(BufWriter::new(f)), written: 0, errors: 0 })
+        Ok(EventLog { w: Some(BufWriter::new(f)), written: 0, errors: 0, tenant: String::new() })
     }
 
     /// A sink that drops everything (the default in Session).
     pub fn disabled() -> EventLog {
-        EventLog { w: None, written: 0, errors: 0 }
+        EventLog { w: None, written: 0, errors: 0, tenant: String::new() }
     }
 
     pub fn is_enabled(&self) -> bool {
         self.w.is_some()
+    }
+
+    /// Stamp every subsequent event with a `tenant` field ("" turns
+    /// the stamp off again).
+    pub fn set_tenant(&mut self, tenant: &str) {
+        self.tenant = tenant.to_string();
     }
 
     fn unix_time() -> f64 {
@@ -59,6 +75,9 @@ impl EventLog {
     pub fn emit(&mut self, kind: &str, mut fields: Vec<(&str, Value)>) {
         let Some(w) = self.w.as_mut() else { return };
         let mut kvs = vec![("t", num(Self::unix_time())), ("kind", s(kind))];
+        if !self.tenant.is_empty() {
+            kvs.push(("tenant", s(&self.tenant)));
+        }
         kvs.append(&mut fields);
         let line = obj(kvs).to_json();
         match writeln!(w, "{line}") {
@@ -279,6 +298,28 @@ mod tests {
         assert_eq!(ev.get("kind").unwrap().as_str(), Some("eval"));
         assert_eq!(ev.get("accuracy").unwrap().as_f64(), Some(0.8999999761581421));
         std::fs::remove_dir_all(tmp("a")).ok();
+    }
+
+    #[test]
+    fn tenant_stamp_keys_every_event() {
+        let path = tmp("tn").join("run.jsonl");
+        let mut log = EventLog::create(&path).unwrap();
+        log.run_start("tag", 10, 5); // pre-stamp: no tenant field
+        log.set_tenant("alice");
+        log.eval(1, 0.5, 0.9, 0.3);
+        log.checkpoint(1, "serve/alice.ckpt");
+        log.set_tenant("");
+        log.run_end(0.9, 0.1);
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(json::parse(lines[0]).unwrap().get("tenant").is_none());
+        for line in &lines[1..3] {
+            let v = json::parse(line).unwrap();
+            assert_eq!(v.get("tenant").unwrap().as_str(), Some("alice"), "{line}");
+        }
+        assert!(json::parse(lines[3]).unwrap().get("tenant").is_none(), "stamp cleared");
+        std::fs::remove_dir_all(tmp("tn")).ok();
     }
 
     #[test]

@@ -16,13 +16,18 @@
 //! [`checkpoint::SessionCheckpoint`] writes and resume for
 //! Clothing-1M-scale runs. Reference semantics are bit-identical at
 //! one worker per plane, asserted by the parity suite in
-//! `tests/session_integration.rs`.
+//! `tests/session_integration.rs`. On top of single runs, the
+//! [`scheduler`] subsystem ("selection as a service", `rho serve`)
+//! multiplexes N concurrent tenant sessions over one shared plane
+//! registry in bounded, checkpointed slices — weighted-fair and
+//! bitwise-equal to each tenant's solo run.
 
 pub mod checkpoint;
 pub mod engine;
 pub mod events;
 pub mod il_model;
 pub mod metrics;
+pub mod scheduler;
 pub mod session;
 pub mod tracker;
 
@@ -31,5 +36,6 @@ pub use engine::{CandBatch, Engine, RunData};
 pub use events::EventLog;
 pub use il_model::{compute_il, no_holdout_il, train_il, IlModel, IlTrainConfig};
 pub use metrics::{fmt_epochs, mean_curve, Curve, EvalPoint};
+pub use scheduler::{Daemon, SliceRunner, TenantScheduler};
 pub use session::{IlContext, RunResult, Session};
 pub use tracker::SelectionTracker;

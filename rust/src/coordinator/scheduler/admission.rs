@@ -1,0 +1,117 @@
+//! Admission control for the serve daemon: bounded concurrent
+//! sessions and bounded summed data-plane residency.
+//!
+//! The daemon is a cooperative single-thread scheduler, so the cost of
+//! one more tenant is not CPU contention but *memory*: every admitted
+//! session pins its train/test sources (or its remote-shard cache
+//! window) resident. [`AdmissionPolicy`] checks both axes before a
+//! `submit` is accepted — against `serve.max_sessions` and against
+//! `serve.max_resident_bytes` vs the sum of admitted tenants'
+//! [`DataSource::resident_bytes`](crate::data::DataSource::resident_bytes)
+//! — and rejects with a typed [`AdmissionError`] that the wire layer
+//! renders verbatim into the `submit` reply. Rejection is not
+//! eviction: an over-budget submit leaves every admitted tenant
+//! untouched.
+
+use std::fmt;
+
+/// Why a `submit` was refused.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionError {
+    /// The daemon already runs `serve.max_sessions` tenants.
+    SessionsFull { active: usize, max: usize },
+    /// Admitting the tenant would push summed data residency past
+    /// `serve.max_resident_bytes`.
+    ResidentBytes { resident: u64, incoming: u64, max: u64 },
+}
+
+impl fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdmissionError::SessionsFull { active, max } => {
+                write!(f, "admission refused: {active} of {max} sessions active")
+            }
+            AdmissionError::ResidentBytes { resident, incoming, max } => write!(
+                f,
+                "admission refused: {incoming} incoming bytes would push residency \
+                 to {} of {max} bytes",
+                resident.saturating_add(*incoming)
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// The serve daemon's admission limits (`serve.max_sessions`,
+/// `serve.max_resident_bytes`; 0 bytes = unmetered).
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionPolicy {
+    pub max_sessions: usize,
+    pub max_resident_bytes: u64,
+}
+
+impl AdmissionPolicy {
+    /// May a tenant whose data sources pin `incoming_bytes` join,
+    /// given `active` admitted sessions already pinning
+    /// `resident_now` bytes?
+    pub fn admit(
+        &self,
+        active: usize,
+        resident_now: u64,
+        incoming_bytes: u64,
+    ) -> Result<(), AdmissionError> {
+        if active >= self.max_sessions {
+            return Err(AdmissionError::SessionsFull { active, max: self.max_sessions });
+        }
+        if self.max_resident_bytes > 0
+            && resident_now.saturating_add(incoming_bytes) > self.max_resident_bytes
+        {
+            return Err(AdmissionError::ResidentBytes {
+                resident: resident_now,
+                incoming: incoming_bytes,
+                max: self.max_resident_bytes,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_cap_is_enforced() {
+        let p = AdmissionPolicy { max_sessions: 2, max_resident_bytes: 0 };
+        assert!(p.admit(0, 0, 1 << 30).is_ok());
+        assert!(p.admit(1, 0, 0).is_ok());
+        assert_eq!(
+            p.admit(2, 0, 0),
+            Err(AdmissionError::SessionsFull { active: 2, max: 2 })
+        );
+    }
+
+    #[test]
+    fn resident_budget_is_enforced_and_zero_means_unmetered() {
+        let p = AdmissionPolicy { max_sessions: 8, max_resident_bytes: 1000 };
+        assert!(p.admit(0, 0, 1000).is_ok());
+        assert!(p.admit(1, 400, 600).is_ok());
+        assert_eq!(
+            p.admit(1, 400, 601),
+            Err(AdmissionError::ResidentBytes { resident: 400, incoming: 601, max: 1000 })
+        );
+        // overflow-hostile accounting saturates instead of wrapping
+        assert!(p.admit(1, u64::MAX, u64::MAX).is_err());
+        let unmetered = AdmissionPolicy { max_sessions: 8, max_resident_bytes: 0 };
+        assert!(unmetered.admit(1, u64::MAX - 1, 1).is_ok());
+    }
+
+    #[test]
+    fn errors_render_actionable_messages() {
+        let e = AdmissionError::SessionsFull { active: 8, max: 8 };
+        assert!(e.to_string().contains("8 of 8 sessions"));
+        let e = AdmissionError::ResidentBytes { resident: 10, incoming: 5, max: 12 };
+        assert!(e.to_string().contains("15 of 12 bytes"), "{e}");
+    }
+}

@@ -1,0 +1,675 @@
+//! The serve daemon: tenant registry, admission, and the cooperative
+//! slice loop.
+//!
+//! [`Daemon`] owns the scheduling state — which tenants exist, their
+//! weights, their accumulated progress — and advances exactly one
+//! tenant per [`tick`](Daemon::tick) by `serve.slice_steps` engine
+//! steps. All engine mechanics are behind the [`SliceRunner`] trait:
+//! the daemon only decides *who* runs, *how many* lanes it gets, and
+//! *which* checkpoint it resumes from. That keeps every scheduling
+//! decision unit-testable with a mock runner (no compiled-kernel
+//! artifacts), while `experiments::common::Lab`'s served mode supplies
+//! the real artifact-backed runner.
+//!
+//! Progress invariants the tests pin:
+//! - A tenant's slices resume strictly from its own checkpoint
+//!   (`serve.dir/tenant-<id>.ckpt`), so its step trajectory is the
+//!   solo trajectory regardless of interleaving — bitwise, given the
+//!   engine's `step_limit` slicing guarantee.
+//! - Eviction only deschedules: the pause checkpoint every slice
+//!   already wrote *is* the eviction checkpoint, and readmission walks
+//!   back into the same slice loop with the same config. Eviction
+//!   releases the tenant's residency budget; readmission re-passes
+//!   admission.
+//! - One tenant's failure (a [`SliceRunner`] error) marks that tenant
+//!   `Failed` and deschedules it; everyone else keeps running.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::scheduler::admission::AdmissionPolicy;
+use crate::coordinator::scheduler::tenant::{sanitize_weight, TenantScheduler};
+use crate::coordinator::scheduler::wire::{reply_err, reply_ok, ControlMsg, ControlRequest};
+use crate::util::json::{arr, num, obj, s, Value};
+
+/// What one scheduling slice reported back.
+#[derive(Debug, Clone, Default)]
+pub struct SliceOutcome {
+    /// Engine steps actually advanced (≤ the slice's `step_limit`).
+    pub steps: u64,
+    /// The run reached its final step (not just the slice boundary).
+    pub done: bool,
+    /// Wall seconds of training inside the slice.
+    pub train_secs: f64,
+    /// Any plane absorbed a fault during the slice.
+    pub degraded: bool,
+    /// Eval points the slice crossed, as `(step, accuracy, loss)` —
+    /// accumulated per tenant so a served curve can be compared
+    /// bitwise against the tenant's solo run.
+    pub evals: Vec<(u64, f32, f32)>,
+}
+
+/// The engine mechanics a [`Daemon`] schedules over.
+///
+/// `run_slice` must honor `cfg.step_limit` / `cfg.resume` /
+/// `cfg.checkpoint_path` with the engine's slicing contract: pause at
+/// the limit, checkpoint the pause point, resume bitwise.
+pub trait SliceRunner {
+    /// Worker lanes on the shared scoring plane — the lane-grant
+    /// domain.
+    fn lanes(&self) -> usize;
+    /// Bytes `cfg`'s data sources pin resident (admission input).
+    fn resident_bytes(&mut self, cfg: &RunConfig) -> Result<u64>;
+    /// Apply (`Some`) or clear (`None`) the tenant lane grant on the
+    /// shared pools before/after a slice.
+    fn set_lane_grant(&mut self, grant: Option<&[usize]>);
+    /// Advance `cfg`'s run by at most `cfg.step_limit` steps.
+    fn run_slice(&mut self, cfg: &RunConfig) -> Result<SliceOutcome>;
+}
+
+/// Tenant lifecycle. `Active` tenants are in the slice rotation;
+/// every other state is descheduled.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TenantState {
+    Active,
+    /// Descheduled with its pause checkpoint on disk; resubmit to
+    /// resume.
+    Evicted,
+    Done,
+    /// The runner errored; the message is surfaced in `status`.
+    Failed(String),
+}
+
+impl TenantState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TenantState::Active => "active",
+            TenantState::Evicted => "evicted",
+            TenantState::Done => "done",
+            TenantState::Failed(_) => "failed",
+        }
+    }
+}
+
+/// One tenant's row in a `status` reply.
+#[derive(Debug, Clone)]
+pub struct TenantStatus {
+    pub tenant: String,
+    pub state: TenantState,
+    pub weight: f64,
+    pub steps: u64,
+    pub slices: u64,
+    pub train_secs: f64,
+    pub resident_bytes: u64,
+    pub degraded: bool,
+    /// Eval points crossed so far (curve length).
+    pub evals: usize,
+}
+
+impl TenantStatus {
+    /// Render for the wire (`status` reply rows).
+    pub fn to_value(&self) -> Value {
+        let mut kvs = vec![
+            ("tenant", s(&self.tenant)),
+            ("state", s(self.state.name())),
+            ("weight", num(self.weight)),
+            ("steps", num(self.steps as f64)),
+            ("slices", num(self.slices as f64)),
+            ("train_secs", num(self.train_secs)),
+            ("resident_bytes", num(self.resident_bytes as f64)),
+            ("degraded", Value::Bool(self.degraded)),
+            ("evals", num(self.evals as f64)),
+        ];
+        if let TenantState::Failed(e) = &self.state {
+            kvs.push(("error", s(e)));
+        }
+        obj(kvs)
+    }
+}
+
+struct Tenant {
+    cfg: RunConfig,
+    weight: f64,
+    state: TenantState,
+    steps: u64,
+    slices: u64,
+    train_secs: f64,
+    resident_bytes: u64,
+    degraded: bool,
+    /// At least one slice ran, so the pause checkpoint exists and
+    /// later slices must resume from it.
+    started: bool,
+    /// Accumulated eval curve across slices, `(step, accuracy, loss)`.
+    /// This is the tenant's training curve as the daemon observed it —
+    /// the bitwise acceptance tests compare it against a solo run.
+    evals: Vec<(u64, f32, f32)>,
+}
+
+/// The serve scheduler: admission + weighted fair slicing over a
+/// [`SliceRunner`].
+pub struct Daemon<R> {
+    base: RunConfig,
+    runner: R,
+    policy: AdmissionPolicy,
+    sched: TenantScheduler,
+    tenants: BTreeMap<String, Tenant>,
+}
+
+impl<R: SliceRunner> Daemon<R> {
+    /// `base` supplies the `serve.*` keys and the defaults every
+    /// submitted config starts from.
+    pub fn new(base: RunConfig, runner: R) -> Daemon<R> {
+        let policy = AdmissionPolicy {
+            max_sessions: base.serve_max_sessions,
+            max_resident_bytes: base.serve_max_resident_bytes,
+        };
+        Daemon { base, runner, policy, sched: TenantScheduler::new(), tenants: BTreeMap::new() }
+    }
+
+    fn ckpt_path(&self, tenant: &str) -> String {
+        format!("{}/tenant-{tenant}.ckpt", self.base.serve_dir)
+    }
+
+    fn events_path(&self, tenant: &str) -> String {
+        format!("{}/tenant-{tenant}.jsonl", self.base.serve_dir)
+    }
+
+    fn active_count(&self) -> usize {
+        self.tenants.values().filter(|t| t.state == TenantState::Active).count()
+    }
+
+    fn resident_sum(&self) -> u64 {
+        self.tenants
+            .values()
+            .filter(|t| t.state == TenantState::Active)
+            .fold(0u64, |a, t| a.saturating_add(t.resident_bytes))
+    }
+
+    /// Tenants still in the slice rotation.
+    pub fn runnable(&self) -> usize {
+        self.sched.len()
+    }
+
+    /// A tenant's accumulated eval curve, `(step, accuracy, loss)`.
+    pub fn evals(&self, tenant: &str) -> Option<&[(u64, f32, f32)]> {
+        self.tenants.get(tenant).map(|t| t.evals.as_slice())
+    }
+
+    /// The underlying runner — tests use this to reach through to the
+    /// shared pool registry (e.g. to force hostile worker rates).
+    pub fn runner_mut(&mut self) -> &mut R {
+        &mut self.runner
+    }
+
+    /// Admit a new tenant (building its config as `base` + `pairs`) or
+    /// readmit an evicted one (`pairs` must then be empty — readmission
+    /// resumes the original config, anything else couldn't be bitwise).
+    /// Returns the tenant's resident bytes. Errors are wire-ready
+    /// strings.
+    pub fn submit(
+        &mut self,
+        tenant: &str,
+        weight: f64,
+        pairs: &[(String, String)],
+    ) -> std::result::Result<u64, String> {
+        if let Some(t) = self.tenants.get(tenant) {
+            let (state, bytes) = (t.state.clone(), t.resident_bytes);
+            return match state {
+                TenantState::Active => Err(format!("tenant {tenant:?} is already admitted")),
+                TenantState::Done => {
+                    Err(format!("tenant {tenant:?} already completed; pick a new id"))
+                }
+                TenantState::Failed(_) => {
+                    Err(format!("tenant {tenant:?} failed; pick a new id"))
+                }
+                TenantState::Evicted => {
+                    if !pairs.is_empty() {
+                        return Err(format!(
+                            "tenant {tenant:?} is evicted; readmission resumes the \
+                             original config — resubmit without cfg"
+                        ));
+                    }
+                    self.policy
+                        .admit(self.active_count(), self.resident_sum(), bytes)
+                        .map_err(|e| e.to_string())?;
+                    let weight = sanitize_weight(weight);
+                    let t = self.tenants.get_mut(tenant).expect("present above");
+                    t.state = TenantState::Active;
+                    t.weight = weight;
+                    self.sched.add(tenant, weight);
+                    Ok(bytes)
+                }
+            };
+        }
+
+        let mut cfg = self.base.clone();
+        for (k, v) in pairs {
+            cfg.set(k, v).map_err(|e| format!("cfg {k}={v}: {e}"))?;
+        }
+        cfg.tenant = tenant.to_string();
+        // The daemon owns checkpoint/event paths — per-tenant files
+        // under serve.dir, whatever the submitted pairs said.
+        cfg.checkpoint_path = self.ckpt_path(tenant);
+        cfg.events = self.events_path(tenant);
+        cfg.validate().map_err(|e| e.to_string())?;
+        let bytes = self.runner.resident_bytes(&cfg).map_err(|e| e.to_string())?;
+        self.policy
+            .admit(self.active_count(), self.resident_sum(), bytes)
+            .map_err(|e| e.to_string())?;
+        if let Err(e) = std::fs::create_dir_all(&self.base.serve_dir) {
+            return Err(format!("serve.dir {:?}: {e}", self.base.serve_dir));
+        }
+        let weight = sanitize_weight(weight);
+        self.tenants.insert(
+            tenant.to_string(),
+            Tenant {
+                cfg,
+                weight,
+                state: TenantState::Active,
+                steps: 0,
+                slices: 0,
+                train_secs: 0.0,
+                resident_bytes: bytes,
+                degraded: false,
+                started: false,
+                evals: Vec::new(),
+            },
+        );
+        self.sched.add(tenant, weight);
+        Ok(bytes)
+    }
+
+    /// Deschedule an active tenant. Its last slice's pause checkpoint
+    /// stays on disk; a later `submit` with the same id resumes from
+    /// it bitwise.
+    pub fn evict(&mut self, tenant: &str) -> std::result::Result<(), String> {
+        match self.tenants.get_mut(tenant) {
+            None => Err(format!("unknown tenant {tenant:?}")),
+            Some(t) if t.state == TenantState::Active => {
+                t.state = TenantState::Evicted;
+                self.sched.remove(tenant);
+                Ok(())
+            }
+            Some(t) => Err(format!(
+                "tenant {tenant:?} is {}, not active",
+                t.state.name()
+            )),
+        }
+    }
+
+    /// Status rows — one tenant, or all (deterministic id order).
+    pub fn status(&self, tenant: Option<&str>) -> Vec<TenantStatus> {
+        self.tenants
+            .iter()
+            .filter(|(id, _)| tenant.is_none_or(|want| want == *id))
+            .map(|(id, t)| TenantStatus {
+                tenant: id.clone(),
+                state: t.state.clone(),
+                weight: t.weight,
+                steps: t.steps,
+                slices: t.slices,
+                train_secs: t.train_secs,
+                resident_bytes: t.resident_bytes,
+                degraded: t.degraded,
+                evals: t.evals.len(),
+            })
+            .collect()
+    }
+
+    /// Advance one scheduling slice: pick the next tenant by weighted
+    /// deficit, apply its lane grant, run `serve.slice_steps` engine
+    /// steps from its checkpoint, record progress. Returns the tenant
+    /// that ran, or `None` when the rotation is empty.
+    pub fn tick(&mut self) -> Option<String> {
+        let id = self.sched.next_slice()?.to_string();
+        // Full lanes when alone — identical to a solo run's pool.
+        let grant = if self.sched.len() > 1 {
+            self.sched.lane_grant_for(&id, self.runner.lanes())
+        } else {
+            None
+        };
+
+        let slice_cfg = {
+            let t = self.tenants.get(&id)?;
+            let mut cfg = t.cfg.clone();
+            cfg.step_limit = self.base.serve_slice_steps.max(1);
+            if t.started {
+                cfg.resume = self.ckpt_path(&id);
+            }
+            cfg
+        };
+
+        self.runner.set_lane_grant(grant.as_deref());
+        let out = self.runner.run_slice(&slice_cfg);
+        self.runner.set_lane_grant(None);
+
+        let t = self.tenants.get_mut(&id).expect("present above");
+        match out {
+            Err(e) => {
+                t.state = TenantState::Failed(e.to_string());
+                self.sched.remove(&id);
+            }
+            Ok(o) => {
+                t.started = true;
+                t.steps += o.steps;
+                t.slices += 1;
+                t.train_secs += o.train_secs;
+                t.degraded |= o.degraded;
+                t.evals.extend_from_slice(&o.evals);
+                if o.done {
+                    t.state = TenantState::Done;
+                    self.sched.remove(&id);
+                }
+            }
+        }
+        Some(id)
+    }
+
+    /// Answer one control request; `true` means shutdown was asked.
+    pub fn handle(&mut self, msg: ControlMsg) -> bool {
+        let (req, reply) = msg;
+        let (value, stop) = match &req {
+            ControlRequest::Submit { tenant, weight, pairs } => (
+                match self.submit(tenant, *weight, pairs) {
+                    Ok(bytes) => reply_ok(vec![
+                        ("tenant", s(tenant)),
+                        ("resident_bytes", num(bytes as f64)),
+                    ]),
+                    Err(e) => reply_err(&e),
+                },
+                false,
+            ),
+            ControlRequest::Status { tenant } => {
+                let rows = self.status(tenant.as_deref());
+                if tenant.is_some() && rows.is_empty() {
+                    (reply_err("unknown tenant"), false)
+                } else {
+                    (
+                        reply_ok(vec![(
+                            "tenants",
+                            arr(rows.iter().map(TenantStatus::to_value)),
+                        )]),
+                        false,
+                    )
+                }
+            }
+            ControlRequest::Evict { tenant } => (
+                match self.evict(tenant) {
+                    Ok(()) => reply_ok(vec![("tenant", s(tenant))]),
+                    Err(e) => reply_err(&e),
+                },
+                false,
+            ),
+            ControlRequest::Shutdown => (
+                reply_ok(vec![("runnable", num(self.runnable() as f64))]),
+                true,
+            ),
+        };
+        let _ = reply.send(value);
+        stop
+    }
+
+    /// The daemon loop: between slices drain pending control messages;
+    /// when nothing is runnable, block for the next one. Exits on
+    /// `shutdown` or when every control sender is gone.
+    pub fn run(&mut self, rx: &mpsc::Receiver<ControlMsg>) {
+        loop {
+            loop {
+                match rx.try_recv() {
+                    Ok(msg) => {
+                        if self.handle(msg) {
+                            return;
+                        }
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => return,
+                }
+            }
+            if self.runnable() == 0 {
+                match rx.recv() {
+                    Ok(msg) => {
+                        if self.handle(msg) {
+                            return;
+                        }
+                    }
+                    Err(_) => return,
+                }
+            } else {
+                self.tick();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    /// Scripted engine stand-in: every tenant's run is `total_steps`
+    /// long; each slice advances `min(step_limit, remaining)` and
+    /// records what the daemon asked for.
+    struct MockRunner {
+        lanes: usize,
+        total_steps: u64,
+        progress: HashMap<String, u64>,
+        grant: Option<Vec<usize>>,
+        /// "tenant:steps:resume=<bool>:grant=<lanes|all>" per slice.
+        log: Vec<String>,
+        fail: Option<String>,
+        resident: u64,
+    }
+
+    impl MockRunner {
+        fn new(lanes: usize, total_steps: u64) -> MockRunner {
+            MockRunner {
+                lanes,
+                total_steps,
+                progress: HashMap::new(),
+                grant: None,
+                log: Vec::new(),
+                fail: None,
+                resident: 100,
+            }
+        }
+    }
+
+    impl SliceRunner for MockRunner {
+        fn lanes(&self) -> usize {
+            self.lanes
+        }
+        fn resident_bytes(&mut self, _cfg: &RunConfig) -> Result<u64> {
+            Ok(self.resident)
+        }
+        fn set_lane_grant(&mut self, grant: Option<&[usize]>) {
+            self.grant = grant.map(<[usize]>::to_vec);
+        }
+        fn run_slice(&mut self, cfg: &RunConfig) -> Result<SliceOutcome> {
+            if self.fail.as_deref() == Some(&cfg.tenant) {
+                anyhow::bail!("scripted failure for {}", cfg.tenant);
+            }
+            let done_so_far = *self.progress.get(&cfg.tenant).unwrap_or(&0);
+            // The daemon's resume contract: every slice after the
+            // first resumes from this tenant's own checkpoint.
+            if done_so_far > 0 {
+                assert!(
+                    cfg.resume.contains(&format!("tenant-{}.ckpt", cfg.tenant)),
+                    "slice after the first must resume (tenant {}, resume {:?})",
+                    cfg.tenant,
+                    cfg.resume
+                );
+            } else {
+                assert!(cfg.resume.is_empty(), "first slice must start fresh");
+            }
+            let steps = (cfg.step_limit as u64).min(self.total_steps - done_so_far);
+            self.progress.insert(cfg.tenant.clone(), done_so_far + steps);
+            let grant = match &self.grant {
+                None => "all".to_string(),
+                Some(g) => format!("{g:?}"),
+            };
+            self.log.push(format!("{}:{}:{}", cfg.tenant, steps, grant));
+            Ok(SliceOutcome {
+                steps,
+                done: done_so_far + steps == self.total_steps,
+                train_secs: 0.001,
+                ..SliceOutcome::default()
+            })
+        }
+    }
+
+    fn base_cfg(dir: &str) -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.set("serve.slice_steps", "5").unwrap();
+        cfg.set("serve.max_sessions", "8").unwrap();
+        let dir = format!(
+            "{}/rho-serve-daemon-{dir}-{}",
+            std::env::temp_dir().display(),
+            std::process::id()
+        );
+        cfg.set("serve.dir", &dir).unwrap();
+        cfg
+    }
+
+    #[test]
+    fn weighted_tenants_interleave_fairly_and_complete() {
+        let mut d = Daemon::new(base_cfg("fair"), MockRunner::new(4, 40));
+        d.submit("heavy", 2.0, &[]).unwrap();
+        d.submit("light", 1.0, &[]).unwrap();
+        while d.tick().is_some() {}
+        let rows = d.status(None);
+        assert!(rows.iter().all(|r| r.state == TenantState::Done), "{rows:?}");
+        assert!(rows.iter().all(|r| r.steps == 40));
+        assert_eq!(rows.iter().map(|r| r.slices).sum::<u64>(), 16); // 8 slices each
+        // While both were runnable, heavy got 2 of every 3 slices:
+        // heavy's 8 slices finish inside the first 12.
+        let heavy_done_at = d
+            .runner
+            .log
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.starts_with("heavy:"))
+            .map(|(i, _)| i)
+            .max()
+            .unwrap();
+        assert!(heavy_done_at < 12, "heavy finished at slice {heavy_done_at}");
+    }
+
+    #[test]
+    fn lane_grants_follow_weights_under_contention_and_clear_when_alone() {
+        let mut d = Daemon::new(base_cfg("grants"), MockRunner::new(4, 40));
+        d.submit("heavy", 3.0, &[]).unwrap();
+        d.submit("light", 1.0, &[]).unwrap();
+        while d.tick().is_some() {}
+        // Under contention heavy plans over lanes 0-2, light over lane
+        // 3; once one tenant finishes, the survivor gets all lanes.
+        let contended: Vec<&String> =
+            d.runner.log.iter().take_while(|l| !l.ends_with(":all")).collect();
+        assert!(!contended.is_empty());
+        for l in contended {
+            if l.starts_with("heavy:") {
+                assert!(l.ends_with("[0, 1, 2]"), "{l}");
+            } else {
+                assert!(l.ends_with("[3]"), "{l}");
+            }
+        }
+        assert!(d.runner.log.last().unwrap().ends_with(":all"));
+        // and the grant never leaks past a slice
+        assert_eq!(d.runner.grant, None);
+    }
+
+    #[test]
+    fn admission_caps_sessions_and_resident_bytes() {
+        let mut cfg = base_cfg("admission");
+        cfg.serve_max_sessions = 1;
+        let mut d = Daemon::new(cfg, MockRunner::new(4, 40));
+        d.submit("a", 1.0, &[]).unwrap();
+        let err = d.submit("b", 1.0, &[]).unwrap_err();
+        assert!(err.contains("sessions"), "{err}");
+
+        let mut cfg = base_cfg("resident");
+        cfg.serve_max_resident_bytes = 150; // MockRunner pins 100/tenant
+        let mut d = Daemon::new(cfg, MockRunner::new(4, 40));
+        d.submit("a", 1.0, &[]).unwrap();
+        let err = d.submit("b", 1.0, &[]).unwrap_err();
+        assert!(err.contains("bytes"), "{err}");
+        // Eviction releases the budget...
+        d.evict("a").unwrap();
+        d.submit("b", 1.0, &[]).unwrap();
+        // ...and readmission re-checks it.
+        let err = d.submit("a", 1.0, &[]).unwrap_err();
+        assert!(err.contains("bytes"), "{err}");
+    }
+
+    #[test]
+    fn eviction_deschedules_and_readmission_resumes_from_checkpoint() {
+        let mut d = Daemon::new(base_cfg("evict"), MockRunner::new(4, 40));
+        d.submit("a", 1.0, &[]).unwrap();
+        for _ in 0..3 {
+            d.tick();
+        }
+        d.evict("a").unwrap();
+        assert_eq!(d.tick(), None, "evicted tenant must not run");
+        assert_eq!(d.status(Some("a"))[0].state, TenantState::Evicted);
+        // Double-evict and cfg-carrying readmission are refused.
+        assert!(d.evict("a").unwrap_err().contains("not active"));
+        let err = d.submit("a", 1.0, &[("epochs".into(), "9".into())]).unwrap_err();
+        assert!(err.contains("without cfg"), "{err}");
+        // Clean readmission resumes; total steps are exactly the solo
+        // run's 40 — no replayed or lost slices (MockRunner asserts the
+        // resume path on every post-first slice).
+        d.submit("a", 1.0, &[]).unwrap();
+        while d.tick().is_some() {}
+        let rows = d.status(Some("a"));
+        assert_eq!(rows[0].state, TenantState::Done);
+        assert_eq!(rows[0].steps, 40);
+        assert_eq!(rows[0].slices, 8);
+    }
+
+    #[test]
+    fn one_tenants_failure_leaves_the_rest_running() {
+        let mut runner = MockRunner::new(4, 20);
+        runner.fail = Some("bad".to_string());
+        let mut d = Daemon::new(base_cfg("fail"), runner);
+        d.submit("bad", 1.0, &[]).unwrap();
+        d.submit("good", 1.0, &[]).unwrap();
+        while d.tick().is_some() {}
+        let rows = d.status(None);
+        let bad = rows.iter().find(|r| r.tenant == "bad").unwrap();
+        let good = rows.iter().find(|r| r.tenant == "good").unwrap();
+        assert!(matches!(&bad.state, TenantState::Failed(e) if e.contains("scripted")));
+        assert_eq!(good.state, TenantState::Done);
+        assert_eq!(good.steps, 20);
+        // failed rows carry the error on the wire
+        let v = bad.to_value();
+        assert!(v.to_json().contains("scripted failure"));
+    }
+
+    #[test]
+    fn control_loop_submits_ticks_and_shuts_down() {
+        let (tx, rx) = mpsc::channel();
+        let ask = |tx: &mpsc::Sender<ControlMsg>, req: ControlRequest| {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send((req, rtx)).unwrap();
+            rrx
+        };
+        let submit = ask(
+            &tx,
+            ControlRequest::Submit { tenant: "a".into(), weight: 1.0, pairs: vec![] },
+        );
+        let status = ask(&tx, ControlRequest::Status { tenant: None });
+        let stop = ask(&tx, ControlRequest::Shutdown);
+        let mut d = Daemon::new(base_cfg("loop"), MockRunner::new(4, 10));
+        d.run(&rx);
+        assert_eq!(submit.recv().unwrap().get("ok"), Some(&Value::Bool(true)));
+        assert_eq!(status.recv().unwrap().get("ok"), Some(&Value::Bool(true)));
+        assert_eq!(stop.recv().unwrap().get("ok"), Some(&Value::Bool(true)));
+        // Unknown-tenant status after shutdown still answers via handle().
+        let (rtx, rrx) = mpsc::channel();
+        assert!(!d.handle((ControlRequest::Status { tenant: Some("ghost".into()) }, rtx)));
+        let v = rrx.recv().unwrap();
+        assert_eq!(v.get("ok"), Some(&Value::Bool(false)));
+    }
+}

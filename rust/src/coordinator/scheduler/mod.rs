@@ -1,0 +1,63 @@
+//! Selection-as-a-service: the `rho serve` multi-session scheduler.
+//!
+//! One long-lived daemon multiplexes N concurrent selection sessions
+//! ("tenants") over one shared [`ComputePlane`](crate::runtime::plane)
+//! registry — the "millions of users" direction of the ROADMAP: many
+//! small RHO-LOSS runs sharing fixed scoring hardware instead of one
+//! job per process idling it between runs.
+//!
+//! The scheduling model is cooperative and deterministic. Scoring
+//! pools are single-consumer (`Rc`/`Cell` state pins them to one
+//! thread), so tenants never score concurrently at the dispatch level;
+//! instead the daemon advances one tenant at a time by a bounded
+//! *slice* of engine steps (`serve.slice_steps`, via the engine's
+//! `step_limit`), checkpointing the pause point through the existing
+//! [`SessionCheckpoint`](crate::coordinator::SessionCheckpoint) so the
+//! next slice resumes bitwise. Which tenant runs next is decided by
+//! the [`tenant::TenantScheduler`] — weighted deficit-counter fair
+//! queuing — and before each slice the running tenant's *lane grant*
+//! (its weighted share of each pool's worker lanes, again from the
+//! deficit scheduler) is applied via
+//! [`ScoringPool::set_lane_grant`](crate::runtime::pool::ScoringPool::set_lane_grant).
+//! Chunk windows stay pure functions of `(n, select_batch)`, so a
+//! grant moves chunks between lanes exactly like rate skew does and
+//! every tenant's curve is bitwise-identical to its solo run at any
+//! contention level — the invariant the serve integration suite pins.
+//!
+//! Subsystem layout:
+//! - [`tenant`] — `TenantScheduler`: starvation-free weighted
+//!   deficit-counter slice selection + proportional lane grants
+//!   (largest-remainder with a ≥1-lane top-up, mirroring
+//!   `proportional_shards`).
+//! - [`admission`] — `AdmissionPolicy`: bounded concurrent sessions
+//!   (`serve.max_sessions`) and bounded summed data-plane residency
+//!   (`serve.max_resident_bytes` vs `DataSource::resident_bytes`),
+//!   with typed rejections.
+//! - [`wire`] — the std-only line-delimited JSON control protocol
+//!   over TCP (`submit` / `status` / `evict` / `shutdown`), one
+//!   accept-loop thread feeding the daemon through an mpsc channel
+//!   (the `testserver.rs` listener shape).
+//! - [`daemon`] — `Daemon`: tenant registry, admission, the
+//!   slice loop, per-tenant ledger accounting
+//!   ([`PoolReport::since`](crate::runtime::pool::PoolReport::since)
+//!   snapshots around each slice), checkpoint-on-eviction and bitwise
+//!   readmission. Generic over a [`daemon::SliceRunner`] so the
+//!   scheduling logic is unit-testable without compiled artifacts;
+//!   the artifact-backed runner is `experiments::common::Lab`'s
+//!   served mode.
+//!
+//! Per-tenant observability rides the existing event log: every event
+//! a tenant's slices emit carries a `tenant` field
+//! ([`EventLog::set_tenant`](crate::coordinator::EventLog::set_tenant)
+//! from `RunConfig::tenant`), so `pool_stats` / `run_summary` streams
+//! from one daemon remain attributable per session.
+
+pub mod admission;
+pub mod daemon;
+pub mod tenant;
+pub mod wire;
+
+pub use admission::{AdmissionError, AdmissionPolicy};
+pub use daemon::{Daemon, SliceOutcome, SliceRunner, TenantState, TenantStatus};
+pub use tenant::TenantScheduler;
+pub use wire::{ControlClient, ControlRequest, ControlServer};

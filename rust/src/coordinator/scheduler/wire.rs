@@ -1,0 +1,375 @@
+//! The `rho serve` control protocol: line-delimited JSON over TCP.
+//!
+//! Std-only, like the store test server it borrows its listener shape
+//! from (`data::store::testserver`): one accept-loop thread, a
+//! per-connection handler thread, shutdown via flag + self-connect
+//! wake. Each request is one JSON object on one line; each reply is
+//! one JSON object on one line — `{"ok":true,...}` or
+//! `{"ok":false,"error":"..."}`:
+//!
+//! ```text
+//! {"cmd":"submit","tenant":"alice","weight":2.0,"cfg":{"dataset":"qmnist","epochs":"2"}}
+//! {"cmd":"status"}            {"cmd":"status","tenant":"alice"}
+//! {"cmd":"evict","tenant":"alice"}
+//! {"cmd":"shutdown"}
+//! ```
+//!
+//! The wire layer is transport only: every parsed [`ControlRequest`]
+//! is forwarded over an mpsc channel to the daemon thread together
+//! with a one-shot reply channel, and the handler blocks until the
+//! daemon answers. Scheduling state never lives here, so the protocol
+//! parser round-trips pure ([`parse_request`] ∘
+//! [`ControlRequest::to_value`] = id) and unit-tests without sockets.
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+
+use crate::util::json::{self, num, obj, s, Value};
+
+/// One parsed control-protocol request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ControlRequest {
+    /// Admit a tenant: scheduling weight plus the `key=value` config
+    /// pairs of its run (applied over the daemon's base config).
+    Submit { tenant: String, weight: f64, pairs: Vec<(String, String)> },
+    /// Report one tenant (or all tenants, when `tenant` is omitted).
+    Status { tenant: Option<String> },
+    /// Checkpoint-and-deschedule a tenant (resubmit resumes bitwise).
+    Evict { tenant: String },
+    /// Drain: answer, stop scheduling, exit the daemon loop.
+    Shutdown,
+}
+
+impl ControlRequest {
+    /// Render back to the wire object ([`parse_request`]'s inverse).
+    pub fn to_value(&self) -> Value {
+        match self {
+            ControlRequest::Submit { tenant, weight, pairs } => obj(vec![
+                ("cmd", s("submit")),
+                ("tenant", s(tenant)),
+                ("weight", num(*weight)),
+                (
+                    "cfg",
+                    Value::Object(
+                        pairs.iter().map(|(k, v)| (k.clone(), s(v))).collect(),
+                    ),
+                ),
+            ]),
+            ControlRequest::Status { tenant: Some(t) } => {
+                obj(vec![("cmd", s("status")), ("tenant", s(t))])
+            }
+            ControlRequest::Status { tenant: None } => obj(vec![("cmd", s("status"))]),
+            ControlRequest::Evict { tenant } => {
+                obj(vec![("cmd", s("evict")), ("tenant", s(tenant))])
+            }
+            ControlRequest::Shutdown => obj(vec![("cmd", s("shutdown"))]),
+        }
+    }
+}
+
+fn required_tenant(v: &Value, cmd: &str) -> Result<String, String> {
+    v.get("tenant")
+        .and_then(Value::as_str)
+        .filter(|t| !t.is_empty())
+        .map(str::to_string)
+        .ok_or_else(|| format!("{cmd} requires a non-empty string `tenant`"))
+}
+
+/// Parse one request line. Errors are protocol replies, not panics:
+/// the server answers `{"ok":false,"error":...}` and keeps the
+/// connection.
+pub fn parse_request(line: &str) -> Result<ControlRequest, String> {
+    let v = json::parse(line)?;
+    let cmd = v
+        .get("cmd")
+        .and_then(Value::as_str)
+        .ok_or_else(|| "request needs a string `cmd`".to_string())?;
+    match cmd {
+        "submit" => {
+            let tenant = required_tenant(&v, "submit")?;
+            let weight = v.get("weight").and_then(Value::as_f64).unwrap_or(1.0);
+            let mut pairs = Vec::new();
+            match v.get("cfg") {
+                None => {}
+                Some(Value::Object(kvs)) => {
+                    for (k, val) in kvs {
+                        let rendered = match val {
+                            Value::Str(t) => t.clone(),
+                            Value::Num(n) => json::num(*n).to_json(),
+                            Value::Bool(b) => b.to_string(),
+                            other => {
+                                return Err(format!(
+                                    "cfg.{k} must be a scalar, got {}",
+                                    other.to_json()
+                                ))
+                            }
+                        };
+                        pairs.push((k.clone(), rendered));
+                    }
+                }
+                Some(other) => {
+                    return Err(format!("cfg must be an object, got {}", other.to_json()))
+                }
+            }
+            Ok(ControlRequest::Submit { tenant, weight, pairs })
+        }
+        "status" => {
+            let tenant = match v.get("tenant") {
+                None | Some(Value::Null) => None,
+                Some(_) => Some(required_tenant(&v, "status")?),
+            };
+            Ok(ControlRequest::Status { tenant })
+        }
+        "evict" => Ok(ControlRequest::Evict { tenant: required_tenant(&v, "evict")? }),
+        "shutdown" => Ok(ControlRequest::Shutdown),
+        other => Err(format!(
+            "unknown cmd {other:?} (expected submit|status|evict|shutdown)"
+        )),
+    }
+}
+
+/// `{"ok":true, ...fields}` — the daemon's success reply.
+pub fn reply_ok(mut fields: Vec<(&str, Value)>) -> Value {
+    let mut kvs = vec![("ok", Value::Bool(true))];
+    kvs.append(&mut fields);
+    obj(kvs)
+}
+
+/// `{"ok":false,"error":msg}` — the daemon's failure reply.
+pub fn reply_err(msg: &str) -> Value {
+    obj(vec![("ok", Value::Bool(false)), ("error", s(msg))])
+}
+
+/// A request forwarded to the daemon: the parsed command plus the
+/// one-shot channel its handler blocks on for the reply.
+pub type ControlMsg = (ControlRequest, mpsc::Sender<Value>);
+
+/// The TCP front door: accepts connections, parses request lines,
+/// forwards them to the daemon, writes replies back. Binds
+/// `127.0.0.1` only — the control plane is a loopback protocol, like
+/// the store test server.
+pub struct ControlServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl ControlServer {
+    /// Bind `127.0.0.1:port` (0 = ephemeral — the bound port is in
+    /// [`addr`](Self::addr)) and start the accept loop, forwarding
+    /// parsed requests into `tx`.
+    pub fn bind(port: u16, tx: mpsc::Sender<ControlMsg>) -> io::Result<ControlServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let accept = thread::spawn(move || {
+            for conn in listener.incoming() {
+                if flag.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let tx = tx.clone();
+                thread::spawn(move || handle_connection(stream, tx));
+            }
+        });
+        Ok(ControlServer { addr, shutdown, accept: Some(accept) })
+    }
+
+    /// The bound address (reports the real port for `--port 0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for ControlServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Wake the accept loop so it observes the flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, tx: mpsc::Sender<ControlMsg>) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match parse_request(&line) {
+            Err(e) => reply_err(&e),
+            Ok(req) => {
+                let (rtx, rrx) = mpsc::channel();
+                if tx.send((req, rtx)).is_err() {
+                    reply_err("daemon is shutting down")
+                } else {
+                    rrx.recv().unwrap_or_else(|_| reply_err("daemon dropped the request"))
+                }
+            }
+        };
+        if writer
+            .write_all(format!("{}\n", reply.to_json()).as_bytes())
+            .and_then(|()| writer.flush())
+            .is_err()
+        {
+            break;
+        }
+    }
+}
+
+/// A blocking control-protocol client (CLI `rho serve` helpers, CI
+/// smoke, integration tests): one request out, one reply line back.
+pub struct ControlClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl ControlClient {
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> io::Result<ControlClient> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(ControlClient { writer, reader: BufReader::new(stream) })
+    }
+
+    /// Send one request, block for its reply object. `Err` is
+    /// transport or protocol failure; an `{"ok":false}` reply is a
+    /// *successful* call and left to the caller.
+    pub fn call(&mut self, req: &ControlRequest) -> Result<Value, String> {
+        self.writer
+            .write_all(format!("{}\n", req.to_value().to_json()).as_bytes())
+            .and_then(|()| self.writer.flush())
+            .map_err(|e| format!("control send: {e}"))?;
+        let mut line = String::new();
+        let n = self
+            .reader
+            .read_line(&mut line)
+            .map_err(|e| format!("control recv: {e}"))?;
+        if n == 0 {
+            return Err("control connection closed".to_string());
+        }
+        json::parse(line.trim())
+    }
+
+    /// [`call`](Self::call), then surface `{"ok":false}` as `Err` with
+    /// the daemon's error text.
+    pub fn call_ok(&mut self, req: &ControlRequest) -> Result<Value, String> {
+        let reply = self.call(req)?;
+        if reply.get("ok").and_then(Value::as_bool) == Some(true) {
+            Ok(reply)
+        } else {
+            Err(reply
+                .get("error")
+                .and_then(Value::as_str)
+                .unwrap_or("daemon refused the request")
+                .to_string())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(req: ControlRequest) {
+        let wire = req.to_value().to_json();
+        assert_eq!(parse_request(&wire), Ok(req), "wire: {wire}");
+    }
+
+    #[test]
+    fn requests_round_trip_through_the_wire_format() {
+        round_trip(ControlRequest::Submit {
+            tenant: "alice".into(),
+            weight: 2.5,
+            pairs: vec![("dataset".into(), "qmnist".into()), ("epochs".into(), "2".into())],
+        });
+        round_trip(ControlRequest::Status { tenant: None });
+        round_trip(ControlRequest::Status { tenant: Some("bob".into()) });
+        round_trip(ControlRequest::Evict { tenant: "bob".into() });
+        round_trip(ControlRequest::Shutdown);
+    }
+
+    #[test]
+    fn parse_coerces_scalar_cfg_values_and_defaults_weight() {
+        let req = parse_request(
+            r#"{"cmd":"submit","tenant":"t","cfg":{"epochs":2,"speculate":true}}"#,
+        )
+        .unwrap();
+        let ControlRequest::Submit { tenant, weight, pairs } = req else {
+            panic!("not a submit")
+        };
+        assert_eq!(tenant, "t");
+        assert_eq!(weight, 1.0);
+        assert!(pairs.contains(&("epochs".to_string(), "2".to_string())));
+        assert!(pairs.contains(&("speculate".to_string(), "true".to_string())));
+    }
+
+    #[test]
+    fn malformed_requests_are_protocol_errors_not_panics() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"tenant":"x"}"#).unwrap_err().contains("cmd"));
+        assert!(parse_request(r#"{"cmd":"dance"}"#).unwrap_err().contains("unknown cmd"));
+        assert!(parse_request(r#"{"cmd":"evict"}"#).unwrap_err().contains("tenant"));
+        assert!(parse_request(r#"{"cmd":"submit","tenant":""}"#).is_err());
+        assert!(parse_request(r#"{"cmd":"submit","tenant":"t","cfg":[1]}"#)
+            .unwrap_err()
+            .contains("object"));
+        assert!(parse_request(r#"{"cmd":"submit","tenant":"t","cfg":{"k":[1]}}"#)
+            .unwrap_err()
+            .contains("scalar"));
+    }
+
+    #[test]
+    fn server_round_trips_requests_over_loopback() {
+        let (tx, rx) = mpsc::channel::<ControlMsg>();
+        let server = ControlServer::bind(0, tx).expect("bind ephemeral");
+        // Trivial daemon stand-in: echo the command class back.
+        let daemon = thread::spawn(move || {
+            while let Ok((req, reply)) = rx.recv() {
+                let kind = match &req {
+                    ControlRequest::Submit { tenant, .. } => format!("submit:{tenant}"),
+                    ControlRequest::Status { .. } => "status".into(),
+                    ControlRequest::Evict { .. } => "evict".into(),
+                    ControlRequest::Shutdown => "shutdown".into(),
+                };
+                let _ = reply.send(reply_ok(vec![("kind", s(&kind))]));
+                if matches!(req, ControlRequest::Shutdown) {
+                    break;
+                }
+            }
+        });
+
+        let mut c = ControlClient::connect(server.addr()).expect("connect");
+        let r = c
+            .call_ok(&ControlRequest::Submit {
+                tenant: "alice".into(),
+                weight: 1.0,
+                pairs: vec![],
+            })
+            .expect("submit");
+        assert_eq!(r.get("kind").and_then(Value::as_str), Some("submit:alice"));
+
+        // Parse errors answer on the same connection without killing it.
+        c.writer.write_all(b"garbage\n").unwrap();
+        c.writer.flush().unwrap();
+        let mut line = String::new();
+        c.reader.read_line(&mut line).unwrap();
+        let err = json::parse(line.trim()).unwrap();
+        assert_eq!(err.get("ok").and_then(Value::as_bool), Some(false));
+
+        let r = c.call_ok(&ControlRequest::Shutdown).expect("shutdown");
+        assert_eq!(r.get("kind").and_then(Value::as_str), Some("shutdown"));
+        daemon.join().unwrap();
+        drop(server);
+    }
+}

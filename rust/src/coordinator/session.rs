@@ -58,6 +58,10 @@ pub struct RunResult {
     pub tracker: SelectionTracker,
     pub state: TrainState,
     pub steps: u64,
+    /// The run stopped at a `step_limit` pause point (checkpointed,
+    /// resumable) rather than at its final step. Always false without
+    /// a step limit.
+    pub paused: bool,
     pub train_secs: f64,
     /// Final accuracy of the (possibly online-updated) IL model
     /// (Fig. 7 right). None unless online_il.
@@ -137,6 +141,7 @@ pub struct Session<'a> {
     checkpoint_path: Option<PathBuf>,
     resume: Option<PathBuf>,
     speculate: bool,
+    step_limit: u64,
 }
 
 impl<'a> Session<'a> {
@@ -155,7 +160,17 @@ impl<'a> Session<'a> {
                 .then(|| cfg.checkpoint_file()),
             resume: (!cfg.resume.is_empty()).then(|| PathBuf::from(&cfg.resume)),
             speculate: cfg.speculate,
+            step_limit: cfg.step_limit as u64,
         }
+    }
+
+    /// Pause the run after `steps` engine steps (0 = run to
+    /// completion, the default from the config's `step_limit` key).
+    /// The pause point is checkpointed and resumes bitwise — the
+    /// scheduling-slice primitive of `rho serve`.
+    pub fn step_limit(mut self, steps: u64) -> Self {
+        self.step_limit = steps;
+        self
     }
 
     /// Speculative pipelined stepping: score batch t+1 against θ_t
@@ -239,6 +254,7 @@ impl<'a> Session<'a> {
             checkpoint_path: self.checkpoint_path.clone(),
             resume: self.resume.clone(),
             speculate: self.speculate,
+            step_limit: self.step_limit,
         }
         .run_data(data, il)
     }

@@ -63,6 +63,11 @@ pub struct Lab {
     /// cache is built at open time — two runs with different
     /// `cache_bytes` must not share one.
     remotes: RefCell<HashMap<String, Rc<RemoteStore>>>,
+    /// The current tenant lane grant (serve mode): applied to every
+    /// cached pool *and* to pools built later in the same slice, so a
+    /// tenant whose first slice builds its pool still plans only over
+    /// its granted lanes.
+    lane_grant: RefCell<Option<Vec<usize>>>,
     pub scale: f64,
 }
 
@@ -78,8 +83,38 @@ impl Lab {
             pools: RefCell::new(HashMap::new()),
             stores: RefCell::new(HashMap::new()),
             remotes: RefCell::new(HashMap::new()),
+            lane_grant: RefCell::new(None),
             scale: ctx.scale,
         })
+    }
+
+    /// Apply (or clear, with `None`) a tenant lane grant across the
+    /// whole plane-pool registry — current pools and pools built while
+    /// the grant is in force. Serve-mode only; solo runs never set one.
+    pub fn set_lane_grant(&self, grant: Option<&[usize]>) {
+        *self.lane_grant.borrow_mut() = grant.map(<[usize]>::to_vec);
+        for p in self.pools.borrow().values() {
+            p.set_lane_grant(grant);
+        }
+    }
+
+    /// The widest worker-lane count in the pool registry — the domain
+    /// `rho serve` partitions into tenant lane grants. `fallback` (the
+    /// daemon config's `workers`) covers the moment before any pool is
+    /// built.
+    pub fn max_lanes(&self, fallback: usize) -> usize {
+        self.pools.borrow().values().map(|p| p.workers()).max().unwrap_or(fallback)
+    }
+
+    /// Force every cached pool's worker-rate EMA — the hostile-rate
+    /// injection hook the serve fairness suites use to prove tenant
+    /// curves are rate-independent. Errors if any pool's worker count
+    /// disagrees with `rates.len()`.
+    pub fn force_rates(&self, rates: &[f64]) -> Result<()> {
+        for p in self.pools.borrow().values() {
+            p.force_rates(rates)?;
+        }
+        Ok(())
     }
 
     /// Runtime for (arch, dataset dims), manifest-default train batch.
@@ -201,6 +236,9 @@ impl Lab {
             bail!("`{arch}` has no mcdropout artifact — the `mcd` plane needs one");
         }
         let pool = Rc::new(ScoringPool::new(fwd, sel, mcd, pc)?);
+        if let Some(g) = self.lane_grant.borrow().as_deref() {
+            pool.set_lane_grant(Some(g));
+        }
         self.pools.borrow_mut().insert(key, Rc::clone(&pool));
         Ok(pool)
     }
@@ -460,6 +498,70 @@ impl Lab {
                 self.run_one(&c, bundle)
             })
             .collect()
+    }
+}
+
+/// `Lab`'s served mode: the artifact-backed [`SliceRunner`] behind
+/// `rho serve`. One `ServedLab` wraps one [`Lab`], so every tenant's
+/// slices resolve planes through the *same* [`PlaneKey`]-cached pool
+/// registry — tenants with matching keys literally share workers,
+/// which is the whole point of selection-as-a-service. Lane grants
+/// fan out across that registry via [`Lab::set_lane_grant`], and
+/// admission residency comes from each source's
+/// [`DataSource::resident_bytes`].
+pub struct ServedLab {
+    lab: Lab,
+    /// Lane-count fallback before any pool exists (the daemon base
+    /// config's `workers`).
+    default_lanes: usize,
+}
+
+impl ServedLab {
+    pub fn new(lab: Lab, default_lanes: usize) -> ServedLab {
+        ServedLab { lab, default_lanes }
+    }
+
+    pub fn lab(&self) -> &Lab {
+        &self.lab
+    }
+}
+
+impl crate::coordinator::scheduler::SliceRunner for ServedLab {
+    fn lanes(&self) -> usize {
+        self.lab.max_lanes(self.default_lanes)
+    }
+
+    fn resident_bytes(&mut self, cfg: &RunConfig) -> Result<u64> {
+        Ok(match classify_source(&cfg.source) {
+            SourceSpec::Memory => {
+                let b = self.lab.bundle(&cfg.dataset);
+                b.train.resident_bytes()
+                    + b.holdout.resident_bytes()
+                    + b.val.resident_bytes()
+                    + b.test.resident_bytes()
+            }
+            SourceSpec::Local(root) => self.lab.store(&root)?.train.resident_bytes(),
+            // A remote tenant pins at most its shard-cache bound;
+            // occupancy at submit time (usually 0) would undercount.
+            SourceSpec::Http(_) => {
+                self.lab.remote(cfg)?.train.resident_bytes().max(cfg.cache_bytes)
+            }
+        })
+    }
+
+    fn set_lane_grant(&mut self, grant: Option<&[usize]>) {
+        self.lab.set_lane_grant(grant);
+    }
+
+    fn run_slice(&mut self, cfg: &RunConfig) -> Result<crate::coordinator::scheduler::SliceOutcome> {
+        let r = self.lab.run_auto(cfg)?;
+        Ok(crate::coordinator::scheduler::SliceOutcome {
+            steps: r.steps,
+            done: !r.paused,
+            train_secs: r.train_secs,
+            degraded: r.degraded(),
+            evals: r.curve.points.iter().map(|p| (p.step, p.accuracy, p.loss)).collect(),
+        })
     }
 }
 

@@ -5,6 +5,7 @@
 //!   rho ingest <catalog|csv>     write a sharded on-disk store
 //!   rho score-il data=shards://D precompute IL sidecars for a store
 //!   rho serve-store <dir>        serve a store over HTTP ranged reads
+//!   rho serve [key=value ...]    selection-as-a-service daemon (multi-tenant)
 //!   rho exp <id|all> [opts]      regenerate a paper table/figure
 //!   rho artifacts                list loaded artifacts
 //!   rho info                     PJRT platform info
@@ -38,6 +39,7 @@ fn real_main() -> Result<()> {
         Some("ingest") => cmd_ingest(&args[1..]),
         Some("score-il") => cmd_score_il(&args[1..]),
         Some("serve-store") => cmd_serve_store(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
         Some("exp") => cmd_exp(&args[1..]),
         Some("artifacts") => cmd_artifacts(),
@@ -53,7 +55,7 @@ fn real_main() -> Result<()> {
 fn print_help() {
     println!(
         "rho — RHO-LOSS coordinator (Mindermann et al., ICML 2022)\n\n\
-         usage:\n  rho train [key=value ...] [--data shards://DIR|http://HOST/DIR] [--checkpoint-every N] [--resume PATH] [--speculate]\n  rho ingest <catalog-name|file.csv> [--shard-rows N] [--out DIR] [--scale F]\n  rho score-il data=shards://DIR [il_arch=A] [il_epochs=N] [key=value ...]\n  rho serve-store <DIR> [--port N] [--fault SPEC]   serve a store over HTTP\n  rho inspect [key=value ...]   score one candidate batch, compare methods\n  rho exp <id|all> [--scale F] [--seeds a,b] [--epoch-scale F]\n  rho artifacts\n  rho info\n\n\
+         usage:\n  rho train [key=value ...] [--data shards://DIR|http://HOST/DIR] [--checkpoint-every N] [--resume PATH] [--speculate]\n  rho ingest <catalog-name|file.csv> [--shard-rows N] [--out DIR] [--scale F]\n  rho score-il data=shards://DIR [il_arch=A] [il_epochs=N] [key=value ...]\n  rho serve-store <DIR> [--port N] [--fault SPEC]   serve a store over HTTP\n  rho serve [key=value ...]     multi-tenant selection daemon (line-JSON over TCP)\n  rho inspect [key=value ...]   score one candidate batch, compare methods\n  rho exp <id|all> [--scale F] [--seeds a,b] [--epoch-scale F]\n  rho artifacts\n  rho info\n\n\
          experiments: {}\n\n\
          config keys: dataset arch il_arch method epochs seed nb select_frac lr wd\n\
          eval_every scale track_props no_holdout online_il il_lr_scale\n\
@@ -69,7 +71,13 @@ fn print_help() {
          e.g. rho serve-store stores/c10 --port 8080 &\n              rho train --data http://127.0.0.1:8080 cache_bytes=268435456 window=8192\n\n\
          compute planes ([planes] table): plane.<name>.arch plane.<name>.workers\n\
          plane.<name>.lane_depth plane.<name>.rate_alpha   (names: target il mcd)\n\
-         e.g. rho train method=rho_loss online_il=true workers=4 \\\n              plane.il.workers=2 plane.il.arch=mlp_small",
+         e.g. rho train method=rho_loss online_il=true workers=4 \\\n              plane.il.workers=2 plane.il.arch=mlp_small\n\n\
+         serve daemon ([serve] table): serve.port (0=ephemeral; first line is\n\
+         `listening <addr>`) serve.max_sessions serve.max_resident_bytes (0=unbounded)\n\
+         serve.slice_steps serve.dir\n\
+         protocol (one JSON object per line): {{\"cmd\":\"submit\",\"tenant\":\"t\",\"weight\":2,\n\
+         \"cfg\":{{...}}}} | {{\"cmd\":\"status\"}} | {{\"cmd\":\"evict\",\"tenant\":\"t\"}} | {{\"cmd\":\"shutdown\"}}\n\
+         e.g. rho serve workers=4 serve.max_sessions=4 serve.slice_steps=8",
         experiments::ALL.join(" ")
     );
 }
@@ -295,6 +303,17 @@ fn cmd_score_il(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Announce a bound listener as the FIRST output line, flushed, in the
+/// fixed `listening <addr>` shape — so a parent process (the CI smoke
+/// legs) can start with `--port 0`, scrape the ephemeral port, and
+/// never collide on a hardcoded one. Shared by `rho serve-store` and
+/// `rho serve`.
+fn announce_listening(addr: &str) {
+    use std::io::Write;
+    println!("listening {addr}");
+    let _ = std::io::stdout().flush();
+}
+
 /// `rho serve-store <DIR> [--port N] [--fault SPEC]` — serve an
 /// ingested store over HTTP ranged reads so remote nodes can train
 /// with `rho train --data http://host:port`. Pure data-plane: needs no
@@ -333,6 +352,7 @@ fn cmd_serve_store(args: &[String]) -> Result<()> {
     }
     let plan = rho::runtime::fault::FaultPlan::parse(&fault)?;
     let server = rho::data::store::TestServer::serve_on(root, port, plan)?;
+    announce_listening(&server.url());
     println!(
         "serving `{}` (d={}, classes={}) from {} at {}",
         manifest.name,
@@ -348,6 +368,34 @@ fn cmd_serve_store(args: &[String]) -> Result<()> {
     loop {
         std::thread::park();
     }
+}
+
+/// `rho serve [key=value ...]` — the selection-as-a-service daemon:
+/// N tenant sessions cooperatively share one compute-plane registry,
+/// scheduled in weighted-fair checkpointed slices (every tenant's
+/// curve stays bitwise-identical to its solo run). Control protocol is
+/// line-delimited JSON over loopback TCP (`submit` / `status` /
+/// `evict` / `shutdown`); the bound address is the first output line
+/// (`listening <addr>`, ephemeral with serve.port=0).
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.apply_pairs(args.iter().map(String::as_str))?;
+    cfg.validate()?;
+    let ctx = ExpCtx::new(cfg.scale);
+    let lab = rho::experiments::common::Lab::new(&ctx)?;
+    let runner = rho::experiments::common::ServedLab::new(lab, cfg.workers.max(1));
+    let (tx, rx) = std::sync::mpsc::channel();
+    let server = rho::coordinator::scheduler::ControlServer::bind(cfg.serve_port, tx)?;
+    announce_listening(&server.addr().to_string());
+    println!(
+        "serve: max_sessions={} max_resident_bytes={} slice_steps={} dir={}",
+        cfg.serve_max_sessions, cfg.serve_max_resident_bytes, cfg.serve_slice_steps, cfg.serve_dir
+    );
+    let mut daemon = rho::coordinator::scheduler::Daemon::new(cfg, runner);
+    daemon.run(&rx);
+    println!("serve: shutdown");
+    drop(server);
+    Ok(())
 }
 
 /// Score a single candidate batch with every applicable method and

@@ -1042,6 +1042,9 @@ pub struct ScoringPool {
     any_stalled: Cell<bool>,
     /// Lazily-built coordinator-thread scorer for recovery.
     inline: RefCell<Option<InlineScorer>>,
+    /// Tenant lane grant: when set, dispatch planning only feeds these
+    /// lanes ([`ScoringPool::set_lane_grant`]). `None` = all lanes.
+    lane_grant: RefCell<Option<Vec<usize>>>,
 }
 
 impl ScoringPool {
@@ -1142,12 +1145,19 @@ impl ScoringPool {
             zombie_seqs: RefCell::new(HashMap::new()),
             any_stalled: Cell::new(false),
             inline: RefCell::new(None),
+            lane_grant: RefCell::new(None),
         })
     }
 
     /// Whether this pool can serve `mcdropout` requests.
     pub fn has_mcdropout(&self) -> bool {
         self.has_mcd
+    }
+
+    /// Worker lane count this pool was built with — the lane-grant
+    /// domain `rho serve` partitions across tenants.
+    pub fn workers(&self) -> usize {
+        self.workers
     }
 
     /// Flattened parameter count of the arch this pool was compiled
@@ -1178,6 +1188,32 @@ impl ScoringPool {
     /// a length mismatch is a hard error, not a silent zero-pad.
     pub fn force_rates(&self, rates: &[f64]) -> Result<()> {
         self.rates.lock().unwrap().set(rates).map_err(|e| anyhow!("force_rates: {e}"))
+    }
+
+    /// Restrict dispatch planning to a subset of lanes — the tenant
+    /// share a multi-session scheduler grants this pool's next
+    /// dispatches (`None` lifts the restriction). Chunk windows are
+    /// pure functions of `(n, select_batch)`, so a grant moves chunks
+    /// *between* lanes exactly like rate skew or dead-lane exclusion
+    /// does, never resizing a window — scores stay bitwise-identical
+    /// under any grant, which is what keeps each tenant's curve equal
+    /// to its solo run at any contention level. Out-of-range lane ids
+    /// are dropped; a grant whose live intersection is empty falls
+    /// back to inline scoring at drain (degraded but exact), the same
+    /// path an all-dead pool takes. Lanes outside the grant keep their
+    /// health and rate state untouched.
+    pub fn set_lane_grant(&self, grant: Option<&[usize]>) {
+        *self.lane_grant.borrow_mut() = grant.map(|g| {
+            let mut g: Vec<usize> = g.iter().copied().filter(|&w| w < self.workers).collect();
+            g.sort_unstable();
+            g.dedup();
+            g
+        });
+    }
+
+    /// The active lane grant (`None` = all lanes may be planned).
+    pub fn lane_grant(&self) -> Option<Vec<usize>> {
+        self.lane_grant.borrow().clone()
     }
 
     /// Close one open ledger interval without draining (the
@@ -1358,15 +1394,20 @@ impl ScoringPool {
         }
         let seq = self.seq.get();
         self.seq.set(seq + 1);
-        // Plan over *live* lanes only: a dead worker's zombie loop
-        // would answer every chunk with an error (pointless work), and
-        // a stalled worker already missed a deadline. Chunk windows
-        // are pure functions of (n, select_batch) — exclusion moves
-        // chunks between lanes exactly like rate skew does, without
-        // touching a window's rows, so scores stay bitwise-identical.
+        // Plan over *live, granted* lanes only: a dead worker's zombie
+        // loop would answer every chunk with an error (pointless
+        // work), a stalled worker already missed a deadline, and a
+        // lane outside the tenant grant belongs to another session's
+        // share. Chunk windows are pure functions of
+        // (n, select_batch) — exclusion moves chunks between lanes
+        // exactly like rate skew does, without touching a window's
+        // rows, so scores stay bitwise-identical.
+        let grant = self.lane_grant.borrow();
         let alive: Vec<usize> = (0..self.workers)
             .filter(|&w| relock(&self.health[w]).state == WorkerState::Live)
+            .filter(|w| grant.as_ref().is_none_or(|g| g.contains(w)))
             .collect();
+        drop(grant);
         let inline_all = alive.is_empty();
         let plan = {
             let rates = self.rates.lock().unwrap();

@@ -22,3 +22,23 @@ pub fn env_lock() -> std::sync::MutexGuard<'static, ()> {
     // with their own guards); clear the poison and carry on.
     LOCK.lock().unwrap_or_else(|e| e.into_inner())
 }
+
+/// Multiplier for wall-clock margins in timing-sensitive tests
+/// (injected stalls, dispatch deadlines, settle sleeps), from
+/// `RHO_TEST_TIMESCALE` (default 1.0). Loaded or slow CI runners set
+/// e.g. `RHO_TEST_TIMESCALE=3` to stretch every margin uniformly —
+/// the stall/deadline *ratios* that make the chaos suite deterministic
+/// are preserved, only the absolute scale changes. Non-finite or
+/// non-positive values fall back to 1.0.
+pub fn test_timescale() -> f64 {
+    std::env::var("RHO_TEST_TIMESCALE")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .filter(|t| t.is_finite() && *t > 0.0)
+        .unwrap_or(1.0)
+}
+
+/// `base` milliseconds stretched by [`test_timescale`].
+pub fn scaled_ms(base: u64) -> u64 {
+    (base as f64 * test_timescale()).round() as u64
+}

@@ -545,15 +545,22 @@ fn deadline_expiry_surfaces_typed_dispatch_error() {
     let rt = ModelRuntime::load(Rc::clone(&client), &manifest, "mlp_small", 64, 10).unwrap();
     let theta = rt.init(7).unwrap().theta_snapshot();
     let (batch, il) = rand_batch(1601, 62);
+    // Margins scale with RHO_TEST_TIMESCALE for loaded runners; the
+    // stall must comfortably outlive the deadline, and the settle
+    // sleep must outlive the stall.
+    let stall_ms = rho::util::scaled_ms(2500);
+    let deadline_ms = rho::util::scaled_ms(400);
     let pool = mk_supervised_pool(
         &manifest,
         2,
         "slowpoke",
-        "stall@plane=slowpoke,worker=0,step=0,ms=1500",
-        250,
+        &format!("stall@plane=slowpoke,worker=0,step=0,ms={stall_ms}"),
+        deadline_ms,
         RespawnPolicy::Never,
     );
-    let err = pool.rho(&theta, &batch, &il).expect_err("stalled lane met a 250ms deadline");
+    let err = pool
+        .rho(&theta, &batch, &il)
+        .expect_err("stalled lane met the dispatch deadline");
     let de = err
         .downcast_ref::<DispatchError>()
         .expect("typed DispatchError lost in the anyhow chain");
@@ -561,14 +568,14 @@ fn deadline_expiry_surfaces_typed_dispatch_error() {
     assert_eq!(de.worker, Some(0), "wrong worker blamed: {de}");
     let msg = format!("{err:#}");
     assert!(msg.contains("slowpoke"), "{msg}");
-    assert!(msg.contains("250ms"), "{msg}");
+    assert!(msg.contains(&format!("{deadline_ms}ms")), "{msg}");
     assert!(msg.contains(&format!("seq {}", de.seq)), "{msg}");
     assert_eq!(pool.worker_health()[0].state, WorkerState::Stalled);
     assert_eq!(pool.recovery_counters().deadline_expiries, 1);
     // Once the injected stall ends, the worker's late answers to the
     // abandoned dispatch are swallowed (never mis-parked) and un-stall
     // it; the pool keeps scoring bitwise.
-    std::thread::sleep(std::time::Duration::from_millis(1800));
+    std::thread::sleep(std::time::Duration::from_millis(stall_ms + rho::util::scaled_ms(500)));
     let rho_ref = mk_pool(&manifest, 2).rho(&theta, &batch, &il).unwrap();
     assert_eq!(pool.rho(&theta, &batch, &il).unwrap(), rho_ref);
 }

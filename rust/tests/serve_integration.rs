@@ -1,0 +1,186 @@
+//! Integration: `rho serve` — selection-as-a-service over shared
+//! compute planes, end-to-end against real artifacts.
+//!
+//! The acceptance bar for the multi-session scheduler is bitwise: two
+//! concurrent tenants time-sliced over ONE `PlaneKey`-cached pool
+//! registry must each produce exactly the eval curve of an
+//! uninterrupted solo run — at `workers = 4`, under forced hostile
+//! worker-rate estimates, with lane grants partitioning the pool
+//! between them. And an evicted tenant, readmitted later, must resume
+//! from its pause checkpoint and finish on the same curve.
+//!
+//! These tests drive the [`Daemon`] + [`ServedLab`] pair in-process
+//! (the wire protocol has its own loopback suite in
+//! `coordinator/scheduler/wire.rs`; CI's serve smoke leg covers the
+//! TCP path).
+
+use rho::config::RunConfig;
+use rho::coordinator::scheduler::{Daemon, TenantState};
+use rho::experiments::common::{Lab, ServedLab};
+use rho::experiments::ExpCtx;
+use rho::selection::Method;
+
+fn lab() -> Option<Lab> {
+    let ctx = ExpCtx::new(0.25);
+    if !ctx.artifacts.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Lab::new(&ctx).unwrap())
+}
+
+/// The training config every tenant in these suites runs: pooled
+/// RHO-LOSS at four worker lanes. `seed` is the only per-tenant knob.
+fn tenant_cfg(seed: u64) -> RunConfig {
+    RunConfig {
+        dataset: "qmnist".into(),
+        arch: "mlp_small".into(),
+        il_arch: "logreg".into(),
+        method: Method::RhoLoss,
+        epochs: 4,
+        il_epochs: 6,
+        workers: 4,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Daemon base config: [`tenant_cfg`] defaults plus the `serve.*`
+/// plane. `slice_steps` is deliberately ragged so slice boundaries
+/// never line up with epoch/eval boundaries.
+fn serve_cfg(tag: &str, slice_steps: usize) -> RunConfig {
+    let mut cfg = tenant_cfg(1);
+    cfg.serve_slice_steps = slice_steps;
+    cfg.serve_max_sessions = 8;
+    cfg.serve_dir = format!(
+        "{}/rho-serve-it-{tag}-{}",
+        std::env::temp_dir().display(),
+        std::process::id()
+    );
+    cfg
+}
+
+/// Hostile EMA throughput estimates for an `n`-worker pool: NaN on
+/// the first worker, near-zero on the rest. Chunk windows are pure
+/// functions of `(n, select_batch)`, so even these rates may only move
+/// chunks between lanes — never change a tenant's scores.
+fn hostile_rates(n: usize) -> Vec<f64> {
+    (0..n).map(|i| if i == 0 { f64::NAN } else { 1e-9 }).collect()
+}
+
+/// Drain the daemon's rotation, with a runaway guard.
+fn drain<R: rho::coordinator::SliceRunner>(d: &mut Daemon<R>) {
+    let mut ticks = 0u32;
+    while d.runnable() > 0 {
+        d.tick();
+        ticks += 1;
+        assert!(ticks < 10_000, "serve rotation failed to drain");
+    }
+}
+
+/// Assert a tenant's accumulated served curve equals a solo run's,
+/// bit for bit.
+fn assert_served_curve_bitwise(
+    d: &Daemon<ServedLab>,
+    tenant: &str,
+    solo: &rho::coordinator::Curve,
+) {
+    let evals = d.evals(tenant).unwrap_or_else(|| panic!("tenant {tenant} unknown"));
+    assert_eq!(
+        evals.len(),
+        solo.points.len(),
+        "tenant {tenant}: eval schedule drifted under serve"
+    );
+    for (got, want) in evals.iter().zip(&solo.points) {
+        assert_eq!(got.0, want.step, "tenant {tenant}: eval step drifted");
+        assert_eq!(
+            got.1.to_bits(),
+            want.accuracy.to_bits(),
+            "tenant {tenant}: accuracy diverged at step {} ({} vs {})",
+            want.step,
+            got.1,
+            want.accuracy
+        );
+        assert_eq!(
+            got.2.to_bits(),
+            want.loss.to_bits(),
+            "tenant {tenant}: loss diverged at step {}",
+            want.step
+        );
+    }
+}
+
+/// Two tenants with unequal weights contend for one four-lane pool
+/// under hostile forced rates; both curves must equal their solo runs
+/// bitwise, and both must run to completion.
+#[test]
+fn contending_tenants_match_their_solo_curves_bitwise() {
+    // Solo references: uninterrupted runs, one per seed, natural rates.
+    let Some(solo_lab) = lab() else { return };
+    let mut solo = Vec::new();
+    for seed in [1u64, 2] {
+        let cfg = tenant_cfg(seed);
+        let bundle = solo_lab.bundle(&cfg.dataset);
+        solo.push(solo_lab.run_one(&cfg, &bundle).unwrap());
+    }
+
+    // Served: a FRESH Lab (fresh pool registry) slices both tenants
+    // over the same shared pool.
+    let Some(served_lab) = lab() else { return };
+    let base = serve_cfg("contention", 17);
+    let serve_dir = base.serve_dir.clone();
+    let mut d = Daemon::new(base, ServedLab::new(served_lab, 4));
+    d.submit("a", 3.0, &[("seed".into(), "1".into())]).unwrap();
+    d.submit("b", 1.0, &[("seed".into(), "2".into())]).unwrap();
+
+    // First slice builds the shared pool; then poison its worker-rate
+    // estimates for the rest of the run.
+    assert!(d.tick().is_some());
+    d.runner_mut().lab().force_rates(&hostile_rates(4)).unwrap();
+    drain(&mut d);
+
+    for st in d.status(None) {
+        assert_eq!(st.state, TenantState::Done, "tenant {} did not finish", st.tenant);
+        assert!(st.slices > 1, "tenant {} was not actually time-sliced", st.tenant);
+        assert!(!st.degraded, "tenant {} fell back to inline scoring", st.tenant);
+    }
+    assert_served_curve_bitwise(&d, "a", &solo[0].curve);
+    assert_served_curve_bitwise(&d, "b", &solo[1].curve);
+    let _ = std::fs::remove_dir_all(&serve_dir);
+}
+
+/// A tenant evicted mid-run and readmitted later resumes from its
+/// pause checkpoint and finishes on the solo curve bitwise.
+#[test]
+fn evicted_tenant_resumes_bitwise_from_its_checkpoint() {
+    let Some(solo_lab) = lab() else { return };
+    let cfg = tenant_cfg(5);
+    let bundle = solo_lab.bundle(&cfg.dataset);
+    let solo = solo_lab.run_one(&cfg, &bundle).unwrap();
+
+    let Some(served_lab) = lab() else { return };
+    let base = serve_cfg("evict", 13);
+    let serve_dir = base.serve_dir.clone();
+    let mut d = Daemon::new(base, ServedLab::new(served_lab, 4));
+    d.submit("t", 1.0, &[("seed".into(), "5".into())]).unwrap();
+
+    for _ in 0..3 {
+        assert_eq!(d.tick().as_deref(), Some("t"));
+    }
+    d.evict("t").unwrap();
+    assert_eq!(d.tick(), None, "evicted tenant must leave the rotation");
+    let rows = d.status(Some("t"));
+    assert_eq!(rows[0].state, TenantState::Evicted);
+
+    // Readmission carries no cfg — it resumes the original run from
+    // the checkpoint the eviction left on disk.
+    d.submit("t", 1.0, &[]).unwrap();
+    drain(&mut d);
+
+    let rows = d.status(Some("t"));
+    let st = &rows[0];
+    assert_eq!(st.state, TenantState::Done);
+    assert_eq!(st.steps, solo.steps, "resumed tenant lost steps");
+    assert_served_curve_bitwise(&d, "t", &solo.curve);
+    let _ = std::fs::remove_dir_all(&serve_dir);
+}

@@ -900,11 +900,11 @@ fn checkpoint_after_fault_resumes_bitwise() {
 
 #[test]
 fn stalled_lane_deadline_is_absorbed_by_rescore() {
-    // Deadline + retry-once, end to end: worker 0 wedges for 2s at
-    // step 2, the 300ms dispatch deadline expires, the engine flushes
-    // the providers and re-scores around the stalled lane — against
-    // the same parameters, so the run completes bitwise-equal to the
-    // fault-free reference instead of dying.
+    // Deadline + retry-once, end to end: worker 0 wedges at step 2,
+    // the dispatch deadline expires, the engine flushes the providers
+    // and re-scores around the stalled lane — against the same
+    // parameters, so the run completes bitwise-equal to the fault-free
+    // reference instead of dying.
     let Some(lab) = lab() else { return };
     let mut cfg = base_cfg(Method::RhoLoss);
     cfg.il_arch = "mlp_small".into();
@@ -915,13 +915,17 @@ fn stalled_lane_deadline_is_absorbed_by_rescore() {
 
     let reference = Session::new(&cfg, &target).run(&bundle, Some(&il)).unwrap();
 
+    // Stall and deadline stretch together under RHO_TEST_TIMESCALE;
+    // the ~6x stall/deadline gap keeps expiry deterministic.
+    let stall_ms = rho::util::scaled_ms(2500);
+    let deadline_ms = rho::util::scaled_ms(400);
     let plane = chaos_plane(
         &lab,
         "target",
         &cfg.arch,
         2,
-        "stall@plane=target,worker=0,step=2,ms=2000",
-        300,
+        &format!("stall@plane=target,worker=0,step=2,ms={stall_ms}"),
+        deadline_ms,
     );
     let faulted = Session::new(&cfg, &target)
         .plane(&plane)
