@@ -1,0 +1,246 @@
+//! Line-oriented Rust source scanner for the lint pass.
+//!
+//! Std-only by design (the vendored-crate constraint rules out `syn`
+//! and `regex`): each source line is split into the *code* channel
+//! (string-literal bodies blanked, comments removed), the *literal*
+//! channel (string contents, for the schema cross-check), and the
+//! *comment* channel (for `SAFETY:` and `lint:allow` pragmas). State
+//! that spans lines — nested block comments, raw strings, cooked
+//! strings continued over a newline — is carried between calls, so
+//! multi-line constructs can never leak string contents into the code
+//! channel and produce phantom findings.
+
+/// One scanned source line.
+pub struct Line {
+    /// 1-based line number.
+    pub no: usize,
+    /// The line with comments removed and string-literal bodies
+    /// replaced by `""` — the channel every syntactic rule matches on.
+    pub code: String,
+    /// String-literal contents (or per-line fragments of multi-line
+    /// literals) that appear on this line.
+    pub literals: Vec<String>,
+    /// Comment text on this line (`//...` tail or block-comment body).
+    pub comment: String,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Carry {
+    Code,
+    /// Inside a (nestable) `/* ... */`, with nesting depth.
+    Block(u32),
+    /// Inside `r"..."` / `r#"..."#`, with the hash count.
+    Raw(u8),
+    /// Inside a `"..."` cooked string (they may span lines).
+    Cooked,
+}
+
+pub fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// `word` appears in `code` with non-identifier characters (or the
+/// string edge) on both sides.
+pub fn has_word(code: &str, word: &str) -> bool {
+    let cs: Vec<char> = code.chars().collect();
+    let ws: Vec<char> = word.chars().collect();
+    if ws.is_empty() || cs.len() < ws.len() {
+        return false;
+    }
+    for start in 0..=(cs.len() - ws.len()) {
+        if cs[start..start + ws.len()] != ws[..] {
+            continue;
+        }
+        let before_ok = start == 0 || !is_ident(cs[start - 1]);
+        let end = start + ws.len();
+        let after_ok = end >= cs.len() || !is_ident(cs[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+    }
+    false
+}
+
+/// Scan a whole file into [`Line`]s, carrying multi-line state.
+pub fn lex(src: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut carry = Carry::Code;
+    for (idx, raw) in src.lines().enumerate() {
+        let chars: Vec<char> = raw.chars().collect();
+        let n = chars.len();
+        let mut code = String::new();
+        let mut literals = Vec::new();
+        let mut comment = String::new();
+        let mut lit = String::new();
+        let mut i = 0usize;
+        while i < n {
+            match carry {
+                Carry::Block(depth) => {
+                    if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                        carry = if depth == 1 { Carry::Code } else { Carry::Block(depth - 1) };
+                        i += 2;
+                    } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                        carry = Carry::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        comment.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                Carry::Raw(hashes) => {
+                    let h = hashes as usize;
+                    let closes = chars[i] == '"'
+                        && i + h < n
+                        && chars[i + 1..i + 1 + h].iter().all(|&c| c == '#');
+                    if closes {
+                        literals.push(std::mem::take(&mut lit));
+                        code.push_str("\"\"");
+                        carry = Carry::Code;
+                        i += 1 + h;
+                    } else {
+                        lit.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                Carry::Cooked => match chars[i] {
+                    '\\' => {
+                        lit.push('?');
+                        i += 2;
+                    }
+                    '"' => {
+                        literals.push(std::mem::take(&mut lit));
+                        code.push_str("\"\"");
+                        carry = Carry::Code;
+                        i += 1;
+                    }
+                    c => {
+                        lit.push(c);
+                        i += 1;
+                    }
+                },
+                Carry::Code => {
+                    let c = chars[i];
+                    if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+                        comment.push_str(&chars[i..].iter().collect::<String>());
+                        i = n;
+                    } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                        carry = Carry::Block(1);
+                        i += 2;
+                    } else if c == '"' {
+                        carry = Carry::Cooked;
+                        i += 1;
+                    } else if c == 'r' && (i == 0 || !is_ident(chars[i - 1])) && raw_start(&chars, i).is_some()
+                    {
+                        let hashes = raw_start(&chars, i).expect("checked");
+                        carry = Carry::Raw(hashes);
+                        i += 2 + hashes as usize;
+                    } else if c == 'b' && i + 1 < n && chars[i + 1] == '"' {
+                        // byte string: skip the prefix, let the quote
+                        // start a cooked string on the next iteration
+                        i += 1;
+                    } else if c == '\'' {
+                        if i + 1 < n && chars[i + 1] == '\\' {
+                            // escaped char literal: skip to closing quote
+                            let mut j = i + 2;
+                            while j < n && chars[j] != '\'' {
+                                j += 1;
+                            }
+                            i = if j < n { j + 1 } else { n };
+                            code.push(' ');
+                        } else if i + 2 < n && chars[i + 2] == '\'' {
+                            i += 3;
+                            code.push(' ');
+                        } else {
+                            // lifetime
+                            code.push(c);
+                            i += 1;
+                        }
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        // A raw/cooked string still open at end of line: bank this
+        // line's fragment so the next line starts a fresh one.
+        if !lit.is_empty() {
+            literals.push(lit);
+        }
+        out.push(Line { no: idx + 1, code, literals, comment });
+    }
+    out
+}
+
+/// At `chars[i] == 'r'`: if this starts a raw string, return its hash
+/// count.
+fn raw_start(chars: &[char], i: usize) -> Option<u8> {
+    let n = chars.len();
+    let mut j = i + 1;
+    let mut hashes = 0u8;
+    while j < n && chars[j] == '#' {
+        hashes = hashes.saturating_add(1);
+        j += 1;
+    }
+    if j < n && chars[j] == '"' {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(src: &str) -> Line {
+        let mut lines = lex(src);
+        assert_eq!(lines.len(), 1);
+        lines.remove(0)
+    }
+
+    #[test]
+    fn strips_line_comments_and_strings() {
+        let l = one(r#"let x = "HashMap"; // uses Instant::now"#);
+        assert_eq!(l.code, r#"let x = ""; "#);
+        assert_eq!(l.literals, vec!["HashMap".to_string()]);
+        assert!(l.comment.contains("Instant::now"));
+    }
+
+    #[test]
+    fn raw_strings_are_literals_not_code() {
+        let l = one(r##"emit(r#"unsafe { "x" }"#);"##);
+        assert_eq!(l.code, r#"emit("");"#);
+        assert_eq!(l.literals, vec![r#"unsafe { "x" }"#.to_string()]);
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let l = one(r"fn f<'a>(c: char) -> bool { c == '\'' || c == '{' }");
+        assert!(l.code.contains("'a"), "lifetime survives: {}", l.code);
+        assert!(!l.code.contains('{') || l.code.matches('{').count() == 1, "{}", l.code);
+    }
+
+    #[test]
+    fn cooked_string_spans_lines() {
+        let lines = lex("bail!(\"first part \\\n  second HashMap part\");\nlet y = 1;");
+        assert!(!lines[1].code.contains("HashMap"), "continuation stays literal: {}", lines[1].code);
+        assert_eq!(lines[2].code, "let y = 1;");
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let lines = lex("a /* one /* two */ still */ b\n/* open\nSAFETY: here */ c");
+        assert_eq!(lines[0].code.trim(), "a  b");
+        assert!(lines[2].comment.contains("SAFETY: here"));
+        assert_eq!(lines[2].code.trim(), "c");
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(has_word("use HashMap;", "HashMap"));
+        assert!(!has_word("n_unsafe += 1", "unsafe"));
+        assert!(!has_word("unsafe_lines", "unsafe"));
+        assert!(has_word("unsafe {", "unsafe"));
+    }
+}

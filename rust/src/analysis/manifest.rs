@@ -1,0 +1,147 @@
+//! Scope tables and committed-manifest parsing for the lint rules.
+//!
+//! The scopes below are the policy half of the lint: *which* files
+//! must be deterministic, *which* parsers must use checked arithmetic,
+//! *which* mutexes participate in the lock hierarchy, and *which*
+//! files are allowed to emit event-schema field names. The two
+//! committed manifests (`analysis/unsafe_inventory.txt` and
+//! `analysis/lock_order.txt`) are the audited half: changing either is
+//! a reviewed diff, so new unsafe code or a re-ranked lock cannot
+//! slip in silently.
+
+/// Directories walked by `rho lint` and the tier-1 static test,
+/// relative to the repo root.
+pub const SCAN_DIRS: &[&str] = &["rust/src", "rust/tests", "rust/benches"];
+
+/// Modules whose outputs feed selection decisions, checkpoints, or the
+/// event ledger: wall-clock reads and hash-ordered collections here
+/// break the bitwise-reproducibility contract (ROADMAP tier-1).
+pub const DETERMINISM_SCOPE: &[&str] = &[
+    "rust/src/selection/",
+    "rust/src/coordinator/engine.rs",
+    "rust/src/coordinator/events.rs",
+    "rust/src/coordinator/checkpoint.rs",
+    "rust/src/coordinator/session.rs",
+    "rust/src/coordinator/tracker.rs",
+    "rust/src/coordinator/il_model.rs",
+];
+
+/// Files where clock reads are legal even when otherwise in scope —
+/// throughput metrics, the step timer, and the worker ledger are
+/// wall-clock by design.
+pub const CLOCK_ALLOWLIST: &[&str] = &[
+    "rust/src/util/timer.rs",
+    "rust/src/coordinator/metrics.rs",
+    "rust/src/runtime/pool.rs",
+];
+
+/// Byte-level format parsers: bare narrowing casts and unchecked
+/// length/offset arithmetic are findings here (the PR-4/PR-8 rule).
+pub const HARDENED: &[&str] = &[
+    "rust/src/data/store/format.rs",
+    "rust/src/data/store/reader.rs",
+    "rust/src/data/store/manifest.rs",
+    "rust/src/data/store/remote.rs",
+];
+
+/// Files whose mutex acquisitions are checked against the declared
+/// hierarchy in `analysis/lock_order.txt`.
+pub const LOCK_SCOPE: &[&str] = &["rust/src/runtime/pool.rs", "rust/src/data/store/cache.rs"];
+
+/// Maps a source-line substring to the hierarchy name of the lock it
+/// acquires. First match wins, so the more specific aliases lead.
+pub const LOCK_ALIASES: &[(&str, &str)] = &[
+    ("ledger::", "ledger"),
+    ("state()", "ledger"),
+    ("stats", "stats"),
+    ("rates", "rates"),
+    ("health", "health"),
+    ("inner", "cache"),
+];
+
+/// Files allowed (and expected) to emit event/bench schema field
+/// names; the union of their string literals must cover every key the
+/// CI python asserts read.
+pub const SCHEMA_EMIT: &[&str] = &[
+    "rust/src/coordinator/events.rs",
+    "rust/benches/bench_pipeline.rs",
+    "rust/src/coordinator/scheduler/wire.rs",
+    "rust/src/coordinator/scheduler/tenant.rs",
+    "rust/src/runtime/pool.rs",
+    "rust/src/coordinator/metrics.rs",
+    "rust/src/coordinator/scheduler/daemon.rs",
+];
+
+/// Cast targets considered narrowing in the hardened parsers.
+pub const NARROW: &[&str] = &["u8", "u16", "u32", "i8", "i16", "i32"];
+
+/// Operand-name fragments that mark a `+`/`*` as length/offset
+/// arithmetic.
+pub const LENISH: &[&str] = &["len", "off", "bytes", "rows", "count", "nbyte"];
+
+/// Committed unsafe inventory, repo-root relative.
+pub const UNSAFE_INVENTORY: &str = "analysis/unsafe_inventory.txt";
+
+/// Committed lock hierarchy, repo-root relative.
+pub const LOCK_ORDER_FILE: &str = "analysis/lock_order.txt";
+
+/// CI workflow whose python asserts define the consumed schema.
+pub const CI_WORKFLOW: &str = ".github/workflows/ci.yml";
+
+/// `rel` equals a scope entry or lives under a `.../`-terminated one.
+pub fn in_scope(rel: &str, scopes: &[&str]) -> bool {
+    scopes.iter().any(|s| rel == *s || rel.starts_with(s))
+}
+
+/// Parse `file:count` inventory lines; `#` comments and blanks skipped.
+pub fn parse_inventory(text: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some((file, count)) = line.rsplit_once(':') {
+            if let Ok(n) = count.trim().parse::<usize>() {
+                out.push((file.trim().to_string(), n));
+            }
+        }
+    }
+    out
+}
+
+/// Parse the lock hierarchy: one lock name per line, outermost first;
+/// `#` comments and blanks skipped.
+pub fn parse_lock_order(text: &str) -> Vec<String> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scope_matching() {
+        assert!(in_scope("rust/src/selection/method.rs", DETERMINISM_SCOPE));
+        assert!(in_scope("rust/src/coordinator/events.rs", DETERMINISM_SCOPE));
+        assert!(!in_scope("rust/src/util/math.rs", DETERMINISM_SCOPE));
+    }
+
+    #[test]
+    fn inventory_parses_and_skips_comments() {
+        let inv = parse_inventory("# audited\nrust/src/a.rs:3\n\nrust/src/b.rs: 11\n");
+        assert_eq!(
+            inv,
+            vec![("rust/src/a.rs".to_string(), 3), ("rust/src/b.rs".to_string(), 11)]
+        );
+    }
+
+    #[test]
+    fn lock_order_parses() {
+        assert_eq!(parse_lock_order("# outermost first\nstats\nrates\n"), vec!["stats", "rates"]);
+    }
+}

@@ -1,0 +1,27 @@
+//! Static analysis for the invariants the repro's guarantees rest on.
+//!
+//! Everything this crate promises about RHO-LOSS selection — bitwise
+//! identical curves under worker counts, rate skew, speculation,
+//! faults, remote stores, and tenant contention — reduces to a small
+//! set of hand-maintained source invariants: no wall-clock or
+//! hash-order nondeterminism in score/checkpoint/event paths, audited
+//! `unsafe`, checked arithmetic in the byte-format parsers, one lock
+//! hierarchy, and an event schema that actually covers what CI
+//! asserts. This module machine-checks all five, std-only (no `syn`,
+//! no `regex` — the vendored-crate constraint), and runs as both the
+//! `rho lint` subcommand and the tier-1 `static_lint` test.
+//!
+//! - [`lexer`] — line scanner that separates code, string literals,
+//!   and comments (multi-line aware), so rules never fire on text.
+//! - [`manifest`] — rule scopes plus the two committed manifests
+//!   (`analysis/unsafe_inventory.txt`, `analysis/lock_order.txt`).
+//! - [`rules`] — the five rule families and the tree walk.
+//! - [`report`] — findings and their stable rendering.
+
+pub mod lexer;
+pub mod manifest;
+pub mod report;
+pub mod rules;
+
+pub use report::Finding;
+pub use rules::{extract_ci_keys, lint_source, lint_tree, schema_missing, unsafe_census};

@@ -1,0 +1,36 @@
+//! Finding type + deterministic rendering for the lint pass.
+
+/// One rule violation, anchored to a file (and line, when the rule is
+/// line-scoped; tree-level rules such as the inventory and schema
+/// cross-checks report line 0).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(file: &str, line: usize, rule: &'static str, message: impl Into<String>) -> Finding {
+        Finding { file: file.to_string(), line, rule, message: message.into() }
+    }
+}
+
+/// Sort findings into their stable report order (file, line, rule,
+/// message) — the same bytes on every run, so CI diffs are meaningful.
+pub fn sort(findings: &mut Vec<Finding>) {
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule, a.message.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.rule, b.message.as_str()))
+    });
+}
+
+/// Render findings one per line, `file:line: [rule] message`.
+pub fn render(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+    }
+    out
+}

@@ -1,0 +1,770 @@
+//! The five lint rule families and the tree walk that applies them.
+//!
+//! Every line-scoped rule is suppressible with an explicit
+//! `// lint:allow(<rule>): <reason>` pragma, honored on the offending
+//! line's trailing comment or anywhere in the contiguous comment block
+//! immediately above it (so a reasoned pragma never has to fight the
+//! line-length limit). Tree-scoped rules (the unsafe inventory and the
+//! schema cross-check) are governed by the committed manifests
+//! instead — see [`super::manifest`].
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use super::lexer::{self, has_word, is_ident, Line};
+use super::manifest::{
+    in_scope, parse_inventory, parse_lock_order, CI_WORKFLOW, CLOCK_ALLOWLIST, DETERMINISM_SCOPE,
+    HARDENED, LENISH, LOCK_ALIASES, LOCK_ORDER_FILE, LOCK_SCOPE, NARROW, SCAN_DIRS, SCHEMA_EMIT,
+    UNSAFE_INVENTORY,
+};
+use super::report::{self, Finding};
+
+/// Result of linting one source file.
+pub struct FileScan {
+    pub findings: Vec<Finding>,
+    /// Lines containing the `unsafe` keyword (the inventory unit).
+    pub unsafe_lines: usize,
+    /// Identifier-shaped string literals, when `rel` is a schema-emit
+    /// file (the supply side of the schema cross-check).
+    pub emitted: Vec<String>,
+}
+
+/// `comment` carries `lint:allow(<rule>): <nonempty reason>`.
+fn pragma(comment: &str, rule: &str) -> bool {
+    let key = format!("lint:allow({rule})");
+    match comment.find(&key) {
+        Some(pos) => {
+            let rest = comment[pos + key.len()..].trim_start();
+            rest.starts_with(':') && !rest[1..].trim().is_empty()
+        }
+        None => false,
+    }
+}
+
+/// A comment line with no code on it (doc or plain) — the unit of the
+/// walk-up that attaches a pragma/SAFETY block to the code line below.
+fn comment_only(line: &Line) -> bool {
+    line.code.trim().is_empty() && !line.comment.is_empty()
+}
+
+/// The finding at `lines[idx]` is suppressed: pragma on the line
+/// itself, or in the contiguous comment-only block directly above.
+fn allowed(lines: &[Line], idx: usize, rule: &str) -> bool {
+    if pragma(&lines[idx].comment, rule) {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 && comment_only(&lines[j - 1]) {
+        if pragma(&lines[j - 1].comment, rule) {
+            return true;
+        }
+        j -= 1;
+    }
+    false
+}
+
+/// `SAFETY:` on the line's own comment or the contiguous comment block
+/// directly above it.
+fn has_safety(lines: &[Line], idx: usize) -> bool {
+    if lines[idx].comment.contains("SAFETY:") {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 && comment_only(&lines[j - 1]) {
+        if lines[j - 1].comment.contains("SAFETY:") {
+            return true;
+        }
+        j -= 1;
+    }
+    false
+}
+
+/// Line ranges (0-based, inclusive) inside `mod tests { ... }` blocks,
+/// tracked by brace depth — the parser-hardening rule does not apply
+/// to test fixtures.
+fn test_mod_ranges(lines: &[Line]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let mut depth: i64 = 0;
+    let mut start: Option<(usize, i64)> = None;
+    for (idx, line) in lines.iter().enumerate() {
+        if start.is_none() && line.code.contains("mod tests") && line.code.contains('{') {
+            start = Some((idx, depth));
+        }
+        for c in line.code.chars() {
+            if c == '{' {
+                depth += 1;
+            } else if c == '}' {
+                depth -= 1;
+                if let Some((s, d)) = start {
+                    if depth == d {
+                        ranges.push((s, idx));
+                        start = None;
+                    }
+                }
+            }
+        }
+    }
+    if let Some((s, _)) = start {
+        ranges.push((s, lines.len().saturating_sub(1)));
+    }
+    ranges
+}
+
+fn in_ranges(idx: usize, ranges: &[(usize, usize)]) -> bool {
+    ranges.iter().any(|&(a, b)| a <= idx && idx <= b)
+}
+
+/// First bare narrowing cast on the line, if any.
+fn narrowing_cast(code: &str) -> Option<&'static str> {
+    for (i, _) in code.match_indices(" as ") {
+        let tok: String = code[i + 4..].chars().take_while(|&c| is_ident(c)).collect();
+        if let Some(t) = NARROW.iter().copied().find(|t| *t == tok) {
+            return Some(t);
+        }
+    }
+    None
+}
+
+/// Token (identifier chars plus `.()`) ending at byte `i`.
+fn tok_back(code: &str, i: usize) -> String {
+    let cs: Vec<char> = code[..i].chars().collect();
+    let mut j = cs.len();
+    while j > 0 && (is_ident(cs[j - 1]) || ".()".contains(cs[j - 1])) {
+        j -= 1;
+    }
+    cs[j..].iter().collect()
+}
+
+/// Token starting at byte `i`.
+fn tok_fwd(code: &str, i: usize) -> String {
+    code[i..].chars().take_while(|&c| is_ident(c) || ".()".contains(c)).collect()
+}
+
+/// A ` + `/` * ` whose adjacent operand names a length/offset, on a
+/// line with none of the checked/capacity/assert escape hatches.
+fn lenish_arith(code: &str) -> bool {
+    let t = code.trim_start();
+    if t.starts_with("assert") || t.starts_with("debug_assert") {
+        return false;
+    }
+    if code.contains("checked_")
+        || code.contains("saturating_")
+        || code.contains("wrapping_")
+        || code.contains("with_capacity")
+    {
+        return false;
+    }
+    for op in [" + ", " * "] {
+        for (i, _) in code.match_indices(op) {
+            let b = tok_back(code, i).to_lowercase();
+            let a = tok_fwd(code, i + 3).to_lowercase();
+            if LENISH.iter().any(|l| b.contains(l) || a.contains(l)) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// `s` looks like an event/bench schema key: lowercase identifier of
+/// at least two characters.
+fn is_schema_key(s: &str) -> bool {
+    s.len() >= 2
+        && !s.starts_with(|c: char| c.is_ascii_digit())
+        && s.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// Lint one file's source. `ranks` is the parsed lock hierarchy
+/// (outermost first); pass the committed manifest's contents in
+/// production, or a fixture order in tests.
+pub fn lint_source(rel: &str, src: &str, ranks: &[String]) -> FileScan {
+    let lines = lexer::lex(src);
+    let tranges = test_mod_ranges(&lines);
+    let det = in_scope(rel, DETERMINISM_SCOPE);
+    let clock_ok = in_scope(rel, CLOCK_ALLOWLIST);
+    let hard = HARDENED.contains(&rel);
+    let mut findings = Vec::new();
+    let mut unsafe_lines = 0usize;
+    let mut emitted = Vec::new();
+
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+        if det && !allowed(&lines, idx, "determinism") {
+            if !clock_ok && (code.contains("Instant::now") || code.contains("SystemTime::now")) {
+                findings.push(Finding::new(
+                    rel,
+                    line.no,
+                    "determinism",
+                    "wall-clock read in a deterministic module",
+                ));
+            }
+            if has_word(code, "HashMap") || has_word(code, "HashSet") {
+                findings.push(Finding::new(
+                    rel,
+                    line.no,
+                    "determinism",
+                    "hash-ordered collection in a deterministic module (use BTreeMap or sort)",
+                ));
+            }
+        }
+        if has_word(code, "unsafe") {
+            unsafe_lines += 1;
+            if !allowed(&lines, idx, "unsafe") && !has_safety(&lines, idx) {
+                findings.push(Finding::new(
+                    rel,
+                    line.no,
+                    "unsafe",
+                    "unsafe without a SAFETY: comment",
+                ));
+            }
+        }
+        if hard && !in_ranges(idx, &tranges) && !allowed(&lines, idx, "parser") {
+            if let Some(t) = narrowing_cast(code) {
+                findings.push(Finding::new(
+                    rel,
+                    line.no,
+                    "parser",
+                    format!("bare narrowing cast `as {t}` (use try_from/try_into)"),
+                ));
+            }
+            if lenish_arith(code) {
+                findings.push(Finding::new(
+                    rel,
+                    line.no,
+                    "parser",
+                    "unchecked `+`/`*` on a length/offset (use checked_*)",
+                ));
+            }
+        }
+        if SCHEMA_EMIT.contains(&rel) {
+            for l in &line.literals {
+                if is_schema_key(l) {
+                    emitted.push(l.clone());
+                }
+            }
+        }
+    }
+    if LOCK_SCOPE.contains(&rel) {
+        scan_locks(rel, &lines, &tranges, ranks, &mut findings);
+    }
+    FileScan { findings, unsafe_lines, emitted }
+}
+
+/// Same-function nested-acquisition order check against the declared
+/// hierarchy. `let`-bound guards are held until their scope closes (or
+/// an explicit `drop(var)`); bare acquisitions are transient — checked
+/// against what is held, but never themselves held. Cross-function
+/// nesting is out of reach for a line scanner; the hierarchy doc in
+/// `runtime::pool` covers that half of the contract.
+fn scan_locks(
+    rel: &str,
+    lines: &[Line],
+    tranges: &[(usize, usize)],
+    ranks: &[String],
+    findings: &mut Vec<Finding>,
+) {
+    let rank_of = |name: &str| ranks.iter().position(|r| r == name);
+    let mut depth: i64 = 0;
+    // (rank, name, binding depth, binding var)
+    let mut held: Vec<(usize, String, i64, String)> = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let code = &line.code;
+        if in_ranges(idx, tranges) {
+            for c in code.chars() {
+                if c == '{' {
+                    depth += 1;
+                } else if c == '}' {
+                    depth -= 1;
+                }
+            }
+            continue;
+        }
+        let is_acq = code.contains(".lock()") || code.contains("relock(");
+        if is_acq && !allowed(lines, idx, "lock-order") {
+            let name = LOCK_ALIASES.iter().find(|(a, _)| code.contains(a)).map(|(_, n)| *n);
+            if let Some(rank) = name.and_then(rank_of) {
+                let name = name.expect("ranked implies named");
+                for (hr, hn, _, _) in &held {
+                    if *hr >= rank {
+                        findings.push(Finding::new(
+                            rel,
+                            line.no,
+                            "lock-order",
+                            format!(
+                                "acquire `{name}` while holding `{hn}` (hierarchy: {})",
+                                ranks.join(" < ")
+                            ),
+                        ));
+                    }
+                }
+                let t = code.trim_start();
+                if let Some(rest) = t.strip_prefix("let ") {
+                    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+                    let var: String = rest.chars().take_while(|&c| is_ident(c)).collect();
+                    held.push((rank, name.to_string(), depth, var));
+                }
+            }
+        } else if code.contains("ledger::") && !allowed(lines, idx, "lock-order") {
+            // ledger:: helpers lock internally — a transient
+            // acquisition even without `.lock()` on the line.
+            if let Some(rank) = rank_of("ledger") {
+                for (hr, hn, _, _) in &held {
+                    if *hr >= rank {
+                        findings.push(Finding::new(
+                            rel,
+                            line.no,
+                            "lock-order",
+                            format!("acquire `ledger` (via ledger:: helper) while holding `{hn}`"),
+                        ));
+                    }
+                }
+            }
+        }
+        if let Some(pos) = code.find("drop(") {
+            let arg: String = code[pos + 5..].chars().take_while(|&c| c != ')').collect();
+            let arg = arg.trim().trim_start_matches('&').to_string();
+            held.retain(|(_, _, _, v)| *v != arg);
+        }
+        for c in code.chars() {
+            if c == '{' {
+                depth += 1;
+            } else if c == '}' {
+                depth -= 1;
+                held.retain(|(_, _, bd, _)| *bd <= depth);
+            }
+        }
+    }
+}
+
+/// Quoted `'...'`/`"..."` spans in a CI line: (start byte of the open
+/// quote, byte just past the close quote, contents).
+fn quoted(line: &str) -> Vec<(usize, usize, String)> {
+    let cs: Vec<(usize, char)> = line.char_indices().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < cs.len() {
+        let (bi, c) = cs[i];
+        if c == '\'' || c == '"' {
+            let mut j = i + 1;
+            while j < cs.len() && cs[j].1 != c {
+                j += 1;
+            }
+            if j < cs.len() {
+                let content: String = cs[i + 1..j].iter().map(|&(_, ch)| ch).collect();
+                out.push((bi, cs[j].0 + c.len_utf8(), content));
+                i = j + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// If the line contains `for <ident> in (`, return the text after the
+/// opening parenthesis.
+fn for_tuple_rest(line: &str) -> Option<String> {
+    let cs: Vec<char> = line.chars().collect();
+    let n = cs.len();
+    for i in 0..n.saturating_sub(2) {
+        if cs[i] != 'f' || cs[i + 1] != 'o' || cs[i + 2] != 'r' {
+            continue;
+        }
+        if i > 0 && is_ident(cs[i - 1]) {
+            continue;
+        }
+        let mut j = i + 3;
+        let ws = j;
+        while j < n && cs[j].is_whitespace() {
+            j += 1;
+        }
+        if j == ws {
+            continue;
+        }
+        let id = j;
+        while j < n && is_ident(cs[j]) {
+            j += 1;
+        }
+        if j == id {
+            continue;
+        }
+        let ws2 = j;
+        while j < n && cs[j].is_whitespace() {
+            j += 1;
+        }
+        if j == ws2 || j + 1 >= n || cs[j] != 'i' || cs[j + 1] != 'n' {
+            continue;
+        }
+        j += 2;
+        let ws3 = j;
+        while j < n && cs[j].is_whitespace() {
+            j += 1;
+        }
+        if j == ws3 || j >= n || cs[j] != '(' {
+            continue;
+        }
+        return Some(cs[j + 1..].iter().collect());
+    }
+    None
+}
+
+/// Field names the CI python asserts consume, extracted from the
+/// `python3 - <<'EOF'` heredocs in the workflow file. Four contexts
+/// count as a consuming read: `.get('k')`, `['k']`, `'k' in x`, and
+/// quoted names inside a (possibly multi-line) `for v in (...)` tuple.
+pub fn extract_ci_keys(yml: &str) -> BTreeSet<String> {
+    let mut keys = BTreeSet::new();
+    let mut heredoc = false;
+    let mut open_tuple = false;
+    for raw in yml.lines() {
+        if !heredoc {
+            if raw.contains("<<'EOF'") || raw.contains("<<\"EOF\"") || raw.contains("<<EOF") {
+                heredoc = true;
+                open_tuple = false;
+            }
+            continue;
+        }
+        if raw.trim() == "EOF" {
+            heredoc = false;
+            continue;
+        }
+        for (start, end, content) in quoted(raw) {
+            if !is_schema_key(&content) {
+                continue;
+            }
+            let before = &raw[..start];
+            let after = &raw[end..];
+            let get_ctx = before.trim_end().ends_with(".get(");
+            let bracket_ctx = before.ends_with('[') && after.starts_with(']');
+            let in_ctx = after.starts_with(|c: char| c.is_whitespace()) && {
+                let a = after.trim_start();
+                a.strip_prefix("in").is_some_and(|r| {
+                    r.starts_with(|c: char| c.is_whitespace())
+                        && r.trim_start().starts_with(|c: char| c.is_ascii_alphabetic() || c == '_')
+                })
+            };
+            if get_ctx || bracket_ctx || in_ctx {
+                keys.insert(content);
+            }
+        }
+        if open_tuple {
+            for (_, _, content) in quoted(raw) {
+                if is_schema_key(&content) {
+                    keys.insert(content);
+                }
+            }
+            if raw.contains(')') {
+                open_tuple = false;
+            }
+        }
+        if let Some(rest) = for_tuple_rest(raw) {
+            for (_, _, content) in quoted(&rest) {
+                if is_schema_key(&content) {
+                    keys.insert(content);
+                }
+            }
+            if !rest.contains(')') {
+                open_tuple = true;
+            }
+        }
+    }
+    keys
+}
+
+/// CI-asserted keys no schema-emit file carries.
+pub fn schema_missing(ci: &BTreeSet<String>, emitted: &BTreeSet<String>) -> Vec<String> {
+    ci.difference(emitted).cloned().collect()
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    if !dir.exists() {
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the whole tree rooted at the repo root: every `.rs` file under
+/// [`SCAN_DIRS`], plus the manifest and schema cross-checks. Findings
+/// come back in stable report order; empty means clean.
+pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+
+    let ranks: Vec<String> = match std::fs::read_to_string(root.join(LOCK_ORDER_FILE)) {
+        Ok(text) => parse_lock_order(&text),
+        Err(_) => {
+            findings.push(Finding::new(
+                LOCK_ORDER_FILE,
+                0,
+                "lock-order",
+                "missing lock hierarchy manifest",
+            ));
+            Vec::new()
+        }
+    };
+    if !ranks.is_empty() {
+        for (_, name) in LOCK_ALIASES {
+            if !ranks.iter().any(|r| r == name) {
+                findings.push(Finding::new(
+                    LOCK_ORDER_FILE,
+                    0,
+                    "lock-order",
+                    format!("lock `{name}` is not ranked in the hierarchy manifest"),
+                ));
+            }
+        }
+    }
+
+    let mut files: Vec<PathBuf> = Vec::new();
+    for d in SCAN_DIRS {
+        walk(&root.join(d), &mut files)?;
+    }
+    files.sort();
+
+    let mut unsafe_counts: Vec<(String, usize)> = Vec::new();
+    let mut emitted: BTreeSet<String> = BTreeSet::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(path)?;
+        let scan = lint_source(&rel, &src, &ranks);
+        findings.extend(scan.findings);
+        if scan.unsafe_lines > 0 {
+            unsafe_counts.push((rel.clone(), scan.unsafe_lines));
+        }
+        emitted.extend(scan.emitted);
+    }
+
+    match std::fs::read_to_string(root.join(UNSAFE_INVENTORY)) {
+        Ok(text) => {
+            let inv = parse_inventory(&text);
+            for (file, n) in &unsafe_counts {
+                match inv.iter().find(|(f, _)| f == file) {
+                    Some((_, m)) if m == n => {}
+                    Some((_, m)) => findings.push(Finding::new(
+                        file,
+                        0,
+                        "unsafe",
+                        format!(
+                            "{n} unsafe line(s) but {UNSAFE_INVENTORY} says {m} — re-audit and update it"
+                        ),
+                    )),
+                    None => findings.push(Finding::new(
+                        file,
+                        0,
+                        "unsafe",
+                        format!("{n} unsafe line(s) not enumerated in {UNSAFE_INVENTORY}"),
+                    )),
+                }
+            }
+            for (file, _) in &inv {
+                if !unsafe_counts.iter().any(|(f, _)| f == file) {
+                    findings.push(Finding::new(
+                        UNSAFE_INVENTORY,
+                        0,
+                        "unsafe",
+                        format!("stale entry: `{file}` has no unsafe lines (or no longer exists)"),
+                    ));
+                }
+            }
+        }
+        Err(_) => {
+            if !unsafe_counts.is_empty() {
+                findings.push(Finding::new(
+                    UNSAFE_INVENTORY,
+                    0,
+                    "unsafe",
+                    "missing unsafe inventory (files in the tree contain unsafe)",
+                ));
+            }
+        }
+    }
+
+    if let Ok(yml) = std::fs::read_to_string(root.join(CI_WORKFLOW)) {
+        for key in schema_missing(&extract_ci_keys(&yml), &emitted) {
+            findings.push(Finding::new(
+                CI_WORKFLOW,
+                0,
+                "schema",
+                format!("CI asserts `{key}` but no schema-emit file carries it"),
+            ));
+        }
+    }
+
+    report::sort(&mut findings);
+    Ok(findings)
+}
+
+/// Unsafe-line counts per file for the current tree — what the
+/// committed inventory must match exactly.
+pub fn unsafe_census(root: &Path) -> std::io::Result<Vec<(String, usize)>> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for d in SCAN_DIRS {
+        walk(&root.join(d), &mut files)?;
+    }
+    files.sort();
+    let mut out = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(path)?;
+        let scan = lint_source(&rel, &src, &[]);
+        if scan.unsafe_lines > 0 {
+            out.push((rel, scan.unsafe_lines));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ranks() -> Vec<String> {
+        ["stats", "rates", "ledger", "health", "cache"].iter().map(|s| s.to_string()).collect()
+    }
+
+    fn findings(rel: &str, src: &str) -> Vec<Finding> {
+        lint_source(rel, src, &ranks()).findings
+    }
+
+    #[test]
+    fn determinism_flags_clock_and_hash_collections() {
+        let src = "let t = Instant::now();\nlet m: HashMap<u32, f32> = HashMap::new();\n";
+        let f = findings("rust/src/selection/fixture.rs", src);
+        assert_eq!(f.len(), 2, "{}", report::render(&f));
+        assert!(f.iter().all(|x| x.rule == "determinism"));
+    }
+
+    #[test]
+    fn determinism_ignores_out_of_scope_strings_and_pragmas() {
+        let clock = "let t = Instant::now();\n";
+        assert!(findings("rust/src/util/math.rs", clock).is_empty(), "out of scope");
+        let in_string = "let m = \"uses a HashMap and Instant::now\";\n";
+        assert!(findings("rust/src/selection/fixture.rs", in_string).is_empty(), "literal only");
+        let sup = "// lint:allow(determinism): fixture needs a clock\nlet t = Instant::now();\n";
+        assert!(findings("rust/src/selection/fixture.rs", sup).is_empty(), "pragma");
+    }
+
+    #[test]
+    fn pragma_requires_a_reason() {
+        let bare = "let t = Instant::now(); // lint:allow(determinism)\n";
+        assert_eq!(findings("rust/src/selection/fixture.rs", bare).len(), 1);
+        let reasoned = "let t = Instant::now(); // lint:allow(determinism): fixture clock\n";
+        assert!(findings("rust/src/selection/fixture.rs", reasoned).is_empty());
+    }
+
+    #[test]
+    fn unsafe_requires_safety_comment() {
+        let bad = "unsafe { do_it() }\n";
+        let f = findings("rust/src/util/fixture.rs", bad);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "unsafe");
+        let trailing = "unsafe { do_it() } // SAFETY: bounds checked above.\n";
+        assert!(findings("rust/src/util/fixture.rs", trailing).is_empty());
+        let multi = "// SAFETY: the pointer is valid because the region\n// outlives self and is never written.\nunsafe { do_it() }\n";
+        assert!(findings("rust/src/util/fixture.rs", multi).is_empty());
+        let pragma = "// lint:allow(unsafe): audited fixture\nunsafe { do_it() }\n";
+        assert!(findings("rust/src/util/fixture.rs", pragma).is_empty());
+    }
+
+    #[test]
+    fn unsafe_lines_are_counted_for_the_inventory() {
+        let src = "// SAFETY: a.\nunsafe { a() }\nfn not_unsafe() {}\n// SAFETY: b.\nlet x = unsafe { b() };\n";
+        assert_eq!(lint_source("rust/src/util/fixture.rs", src, &ranks()).unsafe_lines, 2);
+    }
+
+    #[test]
+    fn parser_rules_flag_narrowing_and_unchecked_arith() {
+        let src = "let d = n as u32;\nlet end = base + rec.len * 4;\n";
+        let f = findings("rust/src/data/store/format.rs", src);
+        assert_eq!(f.len(), 2, "{}", report::render(&f));
+        assert!(f.iter().all(|x| x.rule == "parser"));
+        // same lines outside the hardened parser scope are fine
+        assert!(findings("rust/src/util/fixture.rs", src).is_empty());
+    }
+
+    #[test]
+    fn parser_rules_accept_checked_forms_asserts_and_pragmas() {
+        let src = "let d = u32::try_from(n).expect(\"fits\");\n\
+                   let end = base.checked_add(rec_len).unwrap();\n\
+                   let v = Vec::with_capacity(rows * 4);\n\
+                   assert_eq!(xs.len(), rows * d, \"xs length\");\n\
+                   let wide = rows as u64;\n";
+        assert!(findings("rust/src/data/store/format.rs", src).is_empty());
+        let sup = "// lint:allow(parser): proven in-bounds at open.\nlet end = base + rec.len * 4;\n";
+        assert!(findings("rust/src/data/store/format.rs", sup).is_empty());
+    }
+
+    #[test]
+    fn parser_rules_skip_test_modules() {
+        let src = "mod tests {\n    fn f() { let d = n as u32; }\n}\n";
+        assert!(findings("rust/src/data/store/format.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lock_order_flags_inverted_acquisition() {
+        let src = "fn bad(&self) {\n    let h = self.health.lock().unwrap();\n    let st = self.stats.lock().unwrap();\n}\n";
+        let f = findings("rust/src/runtime/pool.rs", src);
+        assert_eq!(f.len(), 1, "{}", report::render(&f));
+        assert_eq!(f[0].rule, "lock-order");
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn lock_order_accepts_hierarchy_and_released_guards() {
+        let good = "fn report(&self) {\n    let st = self.stats.lock().unwrap();\n    let r = self.rates.lock().unwrap();\n    ledger::snapshot(self.id);\n}\n";
+        assert!(findings("rust/src/runtime/pool.rs", good).is_empty(), "in-order");
+        let dropped = "fn seq(&self) {\n    let h = self.health.lock().unwrap();\n    drop(h);\n    let st = self.stats.lock().unwrap();\n}\n";
+        assert!(findings("rust/src/runtime/pool.rs", dropped).is_empty(), "drop releases");
+        let scoped = "fn scoped(&self) {\n    {\n        let h = self.health.lock().unwrap();\n    }\n    let st = self.stats.lock().unwrap();\n}\n";
+        assert!(findings("rust/src/runtime/pool.rs", scoped).is_empty(), "scope releases");
+    }
+
+    #[test]
+    fn lock_order_pragma_suppresses() {
+        let src = "fn odd(&self) {\n    let h = self.health.lock().unwrap();\n    // lint:allow(lock-order): disjoint per-slot mutex here.\n    let st = self.stats.lock().unwrap();\n}\n";
+        assert!(findings("rust/src/runtime/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn schema_extracts_ci_keys_from_heredocs_only() {
+        let yml = "      run: |\n          python3 - <<'EOF'\n          ev = json.loads(line)\n          assert ev.get('loss') is not None\n          assert ev['step'] >= 0\n          assert 'cache_hits' in ev\n          for k in ('hits', 'misses',\n                    'evictions'):\n              assert k in stats\n          EOF\n      - name: outside\n        run: python3 -c \"x['not_a_key']\"\n";
+        let keys = extract_ci_keys(yml);
+        let got: Vec<&str> = keys.iter().map(String::as_str).collect();
+        assert_eq!(got, vec!["cache_hits", "evictions", "hits", "loss", "misses", "step"]);
+    }
+
+    #[test]
+    fn schema_missing_keys_are_reported() {
+        let emitted: BTreeSet<String> = ["loss", "step"].iter().map(|s| s.to_string()).collect();
+        let ci: BTreeSet<String> =
+            ["ghost", "loss", "step"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(schema_missing(&ci, &emitted), vec!["ghost".to_string()]);
+        assert!(schema_missing(&emitted, &emitted).is_empty());
+    }
+
+    #[test]
+    fn schema_emit_files_collect_identifier_literals() {
+        let src = "emit(\"train_step\", vec![(\"loss\", num(l))]);\nlet msg = \"Not A Key\";\n";
+        let e = lint_source("rust/src/coordinator/events.rs", src, &ranks()).emitted;
+        assert!(e.contains(&"train_step".to_string()) && e.contains(&"loss".to_string()));
+        assert!(!e.iter().any(|k| k.contains(' ')), "{e:?}");
+        // non-emit files contribute nothing
+        let other = lint_source("rust/src/util/fixture.rs", src, &ranks()).emitted;
+        assert!(other.is_empty());
+    }
+}

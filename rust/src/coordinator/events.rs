@@ -68,6 +68,8 @@ impl EventLog {
     }
 
     fn unix_time() -> f64 {
+        // lint:allow(determinism): event timestamps are wall-clock by
+        // design; `t` is excluded from curve/ledger comparisons.
         SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs_f64()).unwrap_or(0.0)
     }
 

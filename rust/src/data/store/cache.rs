@@ -86,6 +86,9 @@ impl ShardPayload {
         }
         // u64-backed buffer so the xs column (offset 64) stays f32-aligned.
         let mut words = vec![0u64; bytes.len().div_ceil(8)];
+        // SAFETY: `words` owns div_ceil(len, 8) * 8 >= bytes.len()
+        // bytes of freshly-allocated storage, so the copy is in-bounds
+        // and the source slice cannot overlap the new allocation.
         unsafe {
             std::ptr::copy_nonoverlapping(
                 bytes.as_ptr(),
@@ -104,12 +107,18 @@ impl ShardPayload {
     }
 
     fn bytes(&self) -> &[u8] {
+        // SAFETY: `words` owns >= self.len bytes (from_bytes allocated
+        // div_ceil(len, 8) u64 words) and is never mutated after
+        // adoption, so the byte view is valid for self's lifetime.
         unsafe { std::slice::from_raw_parts(self.words.as_ptr() as *const u8, self.len) }
     }
 
     /// All features, row-major.
     pub fn xs(&self) -> &[f32] {
         let b = &self.bytes()[HEADER_LEN..HEADER_LEN + self.rows * self.d * 4];
+        // SAFETY: `b` starts at byte 64 of a u64-aligned base, so it is
+        // 4-byte aligned; its length is exactly rows * d * 4 validated
+        // bytes, and every 4-byte pattern is a valid f32.
         unsafe { std::slice::from_raw_parts(b.as_ptr() as *const f32, self.rows * self.d) }
     }
 
@@ -216,11 +225,17 @@ impl ShardCache {
         inner.bytes += bytes;
         if self.cap_bytes > 0 {
             while inner.bytes.saturating_sub(bytes) > self.cap_bytes && inner.map.len() > 1 {
+                // Ties on last_used are real (touch() stamps a whole
+                // prefetch window with one tick); break them by
+                // smallest key so the evicted shard — and every
+                // downstream hit/miss counter that lands in the event
+                // ledger — is identical across runs instead of
+                // HashMap-iteration-order dependent.
                 let victim = inner
                     .map
                     .iter()
                     .filter(|(&key, _)| key != k)
-                    .min_by_key(|(_, e)| e.last_used)
+                    .min_by_key(|&(&key, e)| (e.last_used, key))
                     .map(|(&key, _)| key)
                     .expect("len > 1 so a victim exists");
                 let gone = inner.map.remove(&victim).expect("victim present");
@@ -411,6 +426,23 @@ mod tests {
         cache.insert(2, payload(4, 2, 2.0));
         assert!(cache.get(0).is_some(), "touched shard survived");
         assert!(cache.get(1).is_none(), "untouched shard evicted");
+    }
+
+    #[test]
+    fn eviction_ties_break_by_key_deterministically() {
+        // touch() stamps several residents with one tick; the victim
+        // among the tied set must be the smallest key, every run.
+        let one = payload(4, 2, 0.0).nbytes();
+        for _ in 0..8 {
+            let cache = ShardCache::new(one * 2); // cap = 2, +1 in flight
+            cache.insert(9, payload(4, 2, 9.0));
+            cache.insert(5, payload(4, 2, 5.0));
+            cache.touch(&[9, 5]); // 9 and 5 now tie on last_used
+            cache.insert(7, payload(4, 2, 7.0)); // must evict 5, never 9
+            assert!(cache.contains(9), "tie must evict the smaller key (5), not 9");
+            assert!(!cache.contains(5), "smaller tied key 5 should be the victim");
+            assert!(cache.contains(7));
+        }
     }
 
     #[test]

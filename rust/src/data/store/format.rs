@@ -151,8 +151,8 @@ pub fn encode_shard(d: usize, classes: usize, xs: &[f32], ys: &[u32], meta: &[u8
     }
     payload.extend_from_slice(meta);
     let header = ShardHeader {
-        d: d as u32,
-        classes: classes as u32,
+        d: u32::try_from(d).expect("shard d fits u32"),
+        classes: u32::try_from(classes).expect("shard classes fits u32"),
         rows: rows as u64,
         checksum: xxh64(&payload, 0),
     };

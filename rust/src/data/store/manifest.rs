@@ -108,10 +108,12 @@ impl StoreManifest {
         out.extend_from_slice(&self.classes.to_le_bytes());
         out.extend_from_slice(&self.shard_rows.to_le_bytes());
         push_str(&mut out, &self.name);
-        out.extend_from_slice(&(self.splits.len() as u32).to_le_bytes());
+        let n_splits = u32::try_from(self.splits.len()).expect("split count fits u32");
+        out.extend_from_slice(&n_splits.to_le_bytes());
         for split in &self.splits {
             push_str(&mut out, &split.name);
-            out.extend_from_slice(&(split.shards.len() as u32).to_le_bytes());
+            let n_shards = u32::try_from(split.shards.len()).expect("shard count fits u32");
+            out.extend_from_slice(&n_shards.to_le_bytes());
             for s in &split.shards {
                 out.extend_from_slice(&s.offset.to_le_bytes());
                 out.extend_from_slice(&s.length.to_le_bytes());
@@ -259,8 +261,8 @@ impl StoreManifest {
         }
         Ok(StoreManifest {
             name: store.name.clone(),
-            d: store.d as u32,
-            classes: store.classes as u32,
+            d: u32::try_from(store.d).expect("store d fits u32"),
+            classes: u32::try_from(store.classes).expect("store classes fits u32"),
             shard_rows: store.shard_rows as u64,
             splits,
         })
@@ -293,7 +295,8 @@ impl StoreManifest {
 }
 
 fn push_str(out: &mut Vec<u8>, s: &str) {
-    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    let n = u32::try_from(s.len()).expect("manifest string fits u32");
+    out.extend_from_slice(&n.to_le_bytes());
     out.extend_from_slice(s.as_bytes());
 }
 

@@ -64,17 +64,24 @@ enum Region {
     },
 }
 
-// The region is written exactly once (by the kernel / the open read)
-// and only ever read afterwards; sharing immutable bytes across the
-// engine's producer, prefetcher, and consumer threads is safe.
+// SAFETY: the region is written exactly once (by the kernel / the open
+// read) and only ever read afterwards; moving the owning handle to
+// another thread transfers nothing but immutable bytes.
 unsafe impl Send for Region {}
+// SAFETY: all access after open is `&self` reads of bytes that are
+// never mutated, so sharing references across the engine's producer,
+// prefetcher, and consumer threads cannot race.
 unsafe impl Sync for Region {}
 
 impl Region {
     fn bytes(&self) -> &[u8] {
         match self {
             #[cfg(unix)]
+            // SAFETY: `ptr` is a live PROT_READ mapping of exactly `len`
+            // bytes, unmapped only in Drop, and never written after open.
             Region::Mmap { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            // SAFETY: `words` owns div_ceil(len, 8) * 8 >= len bytes of
+            // initialized storage and is never mutated after `heap()`.
             Region::Heap { words, len } => unsafe {
                 std::slice::from_raw_parts(words.as_ptr() as *const u8, *len)
             },
@@ -83,6 +90,8 @@ impl Region {
 
     fn heap(mut f: File, len: usize) -> Result<Region> {
         let mut words = vec![0u64; len.div_ceil(8)];
+        // SAFETY: `words` owns >= len zero-initialized bytes; the
+        // exclusive &mut view exists only for this read_exact call.
         let buf = unsafe { std::slice::from_raw_parts_mut(words.as_mut_ptr() as *mut u8, len) };
         f.read_exact(buf)?;
         Ok(Region::Heap { words, len })
@@ -93,6 +102,9 @@ impl Region {
         {
             if !no_mmap {
                 use std::os::unix::io::AsRawFd;
+                // SAFETY: plain read-only PRIVATE mapping of an open fd
+                // with a null hint; the -1 sentinel is handled below and
+                // a successful mapping is owned until Drop's munmap.
                 let ptr = unsafe {
                     mm::mmap(
                         std::ptr::null_mut(),
@@ -125,6 +137,8 @@ impl Region {
     fn advise_willneed(&self) {
         #[cfg(unix)]
         if let Region::Mmap { ptr, len } = self {
+            // SAFETY: (ptr, len) is the exact live mapping from open;
+            // madvise is a readahead hint with no aliasing effects.
             unsafe {
                 mm::madvise(*ptr as *mut std::os::raw::c_void, *len, mm::MADV_WILLNEED);
             }
@@ -136,6 +150,9 @@ impl Drop for Region {
     fn drop(&mut self) {
         #[cfg(unix)]
         if let Region::Mmap { ptr, len } = self {
+            // SAFETY: (ptr, len) is the exact mapping returned by mmap
+            // at open, unmapped exactly once here; no byte views can
+            // outlive self (they borrow &self).
             unsafe {
                 mm::munmap(*ptr as *mut std::os::raw::c_void, *len);
             }
@@ -211,9 +228,12 @@ impl ShardReader {
             checksum: header.checksum,
             region,
         };
-        // Alignment is guaranteed by construction (64-byte header over a
-        // page- or u64-aligned base); assert rather than trust.
+        // SAFETY: every 4-byte pattern is a valid f32; alignment is
+        // guaranteed by construction (64-byte header over a page- or
+        // u64-aligned base) and asserted below rather than trusted.
         let (prefix, xs, _) = unsafe { reader.xs_bytes().align_to::<f32>() };
+        // lint:allow(parser): the comparison IS the overflow/shape check
+        // (header rows*d already validated against file_len above).
         if !prefix.is_empty() || xs.len() != reader.rows * reader.d {
             bail!("{path:?}: feature column is not 4-byte aligned (mapping base drifted)");
         }
@@ -221,16 +241,23 @@ impl ShardReader {
     }
 
     fn xs_bytes(&self) -> &[u8] {
+        // lint:allow(parser): offsets proven in-bounds at open — the
+        // header file_len cross-check rejects any rows/d that overflow.
         &self.region.bytes()[HEADER_LEN..HEADER_LEN + self.rows * self.d * 4]
     }
 
     fn ys_bytes(&self) -> &[u8] {
+        // lint:allow(parser): offsets proven in-bounds at open (header
+        // file_len cross-check); see xs_bytes.
         let start = HEADER_LEN + self.rows * self.d * 4;
+        // lint:allow(parser): same proof as `start` above.
         &self.region.bytes()[start..start + self.rows * 4]
     }
 
     /// All features, row-major — a zero-copy view over the region.
     pub fn xs(&self) -> &[f32] {
+        // SAFETY: any bit pattern is a valid f32; alignment of the
+        // column was asserted once at open (open_with bails otherwise).
         let (_, xs, _) = unsafe { self.xs_bytes().align_to::<f32>() };
         xs
     }
@@ -242,6 +269,9 @@ impl ShardReader {
 
     /// All labels — a zero-copy view over the region.
     pub fn ys(&self) -> &[u32] {
+        // SAFETY: any bit pattern is a valid u32; the label column
+        // starts at HEADER_LEN + rows*d*4, both multiples of 4 over the
+        // aligned base asserted at open.
         let (prefix, ys, _) = unsafe { self.ys_bytes().align_to::<u32>() };
         debug_assert!(prefix.is_empty());
         ys
@@ -249,7 +279,10 @@ impl ShardReader {
 
     /// Packed meta bytes, one per row.
     pub fn meta_bytes(&self) -> &[u8] {
+        // lint:allow(parser): offsets proven in-bounds at open (header
+        // file_len cross-check); see xs_bytes.
         let start = HEADER_LEN + self.rows * self.d * 4 + self.rows * 4;
+        // lint:allow(parser): same proof as `start` above.
         &self.region.bytes()[start..start + self.rows]
     }
 
@@ -261,6 +294,8 @@ impl ShardReader {
     /// the store-side total a source reports as `nbytes`, independent
     /// of whether the bytes are mapped or heap-resident.
     pub fn file_bytes(&self) -> u64 {
+        // lint:allow(parser): same sum the open-time file_len check
+        // already proved fits the real file, as u64 it cannot overflow.
         (HEADER_LEN + self.rows * self.d * 4 + self.rows * 4 + self.rows) as u64
     }
 

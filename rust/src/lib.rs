@@ -15,6 +15,7 @@
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
 
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod data;

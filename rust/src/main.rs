@@ -8,6 +8,7 @@
 //!   rho serve [key=value ...]    selection-as-a-service daemon (multi-tenant)
 //!   rho exp <id|all> [opts]      regenerate a paper table/figure
 //!   rho artifacts                list loaded artifacts
+//!   rho lint [--root DIR]        static invariant checks over the source tree
 //!   rho info                     PJRT platform info
 //!
 //! Examples:
@@ -43,6 +44,7 @@ fn real_main() -> Result<()> {
         Some("inspect") => cmd_inspect(&args[1..]),
         Some("exp") => cmd_exp(&args[1..]),
         Some("artifacts") => cmd_artifacts(),
+        Some("lint") => cmd_lint(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print_help();
@@ -55,7 +57,7 @@ fn real_main() -> Result<()> {
 fn print_help() {
     println!(
         "rho — RHO-LOSS coordinator (Mindermann et al., ICML 2022)\n\n\
-         usage:\n  rho train [key=value ...] [--data shards://DIR|http://HOST/DIR] [--checkpoint-every N] [--resume PATH] [--speculate]\n  rho ingest <catalog-name|file.csv> [--shard-rows N] [--out DIR] [--scale F]\n  rho score-il data=shards://DIR [il_arch=A] [il_epochs=N] [key=value ...]\n  rho serve-store <DIR> [--port N] [--fault SPEC]   serve a store over HTTP\n  rho serve [key=value ...]     multi-tenant selection daemon (line-JSON over TCP)\n  rho inspect [key=value ...]   score one candidate batch, compare methods\n  rho exp <id|all> [--scale F] [--seeds a,b] [--epoch-scale F]\n  rho artifacts\n  rho info\n\n\
+         usage:\n  rho train [key=value ...] [--data shards://DIR|http://HOST/DIR] [--checkpoint-every N] [--resume PATH] [--speculate]\n  rho ingest <catalog-name|file.csv> [--shard-rows N] [--out DIR] [--scale F]\n  rho score-il data=shards://DIR [il_arch=A] [il_epochs=N] [key=value ...]\n  rho serve-store <DIR> [--port N] [--fault SPEC]   serve a store over HTTP\n  rho serve [key=value ...]     multi-tenant selection daemon (line-JSON over TCP)\n  rho inspect [key=value ...]   score one candidate batch, compare methods\n  rho exp <id|all> [--scale F] [--seeds a,b] [--epoch-scale F]\n  rho artifacts\n  rho lint [--root DIR]         determinism/unsafe/parser/lock/schema invariants\n  rho info\n\n\
          experiments: {}\n\n\
          config keys: dataset arch il_arch method epochs seed nb select_frac lr wd\n\
          eval_every scale track_props no_holdout online_il il_lr_scale\n\
@@ -501,6 +503,52 @@ fn cmd_artifacts() -> Result<()> {
         println!("  {arch} d={d} c={c}: {}", progs.join(" "));
     }
     Ok(())
+}
+
+fn cmd_lint(args: &[String]) -> Result<()> {
+    let mut root: Option<std::path::PathBuf> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" => {
+                i += 1;
+                let p = args.get(i).ok_or_else(|| anyhow!("--root needs a path"))?;
+                root = Some(std::path::PathBuf::from(p));
+            }
+            other => bail!("unknown lint flag `{other}`"),
+        }
+        i += 1;
+    }
+    let root = match root {
+        Some(r) => r,
+        None => lint_root()?,
+    };
+    let findings = rho::analysis::lint_tree(&root)?;
+    if findings.is_empty() {
+        println!("rho lint: clean (tree at {})", root.display());
+        Ok(())
+    } else {
+        print!("{}", rho::analysis::report::render(&findings));
+        bail!("rho lint: {} finding(s)", findings.len());
+    }
+}
+
+/// The repo root holds `rust/src`; accept the cwd, its parent (when
+/// run from `rust/`), or the build-time manifest dir's parent.
+fn lint_root() -> Result<std::path::PathBuf> {
+    for cand in [".", ".."] {
+        let p = std::path::PathBuf::from(cand);
+        if p.join("rust/src").is_dir() {
+            return Ok(p);
+        }
+    }
+    let manifest = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    if let Some(parent) = manifest.parent() {
+        if parent.join("rust/src").is_dir() {
+            return Ok(parent.to_path_buf());
+        }
+    }
+    bail!("cannot find the repo root (run from it, or pass --root DIR)")
 }
 
 fn cmd_info() -> Result<()> {

@@ -130,6 +130,26 @@
 //! The `xla` handles are not `Send`, so every worker owns a private
 //! PJRT client + executables, created inside the worker thread; plain
 //! data crosses the thread boundary, never XLA handles.
+//!
+//! ## Lock hierarchy
+//!
+//! The pool (and the shard cache it feeds) hold more than one mutex,
+//! so nested acquisitions follow one global order, declared outermost
+//! first in `analysis/lock_order.txt` and enforced statically by the
+//! `lock-order` rule of `rho lint`:
+//!
+//! `stats < rates < ledger < health < cache`
+//!
+//! Why this order: [`PoolReport`] assembly is the deepest nesting we
+//! do — it reads the dispatch `stats` and the per-plane `rates` EMA,
+//! and while summarising it snapshots the event ledger and each
+//! worker's `health` slot. The ledger therefore ranks *after* the
+//! reporting locks, `health` is next (a per-slot leaf touched briefly
+//! by workers and the reporter), and the shard cache's `inner` mutex
+//! is last: cache fills happen on the data path with no pool lock
+//! held, so it must never be held while re-entering pool state.
+//! Re-ranking a lock means editing `analysis/lock_order.txt` — the
+//! tier-1 `static_lint` test pins the manifest to this paragraph.
 
 use std::any::Any;
 use std::cell::{Cell, RefCell};

@@ -39,7 +39,10 @@ pub fn summarize(scores: &[f32]) -> ScoreSummary {
 /// candidate batch: |A ∩ B| / |A ∪ B|.
 pub fn topk_jaccard(a_scores: &[f32], b_scores: &[f32], k: usize) -> f32 {
     assert_eq!(a_scores.len(), b_scores.len());
+    // lint:allow(determinism): order-insensitive set membership — only
+    // the |A ∩ B| / |A ∪ B| counts are read, never iteration order.
     let a: std::collections::HashSet<usize> = top_k_indices(a_scores, k).into_iter().collect();
+    // lint:allow(determinism): same as above — counts only.
     let b: std::collections::HashSet<usize> = top_k_indices(b_scores, k).into_iter().collect();
     let inter = a.intersection(&b).count();
     let union = a.union(&b).count();

@@ -1,0 +1,52 @@
+//! Tier-1 static invariants: the whole tree must pass `rho lint` with
+//! zero findings, and the committed audit manifests must exactly match
+//! the code they describe — a stale manifest is a failing test, so new
+//! `unsafe` or a re-ranked lock cannot land unreviewed.
+
+use std::path::Path;
+
+use rho::analysis::manifest::{parse_inventory, parse_lock_order, LOCK_ALIASES, LOCK_ORDER_FILE, UNSAFE_INVENTORY};
+
+fn repo_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().expect("rust/ lives under the repo root")
+}
+
+#[test]
+fn tree_is_lint_clean() {
+    let findings = rho::analysis::lint_tree(repo_root()).expect("walking the source tree");
+    assert!(
+        findings.is_empty(),
+        "rho lint found {} violation(s) — fix them or add a reasoned \
+         `// lint:allow(<rule>): <reason>` pragma:\n{}",
+        findings.len(),
+        rho::analysis::report::render(&findings)
+    );
+}
+
+#[test]
+fn unsafe_inventory_matches_the_tree() {
+    let text = std::fs::read_to_string(repo_root().join(UNSAFE_INVENTORY))
+        .expect("committed unsafe inventory");
+    let inventory = parse_inventory(&text);
+    let census = rho::analysis::unsafe_census(repo_root()).expect("walking the source tree");
+    assert_eq!(
+        inventory, census,
+        "{UNSAFE_INVENTORY} is stale — re-audit the unsafe sites (every line needs a \
+         SAFETY: comment) and update the inventory to match the tree"
+    );
+}
+
+#[test]
+fn lock_hierarchy_manifest_covers_every_aliased_lock() {
+    let text = std::fs::read_to_string(repo_root().join(LOCK_ORDER_FILE))
+        .expect("committed lock hierarchy");
+    let ranks = parse_lock_order(&text);
+    for (_, name) in LOCK_ALIASES {
+        assert!(
+            ranks.iter().any(|r| r == name),
+            "lock `{name}` is aliased in the lint scopes but not ranked in {LOCK_ORDER_FILE}"
+        );
+    }
+    // The committed order is the one the `runtime::pool` docs promise.
+    assert_eq!(ranks, ["stats", "rates", "ledger", "health", "cache"]);
+}
